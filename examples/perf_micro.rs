@@ -1,0 +1,50 @@
+//! Micro-profiling driver for the perf pass (EXPERIMENTS.md §Perf).
+use psram_imc::compute::ComputeEngine;
+use psram_imc::mttkrp::pipeline::{CpuTileExecutor, PsramPipeline, TileExecutor};
+use psram_imc::psram::PsramArray;
+use psram_imc::tensor::Matrix;
+use psram_imc::util::prng::Prng;
+use std::time::Instant;
+
+fn time<F: FnMut()>(name: &str, reps: usize, mut f: F) -> f64 {
+    for _ in 0..2 { f(); }
+    let t0 = Instant::now();
+    for _ in 0..reps { f(); }
+    let dt = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("{name:<44} {:.3} ms", dt * 1e3);
+    dt
+}
+
+fn main() {
+    let mut rng = Prng::new(1);
+    // hot loop 1: analog engine exact path, full paper tile
+    let mut array = PsramArray::paper();
+    let img: Vec<i8> = (0..8192).map(|_| rng.next_i8()).collect();
+    array.write_image(&img).unwrap();
+    let u: Vec<u8> = (0..52 * 256).map(|_| rng.next_u8()).collect();
+    let mut eng = ComputeEngine::ideal();
+    let macs = 52.0 * 256.0 * 32.0;
+    let t = time("engine.compute_cycle 52x256x32", 200, || {
+        eng.compute_cycle(&mut array, &u, 52).unwrap();
+    });
+    println!("  -> {:.3e} MAC/s", macs / t);
+
+    // hot loop 2: cpu tile executor
+    let mut cpu = CpuTileExecutor::paper();
+    cpu.load_image(&img).unwrap();
+    let t = time("cpu_executor.compute 52x256x32", 200, || {
+        cpu.compute(&u, 52).unwrap();
+    });
+    println!("  -> {:.3e} MAC/s", macs / t);
+
+    // hot loop 3: full pipeline incl. quantization (multi-R to expose
+    // repeated x-quantization across rank blocks)
+    let unf = Matrix::randn(2080, 512, &mut rng);
+    let krp = Matrix::randn(512, 128, &mut rng);
+    let pmacs = 2080.0 * 512.0 * 128.0;
+    let t = time("pipeline 2080x512x128 (4 R-blocks)", 5, || {
+        let mut e = CpuTileExecutor::paper();
+        PsramPipeline::new(&mut e).mttkrp_unfolded(&unf, &krp).unwrap();
+    });
+    println!("  -> {:.3e} MAC/s", pmacs / t);
+}

@@ -1,0 +1,58 @@
+//! Regenerate the paper's evaluation figures (Fig. 5 i/ii) and the §V.B
+//! headline from the predictive performance model.
+//!
+//! ```bash
+//! cargo run --release --example perf_sweep
+//! ```
+
+use psram_imc::perfmodel::{fig5_frequency, fig5_wavelengths, headline};
+use psram_imc::util::stats::linear_fit;
+use psram_imc::util::units::format_ops;
+
+fn main() -> psram_imc::Result<()> {
+    // ---- Fig 5(i): sustained performance vs wavelength channels ----
+    let channels: Vec<usize> = vec![1, 2, 4, 8, 12, 16, 24, 32, 40, 52, 64];
+    let pts = fig5_wavelengths(&channels, 20e9)?;
+    println!("Fig 5(i) — sustained MTTKRP performance vs WDM channels @ 20 GHz");
+    println!("{:>9} | {:>16} | {:>8} | {}", "channels", "sustained", "util", "within PDK");
+    for p in &pts {
+        println!(
+            "{:>9} | {:>16} | {:>8.4} | {}",
+            p.x,
+            format_ops(p.sustained_ops),
+            p.utilization,
+            if p.admissible { "yes" } else { "no (extrapolated)" }
+        );
+    }
+    let xs: Vec<f64> = pts.iter().map(|p| p.x).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.sustained_ops).collect();
+    let (_, slope, r2) = linear_fit(&xs, &ys);
+    println!("linearity: R² = {r2:.6}, slope = {} per channel\n", format_ops(slope));
+
+    // ---- Fig 5(ii): sustained performance vs operating frequency ----
+    let clocks: Vec<f64> = vec![1e9, 2e9, 5e9, 8e9, 10e9, 12e9, 15e9, 18e9, 20e9, 25e9];
+    let pts = fig5_frequency(&clocks, 52)?;
+    println!("Fig 5(ii) — sustained MTTKRP performance vs frequency @ 52 channels");
+    println!("{:>9} | {:>16} | {:>8} | {}", "GHz", "sustained", "util", "device ok");
+    for p in &pts {
+        println!(
+            "{:>9} | {:>16} | {:>8.4} | {}",
+            p.x / 1e9,
+            format_ops(p.sustained_ops),
+            p.utilization,
+            if p.admissible { "yes" } else { "no" }
+        );
+    }
+    let xs: Vec<f64> = pts.iter().map(|p| p.x).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.sustained_ops).collect();
+    let (_, slope, r2) = linear_fit(&xs, &ys);
+    println!("linearity: R² = {r2:.6}, slope = {:.3} ops per Hz\n", slope);
+
+    // ---- §V.B headline ----
+    let (peak, sustained, util) = headline()?;
+    println!("Headline (256×256 bits, 52 λ, 20 GHz, 8-bit, 1M-per-mode tensor):");
+    println!("  peak      : {}", format_ops(peak));
+    println!("  sustained : {}  (paper: 17 PetaOps)", format_ops(sustained));
+    println!("  util      : {util:.4}");
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: decompose a small synthetic tensor on the simulated
+//! photonic SRAM array.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use psram_imc::cpd::{AlsConfig, CpAls, PsramBackend};
+use psram_imc::mttkrp::pipeline::{AnalogTileExecutor, TileExecutor};
+use psram_imc::tensor::{DenseTensor, Matrix};
+use psram_imc::util::prng::Prng;
+use psram_imc::util::units::format_energy;
+
+fn main() -> psram_imc::Result<()> {
+    // 1. A rank-4 ground-truth tensor with mild noise.
+    let mut rng = Prng::new(7);
+    let shape = [32usize, 28, 24];
+    let truth: Vec<Matrix> = shape.iter().map(|&d| Matrix::randn(d, 4, &mut rng)).collect();
+    let x = DenseTensor::from_cp_factors(&truth, 0.01, &mut rng)?;
+    println!("tensor {:?} ({} elements), true rank 4, 1% noise", shape, x.len());
+
+    // 2. A simulated 256x256-bit pSRAM array with the paper's device
+    //    parameters, bit-exact (noise off, ideal ADC).
+    let exec = AnalogTileExecutor::ideal();
+    let mut backend = PsramBackend::new(&x, exec);
+
+    // 3. CP-ALS entirely through the photonic array simulator.
+    let als = CpAls::new(AlsConfig { rank: 4, max_iters: 40, tol: 1e-6, seed: 3 });
+    let res = als.run(&mut backend)?;
+
+    for (i, fit) in res.fit_history.iter().enumerate() {
+        println!("  sweep {:>2}: fit {fit:.6}", i + 1);
+    }
+    println!(
+        "final fit {:.6} ({} sweeps, {})",
+        res.final_fit(),
+        res.iters,
+        if res.converged { "converged" } else { "max iters" }
+    );
+
+    // 4. What the array did, physically.
+    let stats = backend.stats;
+    let energy = backend.exec.energy().unwrap();
+    println!("\narray activity:");
+    println!("  images written : {}", stats.images);
+    println!("  compute cycles : {}", stats.compute_cycles);
+    println!("  write cycles   : {}", stats.write_cycles);
+    println!("  utilization    : {:.4}", stats.utilization());
+    println!("  useful MACs    : {}", stats.useful_macs);
+    println!("  energy         : {}", format_energy(energy.total_j()));
+    println!(
+        "  per useful op  : {}",
+        format_energy(energy.total_j() / (2.0 * stats.useful_macs as f64))
+    );
+    Ok(())
+}

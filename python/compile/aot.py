@@ -1,0 +1,79 @@
+"""AOT lowering: JAX (L2+L1) -> HLO *text* -> artifacts/ for the Rust runtime.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Python runs only here (build time); the Rust binary never imports it.
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> list:
+    """Lower every exported variant; returns [(name, path, shape-sig)]."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    for name, (m, k, n) in model.VARIANTS:
+        lowered = jax.jit(model.psram_tile_fn).lower(*model.tile_example_args(m, k, n))
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        entries.append((name, path, f"u8[{m},{k}] x s8[{k},{n}] -> s32[{m},{n}]"))
+
+    for name, (i, j, k, r) in model.BASELINES:
+        lowered = jax.jit(model.mttkrp_f32_fn).lower(
+            *model.baseline_example_args(i, j, k, r)
+        )
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        entries.append(
+            (name, path, f"f32[{i},{j},{k}] x f32[{j},{r}] x f32[{k},{r}] -> f32[{i},{r}]")
+        )
+
+    # Manifest: one line per artifact, "name<TAB>file<TAB>signature".
+    # (Plain text: the Rust side has no serde; it parses this by hand.)
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        for name, path, sig in entries:
+            f.write(f"{name}\t{os.path.basename(path)}\t{sig}\n")
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="also copy the default tile variant here (Makefile stamp)")
+    args = ap.parse_args()
+
+    entries = lower_all(args.out_dir)
+    for name, path, sig in entries:
+        print(f"wrote {path}  ({sig})")
+
+    if args.out:
+        default = next(p for n, p, _ in entries if n == "psram_tile_52x256x32")
+        with open(default) as src, open(args.out, "w") as dst:
+            dst.write(src.read())
+        print(f"wrote {args.out} (default variant)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.
+from . import ref  # noqa: F401
+from .psram_array import ARRAY_ROWS, psram_tile  # noqa: F401

@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: one pSRAM array tile as an in-memory-compute block.
+
+The kernel mirrors the photonic data path (Sec. III of the paper):
+
+  comb shaper      -> the uint8 offset-binary input block u  [M, K]
+                      (M = wavelength lanes, K = word rows on the wordlines)
+  bitcells         -> the 8 bit-planes of the stored int8 words w  [K, N]
+  ring modulators  -> elementwise product  u * plane_b  (a bit gates light)
+  bit-line PDs     -> the per-plane column sum   u @ plane_b
+  output encoding  -> bit-significance weights (+2^b, -128 for the sign bit)
+  electrical corr. -> subtract 128 * colsum(w)  (offset-binary bias removal)
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's array is a
+photonic crossbar, not a GPU.  On TPU the natural shape is an int8->int32
+matmul on the MXU with the wavelength lanes as the minor batch axis; one
+pSRAM array load (ARRAY_ROWS word rows) is one VMEM-resident block, and the
+grid dimension over K corresponds to the 20 GHz array-reconfiguration
+schedule (HBM->VMEM streaming of the next array image).
+
+interpret=True is mandatory here: this session's PJRT client is CPU-only and
+real TPU lowering would emit a Mosaic custom-call it cannot execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import OFFSET, WORD_BITS, plane_weight
+
+# One physical pSRAM array holds 256 word rows (Sec. V.A: 256x256 bits,
+# 8-bit words -> 256 rows x 32 word columns).
+ARRAY_ROWS = 256
+
+
+def _psram_tile_kernel(u_ref, w_ref, o_ref):
+    """Grid step: multiply-accumulate one array image into the output.
+
+    u_ref: uint8 [M, Kb]   intensity codes for this array image
+    w_ref: int8  [K b, N]  stored words for this array image
+    o_ref: int32 [M, N]    running accumulation across grid steps
+    """
+    u = u_ref[...].astype(jnp.int32)
+    w_signed = w_ref[...].astype(jnp.int32)      # sign-extended
+    w_bits = w_signed & 0xFF                     # two's-complement bit pattern
+
+    acc = jnp.zeros(o_ref.shape, jnp.int32)
+    for b in range(WORD_BITS):
+        plane = (w_bits >> b) & 1                # what the bitcells store
+        # Per-wavelength bit-line photocurrent sum, scaled by significance.
+        acc = acc + plane_weight(b) * jax.lax.dot(
+            u, plane, preferred_element_type=jnp.int32
+        )
+    # Electrical-domain offset correction: (u - 128) @ w = u @ w - 128*colsum.
+    corr = OFFSET * jnp.sum(w_signed, axis=0, keepdims=True)
+    acc = acc - corr
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(pl.program_id(0) != 0)
+    def _accumulate():
+        o_ref[...] = o_ref[...] + acc
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def psram_tile(u, w, *, block_k=ARRAY_ROWS):
+    """Quantized tile matmul through the pSRAM-array Pallas kernel.
+
+    u: uint8 [M, K] offset-binary inputs; w: int8 [K, N] stored words.
+    K must be a multiple of block_k (pad upstream); each K-block is one
+    array image, sequenced by the grid like the reconfiguration schedule.
+    Returns int32 [M, N] == ref.quant_matmul(u, w), bit-exactly.
+    """
+    m, k = u.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims differ: {k} vs {k2}"
+    assert k % block_k == 0, f"K={k} not a multiple of block_k={block_k}"
+    steps = k // block_k
+    return pl.pallas_call(
+        _psram_tile_kernel,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((m, block_k), lambda s: (0, s)),
+            pl.BlockSpec((block_k, n), lambda s: (s, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, n), lambda s: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,
+    )(u, w)

@@ -1,0 +1,112 @@
+"""Pure-jnp correctness oracles for the pSRAM compute kernels.
+
+These define the *fixed-point contract* shared by every layer of the stack:
+
+  - An operand vector x (int8 range, [-128, 127]) is intensity-encoded as
+    offset-binary uint8  u = x + 128  (a photonic intensity is non-negative).
+  - A stored pSRAM word is an int8 (two's complement).  The photonic array
+    stores its 8 binary bit-planes in 8 bitcells.
+  - The analog column accumulation computes, per wavelength lane m and word
+    column n:   acc[m, n] = sum_k (u[m, k] - 128) * w[k, n]   in exact
+    integer arithmetic (int32), i.e. the offset is corrected in the
+    electrical domain by subtracting 128 * colsum(w).
+
+The Pallas kernel (psram_array.py) computes the same value through the
+bit-plane route the hardware takes; the Rust analog simulator
+(rust/src/compute/) mirrors it again.  All three must agree bit-exactly.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+OFFSET = 128  # offset-binary bias for intensity encoding
+WORD_BITS = 8
+
+
+def encode_offset(x):
+    """int8 value -> offset-binary uint8 intensity code (u = x + 128)."""
+    x = jnp.asarray(x, jnp.int32)
+    return (x + OFFSET).astype(jnp.uint8)
+
+
+def decode_offset(u):
+    """offset-binary uint8 intensity code -> int32 value."""
+    return jnp.asarray(u, jnp.int32) - OFFSET
+
+
+def quant_matmul(u, w):
+    """Reference for the pSRAM array tile compute.
+
+    u: uint8 [M, K]  offset-binary encoded inputs (M wavelength lanes)
+    w: int8  [K, N]  stored words (K word rows, N word columns)
+    returns int32 [M, N]  exact (u - 128) @ w
+    """
+    ui = jnp.asarray(u, jnp.int32) - OFFSET
+    wi = jnp.asarray(w, jnp.int32)
+    return ui @ wi
+
+
+def bitplanes(w):
+    """Decompose int8 words into 8 binary planes (two's complement).
+
+    Returns uint8 [8, K, N]; plane b holds bit b.  Reconstruction weight is
+    2**b for b < 7 and -128 for b == 7 (the sign bit).
+    """
+    wu = jnp.asarray(w, jnp.int32) & 0xFF
+    return jnp.stack([(wu >> b) & 1 for b in range(WORD_BITS)]).astype(jnp.uint8)
+
+
+def plane_weight(b):
+    """Output-encoding weight of bit-plane b (bit-significance scaling)."""
+    return -(1 << 7) if b == WORD_BITS - 1 else (1 << b)
+
+
+def quant_matmul_bitplane(u, w):
+    """Bit-plane route to quant_matmul (the path the optics take).
+
+    Each plane contributes  weight_b * (u @ plane_b); the offset-binary bias
+    is corrected once at the end.  Must equal quant_matmul exactly.
+    """
+    ui = jnp.asarray(u, jnp.int32)
+    planes = bitplanes(w).astype(jnp.int32)
+    acc = jnp.zeros((u.shape[0], w.shape[1]), jnp.int32)
+    for b in range(WORD_BITS):
+        acc = acc + plane_weight(b) * (ui @ planes[b])
+    corr = OFFSET * jnp.sum(jnp.asarray(w, jnp.int32), axis=0)
+    return acc - corr[None, :]
+
+
+def khatri_rao(b, c):
+    """Column-wise Khatri-Rao product.  b: [J, R], c: [K, R] -> [J*K, R].
+
+    Row ordering matches mode-0 matricization X_(0) [I, J*K] with k fastest:
+    row index = j * K + k.
+    """
+    J, R = b.shape
+    K, _ = c.shape
+    return (b[:, None, :] * c[None, :, :]).reshape(J * K, R)
+
+
+def mttkrp_mode0(x, b, c):
+    """Dense mode-0 MTTKRP oracle.  x: [I, J, K], b: [J, R], c: [K, R]."""
+    return jnp.einsum("ijk,jr,kr->ir", x, b, c)
+
+
+def mttkrp_unfolded(x, b, c):
+    """Same result via explicit matricization @ khatri_rao (CP1+CP2+CP3)."""
+    I, J, K = x.shape
+    return x.reshape(I, J * K) @ khatri_rao(b, c)
+
+
+def quantize_sym(a, bits=8):
+    """Symmetric per-tensor quantization to signed `bits` integers.
+
+    Returns (q int32 in [-(2^(bits-1)-1), 2^(bits-1)-1], scale f32) with
+    a ~= scale * q.  Zero tensors get scale 1.0.
+    """
+    a = np.asarray(a, np.float32)
+    qmax = (1 << (bits - 1)) - 1
+    amax = float(np.max(np.abs(a))) if a.size else 0.0
+    scale = amax / qmax if amax > 0 else 1.0
+    q = np.clip(np.rint(a / scale), -qmax, qmax).astype(np.int32)
+    return q, np.float32(scale)

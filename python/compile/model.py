@@ -1,0 +1,70 @@
+"""L2: the JAX compute graph for pSRAM-mapped MTTKRP, calling the L1 kernel.
+
+Two graph families are lowered to HLO text for the Rust runtime:
+
+  psram_tile_fn    — one quantized tile MAC through the pSRAM Pallas kernel:
+                     uint8 [M, K] x int8 [K, N] -> int32 [M, N].
+                     The Rust coordinator tiles a full MTTKRP into these,
+                     using M = wavelength lanes, K = word rows, N = words.
+                     Dequantization (scale_u * scale_w) happens in Rust so
+                     the artifact stays integer-exact and one artifact
+                     serves every scale.
+
+  mttkrp_f32_fn    — the dense f32 mode-0 MTTKRP digital baseline
+                     (einsum over a full [I, J, K] block), used for the
+                     baseline benches and as an accuracy reference.
+
+Shapes are static in HLO, so a small set of variants is exported
+(see VARIANTS / BASELINES); the coordinator pads tiles to fit.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import psram_tile
+from .kernels.ref import mttkrp_mode0
+
+# (name, (M, K, N)) — M: wavelength lanes per batch, K: word rows (multiple
+# of one array's 256), N: word columns.  `psram_tile_52x256x32` is exactly
+# one array load of the paper's 256x256-bit / 52-wavelength configuration.
+VARIANTS = [
+    ("psram_tile_52x256x32", (52, 256, 32)),
+    ("psram_tile_64x256x16", (64, 256, 16)),
+    ("psram_tile_128x512x32", (128, 512, 32)),
+]
+
+# (name, (I, J, K, R)) dense f32 MTTKRP baseline blocks.
+BASELINES = [
+    ("mttkrp_f32_64x48x40_r16", (64, 48, 40, 16)),
+    ("mttkrp_f32_32x24x20_r8", (32, 24, 20, 8)),
+]
+
+
+def psram_tile_fn(u, w):
+    """The AOT entry point for one quantized pSRAM tile MAC."""
+    return (psram_tile(u, w),)
+
+
+def mttkrp_f32_fn(x, b, c):
+    """The AOT entry point for the dense f32 MTTKRP baseline block."""
+    return (mttkrp_mode0(x, b, c),)
+
+
+def tile_example_args(m, k, n):
+    """ShapeDtypeStructs for lowering psram_tile_fn."""
+    import jax
+
+    return (
+        jax.ShapeDtypeStruct((m, k), jnp.uint8),
+        jax.ShapeDtypeStruct((k, n), jnp.int8),
+    )
+
+
+def baseline_example_args(i, j, k, r):
+    """ShapeDtypeStructs for lowering mttkrp_f32_fn."""
+    import jax
+
+    return (
+        jax.ShapeDtypeStruct((i, j, k), jnp.float32),
+        jax.ShapeDtypeStruct((j, r), jnp.float32),
+        jax.ShapeDtypeStruct((k, r), jnp.float32),
+    )

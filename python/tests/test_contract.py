@@ -1,0 +1,84 @@
+# pytest: the cross-layer fixed-point contract — properties the Rust side
+# (util::fixed, compute::engine) relies on, checked exhaustively here.
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import psram_tile, ref
+
+
+def test_offset_encoding_is_exhaustively_correct():
+    # all 256 codes decode to the value whose encoding they are
+    for x in range(-128, 128):
+        u = int(np.asarray(ref.encode_offset(np.array(x))))
+        assert 0 <= u <= 255
+        assert int(np.asarray(ref.decode_offset(np.array(u, dtype=np.uint8)))) == x
+
+
+def test_every_int8_reconstructs_from_bitplanes():
+    w = np.arange(-128, 128, dtype=np.int8).reshape(1, 256)
+    planes = np.asarray(ref.bitplanes(w)).astype(np.int64)
+    recon = sum(ref.plane_weight(b) * planes[b] for b in range(8))
+    np.testing.assert_array_equal(recon[0], np.arange(-128, 128))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 8),
+    n=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_single_nonzero_row_isolates_product(m, n, seed):
+    """The CP1 interleave guarantee at the kernel level: an input that is
+    zero except at row r yields exactly x * w[r, :] per lane."""
+    rng = np.random.default_rng(seed)
+    k = 256
+    w = rng.integers(-128, 128, size=(k, n), dtype=np.int8)
+    u = np.full((m, k), 128, dtype=np.uint8)  # value 0 everywhere
+    rows = rng.integers(0, k, size=m)
+    vals = rng.integers(-128, 128, size=m)
+    for lane in range(m):
+        u[lane, rows[lane]] = vals[lane] + 128
+    out = np.asarray(psram_tile(u, w))
+    for lane in range(m):
+        np.testing.assert_array_equal(
+            out[lane], vals[lane] * w[rows[lane]].astype(np.int32)
+        )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_linearity_in_weights(seed):
+    """quant_matmul(u, w1 + w2) == quant_matmul(u, w1) + quant_matmul(u, w2)
+    when no overflow occurs — the superposition the analog accumulation
+    depends on."""
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, 256, size=(4, 256), dtype=np.uint8)
+    w1 = rng.integers(-60, 60, size=(256, 4), dtype=np.int8)
+    w2 = rng.integers(-60, 60, size=(256, 4), dtype=np.int8)
+    lhs = np.asarray(ref.quant_matmul(u, (w1 + w2).astype(np.int8)))
+    rhs = np.asarray(ref.quant_matmul(u, w1)) + np.asarray(ref.quant_matmul(u, w2))
+    np.testing.assert_array_equal(lhs, rhs)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    i=st.integers(2, 6),
+    j=st.integers(2, 6),
+    k=st.integers(2, 6),
+    l=st.integers(2, 6),
+    r=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_four_mode_mttkrp_identity(i, j, k, l, r, seed):
+    """4-mode MTTKRP via nested Khatri-Rao matches the literal sum —
+    validates the N-mode ordering convention shared with Rust."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((i, j, k, l)).astype(np.float64)
+    fb = rng.standard_normal((j, r))
+    fc = rng.standard_normal((k, r))
+    fd = rng.standard_normal((l, r))
+    # KRP in increasing mode order, last mode fastest:
+    krp = np.asarray(ref.khatri_rao(np.asarray(ref.khatri_rao(fb, fc)), fd))
+    got = x.reshape(i, -1) @ krp
+    want = np.einsum("ijkl,jr,kr,lr->ir", x, fb, fc, fd)
+    np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-8)

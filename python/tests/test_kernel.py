@@ -1,0 +1,143 @@
+# pytest: Pallas kernel vs pure-jnp ref — the CORE correctness signal.
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import psram_tile
+from compile.kernels import ref
+
+
+def rand_uw(rng, m, k, n):
+    u = rng.integers(0, 256, size=(m, k), dtype=np.uint8)
+    w = rng.integers(-128, 128, size=(k, n), dtype=np.int8)
+    return u, w
+
+
+# ---------------------------------------------------------------- oracles
+
+
+def test_bitplane_route_equals_direct():
+    rng = np.random.default_rng(0)
+    u, w = rand_uw(rng, 8, 256, 16)
+    direct = np.asarray(ref.quant_matmul(u, w))
+    planes = np.asarray(ref.quant_matmul_bitplane(u, w))
+    np.testing.assert_array_equal(direct, planes)
+
+
+def test_bitplane_reconstruction():
+    w = np.arange(-128, 128, dtype=np.int8).reshape(16, 16)
+    planes = np.asarray(ref.bitplanes(w)).astype(np.int64)
+    recon = sum(ref.plane_weight(b) * planes[b] for b in range(8))
+    np.testing.assert_array_equal(recon, w.astype(np.int64))
+
+
+def test_offset_roundtrip():
+    x = np.arange(-128, 128, dtype=np.int32)
+    u = np.asarray(ref.encode_offset(x))
+    assert u.dtype == np.uint8
+    np.testing.assert_array_equal(np.asarray(ref.decode_offset(u)), x)
+
+
+def test_plane_weights_sum_to_two_complement():
+    # +2^0..+2^6 and -2^7: weights reconstruct any int8.
+    assert sum(ref.plane_weight(b) * 1 for b in range(8)) == -1  # 0xFF == -1
+
+
+# ------------------------------------------------------------- the kernel
+
+
+def test_kernel_matches_ref_single_array():
+    rng = np.random.default_rng(1)
+    u, w = rand_uw(rng, 52, 256, 32)  # exactly one paper-config array load
+    out = np.asarray(psram_tile(u, w))
+    np.testing.assert_array_equal(out, np.asarray(ref.quant_matmul(u, w)))
+
+
+def test_kernel_matches_ref_multi_step_grid():
+    # K = 1024 -> 4 array images sequenced by the reconfiguration grid.
+    rng = np.random.default_rng(2)
+    u, w = rand_uw(rng, 16, 1024, 8)
+    out = np.asarray(psram_tile(u, w))
+    np.testing.assert_array_equal(out, np.asarray(ref.quant_matmul(u, w)))
+
+
+def test_kernel_extreme_values():
+    # all-max intensities against all-min words: worst-case magnitudes.
+    m, k, n = 4, 512, 8
+    u = np.full((m, k), 255, dtype=np.uint8)
+    w = np.full((k, n), -128, dtype=np.int8)
+    out = np.asarray(psram_tile(u, w))
+    expected = (255 - 128) * (-128) * k
+    np.testing.assert_array_equal(out, np.full((m, n), expected, dtype=np.int32))
+
+
+def test_kernel_zero_words():
+    rng = np.random.default_rng(3)
+    u = rng.integers(0, 256, size=(8, 256), dtype=np.uint8)
+    w = np.zeros((256, 4), dtype=np.int8)
+    np.testing.assert_array_equal(np.asarray(psram_tile(u, w)), 0)
+
+
+def test_kernel_rejects_ragged_k():
+    u = np.zeros((4, 300), dtype=np.uint8)
+    w = np.zeros((300, 4), dtype=np.int8)
+    with pytest.raises(AssertionError):
+        psram_tile(u, w)
+
+
+def test_kernel_custom_block_k():
+    rng = np.random.default_rng(4)
+    u, w = rand_uw(rng, 8, 384, 8)
+    out = np.asarray(psram_tile(u, w, block_k=128))
+    np.testing.assert_array_equal(out, np.asarray(ref.quant_matmul(u, w)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    steps=st.integers(1, 3),
+    n=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_ref_property(m, steps, n, seed):
+    """Hypothesis sweep over lane/step/column counts: kernel == ref exactly."""
+    rng = np.random.default_rng(seed)
+    u, w = rand_uw(rng, m, steps * 256, n)
+    out = np.asarray(psram_tile(u, w))
+    np.testing.assert_array_equal(out, np.asarray(ref.quant_matmul(u, w)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    block=st.sampled_from([64, 128, 256]),
+    steps=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_block_size_invariance(block, steps, seed):
+    """The result must not depend on the reconfiguration block size."""
+    rng = np.random.default_rng(seed)
+    u, w = rand_uw(rng, 8, steps * 256, 8)
+    a = np.asarray(psram_tile(u, w, block_k=block))
+    b = np.asarray(psram_tile(u, w, block_k=256))
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------- quantization
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), bits=st.sampled_from([4, 8, 16]))
+def test_quantize_sym_bounds_and_accuracy(seed, bits):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((32, 8)).astype(np.float32)
+    q, scale = ref.quantize_sym(a, bits=bits)
+    qmax = (1 << (bits - 1)) - 1
+    assert np.abs(q).max() <= qmax
+    # Reconstruction error bounded by half a quantization step.
+    np.testing.assert_allclose(scale * q, a, atol=scale / 2 + 1e-7)
+
+
+def test_quantize_sym_zero_tensor():
+    q, scale = ref.quantize_sym(np.zeros((4, 4), np.float32))
+    assert scale == 1.0
+    assert np.all(q == 0)

@@ -1,0 +1,89 @@
+# pytest: L2 graph semantics — MTTKRP identities and quantized-tile accuracy.
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_khatri_rao_shape_and_values():
+    b = np.arange(6, dtype=np.float32).reshape(3, 2)
+    c = np.arange(8, dtype=np.float32).reshape(4, 2)
+    kr = np.asarray(ref.khatri_rao(b, c))
+    assert kr.shape == (12, 2)
+    # row (j*K + k) = b[j] * c[k]
+    for j in range(3):
+        for k in range(4):
+            np.testing.assert_array_equal(kr[j * 4 + k], b[j] * c[k])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    i=st.integers(2, 10),
+    j=st.integers(2, 10),
+    k=st.integers(2, 10),
+    r=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mttkrp_einsum_equals_unfolded(i, j, k, r, seed):
+    """X_(0) @ (B KR C) == einsum — validates the CP1/CP2/CP3 factoring."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((i, j, k)).astype(np.float32)
+    b = rng.standard_normal((j, r)).astype(np.float32)
+    c = rng.standard_normal((k, r)).astype(np.float32)
+    a1 = np.asarray(ref.mttkrp_mode0(x, b, c))
+    a2 = np.asarray(ref.mttkrp_unfolded(x, b, c))
+    np.testing.assert_allclose(a1, a2, rtol=1e-4, atol=1e-4)
+
+
+def test_mttkrp_loop_oracle():
+    """einsum vs a literal 3-nested-loop CP1/CP2/CP3 evaluation."""
+    rng = np.random.default_rng(7)
+    i_dim, j_dim, k_dim, r = 4, 3, 5, 2
+    x = rng.standard_normal((i_dim, j_dim, k_dim)).astype(np.float64)
+    b = rng.standard_normal((j_dim, r)).astype(np.float64)
+    c = rng.standard_normal((k_dim, r)).astype(np.float64)
+    a = np.zeros((i_dim, r))
+    for i in range(i_dim):
+        for j in range(j_dim):
+            for k in range(k_dim):
+                # CP1: b[j] ∘ c[k]; CP2: * x[i,j,k]; CP3: += into A[i]
+                a[i] += x[i, j, k] * (b[j] * c[k])
+    # jnp runs in f32 (jax_enable_x64 off) -> f32-level tolerance vs f64 loop.
+    np.testing.assert_allclose(
+        np.asarray(ref.mttkrp_mode0(x, b, c)), a, rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_quantized_tile_approximates_f32(seed):
+    """End-to-end quantized tile MAC ~= f32 matmul within quant error bound."""
+    rng = np.random.default_rng(seed)
+    m, k, n = 13, 256, 7
+    xf = rng.standard_normal((m, k)).astype(np.float32)
+    wf = rng.standard_normal((k, n)).astype(np.float32)
+
+    xq, sx = ref.quantize_sym(xf)
+    wq, sw = ref.quantize_sym(wf)
+    u = (xq + ref.OFFSET).astype(np.uint8)
+    acc = np.asarray(ref.quant_matmul(u, wq.astype(np.int8)))
+    approx = float(sx) * float(sw) * acc.astype(np.float64)
+
+    exact = xf.astype(np.float64) @ wf.astype(np.float64)
+    # Error bound: each product has quant error <= sx*|w|/2 + sw*|x|/2 + sx*sw/4.
+    bound = k * (
+        float(sx) * np.abs(wf).max() / 2
+        + float(sw) * np.abs(xf).max() / 2
+        + float(sx) * float(sw) / 4
+    )
+    assert np.abs(approx - exact).max() <= bound
+
+
+def test_variant_table_is_consistent():
+    # Every exported tile variant has K a multiple of one array's rows.
+    for name, (m, k, n) in model.VARIANTS:
+        assert k % 256 == 0, name
+        assert m >= 1 and n >= 1
+    names = [n for n, _ in model.VARIANTS] + [n for n, _ in model.BASELINES]
+    assert len(names) == len(set(names)), "duplicate artifact names"

@@ -1,0 +1,53 @@
+//! AB-ARRAY — ablation over array geometry: peak/sustained scaling from
+//! the model, plus measured simulator throughput per geometry.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use psram_imc::compute::ComputeEngine;
+use psram_imc::perfmodel::{PerfModel, Workload};
+use psram_imc::psram::{ArrayGeometry, PsramArray};
+use psram_imc::util::prng::Prng;
+use psram_imc::util::units::format_ops;
+
+fn main() {
+    common::section("AB-ARRAY: model — sustained performance vs array geometry");
+    let w = Workload::paper_large();
+    println!(
+        "{:>10} | {:>9} | {:>16} | {:>16} | {:>8}",
+        "geometry", "words", "peak", "sustained", "util"
+    );
+    for &dim in &[64usize, 128, 256, 512] {
+        let geom = ArrayGeometry::new(dim, dim, 8).unwrap();
+        let mut m = PerfModel::paper();
+        m.geom = geom;
+        let est = m.predict(&w).unwrap();
+        println!(
+            "{:>10} | {:>9} | {:>16} | {:>16} | {:>8.4}",
+            format!("{dim}x{dim}"),
+            geom.total_words(),
+            format_ops(est.peak_ops),
+            format_ops(est.sustained_raw_ops),
+            est.utilization
+        );
+    }
+    println!("(larger arrays amortise one wordline write over more bits: peak and");
+    println!(" sustained grow ~quadratically with the array edge)");
+
+    common::section("AB-ARRAY: measured — simulator compute-cycle cost per geometry");
+    let mut rng = Prng::new(5);
+    for &dim in &[64usize, 128, 256] {
+        let geom = ArrayGeometry::new(dim, dim, 8).unwrap();
+        let mut array = PsramArray::new(geom).unwrap();
+        let img: Vec<i8> = (0..geom.total_words()).map(|_| rng.next_i8()).collect();
+        array.write_image(&img).unwrap();
+        let lanes = 16usize;
+        let u: Vec<u8> = (0..lanes * dim).map(|_| rng.next_u8()).collect();
+        let mut eng = ComputeEngine::ideal();
+        let macs = (dim * geom.words_per_row() * lanes) as f64;
+        let t = common::bench(&format!("compute_cycle {dim}x{dim} lanes=16"), 3, 20, || {
+            eng.compute_cycle(&mut array, &u, lanes).unwrap();
+        });
+        println!("  -> {:.3e} MAC/s simulated", macs / t);
+    }
+}

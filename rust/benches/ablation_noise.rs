@@ -1,0 +1,59 @@
+//! AB-NOISE — ablation: CP-ALS decomposition quality vs optical/detector
+//! noise (sigma in ideal-LSB units of the analog column sum), using the
+//! ground-truth (brute-force) fit.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use psram_imc::compute::ComputeEngine;
+use psram_imc::cpd::{brute_force_fit, AlsConfig, CpAls, PsramBackend};
+use psram_imc::device::{DeviceParams, LinkBudget, NoiseModel, Photodiode};
+use psram_imc::mttkrp::pipeline::AnalogTileExecutor;
+use psram_imc::psram::PsramArray;
+use psram_imc::tensor::{DenseTensor, Matrix};
+use psram_imc::util::prng::Prng;
+
+fn main() {
+    common::section("AB-NOISE: verified CP-ALS fit vs detector noise sigma");
+    let mut rng = Prng::new(77);
+    let shape = [24usize, 20, 16];
+    let truth: Vec<Matrix> = shape.iter().map(|&d| Matrix::randn(d, 3, &mut rng)).collect();
+    let x = DenseTensor::from_cp_factors(&truth, 0.0, &mut rng).unwrap();
+
+    // Where the physical link budget sits:
+    let phys_sigma = LinkBudget::default().noise_sigma_lsb(
+        &Photodiode::default(),
+        20e9,
+        256.0 * 255.0,
+    );
+    println!("physical link-budget sigma at full 256-row swing: {phys_sigma:.2} LSB\n");
+
+    println!("{:>12} | {:>12} | {:>10}", "sigma (LSB)", "fit (true)", "starts");
+    let mut fits = Vec::new();
+    for &sigma in &[0.0f64, 50.0, 1e3, 1e4, 1e5, 1e6, 4e6] {
+        // best of 3 ALS starts (ALS is init-sensitive; standard practice)
+        let mut best = f64::NEG_INFINITY;
+        for seed in [5u64, 6, 7] {
+            let engine = ComputeEngine::new(
+                DeviceParams::default(),
+                NoiseModel::gaussian(sigma, 1234),
+            );
+            let exec = AnalogTileExecutor::new(engine, PsramArray::paper());
+            let mut backend = PsramBackend::new(&x, exec);
+            let res = CpAls::new(AlsConfig { rank: 3, max_iters: 20, tol: 1e-7, seed })
+                .run(&mut backend)
+                .unwrap();
+            best = best.max(brute_force_fit(&x, &res.factors, &res.lambda));
+        }
+        println!("{sigma:>12.1e} | {best:>12.6} | {:>10}", 3);
+        fits.push(best);
+    }
+    assert!(fits[0] > 0.95, "clean fit should be high");
+    assert!(
+        fits[fits.len() - 1] < fits[0],
+        "extreme noise must degrade the decomposition"
+    );
+    println!("\n(shape: flat plateau until sigma ≈ 1e4 LSB — ALS absorbs zero-mean");
+    println!(" detector noise — then collapse as per-readout SNR → 0; the physical");
+    println!(" operating point sits ~4 orders of magnitude inside the plateau)");
+}

@@ -1,0 +1,78 @@
+//! AB-PREC — ablation over operand precision: (a) accuracy of the
+//! quantized MTTKRP vs word bits, (b) the peak-throughput trade-off (fewer
+//! bits per word → more words per row → more parallel MACs).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use psram_imc::perfmodel::{PerfModel, Workload};
+use psram_imc::psram::ArrayGeometry;
+use psram_imc::tensor::Matrix;
+use psram_imc::util::fixed::quantize_sym;
+use psram_imc::util::prng::Prng;
+use psram_imc::util::units::format_ops;
+
+/// Quantized matmul at arbitrary bit width (f64 integer emulation — the
+/// functional array models 8-bit; this isolates the numeric effect).
+fn quant_matmul_bits(a: &Matrix, b: &Matrix, bits: u32) -> Matrix {
+    let (qa, sa) = quantize_sym(a.data(), bits);
+    let (qb, sb) = quantize_sym(b.data(), bits);
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        for p in 0..k {
+            let x = qa[i * k + p] as i64;
+            if x == 0 {
+                continue;
+            }
+            for j in 0..n {
+                let v = out.get(i, j) + (x * qb[p * n + j] as i64) as f32 * sa * sb;
+                out.set(i, j, v);
+            }
+        }
+    }
+    out
+}
+
+fn main() {
+    common::section("AB-PREC: accuracy of quantized MTTKRP tile vs word bits");
+    let mut rng = Prng::new(9);
+    let a = Matrix::randn(52, 256, &mut rng);
+    let b = Matrix::randn(256, 32, &mut rng);
+    let exact = a.matmul(&b).unwrap();
+    let exact_norm = exact.fro_norm();
+    println!("{:>6} | {:>14} | {:>12}", "bits", "rel RMSE", "SNR (dB)");
+    let mut prev = f64::INFINITY;
+    for &bits in &[4u32, 6, 8, 10, 12] {
+        let approx = quant_matmul_bits(&a, &b, bits);
+        let err: f64 = exact
+            .data()
+            .iter()
+            .zip(approx.data())
+            .map(|(e, q)| ((e - q) as f64).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let rel = err / exact_norm;
+        let snr_db = -20.0 * rel.log10();
+        println!("{bits:>6} | {rel:>14.6e} | {snr_db:>12.1}");
+        assert!(rel < prev, "more bits must not hurt accuracy");
+        prev = rel;
+    }
+
+    common::section("AB-PREC: model — peak throughput vs word bits (256x256 bits)");
+    println!("{:>6} | {:>10} | {:>16} | {:>16}", "bits", "words/row", "peak", "sustained");
+    for &bits in &[4u32, 8, 16] {
+        let geom = ArrayGeometry::new(256, 256, bits).unwrap();
+        let mut m = PerfModel::paper();
+        m.geom = geom;
+        let est = m.predict(&Workload::paper_large()).unwrap();
+        println!(
+            "{bits:>6} | {:>10} | {:>16} | {:>16}",
+            geom.words_per_row(),
+            format_ops(m.peak_ops()),
+            format_ops(est.sustained_raw_ops)
+        );
+    }
+    println!("(halving precision doubles words/row and peak ops — the paper's 8-bit");
+    println!(" point trades accuracy for the 17 PetaOps headline)");
+}

@@ -1,0 +1,96 @@
+//! BASE-CPU — digital baselines vs the pSRAM paths on one MTTKRP
+//! (96×80×72 tensor, rank 16, mode 0): exact f32 CPU, quantized CPU
+//! integer executor, device-faithful analog simulator, and the AOT Pallas
+//! kernel via PJRT (plus the dense-f32 PJRT baseline artifact).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use psram_imc::mttkrp::pipeline::{AnalogTileExecutor, CpuTileExecutor, PsramPipeline};
+use psram_imc::mttkrp::reference::dense_mttkrp;
+use psram_imc::runtime::{PjrtRuntime, PjrtTileExecutor};
+use psram_imc::tensor::{DenseTensor, Matrix};
+use psram_imc::util::prng::Prng;
+
+fn main() {
+    let mut rng = Prng::new(11);
+    let shape = [96usize, 80, 72];
+    let rank = 16;
+    let x = DenseTensor::randn(&shape, &mut rng);
+    let factors: Vec<Matrix> =
+        shape.iter().map(|&d| Matrix::randn(d, rank, &mut rng)).collect();
+    let macs = (shape[0] * shape[1] * shape[2] * rank) as f64;
+
+    common::section("digital baselines vs pSRAM paths — MTTKRP 96x80x72 r16");
+    let t = common::bench("cpu f32 dense_mttkrp (exact baseline)", 1, 5, || {
+        dense_mttkrp(&x, &factors, 0).unwrap();
+    });
+    println!("  -> {:.3e} MAC/s", macs / t);
+
+    let t = common::bench("quantized pipeline (cpu int executor)", 1, 5, || {
+        let mut e = CpuTileExecutor::paper();
+        PsramPipeline::new(&mut e).mttkrp(&x, &factors, 0).unwrap();
+    });
+    println!("  -> {:.3e} MAC/s", macs / t);
+
+    let t = common::bench("quantized pipeline (analog simulator)", 1, 3, || {
+        let mut e = AnalogTileExecutor::ideal();
+        PsramPipeline::new(&mut e).mttkrp(&x, &factors, 0).unwrap();
+    });
+    println!("  -> {:.3e} MAC/s", macs / t);
+
+    match PjrtTileExecutor::paper() {
+        Ok(_) => {
+            let t = common::bench("quantized pipeline (PJRT pallas kernel)", 1, 3, || {
+                let mut e = PjrtTileExecutor::paper().unwrap();
+                PsramPipeline::new(&mut e).mttkrp(&x, &factors, 0).unwrap();
+            });
+            println!("  -> {:.3e} MAC/s (includes executable-cache build)", macs / t);
+
+            // Steady-state PJRT: reuse one compiled executor.
+            let mut e = PjrtTileExecutor::paper().unwrap();
+            let t = common::bench("   same, warm executable cache", 1, 3, || {
+                PsramPipeline::new(&mut e).mttkrp(&x, &factors, 0).unwrap();
+            });
+            println!("  -> {:.3e} MAC/s", macs / t);
+        }
+        Err(e) => println!("PJRT paths skipped (run `make artifacts`): {e}"),
+    }
+
+    common::section("PJRT dense-f32 baseline artifact (mttkrp_f32_64x48x40_r16)");
+    match PjrtRuntime::new() {
+        Ok(mut rt) => {
+            let (i, j, k, r) = (64usize, 48usize, 40usize, 16usize);
+            let xs = DenseTensor::randn(&[i, j, k], &mut rng);
+            let b = Matrix::randn(j, r, &mut rng);
+            let c = Matrix::randn(k, r, &mut rng);
+            rt.execute_mttkrp_f32(
+                "mttkrp_f32_64x48x40_r16",
+                xs.data(),
+                b.data(),
+                c.data(),
+                i,
+                j,
+                k,
+                r,
+            )
+            .unwrap(); // compile once
+            let macs2 = (i * j * k * r) as f64;
+            let t = common::bench("pjrt f32 mttkrp block 64x48x40 r16", 2, 10, || {
+                rt.execute_mttkrp_f32(
+                    "mttkrp_f32_64x48x40_r16",
+                    xs.data(),
+                    b.data(),
+                    c.data(),
+                    i,
+                    j,
+                    k,
+                    r,
+                )
+                .unwrap();
+            });
+            println!("  -> {:.3e} MAC/s", macs2 / t);
+        }
+        Err(e) => println!("skipped: {e}"),
+    }
+}

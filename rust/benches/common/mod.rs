@@ -1,0 +1,52 @@
+//! Shared measurement harness for the benches (criterion is unavailable
+//! offline; this provides warmup + repetition + median/stddev reporting
+//! with a stable, grep-friendly output format).
+#![allow(dead_code)] // each bench uses a subset of these helpers
+
+use std::time::Instant;
+
+/// Time `f` with `warmup` unmeasured and `reps` measured runs; prints a
+/// result row and returns the median seconds.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> f64 {
+    assert!(reps >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / reps as f64;
+    let std = (times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
+        / reps as f64)
+        .sqrt();
+    println!(
+        "bench {name:<42} median {:>12} mean {:>12} ± {:>10} ({reps} reps)",
+        fmt_s(median),
+        fmt_s(mean),
+        fmt_s(std)
+    );
+    median
+}
+
+/// Human-readable seconds.
+pub fn fmt_s(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,55 @@
+//! COORD — L3 coordinator scaling: wall-clock time of one distributed
+//! MTTKRP vs worker count (the leader/worker pool over simulated arrays),
+//! plus queue-depth (backpressure) sensitivity.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use psram_imc::coordinator::{Coordinator, CoordinatorConfig};
+use psram_imc::mttkrp::pipeline::CpuTileExecutor;
+use psram_imc::tensor::Matrix;
+use psram_imc::util::prng::Prng;
+
+fn main() {
+    let mut rng = Prng::new(13);
+    // 16 images (4 K-blocks x 4 R-blocks), 20 lane batches each.
+    let unf = Matrix::randn(1040, 1024, &mut rng);
+    let krp = Matrix::randn(1024, 128, &mut rng);
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    common::section(&format!(
+        "COORD: distributed MTTKRP wall-clock vs workers ({cores} core(s) available)"
+    ));
+    if cores == 1 {
+        println!("NOTE: single-core machine — parallel speedup is physically impossible;");
+        println!("      this bench then measures coordination OVERHEAD (should be ~flat).");
+    }
+    let mut t1 = 0.0;
+    for &workers in &[1usize, 2, 4, 8] {
+        let t = common::bench(&format!("mttkrp 1040x1024x128 workers={workers}"), 1, 3, || {
+            let mut pool = Coordinator::spawn(
+                CoordinatorConfig { workers, queue_depth: 2 * workers },
+                |_| Ok(CpuTileExecutor::paper()),
+            )
+            .unwrap();
+            pool.mttkrp_unfolded(unf.clone(), &krp).unwrap();
+        });
+        if workers == 1 {
+            t1 = t;
+        } else {
+            println!("  -> speedup vs 1 worker: {:.2}x", t1 / t);
+        }
+    }
+
+    common::section("COORD: queue-depth (backpressure) sensitivity @ 4 workers");
+    for &depth in &[1usize, 4, 16] {
+        common::bench(&format!("mttkrp queue_depth={depth}"), 1, 3, || {
+            let mut pool = Coordinator::spawn(
+                CoordinatorConfig { workers: 4, queue_depth: depth },
+                |_| Ok(CpuTileExecutor::paper()),
+            )
+            .unwrap();
+            pool.mttkrp_unfolded(unf.clone(), &krp).unwrap();
+        });
+    }
+}

@@ -1,0 +1,68 @@
+//! FIG5i — regenerates Fig. 5(i): sustained MTTKRP performance vs number
+//! of wavelength channels, from (a) the predictive model on the paper's
+//! 1M-per-mode workload and (b) *measured* utilisation of the functional
+//! pipeline on a scaled-down workload with the same reuse structure.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use psram_imc::mttkrp::pipeline::{CpuTileExecutor, PsramPipeline};
+use psram_imc::perfmodel::fig5_wavelengths;
+use psram_imc::tensor::Matrix;
+use psram_imc::util::prng::Prng;
+use psram_imc::util::stats::linear_fit;
+use psram_imc::util::units::format_ops;
+
+fn main() {
+    common::section("Fig 5(i): sustained performance vs wavelength channels (model)");
+    let channels: Vec<usize> = vec![1, 2, 4, 8, 12, 16, 24, 32, 40, 52, 64];
+    let pts = fig5_wavelengths(&channels, 20e9).unwrap();
+    println!("{:>9} | {:>16} | {:>8} | {}", "channels", "sustained", "util", "PDK");
+    for p in &pts {
+        println!(
+            "{:>9} | {:>16} | {:>8.4} | {}",
+            p.x,
+            format_ops(p.sustained_ops),
+            p.utilization,
+            if p.admissible { "ok" } else { "extrapolated" }
+        );
+    }
+    let xs: Vec<f64> = pts.iter().map(|p| p.x).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.sustained_ops).collect();
+    let (_, slope, r2) = linear_fit(&xs, &ys);
+    println!("series linearity: R²={r2:.6} slope={}/channel", format_ops(slope));
+    assert!(r2 > 0.999, "Fig 5(i) must be linear");
+
+    common::section("Fig 5(i) measured: pipeline utilisation vs channels (scaled workload)");
+    // Reuse-heavy scaled workload: I = 2000*λ rows so every channel count
+    // sees the same lane-batch count (isolates the λ effect), K=256, R=32.
+    let mut rng = Prng::new(1);
+    println!("{:>9} | {:>10} | {:>10} | {:>12}", "channels", "meas util", "pred util", "sim time");
+    for &l in &[4usize, 16, 52] {
+        let i_dim = 400 * l;
+        let unf = Matrix::randn(i_dim, 256, &mut rng);
+        let krp = Matrix::randn(256, 32, &mut rng);
+        let mut exec = CpuTileExecutor::new(256, 32, l);
+        let mut pipe = PsramPipeline::new(&mut exec);
+        let t = common::bench(&format!("mttkrp λ={l} I={i_dim}"), 1, 3, || {
+            let mut e2 = CpuTileExecutor::new(256, 32, l);
+            let mut p2 = PsramPipeline::new(&mut e2);
+            p2.mttkrp_unfolded(&unf, &krp).unwrap();
+        });
+        pipe.mttkrp_unfolded(&unf, &krp).unwrap();
+        let meas = pipe.stats.utilization();
+        let pred = {
+            let mut m = psram_imc::perfmodel::PerfModel::paper();
+            m.wavelengths = l;
+            m.predict(&psram_imc::perfmodel::Workload {
+                i_rows: i_dim as u64,
+                k_contraction: 256,
+                rank: 32,
+            })
+            .unwrap()
+            .utilization
+        };
+        println!("{l:>9} | {meas:>10.4} | {pred:>10.4} | {:>12}", common::fmt_s(t));
+        assert!((meas - pred).abs() < 1e-9, "model must match measurement");
+    }
+}

@@ -1,0 +1,66 @@
+//! HEADLINE — the §V.B claim: 17 PetaOps sustained at 256×256 bits /
+//! 52 λ / 20 GHz / 8-bit.  Reproduced from the model, validated against the
+//! functional pipeline's measured cycle counts, and accompanied by the
+//! simulator's own wall-clock throughput (the L3 perf target).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use psram_imc::mttkrp::pipeline::{AnalogTileExecutor, CpuTileExecutor, PsramPipeline};
+use psram_imc::perfmodel::{headline, PerfModel, Workload};
+use psram_imc::tensor::Matrix;
+use psram_imc::util::prng::Prng;
+use psram_imc::util::units::format_ops;
+
+fn main() {
+    common::section("headline: peak and sustained at the paper configuration");
+    let (peak, sustained, util) = headline().unwrap();
+    println!("peak      : {}", format_ops(peak));
+    println!("sustained : {} (paper: 17 PetaOps)", format_ops(sustained));
+    println!("util      : {util:.4}");
+    assert!((peak / 1e15 - 17.04).abs() < 0.01);
+    assert!(sustained / peak > 0.98);
+
+    common::section("model vs measured cycles (reuse-heavy scaled workload)");
+    // I = 20800 rows (400 lane batches), K = 512 (2 images), R = 32.
+    let mut rng = Prng::new(3);
+    let unf = Matrix::randn(20_800, 512, &mut rng);
+    let krp = Matrix::randn(512, 32, &mut rng);
+    let mut exec = CpuTileExecutor::paper();
+    let mut pipe = PsramPipeline::new(&mut exec);
+    pipe.mttkrp_unfolded(&unf, &krp).unwrap();
+    let est = PerfModel::paper()
+        .predict(&Workload { i_rows: 20_800, k_contraction: 512, rank: 32 })
+        .unwrap();
+    println!(
+        "measured: images={} compute={} write={} U={:.4}",
+        pipe.stats.images,
+        pipe.stats.compute_cycles,
+        pipe.stats.write_cycles,
+        pipe.stats.utilization()
+    );
+    println!(
+        "model   : images={} compute={} write={} U={:.4}",
+        est.images, est.compute_cycles, est.write_cycles, est.utilization
+    );
+    assert_eq!(est.images, pipe.stats.images);
+    assert_eq!(est.compute_cycles, pipe.stats.compute_cycles);
+    assert_eq!(est.write_cycles, pipe.stats.write_cycles);
+
+    common::section("simulator wall-clock throughput (L3 perf target)");
+    // CPU integer executor (the optimized digital hot path):
+    let macs = pipe.stats.useful_macs as f64;
+    let t_cpu = common::bench("cpu-executor mttkrp 20800x512x32", 1, 5, || {
+        let mut e = CpuTileExecutor::paper();
+        let mut p = PsramPipeline::new(&mut e);
+        p.mttkrp_unfolded(&unf, &krp).unwrap();
+    });
+    println!("  cpu executor    : {:.3e} MAC/s", macs / t_cpu);
+    // Analog simulator (device-faithful fast path):
+    let t_sim = common::bench("analog-sim mttkrp 20800x512x32", 1, 3, || {
+        let mut e = AnalogTileExecutor::ideal();
+        let mut p = PsramPipeline::new(&mut e);
+        p.mttkrp_unfolded(&unf, &krp).unwrap();
+    });
+    println!("  analog simulator: {:.3e} MAC/s", macs / t_sim);
+}

@@ -1,0 +1,61 @@
+//! AB-SPARSE — sparse MTTKRP (the paper's motivating kernel) on the pSRAM
+//! array: throughput and utilisation vs tensor density, plus CPU sparse
+//! baseline comparison.  The *shape* to reproduce: the photonic array wins
+//! on reuse-heavy dense workloads; at low density the raw-MAC efficiency
+//! collapses to the density (zeros still ride the wavelengths).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use psram_imc::mttkrp::reference::sparse_mttkrp;
+use psram_imc::mttkrp::{CpuTileExecutor, SparsePsramPipeline};
+use psram_imc::tensor::{CooTensor, Matrix};
+use psram_imc::util::prng::Prng;
+
+fn main() {
+    let mut rng = Prng::new(17);
+    let shape = [128usize, 256, 64];
+    let total = shape.iter().product::<usize>();
+    let rank = 32;
+    let factors: Vec<Matrix> =
+        shape.iter().map(|&d| Matrix::randn(d, rank, &mut rng)).collect();
+
+    common::section("AB-SPARSE: pSRAM sparse MTTKRP vs density (128x256x64, r32)");
+    println!(
+        "{:>9} | {:>9} | {:>12} | {:>10} | {:>10} | {:>12}",
+        "density", "nnz", "wall", "util", "raw eff", "useful MAC/s"
+    );
+    for &density in &[0.001f64, 0.01, 0.05, 0.2] {
+        let nnz = (total as f64 * density) as usize;
+        let x = CooTensor::random(&shape, nnz, &mut rng);
+        let mut exec = CpuTileExecutor::paper();
+        let mut pipe = SparsePsramPipeline::new(&mut exec);
+        pipe.mttkrp(&x, &factors, 0).unwrap();
+        let stats = pipe.stats;
+        let t = common::bench(&format!("sp-mttkrp density={density}"), 1, 3, || {
+            let mut e = CpuTileExecutor::paper();
+            SparsePsramPipeline::new(&mut e).mttkrp(&x, &factors, 0).unwrap();
+        });
+        println!(
+            "{density:>9} | {:>9} | {:>12} | {:>10.4} | {:>10.4} | {:>12.3e}",
+            x.nnz(),
+            common::fmt_s(t),
+            stats.utilization(),
+            stats.padding_efficiency(),
+            stats.useful_macs as f64 / t
+        );
+    }
+
+    common::section("AB-SPARSE: CPU sparse baseline (same workload)");
+    for &density in &[0.01f64, 0.2] {
+        let nnz = (total as f64 * density) as usize;
+        let x = CooTensor::random(&shape, nnz, &mut rng);
+        let t = common::bench(&format!("cpu sparse_mttkrp density={density}"), 1, 5, || {
+            sparse_mttkrp(&x, &factors, 0).unwrap();
+        });
+        println!("  -> {:.3e} useful MAC/s", (x.nnz() * rank) as f64 / t);
+    }
+    println!("\n(expected shape: photonic raw-MAC efficiency ≈ density — the array");
+    println!(" computes zeros — while the CPU baseline scales with nnz only; the");
+    println!(" crossover argument favours the array only above ~columns/rows density)");
+}

@@ -1,0 +1,109 @@
+//! Minimal argument parsing (no clap offline): `--key value` / `--flag`
+//! options after a subcommand.
+
+use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand + options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut opts = HashMap::new();
+        let mut flags = Vec::new();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| Error::config(format!("unexpected argument {a:?}")))?
+                .to_string();
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    opts.insert(key, it.next().unwrap());
+                }
+                _ => flags.push(key),
+            }
+        }
+        Ok(Args { command, opts, flags })
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.opts.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::config(format!("--{key} {v:?} is not a valid value"))
+            }),
+        }
+    }
+
+    /// Boolean flag.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated list of usize (e.g. `--shape 64,48,40`).
+    pub fn get_usize_list(&self, key: &str) -> Result<Option<Vec<usize>>> {
+        match self.opts.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse::<usize>()
+                        .map_err(|_| Error::config(format!("--{key}: bad entry {p:?}")))
+                })
+                .collect::<Result<Vec<_>>>()
+                .map(Some),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_options_and_flags() {
+        let a = parse(&["cpd", "--rank", "8", "--verbose", "--shape", "4,5,6"]);
+        assert_eq!(a.command, "cpd");
+        assert_eq!(a.get("rank"), Some("8"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get_usize_list("shape").unwrap().unwrap(), vec![4, 5, 6]);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse(&["perf"]);
+        assert_eq!(a.get_or("channels", 52usize).unwrap(), 52);
+        assert_eq!(a.get_or("freq", 20.0f64).unwrap(), 20.0);
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse(&["perf", "--channels", "many"]);
+        assert!(a.get_or("channels", 52usize).is_err());
+        assert!(parse(&["x", "--shape", "4,oops"]).get_usize_list("shape").is_err());
+    }
+
+    #[test]
+    fn positional_junk_rejected() {
+        assert!(Args::parse(["cmd".to_string(), "junk".to_string()]).is_err());
+    }
+}

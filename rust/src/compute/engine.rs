@@ -1,0 +1,369 @@
+//! The pSRAM analog compute engine.
+//!
+//! Two code paths produce the per-cycle result `out[m][n] =
+//! Σ_k (u[m][k] - 128) * w[k][n]`:
+//!
+//! * **fast path** (noise off, ideal ADC): direct integer arithmetic on the
+//!   array's packed mirror — the performance-optimized hot loop.
+//! * **faithful path** (noise on or finite ADC): per-plane optical gating,
+//!   photocurrent accumulation with bit-significance scaling, Gaussian
+//!   noise at the detector, ADC quantization, then the digital
+//!   offset-binary correction.  Identical to the fast path when noise is
+//!   off and the ADC ideal (asserted by tests).
+//!
+//! The engine also keeps the cycle/energy ledgers honest: one call is one
+//! compute cycle; modulator, ADC and laser energy are charged per cycle.
+
+use crate::device::{DeviceParams, NoiseModel};
+use crate::psram::PsramArray;
+use crate::util::error::{Error, Result};
+use crate::util::fixed::OFFSET;
+
+/// Aggregate statistics of engine activity (for the perf model and benches).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ComputeStats {
+    /// Compute cycles executed.
+    pub cycles: u64,
+    /// Scalar ops performed (2 × rows × word-columns × lanes per cycle,
+    /// the paper's counting).
+    pub ops: u64,
+    /// MAC count (ops / 2).
+    pub macs: u64,
+}
+
+/// The analog compute engine bound to device parameters.
+#[derive(Debug, Clone)]
+pub struct ComputeEngine {
+    params: DeviceParams,
+    noise: NoiseModel,
+    pub stats: ComputeStats,
+}
+
+impl ComputeEngine {
+    /// Engine with the paper's device defaults and a bit-exact path.
+    pub fn ideal() -> Self {
+        ComputeEngine {
+            params: DeviceParams::default(),
+            noise: NoiseModel::Off,
+            stats: ComputeStats::default(),
+        }
+    }
+
+    /// Engine with explicit device parameters and noise model.
+    pub fn new(params: DeviceParams, noise: NoiseModel) -> Self {
+        ComputeEngine { params, noise, stats: ComputeStats::default() }
+    }
+
+    /// Device parameters.
+    pub fn params(&self) -> &DeviceParams {
+        &self.params
+    }
+
+    /// Replace the noise model (ablation sweeps).
+    pub fn set_noise(&mut self, noise: NoiseModel) {
+        self.noise = noise;
+    }
+
+    /// Is the engine on the bit-exact path?
+    pub fn is_exact(&self) -> bool {
+        self.noise.is_off() && self.params.adc.bits.is_none()
+    }
+
+    /// Execute one compute cycle.
+    ///
+    /// `u`: row-major `[lanes][rows]` offset-binary intensity codes — lane m
+    /// is one wavelength channel's input across all wordlines.
+    /// Returns row-major `[lanes][words_per_row]` i32 results and charges
+    /// cycles + energy on `array`.
+    pub fn compute_cycle(
+        &mut self,
+        array: &mut PsramArray,
+        u: &[u8],
+        lanes: usize,
+    ) -> Result<Vec<i32>> {
+        let geom = array.geometry();
+        let rows = geom.rows;
+        let wpr = geom.words_per_row();
+        if lanes == 0 {
+            return Err(Error::shape("compute_cycle with zero lanes"));
+        }
+        self.params.validate(lanes)?;
+        if u.len() != lanes * rows {
+            return Err(Error::shape(format!(
+                "input block has {} codes, want lanes*rows = {}",
+                u.len(),
+                lanes * rows
+            )));
+        }
+
+        let out = if self.is_exact() {
+            self.compute_exact(array.packed_i32(), u, lanes, rows, wpr)
+        } else {
+            self.compute_faithful(array.packed(), u, lanes, rows, wpr)
+        };
+
+        // Ledgers: one compute cycle; energy per §III device numbers.
+        array.cycles.compute += 1;
+        array.charge_static(1);
+        array.energy.modulator_j +=
+            self.params.shaper.vector_energy_j(lanes * rows);
+        array.energy.adc_j +=
+            self.params.adc.energy_per_sample_j * (lanes * wpr) as f64;
+        // Laser: line power per active lane for one cycle period.
+        array.energy.laser_j += self.params.comb.line_power_w * lanes as f64
+            / self.params.clock_hz;
+
+        self.stats.cycles += 1;
+        let macs = (rows * wpr * lanes) as u64;
+        self.stats.macs += macs;
+        self.stats.ops += 2 * macs;
+
+        Ok(out)
+    }
+
+    /// Bit-exact integer hot path: `out = (u - 128) @ packed`.
+    ///
+    /// Written k-outer so the inner loop is a contiguous AXPY over the
+    /// output row — autovectorizes well and skips zero inputs (which CP1's
+    /// interleaved schedule produces in abundance).
+    fn compute_exact(
+        &self,
+        packed: &[i32],
+        u: &[u8],
+        lanes: usize,
+        rows: usize,
+        wpr: usize,
+    ) -> Vec<i32> {
+        let mut out = vec![0i32; lanes * wpr];
+        for m in 0..lanes {
+            let urow = &u[m * rows..(m + 1) * rows];
+            let orow = &mut out[m * wpr..(m + 1) * wpr];
+            for (k, &code) in urow.iter().enumerate() {
+                let x = code as i32 - OFFSET;
+                if x == 0 {
+                    continue;
+                }
+                let wrow = &packed[k * wpr..(k + 1) * wpr];
+                for (o, &w) in orow.iter_mut().zip(wrow) {
+                    *o += x * w;
+                }
+            }
+        }
+        out
+    }
+
+    /// Device-faithful path: optical per-plane gating, photocurrent
+    /// accumulation with bit-significance weights, detector noise, ADC.
+    fn compute_faithful(
+        &mut self,
+        packed: &[i8],
+        u: &[u8],
+        lanes: usize,
+        rows: usize,
+        wpr: usize,
+    ) -> Vec<i32> {
+        // Signed analog full scale of one accumulated readout:
+        // rows * max_intensity * max_|weight| (the ADC sees a differential
+        // signal; we quantize magnitude against this scale).
+        let full_scale = rows as f64 * 255.0 * OFFSET as f64;
+        // Digital offset correction per column: 128 * colsum(w).
+        let mut colsum = vec![0i64; wpr];
+        for k in 0..rows {
+            for (n, s) in colsum.iter_mut().enumerate() {
+                *s += packed[k * wpr + n] as i64;
+            }
+        }
+
+        let mut out = vec![0i32; lanes * wpr];
+        for m in 0..lanes {
+            let urow = &u[m * rows..(m + 1) * rows];
+            for n in 0..wpr {
+                // Optical accumulation: per-plane gated intensities summed
+                // in photocurrent with bit-significance weighting.  This is
+                // algebraically sum_k u[k] * w[k][n] — computed plane-wise
+                // to mirror the device.
+                let mut analog = 0f64;
+                for b in 0..8u32 {
+                    let mut plane_sum = 0i64;
+                    for (k, &code) in urow.iter().enumerate() {
+                        let w = packed[k * wpr + n];
+                        if (w as u8 >> b) & 1 == 1 {
+                            plane_sum += code as i64;
+                        }
+                    }
+                    let weight = crate::util::fixed::plane_weight(b) as f64;
+                    analog += weight * plane_sum as f64;
+                }
+                // Detector noise on the accumulated photocurrent.
+                let noisy = self.noise.perturb(analog);
+                // Signed ADC: quantize magnitude against the full scale.
+                let digit = if noisy >= 0.0 {
+                    self.params.adc.quantize(noisy, full_scale)
+                } else {
+                    -self.params.adc.quantize(-noisy, full_scale)
+                };
+                // Electrical-domain offset correction.
+                let v = digit as i64 - OFFSET as i64 * colsum[n];
+                out[m * wpr + n] = v.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Adc;
+    use crate::psram::{ArrayGeometry, PsramArray};
+    use crate::util::fixed::{encode_offset, quant_matmul_ref};
+    use crate::util::prng::Prng;
+
+    fn rand_setup(seed: u64, lanes: usize) -> (PsramArray, Vec<u8>, Vec<i8>) {
+        let mut rng = Prng::new(seed);
+        let mut array = PsramArray::paper();
+        let img: Vec<i8> = (0..array.geometry().total_words())
+            .map(|_| rng.next_i8())
+            .collect();
+        array.write_image(&img).unwrap();
+        let u: Vec<u8> = (0..lanes * 256).map(|_| rng.next_u8()).collect();
+        (array, u, img)
+    }
+
+    #[test]
+    fn exact_path_matches_reference() {
+        let (mut array, u, img) = rand_setup(1, 52);
+        let mut eng = ComputeEngine::ideal();
+        let out = eng.compute_cycle(&mut array, &u, 52).unwrap();
+        let expect = quant_matmul_ref(&u, &img, 52, 256, 32);
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn faithful_path_equals_exact_when_noise_off() {
+        let (mut array, u, _) = rand_setup(2, 8);
+        let mut exact = ComputeEngine::ideal();
+        let fast = exact.compute_cycle(&mut array, &u, 8).unwrap();
+        // Force the faithful path with noise "on" at sigma 0 is mapped to
+        // Off, so instead use a finite but huge-resolution ADC.
+        let mut params = DeviceParams::default();
+        params.adc = Adc::sar(40, f64::INFINITY);
+        let mut faithful = ComputeEngine::new(params, NoiseModel::Off);
+        assert!(!faithful.is_exact());
+        let slow = faithful.compute_cycle(&mut array, &u, 8).unwrap();
+        assert_eq!(fast, slow);
+    }
+
+    #[test]
+    fn noise_perturbs_but_stays_bounded() {
+        let (mut array, u, img) = rand_setup(3, 4);
+        let sigma = 100.0;
+        let mut eng = ComputeEngine::new(
+            DeviceParams::default(),
+            NoiseModel::gaussian(sigma, 7),
+        );
+        let out = eng.compute_cycle(&mut array, &u, 4).unwrap();
+        let expect = quant_matmul_ref(&u, &img, 4, 256, 32);
+        let max_err = out
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| (a - b).abs())
+            .max()
+            .unwrap();
+        assert!(max_err > 0, "noise should perturb at sigma={sigma}");
+        // 6-sigma bound with a little slack for ADC rounding
+        assert!((max_err as f64) < 6.0 * sigma + 1.0, "max_err={max_err}");
+    }
+
+    #[test]
+    fn coarse_adc_quantizes_output() {
+        let (mut array, u, img) = rand_setup(4, 4);
+        let mut params = DeviceParams::default();
+        params.adc = Adc::sar(8, f64::INFINITY);
+        let mut eng = ComputeEngine::new(params, NoiseModel::Off);
+        let out = eng.compute_cycle(&mut array, &u, 4).unwrap();
+        let expect = quant_matmul_ref(&u, &img, 4, 256, 32);
+        // 8-bit ADC over full scale 256*255*128: step = 32640; error <= step/2
+        let step = 256.0 * 255.0 * 128.0 / 256.0;
+        let max_err = out
+            .iter()
+            .zip(&expect)
+            .map(|(a, b)| (*a as i64 - *b as i64).abs())
+            .max()
+            .unwrap();
+        assert!(max_err as f64 <= step / 2.0 + 1.0, "max_err={max_err}");
+        assert_ne!(out, expect, "8-bit ADC must lose precision here");
+    }
+
+    #[test]
+    fn cycle_and_op_accounting() {
+        let (mut array, u, _) = rand_setup(5, 52);
+        let mut eng = ComputeEngine::ideal();
+        eng.compute_cycle(&mut array, &u, 52).unwrap();
+        assert_eq!(eng.stats.cycles, 1);
+        // 2 * 256 rows * 32 cols * 52 lanes
+        assert_eq!(eng.stats.ops, 2 * 256 * 32 * 52);
+        assert_eq!(array.cycles.compute, 1);
+        assert!(array.energy.modulator_j > 0.0);
+        assert!(array.energy.adc_j > 0.0);
+        assert!(array.energy.laser_j > 0.0);
+        assert!(array.energy.static_j > 0.0);
+    }
+
+    #[test]
+    fn lane_overflow_rejected() {
+        let (mut array, _, _) = rand_setup(6, 1);
+        let mut eng = ComputeEngine::ideal();
+        let u = vec![128u8; 53 * 256];
+        let err = eng.compute_cycle(&mut array, &u, 53).unwrap_err();
+        assert!(err.to_string().contains("53"));
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let (mut array, _, _) = rand_setup(7, 1);
+        let mut eng = ComputeEngine::ideal();
+        assert!(eng.compute_cycle(&mut array, &[128u8; 100], 2).is_err());
+        assert!(eng.compute_cycle(&mut array, &[], 0).is_err());
+    }
+
+    #[test]
+    fn zero_input_codes_give_zero_output() {
+        // offset-binary 128 encodes value 0 -> all outputs 0.
+        let mut array = PsramArray::paper();
+        array.write_image(&vec![55i8; 8192]).unwrap();
+        let mut eng = ComputeEngine::ideal();
+        let u = vec![128u8; 4 * 256];
+        let out = eng.compute_cycle(&mut array, &u, 4).unwrap();
+        assert!(out.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn smaller_geometry_works() {
+        let geom = ArrayGeometry::new(64, 128, 8).unwrap();
+        let mut array = PsramArray::new(geom).unwrap();
+        let mut rng = Prng::new(9);
+        let img: Vec<i8> = (0..geom.total_words()).map(|_| rng.next_i8()).collect();
+        array.write_image(&img).unwrap();
+        let u: Vec<u8> = (0..3 * 64).map(|_| rng.next_u8()).collect();
+        let mut eng = ComputeEngine::ideal();
+        let out = eng.compute_cycle(&mut array, &u, 3).unwrap();
+        assert_eq!(out, quant_matmul_ref(&u, &img, 3, 64, 16));
+    }
+
+    #[test]
+    fn single_product_readout() {
+        // One row holds b, one lane carries c on that row only: the column
+        // output is exactly b*c (the CP1 primitive's building block).
+        let mut array = PsramArray::paper();
+        let mut img = vec![0i8; 8192];
+        img[0] = -37; // row 0, col 0
+        array.write_image(&img).unwrap();
+        let mut u = vec![128u8; 256]; // one lane, value 0 everywhere
+        u[0] = encode_offset(91);
+        let mut eng = ComputeEngine::ideal();
+        let out = eng.compute_cycle(&mut array, &u, 1).unwrap();
+        assert_eq!(out[0], -37 * 91);
+        assert!(out[1..].iter().all(|&v| v == 0));
+    }
+}

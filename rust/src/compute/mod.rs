@@ -1,0 +1,15 @@
+//! The analog in-memory compute engine (paper §III.C, §IV.A).
+//!
+//! One *compute cycle* drives every wordline with up to `channels`
+//! intensity-encoded inputs (one 8-bit operand per wavelength per row) and
+//! reads, per (wavelength, word column), the accumulated photocurrent —
+//! i.e. the dot product of that wavelength's input vector against the
+//! stored column of words.  With noise off and an ideal ADC the result is
+//! bit-exact integer arithmetic, matching the JAX/Pallas kernel contract
+//! (`python/compile/kernels/ref.py`).
+
+pub mod engine;
+pub mod wdm;
+
+pub use engine::{ComputeEngine, ComputeStats};
+pub use wdm::InterleavePattern;

@@ -1,0 +1,155 @@
+//! Wavelength interleaving patterns (paper §IV.C, Fig. 3).
+//!
+//! CP1 needs the Hadamard product of two factor rows *without* summation
+//! along the column — so inputs are interleaved across wavelengths such
+//! that, per wavelength, exactly one wordline carries a non-zero intensity.
+//! The per-wavelength column output is then a single product rather than a
+//! dot product.
+//!
+//! [`InterleavePattern`] builds the `[lanes][rows]` offset-binary input
+//! block for a given assignment of (lane -> active row, value).
+
+use crate::util::error::{Error, Result};
+use crate::util::fixed::encode_offset;
+
+/// An input-block builder implementing wavelength interleaving.
+#[derive(Debug, Clone)]
+pub struct InterleavePattern {
+    rows: usize,
+    lanes: usize,
+    /// `assignment[m] = Some((row, value))`: lane m carries `value` on
+    /// wordline `row` and the zero code (128) elsewhere.
+    assignment: Vec<Option<(usize, i32)>>,
+}
+
+impl InterleavePattern {
+    /// Empty pattern over a `[lanes][rows]` block.
+    pub fn new(lanes: usize, rows: usize) -> Self {
+        InterleavePattern { rows, lanes, assignment: vec![None; lanes] }
+    }
+
+    /// Diagonal pattern: lane m carries `values[m]` on row m — the CP1
+    /// layout where R factor elements ride R distinct wavelengths.
+    pub fn diagonal(values: &[i32], rows: usize) -> Result<Self> {
+        if values.len() > rows {
+            return Err(Error::shape(format!(
+                "diagonal of {} values needs at least that many rows, have {rows}",
+                values.len()
+            )));
+        }
+        let mut p = InterleavePattern::new(values.len(), rows);
+        for (m, &v) in values.iter().enumerate() {
+            p.set(m, m, v)?;
+        }
+        Ok(p)
+    }
+
+    /// Assign lane `lane` to carry `value` on wordline `row`.
+    pub fn set(&mut self, lane: usize, row: usize, value: i32) -> Result<()> {
+        if lane >= self.lanes {
+            return Err(Error::shape(format!("lane {lane} >= {}", self.lanes)));
+        }
+        if row >= self.rows {
+            return Err(Error::shape(format!("row {row} >= {}", self.rows)));
+        }
+        if !(-128..=127).contains(&value) {
+            return Err(Error::shape(format!("value {value} outside int8 range")));
+        }
+        self.assignment[lane] = Some((row, value));
+        Ok(())
+    }
+
+    /// Render the `[lanes][rows]` offset-binary block for the engine.
+    pub fn render(&self) -> Vec<u8> {
+        let mut u = vec![encode_offset(0); self.lanes * self.rows];
+        for (m, a) in self.assignment.iter().enumerate() {
+            if let Some((row, value)) = a {
+                u[m * self.rows + row] = encode_offset(*value);
+            }
+        }
+        u
+    }
+
+    /// Lanes in the pattern.
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Verify the single-active-row invariant the CP1 mapping relies on.
+    pub fn is_interleaved(&self) -> bool {
+        // Each lane touches at most one row by construction; additionally no
+        // two lanes may share a row *and* column group would alias — sharing
+        // a row is allowed only if the caller sums on purpose, so CP1
+        // patterns must keep rows distinct.
+        let mut seen = std::collections::HashSet::new();
+        self.assignment
+            .iter()
+            .flatten()
+            .all(|(row, _)| seen.insert(*row))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fixed::decode_offset;
+
+    #[test]
+    fn diagonal_pattern_renders_identity_layout() {
+        let p = InterleavePattern::diagonal(&[5, -7, 100], 8).unwrap();
+        let u = p.render();
+        assert_eq!(u.len(), 3 * 8);
+        for m in 0..3 {
+            for r in 0..8 {
+                let v = decode_offset(u[m * 8 + r]);
+                if m == r {
+                    assert_eq!(v, [5, -7, 100][m]);
+                } else {
+                    assert_eq!(v, 0);
+                }
+            }
+        }
+        assert!(p.is_interleaved());
+    }
+
+    #[test]
+    fn shared_row_breaks_interleave_invariant() {
+        let mut p = InterleavePattern::new(2, 4);
+        p.set(0, 1, 10).unwrap();
+        p.set(1, 1, 20).unwrap();
+        assert!(!p.is_interleaved());
+    }
+
+    #[test]
+    fn out_of_range_rejected() {
+        let mut p = InterleavePattern::new(2, 4);
+        assert!(p.set(2, 0, 0).is_err());
+        assert!(p.set(0, 4, 0).is_err());
+        assert!(p.set(0, 0, 200).is_err());
+        assert!(InterleavePattern::diagonal(&[1, 2, 3], 2).is_err());
+    }
+
+    #[test]
+    fn engine_cp1_products_do_not_mix() {
+        // Store a column of b values; feed c values diagonally; per-lane
+        // output = b[r] * c[r] with no cross terms (Fig. 3's guarantee).
+        use crate::compute::ComputeEngine;
+        use crate::psram::PsramArray;
+
+        let b = [3i8, -5, 7, 11];
+        let c = [2i32, 4, -6, 8];
+        let mut array = PsramArray::paper();
+        let mut img = vec![0i8; 8192];
+        for (r, &bv) in b.iter().enumerate() {
+            img[r * 32] = bv; // column 0, rows 0..4
+        }
+        array.write_image(&img).unwrap();
+
+        let p = InterleavePattern::diagonal(&c, 256).unwrap();
+        let mut eng = ComputeEngine::ideal();
+        let out = eng.compute_cycle(&mut array, &p.render(), p.lanes()).unwrap();
+        for (r, (&bv, &cv)) in b.iter().zip(&c).enumerate() {
+            assert_eq!(out[r * 32], bv as i32 * cv, "lane {r}");
+        }
+    }
+}

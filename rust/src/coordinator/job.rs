@@ -1,0 +1,68 @@
+//! Work items exchanged between the leader and the workers.
+
+use crate::tensor::Matrix;
+use std::sync::Arc;
+
+/// One array image's worth of work: compute the partial MTTKRP
+/// contribution of K block `kb` to rank block `rb`, streaming every lane
+/// batch of the shared unfolded operand.
+pub struct ImageTask {
+    /// Request id (monotonic per coordinator).
+    pub req_id: u64,
+    /// Rank block index.
+    pub rb: usize,
+    /// K (contraction) block index.
+    pub kb: usize,
+    /// Quantized KRP image, row-major `[rows][words_per_row]`, padded.
+    pub image: Vec<i8>,
+    /// Per-word-column dequantization scales of the image (`r_cnt` long).
+    pub w_scales: Vec<f32>,
+    /// First rank column and count covered by this image.
+    pub r0: usize,
+    pub r_cnt: usize,
+    /// First contraction row and count covered by this image.
+    pub k0: usize,
+    pub k_cnt: usize,
+    /// The shared unfolded operand `X_(mode)` (`[I, K]`).
+    pub unf: Arc<Matrix>,
+}
+
+/// A worker's answer: the dequantized partial output block for one image.
+pub struct ImagePartial {
+    pub req_id: u64,
+    pub rb: usize,
+    /// K block index (the leader reduces partials in (rb, kb) order so the
+    /// f32 result is deterministic).
+    pub kb: usize,
+    /// `[I][r_cnt]` row-major partial (sum over this image's K block).
+    pub partial: Vec<f32>,
+    pub r0: usize,
+    pub r_cnt: usize,
+    /// Worker that produced it (metrics/debug).
+    pub worker: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_carries_consistent_block_metadata() {
+        let unf = Arc::new(Matrix::zeros(4, 512));
+        let t = ImageTask {
+            req_id: 1,
+            rb: 1,
+            kb: 0,
+            image: vec![0; 256 * 32],
+            w_scales: vec![1.0; 8],
+            r0: 32,
+            r_cnt: 8,
+            k0: 0,
+            k_cnt: 256,
+            unf,
+        };
+        assert_eq!(t.image.len(), 256 * 32);
+        assert!(t.r_cnt <= 32);
+        assert_eq!(t.rb * 32, t.r0);
+    }
+}

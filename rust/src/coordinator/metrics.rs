@@ -1,0 +1,82 @@
+//! Lock-free coordinator metrics (atomics; shared by leader and workers).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Aggregate counters across the coordinator's lifetime.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// MTTKRP requests completed.
+    pub requests: AtomicU64,
+    /// Array images processed.
+    pub images: AtomicU64,
+    /// Compute cycles across all workers.
+    pub compute_cycles: AtomicU64,
+    /// Write (reconfiguration) cycles across all workers.
+    pub write_cycles: AtomicU64,
+    /// Useful MACs performed.
+    pub useful_macs: AtomicU64,
+    /// Raw MACs (incl. padding).
+    pub raw_macs: AtomicU64,
+    /// Tasks that waited on the bounded queue (backpressure events).
+    pub backpressure_stalls: AtomicU64,
+}
+
+impl Metrics {
+    #[inline]
+    pub fn add(&self, field: &AtomicU64, v: u64) {
+        field.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Utilisation across the pool so far.
+    pub fn utilization(&self) -> f64 {
+        let c = self.compute_cycles.load(Ordering::Relaxed);
+        let w = self.write_cycles.load(Ordering::Relaxed);
+        if c + w == 0 {
+            0.0
+        } else {
+            c as f64 / (c + w) as f64
+        }
+    }
+
+    /// Snapshot as (label, value) rows.
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("requests", self.requests.load(Ordering::Relaxed)),
+            ("images", self.images.load(Ordering::Relaxed)),
+            ("compute_cycles", self.compute_cycles.load(Ordering::Relaxed)),
+            ("write_cycles", self.write_cycles.load(Ordering::Relaxed)),
+            ("useful_macs", self.useful_macs.load(Ordering::Relaxed)),
+            ("raw_macs", self.raw_macs.load(Ordering::Relaxed)),
+            (
+                "backpressure_stalls",
+                self.backpressure_stalls.load(Ordering::Relaxed),
+            ),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        m.add(&m.images, 3);
+        m.add(&m.images, 4);
+        assert_eq!(m.snapshot()[1], ("images", 7));
+    }
+
+    #[test]
+    fn utilization_from_cycles() {
+        let m = Metrics::default();
+        m.add(&m.compute_cycles, 90);
+        m.add(&m.write_cycles, 10);
+        assert!((m.utilization() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_utilization_is_zero() {
+        assert_eq!(Metrics::default().utilization(), 0.0);
+    }
+}

@@ -1,0 +1,32 @@
+//! The L3 coordinator: a persistent leader/worker pool that partitions
+//! MTTKRP executions across multiple pSRAM array macros.
+//!
+//! Architecture (std threads + bounded channels; no tokio offline):
+//!
+//! ```text
+//!            ┌────────────┐  bounded task queue   ┌──────────┐
+//!  request ─▶│   leader   │──────────────────────▶│ worker 0 │─ array 0
+//!            │ (tiling +  │   ImageTask{rb,kb,…}  ├──────────┤
+//!            │  reduce)   │◀──────────────────────│ worker 1 │─ array 1
+//!            └────────────┘   ImagePartial        └──────────┘ …
+//! ```
+//!
+//! * the **leader** unfolds/tiles the MTTKRP, quantizes one Khatri-Rao
+//!   image per (rank-block, K-block), and pushes [`job::ImageTask`]s into a
+//!   *bounded* queue (backpressure: tiling stalls when workers are busy);
+//! * each **worker** owns one [`crate::mttkrp::TileExecutor`] (one array macro), streams
+//!   every lane batch of the shared X operand against its image, and sends
+//!   back a dequantized partial;
+//! * the leader **reduces** partials (sum over K blocks) into the output.
+//!
+//! The pool is persistent: many requests can be submitted over its
+//! lifetime (CP-ALS submits 3 per sweep), workers stay warm, and metrics
+//! aggregate across requests.
+
+pub mod job;
+pub mod metrics;
+pub mod pool;
+
+pub use job::{ImagePartial, ImageTask};
+pub use metrics::Metrics;
+pub use pool::{Coordinator, CoordinatorConfig};

@@ -1,0 +1,550 @@
+//! The leader/worker pool.
+
+use super::job::{ImagePartial, ImageTask};
+use super::metrics::Metrics;
+use crate::cpd::backend::MttkrpBackend;
+use crate::mttkrp::pipeline::TileExecutor;
+use crate::tensor::{krp_all_but, DenseTensor, Matrix};
+use crate::util::error::{Error, Result};
+use crate::util::fixed::{encode_offset, quantize_encode_into, quantize_sym};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Pool configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Worker (array macro) count.
+    pub workers: usize,
+    /// Bounded task-queue depth (backpressure window).
+    pub queue_depth: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig { workers: 4, queue_depth: 8 }
+    }
+}
+
+enum WorkerMsg {
+    Partial(ImagePartial),
+    Failed { req_id: u64, error: String },
+}
+
+/// The persistent leader/worker coordinator.  `E` is the per-worker tile
+/// executor (one simulated array macro per worker).
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    metrics: Arc<Metrics>,
+    task_tx: Option<SyncSender<ImageTask>>,
+    result_rx: Receiver<WorkerMsg>,
+    handles: Vec<JoinHandle<()>>,
+    next_req: u64,
+    rows: usize,
+    wpr: usize,
+}
+
+impl Coordinator {
+    /// Spawn a pool; `make_exec(worker_idx)` builds each worker's executor.
+    /// All executors must share the same tile geometry.
+    pub fn spawn<E, F>(cfg: CoordinatorConfig, make_exec: F) -> Result<Self>
+    where
+        E: TileExecutor + Send + 'static,
+        F: Fn(usize) -> Result<E>,
+    {
+        if cfg.workers == 0 {
+            return Err(Error::Coordinator("zero workers".to_string()));
+        }
+        let mut execs = Vec::with_capacity(cfg.workers);
+        for i in 0..cfg.workers {
+            execs.push(make_exec(i)?);
+        }
+        let rows = execs[0].rows();
+        let wpr = execs[0].words_per_row();
+        let lanes = execs[0].max_lanes(); // geometry check only
+        if execs
+            .iter()
+            .any(|e| e.rows() != rows || e.words_per_row() != wpr || e.max_lanes() != lanes)
+        {
+            return Err(Error::Coordinator("heterogeneous executors".to_string()));
+        }
+
+        let metrics = Arc::new(Metrics::default());
+        let (task_tx, task_rx) = sync_channel::<ImageTask>(cfg.queue_depth);
+        let task_rx = Arc::new(Mutex::new(task_rx));
+        let (result_tx, result_rx) = sync_channel::<WorkerMsg>(cfg.queue_depth.max(2));
+
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for (widx, mut exec) in execs.into_iter().enumerate() {
+            let task_rx = Arc::clone(&task_rx);
+            let result_tx = result_tx.clone();
+            let metrics = Arc::clone(&metrics);
+            handles.push(std::thread::spawn(move || loop {
+                // Pull the next image task; exit when the queue closes.
+                let task = {
+                    let guard = task_rx.lock().expect("task queue poisoned");
+                    match guard.recv() {
+                        Ok(t) => t,
+                        Err(_) => break,
+                    }
+                };
+                let req_id = task.req_id;
+                match run_image(&mut exec, &task, widx, &metrics) {
+                    Ok(partial) => {
+                        if result_tx.send(WorkerMsg::Partial(partial)).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = result_tx.send(WorkerMsg::Failed {
+                            req_id,
+                            error: e.to_string(),
+                        });
+                    }
+                }
+            }));
+        }
+
+        Ok(Coordinator {
+            cfg,
+            metrics,
+            task_tx: Some(task_tx),
+            result_rx,
+            handles,
+            next_req: 0,
+            rows,
+            wpr,
+        })
+    }
+
+    /// Pool metrics.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Worker count.
+    pub fn workers(&self) -> usize {
+        self.cfg.workers
+    }
+
+    /// Distributed quantized MTTKRP: `unf [I, K] @ krp [K, R]`.
+    pub fn mttkrp_unfolded(&mut self, unf: Matrix, krp: &Matrix) -> Result<Matrix> {
+        if unf.cols() != krp.rows() {
+            return Err(Error::shape(format!(
+                "unfolded {}x{} against KRP {}x{}",
+                unf.rows(),
+                unf.cols(),
+                krp.rows(),
+                krp.cols()
+            )));
+        }
+        let (i_dim, k_dim, r_dim) = (unf.rows(), unf.cols(), krp.cols());
+        let req_id = self.next_req;
+        self.next_req += 1;
+        let unf = Arc::new(unf);
+
+        let k_blocks = k_dim.div_ceil(self.rows);
+        let r_blocks = r_dim.div_ceil(self.wpr);
+        let total = k_blocks * r_blocks;
+
+        // Leader: produce tasks while consuming partials (bounded queue).
+        // Partials are buffered and reduced in (rb, kb) order so the f32
+        // result is deterministic and bit-identical to the single-array
+        // pipeline, independent of worker count and scheduling.
+        let mut out = Matrix::zeros(i_dim, r_dim);
+        let mut buffered: Vec<Option<ImagePartial>> = Vec::new();
+        buffered.resize_with(total, || None);
+        let mut received = 0usize;
+        let mut produced = 0usize;
+        let mut error: Option<Error> = None;
+        let task_tx = self
+            .task_tx
+            .as_ref()
+            .ok_or_else(|| Error::Coordinator("pool shut down".to_string()))?
+            .clone();
+
+        let mut pending: Option<ImageTask> = None;
+        while received < total {
+            // Produce next task if any, without deadlocking on a full queue.
+            if produced < total && error.is_none() {
+                let task = match pending.take() {
+                    Some(t) => t,
+                    None => {
+                        let rb = produced / k_blocks;
+                        let kb = produced % k_blocks;
+                        make_image_task(
+                            req_id, rb, kb, &unf, krp, self.rows, self.wpr,
+                        )
+                    }
+                };
+                match task_tx.try_send(task) {
+                    Ok(()) => {
+                        produced += 1;
+                        continue;
+                    }
+                    Err(TrySendError::Full(t)) => {
+                        self.metrics.add(&self.metrics.backpressure_stalls, 1);
+                        pending = Some(t);
+                        // fall through to drain a result, then retry
+                    }
+                    Err(TrySendError::Disconnected(_)) => {
+                        return Err(Error::Coordinator("workers gone".to_string()));
+                    }
+                }
+            }
+
+            // Consume one result.
+            match self.result_rx.recv() {
+                Ok(WorkerMsg::Partial(p)) => {
+                    if p.req_id != req_id {
+                        continue; // stale partial from an aborted request
+                    }
+                    received += 1;
+                    let slot = p.rb * k_blocks + p.kb;
+                    buffered[slot] = Some(p);
+                }
+                Ok(WorkerMsg::Failed { req_id: rid, error: e }) => {
+                    if rid == req_id {
+                        received += 1;
+                        if error.is_none() {
+                            error = Some(Error::Coordinator(e));
+                        }
+                    }
+                }
+                Err(_) => {
+                    return Err(Error::Coordinator("result channel closed".to_string()))
+                }
+            }
+
+            // If a failure occurred, stop producing further tasks but keep
+            // draining what was already queued.
+            if error.is_some() && produced < total {
+                // account for never-produced tasks
+                received += total - produced;
+                produced = total;
+                pending = None;
+            }
+        }
+
+        self.metrics.add(&self.metrics.requests, 1);
+        if let Some(e) = error {
+            return Err(e);
+        }
+
+        // Deterministic reduction: sum partials in (rb, kb) order — the
+        // same order the single-array pipeline accumulates in.
+        for slot in buffered.into_iter() {
+            let p = slot.ok_or_else(|| {
+                Error::Coordinator("missing partial in reduction".to_string())
+            })?;
+            for i in 0..i_dim {
+                let orow = out.row_mut(i);
+                for r in 0..p.r_cnt {
+                    orow[p.r0 + r] += p.partial[i * p.r_cnt + r];
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Distributed MTTKRP of a dense tensor along `mode`.
+    pub fn mttkrp(
+        &mut self,
+        x: &DenseTensor,
+        factors: &[Matrix],
+        mode: usize,
+    ) -> Result<Matrix> {
+        let unf = x.unfold(mode)?;
+        let krp = krp_all_but(factors, mode)?;
+        self.mttkrp_unfolded(unf, &krp)
+    }
+
+    /// Gracefully stop the pool (also done on Drop).
+    pub fn shutdown(&mut self) {
+        self.task_tx.take(); // closes the queue
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Build one image task: quantize the KRP block for (rb, kb).
+fn make_image_task(
+    req_id: u64,
+    rb: usize,
+    kb: usize,
+    unf: &Arc<Matrix>,
+    krp: &Matrix,
+    rows: usize,
+    wpr: usize,
+) -> ImageTask {
+    let r_dim = krp.cols();
+    let k_dim = krp.rows();
+    let r0 = rb * wpr;
+    let r_cnt = wpr.min(r_dim - r0);
+    let k0 = kb * rows;
+    let k_cnt = rows.min(k_dim - k0);
+
+    // Per-column quantization — must mirror PsramPipeline exactly so the
+    // distributed result stays bit-identical to the single-array path.
+    let mut image = vec![0i8; rows * wpr];
+    let mut w_scales = vec![1f32; r_cnt];
+    let mut col = vec![0f32; k_cnt];
+    for r in 0..r_cnt {
+        for k in 0..k_cnt {
+            col[k] = krp.get(k0 + k, r0 + r);
+        }
+        let (cq, cs) = quantize_sym(&col, 8);
+        w_scales[r] = cs;
+        for k in 0..k_cnt {
+            image[k * wpr + r] = cq[k] as i8;
+        }
+    }
+    ImageTask {
+        req_id,
+        rb,
+        kb,
+        image,
+        w_scales,
+        r0,
+        r_cnt,
+        k0,
+        k_cnt,
+        unf: Arc::clone(unf),
+    }
+}
+
+/// Worker body for one image task: stream all lane batches, dequantize,
+/// return the partial block.
+fn run_image<E: TileExecutor>(
+    exec: &mut E,
+    task: &ImageTask,
+    worker: usize,
+    metrics: &Metrics,
+) -> Result<ImagePartial> {
+    let rows = exec.rows();
+    let wpr = exec.words_per_row();
+    let lanes_max = exec.max_lanes();
+    let i_dim = task.unf.rows();
+
+    exec.load_image(&task.image)?;
+    metrics.add(&metrics.images, 1);
+    metrics.add(&metrics.write_cycles, rows as u64);
+
+    let mut partial = vec![0f32; i_dim * task.r_cnt];
+    for ib in 0..i_dim.div_ceil(lanes_max) {
+        let i0 = ib * lanes_max;
+        let lane_cnt = lanes_max.min(i_dim - i0);
+        // Per-lane quantization (mirrors PsramPipeline).
+        let mut u = vec![encode_offset(0); lane_cnt * rows];
+        let mut x_scales = vec![1f32; lane_cnt];
+        for m in 0..lane_cnt {
+            let xr = &task.unf.row(i0 + m)[task.k0..task.k0 + task.k_cnt];
+            x_scales[m] =
+                quantize_encode_into(xr, &mut u[m * rows..m * rows + task.k_cnt]);
+        }
+        let tile = exec.compute(&u, lane_cnt)?;
+        metrics.add(&metrics.compute_cycles, 1);
+        metrics.add(&metrics.raw_macs, (rows * wpr * lane_cnt) as u64);
+        metrics.add(
+            &metrics.useful_macs,
+            (task.k_cnt * task.r_cnt * lane_cnt) as u64,
+        );
+
+        for m in 0..lane_cnt {
+            let prow = &mut partial[(i0 + m) * task.r_cnt..(i0 + m + 1) * task.r_cnt];
+            for r in 0..task.r_cnt {
+                prow[r] += tile[m * wpr + r] as f32 * (x_scales[m] * task.w_scales[r]);
+            }
+        }
+    }
+
+    Ok(ImagePartial {
+        req_id: task.req_id,
+        rb: task.rb,
+        kb: task.kb,
+        partial,
+        r0: task.r0,
+        r_cnt: task.r_cnt,
+        worker,
+    })
+}
+
+/// A [`MttkrpBackend`] running CP-ALS MTTKRPs through the coordinator.
+pub struct CoordinatedBackend<'a> {
+    pub tensor: &'a DenseTensor,
+    pub pool: Coordinator,
+}
+
+impl MttkrpBackend for CoordinatedBackend<'_> {
+    fn mttkrp(&mut self, factors: &[Matrix], mode: usize) -> Result<Matrix> {
+        self.pool.mttkrp(self.tensor, factors, mode)
+    }
+
+    fn shape(&self) -> &[usize] {
+        self.tensor.shape()
+    }
+
+    fn norm_sq(&self) -> f64 {
+        let n = self.tensor.fro_norm();
+        n * n
+    }
+
+    fn name(&self) -> &'static str {
+        "coordinator"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mttkrp::pipeline::{CpuTileExecutor, PsramPipeline};
+    use crate::util::prng::Prng;
+
+    fn rand_problem(seed: u64, shape: &[usize], r: usize) -> (DenseTensor, Vec<Matrix>) {
+        let mut rng = Prng::new(seed);
+        let x = DenseTensor::randn(shape, &mut rng);
+        let factors = shape.iter().map(|&d| Matrix::randn(d, r, &mut rng)).collect();
+        (x, factors)
+    }
+
+    fn spawn_cpu_pool(workers: usize) -> Coordinator {
+        Coordinator::spawn(
+            CoordinatorConfig { workers, queue_depth: 4 },
+            |_| Ok(CpuTileExecutor::paper()),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn distributed_matches_single_pipeline_bit_exactly() {
+        // Same quantization per (image, lane batch) -> identical f32 output
+        // regardless of worker count or scheduling order.
+        let (x, factors) = rand_problem(1, &[120, 9, 60], 40);
+        let mut exec = CpuTileExecutor::paper();
+        let single = PsramPipeline::new(&mut exec).mttkrp(&x, &factors, 0).unwrap();
+        for workers in [1usize, 2, 4] {
+            let mut pool = spawn_cpu_pool(workers);
+            let dist = pool.mttkrp(&x, &factors, 0).unwrap();
+            assert_eq!(single.data(), dist.data(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn metrics_accumulate_across_requests() {
+        let (x, factors) = rand_problem(2, &[60, 8, 8], 8);
+        let mut pool = spawn_cpu_pool(2);
+        pool.mttkrp(&x, &factors, 0).unwrap();
+        let imgs1 = pool.metrics().snapshot()[1].1;
+        pool.mttkrp(&x, &factors, 1).unwrap();
+        let imgs2 = pool.metrics().snapshot()[1].1;
+        assert!(imgs2 > imgs1);
+        assert_eq!(pool.metrics().snapshot()[0].1, 2); // requests
+    }
+
+    #[test]
+    fn backpressure_engages_with_tiny_queue() {
+        // queue_depth 1 with many images forces try_send to stall at least
+        // once on any realistic interleaving.
+        let (x, factors) = rand_problem(3, &[30, 20, 52], 64);
+        let mut pool = Coordinator::spawn(
+            CoordinatorConfig { workers: 1, queue_depth: 1 },
+            |_| Ok(CpuTileExecutor::paper()),
+        )
+        .unwrap();
+        let out = pool.mttkrp(&x, &factors, 0).unwrap();
+        assert_eq!(out.rows(), 30);
+        // (stall count is scheduling dependent; just ensure the run finished
+        // and produced all images)
+        let images = pool.metrics().snapshot()[1].1;
+        assert_eq!(images, 5 * 2); // K=20*52=1040 -> 5 blocks; R=64 -> 2 blocks
+    }
+
+    #[test]
+    fn failure_in_worker_surfaces_as_error() {
+        // An executor that rejects every image.
+        struct Broken;
+        impl TileExecutor for Broken {
+            fn rows(&self) -> usize {
+                256
+            }
+            fn words_per_row(&self) -> usize {
+                32
+            }
+            fn max_lanes(&self) -> usize {
+                52
+            }
+            fn load_image(&mut self, _: &[i8]) -> Result<()> {
+                Err(Error::Runtime("injected fault".to_string()))
+            }
+            fn compute(&mut self, _: &[u8], _: usize) -> Result<Vec<i32>> {
+                unreachable!()
+            }
+            fn cycles(&self) -> crate::psram::CycleLedger {
+                crate::psram::CycleLedger::default()
+            }
+        }
+        let (x, factors) = rand_problem(4, &[20, 8, 8], 8);
+        let mut pool = Coordinator::spawn(
+            CoordinatorConfig { workers: 2, queue_depth: 2 },
+            |_| Ok(Broken),
+        )
+        .unwrap();
+        let err = pool.mttkrp(&x, &factors, 0).unwrap_err();
+        assert!(err.to_string().contains("injected fault"));
+        // The pool must survive the failed request...
+        let (x2, f2) = rand_problem(5, &[10, 8, 8], 4);
+        // ...and still answer (with the same broken executor it errors again,
+        // but deterministically rather than hanging).
+        assert!(pool.mttkrp(&x2, &f2, 0).is_err());
+    }
+
+    #[test]
+    fn pool_survives_across_cp_als() {
+        use crate::cpd::{AlsConfig, CpAls};
+        let mut rng = Prng::new(6);
+        let factors: Vec<Matrix> =
+            [14, 12, 10].iter().map(|&d| Matrix::randn(d, 3, &mut rng)).collect();
+        let x = DenseTensor::from_cp_factors(&factors, 0.0, &mut rng).unwrap();
+        let pool = spawn_cpu_pool(3);
+        let mut backend = CoordinatedBackend { tensor: &x, pool };
+        let res = CpAls::new(AlsConfig { rank: 3, max_iters: 25, tol: 1e-6, seed: 1 })
+            .run(&mut backend)
+            .unwrap();
+        // int8-quantized MTTKRP inside ALS: high fit, not perfect.
+        assert!(res.final_fit() > 0.9, "fit={}", res.final_fit());
+        assert!(backend.pool.metrics().snapshot()[0].1 >= 3 * 2);
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        let r = Coordinator::spawn(
+            CoordinatorConfig { workers: 0, queue_depth: 1 },
+            |_| Ok(CpuTileExecutor::paper()),
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn heterogeneous_executors_rejected() {
+        let r = Coordinator::spawn(
+            CoordinatorConfig { workers: 2, queue_depth: 1 },
+            |i| Ok(CpuTileExecutor::new(256, 32, if i == 0 { 52 } else { 26 })),
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected_before_spawn_work() {
+        let mut pool = spawn_cpu_pool(1);
+        let unf = Matrix::zeros(4, 100);
+        let krp = Matrix::zeros(99, 4);
+        assert!(pool.mttkrp_unfolded(unf, &krp).is_err());
+    }
+}

@@ -1,0 +1,178 @@
+//! Fit computation for CP-ALS.
+//!
+//! The relative fit is `1 - ||X - X̂|| / ||X||`.  Materialising `X̂` is
+//! infeasible for large tensors, so we use the standard identities:
+//!
+//! * `||X̂||² = Σ_{r,s} (λ λᵀ ∘ Π_m F_mᵀF_m)[r,s]`
+//! * `⟨X, X̂⟩ = Σ_r λ_r Σ_i M[i,r] A[i,r]` where `M` is the MTTKRP along the
+//!   last updated mode and `A` that mode's (normalised) factor.
+
+use crate::tensor::Matrix;
+
+/// `||X̂||²` of a CP model given column weights `lambda` and the
+/// *normalised* factors' Gram matrices product (Hadamard over modes).
+pub fn cp_norm_sq(lambda: &[f32], gram_hadamard: &Matrix) -> f64 {
+    let r = lambda.len();
+    debug_assert_eq!(gram_hadamard.rows(), r);
+    let mut s = 0f64;
+    for i in 0..r {
+        for j in 0..r {
+            s += lambda[i] as f64 * lambda[j] as f64 * gram_hadamard.get(i, j) as f64;
+        }
+    }
+    s
+}
+
+/// `⟨X, X̂⟩` from the last-mode MTTKRP `m`, that mode's normalised factor
+/// `a`, and the column weights.
+pub fn cp_inner(m: &Matrix, a: &Matrix, lambda: &[f32]) -> f64 {
+    debug_assert_eq!(m.rows(), a.rows());
+    debug_assert_eq!(m.cols(), a.cols());
+    let mut s = 0f64;
+    for i in 0..m.rows() {
+        let mrow = m.row(i);
+        let arow = a.row(i);
+        for r in 0..m.cols() {
+            s += mrow[r] as f64 * arow[r] as f64 * lambda[r] as f64;
+        }
+    }
+    s
+}
+
+/// Relative fit `1 - sqrt(max(0, ||X||² + ||X̂||² - 2⟨X,X̂⟩)) / ||X||`.
+///
+/// **Caveat**: this identity assumes `inner` came from the *exact* MTTKRP
+/// of X.  When the backend's MTTKRP is noisy (analog noise injection), the
+/// identity overestimates the fit — use [`brute_force_fit`] to verify on
+/// small tensors.
+pub fn relative_fit(x_norm_sq: f64, model_norm_sq: f64, inner: f64) -> f64 {
+    let resid_sq = (x_norm_sq + model_norm_sq - 2.0 * inner).max(0.0);
+    1.0 - resid_sq.sqrt() / x_norm_sq.sqrt().max(1e-300)
+}
+
+/// Ground-truth fit by materialising the CP reconstruction — O(R·prod(dims)),
+/// for validation on small tensors only.
+pub fn brute_force_fit(
+    x: &crate::tensor::DenseTensor,
+    factors: &[Matrix],
+    lambda: &[f32],
+) -> f64 {
+    let shape = x.shape();
+    let nd = shape.len();
+    let r = lambda.len();
+    let mut resid_sq = 0f64;
+    let mut idx = vec![0usize; nd];
+    for flat in 0..x.len() {
+        let mut v = 0f64;
+        for rr in 0..r {
+            let mut p = lambda[rr] as f64;
+            for (m, &im) in idx.iter().enumerate() {
+                p *= factors[m].get(im, rr) as f64;
+            }
+            v += p;
+        }
+        let d = x.data()[flat] as f64 - v;
+        resid_sq += d * d;
+        for m in (0..nd).rev() {
+            idx[m] += 1;
+            if idx[m] < shape[m] {
+                break;
+            }
+            idx[m] = 0;
+        }
+    }
+    1.0 - resid_sq.sqrt() / x.fro_norm().max(1e-300)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{DenseTensor, Matrix};
+    use crate::util::prng::Prng;
+
+
+    /// Brute-force fit on a tiny problem must match the identity-based fit.
+    #[test]
+    fn identities_match_brute_force() {
+        let mut rng = Prng::new(1);
+        let (i, j, k, r) = (4usize, 3usize, 3usize, 2usize);
+        let a = Matrix::randn(i, r, &mut rng);
+        let b = Matrix::randn(j, r, &mut rng);
+        let c = Matrix::randn(k, r, &mut rng);
+        let x = DenseTensor::randn(&[i, j, k], &mut rng);
+
+        // model with lambda = 1 (unnormalised factors)
+        let lambda = vec![1f32; r];
+        let gh = a
+            .gram()
+            .hadamard(&b.gram())
+            .unwrap()
+            .hadamard(&c.gram())
+            .unwrap();
+        let model_sq = cp_norm_sq(&lambda, &gh);
+
+        // brute force ||X̂||²
+        let mut brute_sq = 0f64;
+        let mut inner_bf = 0f64;
+        for ii in 0..i {
+            for jj in 0..j {
+                for kk in 0..k {
+                    let mut v = 0f64;
+                    for rr in 0..r {
+                        v += a.get(ii, rr) as f64
+                            * b.get(jj, rr) as f64
+                            * c.get(kk, rr) as f64;
+                    }
+                    brute_sq += v * v;
+                    inner_bf += v * x.at(&[ii, jj, kk]) as f64;
+                }
+            }
+        }
+        assert!((model_sq - brute_sq).abs() < 1e-6 * brute_sq.abs().max(1.0));
+
+        // inner product via last-mode MTTKRP (mode 2)
+        let m = crate::mttkrp::dense_mttkrp(&x, &[a.clone(), b.clone(), c.clone()], 2)
+            .unwrap();
+        let inner = cp_inner(&m, &c, &lambda);
+        assert!((inner - inner_bf).abs() < 1e-4 * inner_bf.abs().max(1.0));
+    }
+
+    #[test]
+    fn perfect_model_has_fit_one() {
+        let fit = relative_fit(25.0, 25.0, 25.0);
+        assert!((fit - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_model_fit_zero() {
+        let fit = relative_fit(25.0, 0.0, 0.0);
+        assert!(fit.abs() < 1e-12);
+    }
+
+    #[test]
+    fn brute_force_matches_identity_fit_for_exact_mttkrp() {
+        use crate::cpd::{AlsConfig, CpAls, ExactBackend};
+        use crate::tensor::DenseTensor;
+        let mut rng = Prng::new(9);
+        let f: Vec<Matrix> =
+            [8usize, 7, 6].iter().map(|&d| Matrix::randn(d, 2, &mut rng)).collect();
+        let x = DenseTensor::from_cp_factors(&f, 0.05, &mut rng).unwrap();
+        let mut backend = ExactBackend { tensor: &x };
+        let res = CpAls::new(AlsConfig { rank: 2, max_iters: 30, tol: 1e-7, seed: 4 })
+            .run(&mut backend)
+            .unwrap();
+        let bf = brute_force_fit(&x, &res.factors, &res.lambda);
+        assert!(
+            (bf - res.final_fit()).abs() < 1e-3,
+            "brute {bf} vs identity {}",
+            res.final_fit()
+        );
+    }
+
+    #[test]
+    fn clamps_negative_residual() {
+        // floating-point cancellation can make resid_sq slightly negative
+        let fit = relative_fit(25.0, 25.0, 25.0 + 1e-9);
+        assert!(fit <= 1.0 + 1e-9 && fit >= 1.0 - 1e-6);
+    }
+}

@@ -1,0 +1,12 @@
+//! Canonical Polyadic Decomposition via Alternating Least Squares
+//! (Algorithm 1 of the paper), with a pluggable MTTKRP backend so the same
+//! driver runs on the exact CPU reference, the analog pSRAM simulator, or
+//! the PJRT-executed Pallas kernel.
+
+pub mod als;
+pub mod backend;
+pub mod fit;
+
+pub use als::{AlsConfig, AlsResult, CpAls};
+pub use backend::{ExactBackend, MttkrpBackend, PsramBackend, SparseBackend};
+pub use fit::{brute_force_fit, cp_norm_sq};

@@ -1,0 +1,129 @@
+//! On-chip analog-to-digital converter (paper §III.C): digitizes the
+//! accumulated per-wavelength bit-line photocurrent.
+//!
+//! Two operating points matter:
+//! * [`Adc::ideal`] — enough resolution to represent a full column sum
+//!   exactly; this is the configuration under which the analog engine is
+//!   *bit-exact* against the digital kernel (the correctness contract).
+//! * finite-resolution ADCs (e.g. 8–12 bit at 20 GS/s) — used by the
+//!   precision ablation to quantify accuracy loss.
+
+/// An ADC quantizing a non-negative analog value onto `bits` codes over
+/// `full_scale` (one per bit-line per wavelength group).
+#[derive(Debug, Clone)]
+pub struct Adc {
+    /// Resolution in bits; `None` means ideal (exact integer passthrough).
+    pub bits: Option<u32>,
+    /// Sample rate (Hz); must be >= the compute clock.
+    pub sample_rate_hz: f64,
+    /// Energy per conversion (J). ~1 pJ/conversion for multi-GS/s SAR ADCs.
+    pub energy_per_sample_j: f64,
+}
+
+impl Adc {
+    /// Ideal ADC: exact readout (the bit-exact correctness configuration).
+    pub fn ideal() -> Self {
+        Adc { bits: None, sample_rate_hz: f64::INFINITY, energy_per_sample_j: 1e-12 }
+    }
+
+    /// A realistic high-speed ADC.
+    pub fn sar(bits: u32, sample_rate_hz: f64) -> Self {
+        Adc { bits: Some(bits), sample_rate_hz, energy_per_sample_j: 1e-12 }
+    }
+
+    /// Quantize an analog column sum.
+    ///
+    /// `value` is the analog quantity in *LSB units of the ideal result*
+    /// (the engine works in normalized integer units); `full_scale` is the
+    /// largest representable magnitude for this readout.  An ideal ADC
+    /// rounds to the nearest integer (removing sub-LSB analog noise); a
+    /// `bits`-bit ADC maps onto `2^bits` uniform codes across
+    /// `[0, full_scale]` and reports the code centre.
+    pub fn quantize(&self, value: f64, full_scale: f64) -> f64 {
+        let v = value.clamp(0.0, full_scale);
+        match self.bits {
+            None => v.round(),
+            Some(bits) => {
+                let codes = (1u64 << bits) as f64;
+                let step = full_scale / codes;
+                if step <= 1.0 {
+                    // ADC finer than an LSB: exact integer readout.
+                    return v.round();
+                }
+                let code = (v / step).floor().min(codes - 1.0);
+                // code centre, rounded to the integer grid of the digital domain
+                (code * step + step / 2.0).round()
+            }
+        }
+    }
+
+    /// Worst-case quantization error (in ideal-LSB units) at a full scale.
+    pub fn max_error(&self, full_scale: f64) -> f64 {
+        match self.bits {
+            None => 0.5,
+            Some(bits) => {
+                let step = full_scale / (1u64 << bits) as f64;
+                (step / 2.0).max(0.5)
+            }
+        }
+    }
+
+    /// Effective number of bits needed to represent `full_scale` exactly.
+    pub fn bits_for_exact(full_scale: f64) -> u32 {
+        (full_scale.max(1.0)).log2().ceil() as u32 + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ideal_adc_is_exact_on_integers() {
+        let adc = Adc::ideal();
+        for v in [0.0, 1.0, 17.0, 65_280.0] {
+            assert_eq!(adc.quantize(v, 65_280.0), v);
+        }
+    }
+
+    #[test]
+    fn ideal_adc_removes_sub_lsb_noise() {
+        let adc = Adc::ideal();
+        assert_eq!(adc.quantize(41.9, 100.0), 42.0);
+        assert_eq!(adc.quantize(42.2, 100.0), 42.0);
+    }
+
+    #[test]
+    fn finite_adc_error_bounded_by_half_step() {
+        let adc = Adc::sar(8, 20e9);
+        let fs = 65_280.0;
+        let step = fs / 256.0;
+        for i in 0..100 {
+            let v = i as f64 * 650.0;
+            let q = adc.quantize(v, fs);
+            assert!((q - v).abs() <= step / 2.0 + 0.5, "v={v} q={q}");
+        }
+    }
+
+    #[test]
+    fn fine_adc_degenerates_to_exact() {
+        // 20-bit ADC over a 16-bit range: step < 1 LSB -> exact.
+        let adc = Adc::sar(20, 20e9);
+        for v in [0.0, 123.0, 65_000.0] {
+            assert_eq!(adc.quantize(v, 65_280.0), v);
+        }
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let adc = Adc::ideal();
+        assert_eq!(adc.quantize(-5.0, 100.0), 0.0);
+        assert_eq!(adc.quantize(150.0, 100.0), 100.0);
+    }
+
+    #[test]
+    fn bits_for_exact_covers_column_sum() {
+        // 256 rows * max intensity 255 = 65280 -> 17 bits
+        assert_eq!(Adc::bits_for_exact(65_280.0), 17);
+    }
+}

@@ -1,0 +1,129 @@
+//! Optical frequency comb: the wavelength-channel source for hyperspectral
+//! (WDM) operation (paper §III.A).
+//!
+//! The paper's device operates in the O-band and offers **52 wavelength
+//! channels with sub-nanometer spacing** per the GF45SPCLO PDK.  We model
+//! the comb as `max_channels` lines centred on `center_wavelength_m` with
+//! uniform `spacing_m`, each carrying `line_power_w` after generation.
+
+use crate::util::units::{nm, wavelength_to_freq};
+
+/// An integrated optical frequency comb (microresonator Kerr comb).
+#[derive(Debug, Clone)]
+pub struct FrequencyComb {
+    /// Centre wavelength of the comb (m). O-band: 1260–1360 nm.
+    pub center_wavelength_m: f64,
+    /// Uniform line spacing (m). Sub-nanometer per the paper.
+    pub spacing_m: f64,
+    /// Number of usable comb lines.
+    max_channels: usize,
+    /// Optical power per comb line at the comb output (W).
+    pub line_power_w: f64,
+}
+
+impl FrequencyComb {
+    /// The paper's configuration: O-band, 52 channels, sub-nm spacing
+    /// (0.8 nm ≈ 100 GHz grid at 1310 nm), 4 mW per line (sized for 8-bit
+    /// readout fidelity at 20 GHz; see LinkBudget).
+    pub fn gf45spclo_o_band() -> Self {
+        FrequencyComb {
+            center_wavelength_m: nm(1310.0),
+            spacing_m: nm(0.8),
+            max_channels: 52,
+            line_power_w: 4e-3,
+        }
+    }
+
+    /// A custom comb (for sweeps beyond the PDK limit, e.g. Fig. 5's x-axis).
+    pub fn with_channels(mut self, n: usize) -> Self {
+        self.max_channels = n;
+        self
+    }
+
+    /// Number of usable comb lines.
+    pub fn max_channels(&self) -> usize {
+        self.max_channels
+    }
+
+    /// Wavelengths (m) of the first `n` channels, centred on the carrier.
+    ///
+    /// Channels are laid out symmetrically around the centre so the span is
+    /// minimal: for n channels the span is `(n-1) * spacing`.
+    pub fn channel_wavelengths_m(&self, n: usize) -> Vec<f64> {
+        assert!(n >= 1);
+        let half = (n as f64 - 1.0) / 2.0;
+        (0..n)
+            .map(|i| self.center_wavelength_m + (i as f64 - half) * self.spacing_m)
+            .collect()
+    }
+
+    /// Total spectral span (m) occupied by `n` channels.
+    pub fn span_m(&self, n: usize) -> f64 {
+        if n <= 1 {
+            0.0
+        } else {
+            (n - 1) as f64 * self.spacing_m
+        }
+    }
+
+    /// Channel spacing expressed in optical frequency (Hz) at band centre.
+    pub fn spacing_hz(&self) -> f64 {
+        let f0 = wavelength_to_freq(self.center_wavelength_m);
+        let f1 = wavelength_to_freq(self.center_wavelength_m + self.spacing_m);
+        (f0 - f1).abs()
+    }
+
+    /// All channels stay inside the O-band (1260–1360 nm)?
+    pub fn fits_o_band(&self, n: usize) -> bool {
+        let ws = self.channel_wavelengths_m(n);
+        ws.iter().all(|&w| (nm(1260.0)..=nm(1360.0)).contains(&w))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_comb_has_52_channels_in_o_band() {
+        let comb = FrequencyComb::gf45spclo_o_band();
+        assert_eq!(comb.max_channels(), 52);
+        assert!(comb.fits_o_band(52));
+        // sub-nanometer spacing
+        assert!(comb.spacing_m < nm(1.0));
+    }
+
+    #[test]
+    fn channel_wavelengths_are_uniform_and_centered() {
+        let comb = FrequencyComb::gf45spclo_o_band();
+        let ws = comb.channel_wavelengths_m(5);
+        assert_eq!(ws.len(), 5);
+        let d = ws[1] - ws[0];
+        for w in ws.windows(2) {
+            assert!((w[1] - w[0] - d).abs() < 1e-18);
+        }
+        let mid = ws[2];
+        assert!((mid - comb.center_wavelength_m).abs() < 1e-15);
+    }
+
+    #[test]
+    fn span_scales_with_channel_count() {
+        let comb = FrequencyComb::gf45spclo_o_band();
+        assert_eq!(comb.span_m(1), 0.0);
+        assert!((comb.span_m(52) - 51.0 * comb.spacing_m).abs() < 1e-18);
+    }
+
+    #[test]
+    fn spacing_near_100ghz_grid() {
+        let comb = FrequencyComb::gf45spclo_o_band();
+        let hz = comb.spacing_hz();
+        // 0.8 nm at 1310 nm ≈ 140 GHz
+        assert!(hz > 100e9 && hz < 200e9, "spacing {hz} Hz");
+    }
+
+    #[test]
+    fn oversized_comb_leaves_o_band() {
+        let comb = FrequencyComb::gf45spclo_o_band().with_channels(200);
+        assert!(!comb.fits_o_band(200));
+    }
+}

@@ -1,0 +1,112 @@
+//! Optical link budget: laser -> comb -> shaper -> pSRAM word rings ->
+//! bit line -> photodetector (paper Fig. 1).
+//!
+//! The budget determines how much optical power one wavelength delivers to
+//! a bit-line photodiode, and therefore the SNR of an analog column sum —
+//! which is what the noise model feeds on.
+
+use super::photodiode::Photodiode;
+use crate::util::units::db_loss_to_ratio;
+
+/// Per-stage losses of the compute path, in dB.
+#[derive(Debug, Clone)]
+pub struct LinkBudget {
+    /// Comb line power at the source (W).  4 mW: sized so a full-scale
+    /// single-channel readout at 20 GHz clears 8-bit (sub-LSB) noise.
+    pub line_power_w: f64,
+    /// Comb-shaper insertion loss (dB).
+    pub shaper_loss_db: f64,
+    /// Waveguide routing loss from shaper to array (dB).
+    pub routing_loss_db: f64,
+    /// Per-bitcell through loss as light passes word rings on a wordline (dB).
+    pub per_cell_loss_db: f64,
+    /// Number of cells a wordline traverses before the tap (array columns).
+    pub cells_on_path: usize,
+    /// Drop/tap loss into the bit line (dB).
+    pub tap_loss_db: f64,
+}
+
+impl Default for LinkBudget {
+    fn default() -> Self {
+        LinkBudget {
+            line_power_w: 4e-3,
+            shaper_loss_db: 1.5,
+            routing_loss_db: 2.0,
+            per_cell_loss_db: 0.01,
+            cells_on_path: 256,
+            tap_loss_db: 0.5,
+        }
+    }
+}
+
+impl LinkBudget {
+    /// Total path loss (dB) from comb line to photodiode.
+    pub fn total_loss_db(&self) -> f64 {
+        self.shaper_loss_db
+            + self.routing_loss_db
+            + self.per_cell_loss_db * self.cells_on_path as f64
+            + self.tap_loss_db
+    }
+
+    /// Optical power (W) reaching the photodiode at full-scale modulation.
+    pub fn detector_power_w(&self) -> f64 {
+        self.line_power_w * db_loss_to_ratio(self.total_loss_db())
+    }
+
+    /// Full-scale SNR (linear) of a single-channel readout at `bandwidth_hz`.
+    pub fn detector_snr(&self, pd: &Photodiode, bandwidth_hz: f64) -> f64 {
+        pd.snr(self.detector_power_w(), bandwidth_hz)
+    }
+
+    /// Equivalent noise expressed in ideal-LSB units of a column sum whose
+    /// full scale is `full_scale_lsb` (e.g. 256 rows * 255 = 65280).
+    ///
+    /// The analog full-scale signal maps to `full_scale_lsb`; the detector's
+    /// relative noise `1/SNR` scales accordingly.
+    pub fn noise_sigma_lsb(
+        &self,
+        pd: &Photodiode,
+        bandwidth_hz: f64,
+        full_scale_lsb: f64,
+    ) -> f64 {
+        full_scale_lsb / self.detector_snr(pd, bandwidth_hz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_total_loss_reasonable() {
+        let lb = LinkBudget::default();
+        let db = lb.total_loss_db();
+        // 1.5 + 2.0 + 2.56 + 0.5 = 6.56 dB
+        assert!((db - 6.56).abs() < 1e-9, "loss={db}");
+    }
+
+    #[test]
+    fn detector_power_below_line_power() {
+        let lb = LinkBudget::default();
+        assert!(lb.detector_power_w() < lb.line_power_w);
+        assert!(lb.detector_power_w() > 0.0);
+    }
+
+    #[test]
+    fn snr_supports_sub_lsb_noise_at_paper_config() {
+        // With the default budget the per-readout noise should be < 1 LSB of
+        // an 8-bit input code (full scale 255 for a single product readout).
+        let lb = LinkBudget::default();
+        let pd = Photodiode::default();
+        let sigma = lb.noise_sigma_lsb(&pd, 20e9, 255.0);
+        assert!(sigma < 1.0, "sigma={sigma} LSB");
+    }
+
+    #[test]
+    fn longer_path_means_more_loss() {
+        let mut lb = LinkBudget::default();
+        let p1 = lb.detector_power_w();
+        lb.cells_on_path = 512;
+        assert!(lb.detector_power_w() < p1);
+    }
+}

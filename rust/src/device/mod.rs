@@ -1,0 +1,140 @@
+//! Parametric models of the photonic components that make up the pSRAM
+//! compute engine (paper §III, Fig. 1):
+//!
+//! * [`comb`] — O-band optical frequency comb (the wavelength channel source;
+//!   52 channels on the GF45SPCLO PDK).
+//! * [`mrr`] — micro-ring resonators: the bitcell latch elements and the
+//!   G/B/R/Y compute ring modulators whose resonances share one FSR.
+//! * [`modulator`] — comb shapers: 8-bit intensity encoding of inputs onto
+//!   comb lines.
+//! * [`photodiode`] — bit-line photodetectors: responsivity, dark current,
+//!   shot + thermal noise.
+//! * [`adc`] — on-chip ADC digitizing the accumulated photocurrent.
+//! * [`link`] — the optical power budget from laser to detector, which
+//!   determines the signal-to-noise ratio of an analog column sum.
+//! * [`noise`] — the aggregate noise model the compute engine injects
+//!   (derived from the link budget, or disabled for bit-exact operation).
+//!
+//! The device parameters double as the *admissibility oracle* for the
+//! performance model: a (wavelengths, frequency) configuration is only
+//! accepted if the comb can supply the channels, the rings can space their
+//! resonances, and the modulators/ADCs can run at the requested rate.
+
+pub mod adc;
+pub mod comb;
+pub mod link;
+pub mod modulator;
+pub mod mrr;
+pub mod noise;
+pub mod photodiode;
+
+pub use adc::Adc;
+pub use comb::FrequencyComb;
+pub use link::LinkBudget;
+pub use modulator::CombShaper;
+pub use mrr::MicroRing;
+pub use noise::NoiseModel;
+pub use photodiode::Photodiode;
+
+use crate::util::error::{Error, Result};
+
+/// The full device parameter set for one pSRAM compute macro, with the
+/// paper's defaults (§III, §V.A).
+#[derive(Debug, Clone)]
+pub struct DeviceParams {
+    pub comb: FrequencyComb,
+    pub ring: MicroRing,
+    pub shaper: CombShaper,
+    pub pd: Photodiode,
+    pub adc: Adc,
+    pub link: LinkBudget,
+    /// Compute (read) clock in Hz — the paper operates at 20 GHz.
+    pub clock_hz: f64,
+    /// Write/reconfiguration clock in Hz (pSRAM write speed, 20 GHz).
+    pub write_clock_hz: f64,
+}
+
+impl Default for DeviceParams {
+    fn default() -> Self {
+        DeviceParams {
+            comb: FrequencyComb::gf45spclo_o_band(),
+            ring: MicroRing::gf45spclo_compute_ring(),
+            shaper: CombShaper::default(),
+            pd: Photodiode::default(),
+            adc: Adc::ideal(),
+            link: LinkBudget::default(),
+            clock_hz: 20e9,
+            write_clock_hz: 20e9,
+        }
+    }
+}
+
+impl DeviceParams {
+    /// Validate that `channels` wavelength channels at `clock_hz` are
+    /// physically admissible for this device stack.
+    pub fn validate(&self, channels: usize) -> Result<()> {
+        if channels == 0 {
+            return Err(Error::config("need at least one wavelength channel"));
+        }
+        if channels > self.comb.max_channels() {
+            return Err(Error::config(format!(
+                "{} channels requested but the comb supports {}",
+                channels,
+                self.comb.max_channels()
+            )));
+        }
+        self.ring.check_channel_plan(&self.comb.channel_wavelengths_m(channels))?;
+        if self.clock_hz > self.shaper.max_rate_hz {
+            return Err(Error::config(format!(
+                "clock {:.1} GHz exceeds comb-shaper limit {:.1} GHz",
+                self.clock_hz / 1e9,
+                self.shaper.max_rate_hz / 1e9
+            )));
+        }
+        if self.clock_hz > self.adc.sample_rate_hz {
+            return Err(Error::config(format!(
+                "clock {:.1} GHz exceeds ADC sample rate {:.1} GHz",
+                self.clock_hz / 1e9,
+                self.adc.sample_rate_hz / 1e9
+            )));
+        }
+        Ok(())
+    }
+
+    /// Build the aggregate noise model for an analog column sum over
+    /// `summed_rows` word rows at the current link budget.
+    pub fn noise_model(&self, summed_rows: usize, seed: u64) -> NoiseModel {
+        NoiseModel::from_link(&self.link, &self.pd, self.clock_hz, summed_rows, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_params_admit_paper_config() {
+        let p = DeviceParams::default();
+        assert!(p.validate(52).is_ok());
+        assert!(p.validate(1).is_ok());
+    }
+
+    #[test]
+    fn too_many_channels_rejected() {
+        let p = DeviceParams::default();
+        let err = p.validate(53).unwrap_err();
+        assert!(err.to_string().contains("53"));
+    }
+
+    #[test]
+    fn zero_channels_rejected() {
+        assert!(DeviceParams::default().validate(0).is_err());
+    }
+
+    #[test]
+    fn overclocked_shaper_rejected() {
+        let mut p = DeviceParams::default();
+        p.clock_hz = 100e9;
+        assert!(p.validate(4).is_err());
+    }
+}

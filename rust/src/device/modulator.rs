@@ -1,0 +1,128 @@
+//! Comb shaper / electro-optic modulator: intensity-encodes 8-bit operands
+//! onto comb lines (paper §III.A).
+//!
+//! "We envision an intensity encoded input data, with each discrete power
+//! level corresponding to a specific value represented by an 8-bit word."
+//! The shaper maps a uint8 code to one of 256 optical power levels between
+//! the floor set by the extinction ratio and the full line power, at up to
+//! `max_rate_hz` updates per second.
+
+use crate::util::units::db_loss_to_ratio;
+
+/// A high-speed comb shaper (one per wavelength channel).
+#[derive(Debug, Clone)]
+pub struct CombShaper {
+    /// Maximum modulation/update rate (Hz).
+    pub max_rate_hz: f64,
+    /// DAC resolution driving the shaper (bits). 8 in the paper.
+    pub dac_bits: u32,
+    /// Extinction ratio (dB): power ratio between code 255 and code 0.
+    pub extinction_db: f64,
+    /// Insertion loss of the shaper (dB).
+    pub insertion_loss_db: f64,
+    /// Energy per modulation event (J) — EO modulator switching energy.
+    pub energy_per_symbol_j: f64,
+}
+
+impl Default for CombShaper {
+    fn default() -> Self {
+        CombShaper {
+            max_rate_hz: 50e9,       // EO comb shapers are good past 50 GHz
+            dac_bits: 8,
+            extinction_db: 25.0,
+            insertion_loss_db: 1.5,
+            energy_per_symbol_j: 50e-15, // ~50 fJ/symbol
+        }
+    }
+}
+
+impl CombShaper {
+    /// Number of distinguishable intensity levels.
+    pub fn levels(&self) -> u32 {
+        1 << self.dac_bits
+    }
+
+    /// Map an input code to the transmitted optical power (W) for a comb
+    /// line carrying `line_power_w`.
+    ///
+    /// Code 0 leaks `line_power / extinction`; code max transmits the full
+    /// line power (minus insertion loss).  Levels are uniformly spaced —
+    /// the linearity the dot-product mapping requires.
+    pub fn encode_power_w(&self, code: u32, line_power_w: f64) -> f64 {
+        assert!(code < self.levels(), "code {code} out of range");
+        let after_il = line_power_w * db_loss_to_ratio(self.insertion_loss_db);
+        let floor = after_il * db_loss_to_ratio(self.extinction_db);
+        let span = after_il - floor;
+        floor + span * code as f64 / (self.levels() - 1) as f64
+    }
+
+    /// The inverse map used to reason about encoding error: returns the code
+    /// whose nominal power is closest to `power_w`.
+    pub fn decode_power(&self, power_w: f64, line_power_w: f64) -> u32 {
+        let after_il = line_power_w * db_loss_to_ratio(self.insertion_loss_db);
+        let floor = after_il * db_loss_to_ratio(self.extinction_db);
+        let span = after_il - floor;
+        let frac = ((power_w - floor) / span).clamp(0.0, 1.0);
+        (frac * (self.levels() - 1) as f64).round() as u32
+    }
+
+    /// Modulation energy for a full input vector of `n` symbols (J).
+    pub fn vector_energy_j(&self, n: usize) -> f64 {
+        self.energy_per_symbol_j * n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encode_is_monotonic() {
+        let s = CombShaper::default();
+        let mut prev = -1.0;
+        for code in 0..s.levels() {
+            let p = s.encode_power_w(code, 1e-3);
+            assert!(p > prev);
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_exact() {
+        let s = CombShaper::default();
+        for code in [0u32, 1, 7, 127, 128, 200, 255] {
+            let p = s.encode_power_w(code, 1e-3);
+            assert_eq!(s.decode_power(p, 1e-3), code);
+        }
+    }
+
+    #[test]
+    fn full_scale_respects_insertion_loss() {
+        let s = CombShaper::default();
+        let p = s.encode_power_w(255, 1e-3);
+        let expect = 1e-3 * db_loss_to_ratio(s.insertion_loss_db);
+        assert!((p - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_code_leaks_by_extinction_ratio() {
+        let s = CombShaper::default();
+        let p0 = s.encode_power_w(0, 1e-3);
+        let p255 = s.encode_power_w(255, 1e-3);
+        let er = 10.0 * (p255 / p0).log10();
+        assert!((er - s.extinction_db).abs() < 0.01, "er={er}");
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn code_out_of_range_panics() {
+        CombShaper::default().encode_power_w(256, 1e-3);
+    }
+
+    #[test]
+    fn levels_match_dac_bits() {
+        let mut s = CombShaper::default();
+        s.dac_bits = 4;
+        assert_eq!(s.levels(), 16);
+    }
+}

@@ -1,0 +1,276 @@
+//! Micro-ring resonator (MRR) model.
+//!
+//! MRRs appear twice in the architecture (paper §III.B, Fig. 1):
+//! * as the cross-coupled latch elements of the pSRAM bitcell, and
+//! * as the G/B/R/Y *compute ring modulators*, four interleaved rings whose
+//!   resonances are spaced within one free spectral range (FSR) so each
+//!   handles a different subset of the WDM channels.
+//!
+//! We model the through/drop transmission with the standard Lorentzian
+//! all-pole approximation and use it to (a) check that a WDM channel plan
+//! keeps inter-channel crosstalk below a threshold and (b) derive the ring
+//! time constant that bounds the read speed.
+
+use crate::util::error::{Error, Result};
+use crate::util::units::{nm, wavelength_to_freq};
+
+/// A micro-ring resonator.
+#[derive(Debug, Clone)]
+pub struct MicroRing {
+    /// Resonance wavelength (m).
+    pub resonance_m: f64,
+    /// Loaded quality factor.
+    pub q_loaded: f64,
+    /// Free spectral range (m).
+    pub fsr_m: f64,
+    /// Number of interleaved compute rings sharing the FSR (G/B/R/Y = 4).
+    pub interleaved_rings: usize,
+    /// Maximum tolerated drop-port crosstalk from a neighbouring channel
+    /// (linear power ratio).
+    pub crosstalk_limit: f64,
+}
+
+impl MicroRing {
+    /// Compute-ring parameters consistent with the GF45SPCLO platform:
+    /// Q ≈ 8000 at 1310 nm, FSR ≈ 3.2 nm, 4 interleaved rings.
+    pub fn gf45spclo_compute_ring() -> Self {
+        MicroRing {
+            resonance_m: nm(1310.0),
+            q_loaded: 8_000.0,
+            fsr_m: nm(3.2),
+            interleaved_rings: 4,
+            crosstalk_limit: 0.05,
+        }
+    }
+
+    /// Full width at half maximum of the resonance (m).
+    pub fn fwhm_m(&self) -> f64 {
+        self.resonance_m / self.q_loaded
+    }
+
+    /// Lorentzian drop-port power transmission at wavelength `lambda_m`
+    /// for a ring resonant at `res_m` (1.0 on resonance).
+    pub fn drop_transmission(&self, lambda_m: f64, res_m: f64) -> f64 {
+        let hwhm = self.fwhm_m() / 2.0;
+        let d = lambda_m - res_m;
+        1.0 / (1.0 + (d / hwhm) * (d / hwhm))
+    }
+
+    /// Through-port power transmission (complement of the drop port in the
+    /// lossless two-port approximation).
+    pub fn through_transmission(&self, lambda_m: f64, res_m: f64) -> f64 {
+        1.0 - self.drop_transmission(lambda_m, res_m)
+    }
+
+    /// Photon lifetime of the loaded cavity (s): tau = Q / omega.
+    pub fn photon_lifetime_s(&self) -> f64 {
+        let omega = 2.0 * std::f64::consts::PI * wavelength_to_freq(self.resonance_m);
+        self.q_loaded / omega
+    }
+
+    /// Intrinsic optical bandwidth of the ring (Hz) — the read-speed bound
+    /// the paper refers to ("read speed ... constrained by the time
+    /// constant of ring resonators").
+    pub fn bandwidth_hz(&self) -> f64 {
+        // FWHM in frequency: f / Q.
+        wavelength_to_freq(self.resonance_m) / self.q_loaded
+    }
+
+    /// Check a WDM channel plan: each channel is assigned to one of the
+    /// `interleaved_rings` rings round-robin; the worst-case crosstalk a
+    /// ring sees from the nearest channel of *another* ring must stay below
+    /// `crosstalk_limit`.
+    pub fn check_channel_plan(&self, channels_m: &[f64]) -> Result<()> {
+        if channels_m.is_empty() {
+            return Err(Error::config("empty channel plan"));
+        }
+        if channels_m.len() == 1 {
+            return Ok(());
+        }
+        // Adjacent channels land on different rings (round-robin), so the
+        // closest same-ring spacing is interleaved_rings * spacing and the
+        // closest foreign-channel spacing is the raw spacing.  The ring's
+        // selectivity must suppress the foreign channel.
+        let spacing = (channels_m[1] - channels_m[0]).abs();
+        let worst = self.drop_transmission(self.resonance_m + spacing, self.resonance_m);
+        if worst > self.crosstalk_limit {
+            return Err(Error::config(format!(
+                "adjacent-channel crosstalk {:.3} exceeds limit {:.3} \
+                 (spacing {:.3} nm, FWHM {:.3} nm)",
+                worst,
+                self.crosstalk_limit,
+                spacing / 1e-9,
+                self.fwhm_m() / 1e-9
+            )));
+        }
+        // All channels must also fit within the ring set's usable span: the
+        // interleaved resonances cover one FSR, repeated periodically, so a
+        // plan is admissible if channel spacing * interleave fits in an FSR.
+        // spacing * interleave == FSR is the canonical design point (4
+        // resonances exactly tiling one FSR), so compare with tolerance.
+        let group_span = spacing * self.interleaved_rings as f64;
+        if group_span > self.fsr_m * (1.0 + 1e-9) {
+            return Err(Error::config(format!(
+                "interleave group span {:.2} nm exceeds FSR {:.2} nm",
+                group_span / 1e-9,
+                self.fsr_m / 1e-9
+            )));
+        }
+        Ok(())
+    }
+
+    /// Ring time constant expressed as a maximum toggling rate (Hz), used
+    /// by the bitcell model: the latch cannot flip faster than ~1/(2πτ).
+    pub fn max_toggle_rate_hz(&self) -> f64 {
+        1.0 / (2.0 * std::f64::consts::PI * self.photon_lifetime_s())
+    }
+}
+
+/// Thermo-optic behaviour of a silicon MRR (resonance drift with
+/// temperature) and the resulting stored-bit error rate — feeds the
+/// AB-BER ablation.
+impl MicroRing {
+    /// Thermo-optic resonance shift (m) for a temperature delta (K).
+    /// Silicon: dn/dT ≈ 1.8e-4 /K, n_g ≈ 4.2 → dλ/dT ≈ λ · (dn/dT)/n_g
+    /// ≈ 56 pm/K at 1310 nm.
+    pub fn thermal_shift_m(&self, delta_t_k: f64) -> f64 {
+        const DN_DT: f64 = 1.8e-4;
+        const N_G: f64 = 4.2;
+        self.resonance_m * DN_DT / N_G * delta_t_k
+    }
+
+    /// Drop-port contrast between the two latch states after a thermal
+    /// drift: 1.0 = full contrast, 0.0 = indistinguishable.
+    pub fn thermal_contrast(&self, delta_t_k: f64) -> f64 {
+        let drifted = self.resonance_m + self.thermal_shift_m(delta_t_k);
+        // on-state transmission at the drifted resonance vs off-state
+        let on = self.drop_transmission(self.resonance_m, drifted);
+        let off = self.drop_transmission(self.resonance_m + self.fsr_m / 2.0, drifted);
+        (on - off).max(0.0)
+    }
+
+    /// Stored-bit error probability under thermal drift, given the
+    /// detector needs `min_contrast` to discriminate the latch states.
+    /// Returns 0 when contrast is sufficient, else a linearly growing BER
+    /// capped at 0.5 (random readout).
+    pub fn thermal_ber(&self, delta_t_k: f64, min_contrast: f64) -> f64 {
+        let c = self.thermal_contrast(delta_t_k);
+        if c >= min_contrast {
+            0.0
+        } else {
+            (0.5 * (1.0 - c / min_contrast)).min(0.5)
+        }
+    }
+
+    /// Heater power (W) to lock the ring against a temperature delta,
+    /// given a tuning efficiency (K/mW).  Typical Si heaters: ~1 K/mW.
+    pub fn heater_power_w(&self, delta_t_k: f64, k_per_mw: f64) -> f64 {
+        (delta_t_k.abs() / k_per_mw) * 1e-3
+    }
+}
+
+/// Group velocity in a silicon waveguide (rough, for FSR sanity checks).
+pub fn si_waveguide_fsr_m(ring_radius_m: f64, lambda_m: f64) -> f64 {
+    // FSR = lambda^2 / (n_g * L); n_g ≈ 4.2 for Si strip waveguides.
+    let n_g = 4.2;
+    let l = 2.0 * std::f64::consts::PI * ring_radius_m;
+    lambda_m * lambda_m / (n_g * l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drop_is_unity_on_resonance() {
+        let r = MicroRing::gf45spclo_compute_ring();
+        assert!((r.drop_transmission(r.resonance_m, r.resonance_m) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn drop_halves_at_hwhm() {
+        let r = MicroRing::gf45spclo_compute_ring();
+        let hwhm = r.fwhm_m() / 2.0;
+        let t = r.drop_transmission(r.resonance_m + hwhm, r.resonance_m);
+        assert!((t - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn through_plus_drop_is_one() {
+        let r = MicroRing::gf45spclo_compute_ring();
+        for i in 0..10 {
+            let l = r.resonance_m + i as f64 * 0.1e-9;
+            let s = r.drop_transmission(l, r.resonance_m) + r.through_transmission(l, r.resonance_m);
+            assert!((s - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn paper_channel_plan_is_admissible() {
+        let r = MicroRing::gf45spclo_compute_ring();
+        let comb = crate::device::comb::FrequencyComb::gf45spclo_o_band();
+        assert!(r.check_channel_plan(&comb.channel_wavelengths_m(52)).is_ok());
+    }
+
+    #[test]
+    fn dense_plan_rejected_for_crosstalk() {
+        let r = MicroRing::gf45spclo_compute_ring();
+        // 0.05 nm spacing — far inside the ring linewidth
+        let plan: Vec<f64> = (0..8).map(|i| nm(1310.0) + i as f64 * nm(0.05)).collect();
+        let err = r.check_channel_plan(&plan).unwrap_err();
+        assert!(err.to_string().contains("crosstalk"));
+    }
+
+    #[test]
+    fn ring_bandwidth_supports_20ghz_read() {
+        let r = MicroRing::gf45spclo_compute_ring();
+        // f/Q at 1310nm, Q=8000 -> ~28.6 GHz: supports the 20 GHz clock.
+        assert!(r.bandwidth_hz() > 20e9, "bw={}", r.bandwidth_hz());
+    }
+
+    #[test]
+    fn photon_lifetime_is_picoseconds() {
+        let r = MicroRing::gf45spclo_compute_ring();
+        let tau = r.photon_lifetime_s();
+        assert!(tau > 1e-13 && tau < 1e-11, "tau={tau}");
+    }
+
+    #[test]
+    fn thermal_shift_is_56pm_per_kelvin() {
+        let r = MicroRing::gf45spclo_compute_ring();
+        let pm_per_k = r.thermal_shift_m(1.0) / 1e-12;
+        assert!((pm_per_k - 56.0).abs() < 3.0, "shift={pm_per_k} pm/K");
+    }
+
+    #[test]
+    fn thermal_contrast_degrades_with_drift() {
+        let r = MicroRing::gf45spclo_compute_ring();
+        let c0 = r.thermal_contrast(0.0);
+        let c5 = r.thermal_contrast(5.0);
+        let c50 = r.thermal_contrast(50.0);
+        assert!(c0 > 0.99, "c0={c0}");
+        assert!(c5 < c0 && c50 < c5, "{c0} {c5} {c50}");
+    }
+
+    #[test]
+    fn thermal_ber_zero_when_locked() {
+        let r = MicroRing::gf45spclo_compute_ring();
+        assert_eq!(r.thermal_ber(0.0, 0.5), 0.0);
+        assert!(r.thermal_ber(50.0, 0.5) > 0.0);
+        assert!(r.thermal_ber(500.0, 0.5) <= 0.5);
+    }
+
+    #[test]
+    fn heater_power_scales_with_drift() {
+        let r = MicroRing::gf45spclo_compute_ring();
+        assert!((r.heater_power_w(5.0, 1.0) - 5e-3).abs() < 1e-12);
+        assert_eq!(r.heater_power_w(0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn fsr_formula_sane_for_5um_ring() {
+        let fsr = si_waveguide_fsr_m(5e-6, nm(1310.0));
+        // ~13 nm for a 5 um radius ring
+        assert!(fsr > nm(5.0) && fsr < nm(30.0), "fsr={fsr}");
+    }
+}

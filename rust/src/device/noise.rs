@@ -1,0 +1,121 @@
+//! Aggregate analog noise model injected by the compute engine.
+//!
+//! The engine's per-plane column sums are ideal integers; physically they
+//! are photocurrents with shot + thermal noise.  [`NoiseModel`] adds a
+//! zero-mean Gaussian perturbation (in ideal-LSB units) to each analog
+//! readout before ADC quantization.  `NoiseModel::Off` keeps the path
+//! bit-exact — the correctness configuration cross-checked against the
+//! JAX/Pallas kernel.
+
+use super::link::LinkBudget;
+use super::photodiode::Photodiode;
+use crate::util::prng::Prng;
+
+/// Noise injected into each analog column-sum readout.
+#[derive(Debug, Clone)]
+pub enum NoiseModel {
+    /// No noise: bit-exact analog path.
+    Off,
+    /// Zero-mean Gaussian with the given std-dev in ideal-LSB units.
+    Gaussian { sigma_lsb: f64, rng: Prng },
+}
+
+impl NoiseModel {
+    /// Build from the physical link budget: the noise of a readout whose
+    /// full scale is `summed_rows * 255` LSB.
+    pub fn from_link(
+        link: &LinkBudget,
+        pd: &Photodiode,
+        bandwidth_hz: f64,
+        summed_rows: usize,
+        seed: u64,
+    ) -> Self {
+        let full_scale = summed_rows as f64 * 255.0;
+        let sigma = link.noise_sigma_lsb(pd, bandwidth_hz, full_scale);
+        if sigma <= 0.0 {
+            NoiseModel::Off
+        } else {
+            NoiseModel::Gaussian { sigma_lsb: sigma, rng: Prng::new(seed) }
+        }
+    }
+
+    /// Explicit sigma (for ablation sweeps).
+    pub fn gaussian(sigma_lsb: f64, seed: u64) -> Self {
+        if sigma_lsb <= 0.0 {
+            NoiseModel::Off
+        } else {
+            NoiseModel::Gaussian { sigma_lsb, rng: Prng::new(seed) }
+        }
+    }
+
+    /// Is the path bit-exact?
+    pub fn is_off(&self) -> bool {
+        matches!(self, NoiseModel::Off)
+    }
+
+    /// The configured sigma (0 when off).
+    pub fn sigma_lsb(&self) -> f64 {
+        match self {
+            NoiseModel::Off => 0.0,
+            NoiseModel::Gaussian { sigma_lsb, .. } => *sigma_lsb,
+        }
+    }
+
+    /// Perturb one analog readout (ideal-LSB units).
+    #[inline]
+    pub fn perturb(&mut self, value: f64) -> f64 {
+        match self {
+            NoiseModel::Off => value,
+            NoiseModel::Gaussian { sigma_lsb, rng } => value + rng.normal() * *sigma_lsb,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn off_is_identity() {
+        let mut n = NoiseModel::Off;
+        assert_eq!(n.perturb(42.0), 42.0);
+        assert!(n.is_off());
+    }
+
+    #[test]
+    fn gaussian_zero_sigma_degrades_to_off() {
+        assert!(NoiseModel::gaussian(0.0, 1).is_off());
+        assert!(NoiseModel::gaussian(-1.0, 1).is_off());
+    }
+
+    #[test]
+    fn gaussian_statistics_match_sigma() {
+        let mut n = NoiseModel::gaussian(2.5, 7);
+        let xs: Vec<f64> = (0..100_000).map(|_| n.perturb(0.0)).collect();
+        assert!(stats::mean(&xs).abs() < 0.05);
+        assert!((stats::std_dev(&xs) - 2.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn from_link_default_is_sub_lsb_for_single_row() {
+        let n = NoiseModel::from_link(
+            &LinkBudget::default(),
+            &Photodiode::default(),
+            20e9,
+            1,
+            3,
+        );
+        assert!(n.sigma_lsb() < 1.0);
+        assert!(!n.is_off());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = NoiseModel::gaussian(1.0, 42);
+        let mut b = NoiseModel::gaussian(1.0, 42);
+        for _ in 0..100 {
+            assert_eq!(a.perturb(1.0), b.perturb(1.0));
+        }
+    }
+}

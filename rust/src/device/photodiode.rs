@@ -1,0 +1,107 @@
+//! Bit-line photodetector model (paper §III.C): the accumulated optical
+//! power on a bit line becomes a photocurrent; shot noise, dark current and
+//! the TIA's thermal noise set the analog precision of a column sum.
+
+use crate::util::units::{K_BOLTZMANN, Q_ELECTRON};
+
+/// A waveguide photodiode + transimpedance front end.
+#[derive(Debug, Clone)]
+pub struct Photodiode {
+    /// Responsivity (A/W). ~1 A/W for Ge-on-Si in the O-band.
+    pub responsivity_a_per_w: f64,
+    /// Dark current (A).
+    pub dark_current_a: f64,
+    /// TIA feedback resistance (Ohm) — sets thermal noise and gain.
+    pub tia_resistance_ohm: f64,
+    /// Operating temperature (K).
+    pub temperature_k: f64,
+}
+
+impl Default for Photodiode {
+    fn default() -> Self {
+        Photodiode {
+            responsivity_a_per_w: 1.0,
+            dark_current_a: 100e-9,
+            tia_resistance_ohm: 5_000.0,
+            temperature_k: 300.0,
+        }
+    }
+}
+
+impl Photodiode {
+    /// Mean photocurrent (A) for incident optical power (W).
+    pub fn photocurrent_a(&self, power_w: f64) -> f64 {
+        self.responsivity_a_per_w * power_w + self.dark_current_a
+    }
+
+    /// Shot-noise current std-dev (A) over an integration bandwidth (Hz):
+    /// sigma^2 = 2 q I B.
+    pub fn shot_noise_a(&self, current_a: f64, bandwidth_hz: f64) -> f64 {
+        (2.0 * Q_ELECTRON * current_a * bandwidth_hz).sqrt()
+    }
+
+    /// Thermal (Johnson) noise current std-dev (A) of the TIA input over a
+    /// bandwidth (Hz): sigma^2 = 4 k T B / R.
+    pub fn thermal_noise_a(&self, bandwidth_hz: f64) -> f64 {
+        (4.0 * K_BOLTZMANN * self.temperature_k * bandwidth_hz / self.tia_resistance_ohm)
+            .sqrt()
+    }
+
+    /// Total input-referred noise std-dev (A) for a given signal current.
+    pub fn total_noise_a(&self, signal_current_a: f64, bandwidth_hz: f64) -> f64 {
+        let shot = self.shot_noise_a(signal_current_a + self.dark_current_a, bandwidth_hz);
+        let thermal = self.thermal_noise_a(bandwidth_hz);
+        (shot * shot + thermal * thermal).sqrt()
+    }
+
+    /// Signal-to-noise ratio (linear) of a photocurrent measurement.
+    pub fn snr(&self, power_w: f64, bandwidth_hz: f64) -> f64 {
+        let sig = self.responsivity_a_per_w * power_w;
+        sig / self.total_noise_a(sig, bandwidth_hz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn photocurrent_linear_in_power() {
+        let pd = Photodiode::default();
+        let i1 = pd.photocurrent_a(1e-3) - pd.dark_current_a;
+        let i2 = pd.photocurrent_a(2e-3) - pd.dark_current_a;
+        assert!((i2 / i1 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shot_noise_scales_sqrt_current() {
+        let pd = Photodiode::default();
+        let a = pd.shot_noise_a(1e-3, 20e9);
+        let b = pd.shot_noise_a(4e-3, 20e9);
+        assert!((b / a - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn snr_improves_with_power() {
+        let pd = Photodiode::default();
+        assert!(pd.snr(1e-3, 20e9) > pd.snr(1e-5, 20e9));
+    }
+
+    #[test]
+    fn snr_at_milliwatt_20ghz_exceeds_8bit_needs() {
+        // One 8-bit column sum needs SNR ≈ 2^8 ≈ 48 dB for LSB fidelity at
+        // full scale; 1 mW on a 1 A/W PD at 20 GHz comfortably exceeds it.
+        let pd = Photodiode::default();
+        let snr_db = 20.0 * pd.snr(1e-3, 20e9).log10();
+        assert!(snr_db > 48.0, "snr={snr_db} dB");
+    }
+
+    #[test]
+    fn thermal_noise_decreases_with_resistance() {
+        let mut pd = Photodiode::default();
+        let n1 = pd.thermal_noise_a(20e9);
+        pd.tia_resistance_ohm *= 4.0;
+        let n2 = pd.thermal_noise_a(20e9);
+        assert!((n1 / n2 - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,7 @@
+//! Energy model of the pSRAM compute engine, built from the paper's device
+//! numbers (§III.B: ~1.04 pJ/bit switching, ~16.7 aJ/bit static) plus the
+//! modulator/ADC/laser contributions of the device stack.
+
+pub mod report;
+
+pub use report::{EnergyBreakdown, EnergyModel};

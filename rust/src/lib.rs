@@ -1,0 +1,49 @@
+//! # psram-imc — Photonic SRAM In-Memory Computing for Tensor Decomposition
+//!
+//! A full-stack reproduction of *"Predictive Performance of Photonic
+//! SRAM-based In-Memory Computing for Tensor Decomposition"* (CS.DC 2025):
+//!
+//! * [`device`] — parametric models of the photonic components (micro-ring
+//!   resonators, photodiodes, frequency combs, comb-shaper modulators, ADCs,
+//!   optical link budget, noise).
+//! * [`psram`] — the photonic SRAM bitcell / word / 256×256 crossbar array
+//!   with cycle and energy ledgers.
+//! * [`compute`] — the analog in-memory compute engine: intensity-encoded
+//!   inputs × stored bit-planes, per-wavelength bit-line accumulation,
+//!   bit-significance scaling, ADC readout.  Bit-exact against the JAX/Pallas
+//!   kernel contract when noise is off.
+//! * [`tensor`] — dense and sparse (COO) tensors, matricization, Khatri-Rao,
+//!   and the small dense linear algebra CP-ALS needs.
+//! * [`mttkrp`] — the paper's computational primitives CP1/CP2/CP3, the
+//!   tiling/scheduling of MTTKRP onto pSRAM arrays, and CPU reference
+//!   implementations (dense + sparse) used as baselines.
+//! * [`cpd`] — CP-ALS tensor decomposition with a pluggable MTTKRP backend.
+//! * [`perfmodel`] — the paper's predictive performance model (Fig. 5, the
+//!   17 PetaOps headline) plus sweep drivers.
+//! * [`energy`] — energy accounting from the paper's device numbers
+//!   (1.04 pJ/bit switching, 16.7 aJ/bit static).
+//! * [`coordinator`] — the L3 runtime: multi-array leader/worker scheduling,
+//!   batching, backpressure and metrics (std threads; this image has no
+//!   tokio).
+//! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
+//!   (`artifacts/*.hlo.txt`) for the digital baseline and cross-checks.
+//! * [`util`] — PRNG, statistics, fixed-point helpers, a tiny
+//!   property-testing harness, physical units.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod cli;
+pub mod compute;
+pub mod coordinator;
+pub mod cpd;
+pub mod device;
+pub mod energy;
+pub mod mttkrp;
+pub mod perfmodel;
+pub mod psram;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+pub use util::error::{Error, Result};

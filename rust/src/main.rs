@@ -1,0 +1,309 @@
+//! psram-imc CLI — the leader entrypoint.
+//!
+//! ```text
+//! psram-imc perf      [--channels N] [--freq GHZ] [--arrays N] [--double-buffer]
+//! psram-imc sweep     --axis wavelengths|frequency
+//! psram-imc cpd       [--shape I,J,K] [--rank R] [--iters N] [--backend exact|psram|coordinator|pjrt]
+//!                     [--workers N] [--noise SIGMA] [--seed S] [--sparse DENSITY]
+//! psram-imc energy    [--channels N] [--freq GHZ]
+//! psram-imc selftest            # analog vs CPU vs PJRT cross-check
+//! ```
+
+use psram_imc::cli::Args;
+use psram_imc::compute::ComputeEngine;
+use psram_imc::coordinator::pool::CoordinatedBackend;
+use psram_imc::coordinator::{Coordinator, CoordinatorConfig};
+use psram_imc::cpd::{AlsConfig, CpAls, ExactBackend, PsramBackend};
+use psram_imc::device::{DeviceParams, NoiseModel};
+use psram_imc::energy::EnergyModel;
+use psram_imc::mttkrp::pipeline::{AnalogTileExecutor, CpuTileExecutor};
+use psram_imc::mttkrp::SparsePsramBackend;
+use psram_imc::tensor::CooTensor;
+use psram_imc::perfmodel::{fig5_frequency, fig5_wavelengths, PerfModel, Workload};
+use psram_imc::psram::PsramArray;
+use psram_imc::runtime::PjrtTileExecutor;
+use psram_imc::tensor::{DenseTensor, Matrix};
+use psram_imc::util::prng::Prng;
+use psram_imc::util::units::{format_energy, format_ops};
+use psram_imc::Result;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "perf" => cmd_perf(args),
+        "sweep" => cmd_sweep(args),
+        "cpd" => cmd_cpd(args),
+        "energy" => cmd_energy(args),
+        "selftest" => cmd_selftest(args),
+        "" | "help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => {
+            eprint!("unknown command {other:?}\n\n{}", HELP);
+            std::process::exit(2);
+        }
+    }
+}
+
+const HELP: &str = "\
+psram-imc — photonic SRAM in-memory computing for tensor decomposition
+
+USAGE: psram-imc <command> [options]
+
+COMMANDS:
+  perf      predictive performance model (paper §V)
+  sweep     Fig. 5 series (--axis wavelengths|frequency)
+  cpd       CP-ALS decomposition on a synthetic tensor
+  energy    energy breakdown for the paper workload
+  selftest  analog / CPU / PJRT bit-exactness cross-check
+  help      this text
+";
+
+fn build_model(args: &Args) -> Result<PerfModel> {
+    let mut m = PerfModel::paper();
+    m.wavelengths = args.get_or("channels", 52usize)?;
+    m.clock_hz = args.get_or("freq", 20.0f64)? * 1e9;
+    m.num_arrays = args.get_or("arrays", 1usize)?;
+    m.double_buffer = args.flag("double-buffer");
+    Ok(m)
+}
+
+fn cmd_perf(args: &Args) -> Result<()> {
+    let m = build_model(args)?;
+    let w = Workload {
+        i_rows: args.get_or("i", 1_000_000u64)?,
+        k_contraction: args.get_or("k", 1_000_000_000_000u64)?,
+        rank: args.get_or("rank", 32u64)?,
+    };
+    let est = m.predict(&w)?;
+    println!(
+        "configuration: {}x{} bits, {} wavelengths, {:.1} GHz, {} array(s)",
+        m.geom.rows,
+        m.geom.cols_bits,
+        m.wavelengths,
+        m.clock_hz / 1e9,
+        m.num_arrays
+    );
+    println!("workload:      I={} K={} R={}", w.i_rows, w.k_contraction, w.rank);
+    println!("peak:          {}", format_ops(est.peak_ops));
+    println!("sustained:     {} (raw, paper counting)", format_ops(est.sustained_raw_ops));
+    println!("sustained:     {} (useful MACs only)", format_ops(est.sustained_useful_ops));
+    println!("utilization:   {:.4}", est.utilization);
+    println!("padding eff.:  {:.4}", est.padding_efficiency);
+    println!("images:        {}", est.images);
+    println!("runtime:       {:.3e} s", est.runtime_s);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    match args.get("axis").unwrap_or("wavelengths") {
+        "wavelengths" => {
+            let channels: Vec<usize> = vec![1, 2, 4, 8, 12, 16, 24, 32, 40, 52, 64];
+            let pts = fig5_wavelengths(&channels, args.get_or("freq", 20.0f64)? * 1e9)?;
+            println!("# Fig 5(i): sustained performance vs wavelength channels");
+            println!("{:>10} {:>16} {:>12} {:>6}", "channels", "sustained", "util", "pdk");
+            for p in pts {
+                println!(
+                    "{:>10} {:>16} {:>12.4} {:>6}",
+                    p.x,
+                    format_ops(p.sustained_ops),
+                    p.utilization,
+                    if p.admissible { "ok" } else { "extra" }
+                );
+            }
+        }
+        "frequency" => {
+            let clocks: Vec<f64> =
+                vec![1e9, 2e9, 5e9, 8e9, 10e9, 12e9, 15e9, 18e9, 20e9, 25e9];
+            let pts = fig5_frequency(&clocks, args.get_or("channels", 52usize)?)?;
+            println!("# Fig 5(ii): sustained performance vs operating frequency");
+            println!("{:>10} {:>16} {:>12} {:>6}", "GHz", "sustained", "util", "dev");
+            for p in pts {
+                println!(
+                    "{:>10} {:>16} {:>12.4} {:>6}",
+                    p.x / 1e9,
+                    format_ops(p.sustained_ops),
+                    p.utilization,
+                    if p.admissible { "ok" } else { "over" }
+                );
+            }
+        }
+        other => return Err(psram_imc::Error::config(format!("unknown axis {other:?}"))),
+    }
+    Ok(())
+}
+
+fn cmd_cpd(args: &Args) -> Result<()> {
+    let shape = args.get_usize_list("shape")?.unwrap_or_else(|| vec![48, 40, 36]);
+    let rank = args.get_or("rank", 8usize)?;
+    let iters = args.get_or("iters", 30usize)?;
+    let seed = args.get_or("seed", 42u64)?;
+    let noise = args.get_or("noise", 0.0f64)?;
+    let backend_kind = args.get("backend").unwrap_or("psram");
+    let sparse_density = args.get_or("sparse", 0.0f64)?;
+
+    // Synthetic low-rank tensor + measurement noise.
+    let mut rng = Prng::new(seed);
+    let truth: Vec<Matrix> =
+        shape.iter().map(|&d| Matrix::randn(d, rank, &mut rng)).collect();
+    let x = DenseTensor::from_cp_factors(&truth, 0.01, &mut rng)?;
+
+    let cfg = AlsConfig { rank, max_iters: iters, tol: 1e-6, seed: seed ^ 0xABCD };
+    let als = CpAls::new(cfg);
+    println!("tensor {shape:?}, rank {rank}, backend {backend_kind}");
+
+    // Sparse path: sparsify the synthetic tensor to the requested density
+    // and run spMTTKRP CP-ALS through the pSRAM sparse pipeline.
+    if sparse_density > 0.0 {
+        let total: usize = shape.iter().product();
+        let keep = (total as f64 * sparse_density) as usize;
+        // threshold that keeps ~`keep` largest-magnitude entries
+        let mut mags: Vec<f32> = x.data().iter().map(|v| v.abs()).collect();
+        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let thr = mags.get(keep.min(mags.len() - 1)).copied().unwrap_or(0.0);
+        let coo = CooTensor::from_dense(&x, thr);
+        println!("sparsified to {} nnz (density {:.4})", coo.nnz(), coo.density());
+        let t0 = std::time::Instant::now();
+        let mut backend = SparsePsramBackend::new(&coo, CpuTileExecutor::paper());
+        let res = als.run(&mut backend)?;
+        println!(
+            "sparse pipeline: images={} compute={} write={} U={:.4} raw-eff={:.4}",
+            backend.stats.images,
+            backend.stats.compute_cycles,
+            backend.stats.write_cycles,
+            backend.stats.utilization(),
+            backend.stats.padding_efficiency()
+        );
+        println!(
+            "final fit {:.6} after {} sweeps in {:.2?}",
+            res.final_fit(),
+            res.iters,
+            t0.elapsed()
+        );
+        return Ok(());
+    }
+
+    let t0 = std::time::Instant::now();
+    let res = match backend_kind {
+        "exact" => als.run(&mut ExactBackend { tensor: &x })?,
+        "psram" => {
+            let engine = if noise > 0.0 {
+                ComputeEngine::new(
+                    DeviceParams::default(),
+                    NoiseModel::gaussian(noise, seed ^ 0x77),
+                )
+            } else {
+                ComputeEngine::ideal()
+            };
+            let exec = AnalogTileExecutor::new(engine, PsramArray::paper());
+            let mut backend = PsramBackend::new(&x, exec);
+            let r = als.run(&mut backend)?;
+            println!(
+                "pipeline: images={} compute_cycles={} write_cycles={} U={:.4}",
+                backend.stats.images,
+                backend.stats.compute_cycles,
+                backend.stats.write_cycles,
+                backend.stats.utilization()
+            );
+            r
+        }
+        "coordinator" => {
+            let workers = args.get_or("workers", 4usize)?;
+            let pool = Coordinator::spawn(
+                CoordinatorConfig { workers, queue_depth: 2 * workers },
+                |_| Ok(CpuTileExecutor::paper()),
+            )?;
+            let mut backend = CoordinatedBackend { tensor: &x, pool };
+            let r = als.run(&mut backend)?;
+            println!("coordinator metrics:");
+            for (k, v) in backend.pool.metrics().snapshot() {
+                println!("  {k:>20}: {v}");
+            }
+            r
+        }
+        "pjrt" => {
+            let exec = PjrtTileExecutor::paper()?;
+            println!("pjrt artifact: {}", exec.artifact());
+            let mut backend = PsramBackend::new(&x, exec);
+            als.run(&mut backend)?
+        }
+        other => {
+            return Err(psram_imc::Error::config(format!("unknown backend {other:?}")))
+        }
+    };
+    let dt = t0.elapsed();
+
+    for (i, fit) in res.fit_history.iter().enumerate() {
+        println!("sweep {:>3}: fit {:.6}", i + 1, fit);
+    }
+    println!(
+        "final fit {:.6} after {} sweeps ({}) in {:.2?}",
+        res.final_fit(),
+        res.iters,
+        if res.converged { "converged" } else { "max iters" },
+        dt
+    );
+    Ok(())
+}
+
+fn cmd_energy(args: &Args) -> Result<()> {
+    let mut em = EnergyModel::paper();
+    em.model = build_model(args)?;
+    let w = Workload::paper_large();
+    let est = em.model.predict(&w)?;
+    let e = em.predict(&est);
+    println!("energy breakdown (workload: 1M-per-mode dense tensor, rank 32):");
+    for (name, energy, pct) in e.table() {
+        println!("  {name:>10}: {energy:>12}  {pct:5.1}%");
+    }
+    println!("  {:>10}: {:>12}", "total", format_energy(e.total_j()));
+    println!("  per useful op: {}", format_energy(e.per_op_j(2.0 * w.useful_macs())));
+    Ok(())
+}
+
+fn cmd_selftest(_args: &Args) -> Result<()> {
+    use psram_imc::mttkrp::pipeline::TileExecutor;
+    let mut rng = Prng::new(7);
+    let (m, k, n) = (52usize, 256usize, 32usize);
+    let u: Vec<u8> = (0..m * k).map(|_| rng.next_u8()).collect();
+    let image: Vec<i8> = (0..k * n).map(|_| rng.next_i8()).collect();
+
+    let mut cpu = CpuTileExecutor::paper();
+    cpu.load_image(&image)?;
+    let a = cpu.compute(&u, m)?;
+
+    let mut analog = AnalogTileExecutor::ideal();
+    analog.load_image(&image)?;
+    let b = analog.compute(&u, m)?;
+    println!("analog == cpu: {}", a == b);
+
+    let mut pjrt = PjrtTileExecutor::paper()?;
+    pjrt.load_image(&image)?;
+    let c = pjrt.compute(&u, m)?;
+    println!("pjrt   == cpu: {} (artifact {})", a == c, pjrt.artifact());
+
+    if a == b && a == c {
+        println!("selftest OK: all three executors agree bit-exactly");
+        Ok(())
+    } else {
+        Err(psram_imc::Error::Runtime("executor mismatch".to_string()))
+    }
+}

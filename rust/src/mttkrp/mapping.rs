@@ -1,0 +1,227 @@
+//! The paper's computational primitives mapped onto the pSRAM array
+//! (§IV, Figs. 3-4), in their literal form.
+//!
+//! * **CP1** (`cp1_hadamard`): rows of factor B are stored down the array
+//!   columns; rows of factor C stream in with *interleaved wavelengths*
+//!   (one active wordline per wavelength) so each per-wavelength column
+//!   output is a single product — the Hadamard product `b_j ∘ c_k` with no
+//!   unwanted accumulation.
+//! * **CP2+CP3** (`cp23_scale_accumulate`): tensor elements are stored in
+//!   the array words; Hadamard vectors stream on the wavelengths; the
+//!   bit-line accumulation computes `Σ_e x_e · y_e[r]` per wavelength r —
+//!   i.e. `A_i += x · (B_j ∘ C_k)` summed over a whole fiber at once.
+//!
+//! These functions operate on already-quantized int8 operands (the
+//! quantization scales live at the pipeline layer).  They are semantic
+//! ground truth for the mapping; the tiled [`super::pipeline`] is the
+//! throughput path.
+
+use crate::compute::{ComputeEngine, InterleavePattern};
+use crate::psram::PsramArray;
+use crate::util::error::{Error, Result};
+use crate::util::fixed::encode_offset;
+
+/// CP1: Hadamard product of two quantized factor rows via wavelength
+/// interleaving.  `b` is stored (one element per wordline, column 0);
+/// `c` streams diagonally (lane r active on wordline r).
+///
+/// Returns `out[r] = b[r] * c[r]` for `r < b.len()`.
+pub fn cp1_hadamard(
+    engine: &mut ComputeEngine,
+    array: &mut PsramArray,
+    b: &[i8],
+    c: &[i8],
+) -> Result<Vec<i32>> {
+    if b.len() != c.len() {
+        return Err(Error::shape(format!(
+            "CP1 rows of different lengths: {} vs {}",
+            b.len(),
+            c.len()
+        )));
+    }
+    let geom = array.geometry();
+    let r = b.len();
+    if r > geom.rows {
+        return Err(Error::shape(format!(
+            "CP1 rank {r} exceeds array rows {}",
+            geom.rows
+        )));
+    }
+    // Store b down column 0, one element per wordline.
+    let wpr = geom.words_per_row();
+    let mut image = vec![0i8; r * wpr];
+    for (row, &bv) in b.iter().enumerate() {
+        image[row * wpr] = bv;
+    }
+    array.write_image_padded(&image, r)?;
+
+    // Stream c with the diagonal interleave (Fig. 3's colour pattern).
+    let pattern = InterleavePattern::diagonal(
+        &c.iter().map(|&v| v as i32).collect::<Vec<_>>(),
+        geom.rows,
+    )?;
+    debug_assert!(pattern.is_interleaved());
+    let out = engine.compute_cycle(array, &pattern.render(), pattern.lanes())?;
+    // Column 0 of each lane is the product.
+    Ok((0..r).map(|m| out[m * wpr]).collect())
+}
+
+/// CP2 + CP3: scale Hadamard vectors by tensor elements and accumulate.
+///
+/// `x[e]` are the quantized tensor elements of one output fiber (stored in
+/// the array, one per wordline in column 0); `y` is row-major
+/// `[x.len()][rank]` — `y[e]` is the Hadamard vector for element `e`,
+/// streamed so lane `r` carries `y[e][r]` on wordline `e`.  `acc[r]`
+/// receives `Σ_e x[e] * y[e][r]` (CP3's running accumulation into the
+/// output factor row happens in the caller's integer accumulator).
+pub fn cp23_scale_accumulate(
+    engine: &mut ComputeEngine,
+    array: &mut PsramArray,
+    x: &[i8],
+    y: &[i8],
+    rank: usize,
+    acc: &mut [i64],
+) -> Result<()> {
+    let geom = array.geometry();
+    let e_cnt = x.len();
+    if e_cnt > geom.rows {
+        return Err(Error::shape(format!(
+            "CP2/3 fiber of {e_cnt} elements exceeds array rows {}",
+            geom.rows
+        )));
+    }
+    if y.len() != e_cnt * rank {
+        return Err(Error::shape(format!(
+            "CP2/3 y has {} values, want {}",
+            y.len(),
+            e_cnt * rank
+        )));
+    }
+    if acc.len() != rank {
+        return Err(Error::shape("CP2/3 accumulator length != rank".to_string()));
+    }
+    engine.params().validate(rank)?;
+
+    // Store the tensor elements (Fig. 4: x_i in the pSRAM words).
+    let wpr = geom.words_per_row();
+    let mut image = vec![0i8; e_cnt * wpr];
+    for (row, &xv) in x.iter().enumerate() {
+        image[row * wpr] = xv;
+    }
+    array.write_image_padded(&image, e_cnt)?;
+
+    // Input block: lane r carries y[e][r] on wordline e.
+    let mut u = vec![encode_offset(0); rank * geom.rows];
+    for e in 0..e_cnt {
+        for r in 0..rank {
+            u[r * geom.rows + e] = encode_offset(y[e * rank + r] as i32);
+        }
+    }
+    let out = engine.compute_cycle(array, &u, rank)?;
+    for r in 0..rank {
+        acc[r] += out[r * wpr] as i64;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cp1_matches_elementwise_product() {
+        let mut eng = ComputeEngine::ideal();
+        let mut array = PsramArray::paper();
+        let b: Vec<i8> = vec![3, -5, 7, 127, -128, 0, 11, -1];
+        let c: Vec<i8> = vec![2, 4, -6, 1, 1, 99, -11, -1];
+        let out = cp1_hadamard(&mut eng, &mut array, &b, &c).unwrap();
+        let want: Vec<i32> = b.iter().zip(&c).map(|(&x, &y)| x as i32 * y as i32).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn cp1_full_rank_52() {
+        let mut eng = ComputeEngine::ideal();
+        let mut array = PsramArray::paper();
+        let b: Vec<i8> = (0..52).map(|i| (i * 3 - 77) as i8).collect();
+        let c: Vec<i8> = (0..52).map(|i| (100 - i * 4) as i8).collect();
+        let out = cp1_hadamard(&mut eng, &mut array, &b, &c).unwrap();
+        for r in 0..52 {
+            assert_eq!(out[r], b[r] as i32 * c[r] as i32);
+        }
+    }
+
+    #[test]
+    fn cp1_shape_errors() {
+        let mut eng = ComputeEngine::ideal();
+        let mut array = PsramArray::paper();
+        assert!(cp1_hadamard(&mut eng, &mut array, &[1, 2], &[1]).is_err());
+        let too_long = vec![1i8; 257];
+        assert!(cp1_hadamard(&mut eng, &mut array, &too_long, &too_long).is_err());
+    }
+
+    #[test]
+    fn cp23_accumulates_fiber_contraction() {
+        // A fiber of 5 tensor elements against rank-4 Hadamard vectors:
+        // acc[r] = sum_e x[e] * y[e][r].
+        let mut eng = ComputeEngine::ideal();
+        let mut array = PsramArray::paper();
+        let x: Vec<i8> = vec![10, -20, 3, 0, 7];
+        let rank = 4;
+        let y: Vec<i8> = (0..x.len() * rank).map(|i| (i as i32 * 7 % 251 - 125) as i8).collect();
+        let mut acc = vec![0i64; rank];
+        cp23_scale_accumulate(&mut eng, &mut array, &x, &y, rank, &mut acc).unwrap();
+        for r in 0..rank {
+            let want: i64 = x
+                .iter()
+                .enumerate()
+                .map(|(e, &xv)| xv as i64 * y[e * rank + r] as i64)
+                .sum();
+            assert_eq!(acc[r], want, "rank {r}");
+        }
+    }
+
+    #[test]
+    fn cp23_accumulates_across_calls() {
+        // CP3: repeated calls add into the same accumulator.
+        let mut eng = ComputeEngine::ideal();
+        let mut array = PsramArray::paper();
+        let mut acc = vec![0i64; 2];
+        cp23_scale_accumulate(&mut eng, &mut array, &[2], &[3, 4], 2, &mut acc).unwrap();
+        cp23_scale_accumulate(&mut eng, &mut array, &[5], &[-1, 10], 2, &mut acc).unwrap();
+        assert_eq!(acc, vec![2 * 3 - 5, 2 * 4 + 50]);
+    }
+
+    #[test]
+    fn cp23_shape_errors() {
+        let mut eng = ComputeEngine::ideal();
+        let mut array = PsramArray::paper();
+        let mut acc = vec![0i64; 2];
+        // wrong y length
+        assert!(
+            cp23_scale_accumulate(&mut eng, &mut array, &[1, 2], &[1, 2, 3], 2, &mut acc)
+                .is_err()
+        );
+        // wrong acc length
+        assert!(
+            cp23_scale_accumulate(&mut eng, &mut array, &[1], &[1, 2], 2, &mut [0i64; 1])
+                .is_err()
+        );
+        // rank beyond wavelength budget
+        let x = vec![1i8; 1];
+        let y = vec![1i8; 60];
+        let mut acc60 = vec![0i64; 60];
+        assert!(
+            cp23_scale_accumulate(&mut eng, &mut array, &x, &y, 60, &mut acc60).is_err()
+        );
+    }
+
+    #[test]
+    fn cp1_charges_write_and_compute_cycles() {
+        let mut eng = ComputeEngine::ideal();
+        let mut array = PsramArray::paper();
+        cp1_hadamard(&mut eng, &mut array, &[1, 2, 3], &[4, 5, 6]).unwrap();
+        assert_eq!(array.cycles.write, 256); // full image write (padded)
+        assert_eq!(array.cycles.compute, 1);
+    }
+}

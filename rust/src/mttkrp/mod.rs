@@ -1,0 +1,27 @@
+//! MTTKRP: reference implementations, the paper's computational primitives
+//! (CP1/CP2/CP3, §IV), and the tiled pSRAM execution pipeline.
+//!
+//! * [`mod@reference`] — exact f32 CPU MTTKRP for dense and COO tensors (the
+//!   digital baseline every other path is validated against).
+//! * [`mapping`] — the paper-literal primitives: CP1 Hadamard products via
+//!   wavelength interleaving (Fig. 3), CP2/CP3 scale-and-accumulate with
+//!   tensor elements stored in the array (Fig. 4).
+//! * [`pipeline`] — the high-utilisation tiled schedule used for full
+//!   MTTKRPs: the Khatri-Rao block (the *reused* operand) is stored as the
+//!   array image and tensor rows stream over wavelength lanes, so one
+//!   reconfiguration (`rows` write cycles) is amortised over `ceil(I/lanes)`
+//!   compute cycles.  DESIGN.md §5 explains why this is the only mapping
+//!   that sustains the paper's headline throughput.
+//!
+//! All pSRAM paths run through the [`pipeline::TileExecutor`] abstraction so
+//! the same schedule can execute on the analog simulator, a pure-CPU
+//! integer reference, or the AOT-compiled Pallas kernel via PJRT.
+
+pub mod mapping;
+pub mod pipeline;
+pub mod reference;
+pub mod sparse_pipeline;
+
+pub use pipeline::{CpuTileExecutor, MttkrpStats, PsramPipeline, TileExecutor};
+pub use reference::{dense_mttkrp, sparse_mttkrp};
+pub use sparse_pipeline::{SparsePsramBackend, SparsePsramPipeline};

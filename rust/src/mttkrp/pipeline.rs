@@ -1,0 +1,475 @@
+//! The tiled pSRAM MTTKRP pipeline — the throughput path.
+//!
+//! `MTTKRP(mode) = X_(mode) [I, K] @ KRP [K, R]` is tiled as:
+//!
+//! * **K blocks** of `rows` (256) contraction indices — one array image per
+//!   (K block, R block);
+//! * **R blocks** of `words_per_row` (32) rank columns;
+//! * **lane batches** of up to `channels` (52) output rows of `X_(mode)`
+//!   streamed per compute cycle.
+//!
+//! The Khatri-Rao block is the *stored* operand because it is reused by
+//! every output row: one reconfiguration (256 write cycles) is amortised
+//! over `ceil(I / lanes)` compute cycles, which is what lets sustained
+//! throughput approach peak (DESIGN.md §5).
+//!
+//! Quantization: the X tile is quantized per (lane-batch, K-block) and the
+//! KRP image per (K-block, R-block), both symmetric int8; integer tile
+//! results are dequantized with the product of scales and accumulated in
+//! f32 — mirroring `python/compile/model.py` exactly, so the analog
+//! simulator, the CPU integer executor and the PJRT-executed Pallas kernel
+//! produce *identical* f32 outputs.
+
+use crate::compute::ComputeEngine;
+use crate::psram::{CycleLedger, EnergyLedger, PsramArray};
+use crate::tensor::{krp_all_but, DenseTensor, Matrix};
+use crate::util::error::{Error, Result};
+use crate::util::fixed::{encode_offset, quant_matmul_i32, quantize_encode_into, quantize_sym};
+
+/// Executes one quantized array tile: `out[lanes][wpr] = (u-128) @ image`.
+///
+/// Implementations: the analog simulator ([`AnalogTileExecutor`]), a pure
+/// CPU integer reference ([`CpuTileExecutor`]), and the PJRT runtime
+/// (`runtime::PjrtTileExecutor`).
+pub trait TileExecutor {
+    /// Array rows (contraction block size).
+    fn rows(&self) -> usize;
+    /// Word columns per row (rank block size).
+    fn words_per_row(&self) -> usize;
+    /// Maximum wavelength lanes per compute cycle.
+    fn max_lanes(&self) -> usize;
+
+    /// Load a new array image (row-major `[rows][words_per_row]`, already
+    /// padded).  Charged as a reconfiguration.
+    fn load_image(&mut self, image: &[i8]) -> Result<()>;
+
+    /// One compute cycle against the loaded image: `u` is row-major
+    /// `[lanes][rows]` offset-binary codes; returns `[lanes][words_per_row]`
+    /// i32 results.
+    fn compute(&mut self, u: &[u8], lanes: usize) -> Result<Vec<i32>>;
+
+    /// Cycle ledger snapshot (compute/write/idle) for utilisation metrics.
+    fn cycles(&self) -> CycleLedger;
+
+    /// Energy ledger snapshot, if the executor models energy.
+    fn energy(&self) -> Option<EnergyLedger> {
+        None
+    }
+}
+
+/// The analog-simulator executor: a [`ComputeEngine`] bound to one
+/// [`PsramArray`].
+pub struct AnalogTileExecutor {
+    pub engine: ComputeEngine,
+    pub array: PsramArray,
+}
+
+impl AnalogTileExecutor {
+    /// Paper-default array with a bit-exact engine.
+    pub fn ideal() -> Self {
+        AnalogTileExecutor { engine: ComputeEngine::ideal(), array: PsramArray::paper() }
+    }
+
+    /// Custom engine/array.
+    pub fn new(engine: ComputeEngine, array: PsramArray) -> Self {
+        AnalogTileExecutor { engine, array }
+    }
+}
+
+impl TileExecutor for AnalogTileExecutor {
+    fn rows(&self) -> usize {
+        self.array.geometry().rows
+    }
+
+    fn words_per_row(&self) -> usize {
+        self.array.geometry().words_per_row()
+    }
+
+    fn max_lanes(&self) -> usize {
+        self.engine.params().comb.max_channels()
+    }
+
+    fn load_image(&mut self, image: &[i8]) -> Result<()> {
+        self.array.write_image(image)
+    }
+
+    fn compute(&mut self, u: &[u8], lanes: usize) -> Result<Vec<i32>> {
+        self.engine.compute_cycle(&mut self.array, u, lanes)
+    }
+
+    fn cycles(&self) -> CycleLedger {
+        self.array.cycles
+    }
+
+    fn energy(&self) -> Option<EnergyLedger> {
+        Some(self.array.energy)
+    }
+}
+
+/// Pure-CPU integer executor with the same tile semantics (used for
+/// cross-checks and as the fast digital baseline).  Cycle accounting
+/// follows the same rules as the analog array (1 write cycle per row,
+/// 1 compute cycle per call).
+pub struct CpuTileExecutor {
+    rows: usize,
+    wpr: usize,
+    max_lanes: usize,
+    /// Sign-extended image (perf: i32 inner loop; EXPERIMENTS.md §Perf).
+    image: Vec<i32>,
+    ledger: CycleLedger,
+}
+
+impl CpuTileExecutor {
+    /// Executor with the paper's tile geometry (256 rows × 32 words × 52 λ).
+    pub fn paper() -> Self {
+        CpuTileExecutor::new(256, 32, 52)
+    }
+
+    /// Custom geometry.
+    pub fn new(rows: usize, wpr: usize, max_lanes: usize) -> Self {
+        CpuTileExecutor {
+            rows,
+            wpr,
+            max_lanes,
+            image: vec![0i32; rows * wpr],
+            ledger: CycleLedger::default(),
+        }
+    }
+}
+
+impl TileExecutor for CpuTileExecutor {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+
+    fn words_per_row(&self) -> usize {
+        self.wpr
+    }
+
+    fn max_lanes(&self) -> usize {
+        self.max_lanes
+    }
+
+    fn load_image(&mut self, image: &[i8]) -> Result<()> {
+        if image.len() != self.rows * self.wpr {
+            return Err(Error::shape(format!(
+                "image of {} words for {}x{} executor",
+                image.len(),
+                self.rows,
+                self.wpr
+            )));
+        }
+        for (dst, &src) in self.image.iter_mut().zip(image) {
+            *dst = src as i32;
+        }
+        self.ledger.write += self.rows as u64;
+        Ok(())
+    }
+
+    fn compute(&mut self, u: &[u8], lanes: usize) -> Result<Vec<i32>> {
+        if lanes == 0 || lanes > self.max_lanes {
+            return Err(Error::shape(format!("lanes {lanes} out of range")));
+        }
+        if u.len() != lanes * self.rows {
+            return Err(Error::shape("input block size mismatch".to_string()));
+        }
+        self.ledger.compute += 1;
+        Ok(quant_matmul_i32(u, &self.image, lanes, self.rows, self.wpr))
+    }
+
+    fn cycles(&self) -> CycleLedger {
+        self.ledger
+    }
+}
+
+/// Statistics of one pipelined MTTKRP execution.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MttkrpStats {
+    /// Array images written (reconfigurations).
+    pub images: u64,
+    /// Compute cycles issued.
+    pub compute_cycles: u64,
+    /// Write cycles issued.
+    pub write_cycles: u64,
+    /// Useful MACs (excludes padding).
+    pub useful_macs: u64,
+    /// Raw MACs including padding (rows × wpr × lanes per cycle).
+    pub raw_macs: u64,
+}
+
+impl MttkrpStats {
+    /// Utilisation as the model defines it: compute / (compute + write).
+    pub fn utilization(&self) -> f64 {
+        let t = self.compute_cycles + self.write_cycles;
+        if t == 0 {
+            0.0
+        } else {
+            self.compute_cycles as f64 / t as f64
+        }
+    }
+
+    /// Fraction of raw MACs that were useful (padding efficiency).
+    pub fn padding_efficiency(&self) -> f64 {
+        if self.raw_macs == 0 {
+            0.0
+        } else {
+            self.useful_macs as f64 / self.raw_macs as f64
+        }
+    }
+}
+
+/// The tiled MTTKRP pipeline over any [`TileExecutor`].
+pub struct PsramPipeline<'a, E: TileExecutor> {
+    exec: &'a mut E,
+    pub stats: MttkrpStats,
+}
+
+impl<'a, E: TileExecutor> PsramPipeline<'a, E> {
+    /// Wrap an executor.
+    pub fn new(exec: &'a mut E) -> Self {
+        PsramPipeline { exec, stats: MttkrpStats::default() }
+    }
+
+    /// Quantized MTTKRP of a dense tensor along `mode`.
+    ///
+    /// Returns the f32 result (quantization error w.r.t. the exact MTTKRP
+    /// is bounded by the int8 scales; see `python/tests/test_model.py` for
+    /// the error-bound derivation shared with the Pallas kernel).
+    pub fn mttkrp(
+        &mut self,
+        x: &DenseTensor,
+        factors: &[Matrix],
+        mode: usize,
+    ) -> Result<Matrix> {
+        let unf = x.unfold(mode)?;
+        let krp = krp_all_but(factors, mode)?;
+        self.mttkrp_unfolded(&unf, &krp)
+    }
+
+    /// Quantized `unf [I, K] @ krp [K, R]` through the array schedule.
+    pub fn mttkrp_unfolded(&mut self, unf: &Matrix, krp: &Matrix) -> Result<Matrix> {
+        if unf.cols() != krp.rows() {
+            return Err(Error::shape(format!(
+                "unfolded {}x{} against KRP {}x{}",
+                unf.rows(),
+                unf.cols(),
+                krp.rows(),
+                krp.cols()
+            )));
+        }
+        let (i_dim, k_dim, r_dim) = (unf.rows(), unf.cols(), krp.cols());
+        let rows = self.exec.rows();
+        let wpr = self.exec.words_per_row();
+        let lanes_max = self.exec.max_lanes();
+
+        let mut out = Matrix::zeros(i_dim, r_dim);
+
+        // Perf (EXPERIMENTS.md §Perf): the quantized X lane batches depend
+        // only on (K block, lane batch), so they are computed once and
+        // reused across every R block instead of being re-quantized
+        // per image.  Cache layout: [kb][ib] -> (codes, per-lane scales).
+        let k_blocks = k_dim.div_ceil(rows);
+        let i_batches = i_dim.div_ceil(lanes_max);
+        let mut u_cache: Vec<Option<(Vec<u8>, Vec<f32>)>> =
+            Vec::with_capacity(k_blocks * i_batches);
+        u_cache.resize_with(k_blocks * i_batches, || None);
+
+        // R blocks (outer) then K blocks: each (rb, kb) is one array image,
+        // streamed against every lane batch of output rows.
+        for rb in 0..r_dim.div_ceil(wpr) {
+            let r0 = rb * wpr;
+            let r_cnt = wpr.min(r_dim - r0);
+            for kb in 0..k_dim.div_ceil(rows) {
+                let k0 = kb * rows;
+                let k_cnt = rows.min(k_dim - k0);
+
+                // Build + quantize the KRP image [rows][wpr], zero padded.
+                // Quantization is per word COLUMN (each bit-line's output
+                // has its own digital scale — hardware-plausible and much
+                // more accurate than a per-image scalar).
+                let mut image = vec![0i8; rows * wpr];
+                let mut w_scales = vec![1f32; r_cnt];
+                let mut col = vec![0f32; k_cnt];
+                for r in 0..r_cnt {
+                    for k in 0..k_cnt {
+                        col[k] = krp.get(k0 + k, r0 + r);
+                    }
+                    let (cq, cs) = quantize_sym(&col, 8);
+                    w_scales[r] = cs;
+                    for k in 0..k_cnt {
+                        image[k * wpr + r] = cq[k] as i8;
+                    }
+                }
+                self.exec.load_image(&image)?;
+                self.stats.images += 1;
+                self.stats.write_cycles += rows as u64;
+
+                // Stream lane batches of output rows.
+                for ib in 0..i_dim.div_ceil(lanes_max) {
+                    let i0 = ib * lanes_max;
+                    let lane_cnt = lanes_max.min(i_dim - i0);
+
+                    // Quantize the X tile per LANE (each wavelength's input
+                    // DAC has its own scale), cached across R blocks.
+                    let slot = kb * i_batches + ib;
+                    if u_cache[slot].is_none() {
+                        let mut u = vec![encode_offset(0); lane_cnt * rows];
+                        let mut x_scales = vec![1f32; lane_cnt];
+                        for m in 0..lane_cnt {
+                            let xr = &unf.row(i0 + m)[k0..k0 + k_cnt];
+                            x_scales[m] = quantize_encode_into(
+                                xr,
+                                &mut u[m * rows..m * rows + k_cnt],
+                            );
+                        }
+                        u_cache[slot] = Some((u, x_scales));
+                    }
+                    let (u, x_scales) = u_cache[slot].as_ref().unwrap();
+
+                    let tile = self.exec.compute(u, lane_cnt)?;
+                    self.stats.compute_cycles += 1;
+                    self.stats.raw_macs += (rows * wpr * lane_cnt) as u64;
+                    self.stats.useful_macs += (k_cnt * r_cnt * lane_cnt) as u64;
+
+                    // Dequantize and accumulate with per-lane × per-column
+                    // scales.
+                    for m in 0..lane_cnt {
+                        let orow = out.row_mut(i0 + m);
+                        for r in 0..r_cnt {
+                            orow[r0 + r] +=
+                                tile[m * wpr + r] as f32 * (x_scales[m] * w_scales[r]);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mttkrp::reference::dense_mttkrp;
+    use crate::util::prng::Prng;
+
+    fn rand_problem(seed: u64, shape: &[usize], r: usize) -> (DenseTensor, Vec<Matrix>) {
+        let mut rng = Prng::new(seed);
+        let x = DenseTensor::randn(shape, &mut rng);
+        let factors = shape.iter().map(|&d| Matrix::randn(d, r, &mut rng)).collect();
+        (x, factors)
+    }
+
+    /// Quantized pipeline result must approximate the exact MTTKRP within
+    /// the analytically-derived int8 error bound.
+    fn assert_quant_close(exact: &Matrix, approx: &Matrix, unf: &Matrix, krp: &Matrix) {
+        // per-tile bound: K * (sx*|w|max/2 + sw*|x|max/2 + sx*sw/4); use a
+        // conservative global version with the worst tile magnitudes.
+        let k = unf.cols() as f32;
+        let xmax = unf.max_abs();
+        let wmax = krp.max_abs();
+        let sx = xmax / 127.0;
+        let sw = wmax / 127.0;
+        let bound = k * (sx * wmax / 2.0 + sw * xmax / 2.0 + sx * sw / 4.0);
+        for (e, a) in exact.data().iter().zip(approx.data()) {
+            assert!(
+                (e - a).abs() <= bound.max(1e-4),
+                "exact {e} vs quantized {a} (bound {bound})"
+            );
+        }
+    }
+
+    #[test]
+    fn cpu_executor_matches_reference_small() {
+        let (x, factors) = rand_problem(1, &[20, 9, 8], 5);
+        let mut exec = CpuTileExecutor::paper();
+        let mut pipe = PsramPipeline::new(&mut exec);
+        let approx = pipe.mttkrp(&x, &factors, 0).unwrap();
+        let exact = dense_mttkrp(&x, &factors, 0).unwrap();
+        let unf = x.unfold(0).unwrap();
+        let krp = krp_all_but(&factors, 0).unwrap();
+        assert_quant_close(&exact, &approx, &unf, &krp);
+    }
+
+    #[test]
+    fn analog_executor_bit_identical_to_cpu_executor() {
+        let (x, factors) = rand_problem(2, &[30, 11, 7], 6);
+        let mut cpu = CpuTileExecutor::paper();
+        let mut analog = AnalogTileExecutor::ideal();
+        let a = PsramPipeline::new(&mut cpu).mttkrp(&x, &factors, 1).unwrap();
+        let b = PsramPipeline::new(&mut analog).mttkrp(&x, &factors, 1).unwrap();
+        assert_eq!(a.data(), b.data(), "analog and CPU integer paths must agree bit-exactly");
+    }
+
+    #[test]
+    fn multi_block_problem_exercises_all_tiling_axes() {
+        // K = 9*60 = 540 > 256 (2 K-blocks), R = 40 > 32 (2 R-blocks),
+        // I = 120 > 52 (3 lane batches).
+        let (x, factors) = rand_problem(3, &[120, 9, 60], 40);
+        let mut exec = CpuTileExecutor::paper();
+        let mut pipe = PsramPipeline::new(&mut exec);
+        let approx = pipe.mttkrp(&x, &factors, 0).unwrap();
+        assert_eq!(pipe.stats.images, 2 * 3); // 2 R-blocks x 3 K-blocks
+        let exact = dense_mttkrp(&x, &factors, 0).unwrap();
+        let unf = x.unfold(0).unwrap();
+        let krp = krp_all_but(&factors, 0).unwrap();
+        assert_quant_close(&exact, &approx, &unf, &krp);
+    }
+
+    #[test]
+    fn stats_and_utilization_accounting() {
+        let (x, factors) = rand_problem(4, &[104, 16, 16], 16);
+        let mut exec = CpuTileExecutor::paper();
+        let mut pipe = PsramPipeline::new(&mut exec);
+        pipe.mttkrp(&x, &factors, 0).unwrap();
+        // K = 256 exactly one block, R = 16 one block, I = 104 -> 2 batches.
+        assert_eq!(pipe.stats.images, 1);
+        assert_eq!(pipe.stats.compute_cycles, 2);
+        assert_eq!(pipe.stats.write_cycles, 256);
+        let u = pipe.stats.utilization();
+        assert!((u - 2.0 / 258.0).abs() < 1e-12, "u={u}");
+        // useful fraction: K=256 full, R=16 of 32, lanes 104 of 104
+        assert!(pipe.stats.padding_efficiency() <= 0.5 + 1e-9);
+    }
+
+    #[test]
+    fn utilization_grows_with_output_rows() {
+        // Same K/R, more output rows -> more compute per image -> higher U.
+        // K = 4*4 = 16 keeps each cycle cheap; one image costs 256 write
+        // cycles, so I = 52*1000 output rows -> 1000 compute cycles ->
+        // U = 1000/1256 ≈ 0.80 (amortisation at work).
+        let (x1, f1) = rand_problem(5, &[52, 4, 4], 8);
+        let (x2, f2) = rand_problem(5, &[52 * 1000, 4, 4], 8);
+        let mut e1 = CpuTileExecutor::paper();
+        let mut p1 = PsramPipeline::new(&mut e1);
+        p1.mttkrp(&x1, &f1, 0).unwrap();
+        let mut e2 = CpuTileExecutor::paper();
+        let mut p2 = PsramPipeline::new(&mut e2);
+        p2.mttkrp(&x2, &f2, 0).unwrap();
+        assert!(p2.stats.utilization() > p1.stats.utilization());
+        assert!(p2.stats.utilization() > 0.75, "u={}", p2.stats.utilization());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let mut exec = CpuTileExecutor::paper();
+        let mut pipe = PsramPipeline::new(&mut exec);
+        let unf = Matrix::zeros(4, 10);
+        let krp = Matrix::zeros(11, 3);
+        assert!(pipe.mttkrp_unfolded(&unf, &krp).is_err());
+    }
+
+    #[test]
+    fn all_modes_of_a_3mode_tensor() {
+        let (x, factors) = rand_problem(6, &[14, 13, 12], 4);
+        for mode in 0..3 {
+            let mut exec = CpuTileExecutor::paper();
+            let mut pipe = PsramPipeline::new(&mut exec);
+            let approx = pipe.mttkrp(&x, &factors, mode).unwrap();
+            let exact = dense_mttkrp(&x, &factors, mode).unwrap();
+            let unf = x.unfold(mode).unwrap();
+            let krp = krp_all_but(&factors, mode).unwrap();
+            assert_quant_close(&exact, &approx, &unf, &krp);
+        }
+    }
+}

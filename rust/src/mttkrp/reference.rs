@@ -1,0 +1,202 @@
+//! Exact f32 CPU MTTKRP references (dense + sparse COO), any mode, any
+//! number of modes.  These are the ground truth for every accelerated path.
+
+use crate::tensor::{CooTensor, DenseTensor, Matrix};
+use crate::util::error::{Error, Result};
+
+fn check_factors(shape: &[usize], factors: &[Matrix], mode: usize) -> Result<usize> {
+    if factors.len() != shape.len() {
+        return Err(Error::shape(format!(
+            "{} factors for {}-mode tensor",
+            factors.len(),
+            shape.len()
+        )));
+    }
+    if mode >= shape.len() {
+        return Err(Error::shape(format!("mode {mode} out of range")));
+    }
+    let r = factors[0].cols();
+    for (m, f) in factors.iter().enumerate() {
+        if f.cols() != r {
+            return Err(Error::shape(format!("factor {m} rank {} != {r}", f.cols())));
+        }
+        if f.rows() != shape[m] {
+            return Err(Error::shape(format!(
+                "factor {m} has {} rows, mode dim is {}",
+                f.rows(),
+                shape[m]
+            )));
+        }
+    }
+    Ok(r)
+}
+
+/// Dense MTTKRP along `mode`:
+/// `A[i_mode, r] = Σ_{other idx} X[idx] * Π_{m != mode} F_m[idx_m, r]`.
+pub fn dense_mttkrp(x: &DenseTensor, factors: &[Matrix], mode: usize) -> Result<Matrix> {
+    let r = check_factors(x.shape(), factors, mode)?;
+    let nd = x.ndim();
+    let mut out = Matrix::zeros(x.shape()[mode], r);
+    let mut idx = vec![0usize; nd];
+    let mut prod = vec![0f32; r];
+    for flat in 0..x.len() {
+        let v = x.data()[flat];
+        if v != 0.0 {
+            prod.iter_mut().for_each(|p| *p = v);
+            for (m, &im) in idx.iter().enumerate() {
+                if m == mode {
+                    continue;
+                }
+                let frow = factors[m].row(im);
+                for (p, &f) in prod.iter_mut().zip(frow) {
+                    *p *= f;
+                }
+            }
+            let orow = out.row_mut(idx[mode]);
+            for (o, &p) in orow.iter_mut().zip(&prod) {
+                *o += p;
+            }
+        }
+        for m in (0..nd).rev() {
+            idx[m] += 1;
+            if idx[m] < x.shape()[m] {
+                break;
+            }
+            idx[m] = 0;
+        }
+    }
+    Ok(out)
+}
+
+/// Sparse (COO) MTTKRP along `mode` — one fused pass over the nonzeros.
+pub fn sparse_mttkrp(x: &CooTensor, factors: &[Matrix], mode: usize) -> Result<Matrix> {
+    let r = check_factors(x.shape(), factors, mode)?;
+    let mut out = Matrix::zeros(x.shape()[mode], r);
+    let mut prod = vec![0f32; r];
+    for (idx, v) in x.iter() {
+        prod.iter_mut().for_each(|p| *p = v);
+        for (m, &im) in idx.iter().enumerate() {
+            if m == mode {
+                continue;
+            }
+            let frow = factors[m].row(im as usize);
+            for (p, &f) in prod.iter_mut().zip(frow) {
+                *p *= f;
+            }
+        }
+        let orow = out.row_mut(idx[mode] as usize);
+        for (o, &p) in orow.iter_mut().zip(&prod) {
+            *o += p;
+        }
+    }
+    Ok(out)
+}
+
+/// MTTKRP via explicit unfolding and Khatri-Rao — the matmul identity
+/// (used by tests and by the pSRAM pipeline's operand preparation).
+pub fn unfolded_mttkrp(x: &DenseTensor, factors: &[Matrix], mode: usize) -> Result<Matrix> {
+    check_factors(x.shape(), factors, mode)?;
+    let unf = x.unfold(mode)?;
+    let krp = crate::tensor::krp_all_but(factors, mode)?;
+    unf.matmul(&krp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn rand_problem(
+        seed: u64,
+        shape: &[usize],
+        r: usize,
+    ) -> (DenseTensor, Vec<Matrix>) {
+        let mut rng = Prng::new(seed);
+        let x = DenseTensor::randn(shape, &mut rng);
+        let factors = shape.iter().map(|&d| Matrix::randn(d, r, &mut rng)).collect();
+        (x, factors)
+    }
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f32) {
+        assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() <= tol, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn dense_equals_unfolded_all_modes() {
+        let (x, factors) = rand_problem(1, &[6, 5, 4], 3);
+        for mode in 0..3 {
+            let a = dense_mttkrp(&x, &factors, mode).unwrap();
+            let b = unfolded_mttkrp(&x, &factors, mode).unwrap();
+            assert_close(&a, &b, 1e-3);
+        }
+    }
+
+    #[test]
+    fn four_mode_tensor_works() {
+        let (x, factors) = rand_problem(2, &[3, 4, 2, 5], 2);
+        for mode in 0..4 {
+            let a = dense_mttkrp(&x, &factors, mode).unwrap();
+            let b = unfolded_mttkrp(&x, &factors, mode).unwrap();
+            assert_close(&a, &b, 1e-3);
+        }
+    }
+
+    #[test]
+    fn sparse_matches_dense_on_sparsified() {
+        let mut rng = Prng::new(3);
+        let x = DenseTensor::randn(&[8, 7, 6], &mut rng);
+        let coo = CooTensor::from_dense(&x, 0.8); // keep ~45% of entries
+        let dense_of_coo = coo.to_dense();
+        let factors: Vec<Matrix> =
+            [8, 7, 6].iter().map(|&d| Matrix::randn(d, 4, &mut rng)).collect();
+        for mode in 0..3 {
+            let a = sparse_mttkrp(&coo, &factors, mode).unwrap();
+            let b = dense_mttkrp(&dense_of_coo, &factors, mode).unwrap();
+            assert_close(&a, &b, 1e-3);
+        }
+    }
+
+    #[test]
+    fn empty_sparse_gives_zero() {
+        let coo = CooTensor::new(&[3, 3, 3]);
+        let factors: Vec<Matrix> = (0..3).map(|_| Matrix::zeros(3, 2)).collect();
+        let out = sparse_mttkrp(&coo, &factors, 0).unwrap();
+        assert!(out.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn shape_validation() {
+        let (x, mut factors) = rand_problem(4, &[3, 3, 3], 2);
+        assert!(dense_mttkrp(&x, &factors[..2], 0).is_err());
+        assert!(dense_mttkrp(&x, &factors, 3).is_err());
+        factors[1] = Matrix::zeros(3, 5); // rank mismatch
+        assert!(dense_mttkrp(&x, &factors, 0).is_err());
+        let (x2, mut f2) = rand_problem(5, &[3, 3, 3], 2);
+        f2[2] = Matrix::zeros(7, 2); // dim mismatch
+        assert!(dense_mttkrp(&x2, &f2, 0).is_err());
+    }
+
+    #[test]
+    fn known_rank1_case() {
+        // X = a ∘ b ∘ c (rank 1): MTTKRP mode-0 with (B=[b], C=[c]) gives
+        // a * (b·b) * (c·c).
+        let a = Matrix::from_vec(2, 1, vec![1.0, 2.0]).unwrap();
+        let b = Matrix::from_vec(3, 1, vec![1.0, 1.0, 2.0]).unwrap();
+        let c = Matrix::from_vec(2, 1, vec![3.0, 1.0]).unwrap();
+        let mut rng = Prng::new(0);
+        let x = DenseTensor::from_cp_factors(
+            &[a.clone(), b.clone(), c.clone()],
+            0.0,
+            &mut rng,
+        )
+        .unwrap();
+        let out = dense_mttkrp(&x, &[a, b, c], 0).unwrap();
+        let bb = 1.0 + 1.0 + 4.0; // 6
+        let cc = 9.0 + 1.0; // 10
+        assert!((out.get(0, 0) - 1.0 * bb * cc).abs() < 1e-3);
+        assert!((out.get(1, 0) - 2.0 * bb * cc).abs() < 1e-3);
+    }
+}

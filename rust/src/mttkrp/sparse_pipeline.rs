@@ -1,0 +1,383 @@
+//! Sparse MTTKRP (spMTTKRP, Algorithm 1 of the paper) on the pSRAM array.
+//!
+//! The crossbar computes a *dense* `u @ w` per cycle, so sparse
+//! contractions must be organised around what can be **stored** (reused)
+//! and what can be **streamed** (arbitrary per lane).  We use the
+//! slice-wise mapping:
+//!
+//! For mode-0 MTTKRP of a 3-mode tensor `A[i,r] = Σ_{j,k} X[i,j,k]·B[j,r]·C[k,r]`:
+//!
+//! * fix a slice `k`; then `A += (X[:,:,k] @ B) ∘ C[k,:]`,
+//! * `B` tiles are **stored** as array images (dense, reused by *every*
+//!   slice and every output row — the reuse that sustains throughput),
+//! * sparse rows of `X[:,:,k]` are **streamed** on wavelength lanes
+//!   (zeros are the offset-binary zero code — the array computes them, so
+//!   the *useful* fraction of raw MACs is exactly the fiber density),
+//! * the `∘ C[k,:]` scaling (CP2) and the accumulation into `A` (CP3)
+//!   happen in the electrical domain, as in Fig. 4.
+//!
+//! Generalised to N modes: "B" is the factor of the first non-output mode
+//! `m1`, the slice key is the linearised index of the remaining modes, and
+//! the electrical scale vector is the Hadamard product of those modes'
+//! factor rows.
+//!
+//! Bit-exactness contract: the same [`TileExecutor`] abstraction executes
+//! the tiles, so the analog simulator, the CPU integer executor and the
+//! PJRT Pallas kernel all produce identical results here too.
+
+use super::pipeline::{MttkrpStats, TileExecutor};
+use crate::tensor::{CooTensor, Matrix};
+use crate::util::error::{Error, Result};
+use crate::util::fixed::{encode_offset, quantize_encode_into, quantize_sym};
+use std::collections::BTreeMap;
+
+/// One streamed sparse row: an output row `i` and its nonzeros within one
+/// (slice, J-block): `(j_local, value)`.
+#[derive(Debug, Clone)]
+struct SparseRow {
+    i: usize,
+    entries: Vec<(usize, f32)>,
+}
+
+/// The sparse pSRAM MTTKRP pipeline over any [`TileExecutor`].
+pub struct SparsePsramPipeline<'a, E: TileExecutor> {
+    exec: &'a mut E,
+    pub stats: MttkrpStats,
+}
+
+impl<'a, E: TileExecutor> SparsePsramPipeline<'a, E> {
+    /// Wrap an executor.
+    pub fn new(exec: &'a mut E) -> Self {
+        SparsePsramPipeline { exec, stats: MttkrpStats::default() }
+    }
+
+    /// Sparse MTTKRP along `mode`.
+    ///
+    /// `factors[m]` must be `[shape[m], R]`; returns `[shape[mode], R]`.
+    pub fn mttkrp(
+        &mut self,
+        x: &CooTensor,
+        factors: &[Matrix],
+        mode: usize,
+    ) -> Result<Matrix> {
+        let shape = x.shape().to_vec();
+        let nd = shape.len();
+        if factors.len() != nd {
+            return Err(Error::shape(format!(
+                "{} factors for {nd}-mode tensor",
+                factors.len()
+            )));
+        }
+        if mode >= nd {
+            return Err(Error::shape(format!("mode {mode} out of range")));
+        }
+        if nd < 2 {
+            return Err(Error::shape("need >= 2 modes".to_string()));
+        }
+        let r_dim = factors[0].cols();
+        for (m, f) in factors.iter().enumerate() {
+            if f.cols() != r_dim || f.rows() != shape[m] {
+                return Err(Error::shape(format!("factor {m} has wrong shape")));
+            }
+        }
+
+        // m1 = first non-output mode: its factor is stored on the array.
+        let m1 = (0..nd).find(|&m| m != mode).expect("nd >= 2");
+        // remaining modes (excluding `mode` and `m1`) define the slice key.
+        let rest: Vec<usize> = (0..nd).filter(|&m| m != mode && m != m1).collect();
+
+        // ---- organise nonzeros: slice key -> output row -> (j, value) ----
+        // BTreeMap for deterministic iteration order (bit-exact results).
+        let mut slices: BTreeMap<usize, BTreeMap<usize, Vec<(usize, f32)>>> =
+            BTreeMap::new();
+        for (idx, v) in x.iter() {
+            let i = idx[mode] as usize;
+            let j = idx[m1] as usize;
+            let mut key = 0usize;
+            for &m in &rest {
+                key = key * shape[m] + idx[m] as usize;
+            }
+            slices.entry(key).or_default().entry(i).or_default().push((j, v));
+        }
+
+        let rows = self.exec.rows();
+        let wpr = self.exec.words_per_row();
+        let lanes_max = self.exec.max_lanes();
+        let j_dim = shape[m1];
+        let b = &factors[m1];
+
+        let mut out = Matrix::zeros(shape[mode], r_dim);
+
+        // ---- image loop: (J-block, R-block) outer so one stored image is
+        //      reused across every slice and lane batch ----
+        for rb in 0..r_dim.div_ceil(wpr) {
+            let r0 = rb * wpr;
+            let r_cnt = wpr.min(r_dim - r0);
+            for jb in 0..j_dim.div_ceil(rows) {
+                let j0 = jb * rows;
+                let j_cnt = rows.min(j_dim - j0);
+
+                // Quantize the B block per word column (same scheme as the
+                // dense pipeline).
+                let mut image = vec![0i8; rows * wpr];
+                let mut w_scales = vec![1f32; r_cnt];
+                let mut col = vec![0f32; j_cnt];
+                for r in 0..r_cnt {
+                    for j in 0..j_cnt {
+                        col[j] = b.get(j0 + j, r0 + r);
+                    }
+                    let (cq, cs) = quantize_sym(&col, 8);
+                    w_scales[r] = cs;
+                    for j in 0..j_cnt {
+                        image[j * wpr + r] = cq[j] as i8;
+                    }
+                }
+                self.exec.load_image(&image)?;
+                self.stats.images += 1;
+                self.stats.write_cycles += rows as u64;
+
+                // ---- stream every slice against this image ----
+                for (&key, by_row) in &slices {
+                    // electrical scale vector for this slice: Hadamard of
+                    // the `rest` factors' rows (f32, per rank column).
+                    let mut scale_vec = vec![1f32; r_cnt];
+                    let mut k = key;
+                    // decode the key back into per-mode indices
+                    for &m in rest.iter().rev() {
+                        let im = k % shape[m];
+                        k /= shape[m];
+                        let frow = factors[m].row(im);
+                        for r in 0..r_cnt {
+                            scale_vec[r] *= frow[r0 + r];
+                        }
+                    }
+
+                    // rows of this slice restricted to the current J block
+                    let mut srows: Vec<SparseRow> = Vec::new();
+                    for (&i, entries) in by_row {
+                        let local: Vec<(usize, f32)> = entries
+                            .iter()
+                            .filter(|(j, _)| (j0..j0 + j_cnt).contains(j))
+                            .map(|&(j, v)| (j - j0, v))
+                            .collect();
+                        if !local.is_empty() {
+                            srows.push(SparseRow { i, entries: local });
+                        }
+                    }
+
+                    // lane batches of sparse rows
+                    for batch in srows.chunks(lanes_max) {
+                        let lane_cnt = batch.len();
+                        let mut u = vec![encode_offset(0); lane_cnt * rows];
+                        let mut x_scales = vec![1f32; lane_cnt];
+                        let mut dense_row = vec![0f32; j_cnt];
+                        let mut nnz_in_batch = 0usize;
+                        for (m, srow) in batch.iter().enumerate() {
+                            dense_row.iter_mut().for_each(|v| *v = 0.0);
+                            for &(jl, v) in &srow.entries {
+                                dense_row[jl] += v; // duplicates sum (COO)
+                            }
+                            nnz_in_batch += srow.entries.len();
+                            x_scales[m] = quantize_encode_into(
+                                &dense_row,
+                                &mut u[m * rows..m * rows + j_cnt],
+                            );
+                        }
+
+                        let tile = self.exec.compute(&u, lane_cnt)?;
+                        self.stats.compute_cycles += 1;
+                        self.stats.raw_macs += (rows * wpr * lane_cnt) as u64;
+                        self.stats.useful_macs += (nnz_in_batch * r_cnt) as u64;
+
+                        // CP2 (∘ scale_vec) + CP3 (accumulate) electrically.
+                        for (m, srow) in batch.iter().enumerate() {
+                            let orow = out.row_mut(srow.i);
+                            for r in 0..r_cnt {
+                                orow[r0 + r] += tile[m * wpr + r] as f32
+                                    * (x_scales[m] * w_scales[r])
+                                    * scale_vec[r];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// CP-ALS backend running sparse MTTKRPs through the pSRAM pipeline.
+pub struct SparsePsramBackend<'a, E: TileExecutor> {
+    pub tensor: &'a CooTensor,
+    pub exec: E,
+    pub stats: MttkrpStats,
+}
+
+impl<'a, E: TileExecutor> SparsePsramBackend<'a, E> {
+    pub fn new(tensor: &'a CooTensor, exec: E) -> Self {
+        SparsePsramBackend { tensor, exec, stats: MttkrpStats::default() }
+    }
+}
+
+impl<E: TileExecutor> crate::cpd::backend::MttkrpBackend for SparsePsramBackend<'_, E> {
+    fn mttkrp(&mut self, factors: &[Matrix], mode: usize) -> Result<Matrix> {
+        let mut pipe = SparsePsramPipeline::new(&mut self.exec);
+        let out = pipe.mttkrp(self.tensor, factors, mode)?;
+        let s = pipe.stats;
+        self.stats.images += s.images;
+        self.stats.compute_cycles += s.compute_cycles;
+        self.stats.write_cycles += s.write_cycles;
+        self.stats.useful_macs += s.useful_macs;
+        self.stats.raw_macs += s.raw_macs;
+        Ok(out)
+    }
+
+    fn shape(&self) -> &[usize] {
+        self.tensor.shape()
+    }
+
+    fn norm_sq(&self) -> f64 {
+        self.tensor.values().iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "psram-sparse"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mttkrp::pipeline::{AnalogTileExecutor, CpuTileExecutor};
+    use crate::mttkrp::reference::sparse_mttkrp;
+    use crate::util::prng::Prng;
+
+    fn rand_sparse(
+        seed: u64,
+        shape: &[usize],
+        nnz: usize,
+        r: usize,
+    ) -> (CooTensor, Vec<Matrix>) {
+        let mut rng = Prng::new(seed);
+        let x = CooTensor::random(shape, nnz, &mut rng);
+        let factors = shape.iter().map(|&d| Matrix::randn(d, r, &mut rng)).collect();
+        (x, factors)
+    }
+
+    fn assert_quant_close(exact: &Matrix, approx: &Matrix, tol_rel: f64) {
+        let norm = exact.fro_norm().max(1e-9);
+        let mut err = 0f64;
+        for (e, a) in exact.data().iter().zip(approx.data()) {
+            err += ((e - a) as f64).powi(2);
+        }
+        let rel = err.sqrt() / norm;
+        assert!(rel < tol_rel, "relative error {rel} > {tol_rel}");
+    }
+
+    #[test]
+    fn sparse_pipeline_matches_reference() {
+        let (x, factors) = rand_sparse(1, &[30, 25, 20], 400, 6);
+        for mode in 0..3 {
+            let mut exec = CpuTileExecutor::paper();
+            let approx = SparsePsramPipeline::new(&mut exec)
+                .mttkrp(&x, &factors, mode)
+                .unwrap();
+            let exact = sparse_mttkrp(&x, &factors, mode).unwrap();
+            assert_quant_close(&exact, &approx, 0.02);
+        }
+    }
+
+    #[test]
+    fn analog_and_cpu_executors_bit_identical_sparse() {
+        let (x, factors) = rand_sparse(2, &[40, 30, 20], 600, 8);
+        let mut cpu = CpuTileExecutor::paper();
+        let a = SparsePsramPipeline::new(&mut cpu).mttkrp(&x, &factors, 0).unwrap();
+        let mut analog = AnalogTileExecutor::ideal();
+        let b = SparsePsramPipeline::new(&mut analog).mttkrp(&x, &factors, 0).unwrap();
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn four_mode_sparse_tensor() {
+        let (x, factors) = rand_sparse(3, &[12, 10, 8, 6], 300, 4);
+        for mode in 0..4 {
+            let mut exec = CpuTileExecutor::paper();
+            let approx = SparsePsramPipeline::new(&mut exec)
+                .mttkrp(&x, &factors, mode)
+                .unwrap();
+            let exact = sparse_mttkrp(&x, &factors, mode).unwrap();
+            assert_quant_close(&exact, &approx, 0.03);
+        }
+    }
+
+    #[test]
+    fn empty_tensor_gives_zero_and_no_compute() {
+        let x = CooTensor::new(&[5, 5, 5]);
+        let factors: Vec<Matrix> = (0..3).map(|_| Matrix::zeros(5, 2)).collect();
+        let mut exec = CpuTileExecutor::paper();
+        let mut pipe = SparsePsramPipeline::new(&mut exec);
+        let out = pipe.mttkrp(&x, &factors, 0).unwrap();
+        assert!(out.data().iter().all(|&v| v == 0.0));
+        assert_eq!(pipe.stats.compute_cycles, 0);
+    }
+
+    #[test]
+    fn duplicate_coordinates_sum() {
+        let mut x = CooTensor::new(&[4, 4, 4]);
+        x.push(&[1, 2, 3], 2.0).unwrap();
+        x.push(&[1, 2, 3], 3.0).unwrap();
+        let mut rng = Prng::new(4);
+        let factors: Vec<Matrix> = (0..3).map(|_| Matrix::randn(4, 2, &mut rng)).collect();
+        let mut exec = CpuTileExecutor::paper();
+        let approx = SparsePsramPipeline::new(&mut exec).mttkrp(&x, &factors, 0).unwrap();
+        let exact = sparse_mttkrp(&x, &factors, 0).unwrap();
+        assert_quant_close(&exact, &approx, 0.02);
+    }
+
+    #[test]
+    fn useful_macs_reflect_density() {
+        let (x, factors) = rand_sparse(5, &[52, 256, 4], 500, 32);
+        let mut exec = CpuTileExecutor::paper();
+        let mut pipe = SparsePsramPipeline::new(&mut exec);
+        pipe.mttkrp(&x, &factors, 0).unwrap();
+        // useful MACs = nnz * R (each nonzero feeds R rank columns)
+        assert_eq!(pipe.stats.useful_macs, x.nnz() as u64 * 32);
+        assert!(pipe.stats.padding_efficiency() < 0.2, "sparse => low raw efficiency");
+    }
+
+    #[test]
+    fn sparse_cp_als_decomposes_sparsified_low_rank() {
+        use crate::cpd::{AlsConfig, CpAls};
+        let mut rng = Prng::new(6);
+        let truth: Vec<Matrix> =
+            [16usize, 14, 12].iter().map(|&d| Matrix::randn(d, 2, &mut rng)).collect();
+        let dense = crate::tensor::DenseTensor::from_cp_factors(&truth, 0.0, &mut rng).unwrap();
+        let coo = CooTensor::from_dense(&dense, 0.0); // fully dense in COO form
+        // best of 3 starts (ALS is init-sensitive)
+        let mut best = 0.0f64;
+        let mut backend = SparsePsramBackend::new(&coo, CpuTileExecutor::paper());
+        for seed in [2u64, 3, 4] {
+            let res = CpAls::new(AlsConfig { rank: 2, max_iters: 30, tol: 1e-7, seed })
+                .run(&mut backend)
+                .unwrap();
+            best = best.max(res.final_fit());
+        }
+        assert!(best > 0.95, "fit={best}");
+        assert!(backend.stats.images > 0);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let (x, factors) = rand_sparse(7, &[5, 5, 5], 10, 2);
+        let mut exec = CpuTileExecutor::paper();
+        let mut pipe = SparsePsramPipeline::new(&mut exec);
+        assert!(pipe.mttkrp(&x, &factors[..2], 0).is_err());
+        assert!(pipe.mttkrp(&x, &factors, 3).is_err());
+        let bad: Vec<Matrix> = vec![
+            Matrix::zeros(5, 2),
+            Matrix::zeros(5, 3), // rank mismatch
+            Matrix::zeros(5, 2),
+        ];
+        assert!(pipe.mttkrp(&x, &bad, 0).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! The paper's predictive performance model (§V): sustained MTTKRP
+//! throughput of a pSRAM array as a function of array geometry, wavelength
+//! channels, operating frequency and workload — plus the sweep drivers that
+//! regenerate Fig. 5 and the 17 PetaOps headline.
+
+pub mod model;
+pub mod roofline;
+pub mod sweep;
+
+pub use model::{PerfEstimate, PerfModel, Workload};
+pub use roofline::{KernelRoofline, TpuLimits};
+pub use sweep::{fig5_frequency, fig5_wavelengths, headline, SweepPoint};

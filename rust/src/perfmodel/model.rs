@@ -1,0 +1,306 @@
+//! The predictive performance model.
+//!
+//! **Peak**: every word multiplies-and-accumulates one operand per
+//! wavelength per cycle (paper §V.B):
+//!
+//! ```text
+//! peak_ops = 2 × total_words × wavelengths × clock_hz
+//!          = 2 × 8192 × 52 × 20 GHz = 17.04 PetaOps   (the headline)
+//! ```
+//!
+//! **Sustained**: the tiled MTTKRP schedule (see `mttkrp::pipeline`)
+//! interleaves reconfiguration writes with compute:
+//!
+//! ```text
+//! images         = ceil(K / rows) × ceil(R / wpr)
+//! compute_cycles = images × ceil(I / wavelengths)
+//! write_cycles   = images × rows × (clock / write_clock)
+//! U              = compute / (compute + write)      (or overlapped)
+//! sustained_raw  = peak × U
+//! sustained_use  = sustained_raw × padding_efficiency
+//! ```
+//!
+//! The model is validated cycle-exactly against the functional pipeline in
+//! `tests/` (same formulas, measured vs predicted).
+
+use crate::psram::ArrayGeometry;
+use crate::util::error::{Error, Result};
+
+/// An MTTKRP workload in unfolded form: `[I, K] @ [K, R]`.
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    /// Output rows (the mode's dimension).
+    pub i_rows: u64,
+    /// Contraction length (product of the other mode dimensions).
+    pub k_contraction: u64,
+    /// Decomposition rank.
+    pub rank: u64,
+}
+
+impl Workload {
+    /// The paper's evaluation workload: a 3-mode dense tensor with 1M
+    /// indices per mode (§V.A), decomposed at rank 32 (one full array
+    /// column block).
+    pub fn paper_large() -> Self {
+        Workload { i_rows: 1_000_000, k_contraction: 1_000_000_000_000, rank: 32 }
+    }
+
+    /// Total useful MACs (f64: the paper workload exceeds u64 range).
+    pub fn useful_macs(&self) -> f64 {
+        self.i_rows as f64 * self.k_contraction as f64 * self.rank as f64
+    }
+}
+
+/// The configurable performance model.
+#[derive(Debug, Clone)]
+pub struct PerfModel {
+    /// Array geometry.
+    pub geom: ArrayGeometry,
+    /// WDM channels in use.
+    pub wavelengths: usize,
+    /// Compute clock (Hz).
+    pub clock_hz: f64,
+    /// Write/reconfiguration clock (Hz).
+    pub write_clock_hz: f64,
+    /// Overlap reconfiguration with compute (double-buffered array images).
+    pub double_buffer: bool,
+    /// Number of parallel array macros (the scaled-out engine).
+    pub num_arrays: usize,
+}
+
+impl PerfModel {
+    /// The paper's practical configuration: 256×256 bits, 52 λ, 20 GHz,
+    /// single array, no write/compute overlap.
+    pub fn paper() -> Self {
+        PerfModel {
+            geom: ArrayGeometry::PAPER,
+            wavelengths: 52,
+            clock_hz: 20e9,
+            write_clock_hz: 20e9,
+            double_buffer: false,
+            num_arrays: 1,
+        }
+    }
+
+    /// Validate the configuration.
+    pub fn validate(&self) -> Result<()> {
+        self.geom.validate()?;
+        if self.wavelengths == 0 {
+            return Err(Error::config("zero wavelengths"));
+        }
+        if self.clock_hz <= 0.0 || self.write_clock_hz <= 0.0 {
+            return Err(Error::config("non-positive clock"));
+        }
+        if self.num_arrays == 0 {
+            return Err(Error::config("zero arrays"));
+        }
+        Ok(())
+    }
+
+    /// Peak throughput in ops/s (the paper's op counting: one multiply +
+    /// one accumulate per word per wavelength per cycle).
+    pub fn peak_ops(&self) -> f64 {
+        2.0 * self.geom.total_words() as f64
+            * self.wavelengths as f64
+            * self.clock_hz
+            * self.num_arrays as f64
+    }
+
+    /// Predict sustained performance for a workload.
+    pub fn predict(&self, w: &Workload) -> Result<PerfEstimate> {
+        self.validate()?;
+        if w.i_rows == 0 || w.k_contraction == 0 || w.rank == 0 {
+            return Err(Error::config("degenerate workload"));
+        }
+        let rows = self.geom.rows as u64;
+        let wpr = self.geom.words_per_row() as u64;
+        let lanes = self.wavelengths as u64;
+
+        let k_blocks = w.k_contraction.div_ceil(rows);
+        let r_blocks = w.rank.div_ceil(wpr);
+        let images = k_blocks * r_blocks;
+        // Images are distributed across parallel arrays; each array streams
+        // all lane batches for its images.
+        let images_per_array = images.div_ceil(self.num_arrays as u64);
+        let lane_batches = w.i_rows.div_ceil(lanes);
+        let compute_cycles = images_per_array * lane_batches;
+        // Write cycles in *compute-clock* units.
+        let write_cycles_native = images_per_array * rows;
+        let write_cycles =
+            (write_cycles_native as f64 * self.clock_hz / self.write_clock_hz) as u64;
+
+        let total_cycles = if self.double_buffer {
+            // Reconfiguration overlapped with compute: only the excess shows.
+            compute_cycles.max(write_cycles)
+        } else {
+            compute_cycles + write_cycles
+        };
+
+        let runtime_s = total_cycles as f64 / self.clock_hz;
+        let utilization = compute_cycles as f64 / total_cycles as f64;
+
+        // Padding efficiency: fraction of the array actually covered by the
+        // workload (last-block raggedness + lane raggedness).
+        let eff_k = w.k_contraction as f64 / (k_blocks * rows) as f64;
+        let eff_r = w.rank as f64 / (r_blocks * wpr) as f64;
+        let eff_i = w.i_rows as f64 / (lane_batches * lanes) as f64;
+        let padding_efficiency = eff_k * eff_r * eff_i;
+
+        let peak = self.peak_ops();
+        let sustained_raw = peak * utilization;
+        let sustained_useful = sustained_raw * padding_efficiency;
+
+        Ok(PerfEstimate {
+            peak_ops: peak,
+            sustained_raw_ops: sustained_raw,
+            sustained_useful_ops: sustained_useful,
+            utilization,
+            padding_efficiency,
+            images,
+            compute_cycles,
+            write_cycles,
+            runtime_s,
+        })
+    }
+}
+
+/// Output of the predictive model.
+#[derive(Debug, Clone, Copy)]
+pub struct PerfEstimate {
+    /// Peak ops/s for the configuration.
+    pub peak_ops: f64,
+    /// Sustained ops/s counting every active word (the paper's counting).
+    pub sustained_raw_ops: f64,
+    /// Sustained ops/s counting only useful (non-padding) MACs.
+    pub sustained_useful_ops: f64,
+    /// Compute-cycle fraction.
+    pub utilization: f64,
+    /// Useful fraction of raw MACs.
+    pub padding_efficiency: f64,
+    /// Array images (reconfigurations), across all arrays.
+    pub images: u64,
+    /// Compute cycles (per array).
+    pub compute_cycles: u64,
+    /// Write cycles (per array, compute-clock units).
+    pub write_cycles: u64,
+    /// Predicted runtime (s).
+    pub runtime_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn headline_peak_is_17_petaops() {
+        let m = PerfModel::paper();
+        let peak = m.peak_ops();
+        assert!((peak - 17.039e15).abs() < 0.01e15, "peak={peak:e}");
+    }
+
+    #[test]
+    fn paper_large_workload_sustains_near_peak() {
+        let m = PerfModel::paper();
+        let est = m.predict(&Workload::paper_large()).unwrap();
+        // I = 1e6 -> 19231 lane batches per image vs 256 write cycles:
+        // U = 19231 / 19487 ≈ 0.9869.
+        assert!(est.utilization > 0.98, "U={}", est.utilization);
+        assert!(
+            est.sustained_raw_ops > 16.8e15,
+            "sustained={:.3}P",
+            est.sustained_raw_ops / 1e15
+        );
+        // rank 32 fills the words exactly and K is a multiple of 256.
+        assert!(est.padding_efficiency > 0.99);
+    }
+
+    #[test]
+    fn linear_in_wavelengths() {
+        // Fig 5(i): sustained raw ops grow linearly in channel count while
+        // I >> lanes (same U regime).
+        let mut pts = Vec::new();
+        for &l in &[4usize, 8, 16, 32, 52] {
+            let mut m = PerfModel::paper();
+            m.wavelengths = l;
+            let est = m.predict(&Workload::paper_large()).unwrap();
+            pts.push((l as f64, est.sustained_raw_ops));
+        }
+        let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+        let (_, slope, r2) = crate::util::stats::linear_fit(&xs, &ys);
+        assert!(r2 > 0.999, "r2={r2}");
+        assert!(slope > 0.0);
+    }
+
+    #[test]
+    fn linear_in_frequency() {
+        // Fig 5(ii).
+        let mut pts = Vec::new();
+        for &f in &[1e9, 5e9, 10e9, 15e9, 20e9] {
+            let mut m = PerfModel::paper();
+            m.clock_hz = f;
+            m.write_clock_hz = 20e9; // write speed is a device property
+            let est = m.predict(&Workload::paper_large()).unwrap();
+            pts.push((f, est.sustained_raw_ops));
+        }
+        let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+        let (_, slope, r2) = crate::util::stats::linear_fit(&xs, &ys);
+        assert!(r2 > 0.999, "r2={r2}");
+        assert!(slope > 0.0);
+    }
+
+    #[test]
+    fn double_buffering_hides_writes() {
+        let mut m = PerfModel::paper();
+        let base = m.predict(&Workload::paper_large()).unwrap();
+        m.double_buffer = true;
+        let db = m.predict(&Workload::paper_large()).unwrap();
+        assert!(db.utilization >= base.utilization);
+        assert!((db.utilization - 1.0).abs() < 1e-9, "U={}", db.utilization);
+        assert!((db.sustained_raw_ops - m.peak_ops()).abs() / m.peak_ops() < 1e-9);
+    }
+
+    #[test]
+    fn small_workload_has_low_utilization() {
+        // Tiny I: reconfiguration dominates.
+        let m = PerfModel::paper();
+        let est = m
+            .predict(&Workload { i_rows: 52, k_contraction: 256, rank: 32 })
+            .unwrap();
+        assert!(est.utilization < 0.01, "U={}", est.utilization);
+    }
+
+    #[test]
+    fn multi_array_scales_peak_and_splits_images() {
+        let mut m = PerfModel::paper();
+        m.num_arrays = 4;
+        assert!((m.peak_ops() - 4.0 * PerfModel::paper().peak_ops()).abs() < 1.0);
+        let w = Workload { i_rows: 10_000, k_contraction: 1_000_000, rank: 64 };
+        let one = PerfModel::paper().predict(&w).unwrap();
+        let four = m.predict(&w).unwrap();
+        assert!(four.runtime_s < one.runtime_s / 3.0);
+    }
+
+    #[test]
+    fn degenerate_workloads_rejected() {
+        let m = PerfModel::paper();
+        assert!(m.predict(&Workload { i_rows: 0, k_contraction: 1, rank: 1 }).is_err());
+        let mut bad = PerfModel::paper();
+        bad.wavelengths = 0;
+        assert!(bad.predict(&Workload::paper_large()).is_err());
+    }
+
+    #[test]
+    fn padding_efficiency_penalises_ragged_rank() {
+        let m = PerfModel::paper();
+        let full = m
+            .predict(&Workload { i_rows: 52_000, k_contraction: 2560, rank: 32 })
+            .unwrap();
+        let ragged = m
+            .predict(&Workload { i_rows: 52_000, k_contraction: 2560, rank: 17 })
+            .unwrap();
+        assert!(full.padding_efficiency > ragged.padding_efficiency);
+        assert!((ragged.padding_efficiency - 17.0 / 32.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,140 @@
+//! TPU roofline estimates for the L1 Pallas kernel (DESIGN.md §Perf).
+//!
+//! The kernel runs under `interpret=True` on CPU in this environment, so
+//! real-TPU performance is *estimated* from the block structure: VMEM
+//! footprint of one grid step, MXU work per step, and the HBM↔VMEM traffic
+//! of the reconfiguration stream — the analysis the prompt requires in
+//! place of wall-clock TPU numbers.
+
+/// One TPU generation's relevant limits.
+#[derive(Debug, Clone, Copy)]
+pub struct TpuLimits {
+    /// VMEM per core (bytes).
+    pub vmem_bytes: usize,
+    /// Peak int8 MXU throughput (MAC/s) — v5e-class: ~394 TOPS int8.
+    pub mxu_int8_macs_per_s: f64,
+    /// HBM bandwidth (bytes/s).
+    pub hbm_bytes_per_s: f64,
+}
+
+impl TpuLimits {
+    /// A v5e-class core (16 MiB VMEM, ~197e12 int8 MAC/s, 819 GB/s HBM).
+    pub fn v5e() -> Self {
+        TpuLimits {
+            vmem_bytes: 16 * 1024 * 1024,
+            mxu_int8_macs_per_s: 197e12,
+            hbm_bytes_per_s: 819e9,
+        }
+    }
+}
+
+/// Static analysis of one `psram_tile` kernel variant (M lanes, K rows,
+/// N word columns, `block_k` rows per grid step).
+#[derive(Debug, Clone, Copy)]
+pub struct KernelRoofline {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub block_k: usize,
+}
+
+impl KernelRoofline {
+    /// The paper-config tile (52×256×32, one array image per grid step).
+    pub fn paper() -> Self {
+        KernelRoofline { m: 52, k: 256, n: 32, block_k: 256 }
+    }
+
+    /// VMEM bytes resident during one grid step: the `u` block (u8), the
+    /// `w` block (i8), the i32 accumulator, and the 8 bit-plane temporaries
+    /// the unrolled loop materialises (i32).
+    pub fn vmem_per_step_bytes(&self) -> usize {
+        let u = self.m * self.block_k; // u8
+        let w = self.block_k * self.n; // i8
+        let acc = self.m * self.n * 4; // i32
+        let planes = self.block_k * self.n * 4; // one i32 plane at a time
+        u + w + acc + planes
+    }
+
+    /// Fraction of VMEM used on the given TPU (must be < 1 to fit; the
+    /// double-buffered schedule needs 2x the input blocks).
+    pub fn vmem_utilization(&self, tpu: &TpuLimits) -> f64 {
+        (2 * self.vmem_per_step_bytes()) as f64 / tpu.vmem_bytes as f64
+    }
+
+    /// MXU MACs per grid step: 8 bit-plane matmuls of `[M,Kb]x[Kb,N]`.
+    pub fn macs_per_step(&self) -> u64 {
+        8 * (self.m * self.block_k * self.n) as u64
+    }
+
+    /// HBM bytes streamed per grid step (next u and w blocks).
+    pub fn hbm_bytes_per_step(&self) -> usize {
+        self.m * self.block_k + self.block_k * self.n
+    }
+
+    /// Arithmetic intensity (MAC/byte) — decides compute- vs memory-bound.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.macs_per_step() as f64 / self.hbm_bytes_per_step() as f64
+    }
+
+    /// Estimated MXU utilisation on the TPU: the `[M,K]x[K,N]` shapes map to
+    /// the 128x128 systolic array with efficiency ~ (M/128 ceil waste) x
+    /// (N/128 ceil waste), bounded by the memory roofline.
+    pub fn mxu_utilization(&self, tpu: &TpuLimits) -> f64 {
+        let eff_m = self.m as f64 / (self.m as f64 / 128.0).ceil() / 128.0;
+        let eff_n = self.n as f64 / (self.n as f64 / 128.0).ceil() / 128.0;
+        let shape_eff = eff_m * eff_n;
+        // memory bound: time_mem / time_compute ratio
+        let t_compute = self.macs_per_step() as f64 / tpu.mxu_int8_macs_per_s;
+        let t_mem = self.hbm_bytes_per_step() as f64 / tpu.hbm_bytes_per_s;
+        let mem_bound = (t_compute / t_mem.max(1e-30)).min(1.0);
+        shape_eff * mem_bound
+    }
+
+    /// Estimated sustained MAC/s on the TPU.
+    pub fn estimated_macs_per_s(&self, tpu: &TpuLimits) -> f64 {
+        tpu.mxu_int8_macs_per_s * self.mxu_utilization(tpu)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_tile_fits_vmem_with_room() {
+        let r = KernelRoofline::paper();
+        let tpu = TpuLimits::v5e();
+        // 52*256 + 256*32 + 52*32*4 + 256*32*4 ≈ 61 KiB/step — tiny.
+        assert!(r.vmem_per_step_bytes() < 100 * 1024);
+        assert!(r.vmem_utilization(&tpu) < 0.02);
+    }
+
+    #[test]
+    fn paper_tile_is_memory_bound_at_this_size() {
+        // 8 planes × 52×256×32 MACs vs 21.8 KB traffic: intensity ≈ 156
+        // MAC/byte, compute time ≈ 17 ns vs memory ≈ 27 ns → memory-bound.
+        let r = KernelRoofline::paper();
+        let tpu = TpuLimits::v5e();
+        assert!(r.arithmetic_intensity() > 100.0);
+        let u = r.mxu_utilization(&tpu);
+        assert!(u > 0.05 && u < 0.5, "mxu util {u}");
+    }
+
+    #[test]
+    fn bigger_blocks_improve_mxu_utilization() {
+        let small = KernelRoofline::paper();
+        let big = KernelRoofline { m: 128, k: 1024, n: 128, block_k: 512 };
+        let tpu = TpuLimits::v5e();
+        assert!(big.mxu_utilization(&tpu) > small.mxu_utilization(&tpu));
+        assert!(big.vmem_utilization(&tpu) < 1.0);
+    }
+
+    #[test]
+    fn estimated_throughput_sane() {
+        let r = KernelRoofline::paper();
+        let tpu = TpuLimits::v5e();
+        let est = r.estimated_macs_per_s(&tpu);
+        // between 1 TMAC/s and the peak
+        assert!(est > 1e12 && est < tpu.mxu_int8_macs_per_s, "{est:e}");
+    }
+}

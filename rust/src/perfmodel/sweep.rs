@@ -1,0 +1,124 @@
+//! Sweep drivers regenerating the paper's evaluation artefacts (Fig. 5 and
+//! the §V.B headline).  Each returns the series the benches print.
+
+use super::model::{PerfModel, Workload};
+use crate::device::DeviceParams;
+use crate::util::error::Result;
+
+/// One point of a Fig. 5 series.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepPoint {
+    /// The swept x value (channels, or Hz).
+    pub x: f64,
+    /// Sustained performance (raw ops/s, the paper's counting).
+    pub sustained_ops: f64,
+    /// Utilisation at this point.
+    pub utilization: f64,
+    /// Whether the device stack admits this configuration (comb capacity,
+    /// modulator/ADC rates).  Points beyond the PDK are extrapolations,
+    /// exactly like the paper's model sweep.
+    pub admissible: bool,
+}
+
+/// Fig. 5(i): sustained performance vs wavelength channels at a fixed
+/// clock, on the paper's large-tensor workload.
+pub fn fig5_wavelengths(channels: &[usize], clock_hz: f64) -> Result<Vec<SweepPoint>> {
+    let dev = DeviceParams::default();
+    let w = Workload::paper_large();
+    channels
+        .iter()
+        .map(|&l| {
+            let mut m = PerfModel::paper();
+            m.wavelengths = l;
+            m.clock_hz = clock_hz;
+            let est = m.predict(&w)?;
+            Ok(SweepPoint {
+                x: l as f64,
+                sustained_ops: est.sustained_raw_ops,
+                utilization: est.utilization,
+                admissible: dev.validate(l).is_ok(),
+            })
+        })
+        .collect()
+}
+
+/// Fig. 5(ii): sustained performance vs operating frequency at fixed
+/// channel count.  The write clock stays at the device's 20 GHz.
+pub fn fig5_frequency(clocks_hz: &[f64], channels: usize) -> Result<Vec<SweepPoint>> {
+    let mut dev = DeviceParams::default();
+    let w = Workload::paper_large();
+    clocks_hz
+        .iter()
+        .map(|&f| {
+            let mut m = PerfModel::paper();
+            m.wavelengths = channels;
+            m.clock_hz = f;
+            let est = m.predict(&w)?;
+            dev.clock_hz = f;
+            Ok(SweepPoint {
+                x: f,
+                sustained_ops: est.sustained_raw_ops,
+                utilization: est.utilization,
+                admissible: dev.validate(channels).is_ok(),
+            })
+        })
+        .collect()
+}
+
+/// The §V.B headline: the paper's practical configuration on the paper's
+/// workload.  Returns (peak ops/s, sustained ops/s, utilisation).
+pub fn headline() -> Result<(f64, f64, f64)> {
+    let m = PerfModel::paper();
+    let est = m.predict(&Workload::paper_large())?;
+    Ok((est.peak_ops, est.sustained_raw_ops, est.utilization))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::linear_fit;
+
+    #[test]
+    fn headline_sustains_about_17_petaops() {
+        let (peak, sustained, u) = headline().unwrap();
+        assert!((peak / 1e15 - 17.04).abs() < 0.01, "peak={peak:e}");
+        // sustained within 2% of peak for the 1M-per-mode tensor
+        assert!(sustained / peak > 0.98, "sustained={sustained:e} U={u}");
+    }
+
+    #[test]
+    fn fig5i_series_is_linear_and_marks_pdk_limit() {
+        let channels: Vec<usize> = vec![1, 4, 8, 16, 24, 32, 40, 52, 64];
+        let pts = fig5_wavelengths(&channels, 20e9).unwrap();
+        let xs: Vec<f64> = pts.iter().map(|p| p.x).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| p.sustained_ops).collect();
+        let (_, slope, r2) = linear_fit(&xs, &ys);
+        assert!(r2 > 0.999, "r2={r2}");
+        assert!(slope > 0.0);
+        // 52 is admissible, 64 is beyond the GF45SPCLO comb
+        assert!(pts.iter().find(|p| p.x == 52.0).unwrap().admissible);
+        assert!(!pts.iter().find(|p| p.x == 64.0).unwrap().admissible);
+    }
+
+    #[test]
+    fn fig5ii_series_is_linear_and_marks_rate_limits() {
+        let clocks: Vec<f64> = vec![1e9, 5e9, 10e9, 15e9, 20e9, 25e9];
+        let pts = fig5_frequency(&clocks, 52).unwrap();
+        let xs: Vec<f64> = pts.iter().map(|p| p.x).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| p.sustained_ops).collect();
+        let (_, slope, r2) = linear_fit(&xs, &ys);
+        assert!(r2 > 0.999, "r2={r2}");
+        assert!(slope > 0.0);
+        assert!(pts.iter().all(|p| p.admissible), "device stack runs past 25G? {pts:?}");
+    }
+
+    #[test]
+    fn utilization_slightly_decreases_with_wavelengths() {
+        // More lanes -> fewer compute cycles per image -> marginally lower U
+        // (writes amortise over fewer cycles).  The effect must be small for
+        // the large workload — that's why Fig 5 looks linear.
+        let pts = fig5_wavelengths(&[4, 52], 20e9).unwrap();
+        assert!(pts[0].utilization >= pts[1].utilization);
+        assert!(pts[1].utilization > 0.98);
+    }
+}

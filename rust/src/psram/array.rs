@@ -1,0 +1,318 @@
+//! The pSRAM crossbar array: a 2D grid of words with write scheduling,
+//! energy accounting and the packed view the compute engine reads.
+//!
+//! Writes happen one wordline per write cycle at the 20 GHz write clock
+//! (the paper's "reconfigurability rate").  Compute reads are performed by
+//! [`crate::compute::ComputeEngine`] against the packed mirror, which is
+//! kept bit-identical to the bitcell grid (asserted in tests).
+
+use super::bitcell::BitcellParams;
+use super::ledger::{CycleLedger, EnergyLedger};
+use super::word::Word;
+use super::ArrayGeometry;
+use crate::util::error::{Error, Result};
+
+/// One pSRAM array macro.
+#[derive(Debug, Clone)]
+pub struct PsramArray {
+    geom: ArrayGeometry,
+    params: BitcellParams,
+    /// Device-level state: `rows * words_per_row` words of bitcells.
+    words: Vec<Word>,
+    /// Packed mirror of the stored values, row-major `[rows][words_per_row]`,
+    /// used by the compute hot path.
+    packed: Vec<i8>,
+    /// Sign-extended i32 mirror (perf: keeps the compute inner loop free of
+    /// per-element i8->i32 extension; see EXPERIMENTS.md §Perf).
+    packed_i32: Vec<i32>,
+    /// Cycle ledger for this array.
+    pub cycles: CycleLedger,
+    /// Energy ledger for this array.
+    pub energy: EnergyLedger,
+}
+
+impl PsramArray {
+    /// A cleared array with the paper's default bitcell parameters.
+    pub fn new(geom: ArrayGeometry) -> Result<Self> {
+        geom.validate()?;
+        if geom.word_bits != 8 {
+            return Err(Error::config(format!(
+                "functional array currently models 8-bit words, got {}",
+                geom.word_bits
+            )));
+        }
+        let n = geom.total_words();
+        Ok(PsramArray {
+            geom,
+            params: BitcellParams::default(),
+            words: vec![Word::new(geom.word_bits); n],
+            packed: vec![0i8; n],
+            packed_i32: vec![0i32; n],
+            cycles: CycleLedger::default(),
+            energy: EnergyLedger::default(),
+        })
+    }
+
+    /// The paper's 256×256-bit array.
+    pub fn paper() -> Self {
+        PsramArray::new(ArrayGeometry::PAPER).expect("paper geometry is valid")
+    }
+
+    /// Array geometry.
+    pub fn geometry(&self) -> ArrayGeometry {
+        self.geom
+    }
+
+    /// Bitcell parameters.
+    pub fn params(&self) -> BitcellParams {
+        self.params
+    }
+
+    /// Override the bitcell parameters (for ablations).
+    pub fn set_params(&mut self, p: BitcellParams) {
+        self.params = p;
+    }
+
+    /// Packed row-major stored values `[rows][words_per_row]`.
+    #[inline]
+    pub fn packed(&self) -> &[i8] {
+        &self.packed
+    }
+
+    /// Sign-extended packed values (the compute hot path's view).
+    #[inline]
+    pub fn packed_i32(&self) -> &[i32] {
+        &self.packed_i32
+    }
+
+    /// Stored value at `(row, col)`.
+    pub fn word(&self, row: usize, col: usize) -> i8 {
+        self.packed[row * self.geom.words_per_row() + col]
+    }
+
+    /// Write one full wordline (`words_per_row` values).  Costs one write
+    /// cycle; switching energy is charged per toggled bitcell.
+    pub fn write_row(&mut self, row: usize, values: &[i8]) -> Result<()> {
+        let wpr = self.geom.words_per_row();
+        if row >= self.geom.rows {
+            return Err(Error::shape(format!("row {row} >= {}", self.geom.rows)));
+        }
+        if values.len() != wpr {
+            return Err(Error::shape(format!(
+                "row write needs {wpr} words, got {}",
+                values.len()
+            )));
+        }
+        let base = row * wpr;
+        let mut flips = 0usize;
+        for (c, &v) in values.iter().enumerate() {
+            flips += self.words[base + c].store_i8(v);
+            self.packed[base + c] = v;
+            self.packed_i32[base + c] = v as i32;
+        }
+        self.cycles.write += 1;
+        self.energy.switching_j += flips as f64 * self.params.switching_energy_j;
+        Ok(())
+    }
+
+    /// Write a full array image, row-major `[rows][words_per_row]`.
+    /// Costs `rows` write cycles — the reconfiguration stall the
+    /// performance model charges between tiles.
+    pub fn write_image(&mut self, image: &[i8]) -> Result<()> {
+        let wpr = self.geom.words_per_row();
+        if image.len() != self.geom.total_words() {
+            return Err(Error::shape(format!(
+                "image has {} words, array holds {}",
+                image.len(),
+                self.geom.total_words()
+            )));
+        }
+        for row in 0..self.geom.rows {
+            self.write_row(row, &image[row * wpr..(row + 1) * wpr])?;
+        }
+        Ok(())
+    }
+
+    /// Write a partial image of `rows_used` rows (remaining rows are zeroed
+    /// so they do not contribute to column sums).
+    pub fn write_image_padded(&mut self, image: &[i8], rows_used: usize) -> Result<()> {
+        let wpr = self.geom.words_per_row();
+        if rows_used > self.geom.rows {
+            return Err(Error::shape(format!(
+                "rows_used {rows_used} exceeds array rows {}",
+                self.geom.rows
+            )));
+        }
+        if image.len() != rows_used * wpr {
+            return Err(Error::shape(format!(
+                "partial image has {} words, want {}",
+                image.len(),
+                rows_used * wpr
+            )));
+        }
+        for row in 0..rows_used {
+            self.write_row(row, &image[row * wpr..(row + 1) * wpr])?;
+        }
+        let zeros = vec![0i8; wpr];
+        for row in rows_used..self.geom.rows {
+            self.write_row(row, &zeros)?;
+        }
+        Ok(())
+    }
+
+    /// Charge static (hold) energy for `cycles` cycles across all bitcells.
+    pub fn charge_static(&mut self, cycles: u64) {
+        self.energy.static_j +=
+            cycles as f64 * self.geom.total_bits() as f64 * self.params.static_energy_j;
+    }
+
+    /// Verify the packed mirror matches the bitcell grid (test/debug aid).
+    pub fn check_mirror(&self) -> bool {
+        self.words
+            .iter()
+            .zip(&self.packed)
+            .zip(&self.packed_i32)
+            .all(|((w, &p), &p32)| w.load_i8() == p && p as i32 == p32)
+    }
+
+    /// Reset ledgers (state is kept).
+    pub fn reset_ledgers(&mut self) {
+        self.cycles = CycleLedger::default();
+        self.energy = EnergyLedger::default();
+    }
+
+    /// Inject stored-bit errors: each bitcell flips independently with
+    /// probability `ber` (thermal-drift / retention fault model — see
+    /// `device::mrr::MicroRing::thermal_ber`).  Returns the number of
+    /// flipped bits.  The packed mirror stays consistent.
+    pub fn inject_bit_errors(&mut self, ber: f64, rng: &mut crate::util::prng::Prng) -> usize {
+        assert!((0.0..=1.0).contains(&ber));
+        if ber == 0.0 {
+            return 0;
+        }
+        let wpr = self.geom.words_per_row();
+        let bits = self.geom.word_bits;
+        let mut flips = 0usize;
+        for w in 0..self.geom.total_words() {
+            let mut val = self.packed[w] as u8;
+            let mut changed = false;
+            for b in 0..bits {
+                if rng.uniform() < ber {
+                    val ^= 1 << b;
+                    changed = true;
+                    flips += 1;
+                }
+            }
+            if changed {
+                let _ = wpr;
+                self.words[w].store_i8(val as i8);
+                self.packed[w] = val as i8;
+                self.packed_i32[w] = val as i8 as i32;
+            }
+        }
+        flips
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn rand_image(rng: &mut Prng, n: usize) -> Vec<i8> {
+        (0..n).map(|_| rng.next_i8()).collect()
+    }
+
+    #[test]
+    fn write_image_roundtrip_and_mirror() {
+        let mut a = PsramArray::paper();
+        let mut rng = Prng::new(1);
+        let img = rand_image(&mut rng, a.geometry().total_words());
+        a.write_image(&img).unwrap();
+        assert_eq!(a.packed(), &img[..]);
+        assert!(a.check_mirror());
+        assert_eq!(a.word(0, 0), img[0]);
+        assert_eq!(a.word(255, 31), img[255 * 32 + 31]);
+    }
+
+    #[test]
+    fn write_costs_one_cycle_per_row() {
+        let mut a = PsramArray::paper();
+        let img = vec![1i8; a.geometry().total_words()];
+        a.write_image(&img).unwrap();
+        assert_eq!(a.cycles.write, 256);
+        assert_eq!(a.cycles.compute, 0);
+    }
+
+    #[test]
+    fn switching_energy_charged_per_flip() {
+        let mut a = PsramArray::paper();
+        // all zeros -> no flips from the cleared state
+        a.write_image(&vec![0i8; 8192]).unwrap();
+        assert_eq!(a.energy.switching_j, 0.0);
+        // -1 = 0xFF flips all 8 bits of every word
+        a.write_image(&vec![-1i8; 8192]).unwrap();
+        let expect = 8192.0 * 8.0 * a.params().switching_energy_j;
+        assert!((a.energy.switching_j - expect).abs() < 1e-15);
+    }
+
+    #[test]
+    fn rewriting_same_image_is_energy_free() {
+        let mut a = PsramArray::paper();
+        let mut rng = Prng::new(2);
+        let img = rand_image(&mut rng, 8192);
+        a.write_image(&img).unwrap();
+        let e1 = a.energy.switching_j;
+        a.write_image(&img).unwrap();
+        assert_eq!(a.energy.switching_j, e1);
+        // ... but still costs write cycles (the wordline must be driven)
+        assert_eq!(a.cycles.write, 512);
+    }
+
+    #[test]
+    fn padded_image_zeroes_tail_rows() {
+        let mut a = PsramArray::paper();
+        a.write_image(&vec![7i8; 8192]).unwrap();
+        a.write_image_padded(&vec![3i8; 10 * 32], 10).unwrap();
+        assert_eq!(a.word(5, 0), 3);
+        assert_eq!(a.word(10, 0), 0);
+        assert_eq!(a.word(255, 31), 0);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let mut a = PsramArray::paper();
+        assert!(a.write_image(&vec![0i8; 100]).is_err());
+        assert!(a.write_row(256, &vec![0i8; 32]).is_err());
+        assert!(a.write_row(0, &vec![0i8; 31]).is_err());
+        assert!(a.write_image_padded(&vec![0i8; 32], 300).is_err());
+    }
+
+    #[test]
+    fn static_energy_scales_with_cycles_and_bits() {
+        let mut a = PsramArray::paper();
+        a.charge_static(1000);
+        let expect = 1000.0 * 65_536.0 * 16.7e-18;
+        assert!((a.energy.static_j - expect).abs() < 1e-20);
+    }
+
+    #[test]
+    fn bit_error_injection_flips_expected_fraction() {
+        let mut a = PsramArray::paper();
+        a.write_image(&vec![0i8; 8192]).unwrap();
+        let mut rng = Prng::new(42);
+        let flips = a.inject_bit_errors(0.01, &mut rng);
+        let expect = 65_536.0 * 0.01;
+        assert!((flips as f64 - expect).abs() < expect * 0.5, "flips={flips}");
+        assert!(a.check_mirror());
+        // zero BER is a no-op
+        let before: Vec<i8> = a.packed().to_vec();
+        assert_eq!(a.inject_bit_errors(0.0, &mut rng), 0);
+        assert_eq!(a.packed(), &before[..]);
+    }
+
+    #[test]
+    fn non_8bit_words_rejected_for_now() {
+        assert!(PsramArray::new(ArrayGeometry::new(64, 64, 4).unwrap()).is_err());
+    }
+}

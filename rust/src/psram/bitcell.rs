@@ -1,0 +1,126 @@
+//! The pSRAM bitcell: a cross-coupled micro-ring latch (paper §III.B).
+//!
+//! Two MRRs (R1, R2) and two photodiodes (P1, P2): the through port of R1
+//! drives P2 which controls R2's resonance, and vice versa — a differential
+//! optical latch.  We model the *functional* state machine plus the paper's
+//! energy/timing numbers: write at 20 GHz, ~1.04 pJ/bit switching energy,
+//! ~16.7 aJ/bit static energy.
+
+/// Energy/timing constants of the bitcell from the paper.
+#[derive(Debug, Clone, Copy)]
+pub struct BitcellParams {
+    /// Energy to flip the latch (J/bit). Paper: ~1.04 pJ.
+    pub switching_energy_j: f64,
+    /// Static (hold) energy per bit per cycle (J). Paper: ~16.7 aJ.
+    pub static_energy_j: f64,
+    /// Maximum write (reconfiguration) rate (Hz). Paper: 20 GHz.
+    pub max_write_rate_hz: f64,
+}
+
+impl Default for BitcellParams {
+    fn default() -> Self {
+        BitcellParams {
+            switching_energy_j: 1.04e-12,
+            static_energy_j: 16.7e-18,
+            max_write_rate_hz: 20e9,
+        }
+    }
+}
+
+/// One cross-coupled MRR latch.
+///
+/// The differential pair stores `(q, !q)`; we track `q` and count state
+/// flips so the array's energy ledger can charge switching energy only for
+/// bits that actually toggled (writes of the same value are free at the
+/// latch level, as in the physical device where the rings stay put).
+#[derive(Debug, Clone, Default)]
+pub struct Bitcell {
+    q: bool,
+}
+
+impl Bitcell {
+    /// Construct holding `value`.
+    pub fn new(value: bool) -> Self {
+        Bitcell { q: value }
+    }
+
+    /// Current stored bit.
+    #[inline]
+    pub fn read(&self) -> bool {
+        self.q
+    }
+
+    /// Write a bit; returns `true` if the latch toggled (switching energy
+    /// must be charged by the caller's ledger).
+    #[inline]
+    pub fn write(&mut self, value: bool) -> bool {
+        let flipped = self.q != value;
+        self.q = value;
+        flipped
+    }
+
+    /// The differential outputs `(through_R1, through_R2)` of the latch:
+    /// exactly one ring is on-resonance at a time.
+    #[inline]
+    pub fn differential(&self) -> (bool, bool) {
+        (self.q, !self.q)
+    }
+
+    /// Optical multiply: the stored bit gates an incoming intensity code —
+    /// the photonic product `input * bit` (paper Fig. 2: "Each pSRAM is
+    /// capable of multiplying the values stored within the word by the
+    /// inputs from the wavelengths").
+    #[inline]
+    pub fn gate(&self, intensity: u32) -> u32 {
+        if self.q {
+            intensity
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_then_read() {
+        let mut c = Bitcell::default();
+        assert!(!c.read());
+        assert!(c.write(true));
+        assert!(c.read());
+    }
+
+    #[test]
+    fn rewrite_same_value_does_not_toggle() {
+        let mut c = Bitcell::new(true);
+        assert!(!c.write(true));
+        assert!(c.write(false));
+        assert!(!c.write(false));
+    }
+
+    #[test]
+    fn differential_outputs_are_complementary() {
+        let c = Bitcell::new(true);
+        assert_eq!(c.differential(), (true, false));
+        let c = Bitcell::new(false);
+        assert_eq!(c.differential(), (false, true));
+    }
+
+    #[test]
+    fn gate_multiplies_by_stored_bit() {
+        let one = Bitcell::new(true);
+        let zero = Bitcell::new(false);
+        assert_eq!(one.gate(173), 173);
+        assert_eq!(zero.gate(173), 0);
+    }
+
+    #[test]
+    fn paper_energy_constants() {
+        let p = BitcellParams::default();
+        assert!((p.switching_energy_j - 1.04e-12).abs() < 1e-18);
+        assert!((p.static_energy_j - 16.7e-18).abs() < 1e-24);
+        assert_eq!(p.max_write_rate_hz, 20e9);
+    }
+}

@@ -1,0 +1,148 @@
+//! Cycle and energy accounting for a pSRAM array.
+//!
+//! The predictive performance model needs exact counts of compute vs
+//! reconfiguration cycles (utilisation), and the energy report needs
+//! switching/static/modulator/ADC/laser breakdowns.
+
+/// Cycle counts by activity.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CycleLedger {
+    /// Cycles spent computing (wordline activations with compute).
+    pub compute: u64,
+    /// Cycles spent writing/reconfiguring the array.
+    pub write: u64,
+    /// Idle cycles (stalls waiting for inputs/outputs).
+    pub idle: u64,
+}
+
+impl CycleLedger {
+    /// Total cycles elapsed.
+    pub fn total(&self) -> u64 {
+        self.compute + self.write + self.idle
+    }
+
+    /// Fraction of cycles doing useful compute (the model's utilisation U).
+    pub fn utilization(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            0.0
+        } else {
+            self.compute as f64 / t as f64
+        }
+    }
+
+    /// Merge another ledger into this one.
+    pub fn merge(&mut self, other: &CycleLedger) {
+        self.compute += other.compute;
+        self.write += other.write;
+        self.idle += other.idle;
+    }
+
+    /// Wall-clock time at a clock rate.
+    pub fn seconds_at(&self, clock_hz: f64) -> f64 {
+        self.total() as f64 / clock_hz
+    }
+}
+
+/// Energy totals by source (J).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EnergyLedger {
+    /// Bitcell switching energy (writes that toggled a latch).
+    pub switching_j: f64,
+    /// Static/hold energy across all bitcells and cycles.
+    pub static_j: f64,
+    /// Comb-shaper modulation energy (input encoding).
+    pub modulator_j: f64,
+    /// ADC conversion energy.
+    pub adc_j: f64,
+    /// Laser/comb wall-plug energy attributed to the computation.
+    pub laser_j: f64,
+}
+
+impl EnergyLedger {
+    /// Total energy (J).
+    pub fn total_j(&self) -> f64 {
+        self.switching_j + self.static_j + self.modulator_j + self.adc_j + self.laser_j
+    }
+
+    /// Merge another ledger into this one.
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        self.switching_j += other.switching_j;
+        self.static_j += other.static_j;
+        self.modulator_j += other.modulator_j;
+        self.adc_j += other.adc_j;
+        self.laser_j += other.laser_j;
+    }
+
+    /// Energy per operation given an op count.
+    pub fn per_op_j(&self, ops: u64) -> f64 {
+        if ops == 0 {
+            0.0
+        } else {
+            self.total_j() / ops as f64
+        }
+    }
+
+    /// Breakdown as (label, joules, fraction) rows for reports.
+    pub fn breakdown(&self) -> Vec<(&'static str, f64, f64)> {
+        let t = self.total_j().max(1e-300);
+        vec![
+            ("switching", self.switching_j, self.switching_j / t),
+            ("static", self.static_j, self.static_j / t),
+            ("modulator", self.modulator_j, self.modulator_j / t),
+            ("adc", self.adc_j, self.adc_j / t),
+            ("laser", self.laser_j, self.laser_j / t),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn utilization_math() {
+        let l = CycleLedger { compute: 80, write: 15, idle: 5 };
+        assert_eq!(l.total(), 100);
+        assert!((l.utilization() - 0.8).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_ledger_utilization_zero() {
+        assert_eq!(CycleLedger::default().utilization(), 0.0);
+    }
+
+    #[test]
+    fn merge_adds_componentwise() {
+        let mut a = CycleLedger { compute: 1, write: 2, idle: 3 };
+        a.merge(&CycleLedger { compute: 10, write: 20, idle: 30 });
+        assert_eq!(a, CycleLedger { compute: 11, write: 22, idle: 33 });
+    }
+
+    #[test]
+    fn seconds_at_clock() {
+        let l = CycleLedger { compute: 20_000_000_000, write: 0, idle: 0 };
+        assert!((l.seconds_at(20e9) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn energy_breakdown_fractions_sum_to_one() {
+        let e = EnergyLedger {
+            switching_j: 1e-9,
+            static_j: 2e-9,
+            modulator_j: 3e-9,
+            adc_j: 4e-9,
+            laser_j: 0.0,
+        };
+        let total: f64 = e.breakdown().iter().map(|(_, _, f)| f).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert!((e.total_j() - 1e-8).abs() < 1e-18);
+    }
+
+    #[test]
+    fn per_op_energy() {
+        let e = EnergyLedger { switching_j: 1e-6, ..Default::default() };
+        assert!((e.per_op_j(1000) - 1e-9).abs() < 1e-18);
+        assert_eq!(e.per_op_j(0), 0.0);
+    }
+}

@@ -1,0 +1,105 @@
+//! The photonic SRAM array: bitcells, words, the 2D crossbar, and the
+//! cycle/energy ledgers (paper §III.B, §V.A).
+//!
+//! The paper's array is 256×256 bitcells; 8 bits along a row form a word,
+//! giving 256 rows × 32 word columns.  Each bitcell is a cross-coupled
+//! micro-ring latch writable at 20 GHz; reads (compute) are bounded by the
+//! ring time constant.
+
+pub mod array;
+pub mod bitcell;
+pub mod ledger;
+pub mod word;
+
+pub use array::PsramArray;
+pub use bitcell::Bitcell;
+pub use ledger::{CycleLedger, EnergyLedger};
+pub use word::Word;
+
+use crate::util::error::{Error, Result};
+
+/// Geometry of one pSRAM array macro.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArrayGeometry {
+    /// Word rows (wordlines).
+    pub rows: usize,
+    /// Bit columns.
+    pub cols_bits: usize,
+    /// Bits per word.
+    pub word_bits: u32,
+}
+
+impl ArrayGeometry {
+    /// The paper's configuration: 256×256 bits, 8-bit words -> 256×32 words.
+    pub const PAPER: ArrayGeometry =
+        ArrayGeometry { rows: 256, cols_bits: 256, word_bits: 8 };
+
+    /// Construct and validate a geometry.
+    pub fn new(rows: usize, cols_bits: usize, word_bits: u32) -> Result<Self> {
+        let g = ArrayGeometry { rows, cols_bits, word_bits };
+        g.validate()?;
+        Ok(g)
+    }
+
+    /// Check internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.rows == 0 || self.cols_bits == 0 {
+            return Err(Error::config("geometry with zero extent"));
+        }
+        if self.word_bits == 0 || self.word_bits > 16 {
+            return Err(Error::config(format!("word_bits={} unsupported", self.word_bits)));
+        }
+        if self.cols_bits % self.word_bits as usize != 0 {
+            return Err(Error::config(format!(
+                "cols_bits={} not a multiple of word_bits={}",
+                self.cols_bits, self.word_bits
+            )));
+        }
+        Ok(())
+    }
+
+    /// Word columns per row.
+    pub fn words_per_row(&self) -> usize {
+        self.cols_bits / self.word_bits as usize
+    }
+
+    /// Total words in the array.
+    pub fn total_words(&self) -> usize {
+        self.rows * self.words_per_row()
+    }
+
+    /// Total bitcells.
+    pub fn total_bits(&self) -> usize {
+        self.rows * self.cols_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_geometry_is_256x32_words() {
+        let g = ArrayGeometry::PAPER;
+        assert_eq!(g.words_per_row(), 32);
+        assert_eq!(g.total_words(), 8192);
+        assert_eq!(g.total_bits(), 65_536);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn ragged_geometry_rejected() {
+        assert!(ArrayGeometry::new(256, 250, 8).is_err());
+        assert!(ArrayGeometry::new(0, 256, 8).is_err());
+        assert!(ArrayGeometry::new(256, 256, 0).is_err());
+        assert!(ArrayGeometry::new(256, 256, 17).is_err());
+    }
+
+    #[test]
+    fn alternate_geometries() {
+        let g = ArrayGeometry::new(128, 512, 8).unwrap();
+        assert_eq!(g.words_per_row(), 64);
+        let g4 = ArrayGeometry::new(64, 64, 4).unwrap();
+        assert_eq!(g4.words_per_row(), 16);
+    }
+}

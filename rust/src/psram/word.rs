@@ -1,0 +1,117 @@
+//! A pSRAM word: `word_bits` bitcells on one wordline storing one operand
+//! in two's-complement bit-plane form.
+
+use super::bitcell::Bitcell;
+use crate::util::fixed::{plane_weight, WORD_BITS};
+
+/// A group of bitcells holding one stored operand.
+#[derive(Debug, Clone)]
+pub struct Word {
+    cells: Vec<Bitcell>,
+}
+
+impl Word {
+    /// A cleared word of `bits` cells.
+    pub fn new(bits: u32) -> Self {
+        Word { cells: vec![Bitcell::default(); bits as usize] }
+    }
+
+    /// Number of bits.
+    pub fn bits(&self) -> u32 {
+        self.cells.len() as u32
+    }
+
+    /// Store an int8 value (two's complement across the bitcells).
+    /// Returns the number of cells that toggled (for the energy ledger).
+    pub fn store_i8(&mut self, value: i8) -> usize {
+        assert_eq!(self.bits(), WORD_BITS, "store_i8 needs an 8-bit word");
+        let pattern = value as u8;
+        let mut flips = 0;
+        for (b, cell) in self.cells.iter_mut().enumerate() {
+            if cell.write((pattern >> b) & 1 == 1) {
+                flips += 1;
+            }
+        }
+        flips
+    }
+
+    /// Read back the stored int8 value.
+    pub fn load_i8(&self) -> i8 {
+        assert_eq!(self.bits(), WORD_BITS);
+        let mut pattern = 0u8;
+        for (b, cell) in self.cells.iter().enumerate() {
+            if cell.read() {
+                pattern |= 1 << b;
+            }
+        }
+        pattern as i8
+    }
+
+    /// Bit `b` of the stored pattern.
+    #[inline]
+    pub fn bit(&self, b: u32) -> bool {
+        self.cells[b as usize].read()
+    }
+
+    /// The optical multiply of an incoming intensity against the whole word:
+    /// returns the per-plane gated intensities (what each bit-line carries
+    /// before accumulation).  `out[b] = intensity * bit_b`.
+    pub fn gate_planes(&self, intensity: u32) -> Vec<u32> {
+        self.cells.iter().map(|c| c.gate(intensity)).collect()
+    }
+
+    /// Signed value of the product `intensity_signed * stored`, computed the
+    /// way the optics + output encoding do: per-plane gate, then
+    /// bit-significance weights.  Exactly equals `x * stored` for any x.
+    pub fn optical_multiply(&self, x: i32) -> i64 {
+        let stored: i64 = (0..self.bits())
+            .map(|b| plane_weight(b) as i64 * self.bit(b) as i64)
+            .sum();
+        x as i64 * stored
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_load_roundtrip_full_range() {
+        let mut w = Word::new(8);
+        for v in i8::MIN..=i8::MAX {
+            w.store_i8(v);
+            assert_eq!(w.load_i8(), v);
+        }
+    }
+
+    #[test]
+    fn flip_count_is_hamming_distance() {
+        let mut w = Word::new(8);
+        assert_eq!(w.store_i8(0), 0); // from cleared
+        assert_eq!(w.store_i8(0b0101_0101u8 as i8), 4);
+        assert_eq!(w.store_i8(0b0101_0100u8 as i8), 1);
+        assert_eq!(w.store_i8(0b0101_0100u8 as i8), 0);
+    }
+
+    #[test]
+    fn gate_planes_reflect_bits() {
+        let mut w = Word::new(8);
+        w.store_i8(0b0000_0101);
+        let planes = w.gate_planes(200);
+        assert_eq!(planes[0], 200);
+        assert_eq!(planes[1], 0);
+        assert_eq!(planes[2], 200);
+        assert!(planes[3..].iter().all(|&p| p == 0));
+    }
+
+    #[test]
+    fn optical_multiply_equals_integer_multiply() {
+        let mut w = Word::new(8);
+        for &stored in &[-128i8, -77, -1, 0, 1, 42, 127] {
+            w.store_i8(stored);
+            for &x in &[-128i32, -3, 0, 5, 127] {
+                assert_eq!(w.optical_multiply(x), x as i64 * stored as i64);
+            }
+        }
+    }
+}

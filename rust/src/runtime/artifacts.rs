@@ -1,0 +1,186 @@
+//! Artifact discovery and the manifest registry.
+//!
+//! `python/compile/aot.py` writes `manifest.txt` with one line per
+//! artifact: `name<TAB>file<TAB>signature`.  Tile variants encode their
+//! shape in the name (`psram_tile_{M}x{K}x{N}`).
+
+use crate::util::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// A quantized tile-kernel variant (`u8[M,K] x s8[K,N] -> s32[M,N]`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TileVariant {
+    pub name: String,
+    /// Wavelength lanes per call.
+    pub m: usize,
+    /// Word rows (contraction block).
+    pub k: usize,
+    /// Word columns (rank block).
+    pub n: usize,
+    /// HLO text file path.
+    pub path: PathBuf,
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub tiles: Vec<TileVariant>,
+    /// Non-tile artifacts: (name, path).
+    pub others: Vec<(String, PathBuf)>,
+}
+
+/// Locate the artifacts directory: `$PSRAM_IMC_ARTIFACTS`, then
+/// `./artifacts`, then walking up from the executable location.
+pub fn find_artifacts_dir() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("PSRAM_IMC_ARTIFACTS") {
+        let p = PathBuf::from(p);
+        if p.join("manifest.txt").is_file() {
+            return Ok(p);
+        }
+        return Err(Error::Artifact(format!(
+            "PSRAM_IMC_ARTIFACTS={} has no manifest.txt",
+            p.display()
+        )));
+    }
+    let mut candidates = vec![PathBuf::from("artifacts")];
+    if let Ok(mut exe) = std::env::current_exe() {
+        for _ in 0..5 {
+            exe = match exe.parent() {
+                Some(p) => p.to_path_buf(),
+                None => break,
+            };
+            candidates.push(exe.join("artifacts"));
+        }
+    }
+    for c in &candidates {
+        if c.join("manifest.txt").is_file() {
+            return Ok(c.clone());
+        }
+    }
+    Err(Error::Artifact(
+        "no artifacts/manifest.txt found — run `make artifacts` first".to_string(),
+    ))
+}
+
+/// Parse `psram_tile_{M}x{K}x{N}` into (M, K, N).
+fn parse_tile_dims(name: &str) -> Option<(usize, usize, usize)> {
+    let dims = name.strip_prefix("psram_tile_")?;
+    let mut it = dims.split('x');
+    let m = it.next()?.parse().ok()?;
+    let k = it.next()?.parse().ok()?;
+    let n = it.next()?.parse().ok()?;
+    if it.next().is_some() {
+        return None;
+    }
+    Some((m, k, n))
+}
+
+impl Manifest {
+    /// Load and parse `manifest.txt` from a directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        let mut man = Manifest::default();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut parts = line.split('\t');
+            let (name, file) = match (parts.next(), parts.next()) {
+                (Some(n), Some(f)) => (n.to_string(), f.to_string()),
+                _ => {
+                    return Err(Error::Artifact(format!(
+                        "manifest line {} malformed: {line:?}",
+                        lineno + 1
+                    )))
+                }
+            };
+            let path = dir.join(&file);
+            if !path.is_file() {
+                return Err(Error::Artifact(format!(
+                    "manifest references missing file {}",
+                    path.display()
+                )));
+            }
+            match parse_tile_dims(&name) {
+                Some((m, k, n)) => {
+                    man.tiles.push(TileVariant { name, m, k, n, path })
+                }
+                None => man.others.push((name, path)),
+            }
+        }
+        if man.tiles.is_empty() {
+            return Err(Error::Artifact("manifest has no tile variants".to_string()));
+        }
+        Ok(man)
+    }
+
+    /// Find a tile variant by exact dims.
+    pub fn tile(&self, m: usize, k: usize, n: usize) -> Option<&TileVariant> {
+        self.tiles.iter().find(|t| t.m == m && t.k == k && t.n == n)
+    }
+
+    /// The canonical paper-config tile (52×256×32), if exported.
+    pub fn paper_tile(&self) -> Option<&TileVariant> {
+        self.tile(52, 256, 32)
+    }
+
+    /// A non-tile artifact path by name.
+    pub fn other(&self, name: &str) -> Option<&PathBuf> {
+        self.others.iter().find(|(n, _)| n == name).map(|(_, p)| p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_name_parsing() {
+        assert_eq!(parse_tile_dims("psram_tile_52x256x32"), Some((52, 256, 32)));
+        assert_eq!(parse_tile_dims("psram_tile_1x2x3"), Some((1, 2, 3)));
+        assert_eq!(parse_tile_dims("mttkrp_f32_64x48x40_r16"), None);
+        assert_eq!(parse_tile_dims("psram_tile_52x256"), None);
+        assert_eq!(parse_tile_dims("psram_tile_52x256x32x4"), None);
+    }
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("psram_man_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), "HloModule a").unwrap();
+        std::fs::write(dir.join("b.hlo.txt"), "HloModule b").unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "psram_tile_8x256x4\ta.hlo.txt\tu8[8,256] x s8[256,4] -> s32[8,4]\n\
+             mttkrp_f32_2x2x2_r1\tb.hlo.txt\tf32\n",
+        )
+        .unwrap();
+        let man = Manifest::load(&dir).unwrap();
+        assert_eq!(man.tiles.len(), 1);
+        assert_eq!(man.tiles[0].k, 256);
+        assert!(man.tile(8, 256, 4).is_some());
+        assert!(man.tile(1, 1, 1).is_none());
+        assert!(man.other("mttkrp_f32_2x2x2_r1").is_some());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_file_rejected() {
+        let dir = std::env::temp_dir().join(format!("psram_man2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "psram_tile_1x1x1\tnope.hlo.txt\tsig\n")
+            .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn real_artifacts_manifest_loads_if_present() {
+        // When `make artifacts` has run (the normal test flow), the real
+        // manifest must parse and contain the paper tile.
+        if let Ok(dir) = find_artifacts_dir() {
+            let man = Manifest::load(&dir).unwrap();
+            assert!(man.paper_tile().is_some(), "paper tile missing from {man:?}");
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! A [`TileExecutor`] backed by the AOT-compiled Pallas kernel via PJRT.
+//!
+//! The HLO artifact has static shapes (`u8[M,K] x s8[K,N] -> s32[M,N]`), so
+//! the executor pads shorter lane batches up to `M` with the zero code and
+//! slices the result.  Cycle accounting mirrors the analog array: one write
+//! cycle per row on `load_image`, one compute cycle per `compute` call —
+//! so utilisation statistics agree across executors.
+
+use super::pjrt::PjrtRuntime;
+use crate::mttkrp::pipeline::TileExecutor;
+use crate::psram::CycleLedger;
+use crate::util::error::{Error, Result};
+use crate::util::fixed::encode_offset;
+
+/// PJRT-backed tile executor for one artifact variant.
+pub struct PjrtTileExecutor {
+    rt: PjrtRuntime,
+    name: String,
+    m: usize,
+    k: usize,
+    n: usize,
+    image: Vec<i8>,
+    ledger: CycleLedger,
+}
+
+impl PjrtTileExecutor {
+    /// Build from the default artifacts dir using the paper tile
+    /// (52 lanes × 256 rows × 32 words).
+    pub fn paper() -> Result<Self> {
+        Self::with_variant(52, 256, 32)
+    }
+
+    /// Build for an explicit exported variant.
+    pub fn with_variant(m: usize, k: usize, n: usize) -> Result<Self> {
+        let mut rt = PjrtRuntime::new()?;
+        let tile = rt
+            .manifest()
+            .tile(m, k, n)
+            .ok_or_else(|| {
+                Error::Artifact(format!("no exported tile variant {m}x{k}x{n}"))
+            })?
+            .clone();
+        // Compile eagerly so request-path latency is execution only.
+        rt.load(&tile.name)?;
+        Ok(PjrtTileExecutor {
+            rt,
+            name: tile.name,
+            m,
+            k,
+            n,
+            image: vec![0i8; k * n],
+            ledger: CycleLedger::default(),
+        })
+    }
+
+    /// The artifact name backing this executor.
+    pub fn artifact(&self) -> &str {
+        &self.name
+    }
+}
+
+impl TileExecutor for PjrtTileExecutor {
+    fn rows(&self) -> usize {
+        self.k
+    }
+
+    fn words_per_row(&self) -> usize {
+        self.n
+    }
+
+    fn max_lanes(&self) -> usize {
+        self.m
+    }
+
+    fn load_image(&mut self, image: &[i8]) -> Result<()> {
+        if image.len() != self.k * self.n {
+            return Err(Error::shape(format!(
+                "image of {} words for {}x{} tile",
+                image.len(),
+                self.k,
+                self.n
+            )));
+        }
+        self.image.copy_from_slice(image);
+        self.ledger.write += self.k as u64;
+        Ok(())
+    }
+
+    fn compute(&mut self, u: &[u8], lanes: usize) -> Result<Vec<i32>> {
+        if lanes == 0 || lanes > self.m {
+            return Err(Error::shape(format!(
+                "lanes {lanes} out of range 1..={}",
+                self.m
+            )));
+        }
+        if u.len() != lanes * self.k {
+            return Err(Error::shape("input block size mismatch".to_string()));
+        }
+        // Pad to the artifact's static M with the zero code (value 0).
+        let out = if lanes == self.m {
+            self.rt
+                .execute_tile(&self.name, u, &self.image, self.m, self.k, self.n)?
+        } else {
+            let mut padded = vec![encode_offset(0); self.m * self.k];
+            padded[..lanes * self.k].copy_from_slice(u);
+            let full = self.rt.execute_tile(
+                &self.name,
+                &padded,
+                &self.image,
+                self.m,
+                self.k,
+                self.n,
+            )?;
+            full[..lanes * self.n].to_vec()
+        };
+        self.ledger.compute += 1;
+        Ok(out)
+    }
+
+    fn cycles(&self) -> CycleLedger {
+        self.ledger
+    }
+}

@@ -1,0 +1,24 @@
+//! PJRT execution of the AOT-compiled JAX/Pallas artifacts.
+//!
+//! `make artifacts` lowers the L2/L1 Python stack to HLO *text* files in
+//! `artifacts/` (text, not serialized protos — jax ≥ 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns them).  This module loads those files, compiles them on the
+//! PJRT CPU client once, and executes them from the Rust hot path:
+//!
+//! * [`PjrtRuntime`] — client + executable cache.
+//! * [`PjrtTileExecutor`] — a [`crate::mttkrp::TileExecutor`] backed by the
+//!   `psram_tile_*` Pallas kernel, bit-exact against the analog simulator
+//!   and the CPU integer executor.
+//! * [`artifacts`] — artifact discovery and the manifest registry.
+//!
+//! Python never runs at request time; the binary is self-contained once
+//! `artifacts/` exists.
+
+pub mod artifacts;
+pub mod executor;
+pub mod pjrt;
+
+pub use artifacts::{find_artifacts_dir, Manifest, TileVariant};
+pub use executor::PjrtTileExecutor;
+pub use pjrt::PjrtRuntime;

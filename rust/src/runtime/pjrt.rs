@@ -1,0 +1,154 @@
+//! The PJRT client wrapper: compile-once, execute-many for the HLO text
+//! artifacts (see `/opt/xla-example/load_hlo` for the reference wiring).
+
+use super::artifacts::{find_artifacts_dir, Manifest};
+use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// PJRT CPU client plus a cache of compiled executables keyed by artifact
+/// name.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Create a runtime from the default artifacts directory.
+    pub fn new() -> Result<Self> {
+        let dir = find_artifacts_dir()?;
+        Self::from_dir(&dir)
+    }
+
+    /// Create a runtime from an explicit artifacts directory.
+    pub fn from_dir(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime { client, manifest, cache: HashMap::new() })
+    }
+
+    /// The artifact manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let path = self
+                .manifest
+                .tiles
+                .iter()
+                .find(|t| t.name == name)
+                .map(|t| t.path.clone())
+                .or_else(|| self.manifest.other(name).cloned())
+                .ok_or_else(|| {
+                    Error::Artifact(format!("unknown artifact {name:?}"))
+                })?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| {
+                    Error::Artifact(format!("non-utf8 path {}", path.display()))
+                })?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute a quantized tile kernel: `u8[m,k] x s8[k,n] -> s32[m,n]`.
+    pub fn execute_tile(
+        &mut self,
+        name: &str,
+        u: &[u8],
+        w: &[i8],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Result<Vec<i32>> {
+        if u.len() != m * k || w.len() != k * n {
+            return Err(Error::shape(format!(
+                "tile {name}: u has {} codes (want {}), w has {} words (want {})",
+                u.len(),
+                m * k,
+                w.len(),
+                k * n
+            )));
+        }
+        let lit_u =
+            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, &[m, k], u)?;
+        let w_bytes =
+            unsafe { std::slice::from_raw_parts(w.as_ptr() as *const u8, w.len()) };
+        let lit_w = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S8,
+            &[k, n],
+            w_bytes,
+        )?;
+        let exe = self.load(name)?;
+        let result = exe.execute::<xla::Literal>(&[lit_u, lit_w])?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True -> unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let v = out.to_vec::<i32>()?;
+        if v.len() != m * n {
+            return Err(Error::Runtime(format!(
+                "tile {name} returned {} elements, want {}",
+                v.len(),
+                m * n
+            )));
+        }
+        Ok(v)
+    }
+
+    /// Execute a dense f32 MTTKRP baseline artifact:
+    /// `f32[i,j,k] x f32[j,r] x f32[k,r] -> f32[i,r]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn execute_mttkrp_f32(
+        &mut self,
+        name: &str,
+        x: &[f32],
+        b: &[f32],
+        c: &[f32],
+        i: usize,
+        j: usize,
+        k: usize,
+        r: usize,
+    ) -> Result<Vec<f32>> {
+        if x.len() != i * j * k || b.len() != j * r || c.len() != k * r {
+            return Err(Error::shape(format!("mttkrp {name}: operand sizes wrong")));
+        }
+        let as_bytes = |s: &[f32]| unsafe {
+            std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 4).to_vec()
+        };
+        let lx = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &[i, j, k],
+            &as_bytes(x),
+        )?;
+        let lb = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &[j, r],
+            &as_bytes(b),
+        )?;
+        let lc = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &[k, r],
+            &as_bytes(c),
+        )?;
+        let exe = self.load(name)?;
+        let result =
+            exe.execute::<xla::Literal>(&[lx, lb, lc])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+// Integration tests (needing artifacts + the PJRT runtime) live in
+// rust/tests/pjrt_integration.rs so they can be filtered separately.

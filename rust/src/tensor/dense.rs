@@ -1,0 +1,262 @@
+//! N-mode dense tensors with mode-n unfolding (matricization).
+
+use super::linalg::Matrix;
+use crate::util::error::{Error, Result};
+use crate::util::prng::Prng;
+
+/// A dense N-mode tensor, row-major over `shape`.
+#[derive(Debug, Clone)]
+pub struct DenseTensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl DenseTensor {
+    /// Zero tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        DenseTensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// From a row-major buffer.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            return Err(Error::shape(format!(
+                "buffer of {} for tensor {shape:?}",
+                data.len()
+            )));
+        }
+        Ok(DenseTensor { shape: shape.to_vec(), data })
+    }
+
+    /// I.i.d. standard normal entries.
+    pub fn randn(shape: &[usize], rng: &mut Prng) -> Self {
+        let mut t = DenseTensor::zeros(shape);
+        rng.fill_normal_f32(&mut t.data);
+        t
+    }
+
+    /// Synthesize a low-rank CP tensor from factor matrices
+    /// (`factors[m]` is `[shape[m], R]`) plus optional Gaussian noise —
+    /// the standard recoverability workload for CP-ALS.
+    pub fn from_cp_factors(
+        factors: &[Matrix],
+        noise_sigma: f32,
+        rng: &mut Prng,
+    ) -> Result<Self> {
+        if factors.is_empty() {
+            return Err(Error::shape("no factors".to_string()));
+        }
+        let r = factors[0].cols();
+        if factors.iter().any(|f| f.cols() != r) {
+            return Err(Error::shape("factor rank mismatch".to_string()));
+        }
+        let shape: Vec<usize> = factors.iter().map(|f| f.rows()).collect();
+        let mut t = DenseTensor::zeros(&shape);
+        let mut idx = vec![0usize; shape.len()];
+        for flat in 0..t.data.len() {
+            let mut v = 0f64;
+            for rr in 0..r {
+                let mut p = 1f64;
+                for (m, &im) in idx.iter().enumerate() {
+                    p *= factors[m].get(im, rr) as f64;
+                }
+                v += p;
+            }
+            t.data[flat] = v as f32 + noise_sigma * rng.normal() as f32;
+            // increment multi-index (last mode fastest)
+            for m in (0..shape.len()).rev() {
+                idx[m] += 1;
+                if idx[m] < shape[m] {
+                    break;
+                }
+                idx[m] = 0;
+            }
+        }
+        Ok(t)
+    }
+
+    /// Tensor shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of modes.
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Total elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if the tensor has no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Row-major data.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable row-major data.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Flat index of a multi-index.
+    pub fn flat_index(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut f = 0;
+        for (m, &i) in idx.iter().enumerate() {
+            debug_assert!(i < self.shape[m]);
+            f = f * self.shape[m] + i;
+        }
+        f
+    }
+
+    /// Element at a multi-index.
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.flat_index(idx)]
+    }
+
+    /// Set element at a multi-index.
+    pub fn set(&mut self, idx: &[usize], v: f32) {
+        let f = self.flat_index(idx);
+        self.data[f] = v;
+    }
+
+    /// Mode-n unfolding `X_(n)`: `[shape[n], prod(others)]`, remaining modes
+    /// in increasing order, last fastest (see module docs of [`super`]).
+    pub fn unfold(&self, mode: usize) -> Result<Matrix> {
+        if mode >= self.ndim() {
+            return Err(Error::shape(format!("mode {mode} of {}-mode tensor", self.ndim())));
+        }
+        let i_n = self.shape[mode];
+        let rest: usize = self.len() / i_n;
+        let mut out = Matrix::zeros(i_n, rest);
+        // Walk the tensor once; compute (row, col) per element.
+        let mut idx = vec![0usize; self.ndim()];
+        for flat in 0..self.len() {
+            let row = idx[mode];
+            let mut col = 0usize;
+            for (m, &im) in idx.iter().enumerate() {
+                if m != mode {
+                    col = col * self.shape[m] + im;
+                }
+            }
+            out.set(row, col, self.data[flat]);
+            for m in (0..self.ndim()).rev() {
+                idx[m] += 1;
+                if idx[m] < self.shape[m] {
+                    break;
+                }
+                idx[m] = 0;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        crate::util::stats::fro_norm(&self.data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seq_tensor(shape: &[usize]) -> DenseTensor {
+        let n: usize = shape.iter().product();
+        DenseTensor::from_vec(shape, (0..n).map(|i| i as f32).collect()).unwrap()
+    }
+
+    #[test]
+    fn flat_index_row_major() {
+        let t = seq_tensor(&[2, 3, 4]);
+        assert_eq!(t.at(&[0, 0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 0, 3]), 3.0);
+        assert_eq!(t.at(&[0, 1, 0]), 4.0);
+        assert_eq!(t.at(&[1, 0, 0]), 12.0);
+        assert_eq!(t.at(&[1, 2, 3]), 23.0);
+    }
+
+    #[test]
+    fn unfold_mode0_is_reshape() {
+        // Mode-0 unfolding of a row-major tensor is a plain reshape.
+        let t = seq_tensor(&[2, 3, 4]);
+        let m = t.unfold(0).unwrap();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 12);
+        assert_eq!(m.row(0), &t.data()[0..12]);
+        assert_eq!(m.row(1), &t.data()[12..24]);
+    }
+
+    #[test]
+    fn unfold_mode1_columns_ordered_i_then_k() {
+        let t = seq_tensor(&[2, 3, 4]);
+        let m = t.unfold(1).unwrap();
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 8);
+        // column index = i*4 + k
+        for j in 0..3 {
+            for i in 0..2 {
+                for k in 0..4 {
+                    assert_eq!(m.get(j, i * 4 + k), t.at(&[i, j, k]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unfold_mode2() {
+        let t = seq_tensor(&[2, 3, 4]);
+        let m = t.unfold(2).unwrap();
+        assert_eq!((m.rows(), m.cols()), (4, 6));
+        for k in 0..4 {
+            for i in 0..2 {
+                for j in 0..3 {
+                    assert_eq!(m.get(k, i * 3 + j), t.at(&[i, j, k]));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unfold_bad_mode_errors() {
+        assert!(seq_tensor(&[2, 2]).unfold(2).is_err());
+    }
+
+    #[test]
+    fn cp_synthesis_rank1_exact() {
+        // rank-1: X[i,j] = a[i] * b[j]
+        let a = Matrix::from_vec(2, 1, vec![1.0, 2.0]).unwrap();
+        let b = Matrix::from_vec(3, 1, vec![3.0, 4.0, 5.0]).unwrap();
+        let mut rng = Prng::new(0);
+        let t = DenseTensor::from_cp_factors(&[a, b], 0.0, &mut rng).unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.at(&[1, 2]), 10.0);
+        assert_eq!(t.at(&[0, 0]), 3.0);
+    }
+
+    #[test]
+    fn cp_synthesis_rank_mismatch_rejected() {
+        let a = Matrix::zeros(2, 2);
+        let b = Matrix::zeros(3, 3);
+        let mut rng = Prng::new(0);
+        assert!(DenseTensor::from_cp_factors(&[a, b], 0.0, &mut rng).is_err());
+    }
+
+    #[test]
+    fn noise_changes_entries() {
+        let a = Matrix::from_vec(2, 1, vec![1.0, 1.0]).unwrap();
+        let b = Matrix::from_vec(2, 1, vec![1.0, 1.0]).unwrap();
+        let mut rng = Prng::new(7);
+        let t = DenseTensor::from_cp_factors(&[a, b], 0.5, &mut rng).unwrap();
+        assert!(t.data().iter().any(|&v| (v - 1.0).abs() > 1e-6));
+    }
+}

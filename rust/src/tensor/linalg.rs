@@ -1,0 +1,400 @@
+//! Row-major f32 matrices and the dense linear algebra used by CP-ALS:
+//! matmul, Gram matrices, Hadamard products, SPD Cholesky solves, and
+//! column normalisation.  Deliberately small — no BLAS offline — but the
+//! matmul is blocked/AXPY-shaped so it autovectorizes.
+
+use crate::util::error::{Error, Result};
+use crate::util::prng::Prng;
+
+/// A dense row-major f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// From an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::shape(format!(
+                "buffer of {} for {rows}x{cols} matrix",
+                data.len()
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// I.i.d. standard normal entries (deterministic from the PRNG).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Prng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_normal_f32(&mut m.data);
+        m
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row-major data.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable row-major data.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable row `r`.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// `self @ other` — k-inner AXPY loop (vectorizes well for our sizes).
+    pub fn matmul(&self, other: &Matrix) -> Result<Matrix> {
+        if self.cols != other.rows {
+            return Err(Error::shape(format!(
+                "matmul {}x{} @ {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let mut out = Matrix::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+            for (k, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = other.row(k);
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Gram matrix `Aᵀ A` (`cols x cols`, SPD for full-rank A).
+    pub fn gram(&self) -> Matrix {
+        let n = self.cols;
+        let mut g = Matrix::zeros(n, n);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for i in 0..n {
+                let ai = row[i];
+                if ai == 0.0 {
+                    continue;
+                }
+                let grow = &mut g.data[i * n..(i + 1) * n];
+                for (gj, &aj) in grow.iter_mut().zip(row) {
+                    *gj += ai * aj;
+                }
+            }
+        }
+        g
+    }
+
+    /// Elementwise (Hadamard) product.
+    pub fn hadamard(&self, other: &Matrix) -> Result<Matrix> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::shape(format!(
+                "hadamard {}x{} o {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a * b)
+            .collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        crate::util::stats::fro_norm(&self.data)
+    }
+
+    /// Largest absolute entry.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    /// Normalise each column to unit 2-norm; returns the norms (lambda
+    /// weights in CP-ALS).  Zero columns are left as-is with weight 0.
+    pub fn normalize_columns(&mut self) -> Vec<f32> {
+        let mut norms = vec![0f32; self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let v = self.get(r, c);
+                norms[c] += v * v;
+            }
+        }
+        for n in norms.iter_mut() {
+            *n = n.sqrt();
+        }
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                if norms[c] > 0.0 {
+                    self.data[r * self.cols + c] /= norms[c];
+                }
+            }
+        }
+        norms
+    }
+
+    /// Scale column `c` by `s`.
+    pub fn scale_column(&mut self, c: usize, s: f32) {
+        for r in 0..self.rows {
+            self.data[r * self.cols + c] *= s;
+        }
+    }
+
+    /// Cholesky factorisation of an SPD matrix (lower L with `self = L Lᵀ`).
+    /// Fails on non-SPD input.
+    pub fn cholesky(&self) -> Result<Matrix> {
+        if self.rows != self.cols {
+            return Err(Error::shape("cholesky of non-square matrix".to_string()));
+        }
+        let n = self.rows;
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = self.get(i, j) as f64;
+                for k in 0..j {
+                    s -= l.get(i, k) as f64 * l.get(j, k) as f64;
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        return Err(Error::Numerical(format!(
+                            "matrix not SPD at pivot {i} (s={s})"
+                        )));
+                    }
+                    l.set(i, j, (s.sqrt()) as f32);
+                } else {
+                    l.set(i, j, (s / l.get(j, j) as f64) as f32);
+                }
+            }
+        }
+        Ok(l)
+    }
+
+    /// Solve `self @ X = B` for SPD `self` via Cholesky, with a tiny ridge
+    /// retry if the matrix is numerically singular (standard CP-ALS guard).
+    pub fn solve_spd(&self, b: &Matrix) -> Result<Matrix> {
+        if self.rows != b.rows {
+            return Err(Error::shape(format!(
+                "solve {}x{} with rhs {}x{}",
+                self.rows, self.cols, b.rows, b.cols
+            )));
+        }
+        let l = match self.cholesky() {
+            Ok(l) => l,
+            Err(_) => {
+                // ridge: A + eps*tr(A)/n * I
+                let n = self.rows;
+                let tr: f32 = (0..n).map(|i| self.get(i, i)).sum();
+                let eps = (tr / n as f32).max(1e-12) * 1e-6;
+                let mut a = self.clone();
+                for i in 0..n {
+                    let v = a.get(i, i) + eps;
+                    a.set(i, i, v);
+                }
+                a.cholesky()?
+            }
+        };
+        // forward solve L Y = B, then back solve Lᵀ X = Y, column by column.
+        let n = self.rows;
+        let mut x = b.clone();
+        for c in 0..b.cols {
+            // L y = b
+            for i in 0..n {
+                let mut s = x.get(i, c) as f64;
+                for k in 0..i {
+                    s -= l.get(i, k) as f64 * x.get(k, c) as f64;
+                }
+                x.set(i, c, (s / l.get(i, i) as f64) as f32);
+            }
+            // Lᵀ x = y
+            for i in (0..n).rev() {
+                let mut s = x.get(i, c) as f64;
+                for k in i + 1..n {
+                    s -= l.get(k, i) as f64 * x.get(k, c) as f64;
+                }
+                x.set(i, c, (s / l.get(i, i) as f64) as f32);
+            }
+        }
+        Ok(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: &Matrix, b: &Matrix, tol: f32) -> bool {
+        a.rows() == b.rows()
+            && a.cols() == b.cols()
+            && a.data()
+                .iter()
+                .zip(b.data())
+                .all(|(x, y)| (x - y).abs() <= tol)
+    }
+
+    #[test]
+    fn matmul_hand_case() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Prng::new(1);
+        let a = Matrix::randn(5, 7, &mut rng);
+        let i = Matrix::eye(7);
+        assert!(approx(&a.matmul(&i).unwrap(), &a, 1e-6));
+    }
+
+    #[test]
+    fn matmul_shape_error() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Prng::new(2);
+        let a = Matrix::randn(4, 6, &mut rng);
+        assert!(approx(&a.transpose().transpose(), &a, 0.0));
+    }
+
+    #[test]
+    fn gram_matches_explicit() {
+        let mut rng = Prng::new(3);
+        let a = Matrix::randn(10, 4, &mut rng);
+        let g = a.gram();
+        let g2 = a.transpose().matmul(&a).unwrap();
+        assert!(approx(&g, &g2, 1e-4));
+    }
+
+    #[test]
+    fn hadamard_elementwise() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let b = Matrix::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]).unwrap();
+        assert_eq!(a.hadamard(&b).unwrap().data(), &[5.0, 12.0, 21.0, 32.0]);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Prng::new(4);
+        let a = Matrix::randn(8, 8, &mut rng);
+        let mut spd = a.gram(); // AᵀA is SPD (a.s.)
+        for i in 0..8 {
+            spd.set(i, i, spd.get(i, i) + 1.0);
+        }
+        let l = spd.cholesky().unwrap();
+        let re = l.matmul(&l.transpose()).unwrap();
+        assert!(approx(&re, &spd, 1e-3));
+    }
+
+    #[test]
+    fn cholesky_rejects_non_spd() {
+        let m = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]).unwrap();
+        assert!(m.cholesky().is_err()); // eigenvalues 3, -1
+    }
+
+    #[test]
+    fn solve_spd_roundtrip() {
+        let mut rng = Prng::new(5);
+        let a = Matrix::randn(6, 6, &mut rng);
+        let mut spd = a.gram();
+        for i in 0..6 {
+            spd.set(i, i, spd.get(i, i) + 2.0);
+        }
+        let x_true = Matrix::randn(6, 3, &mut rng);
+        let b = spd.matmul(&x_true).unwrap();
+        let x = spd.solve_spd(&b).unwrap();
+        assert!(approx(&x, &x_true, 1e-3));
+    }
+
+    #[test]
+    fn solve_singular_recovers_via_ridge() {
+        // rank-deficient Gram: ridge retry must keep it solvable.
+        let a = Matrix::from_vec(3, 2, vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0]).unwrap();
+        let g = a.gram(); // [[3,3],[3,3]] singular
+        let b = Matrix::from_vec(2, 1, vec![1.0, 1.0]).unwrap();
+        let x = g.solve_spd(&b).unwrap();
+        assert!(x.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn normalize_columns_unit_norm() {
+        let mut m = Matrix::from_vec(2, 2, vec![3.0, 0.0, 4.0, 0.0]).unwrap();
+        let norms = m.normalize_columns();
+        assert!((norms[0] - 5.0).abs() < 1e-6);
+        assert_eq!(norms[1], 0.0);
+        assert!((m.get(0, 0) - 0.6).abs() < 1e-6);
+        assert!((m.get(1, 0) - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn scale_column_works() {
+        let mut m = Matrix::eye(2);
+        m.scale_column(1, 5.0);
+        assert_eq!(m.get(1, 1), 5.0);
+        assert_eq!(m.get(0, 0), 1.0);
+    }
+}

@@ -1,0 +1,24 @@
+//! Tensors and the small dense linear algebra CP-ALS needs.
+//!
+//! * [`linalg`] — row-major f32 [`Matrix`] with matmul, Gram, Hadamard,
+//!   Cholesky solve, column normalisation.
+//! * [`dense`] — N-mode dense tensors with mode-n unfolding.
+//! * [`sparse`] — COO sparse tensors (the shape real MTTKRP workloads take).
+//! * [`kr`] — Khatri-Rao products, matching the unfolding convention.
+//!
+//! Unfolding convention used throughout (and matching
+//! `python/compile/kernels/ref.py`): the mode-n matricization `X_(n)` is
+//! `[shape[n], prod(other dims)]` with the *remaining modes in increasing
+//! order and the last one fastest* (row-major linearisation).  The matching
+//! Khatri-Rao of the remaining factors uses the same ordering, so
+//! `MTTKRP(n) = X_(n) @ KRP(factors != n)`.
+
+pub mod dense;
+pub mod kr;
+pub mod linalg;
+pub mod sparse;
+
+pub use dense::DenseTensor;
+pub use kr::{khatri_rao, krp_all_but};
+pub use linalg::Matrix;
+pub use sparse::CooTensor;

@@ -1,0 +1,242 @@
+//! COO sparse tensors — the form real MTTKRP workloads take (the paper's
+//! motivating kernel is *sparse* MTTKRP on irregular real-world tensors).
+
+use super::dense::DenseTensor;
+use crate::util::error::{Error, Result};
+use crate::util::prng::Prng;
+
+/// A coordinate-format sparse tensor: `nnz` entries of `(multi-index, value)`.
+#[derive(Debug, Clone)]
+pub struct CooTensor {
+    shape: Vec<usize>,
+    /// Flattened indices: entry `e`'s mode-`m` index is
+    /// `indices[e * ndim + m]`.
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CooTensor {
+    /// Empty tensor of a shape.
+    pub fn new(shape: &[usize]) -> Self {
+        CooTensor { shape: shape.to_vec(), indices: Vec::new(), values: Vec::new() }
+    }
+
+    /// Construct from parallel index/value arrays.
+    pub fn from_entries(
+        shape: &[usize],
+        indices: Vec<u32>,
+        values: Vec<f32>,
+    ) -> Result<Self> {
+        let nd = shape.len();
+        if indices.len() != values.len() * nd {
+            return Err(Error::shape(format!(
+                "{} index words for {} values of {nd}-mode tensor",
+                indices.len(),
+                values.len()
+            )));
+        }
+        for e in 0..values.len() {
+            for m in 0..nd {
+                if indices[e * nd + m] as usize >= shape[m] {
+                    return Err(Error::shape(format!(
+                        "entry {e} index {} out of bounds for mode {m} (dim {})",
+                        indices[e * nd + m],
+                        shape[m]
+                    )));
+                }
+            }
+        }
+        Ok(CooTensor { shape: shape.to_vec(), indices, values })
+    }
+
+    /// Random sparse tensor with `nnz` uniformly placed normal entries.
+    /// Duplicate coordinates are allowed (they sum, as in standard COO).
+    pub fn random(shape: &[usize], nnz: usize, rng: &mut Prng) -> Self {
+        let nd = shape.len();
+        let mut indices = Vec::with_capacity(nnz * nd);
+        let mut values = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            for &dim in shape {
+                indices.push(rng.below(dim as u64) as u32);
+            }
+            values.push(rng.normal() as f32);
+        }
+        CooTensor { shape: shape.to_vec(), indices, values }
+    }
+
+    /// Sparsify a dense tensor (entries with |v| > threshold).
+    pub fn from_dense(t: &DenseTensor, threshold: f32) -> Self {
+        let nd = t.ndim();
+        let mut out = CooTensor::new(t.shape());
+        let mut idx = vec![0usize; nd];
+        for flat in 0..t.len() {
+            let v = t.data()[flat];
+            if v.abs() > threshold {
+                for &i in &idx {
+                    out.indices.push(i as u32);
+                }
+                out.values.push(v);
+            }
+            for m in (0..nd).rev() {
+                idx[m] += 1;
+                if idx[m] < t.shape()[m] {
+                    break;
+                }
+                idx[m] = 0;
+            }
+        }
+        out
+    }
+
+    /// Append one entry.
+    pub fn push(&mut self, idx: &[usize], v: f32) -> Result<()> {
+        if idx.len() != self.ndim() {
+            return Err(Error::shape("index arity mismatch".to_string()));
+        }
+        for (m, &i) in idx.iter().enumerate() {
+            if i >= self.shape[m] {
+                return Err(Error::shape(format!("index {i} out of dim {}", self.shape[m])));
+            }
+        }
+        self.indices.extend(idx.iter().map(|&i| i as u32));
+        self.values.push(v);
+        Ok(())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Entry `e`: (indices, value).
+    #[inline]
+    pub fn entry(&self, e: usize) -> (&[u32], f32) {
+        let nd = self.ndim();
+        (&self.indices[e * nd..(e + 1) * nd], self.values[e])
+    }
+
+    /// Values slice.
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Iterate entries as (index slice, value).
+    pub fn iter(&self) -> impl Iterator<Item = (&[u32], f32)> + '_ {
+        let nd = self.ndim();
+        self.indices
+            .chunks_exact(nd)
+            .zip(self.values.iter().copied())
+    }
+
+    /// Sort entries by the given mode's index (stable) — the layout the
+    /// output-mode scheduler wants so one output row's updates are
+    /// contiguous.
+    pub fn sort_by_mode(&mut self, mode: usize) {
+        let nd = self.ndim();
+        let mut order: Vec<usize> = (0..self.nnz()).collect();
+        order.sort_by_key(|&e| self.indices[e * nd + mode]);
+        let mut new_idx = Vec::with_capacity(self.indices.len());
+        let mut new_val = Vec::with_capacity(self.values.len());
+        for &e in &order {
+            new_idx.extend_from_slice(&self.indices[e * nd..(e + 1) * nd]);
+            new_val.push(self.values[e]);
+        }
+        self.indices = new_idx;
+        self.values = new_val;
+    }
+
+    /// Materialise to dense (test aid; duplicates sum).
+    pub fn to_dense(&self) -> DenseTensor {
+        let mut t = DenseTensor::zeros(&self.shape);
+        for (idx, v) in self.iter() {
+            let mi: Vec<usize> = idx.iter().map(|&i| i as usize).collect();
+            let f = t.flat_index(&mi);
+            t.data_mut()[f] += v;
+        }
+        t
+    }
+
+    /// Density (nnz / total cells).
+    pub fn density(&self) -> f64 {
+        let total: usize = self.shape.iter().product();
+        self.nnz() as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_roundtrip_dense() {
+        let mut t = CooTensor::new(&[2, 3]);
+        t.push(&[0, 1], 5.0).unwrap();
+        t.push(&[1, 2], -3.0).unwrap();
+        let d = t.to_dense();
+        assert_eq!(d.at(&[0, 1]), 5.0);
+        assert_eq!(d.at(&[1, 2]), -3.0);
+        assert_eq!(d.at(&[0, 0]), 0.0);
+        assert_eq!(t.nnz(), 2);
+    }
+
+    #[test]
+    fn duplicates_sum_in_dense() {
+        let mut t = CooTensor::new(&[2, 2]);
+        t.push(&[1, 1], 2.0).unwrap();
+        t.push(&[1, 1], 3.0).unwrap();
+        assert_eq!(t.to_dense().at(&[1, 1]), 5.0);
+    }
+
+    #[test]
+    fn from_dense_respects_threshold() {
+        let d = DenseTensor::from_vec(&[2, 2], vec![0.0, 0.5, -2.0, 0.05]).unwrap();
+        let s = CooTensor::from_dense(&d, 0.1);
+        assert_eq!(s.nnz(), 2);
+        let back = s.to_dense();
+        assert_eq!(back.at(&[0, 1]), 0.5);
+        assert_eq!(back.at(&[1, 0]), -2.0);
+        assert_eq!(back.at(&[1, 1]), 0.0);
+    }
+
+    #[test]
+    fn out_of_bounds_rejected() {
+        let mut t = CooTensor::new(&[2, 2]);
+        assert!(t.push(&[2, 0], 1.0).is_err());
+        assert!(t.push(&[0], 1.0).is_err());
+        assert!(CooTensor::from_entries(&[2, 2], vec![0, 5], vec![1.0]).is_err());
+        assert!(CooTensor::from_entries(&[2, 2], vec![0, 1, 1], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn random_has_requested_nnz_and_valid_indices() {
+        let mut rng = crate::util::prng::Prng::new(3);
+        let t = CooTensor::random(&[10, 20, 30], 500, &mut rng);
+        assert_eq!(t.nnz(), 500);
+        for (idx, _) in t.iter() {
+            assert!(idx[0] < 10 && idx[1] < 20 && idx[2] < 30);
+        }
+        assert!((t.density() - 500.0 / 6000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sort_by_mode_orders_entries() {
+        let mut rng = crate::util::prng::Prng::new(4);
+        let mut t = CooTensor::random(&[50, 5, 5], 200, &mut rng);
+        t.sort_by_mode(0);
+        let rows: Vec<u32> = t.iter().map(|(i, _)| i[0]).collect();
+        assert!(rows.windows(2).all(|w| w[0] <= w[1]));
+        // sorting must not change the dense materialisation
+        let before = t.to_dense();
+        t.sort_by_mode(2);
+        let after = t.to_dense();
+        assert_eq!(before.data(), after.data());
+    }
+}

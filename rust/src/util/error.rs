@@ -1,0 +1,75 @@
+//! Crate-wide error type.
+
+/// Errors produced by the psram-imc stack.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Shape/dimension mismatch in tensor or array operations.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// A configuration is physically or logically inadmissible
+    /// (e.g. more WDM channels than the comb can carry).
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    /// A scheduling invariant was violated.
+    #[error("schedule error: {0}")]
+    Schedule(String),
+
+    /// The PJRT runtime failed to load or execute an artifact.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// An artifact file is missing or malformed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// The coordinator hit an internal fault (worker death, channel close).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Numerical failure (non-finite values, singular matrix, ...).
+    #[error("numerical error: {0}")]
+    Numerical(String),
+
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    #[error(transparent)]
+    Xla(#[from] xla::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Shorthand for a shape error with formatted context.
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+
+    /// Shorthand for a configuration error with formatted context.
+    pub fn config(msg: impl Into<String>) -> Self {
+        Error::Config(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_context() {
+        let e = Error::shape("got 3x4, want 4x3");
+        assert!(e.to_string().contains("3x4"));
+        let e = Error::config("53 > 52 channels");
+        assert!(e.to_string().contains("53"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

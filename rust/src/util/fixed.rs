@@ -1,0 +1,245 @@
+//! Fixed-point helpers: the Rust half of the quantization contract shared
+//! with `python/compile/kernels/ref.py`.
+//!
+//! * operands are symmetrically quantized to signed `bits` integers,
+//! * inputs are intensity-encoded as offset-binary `u = x + 128` (uint8),
+//! * stored words are int8 two's complement, decomposed into bit-planes,
+//! * the bit-significance weight of plane `b` is `2^b`, except the sign
+//!   plane which weighs `-2^(WORD_BITS-1)`.
+//!
+//! Every function here must agree bit-exactly with its Python counterpart;
+//! `compute::engine` and the PJRT-executed Pallas kernel are cross-checked
+//! against each other through these definitions.
+
+/// Offset-binary bias of the intensity encoding.
+pub const OFFSET: i32 = 128;
+
+/// Bits per pSRAM word in the paper's configuration.
+pub const WORD_BITS: u32 = 8;
+
+/// Symmetric per-tile quantization: returns `(q, scale)` with `a ≈ scale*q`,
+/// `|q| <= 2^(bits-1) - 1`.  Zero input gets scale 1.0.  Matches
+/// `ref.quantize_sym` (round-half-to-even like `np.rint`).
+pub fn quantize_sym(a: &[f32], bits: u32) -> (Vec<i32>, f32) {
+    assert!((2..=16).contains(&bits), "bits={bits}");
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let amax = a.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    let scale = if amax > 0.0 { amax / qmax } else { 1.0 };
+    let q = a
+        .iter()
+        .map(|&x| {
+            let v = round_half_even(x / scale);
+            v.clamp(-qmax, qmax) as i32
+        })
+        .collect();
+    (q, scale)
+}
+
+/// Round half to even, matching numpy's `rint` (and IEEE default).
+#[inline]
+pub fn round_half_even(x: f32) -> f32 {
+    // f32::round() rounds half away from zero; emulate banker's rounding.
+    let r = x.round();
+    if (x - x.trunc()).abs() == 0.5 {
+        // halfway case: pick the even neighbour
+        if r as i64 % 2 == 0 {
+            r
+        } else {
+            r - x.signum()
+        }
+    } else {
+        r
+    }
+}
+
+/// Encode a signed value in [-128, 127] as offset-binary uint8.
+#[inline]
+pub fn encode_offset(x: i32) -> u8 {
+    debug_assert!((-OFFSET..OFFSET).contains(&x), "x={x} out of int8 range");
+    (x + OFFSET) as u8
+}
+
+/// Decode an offset-binary uint8 back to the signed value.
+#[inline]
+pub fn decode_offset(u: u8) -> i32 {
+    u as i32 - OFFSET
+}
+
+/// Bit `b` of an int8 word's two's-complement pattern (0 or 1).
+#[inline]
+pub fn word_bit(w: i8, b: u32) -> u32 {
+    ((w as u8 as u32) >> b) & 1
+}
+
+/// Output-encoding weight of bit-plane `b` (sign plane is negative).
+#[inline]
+pub fn plane_weight(b: u32) -> i32 {
+    if b == WORD_BITS - 1 {
+        -(1 << (WORD_BITS - 1))
+    } else {
+        1 << b
+    }
+}
+
+/// Reference quantized matmul: `(u - 128) @ w` in exact i32 arithmetic.
+/// `u`: row-major `[m, k]` offset-binary; `w`: row-major `[k, n]` int8.
+pub fn quant_matmul_ref(u: &[u8], w: &[i8], m: usize, k: usize, n: usize) -> Vec<i32> {
+    assert_eq!(u.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let x = u[i * k + p] as i32 - OFFSET;
+            if x == 0 {
+                continue;
+            }
+            let wrow = &w[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += x * wrow[j] as i32;
+            }
+        }
+    }
+    out
+}
+
+/// Fused quantize+encode: symmetric int8 quantization of `a` written
+/// directly as offset-binary codes into `out[..a.len()]` (no intermediate
+/// allocation — the pipeline hot path; EXPERIMENTS.md §Perf).  Returns the
+/// scale.  Bit-identical to `quantize_sym` + `encode_offset`.
+pub fn quantize_encode_into(a: &[f32], out: &mut [u8]) -> f32 {
+    debug_assert!(out.len() >= a.len());
+    let qmax = 127f32;
+    let amax = a.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    let scale = if amax > 0.0 { amax / qmax } else { 1.0 };
+    let inv = 1.0 / scale;
+    for (o, &x) in out.iter_mut().zip(a) {
+        let v = round_half_even(x * inv).clamp(-qmax, qmax) as i32;
+        *o = (v + OFFSET) as u8;
+    }
+    scale
+}
+
+/// Same as [`quant_matmul_ref`] but over a pre-sign-extended i32 image —
+/// the optimized hot-path variant (EXPERIMENTS.md §Perf).
+pub fn quant_matmul_i32(u: &[u8], w: &[i32], m: usize, k: usize, n: usize) -> Vec<i32> {
+    assert_eq!(u.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    let mut out = vec![0i32; m * n];
+    for i in 0..m {
+        let urow = &u[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &code) in urow.iter().enumerate() {
+            let x = code as i32 - OFFSET;
+            if x == 0 {
+                continue;
+            }
+            let wrow = &w[p * n..(p + 1) * n];
+            // plain zip AXPY — measured faster than manual 8-wide unrolling
+            // (the autovectorizer handles this shape well); see §Perf log.
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += x * wv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn offset_roundtrip_full_range() {
+        for x in -128..=127 {
+            assert_eq!(decode_offset(encode_offset(x)), x);
+        }
+    }
+
+    #[test]
+    fn plane_weights_reconstruct_any_int8() {
+        for w in i8::MIN..=i8::MAX {
+            let v: i32 = (0..WORD_BITS)
+                .map(|b| plane_weight(b) * word_bit(w, b) as i32)
+                .sum();
+            assert_eq!(v, w as i32);
+        }
+    }
+
+    #[test]
+    fn quantize_sym_bounds() {
+        let mut p = Prng::new(1);
+        for bits in [4u32, 8, 16] {
+            let a: Vec<f32> = (0..256).map(|_| p.normal() as f32).collect();
+            let (q, s) = quantize_sym(&a, bits);
+            let qmax = (1i32 << (bits - 1)) - 1;
+            assert!(q.iter().all(|&v| v.abs() <= qmax));
+            for (x, qi) in a.iter().zip(&q) {
+                assert!((s * *qi as f32 - x).abs() <= s / 2.0 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_sym_zero_tensor() {
+        let (q, s) = quantize_sym(&[0.0; 8], 8);
+        assert_eq!(s, 1.0);
+        assert!(q.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn quantize_preserves_extremes() {
+        let a = [1.0f32, -1.0, 0.5];
+        let (q, s) = quantize_sym(&a, 8);
+        assert_eq!(q[0], 127);
+        assert_eq!(q[1], -127);
+        assert!((s - 1.0 / 127.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn quant_matmul_ref_small_hand_case() {
+        // u encodes x = [[1, -2]], w = [[3], [4]]  ->  1*3 + (-2)*4 = -5
+        let u = [encode_offset(1), encode_offset(-2)];
+        let w = [3i8, 4i8];
+        let out = quant_matmul_ref(&u, &w, 1, 2, 1);
+        assert_eq!(out, vec![-5]);
+    }
+
+    #[test]
+    fn quantize_encode_into_matches_two_step() {
+        let mut p = Prng::new(3);
+        let a: Vec<f32> = (0..512).map(|_| p.normal() as f32).collect();
+        let (q, s1) = quantize_sym(&a, 8);
+        let mut codes = vec![0u8; a.len()];
+        let s2 = quantize_encode_into(&a, &mut codes);
+        assert_eq!(s1, s2);
+        for (qi, c) in q.iter().zip(&codes) {
+            assert_eq!(encode_offset(*qi), *c);
+        }
+    }
+
+    #[test]
+    fn quant_matmul_i32_matches_ref() {
+        let mut p = Prng::new(2);
+        let (m, k, n) = (5usize, 64usize, 7usize);
+        let u: Vec<u8> = (0..m * k).map(|_| p.next_u8()).collect();
+        let w8: Vec<i8> = (0..k * n).map(|_| p.next_i8()).collect();
+        let w32: Vec<i32> = w8.iter().map(|&v| v as i32).collect();
+        assert_eq!(
+            quant_matmul_ref(&u, &w8, m, k, n),
+            quant_matmul_i32(&u, &w32, m, k, n)
+        );
+    }
+
+    #[test]
+    fn round_half_even_matches_numpy_cases() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(1.2), 1.0);
+        assert_eq!(round_half_even(-1.7), -2.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! Shared utilities: errors, PRNG, statistics, fixed-point helpers, physical
+//! units, and a tiny in-crate property-testing harness (this image has no
+//! network access, so no proptest/criterion/rand crates).
+
+pub mod error;
+pub mod fixed;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+pub mod units;
+
+pub use error::{Error, Result};
+pub use prng::Prng;

@@ -1,0 +1,161 @@
+//! A tiny in-crate property-testing harness (no proptest crate offline).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` independently seeded
+//! [`Prng`] streams.  On failure it retries the failing seed with a bisected
+//! "size" parameter (a lightweight stand-in for shrinking) and panics with
+//! the seed so the case is reproducible:
+//!
+//! ```text
+//! property 'schedule covers nonzeros' failed at seed=0x1d4c... (case 17/100)
+//! ```
+
+use super::prng::Prng;
+
+/// Context handed to each property case: a seeded PRNG plus a size hint
+/// growing from small to large across cases (like proptest's sizing).
+pub struct Case {
+    /// Independent random stream for this case.
+    pub rng: Prng,
+    /// Grows roughly linearly from 1 to `max_size` across the run.
+    pub size: usize,
+    /// Case ordinal (0-based).
+    pub index: usize,
+}
+
+/// Configuration for a property run.
+pub struct Config {
+    pub cases: usize,
+    pub max_size: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 100, max_size: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run a property with the default configuration.
+pub fn check<F>(name: &str, f: F)
+where
+    F: Fn(&mut Case) -> Result<(), String>,
+{
+    check_with(name, Config::default(), f)
+}
+
+/// Run a property with an explicit configuration.
+pub fn check_with<F>(name: &str, cfg: Config, f: F)
+where
+    F: Fn(&mut Case) -> Result<(), String>,
+{
+    for i in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = 1 + i * cfg.max_size / cfg.cases.max(1);
+        let mut case = Case { rng: Prng::new(case_seed), size, index: i };
+        if let Err(msg) = f(&mut case) {
+            // "Shrink": retry with progressively smaller sizes to report the
+            // smallest size that still fails (same seed -> deterministic).
+            let mut smallest = (size, msg.clone());
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut c = Case { rng: Prng::new(case_seed), size: s, index: i };
+                match f(&mut c) {
+                    Err(m) => {
+                        smallest = (s, m);
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed at seed={case_seed:#x} (case {i}/{}) \
+                 smallest failing size={}: {}",
+                cfg.cases, smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Assert-style helper returning `Result<(), String>` for use inside
+/// properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)+) => {
+        if !$cond {
+            return Err(format!($($arg)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Assert equality inside a property with a diff message.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("addition commutes", |c| {
+            let a = c.rng.range_i64(-1000, 1000);
+            let b = c.rng.range_i64(-1000, 1000);
+            prop_assert_eq!(a + b, b + a);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_reports_seed() {
+        check("always fails", |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn sizes_grow_across_cases() {
+        use std::cell::Cell;
+        let max_seen = Cell::new(0usize);
+        check_with(
+            "sizes grow",
+            Config { cases: 50, max_size: 40, seed: 1 },
+            |c| {
+                assert!(c.size >= 1 && c.size <= 41);
+                max_seen.set(max_seen.get().max(c.size));
+                Ok(())
+            },
+        );
+        assert!(max_seen.get() > 30, "sizes should approach max_size");
+    }
+
+    #[test]
+    #[should_panic(expected = "smallest failing size=1")]
+    fn shrink_reports_smallest_size() {
+        // Fails at any size -> the shrinker must walk down to 1.
+        check_with(
+            "always fails sized",
+            Config { cases: 1, max_size: 64, seed: 2 },
+            |c| {
+                prop_assert!(c.size == 0, "size={} > 0", c.size);
+                Ok(())
+            },
+        );
+    }
+}

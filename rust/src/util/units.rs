@@ -1,0 +1,148 @@
+//! Physical units and conversions used by the device and performance models.
+//!
+//! Everything internal is SI (Hz, J, W, m); these helpers exist so the
+//! paper's numbers (GHz, pJ/bit, aJ/bit, dBm, nm) can be written down
+//! verbatim and converted explicitly at the boundary.
+
+/// Speed of light in vacuum (m/s).
+pub const C_M_PER_S: f64 = 299_792_458.0;
+
+/// Elementary charge (C).
+pub const Q_ELECTRON: f64 = 1.602_176_634e-19;
+
+/// Boltzmann constant (J/K).
+pub const K_BOLTZMANN: f64 = 1.380_649e-23;
+
+/// Planck constant (J·s).
+pub const H_PLANCK: f64 = 6.626_070_15e-34;
+
+#[inline]
+pub fn ghz(f: f64) -> f64 {
+    f * 1e9
+}
+
+#[inline]
+pub fn to_ghz(hz: f64) -> f64 {
+    hz / 1e9
+}
+
+#[inline]
+pub fn pj(e: f64) -> f64 {
+    e * 1e-12
+}
+
+#[inline]
+pub fn aj(e: f64) -> f64 {
+    e * 1e-18
+}
+
+#[inline]
+pub fn nm(l: f64) -> f64 {
+    l * 1e-9
+}
+
+#[inline]
+pub fn mw(p: f64) -> f64 {
+    p * 1e-3
+}
+
+/// dBm -> Watts.
+#[inline]
+pub fn dbm_to_w(dbm: f64) -> f64 {
+    1e-3 * 10f64.powf(dbm / 10.0)
+}
+
+/// Watts -> dBm.
+#[inline]
+pub fn w_to_dbm(w: f64) -> f64 {
+    10.0 * (w / 1e-3).log10()
+}
+
+/// dB attenuation -> linear power ratio (loss_db >= 0 gives ratio <= 1).
+#[inline]
+pub fn db_loss_to_ratio(loss_db: f64) -> f64 {
+    10f64.powf(-loss_db / 10.0)
+}
+
+/// Vacuum wavelength (m) -> optical frequency (Hz).
+#[inline]
+pub fn wavelength_to_freq(lambda_m: f64) -> f64 {
+    C_M_PER_S / lambda_m
+}
+
+/// Photon energy (J) at vacuum wavelength `lambda_m`.
+#[inline]
+pub fn photon_energy(lambda_m: f64) -> f64 {
+    H_PLANCK * wavelength_to_freq(lambda_m)
+}
+
+/// Pretty-print an ops/s figure the way the paper does (TeraOps, PetaOps).
+pub fn format_ops(ops_per_s: f64) -> String {
+    if ops_per_s >= 1e15 {
+        format!("{:.2} PetaOps", ops_per_s / 1e15)
+    } else if ops_per_s >= 1e12 {
+        format!("{:.2} TeraOps", ops_per_s / 1e12)
+    } else if ops_per_s >= 1e9 {
+        format!("{:.2} GigaOps", ops_per_s / 1e9)
+    } else {
+        format!("{:.3e} Ops", ops_per_s)
+    }
+}
+
+/// Pretty-print an energy figure (J) at a sensible scale.
+pub fn format_energy(j: f64) -> String {
+    if j >= 1.0 {
+        format!("{j:.3} J")
+    } else if j >= 1e-3 {
+        format!("{:.3} mJ", j * 1e3)
+    } else if j >= 1e-6 {
+        format!("{:.3} uJ", j * 1e6)
+    } else if j >= 1e-9 {
+        format!("{:.3} nJ", j * 1e9)
+    } else if j >= 1e-12 {
+        format!("{:.3} pJ", j * 1e12)
+    } else {
+        format!("{:.3} aJ", j * 1e18)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dbm_roundtrip() {
+        for &dbm in &[-30.0, -10.0, 0.0, 10.0] {
+            assert!((w_to_dbm(dbm_to_w(dbm)) - dbm).abs() < 1e-9);
+        }
+        assert!((dbm_to_w(0.0) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn o_band_photon_energy_about_0_95_ev() {
+        let e = photon_energy(nm(1310.0));
+        let ev = e / Q_ELECTRON;
+        assert!((ev - 0.946).abs() < 0.01, "ev={ev}");
+    }
+
+    #[test]
+    fn loss_ratio_basics() {
+        assert!((db_loss_to_ratio(0.0) - 1.0).abs() < 1e-12);
+        assert!((db_loss_to_ratio(3.0) - 0.501).abs() < 1e-3);
+        assert!((db_loss_to_ratio(10.0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn format_ops_scales() {
+        assert_eq!(format_ops(17.04e15), "17.04 PetaOps");
+        assert!(format_ops(2.5e12).contains("TeraOps"));
+        assert!(format_ops(3.0e9).contains("GigaOps"));
+    }
+
+    #[test]
+    fn format_energy_scales() {
+        assert!(format_energy(1.04e-12).contains("pJ"));
+        assert!(format_energy(16.7e-18).contains("aJ"));
+        assert!(format_energy(2e-6).contains("uJ"));
+    }
+}

@@ -1,0 +1,136 @@
+//! Integration tests for the PJRT runtime layer.  These need `artifacts/`
+//! (run `make artifacts` first — the Makefile test target does).
+
+use psram_imc::mttkrp::pipeline::{
+    AnalogTileExecutor, CpuTileExecutor, PsramPipeline, TileExecutor,
+};
+use psram_imc::mttkrp::reference::dense_mttkrp;
+use psram_imc::runtime::{find_artifacts_dir, Manifest, PjrtRuntime, PjrtTileExecutor};
+use psram_imc::tensor::{DenseTensor, Matrix};
+use psram_imc::util::fixed::quant_matmul_ref;
+use psram_imc::util::prng::Prng;
+
+#[test]
+fn artifacts_exist_and_manifest_has_all_variants() {
+    let dir = find_artifacts_dir().expect("run `make artifacts` first");
+    let man = Manifest::load(&dir).unwrap();
+    assert!(man.paper_tile().is_some());
+    assert!(man.tile(64, 256, 16).is_some());
+    assert!(man.tile(128, 512, 32).is_some());
+    assert!(man.other("mttkrp_f32_64x48x40_r16").is_some());
+    assert!(man.other("mttkrp_f32_32x24x20_r8").is_some());
+}
+
+#[test]
+fn tile_kernel_matches_integer_reference() {
+    let mut rt = PjrtRuntime::new().unwrap();
+    let mut rng = Prng::new(1);
+    for (m, k, n) in [(52usize, 256usize, 32usize), (64, 256, 16), (128, 512, 32)] {
+        let name = format!("psram_tile_{m}x{k}x{n}");
+        let u: Vec<u8> = (0..m * k).map(|_| rng.next_u8()).collect();
+        let w: Vec<i8> = (0..k * n).map(|_| rng.next_i8()).collect();
+        let got = rt.execute_tile(&name, &u, &w, m, k, n).unwrap();
+        let want = quant_matmul_ref(&u, &w, m, k, n);
+        assert_eq!(got, want, "variant {name}");
+    }
+}
+
+#[test]
+fn tile_kernel_extreme_inputs() {
+    let mut rt = PjrtRuntime::new().unwrap();
+    let (m, k, n) = (52usize, 256usize, 32usize);
+    let name = "psram_tile_52x256x32";
+    // max positive inputs against most-negative weights
+    let u = vec![255u8; m * k];
+    let w = vec![-128i8; k * n];
+    let got = rt.execute_tile(name, &u, &w, m, k, n).unwrap();
+    assert!(got.iter().all(|&v| v == (255 - 128) * -128 * 256));
+    // zero code (value 0) against anything
+    let u0 = vec![128u8; m * k];
+    let got0 = rt.execute_tile(name, &u0, &w, m, k, n).unwrap();
+    assert!(got0.iter().all(|&v| v == 0));
+}
+
+#[test]
+fn tile_shape_validation() {
+    let mut rt = PjrtRuntime::new().unwrap();
+    let u = vec![0u8; 10];
+    let w = vec![0i8; 10];
+    assert!(rt.execute_tile("psram_tile_52x256x32", &u, &w, 52, 256, 32).is_err());
+    assert!(rt
+        .execute_tile("no_such_artifact", &[0; 52 * 256], &[0; 256 * 32], 52, 256, 32)
+        .is_err());
+}
+
+#[test]
+fn f32_baseline_matches_rust_reference() {
+    let mut rt = PjrtRuntime::new().unwrap();
+    let mut rng = Prng::new(2);
+    let (i, j, k, r) = (32usize, 24usize, 20usize, 8usize);
+    let x = DenseTensor::randn(&[i, j, k], &mut rng);
+    let b = Matrix::randn(j, r, &mut rng);
+    let c = Matrix::randn(k, r, &mut rng);
+    let got = rt
+        .execute_mttkrp_f32(
+            "mttkrp_f32_32x24x20_r8",
+            x.data(),
+            b.data(),
+            c.data(),
+            i,
+            j,
+            k,
+            r,
+        )
+        .unwrap();
+    let want = dense_mttkrp(&x, &[Matrix::zeros(i, r), b, c], 0).unwrap();
+    assert_eq!(got.len(), want.data().len());
+    for (g, w) in got.iter().zip(want.data()) {
+        assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+    }
+}
+
+#[test]
+fn pjrt_executor_bit_exact_with_cpu_and_analog_in_pipeline() {
+    let mut rng = Prng::new(3);
+    let x = DenseTensor::randn(&[61, 9, 31], &mut rng);
+    let factors: Vec<Matrix> =
+        [61, 9, 31].iter().map(|&d| Matrix::randn(d, 5, &mut rng)).collect();
+
+    let mut cpu = CpuTileExecutor::paper();
+    let out_cpu = PsramPipeline::new(&mut cpu).mttkrp(&x, &factors, 0).unwrap();
+
+    let mut analog = AnalogTileExecutor::ideal();
+    let out_analog = PsramPipeline::new(&mut analog).mttkrp(&x, &factors, 0).unwrap();
+
+    let mut pjrt = PjrtTileExecutor::paper().unwrap();
+    let out_pjrt = PsramPipeline::new(&mut pjrt).mttkrp(&x, &factors, 0).unwrap();
+
+    assert_eq!(out_cpu.data(), out_analog.data());
+    assert_eq!(out_cpu.data(), out_pjrt.data());
+}
+
+#[test]
+fn pjrt_executor_pads_partial_lane_batches() {
+    // 7 lanes < 52: executor must pad to the artifact's static M and slice.
+    let mut rng = Prng::new(4);
+    let mut pjrt = PjrtTileExecutor::paper().unwrap();
+    let mut cpu = CpuTileExecutor::paper();
+    let image: Vec<i8> = (0..256 * 32).map(|_| rng.next_i8()).collect();
+    pjrt.load_image(&image).unwrap();
+    cpu.load_image(&image).unwrap();
+    let u: Vec<u8> = (0..7 * 256).map(|_| rng.next_u8()).collect();
+    assert_eq!(pjrt.compute(&u, 7).unwrap(), cpu.compute(&u, 7).unwrap());
+}
+
+#[test]
+fn pjrt_executor_cycle_accounting_matches_cpu() {
+    let mut rng = Prng::new(5);
+    let x = DenseTensor::randn(&[30, 8, 8], &mut rng);
+    let factors: Vec<Matrix> =
+        [30, 8, 8].iter().map(|&d| Matrix::randn(d, 4, &mut rng)).collect();
+    let mut cpu = CpuTileExecutor::paper();
+    PsramPipeline::new(&mut cpu).mttkrp(&x, &factors, 0).unwrap();
+    let mut pjrt = PjrtTileExecutor::paper().unwrap();
+    PsramPipeline::new(&mut pjrt).mttkrp(&x, &factors, 0).unwrap();
+    assert_eq!(cpu.cycles(), pjrt.cycles());
+}

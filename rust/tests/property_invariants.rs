@@ -1,0 +1,228 @@
+//! Property-based invariants over the pipeline, schedule and coordinator,
+//! using the in-crate harness (`util::proptest`).  No artifacts needed.
+
+use psram_imc::compute::{ComputeEngine, InterleavePattern};
+use psram_imc::coordinator::{Coordinator, CoordinatorConfig};
+use psram_imc::mttkrp::pipeline::{CpuTileExecutor, PsramPipeline};
+use psram_imc::mttkrp::reference::dense_mttkrp;
+use psram_imc::perfmodel::{PerfModel, Workload};
+use psram_imc::psram::PsramArray;
+use psram_imc::tensor::{krp_all_but, CooTensor, DenseTensor, Matrix};
+use psram_imc::util::fixed::{encode_offset, quant_matmul_ref};
+use psram_imc::util::proptest::{check, check_with, Case, Config};
+use psram_imc::{prop_assert, prop_assert_eq};
+
+fn rand_shape(c: &mut Case, max_dim: usize) -> Vec<usize> {
+    (0..3).map(|_| 1 + c.rng.below(max_dim as u64) as usize).collect()
+}
+
+#[test]
+fn prop_pipeline_matches_reference_within_quant_bound() {
+    check_with(
+        "pipeline ≈ exact MTTKRP",
+        Config { cases: 30, max_size: 24, seed: 0xA1 },
+        |c| {
+            let shape = rand_shape(c, 4 + c.size);
+            let r = 1 + c.rng.below(10) as usize;
+            let mode = c.rng.below(3) as usize;
+            let x = DenseTensor::randn(&shape, &mut c.rng);
+            let factors: Vec<Matrix> =
+                shape.iter().map(|&d| Matrix::randn(d, r, &mut c.rng)).collect();
+
+            let mut exec = CpuTileExecutor::paper();
+            let approx =
+                PsramPipeline::new(&mut exec).mttkrp(&x, &factors, mode).unwrap();
+            let exact = dense_mttkrp(&x, &factors, mode).unwrap();
+
+            let unf = x.unfold(mode).unwrap();
+            let krp = krp_all_but(&factors, mode).unwrap();
+            let k = unf.cols() as f32;
+            let sx = unf.max_abs() / 127.0;
+            let sw = krp.max_abs() / 127.0;
+            let bound =
+                (k * (sx * krp.max_abs() / 2.0 + sw * unf.max_abs() / 2.0 + sx * sw / 4.0))
+                    .max(1e-4);
+            for (e, a) in exact.data().iter().zip(approx.data()) {
+                prop_assert!(
+                    (e - a).abs() <= bound,
+                    "err {} > bound {bound} (shape {shape:?} r {r} mode {mode})",
+                    (e - a).abs()
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_coordinator_equals_pipeline_bit_exactly() {
+    check_with(
+        "coordinator == single pipeline",
+        Config { cases: 15, max_size: 20, seed: 0xB2 },
+        |c| {
+            let shape = rand_shape(c, 6 + c.size);
+            let r = 1 + c.rng.below(40) as usize;
+            let x = DenseTensor::randn(&shape, &mut c.rng);
+            let factors: Vec<Matrix> =
+                shape.iter().map(|&d| Matrix::randn(d, r, &mut c.rng)).collect();
+            let workers = 1 + c.rng.below(4) as usize;
+
+            let mut exec = CpuTileExecutor::paper();
+            let single = PsramPipeline::new(&mut exec).mttkrp(&x, &factors, 0).unwrap();
+
+            let mut pool = Coordinator::spawn(
+                CoordinatorConfig { workers, queue_depth: 2 },
+                |_| Ok(CpuTileExecutor::paper()),
+            )
+            .unwrap();
+            let dist = pool.mttkrp(&x, &factors, 0).unwrap();
+            prop_assert!(
+                single.data() == dist.data(),
+                "distributed result diverged (workers {workers})"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quant_matmul_bitplane_identity() {
+    // The fixed-point contract: (u-128)@w computed via bit-planes with the
+    // signed MSB weight always equals direct integer matmul.
+    check("bit-plane identity", |c| {
+        let m = 1 + c.rng.below(8) as usize;
+        let k = 1 + c.rng.below(64) as usize;
+        let n = 1 + c.rng.below(8) as usize;
+        let u: Vec<u8> = (0..m * k).map(|_| c.rng.next_u8()).collect();
+        let w: Vec<i8> = (0..k * n).map(|_| c.rng.next_i8()).collect();
+        let direct = quant_matmul_ref(&u, &w, m, k, n);
+        // bit-plane route
+        let mut planes = vec![0i64; m * n];
+        for b in 0..8u32 {
+            let weight = psram_imc::util::fixed::plane_weight(b) as i64;
+            for i in 0..m {
+                for p in 0..k {
+                    let bit = ((w[p * n] as u8) >> b) & 1; // recompute per column below
+                    let _ = bit;
+                    for j in 0..n {
+                        let wb = ((w[p * n + j] as u8 as u32) >> b) & 1;
+                        planes[i * n + j] +=
+                            weight * wb as i64 * u[i * k + p] as i64;
+                    }
+                }
+            }
+        }
+        let corr: Vec<i64> = (0..n)
+            .map(|j| 128 * (0..k).map(|p| w[p * n + j] as i64).sum::<i64>())
+            .collect();
+        for i in 0..m {
+            for j in 0..n {
+                let v = planes[i * n + j] - corr[j];
+                prop_assert_eq!(v as i32, direct[i * n + j]);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_analytic_model_matches_measured_pipeline_cycles() {
+    // The perf model's cycle formulas must agree exactly with what the
+    // functional pipeline measures, for any workload shape.
+    check_with(
+        "perfmodel == pipeline stats",
+        Config { cases: 25, max_size: 30, seed: 0xC3 },
+        |c| {
+            let i = 1 + c.rng.below(120) as u64;
+            let j = 1 + c.rng.below(12) as usize;
+            let k = 1 + c.rng.below(40) as usize;
+            let r = 1 + c.rng.below(48) as u64;
+            let x = DenseTensor::randn(&[i as usize, j, k], &mut c.rng);
+            let factors: Vec<Matrix> = [i as usize, j, k]
+                .iter()
+                .map(|&d| Matrix::randn(d, r as usize, &mut c.rng))
+                .collect();
+            let mut exec = CpuTileExecutor::paper();
+            let mut pipe = PsramPipeline::new(&mut exec);
+            pipe.mttkrp(&x, &factors, 0).unwrap();
+
+            let model = PerfModel::paper();
+            let est = model
+                .predict(&Workload {
+                    i_rows: i,
+                    k_contraction: (j * k) as u64,
+                    rank: r,
+                })
+                .unwrap();
+            prop_assert_eq!(est.images, pipe.stats.images);
+            prop_assert_eq!(est.compute_cycles, pipe.stats.compute_cycles);
+            prop_assert_eq!(est.write_cycles, pipe.stats.write_cycles);
+            let diff = (est.utilization - pipe.stats.utilization()).abs();
+            prop_assert!(diff < 1e-12, "utilization diverged by {diff}");
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_interleave_diagonal_never_mixes_products() {
+    check_with(
+        "CP1 interleave isolation",
+        Config { cases: 20, max_size: 40, seed: 0xD4 },
+        |c| {
+            let r = 1 + c.rng.below(52.min(1 + c.size as u64)) as usize;
+            let b: Vec<i8> = (0..r).map(|_| c.rng.next_i8()).collect();
+            let cc: Vec<i8> = (0..r).map(|_| c.rng.next_i8()).collect();
+            let mut eng = ComputeEngine::ideal();
+            let mut array = PsramArray::paper();
+            let out =
+                psram_imc::mttkrp::mapping::cp1_hadamard(&mut eng, &mut array, &b, &cc)
+                    .unwrap();
+            for i in 0..r {
+                prop_assert_eq!(out[i], b[i] as i32 * cc[i] as i32);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_interleave_pattern_invariant() {
+    check("diagonal patterns are interleaved", |c| {
+        let n = 1 + c.rng.below(52) as usize;
+        let vals: Vec<i32> = (0..n).map(|_| c.rng.range_i64(-128, 127) as i32).collect();
+        let p = InterleavePattern::diagonal(&vals, 256).unwrap();
+        prop_assert!(p.is_interleaved(), "diagonal must be interleaved");
+        let u = p.render();
+        // exactly n non-zero codes
+        let nonzero = u.iter().filter(|&&x| x != encode_offset(0)).count();
+        let expected = vals.iter().filter(|&&v| v != 0).count();
+        prop_assert_eq!(nonzero, expected);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_dense_mttkrp_agree() {
+    check_with(
+        "sparse == dense MTTKRP",
+        Config { cases: 20, max_size: 16, seed: 0xE5 },
+        |c| {
+            let shape = rand_shape(c, 10);
+            let nnz = c.rng.below(100) as usize;
+            let coo = CooTensor::random(&shape, nnz, &mut c.rng);
+            let dense = coo.to_dense();
+            let r = 1 + c.rng.below(6) as usize;
+            let factors: Vec<Matrix> =
+                shape.iter().map(|&d| Matrix::randn(d, r, &mut c.rng)).collect();
+            for mode in 0..3 {
+                let a = psram_imc::mttkrp::sparse_mttkrp(&coo, &factors, mode).unwrap();
+                let b = dense_mttkrp(&dense, &factors, mode).unwrap();
+                for (x, y) in a.data().iter().zip(b.data()) {
+                    prop_assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+                }
+            }
+            Ok(())
+        },
+    );
+}

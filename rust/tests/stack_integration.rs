@@ -1,0 +1,149 @@
+//! Whole-stack integration: CP-ALS through every backend, coordinator over
+//! analog arrays, and cross-backend agreement.  Needs `artifacts/`.
+
+use psram_imc::compute::ComputeEngine;
+use psram_imc::coordinator::pool::CoordinatedBackend;
+use psram_imc::coordinator::{Coordinator, CoordinatorConfig};
+use psram_imc::cpd::{AlsConfig, CpAls, ExactBackend, PsramBackend};
+use psram_imc::device::{DeviceParams, NoiseModel};
+use psram_imc::mttkrp::pipeline::{AnalogTileExecutor, CpuTileExecutor};
+use psram_imc::psram::PsramArray;
+use psram_imc::runtime::PjrtTileExecutor;
+use psram_imc::tensor::{DenseTensor, Matrix};
+use psram_imc::util::prng::Prng;
+
+fn low_rank(seed: u64, shape: &[usize], r: usize, noise: f32) -> DenseTensor {
+    let mut rng = Prng::new(seed);
+    let f: Vec<Matrix> = shape.iter().map(|&d| Matrix::randn(d, r, &mut rng)).collect();
+    DenseTensor::from_cp_factors(&f, noise, &mut rng).unwrap()
+}
+
+#[test]
+fn cp_als_through_pjrt_backend_reaches_high_fit() {
+    let x = low_rank(1, &[20, 16, 12], 3, 0.0);
+    let exec = PjrtTileExecutor::paper().unwrap();
+    let mut backend = PsramBackend::new(&x, exec);
+    let res = CpAls::new(AlsConfig { rank: 3, max_iters: 25, tol: 1e-6, seed: 11 })
+        .run(&mut backend)
+        .unwrap();
+    assert!(res.final_fit() > 0.95, "fit={}", res.final_fit());
+}
+
+#[test]
+fn pjrt_and_analog_backends_identical_fit_history() {
+    // Both executors are bit-exact, so the whole ALS trajectory must match.
+    let x = low_rank(2, &[18, 14, 10], 3, 0.02);
+    let cfg = AlsConfig { rank: 3, max_iters: 8, tol: 0.0, seed: 5 };
+
+    let mut b1 = PsramBackend::new(&x, PjrtTileExecutor::paper().unwrap());
+    let r1 = CpAls::new(cfg.clone()).run(&mut b1).unwrap();
+
+    let mut b2 = PsramBackend::new(&x, AnalogTileExecutor::ideal());
+    let r2 = CpAls::new(cfg).run(&mut b2).unwrap();
+
+    assert_eq!(r1.fit_history, r2.fit_history);
+    assert_eq!(r1.lambda, r2.lambda);
+}
+
+#[test]
+fn coordinator_over_analog_arrays_matches_cpu_workers() {
+    // Workers simulating real pSRAM arrays vs plain integer workers:
+    // identical results (and the analog path charges energy).
+    let mut rng = Prng::new(3);
+    let x = DenseTensor::randn(&[80, 10, 30], &mut rng);
+    let factors: Vec<Matrix> =
+        [80, 10, 30].iter().map(|&d| Matrix::randn(d, 6, &mut rng)).collect();
+
+    let mut analog_pool = Coordinator::spawn(
+        CoordinatorConfig { workers: 3, queue_depth: 4 },
+        |_| Ok(AnalogTileExecutor::ideal()),
+    )
+    .unwrap();
+    let a = analog_pool.mttkrp(&x, &factors, 0).unwrap();
+
+    let mut cpu_pool = Coordinator::spawn(
+        CoordinatorConfig { workers: 2, queue_depth: 4 },
+        |_| Ok(CpuTileExecutor::paper()),
+    )
+    .unwrap();
+    let b = cpu_pool.mttkrp(&x, &factors, 0).unwrap();
+
+    assert_eq!(a.data(), b.data());
+}
+
+#[test]
+fn noisy_analog_backend_still_decomposes() {
+    // Detector noise at a few LSB: CP-ALS must still converge to a useful
+    // fit (the robustness claim behind analog IMC).
+    let x = low_rank(4, &[24, 20, 16], 3, 0.0);
+    let engine = ComputeEngine::new(
+        DeviceParams::default(),
+        NoiseModel::gaussian(2.0, 99),
+    );
+    let exec = AnalogTileExecutor::new(engine, PsramArray::paper());
+    let mut backend = PsramBackend::new(&x, exec);
+    let res = CpAls::new(AlsConfig { rank: 3, max_iters: 30, tol: 1e-6, seed: 21 })
+        .run(&mut backend)
+        .unwrap();
+    // verify with the ground-truth fit (the identity-based one is not
+    // trustworthy under noise)
+    let fit = psram_imc::cpd::brute_force_fit(&x, &res.factors, &res.lambda);
+    assert!(fit > 0.9, "fit={fit}");
+}
+
+#[test]
+fn noise_sweep_degrades_true_fit() {
+    // The internal (identity-based) fit is unreliable under analog noise —
+    // it trusts the noisy MTTKRP.  Verify with the brute-force fit instead:
+    // moderate sigma is absorbed by the LS averaging; extreme sigma breaks
+    // the decomposition.
+    let x = low_rank(5, &[20, 16, 12], 2, 0.0);
+    let mut fits = Vec::new();
+    for &sigma in &[0.0f64, 2e3, 2e6] {
+        let engine = ComputeEngine::new(
+            DeviceParams::default(),
+            NoiseModel::gaussian(sigma, 7),
+        );
+        let exec = AnalogTileExecutor::new(engine, PsramArray::paper());
+        let mut backend = PsramBackend::new(&x, exec);
+        let res = CpAls::new(AlsConfig { rank: 2, max_iters: 20, tol: 1e-7, seed: 3 })
+            .run(&mut backend)
+            .unwrap();
+        fits.push(psram_imc::cpd::brute_force_fit(&x, &res.factors, &res.lambda));
+    }
+    assert!(fits[0] > 0.95, "clean fit {}", fits[0]);
+    assert!(fits[1] > 0.8, "moderate noise should be mostly absorbed: {}", fits[1]);
+    assert!(fits[2] < fits[0] - 0.05, "extreme noise must hurt: fits={fits:?}");
+}
+
+#[test]
+fn exact_vs_quantized_fit_gap_is_small() {
+    let x = low_rank(6, &[22, 18, 14], 4, 0.05);
+    let mut exact = ExactBackend { tensor: &x };
+    let rexact = CpAls::new(AlsConfig { rank: 4, max_iters: 30, tol: 1e-6, seed: 8 })
+        .run(&mut exact)
+        .unwrap();
+    let mut quant = PsramBackend::new(&x, CpuTileExecutor::paper());
+    let rquant = CpAls::new(AlsConfig { rank: 4, max_iters: 30, tol: 1e-6, seed: 8 })
+        .run(&mut quant)
+        .unwrap();
+    let gap = rexact.final_fit() - rquant.final_fit();
+    assert!(gap.abs() < 0.05, "exact {} quant {}", rexact.final_fit(), rquant.final_fit());
+}
+
+#[test]
+fn coordinated_cp_als_with_many_workers() {
+    let x = low_rank(7, &[40, 24, 20], 4, 0.0);
+    let pool = Coordinator::spawn(
+        CoordinatorConfig { workers: 6, queue_depth: 12 },
+        |_| Ok(CpuTileExecutor::paper()),
+    )
+    .unwrap();
+    let mut backend = CoordinatedBackend { tensor: &x, pool };
+    let res = CpAls::new(AlsConfig { rank: 4, max_iters: 25, tol: 1e-6, seed: 12 })
+        .run(&mut backend)
+        .unwrap();
+    assert!(res.final_fit() > 0.9, "fit={}", res.final_fit());
+    let m = backend.pool.metrics();
+    assert!(m.snapshot()[1].1 > 0); // images
+}
