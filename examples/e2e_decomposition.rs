@@ -59,7 +59,7 @@ fn main() -> psram_imc::Result<()> {
 
     // ---------- stage 2: distributed CP-ALS ----------
     println!("\n[2/3] CP-ALS on the coordinator (4 analog pSRAM arrays)…");
-    let pool = Coordinator::spawn(CoordinatorConfig { workers: 4, queue_depth: 8 }, |_| {
+    let pool = Coordinator::spawn(CoordinatorConfig::new(4), |_| {
         Ok(AnalogTileExecutor::ideal())
     })?;
     let mut backend = CoordinatedBackend { tensor: &x, pool };

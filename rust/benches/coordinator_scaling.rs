@@ -1,55 +1,139 @@
-//! COORD — L3 coordinator scaling: wall-clock time of one distributed
-//! MTTKRP vs worker count (the leader/worker pool over simulated arrays),
-//! plus queue-depth (backpressure) sensitivity.
+//! COORD — L3 coordinator scaling: the sharded batched pool over 1→16
+//! simulated arrays on one distributed MTTKRP.
+//!
+//! Three sections:
+//! 1. shard sweep — wall-clock + *device-model* sustained throughput
+//!    (peak × measured utilisation from the cycle metrics) against the
+//!    `perfmodel` prediction for the same array count: the measured point
+//!    must land inside the model's prediction envelope;
+//! 2. batching — write-amortization: images per batch vs wall-clock;
+//! 3. work stealing — a skewed workload (all batches on one shard) with
+//!    stealing on vs off.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use psram_imc::coordinator::{Coordinator, CoordinatorConfig};
 use psram_imc::mttkrp::pipeline::CpuTileExecutor;
+use psram_imc::perfmodel::{PerfModel, Workload};
 use psram_imc::tensor::Matrix;
 use psram_imc::util::prng::Prng;
+use psram_imc::util::units::format_ops;
+use std::sync::atomic::Ordering;
+
+/// Tolerance of the model-vs-measured utilisation comparison.  The model
+/// distributes images as ceil(images / arrays); the pool shards by
+/// contraction block, which matches exactly when k_blocks % shards == 0
+/// (as here) and differs by at most one image per array otherwise.
+const ENVELOPE: f64 = 0.02;
 
 fn main() {
     let mut rng = Prng::new(13);
-    // 16 images (4 K-blocks x 4 R-blocks), 20 lane batches each.
-    let unf = Matrix::randn(1040, 1024, &mut rng);
-    let krp = Matrix::randn(1024, 128, &mut rng);
+    // 16 K-blocks x 4 R-blocks = 64 images, 20 lane batches each.
+    let (i_dim, k_dim, r_dim) = (1040usize, 4096usize, 128usize);
+    let unf = Matrix::randn(i_dim, k_dim, &mut rng);
+    let krp = Matrix::randn(k_dim, r_dim, &mut rng);
+    let workload = Workload {
+        i_rows: i_dim as u64,
+        k_contraction: k_dim as u64,
+        rank: r_dim as u64,
+    };
 
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     common::section(&format!(
-        "COORD: distributed MTTKRP wall-clock vs workers ({cores} core(s) available)"
+        "COORD: sharded MTTKRP {i_dim}x{k_dim}x{r_dim} vs shard count \
+         ({cores} core(s) available)"
     ));
     if cores == 1 {
         println!("NOTE: single-core machine — parallel speedup is physically impossible;");
         println!("      this bench then measures coordination OVERHEAD (should be ~flat).");
     }
+
     let mut t1 = 0.0;
-    for &workers in &[1usize, 2, 4, 8] {
-        let t = common::bench(&format!("mttkrp 1040x1024x128 workers={workers}"), 1, 3, || {
-            let mut pool = Coordinator::spawn(
-                CoordinatorConfig { workers, queue_depth: 2 * workers },
-                |_| Ok(CpuTileExecutor::paper()),
-            )
-            .unwrap();
-            pool.mttkrp_unfolded(unf.clone(), &krp).unwrap();
-        });
-        if workers == 1 {
+    let mut envelope_ok = true;
+    for &shards in &[1usize, 2, 4, 8, 16] {
+        let mut model = PerfModel::paper();
+        model.num_arrays = shards;
+        let cfg = CoordinatorConfig::from_model(&model, &workload);
+        let t = common::bench(
+            &format!("mttkrp {i_dim}x{k_dim}x{r_dim} shards={shards:>2}"),
+            1,
+            3,
+            || {
+                let mut pool = Coordinator::spawn(cfg.clone(), |_| {
+                    Ok(CpuTileExecutor::paper())
+                })
+                .unwrap();
+                pool.mttkrp_unfolded(unf.clone(), &krp).unwrap();
+            },
+        );
+        if shards == 1 {
             t1 = t;
         } else {
-            println!("  -> speedup vs 1 worker: {:.2}x", t1 / t);
+            println!("  -> speedup vs 1 shard: {:.2}x", t1 / t);
         }
-    }
 
-    common::section("COORD: queue-depth (backpressure) sensitivity @ 4 workers");
-    for &depth in &[1usize, 4, 16] {
-        common::bench(&format!("mttkrp queue_depth={depth}"), 1, 3, || {
+        // Device-model throughput from the cycle metrics of one fresh run,
+        // against the perfmodel prediction for the same array count.
+        let mut pool =
+            Coordinator::spawn(cfg, |_| Ok(CpuTileExecutor::paper())).unwrap();
+        pool.mttkrp_unfolded(unf.clone(), &krp).unwrap();
+        let m = pool.metrics();
+        let measured_util = m.utilization();
+        let measured_sustained = model.peak_ops() * measured_util;
+        let est = model.predict(&workload).unwrap();
+        let in_env = (measured_util - est.utilization).abs() <= ENVELOPE;
+        envelope_ok &= in_env;
+        println!(
+            "  -> sustained {} measured vs {} predicted \
+             (U {measured_util:.4} vs {:.4}, envelope +/-{ENVELOPE}: {})",
+            format_ops(measured_sustained),
+            format_ops(est.sustained_raw_ops),
+            est.utilization,
+            if in_env { "OK" } else { "MISS" },
+        );
+        println!(
+            "  -> {} batches, {} images, {} steals",
+            m.batches.load(Ordering::Relaxed),
+            m.images.load(Ordering::Relaxed),
+            m.steals.load(Ordering::Relaxed)
+        );
+    }
+    println!(
+        "\nprediction envelope: {}",
+        if envelope_ok { "all shard counts within the model envelope" } else { "MISSED" }
+    );
+
+    common::section("COORD: write amortization — images per batch @ 4 shards");
+    for &batch in &[1usize, 2, 4] {
+        common::bench(&format!("mttkrp batch_size={batch}"), 1, 3, || {
             let mut pool = Coordinator::spawn(
-                CoordinatorConfig { workers: 4, queue_depth: depth },
+                CoordinatorConfig { batch_size: batch, ..CoordinatorConfig::new(4) },
                 |_| Ok(CpuTileExecutor::paper()),
             )
             .unwrap();
             pool.mttkrp_unfolded(unf.clone(), &krp).unwrap();
         });
+    }
+
+    common::section("COORD: work stealing on a single-shard-skewed workload @ 4 shards");
+    // K fits one contraction block -> every batch lands on shard 0; only
+    // stealing lets the other three workers contribute.
+    let skew_unf = Matrix::randn(1040, 256, &mut rng);
+    let skew_krp = Matrix::randn(256, 512, &mut rng);
+    for &steal in &[false, true] {
+        let t = common::bench(&format!("skewed mttkrp steal={steal}"), 1, 3, || {
+            let mut pool = Coordinator::spawn(
+                CoordinatorConfig {
+                    batch_size: 1,
+                    steal,
+                    ..CoordinatorConfig::new(4)
+                },
+                |_| Ok(CpuTileExecutor::paper()),
+            )
+            .unwrap();
+            pool.mttkrp_unfolded(skew_unf.clone(), &skew_krp).unwrap();
+        });
+        let _ = t;
     }
 }

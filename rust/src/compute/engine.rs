@@ -75,6 +75,23 @@ impl ComputeEngine {
     /// is one wavelength channel's input across all wordlines.
     /// Returns row-major `[lanes][words_per_row]` i32 results and charges
     /// cycles + energy on `array`.
+    ///
+    /// ```
+    /// use psram_imc::compute::ComputeEngine;
+    /// use psram_imc::psram::PsramArray;
+    /// use psram_imc::util::fixed::encode_offset;
+    /// let mut eng = ComputeEngine::ideal();
+    /// let mut array = PsramArray::paper();
+    /// // Store 2 in word (row 0, col 0); stream intensity 3 on lane 0.
+    /// let mut image = vec![0i8; 256 * 32];
+    /// image[0] = 2;
+    /// array.write_image(&image)?;
+    /// let mut u = vec![encode_offset(0); 256];
+    /// u[0] = encode_offset(3);
+    /// let out = eng.compute_cycle(&mut array, &u, 1)?;
+    /// assert_eq!(out[0], 3 * 2);
+    /// # Ok::<(), psram_imc::Error>(())
+    /// ```
     pub fn compute_cycle(
         &mut self,
         array: &mut PsramArray,

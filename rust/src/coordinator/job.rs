@@ -1,18 +1,19 @@
-//! Work items exchanged between the leader and the workers.
+//! Work items exchanged between the leader and the shard workers.
+//!
+//! The scheduling unit is an [`ImageBatch`]: every image in a batch shares
+//! one contraction (K) block, so a worker can quantize each lane batch of
+//! the streamed operand once and reuse it across the whole batch — the
+//! §V.B compute/write interleave amortization that makes reconfiguration
+//! writes cheap at scale (see `DESIGN.md` §9).
 
 use crate::tensor::Matrix;
 use std::sync::Arc;
 
-/// One array image's worth of work: compute the partial MTTKRP
-/// contribution of K block `kb` to rank block `rb`, streaming every lane
-/// batch of the shared unfolded operand.
-pub struct ImageTask {
-    /// Request id (monotonic per coordinator).
-    pub req_id: u64,
+/// One quantized KRP image — the (rank-block, K-block) tile a worker loads
+/// into its array before streaming the shared operand against it.
+pub struct ImageSpec {
     /// Rank block index.
     pub rb: usize,
-    /// K (contraction) block index.
-    pub kb: usize,
     /// Quantized KRP image, row-major `[rows][words_per_row]`, padded.
     pub image: Vec<i8>,
     /// Per-word-column dequantization scales of the image (`r_cnt` long).
@@ -20,16 +21,46 @@ pub struct ImageTask {
     /// First rank column and count covered by this image.
     pub r0: usize,
     pub r_cnt: usize,
-    /// First contraction row and count covered by this image.
+}
+
+/// A batch of images sharing one contraction block, addressed to one shard.
+///
+/// Sharding is by contraction block (`shard = kb % workers`), so the
+/// quantized lane batches of the streamed operand — which depend only on
+/// `(kb, lane batch)` — are computed once per batch and reused by every
+/// image in it.
+pub struct ImageBatch {
+    /// Request id (monotonic per coordinator).
+    pub req_id: u64,
+    /// Home shard (worker) this batch was submitted to.  Work stealing may
+    /// execute it elsewhere.
+    pub shard: usize,
+    /// K (contraction) block index shared by every image in the batch.
+    pub kb: usize,
+    /// First contraction row and count covered by this batch.
     pub k0: usize,
     pub k_cnt: usize,
+    /// The images to execute against this contraction block.
+    pub images: Vec<ImageSpec>,
     /// The shared unfolded operand `X_(mode)` (`[I, K]`).
     pub unf: Arc<Matrix>,
 }
 
-/// A worker's answer: the dequantized partial output block for one image.
+impl ImageBatch {
+    /// Number of images in the batch.
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    /// True if the batch carries no images.
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+}
+
+/// A worker's answer for one image: the dequantized partial output block.
 pub struct ImagePartial {
-    pub req_id: u64,
+    /// Rank block index.
     pub rb: usize,
     /// K block index (the leader reduces partials in (rb, kb) order so the
     /// f32 result is deterministic).
@@ -38,8 +69,15 @@ pub struct ImagePartial {
     pub partial: Vec<f32>,
     pub r0: usize,
     pub r_cnt: usize,
-    /// Worker that produced it (metrics/debug).
-    pub worker: usize,
+}
+
+/// All partials of one executed batch, sent back to the leader at once.
+/// Stale-result filtering happens per batch (`req_id`); which worker ran
+/// the batch is recorded in the per-shard metrics, not here.
+pub struct BatchResult {
+    pub req_id: u64,
+    /// One partial per image, in batch order.
+    pub partials: Vec<ImagePartial>,
 }
 
 #[cfg(test)]
@@ -47,22 +85,47 @@ mod tests {
     use super::*;
 
     #[test]
-    fn task_carries_consistent_block_metadata() {
+    fn batch_carries_consistent_block_metadata() {
         let unf = Arc::new(Matrix::zeros(4, 512));
-        let t = ImageTask {
+        let images: Vec<ImageSpec> = (0..3)
+            .map(|rb| ImageSpec {
+                rb,
+                image: vec![0; 256 * 32],
+                w_scales: vec![1.0; 32],
+                r0: rb * 32,
+                r_cnt: 32,
+            })
+            .collect();
+        let b = ImageBatch {
             req_id: 1,
-            rb: 1,
-            kb: 0,
-            image: vec![0; 256 * 32],
-            w_scales: vec![1.0; 8],
-            r0: 32,
-            r_cnt: 8,
-            k0: 0,
+            shard: 1,
+            kb: 1,
+            k0: 256,
             k_cnt: 256,
+            images,
             unf,
         };
-        assert_eq!(t.image.len(), 256 * 32);
-        assert!(t.r_cnt <= 32);
-        assert_eq!(t.rb * 32, t.r0);
+        assert_eq!(b.len(), 3);
+        assert!(!b.is_empty());
+        assert_eq!(b.kb * 256, b.k0);
+        for s in &b.images {
+            assert_eq!(s.rb * 32, s.r0);
+            assert_eq!(s.image.len(), 256 * 32);
+        }
+    }
+
+    #[test]
+    fn empty_batch_reports_empty() {
+        let b = ImageBatch {
+            req_id: 0,
+            shard: 0,
+            kb: 0,
+            k0: 0,
+            k_cnt: 0,
+            images: Vec::new(),
+            unf: Arc::new(Matrix::zeros(1, 1)),
+        };
+        assert!(b.is_empty());
+        assert_eq!(b.len(), 0);
     }
 }

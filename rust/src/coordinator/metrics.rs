@@ -1,6 +1,37 @@
-//! Lock-free coordinator metrics (atomics; shared by leader and workers).
+//! Lock-free coordinator metrics (atomics; shared by leader and workers),
+//! aggregated globally and per shard.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Counters for one shard (shard `i` is owned by worker `i`; stolen batches
+/// are charged to the worker that *executed* them, so shard rows show the
+/// realised load balance, not the submission pattern).
+#[derive(Debug, Default)]
+pub struct ShardMetrics {
+    /// Batches executed by this worker.
+    pub batches: AtomicU64,
+    /// Array images processed by this worker.
+    pub images: AtomicU64,
+    /// Compute cycles on this worker's array.
+    pub compute_cycles: AtomicU64,
+    /// Write (reconfiguration) cycles on this worker's array.
+    pub write_cycles: AtomicU64,
+    /// Batches this worker stole from another shard's queue.
+    pub steals: AtomicU64,
+}
+
+impl ShardMetrics {
+    /// Utilisation of this worker's array so far.
+    pub fn utilization(&self) -> f64 {
+        let c = self.compute_cycles.load(Ordering::Relaxed);
+        let w = self.write_cycles.load(Ordering::Relaxed);
+        if c + w == 0 {
+            0.0
+        } else {
+            c as f64 / (c + w) as f64
+        }
+    }
+}
 
 /// Aggregate counters across the coordinator's lifetime.
 #[derive(Debug, Default)]
@@ -17,14 +48,33 @@ pub struct Metrics {
     pub useful_macs: AtomicU64,
     /// Raw MACs (incl. padding).
     pub raw_macs: AtomicU64,
-    /// Tasks that waited on the bounded queue (backpressure events).
+    /// Batches that waited on the bounded queue (backpressure events).
     pub backpressure_stalls: AtomicU64,
+    /// Batches executed across all workers.
+    pub batches: AtomicU64,
+    /// Batches executed by a worker other than their home shard.
+    pub steals: AtomicU64,
+    /// Per-shard counters (one entry per worker; empty for `default()`).
+    pub shards: Vec<ShardMetrics>,
 }
 
 impl Metrics {
+    /// Metrics with one shard row per worker.
+    pub fn with_shards(workers: usize) -> Self {
+        Metrics {
+            shards: (0..workers).map(|_| ShardMetrics::default()).collect(),
+            ..Metrics::default()
+        }
+    }
+
     #[inline]
     pub fn add(&self, field: &AtomicU64, v: u64) {
         field.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// The shard row for worker `i` (panics if out of range).
+    pub fn shard(&self, i: usize) -> &ShardMetrics {
+        &self.shards[i]
     }
 
     /// Utilisation across the pool so far.
@@ -38,7 +88,9 @@ impl Metrics {
         }
     }
 
-    /// Snapshot as (label, value) rows.
+    /// Snapshot as (label, value) rows.  The first seven rows keep their
+    /// historical order (callers index into them); batch/steal counters are
+    /// appended after.
     pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
         vec![
             ("requests", self.requests.load(Ordering::Relaxed)),
@@ -51,7 +103,28 @@ impl Metrics {
                 "backpressure_stalls",
                 self.backpressure_stalls.load(Ordering::Relaxed),
             ),
+            ("batches", self.batches.load(Ordering::Relaxed)),
+            ("steals", self.steals.load(Ordering::Relaxed)),
         ]
+    }
+
+    /// Per-shard snapshot rows: `(shard, batches, images, compute, write,
+    /// steals)`.
+    pub fn shard_snapshot(&self) -> Vec<(usize, u64, u64, u64, u64, u64)> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                (
+                    i,
+                    s.batches.load(Ordering::Relaxed),
+                    s.images.load(Ordering::Relaxed),
+                    s.compute_cycles.load(Ordering::Relaxed),
+                    s.write_cycles.load(Ordering::Relaxed),
+                    s.steals.load(Ordering::Relaxed),
+                )
+            })
+            .collect()
     }
 }
 
@@ -78,5 +151,29 @@ mod tests {
     #[test]
     fn empty_utilization_is_zero() {
         assert_eq!(Metrics::default().utilization(), 0.0);
+    }
+
+    #[test]
+    fn shard_rows_track_independently() {
+        let m = Metrics::with_shards(3);
+        m.add(&m.shard(0).images, 5);
+        m.add(&m.shard(2).steals, 1);
+        m.add(&m.shard(2).compute_cycles, 9);
+        m.add(&m.shard(2).write_cycles, 1);
+        let rows = m.shard_snapshot();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].2, 5); // shard 0 images
+        assert_eq!(rows[1], (1, 0, 0, 0, 0, 0));
+        assert_eq!(rows[2].5, 1); // shard 2 steals
+        assert!((m.shard(2).utilization() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn snapshot_keeps_historical_indices() {
+        let m = Metrics::default();
+        m.add(&m.backpressure_stalls, 2);
+        let snap = m.snapshot();
+        assert_eq!(snap[0].0, "requests");
+        assert_eq!(snap[6], ("backpressure_stalls", 2));
     }
 }

@@ -1,32 +1,42 @@
-//! The L3 coordinator: a persistent leader/worker pool that partitions
-//! MTTKRP executions across multiple pSRAM array macros.
+//! The L3 coordinator: a persistent sharded leader/worker runtime that
+//! partitions MTTKRP executions across multiple pSRAM array macros.
 //!
-//! Architecture (std threads + bounded channels; no tokio offline):
+//! Architecture (std threads + shared shard queues; no tokio offline):
 //!
 //! ```text
-//!            ┌────────────┐  bounded task queue   ┌──────────┐
-//!  request ─▶│   leader   │──────────────────────▶│ worker 0 │─ array 0
-//!            │ (tiling +  │   ImageTask{rb,kb,…}  ├──────────┤
-//!            │  reduce)   │◀──────────────────────│ worker 1 │─ array 1
-//!            └────────────┘   ImagePartial        └──────────┘ …
+//!            ┌────────────┐  per-shard bounded queues  ┌──────────┐
+//!  request ─▶│   leader   │── batch(kb, rb0..rbN) ────▶│ shard 0  │─ array 0
+//!            │ (tiling +  │── shard = kb % N      ────▶│ shard 1  │─ array 1
+//!            │  batching +│          ⋯      steal ◀───▶│    ⋯     │   ⋯
+//!            │  reduce)   │◀── BatchResult ────────────│ shard N-1│─ array N-1
+//!            └────────────┘                            └──────────┘
 //! ```
 //!
-//! * the **leader** unfolds/tiles the MTTKRP, quantizes one Khatri-Rao
-//!   image per (rank-block, K-block), and pushes [`job::ImageTask`]s into a
-//!   *bounded* queue (backpressure: tiling stalls when workers are busy);
-//! * each **worker** owns one [`crate::mttkrp::TileExecutor`] (one array macro), streams
-//!   every lane batch of the shared X operand against its image, and sends
-//!   back a dequantized partial;
-//! * the leader **reduces** partials (sum over K blocks) into the output.
+//! * the **leader** unfolds/tiles the MTTKRP and submits
+//!   [`job::ImageBatch`]es — groups of KRP images sharing one contraction
+//!   (K) block — into *bounded* per-shard queues (backpressure: tiling
+//!   stalls when workers are busy).  Sharding is by contraction block
+//!   (`kb % workers`), so every image in a batch streams the *same* slice
+//!   of the unfolded operand;
+//! * each **shard worker** owns one [`crate::mttkrp::TileExecutor`] (one
+//!   array macro).  Per batch it quantizes each lane batch of the shared
+//!   operand once and reuses it across every image — the §V.B
+//!   compute/write interleave that amortizes reconfiguration writes.  An
+//!   idle worker **steals** batches from the longest other queue;
+//! * the leader **reduces** partials in deterministic `(rb, kb)` order, so
+//!   the distributed result is bit-identical to the single-array pipeline.
 //!
 //! The pool is persistent: many requests can be submitted over its
-//! lifetime (CP-ALS submits 3 per sweep), workers stay warm, and metrics
-//! aggregate across requests.
+//! lifetime (CP-ALS submits one per mode per sweep), workers stay warm,
+//! and metrics aggregate across requests — globally and per shard.
+//! [`pool::CoordinatorConfig::from_model`] derives the pool shape
+//! (workers / queue depth / batch size) from the
+//! [`crate::perfmodel::PerfModel`] geometry instead of hardcoded defaults.
 
 pub mod job;
 pub mod metrics;
 pub mod pool;
 
-pub use job::{ImagePartial, ImageTask};
-pub use metrics::Metrics;
-pub use pool::{Coordinator, CoordinatorConfig};
+pub use job::{BatchResult, ImageBatch, ImagePartial, ImageSpec};
+pub use metrics::{Metrics, ShardMetrics};
+pub use pool::{CoordinatedBackend, Coordinator, CoordinatorConfig};

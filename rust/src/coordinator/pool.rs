@@ -1,42 +1,137 @@
-//! The leader/worker pool.
+//! The sharded, batched leader/worker pool.
+//!
+//! See the module docs of [`crate::coordinator`] for the architecture.
+//! Scheduling invariants:
+//!
+//! * batches are keyed by contraction block and land on shard
+//!   `kb % workers`; a worker prefers its own queue (front) and steals
+//!   from the longest other queue (back) when it drains;
+//! * the queue is bounded by `queue_depth` *batches* across all shards —
+//!   the leader stalls (and counts a backpressure event) when it is full;
+//! * partials are buffered and reduced in `(rb, kb)` order, so the f32
+//!   result is deterministic and bit-identical to the single-array
+//!   [`crate::mttkrp::PsramPipeline`], independent of worker count,
+//!   batching, and stealing.
 
-use super::job::{ImagePartial, ImageTask};
+use super::job::{BatchResult, ImageBatch, ImagePartial, ImageSpec};
 use super::metrics::Metrics;
 use crate::cpd::backend::MttkrpBackend;
-use crate::mttkrp::pipeline::TileExecutor;
+use crate::mttkrp::pipeline::{quantize_krp_image, quantize_lane_batch, TileExecutor};
+use crate::perfmodel::{PerfModel, Workload};
 use crate::tensor::{krp_all_but, DenseTensor, Matrix};
 use crate::util::error::{Error, Result};
-use crate::util::fixed::{encode_offset, quantize_encode_into, quantize_sym};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 /// Pool configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// Worker (array macro) count.
+    /// Worker (array macro) count — one shard per worker.
     pub workers: usize,
-    /// Bounded task-queue depth (backpressure window).
+    /// Bounded queue depth: maximum outstanding batches across all shards
+    /// (the backpressure window).
     pub queue_depth: usize,
+    /// Images per batch.  Every image in a batch shares one contraction
+    /// block, so the streamed operand is quantized once per batch and the
+    /// per-image reconfiguration writes amortize across it.
+    pub batch_size: usize,
+    /// Allow idle workers to steal batches from other shards' queues.
+    pub steal: bool,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { workers: 4, queue_depth: 8 }
+        CoordinatorConfig { workers: 4, queue_depth: 8, batch_size: 4, steal: true }
     }
 }
 
-enum WorkerMsg {
-    Partial(ImagePartial),
-    Failed { req_id: u64, error: String },
+impl CoordinatorConfig {
+    /// A config for `workers` shards with a proportionate queue.
+    pub fn new(workers: usize) -> Self {
+        CoordinatorConfig {
+            workers,
+            queue_depth: 2 * workers.max(1),
+            ..CoordinatorConfig::default()
+        }
+    }
+
+    /// Derive the pool shape from the performance model's geometry and a
+    /// workload, instead of hardcoded defaults:
+    ///
+    /// * `workers` = the model's parallel array count;
+    /// * `batch_size` = the workload's rank-block count, so one batch
+    ///   covers a full rank sweep of its contraction block (maximal
+    ///   operand-quantization reuse), clamped to keep batches bounded;
+    /// * `queue_depth` = two batches in flight per worker (double
+    ///   buffering: one executing, one queued).
+    pub fn from_model(model: &PerfModel, workload: &Workload) -> Self {
+        let workers = model.num_arrays.max(1);
+        let wpr = model.geom.words_per_row().max(1);
+        let r_blocks = (workload.rank as usize).div_ceil(wpr).max(1);
+        CoordinatorConfig {
+            workers,
+            queue_depth: 2 * workers,
+            batch_size: r_blocks.clamp(1, 16),
+            steal: true,
+        }
+    }
 }
 
-/// The persistent leader/worker coordinator.  `E` is the per-worker tile
-/// executor (one simulated array macro per worker).
+/// What a worker sends back for one executed batch.
+enum WorkerMsg {
+    Done(BatchResult),
+    Failed { req_id: u64, images: usize, error: String },
+}
+
+/// The per-shard queues behind one mutex.  Lock granularity is fine: a
+/// batch costs milliseconds of compute against microseconds of queueing.
+struct QueueState {
+    queues: Vec<VecDeque<ImageBatch>>,
+    /// Batches currently queued (not yet picked up) across all shards.
+    queued: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    /// Workers wait here for work or shutdown.
+    work_cv: Condvar,
+}
+
+/// Pop the next batch for worker `me`: own queue first (front), then — if
+/// stealing is on — the tail of the longest other queue.  Blocks until work
+/// arrives; returns `None` on shutdown (after draining).
+fn next_batch(shared: &Shared, me: usize, steal: bool) -> Option<(ImageBatch, bool)> {
+    let mut st = shared.state.lock().expect("coordinator state poisoned");
+    loop {
+        if let Some(b) = st.queues[me].pop_front() {
+            st.queued -= 1;
+            return Some((b, false));
+        }
+        if steal {
+            let victim = (0..st.queues.len())
+                .filter(|&j| j != me && !st.queues[j].is_empty())
+                .max_by_key(|&j| st.queues[j].len());
+            if let Some(j) = victim {
+                let b = st.queues[j].pop_back().expect("victim queue non-empty");
+                st.queued -= 1;
+                return Some((b, true));
+            }
+        }
+        if st.shutdown {
+            return None;
+        }
+        st = shared.work_cv.wait(st).expect("coordinator state poisoned");
+    }
+}
+
+/// The persistent sharded coordinator.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
     metrics: Arc<Metrics>,
-    task_tx: Option<SyncSender<ImageTask>>,
+    shared: Arc<Shared>,
     result_rx: Receiver<WorkerMsg>,
     handles: Vec<JoinHandle<()>>,
     next_req: u64,
@@ -45,6 +140,15 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Spawn a pool with the default configuration scaled to `workers`.
+    pub fn with_workers<E, F>(workers: usize, make_exec: F) -> Result<Self>
+    where
+        E: TileExecutor + Send + 'static,
+        F: Fn(usize) -> Result<E>,
+    {
+        Coordinator::spawn(CoordinatorConfig::new(workers), make_exec)
+    }
+
     /// Spawn a pool; `make_exec(worker_idx)` builds each worker's executor.
     /// All executors must share the same tile geometry.
     pub fn spawn<E, F>(cfg: CoordinatorConfig, make_exec: F) -> Result<Self>
@@ -54,6 +158,12 @@ impl Coordinator {
     {
         if cfg.workers == 0 {
             return Err(Error::Coordinator("zero workers".to_string()));
+        }
+        if cfg.queue_depth == 0 {
+            return Err(Error::Coordinator("zero queue depth".to_string()));
+        }
+        if cfg.batch_size == 0 {
+            return Err(Error::Coordinator("zero batch size".to_string()));
         }
         let mut execs = Vec::with_capacity(cfg.workers);
         for i in 0..cfg.workers {
@@ -69,35 +179,44 @@ impl Coordinator {
             return Err(Error::Coordinator("heterogeneous executors".to_string()));
         }
 
-        let metrics = Arc::new(Metrics::default());
-        let (task_tx, task_rx) = sync_channel::<ImageTask>(cfg.queue_depth);
-        let task_rx = Arc::new(Mutex::new(task_rx));
-        let (result_tx, result_rx) = sync_channel::<WorkerMsg>(cfg.queue_depth.max(2));
+        let metrics = Arc::new(Metrics::with_shards(cfg.workers));
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                queues: (0..cfg.workers).map(|_| VecDeque::new()).collect(),
+                queued: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+        });
+        let (result_tx, result_rx) = channel::<WorkerMsg>();
 
+        let steal = cfg.steal;
         let mut handles = Vec::with_capacity(cfg.workers);
         for (widx, mut exec) in execs.into_iter().enumerate() {
-            let task_rx = Arc::clone(&task_rx);
-            let result_tx = result_tx.clone();
+            let shared = Arc::clone(&shared);
+            let result_tx: Sender<WorkerMsg> = result_tx.clone();
             let metrics = Arc::clone(&metrics);
             handles.push(std::thread::spawn(move || loop {
-                // Pull the next image task; exit when the queue closes.
-                let task = {
-                    let guard = task_rx.lock().expect("task queue poisoned");
-                    match guard.recv() {
-                        Ok(t) => t,
-                        Err(_) => break,
-                    }
+                let (batch, stolen) = match next_batch(&shared, widx, steal) {
+                    Some(x) => x,
+                    None => break,
                 };
-                let req_id = task.req_id;
-                match run_image(&mut exec, &task, widx, &metrics) {
-                    Ok(partial) => {
-                        if result_tx.send(WorkerMsg::Partial(partial)).is_err() {
+                if stolen {
+                    metrics.add(&metrics.steals, 1);
+                    metrics.add(&metrics.shard(widx).steals, 1);
+                }
+                let req_id = batch.req_id;
+                let images = batch.len();
+                match run_batch(&mut exec, &batch, widx, &metrics) {
+                    Ok(res) => {
+                        if result_tx.send(WorkerMsg::Done(res)).is_err() {
                             break;
                         }
                     }
                     Err(e) => {
                         let _ = result_tx.send(WorkerMsg::Failed {
                             req_id,
+                            images,
                             error: e.to_string(),
                         });
                     }
@@ -108,7 +227,7 @@ impl Coordinator {
         Ok(Coordinator {
             cfg,
             metrics,
-            task_tx: Some(task_tx),
+            shared,
             result_rx,
             handles,
             next_req: 0,
@@ -122,9 +241,31 @@ impl Coordinator {
         &self.metrics
     }
 
-    /// Worker count.
+    /// Worker (shard) count.
     pub fn workers(&self) -> usize {
         self.cfg.workers
+    }
+
+    /// The active configuration.
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    /// Try to enqueue a batch on its home shard without blocking; returns
+    /// the batch back when the bounded queue is full.
+    fn try_submit(&self, batch: ImageBatch) -> std::result::Result<(), ImageBatch> {
+        let mut st = self.shared.state.lock().expect("coordinator state poisoned");
+        if st.queued >= self.cfg.queue_depth {
+            return Err(batch);
+        }
+        let shard = batch.shard;
+        st.queues[shard].push_back(batch);
+        st.queued += 1;
+        drop(st);
+        // notify_all: with stealing, any worker may be able to take it; a
+        // single notify could wake only a worker that then re-sleeps.
+        self.shared.work_cv.notify_all();
+        Ok(())
     }
 
     /// Distributed quantized MTTKRP: `unf [I, K] @ krp [K, R]`.
@@ -145,67 +286,74 @@ impl Coordinator {
 
         let k_blocks = k_dim.div_ceil(self.rows);
         let r_blocks = r_dim.div_ceil(self.wpr);
-        let total = k_blocks * r_blocks;
+        let total_images = k_blocks * r_blocks;
+        // Batches per contraction block: rank blocks in chunks of
+        // `batch_size`.  Batch b covers kb = b / chunks, chunk = b % chunks.
+        let chunks_per_kb = r_blocks.div_ceil(self.cfg.batch_size).max(1);
+        let total_batches = k_blocks * chunks_per_kb;
+        let images_in_batch = |b: usize| -> usize {
+            let chunk = b % chunks_per_kb;
+            let rb0 = chunk * self.cfg.batch_size;
+            self.cfg.batch_size.min(r_blocks.saturating_sub(rb0))
+        };
 
-        // Leader: produce tasks while consuming partials (bounded queue).
+        // Leader: produce batches while consuming results (bounded queue).
         // Partials are buffered and reduced in (rb, kb) order so the f32
         // result is deterministic and bit-identical to the single-array
         // pipeline, independent of worker count and scheduling.
         let mut out = Matrix::zeros(i_dim, r_dim);
         let mut buffered: Vec<Option<ImagePartial>> = Vec::new();
-        buffered.resize_with(total, || None);
-        let mut received = 0usize;
+        buffered.resize_with(total_images, || None);
+        let mut expected_images = total_images;
+        let mut received_images = 0usize;
         let mut produced = 0usize;
+        let mut pending: Option<ImageBatch> = None;
         let mut error: Option<Error> = None;
-        let task_tx = self
-            .task_tx
-            .as_ref()
-            .ok_or_else(|| Error::Coordinator("pool shut down".to_string()))?
-            .clone();
 
-        let mut pending: Option<ImageTask> = None;
-        while received < total {
-            // Produce next task if any, without deadlocking on a full queue.
-            if produced < total && error.is_none() {
-                let task = match pending.take() {
-                    Some(t) => t,
-                    None => {
-                        let rb = produced / k_blocks;
-                        let kb = produced % k_blocks;
-                        make_image_task(
-                            req_id, rb, kb, &unf, krp, self.rows, self.wpr,
-                        )
-                    }
+        while received_images < expected_images {
+            // Produce the next batch if any, without deadlocking on a full
+            // queue: when full, fall through and drain one result first.
+            if produced < total_batches && error.is_none() {
+                let batch = match pending.take() {
+                    Some(b) => b,
+                    None => make_batch(
+                        req_id,
+                        produced,
+                        chunks_per_kb,
+                        &unf,
+                        krp,
+                        self.rows,
+                        self.wpr,
+                        &self.cfg,
+                    ),
                 };
-                match task_tx.try_send(task) {
+                match self.try_submit(batch) {
                     Ok(()) => {
                         produced += 1;
                         continue;
                     }
-                    Err(TrySendError::Full(t)) => {
+                    Err(b) => {
                         self.metrics.add(&self.metrics.backpressure_stalls, 1);
-                        pending = Some(t);
-                        // fall through to drain a result, then retry
-                    }
-                    Err(TrySendError::Disconnected(_)) => {
-                        return Err(Error::Coordinator("workers gone".to_string()));
+                        pending = Some(b);
                     }
                 }
             }
 
             // Consume one result.
             match self.result_rx.recv() {
-                Ok(WorkerMsg::Partial(p)) => {
-                    if p.req_id != req_id {
-                        continue; // stale partial from an aborted request
+                Ok(WorkerMsg::Done(res)) => {
+                    if res.req_id != req_id {
+                        continue; // stale result from an aborted request
                     }
-                    received += 1;
-                    let slot = p.rb * k_blocks + p.kb;
-                    buffered[slot] = Some(p);
+                    for p in res.partials {
+                        let slot = p.rb * k_blocks + p.kb;
+                        buffered[slot] = Some(p);
+                        received_images += 1;
+                    }
                 }
-                Ok(WorkerMsg::Failed { req_id: rid, error: e }) => {
+                Ok(WorkerMsg::Failed { req_id: rid, images, error: e }) => {
                     if rid == req_id {
-                        received += 1;
+                        received_images += images;
                         if error.is_none() {
                             error = Some(Error::Coordinator(e));
                         }
@@ -216,12 +364,14 @@ impl Coordinator {
                 }
             }
 
-            // If a failure occurred, stop producing further tasks but keep
-            // draining what was already queued.
-            if error.is_some() && produced < total {
-                // account for never-produced tasks
-                received += total - produced;
-                produced = total;
+            // On failure: stop producing, but keep draining what was
+            // already queued (their results are filtered next request
+            // otherwise).  Never-produced batches are written off.
+            if error.is_some() && produced < total_batches {
+                let unproduced: usize =
+                    (produced..total_batches).map(images_in_batch).sum();
+                expected_images -= unproduced;
+                produced = total_batches;
                 pending = None;
             }
         }
@@ -261,7 +411,11 @@ impl Coordinator {
 
     /// Gracefully stop the pool (also done on Drop).
     pub fn shutdown(&mut self) {
-        self.task_tx.take(); // closes the queue
+        {
+            let mut st = self.shared.state.lock().expect("coordinator state poisoned");
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -274,112 +428,136 @@ impl Drop for Coordinator {
     }
 }
 
-/// Build one image task: quantize the KRP block for (rb, kb).
-fn make_image_task(
+/// Build batch number `b` of a request: quantize the KRP images of one
+/// (contraction block, rank-block chunk) via the same
+/// [`quantize_krp_image`] the single-array pipeline uses.
+#[allow(clippy::too_many_arguments)]
+fn make_batch(
     req_id: u64,
-    rb: usize,
-    kb: usize,
+    b: usize,
+    chunks_per_kb: usize,
     unf: &Arc<Matrix>,
     krp: &Matrix,
     rows: usize,
     wpr: usize,
-) -> ImageTask {
+    cfg: &CoordinatorConfig,
+) -> ImageBatch {
     let r_dim = krp.cols();
     let k_dim = krp.rows();
-    let r0 = rb * wpr;
-    let r_cnt = wpr.min(r_dim - r0);
+    let r_blocks = r_dim.div_ceil(wpr);
+
+    let kb = b / chunks_per_kb;
+    let chunk = b % chunks_per_kb;
     let k0 = kb * rows;
     let k_cnt = rows.min(k_dim - k0);
 
-    // Per-column quantization — must mirror PsramPipeline exactly so the
-    // distributed result stays bit-identical to the single-array path.
-    let mut image = vec![0i8; rows * wpr];
-    let mut w_scales = vec![1f32; r_cnt];
-    let mut col = vec![0f32; k_cnt];
-    for r in 0..r_cnt {
-        for k in 0..k_cnt {
-            col[k] = krp.get(k0 + k, r0 + r);
-        }
-        let (cq, cs) = quantize_sym(&col, 8);
-        w_scales[r] = cs;
-        for k in 0..k_cnt {
-            image[k * wpr + r] = cq[k] as i8;
-        }
-    }
-    ImageTask {
+    let rb0 = chunk * cfg.batch_size;
+    let rb_end = r_blocks.min(rb0 + cfg.batch_size);
+    let images: Vec<ImageSpec> = (rb0..rb_end)
+        .map(|rb| {
+            let r0 = rb * wpr;
+            let r_cnt = wpr.min(r_dim - r0);
+            let (image, w_scales) =
+                quantize_krp_image(krp, k0, k_cnt, r0, r_cnt, rows, wpr);
+            ImageSpec { rb, image, w_scales, r0, r_cnt }
+        })
+        .collect();
+
+    ImageBatch {
         req_id,
-        rb,
+        shard: kb % cfg.workers,
         kb,
-        image,
-        w_scales,
-        r0,
-        r_cnt,
         k0,
         k_cnt,
+        images,
         unf: Arc::clone(unf),
     }
 }
 
-/// Worker body for one image task: stream all lane batches, dequantize,
-/// return the partial block.
-fn run_image<E: TileExecutor>(
+/// Worker body for one batch: quantize each lane batch of the shared
+/// operand once, stream it against every image, dequantize, return the
+/// partial blocks.
+fn run_batch<E: TileExecutor>(
     exec: &mut E,
-    task: &ImageTask,
+    batch: &ImageBatch,
     worker: usize,
     metrics: &Metrics,
-) -> Result<ImagePartial> {
+) -> Result<BatchResult> {
     let rows = exec.rows();
     let wpr = exec.words_per_row();
     let lanes_max = exec.max_lanes();
-    let i_dim = task.unf.rows();
+    let i_dim = batch.unf.rows();
+    let i_batches = i_dim.div_ceil(lanes_max);
+    let shard_m = metrics.shard(worker);
 
-    exec.load_image(&task.image)?;
-    metrics.add(&metrics.images, 1);
-    metrics.add(&metrics.write_cycles, rows as u64);
+    // The quantized lane batches depend only on (kb, ib) — shared by every
+    // image in the batch.  This cache is what batching buys: without it,
+    // every image re-quantizes the whole streamed operand.
+    let mut u_cache: Vec<Option<(Vec<u8>, Vec<f32>)>> = vec![None; i_batches];
 
-    let mut partial = vec![0f32; i_dim * task.r_cnt];
-    for ib in 0..i_dim.div_ceil(lanes_max) {
-        let i0 = ib * lanes_max;
-        let lane_cnt = lanes_max.min(i_dim - i0);
-        // Per-lane quantization (mirrors PsramPipeline).
-        let mut u = vec![encode_offset(0); lane_cnt * rows];
-        let mut x_scales = vec![1f32; lane_cnt];
-        for m in 0..lane_cnt {
-            let xr = &task.unf.row(i0 + m)[task.k0..task.k0 + task.k_cnt];
-            x_scales[m] =
-                quantize_encode_into(xr, &mut u[m * rows..m * rows + task.k_cnt]);
-        }
-        let tile = exec.compute(&u, lane_cnt)?;
-        metrics.add(&metrics.compute_cycles, 1);
-        metrics.add(&metrics.raw_macs, (rows * wpr * lane_cnt) as u64);
-        metrics.add(
-            &metrics.useful_macs,
-            (task.k_cnt * task.r_cnt * lane_cnt) as u64,
-        );
+    let mut partials = Vec::with_capacity(batch.len());
+    for spec in &batch.images {
+        exec.load_image(&spec.image)?;
+        metrics.add(&metrics.images, 1);
+        metrics.add(&metrics.write_cycles, rows as u64);
+        metrics.add(&shard_m.images, 1);
+        metrics.add(&shard_m.write_cycles, rows as u64);
 
-        for m in 0..lane_cnt {
-            let prow = &mut partial[(i0 + m) * task.r_cnt..(i0 + m + 1) * task.r_cnt];
-            for r in 0..task.r_cnt {
-                prow[r] += tile[m * wpr + r] as f32 * (x_scales[m] * task.w_scales[r]);
+        let mut partial = vec![0f32; i_dim * spec.r_cnt];
+        for (ib, slot) in u_cache.iter_mut().enumerate() {
+            let i0 = ib * lanes_max;
+            let lane_cnt = lanes_max.min(i_dim - i0);
+            if slot.is_none() {
+                *slot = Some(quantize_lane_batch(
+                    &batch.unf, i0, lane_cnt, batch.k0, batch.k_cnt, rows,
+                ));
+            }
+            let (u, x_scales) = slot.as_ref().expect("just filled");
+
+            let tile = exec.compute(u, lane_cnt)?;
+            metrics.add(&metrics.compute_cycles, 1);
+            metrics.add(&shard_m.compute_cycles, 1);
+            metrics.add(&metrics.raw_macs, (rows * wpr * lane_cnt) as u64);
+            metrics.add(
+                &metrics.useful_macs,
+                (batch.k_cnt * spec.r_cnt * lane_cnt) as u64,
+            );
+
+            for m in 0..lane_cnt {
+                let prow =
+                    &mut partial[(i0 + m) * spec.r_cnt..(i0 + m + 1) * spec.r_cnt];
+                for r in 0..spec.r_cnt {
+                    prow[r] +=
+                        tile[m * wpr + r] as f32 * (x_scales[m] * spec.w_scales[r]);
+                }
             }
         }
+        partials.push(ImagePartial {
+            rb: spec.rb,
+            kb: batch.kb,
+            partial,
+            r0: spec.r0,
+            r_cnt: spec.r_cnt,
+        });
     }
+    metrics.add(&metrics.batches, 1);
+    metrics.add(&shard_m.batches, 1);
 
-    Ok(ImagePartial {
-        req_id: task.req_id,
-        rb: task.rb,
-        kb: task.kb,
-        partial,
-        r0: task.r0,
-        r_cnt: task.r_cnt,
-        worker,
-    })
+    Ok(BatchResult { req_id: batch.req_id, partials })
 }
 
-/// A [`MttkrpBackend`] running CP-ALS MTTKRPs through the coordinator.
+/// A [`MttkrpBackend`] running CP-ALS MTTKRPs through the coordinator —
+/// the default backend for multi-array CP-ALS (see `cpd::backend`).
 pub struct CoordinatedBackend<'a> {
     pub tensor: &'a DenseTensor,
     pub pool: Coordinator,
+}
+
+impl<'a> CoordinatedBackend<'a> {
+    /// Wrap an existing pool.
+    pub fn new(tensor: &'a DenseTensor, pool: Coordinator) -> Self {
+        CoordinatedBackend { tensor, pool }
+    }
 }
 
 impl MttkrpBackend for CoordinatedBackend<'_> {
@@ -415,25 +593,120 @@ mod tests {
     }
 
     fn spawn_cpu_pool(workers: usize) -> Coordinator {
-        Coordinator::spawn(
-            CoordinatorConfig { workers, queue_depth: 4 },
-            |_| Ok(CpuTileExecutor::paper()),
-        )
-        .unwrap()
+        Coordinator::with_workers(workers, |_| Ok(CpuTileExecutor::paper())).unwrap()
     }
 
     #[test]
     fn distributed_matches_single_pipeline_bit_exactly() {
         // Same quantization per (image, lane batch) -> identical f32 output
-        // regardless of worker count or scheduling order.
+        // regardless of worker count, batch size, or stealing.
         let (x, factors) = rand_problem(1, &[120, 9, 60], 40);
         let mut exec = CpuTileExecutor::paper();
         let single = PsramPipeline::new(&mut exec).mttkrp(&x, &factors, 0).unwrap();
         for workers in [1usize, 2, 4] {
-            let mut pool = spawn_cpu_pool(workers);
-            let dist = pool.mttkrp(&x, &factors, 0).unwrap();
-            assert_eq!(single.data(), dist.data(), "workers={workers}");
+            for batch_size in [1usize, 2, 8] {
+                let mut pool = Coordinator::spawn(
+                    CoordinatorConfig {
+                        workers,
+                        batch_size,
+                        ..CoordinatorConfig::new(workers)
+                    },
+                    |_| Ok(CpuTileExecutor::paper()),
+                )
+                .unwrap();
+                let dist = pool.mttkrp(&x, &factors, 0).unwrap();
+                assert_eq!(
+                    single.data(),
+                    dist.data(),
+                    "workers={workers} batch={batch_size}"
+                );
+            }
         }
+    }
+
+    #[test]
+    fn stealing_on_and_off_agree() {
+        let (x, factors) = rand_problem(11, &[90, 8, 40], 24);
+        let mut on = Coordinator::spawn(
+            CoordinatorConfig { workers: 3, steal: true, ..Default::default() },
+            |_| Ok(CpuTileExecutor::paper()),
+        )
+        .unwrap();
+        let mut off = Coordinator::spawn(
+            CoordinatorConfig { workers: 3, steal: false, ..Default::default() },
+            |_| Ok(CpuTileExecutor::paper()),
+        )
+        .unwrap();
+        let a = on.mttkrp(&x, &factors, 0).unwrap();
+        let b = off.mttkrp(&x, &factors, 0).unwrap();
+        assert_eq!(a.data(), b.data());
+    }
+
+    /// A CPU executor whose image loads take real wall-clock time, so steal
+    /// scheduling in tests is deterministic instead of racy.
+    struct SlowExec {
+        inner: CpuTileExecutor,
+        delay: std::time::Duration,
+    }
+
+    impl TileExecutor for SlowExec {
+        fn rows(&self) -> usize {
+            self.inner.rows()
+        }
+        fn words_per_row(&self) -> usize {
+            self.inner.words_per_row()
+        }
+        fn max_lanes(&self) -> usize {
+            self.inner.max_lanes()
+        }
+        fn load_image(&mut self, image: &[i8]) -> Result<()> {
+            std::thread::sleep(self.delay);
+            self.inner.load_image(image)
+        }
+        fn compute(&mut self, u: &[u8], lanes: usize) -> Result<Vec<i32>> {
+            self.inner.compute(u, lanes)
+        }
+        fn cycles(&self) -> crate::psram::CycleLedger {
+            self.inner.cycles()
+        }
+    }
+
+    #[test]
+    fn work_stealing_rebalances_single_shard_load() {
+        // K fits one contraction block -> every batch lands on shard 0.
+        // Worker 0 is slowed by 25 ms per image load while worker 1 is
+        // fast, so worker 1 reliably steals from shard 0's queue; the
+        // result stays bit-exact regardless of who ran what.
+        let (x, factors) = rand_problem(12, &[120, 16, 16], 128);
+        let mut exec = CpuTileExecutor::paper();
+        let single = PsramPipeline::new(&mut exec).mttkrp(&x, &factors, 0).unwrap();
+        let mut pool = Coordinator::spawn(
+            CoordinatorConfig {
+                workers: 2,
+                queue_depth: 64,
+                batch_size: 1,
+                steal: true,
+            },
+            |i| {
+                Ok(SlowExec {
+                    inner: CpuTileExecutor::paper(),
+                    delay: std::time::Duration::from_millis(if i == 0 { 25 } else { 0 }),
+                })
+            },
+        )
+        .unwrap();
+        let dist = pool.mttkrp(&x, &factors, 0).unwrap();
+        assert_eq!(single.data(), dist.data());
+        let m = pool.metrics();
+        // R = 128 -> 4 rank blocks -> 4 single-image batches, all homed on
+        // shard 0.  While worker 0 sleeps in its first load, worker 1 (no
+        // delay) must have stolen at least one batch from shard 0's tail.
+        let rows = m.shard_snapshot();
+        assert!(rows[1].5 >= 1, "worker 1 stole nothing: {rows:?}");
+        assert_eq!(rows[1].1, rows[1].5, "worker 1 batches must all be steals");
+        let total: u64 = rows.iter().map(|r| r.1).sum();
+        assert_eq!(total, 4);
+        assert_eq!(m.steals.load(std::sync::atomic::Ordering::Relaxed), rows[1].5);
     }
 
     #[test]
@@ -449,21 +722,56 @@ mod tests {
     }
 
     #[test]
+    fn per_shard_metrics_sum_to_global() {
+        let (x, factors) = rand_problem(9, &[104, 20, 52], 64);
+        let mut pool = spawn_cpu_pool(3);
+        pool.mttkrp(&x, &factors, 0).unwrap();
+        let m = pool.metrics();
+        let rows = m.shard_snapshot();
+        let images: u64 = rows.iter().map(|r| r.2).sum();
+        let compute: u64 = rows.iter().map(|r| r.3).sum();
+        let write: u64 = rows.iter().map(|r| r.4).sum();
+        assert_eq!(images, m.snapshot()[1].1);
+        assert_eq!(compute, m.snapshot()[2].1);
+        assert_eq!(write, m.snapshot()[3].1);
+    }
+
+    #[test]
     fn backpressure_engages_with_tiny_queue() {
-        // queue_depth 1 with many images forces try_send to stall at least
-        // once on any realistic interleaving.
+        // queue_depth 1 with many single-image batches forces try_submit
+        // to stall at least once on any realistic interleaving.
         let (x, factors) = rand_problem(3, &[30, 20, 52], 64);
         let mut pool = Coordinator::spawn(
-            CoordinatorConfig { workers: 1, queue_depth: 1 },
+            CoordinatorConfig {
+                workers: 1,
+                queue_depth: 1,
+                batch_size: 1,
+                steal: true,
+            },
             |_| Ok(CpuTileExecutor::paper()),
         )
         .unwrap();
         let out = pool.mttkrp(&x, &factors, 0).unwrap();
         assert_eq!(out.rows(), 30);
-        // (stall count is scheduling dependent; just ensure the run finished
-        // and produced all images)
+        // (stall count is scheduling dependent; just ensure the run
+        // finished and produced all images)
         let images = pool.metrics().snapshot()[1].1;
         assert_eq!(images, 5 * 2); // K=20*52=1040 -> 5 blocks; R=64 -> 2 blocks
+    }
+
+    #[test]
+    fn config_from_model_scales_with_geometry() {
+        let mut m = PerfModel::paper();
+        m.num_arrays = 6;
+        let w = Workload { i_rows: 1000, k_contraction: 4096, rank: 96 };
+        let cfg = CoordinatorConfig::from_model(&m, &w);
+        assert_eq!(cfg.workers, 6);
+        assert_eq!(cfg.queue_depth, 12);
+        assert_eq!(cfg.batch_size, 3); // 96 rank / 32 words per row
+        assert!(cfg.steal);
+        // huge rank is clamped
+        let big = Workload { i_rows: 1, k_contraction: 1, rank: 10_000 };
+        assert_eq!(CoordinatorConfig::from_model(&m, &big).batch_size, 16);
     }
 
     #[test]
@@ -491,17 +799,14 @@ mod tests {
             }
         }
         let (x, factors) = rand_problem(4, &[20, 8, 8], 8);
-        let mut pool = Coordinator::spawn(
-            CoordinatorConfig { workers: 2, queue_depth: 2 },
-            |_| Ok(Broken),
-        )
-        .unwrap();
+        let mut pool =
+            Coordinator::with_workers(2, |_| Ok(Broken)).unwrap();
         let err = pool.mttkrp(&x, &factors, 0).unwrap_err();
         assert!(err.to_string().contains("injected fault"));
         // The pool must survive the failed request...
         let (x2, f2) = rand_problem(5, &[10, 8, 8], 4);
-        // ...and still answer (with the same broken executor it errors again,
-        // but deterministically rather than hanging).
+        // ...and still answer (with the same broken executor it errors
+        // again, but deterministically rather than hanging).
         assert!(pool.mttkrp(&x2, &f2, 0).is_err());
     }
 
@@ -513,7 +818,7 @@ mod tests {
             [14, 12, 10].iter().map(|&d| Matrix::randn(d, 3, &mut rng)).collect();
         let x = DenseTensor::from_cp_factors(&factors, 0.0, &mut rng).unwrap();
         let pool = spawn_cpu_pool(3);
-        let mut backend = CoordinatedBackend { tensor: &x, pool };
+        let mut backend = CoordinatedBackend::new(&x, pool);
         let res = CpAls::new(AlsConfig { rank: 3, max_iters: 25, tol: 1e-6, seed: 1 })
             .run(&mut backend)
             .unwrap();
@@ -523,20 +828,23 @@ mod tests {
     }
 
     #[test]
-    fn zero_workers_rejected() {
-        let r = Coordinator::spawn(
-            CoordinatorConfig { workers: 0, queue_depth: 1 },
-            |_| Ok(CpuTileExecutor::paper()),
-        );
-        assert!(r.is_err());
+    fn degenerate_configs_rejected() {
+        for cfg in [
+            CoordinatorConfig { workers: 0, ..Default::default() },
+            CoordinatorConfig { queue_depth: 0, ..Default::default() },
+            CoordinatorConfig { batch_size: 0, ..Default::default() },
+        ] {
+            assert!(
+                Coordinator::spawn(cfg, |_| Ok(CpuTileExecutor::paper())).is_err()
+            );
+        }
     }
 
     #[test]
     fn heterogeneous_executors_rejected() {
-        let r = Coordinator::spawn(
-            CoordinatorConfig { workers: 2, queue_depth: 1 },
-            |i| Ok(CpuTileExecutor::new(256, 32, if i == 0 { 52 } else { 26 })),
-        );
+        let r = Coordinator::with_workers(2, |i| {
+            Ok(CpuTileExecutor::new(256, 32, if i == 0 { 52 } else { 26 }))
+        });
         assert!(r.is_err());
     }
 

@@ -8,5 +8,7 @@ pub mod backend;
 pub mod fit;
 
 pub use als::{AlsConfig, AlsResult, CpAls};
-pub use backend::{ExactBackend, MttkrpBackend, PsramBackend, SparseBackend};
+pub use backend::{
+    CoordinatedBackend, ExactBackend, MttkrpBackend, PsramBackend, SparseBackend,
+};
 pub use fit::{brute_force_fit, cp_norm_sq};

@@ -22,11 +22,13 @@
 //!   17 PetaOps headline) plus sweep drivers.
 //! * [`energy`] — energy accounting from the paper's device numbers
 //!   (1.04 pJ/bit switching, 16.7 aJ/bit static).
-//! * [`coordinator`] — the L3 runtime: multi-array leader/worker scheduling,
-//!   batching, backpressure and metrics (std threads; this image has no
-//!   tokio).
+//! * [`coordinator`] — the L3 runtime: a sharded, batched multi-array
+//!   scheduler (batches keyed by contraction block, work stealing between
+//!   shards, backpressure, global + per-shard metrics; std threads — this
+//!   image has no tokio).  Bit-identical to the single-array pipeline.
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
-//!   (`artifacts/*.hlo.txt`) for the digital baseline and cross-checks.
+//!   (`artifacts/*.hlo.txt`) for the digital baseline and cross-checks
+//!   (behind the `xla` feature; a graceful stub otherwise).
 //! * [`util`] — PRNG, statistics, fixed-point helpers, a tiny
 //!   property-testing harness, physical units.
 //!

@@ -22,6 +22,9 @@ pub mod pipeline;
 pub mod reference;
 pub mod sparse_pipeline;
 
-pub use pipeline::{CpuTileExecutor, MttkrpStats, PsramPipeline, TileExecutor};
+pub use pipeline::{
+    quantize_krp_image, quantize_lane_batch, CpuTileExecutor, MttkrpStats,
+    PsramPipeline, TileExecutor,
+};
 pub use reference::{dense_mttkrp, sparse_mttkrp};
 pub use sparse_pipeline::{SparsePsramBackend, SparsePsramPipeline};

@@ -218,6 +218,65 @@ impl MttkrpStats {
     }
 }
 
+/// Quantize one KRP image block: the `(K-block, R-block)` tile stored on
+/// the array, quantized per word *column* (each bit-line's output has its
+/// own digital scale — hardware-plausible and much more accurate than a
+/// per-image scalar).  Returns the zero-padded row-major
+/// `[rows][words_per_row]` image and the `r_cnt` per-column scales.
+///
+/// This is the single source of truth for image quantization: the
+/// single-array pipeline and the multi-array coordinator both call it, so
+/// their f32 outputs are bit-identical by construction.
+pub fn quantize_krp_image(
+    krp: &Matrix,
+    k0: usize,
+    k_cnt: usize,
+    r0: usize,
+    r_cnt: usize,
+    rows: usize,
+    wpr: usize,
+) -> (Vec<i8>, Vec<f32>) {
+    let mut image = vec![0i8; rows * wpr];
+    let mut w_scales = vec![1f32; r_cnt];
+    let mut col = vec![0f32; k_cnt];
+    for r in 0..r_cnt {
+        for k in 0..k_cnt {
+            col[k] = krp.get(k0 + k, r0 + r);
+        }
+        let (cq, cs) = quantize_sym(&col, 8);
+        w_scales[r] = cs;
+        for k in 0..k_cnt {
+            image[k * wpr + r] = cq[k] as i8;
+        }
+    }
+    (image, w_scales)
+}
+
+/// Quantize one lane batch of the unfolded operand: rows `i0..i0+lane_cnt`
+/// of `unf`, restricted to contraction columns `k0..k0+k_cnt`, quantized
+/// per *lane* (each wavelength's input DAC has its own scale) and encoded
+/// offset-binary into a zero-padded `[lane_cnt][rows]` block.  Returns the
+/// codes and the per-lane scales.
+///
+/// Shared by the pipeline's lane-batch cache and the coordinator workers'
+/// per-batch cache (see `coordinator::job::ImageBatch`).
+pub fn quantize_lane_batch(
+    unf: &Matrix,
+    i0: usize,
+    lane_cnt: usize,
+    k0: usize,
+    k_cnt: usize,
+    rows: usize,
+) -> (Vec<u8>, Vec<f32>) {
+    let mut u = vec![encode_offset(0); lane_cnt * rows];
+    let mut x_scales = vec![1f32; lane_cnt];
+    for m in 0..lane_cnt {
+        let xr = &unf.row(i0 + m)[k0..k0 + k_cnt];
+        x_scales[m] = quantize_encode_into(xr, &mut u[m * rows..m * rows + k_cnt]);
+    }
+    (u, x_scales)
+}
+
 /// The tiled MTTKRP pipeline over any [`TileExecutor`].
 pub struct PsramPipeline<'a, E: TileExecutor> {
     exec: &'a mut E,
@@ -284,22 +343,8 @@ impl<'a, E: TileExecutor> PsramPipeline<'a, E> {
                 let k_cnt = rows.min(k_dim - k0);
 
                 // Build + quantize the KRP image [rows][wpr], zero padded.
-                // Quantization is per word COLUMN (each bit-line's output
-                // has its own digital scale — hardware-plausible and much
-                // more accurate than a per-image scalar).
-                let mut image = vec![0i8; rows * wpr];
-                let mut w_scales = vec![1f32; r_cnt];
-                let mut col = vec![0f32; k_cnt];
-                for r in 0..r_cnt {
-                    for k in 0..k_cnt {
-                        col[k] = krp.get(k0 + k, r0 + r);
-                    }
-                    let (cq, cs) = quantize_sym(&col, 8);
-                    w_scales[r] = cs;
-                    for k in 0..k_cnt {
-                        image[k * wpr + r] = cq[k] as i8;
-                    }
-                }
+                let (image, w_scales) =
+                    quantize_krp_image(krp, k0, k_cnt, r0, r_cnt, rows, wpr);
                 self.exec.load_image(&image)?;
                 self.stats.images += 1;
                 self.stats.write_cycles += rows as u64;
@@ -313,16 +358,9 @@ impl<'a, E: TileExecutor> PsramPipeline<'a, E> {
                     // DAC has its own scale), cached across R blocks.
                     let slot = kb * i_batches + ib;
                     if u_cache[slot].is_none() {
-                        let mut u = vec![encode_offset(0); lane_cnt * rows];
-                        let mut x_scales = vec![1f32; lane_cnt];
-                        for m in 0..lane_cnt {
-                            let xr = &unf.row(i0 + m)[k0..k0 + k_cnt];
-                            x_scales[m] = quantize_encode_into(
-                                xr,
-                                &mut u[m * rows..m * rows + k_cnt],
-                            );
-                        }
-                        u_cache[slot] = Some((u, x_scales));
+                        u_cache[slot] = Some(quantize_lane_batch(
+                            unf, i0, lane_cnt, k0, k_cnt, rows,
+                        ));
                     }
                     let (u, x_scales) = u_cache[slot].as_ref().unwrap();
 

@@ -99,6 +99,13 @@ impl PerfModel {
 
     /// Peak throughput in ops/s (the paper's op counting: one multiply +
     /// one accumulate per word per wavelength per cycle).
+    ///
+    /// ```
+    /// use psram_imc::perfmodel::PerfModel;
+    /// // §V.B: 2 × 8192 words × 52 λ × 20 GHz ≈ 17.04 PetaOps.
+    /// let peak = PerfModel::paper().peak_ops();
+    /// assert!((peak / 1e15 - 17.04).abs() < 0.005);
+    /// ```
     pub fn peak_ops(&self) -> f64 {
         2.0 * self.geom.total_words() as f64
             * self.wavelengths as f64

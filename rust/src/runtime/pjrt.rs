@@ -1,152 +1,249 @@
 //! The PJRT client wrapper: compile-once, execute-many for the HLO text
 //! artifacts (see `/opt/xla-example/load_hlo` for the reference wiring).
+//!
+//! The real client needs the `xla` crate (xla_extension bindings), which is
+//! not vendored in this offline build.  Without the `xla` cargo feature this
+//! module compiles to an API-compatible stub whose constructors return
+//! [`crate::Error::Runtime`] — every caller (the `pjrt` CLI backend, the
+//! digital baseline bench, `selftest`) detects that and degrades gracefully.
 
-use super::artifacts::{find_artifacts_dir, Manifest};
-use crate::util::error::{Error, Result};
-use std::collections::HashMap;
-use std::path::Path;
+#[cfg(feature = "xla")]
+pub use real::PjrtRuntime;
+#[cfg(not(feature = "xla"))]
+pub use stub::PjrtRuntime;
 
-/// PJRT CPU client plus a cache of compiled executables keyed by artifact
-/// name.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+#[cfg(feature = "xla")]
+mod real {
+    use crate::runtime::artifacts::{find_artifacts_dir, Manifest};
+    use crate::util::error::{Error, Result};
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    /// PJRT CPU client plus a cache of compiled executables keyed by
+    /// artifact name.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl PjrtRuntime {
+        /// Create a runtime from the default artifacts directory.
+        pub fn new() -> Result<Self> {
+            let dir = find_artifacts_dir()?;
+            Self::from_dir(&dir)
+        }
+
+        /// Create a runtime from an explicit artifacts directory.
+        pub fn from_dir(dir: &Path) -> Result<Self> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu()?;
+            Ok(PjrtRuntime { client, manifest, cache: HashMap::new() })
+        }
+
+        /// The artifact manifest.
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// PJRT platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (or fetch from cache) an artifact by name.
+        pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.cache.contains_key(name) {
+                let path = self
+                    .manifest
+                    .tiles
+                    .iter()
+                    .find(|t| t.name == name)
+                    .map(|t| t.path.clone())
+                    .or_else(|| self.manifest.other(name).cloned())
+                    .ok_or_else(|| {
+                        Error::Artifact(format!("unknown artifact {name:?}"))
+                    })?;
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| {
+                        Error::Artifact(format!("non-utf8 path {}", path.display()))
+                    })?,
+                )?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self.client.compile(&comp)?;
+                self.cache.insert(name.to_string(), exe);
+            }
+            Ok(&self.cache[name])
+        }
+
+        /// Execute a quantized tile kernel: `u8[m,k] x s8[k,n] -> s32[m,n]`.
+        pub fn execute_tile(
+            &mut self,
+            name: &str,
+            u: &[u8],
+            w: &[i8],
+            m: usize,
+            k: usize,
+            n: usize,
+        ) -> Result<Vec<i32>> {
+            if u.len() != m * k || w.len() != k * n {
+                return Err(Error::shape(format!(
+                    "tile {name}: u has {} codes (want {}), w has {} words (want {})",
+                    u.len(),
+                    m * k,
+                    w.len(),
+                    k * n
+                )));
+            }
+            let lit_u = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::U8,
+                &[m, k],
+                u,
+            )?;
+            let w_bytes =
+                unsafe { std::slice::from_raw_parts(w.as_ptr() as *const u8, w.len()) };
+            let lit_w = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::S8,
+                &[k, n],
+                w_bytes,
+            )?;
+            let exe = self.load(name)?;
+            let result = exe.execute::<xla::Literal>(&[lit_u, lit_w])?[0][0]
+                .to_literal_sync()?;
+            // aot.py lowers with return_tuple=True -> unwrap the 1-tuple.
+            let out = result.to_tuple1()?;
+            let v = out.to_vec::<i32>()?;
+            if v.len() != m * n {
+                return Err(Error::Runtime(format!(
+                    "tile {name} returned {} elements, want {}",
+                    v.len(),
+                    m * n
+                )));
+            }
+            Ok(v)
+        }
+
+        /// Execute a dense f32 MTTKRP baseline artifact:
+        /// `f32[i,j,k] x f32[j,r] x f32[k,r] -> f32[i,r]`.
+        #[allow(clippy::too_many_arguments)]
+        pub fn execute_mttkrp_f32(
+            &mut self,
+            name: &str,
+            x: &[f32],
+            b: &[f32],
+            c: &[f32],
+            i: usize,
+            j: usize,
+            k: usize,
+            r: usize,
+        ) -> Result<Vec<f32>> {
+            if x.len() != i * j * k || b.len() != j * r || c.len() != k * r {
+                return Err(Error::shape(format!("mttkrp {name}: operand sizes wrong")));
+            }
+            let as_bytes = |s: &[f32]| unsafe {
+                std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 4).to_vec()
+            };
+            let lx = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &[i, j, k],
+                &as_bytes(x),
+            )?;
+            let lb = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &[j, r],
+                &as_bytes(b),
+            )?;
+            let lc = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &[k, r],
+                &as_bytes(c),
+            )?;
+            let exe = self.load(name)?;
+            let result =
+                exe.execute::<xla::Literal>(&[lx, lb, lc])?[0][0].to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
+    }
 }
 
-impl PjrtRuntime {
-    /// Create a runtime from the default artifacts directory.
-    pub fn new() -> Result<Self> {
-        let dir = find_artifacts_dir()?;
-        Self::from_dir(&dir)
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use crate::runtime::artifacts::Manifest;
+    use crate::util::error::{Error, Result};
+    use std::path::Path;
+
+    /// The error every stubbed entry point returns.
+    fn unavailable() -> Error {
+        Error::Runtime(
+            "PJRT is unavailable: psram-imc was built without the `xla` feature \
+             (the xla_extension bindings are not vendored in this offline build)"
+                .to_string(),
+        )
     }
 
-    /// Create a runtime from an explicit artifacts directory.
-    pub fn from_dir(dir: &Path) -> Result<Self> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(PjrtRuntime { client, manifest, cache: HashMap::new() })
+    /// Stub runtime for builds without the `xla` feature.  Constructors
+    /// always fail with [`crate::Error::Runtime`]; the struct itself is
+    /// never instantiated, but the full method surface exists so callers
+    /// compile identically in both builds.
+    pub struct PjrtRuntime {
+        manifest: Manifest,
     }
 
-    /// The artifact manifest.
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch from cache) an artifact by name.
-    pub fn load(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(name) {
-            let path = self
-                .manifest
-                .tiles
-                .iter()
-                .find(|t| t.name == name)
-                .map(|t| t.path.clone())
-                .or_else(|| self.manifest.other(name).cloned())
-                .ok_or_else(|| {
-                    Error::Artifact(format!("unknown artifact {name:?}"))
-                })?;
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| {
-                    Error::Artifact(format!("non-utf8 path {}", path.display()))
-                })?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)?;
-            self.cache.insert(name.to_string(), exe);
+    impl PjrtRuntime {
+        /// Always fails: the build has no PJRT client.
+        pub fn new() -> Result<Self> {
+            Err(unavailable())
         }
-        Ok(&self.cache[name])
-    }
 
-    /// Execute a quantized tile kernel: `u8[m,k] x s8[k,n] -> s32[m,n]`.
-    pub fn execute_tile(
-        &mut self,
-        name: &str,
-        u: &[u8],
-        w: &[i8],
-        m: usize,
-        k: usize,
-        n: usize,
-    ) -> Result<Vec<i32>> {
-        if u.len() != m * k || w.len() != k * n {
-            return Err(Error::shape(format!(
-                "tile {name}: u has {} codes (want {}), w has {} words (want {})",
-                u.len(),
-                m * k,
-                w.len(),
-                k * n
-            )));
+        /// Always fails: the build has no PJRT client.
+        pub fn from_dir(_dir: &Path) -> Result<Self> {
+            Err(unavailable())
         }
-        let lit_u =
-            xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::U8, &[m, k], u)?;
-        let w_bytes =
-            unsafe { std::slice::from_raw_parts(w.as_ptr() as *const u8, w.len()) };
-        let lit_w = xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::S8,
-            &[k, n],
-            w_bytes,
-        )?;
-        let exe = self.load(name)?;
-        let result = exe.execute::<xla::Literal>(&[lit_u, lit_w])?[0][0]
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True -> unwrap the 1-tuple.
-        let out = result.to_tuple1()?;
-        let v = out.to_vec::<i32>()?;
-        if v.len() != m * n {
-            return Err(Error::Runtime(format!(
-                "tile {name} returned {} elements, want {}",
-                v.len(),
-                m * n
-            )));
-        }
-        Ok(v)
-    }
 
-    /// Execute a dense f32 MTTKRP baseline artifact:
-    /// `f32[i,j,k] x f32[j,r] x f32[k,r] -> f32[i,r]`.
-    #[allow(clippy::too_many_arguments)]
-    pub fn execute_mttkrp_f32(
-        &mut self,
-        name: &str,
-        x: &[f32],
-        b: &[f32],
-        c: &[f32],
-        i: usize,
-        j: usize,
-        k: usize,
-        r: usize,
-    ) -> Result<Vec<f32>> {
-        if x.len() != i * j * k || b.len() != j * r || c.len() != k * r {
-            return Err(Error::shape(format!("mttkrp {name}: operand sizes wrong")));
+        /// The artifact manifest.
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
         }
-        let as_bytes = |s: &[f32]| unsafe {
-            std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 4).to_vec()
-        };
-        let lx = xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::F32,
-            &[i, j, k],
-            &as_bytes(x),
-        )?;
-        let lb = xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::F32,
-            &[j, r],
-            &as_bytes(b),
-        )?;
-        let lc = xla::Literal::create_from_shape_and_untyped_data(
-            xla::ElementType::F32,
-            &[k, r],
-            &as_bytes(c),
-        )?;
-        let exe = self.load(name)?;
-        let result =
-            exe.execute::<xla::Literal>(&[lx, lb, lc])?[0][0].to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+
+        /// PJRT platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            "unavailable (built without the `xla` feature)".to_string()
+        }
+
+        /// Always fails: the build has no PJRT client.
+        pub fn load(&mut self, _name: &str) -> Result<()> {
+            Err(unavailable())
+        }
+
+        /// Always fails: the build has no PJRT client.
+        pub fn execute_tile(
+            &mut self,
+            _name: &str,
+            _u: &[u8],
+            _w: &[i8],
+            _m: usize,
+            _k: usize,
+            _n: usize,
+        ) -> Result<Vec<i32>> {
+            Err(unavailable())
+        }
+
+        /// Always fails: the build has no PJRT client.
+        #[allow(clippy::too_many_arguments)]
+        pub fn execute_mttkrp_f32(
+            &mut self,
+            _name: &str,
+            _x: &[f32],
+            _b: &[f32],
+            _c: &[f32],
+            _i: usize,
+            _j: usize,
+            _k: usize,
+            _r: usize,
+        ) -> Result<Vec<f32>> {
+            Err(unavailable())
+        }
     }
 }
 

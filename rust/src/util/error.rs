@@ -1,42 +1,80 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls rather than `thiserror` — this crate
+//! builds offline with no external dependencies (see `Cargo.toml`).
+
+use std::fmt;
 
 /// Errors produced by the psram-imc stack.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Shape/dimension mismatch in tensor or array operations.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
     /// A configuration is physically or logically inadmissible
     /// (e.g. more WDM channels than the comb can carry).
-    #[error("invalid configuration: {0}")]
     Config(String),
 
     /// A scheduling invariant was violated.
-    #[error("schedule error: {0}")]
     Schedule(String),
 
     /// The PJRT runtime failed to load or execute an artifact.
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// An artifact file is missing or malformed.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// The coordinator hit an internal fault (worker death, channel close).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Numerical failure (non-finite values, singular matrix, ...).
-    #[error("numerical error: {0}")]
     Numerical(String),
 
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    /// An underlying I/O failure.
+    Io(std::io::Error),
 
-    #[error(transparent)]
-    Xla(#[from] xla::Error),
+    /// An error from the XLA/PJRT bindings (only constructed when the
+    /// `xla` feature is enabled; carried as text so the variant exists —
+    /// and formats — identically in both builds).
+    Xla(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Config(m) => write!(f, "invalid configuration: {m}"),
+            Error::Schedule(m) => write!(f, "schedule error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Numerical(m) => write!(f, "numerical error: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Xla(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
 }
 
 /// Crate-wide result alias.
@@ -71,5 +109,13 @@ mod tests {
         let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
         let e: Error = ioe.into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn io_error_source_preserved() {
+        use std::error::Error as _;
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.source().is_some());
+        assert!(Error::config("x").source().is_none());
     }
 }

@@ -1,0 +1,94 @@
+//! Regression tests pinning the predictive performance model to the
+//! paper's published numbers (§V.B, Fig. 5).  No artifacts needed.
+
+use psram_imc::perfmodel::{
+    fig5_frequency, fig5_wavelengths, headline, PerfModel, Workload,
+};
+
+/// §V.B: peak = 2 × total_words × wavelengths × clock
+///             = 2 × 8192 × 52 × 20 GHz ≈ 17.04 PetaOps.
+#[test]
+fn paper_headline_peak_is_17_04_petaops() {
+    let m = PerfModel::paper();
+    assert_eq!(m.geom.total_words(), 8192);
+    assert_eq!(m.wavelengths, 52);
+    assert_eq!(m.clock_hz, 20e9);
+    let explicit = 2.0 * 8192.0 * 52.0 * 20e9;
+    assert_eq!(m.peak_ops(), explicit);
+    assert!(
+        (m.peak_ops() / 1e15 - 17.04).abs() < 0.005,
+        "peak = {:.4} PetaOps",
+        m.peak_ops() / 1e15
+    );
+}
+
+/// The headline driver agrees with the model and sustains near peak on the
+/// paper's 1M-per-mode workload.
+#[test]
+fn headline_driver_consistent() {
+    let (peak, sustained, util) = headline().unwrap();
+    assert_eq!(peak, PerfModel::paper().peak_ops());
+    assert!(sustained <= peak);
+    assert!(util > 0.98 && util <= 1.0, "util = {util}");
+}
+
+/// Sustained performance can never exceed peak, for every configuration
+/// the Fig. 5 sweeps touch — wavelengths × frequencies, with and without
+/// double buffering, across array counts.
+#[test]
+fn sustained_never_exceeds_peak_across_sweeps() {
+    let channels = [1usize, 2, 4, 8, 12, 16, 24, 32, 40, 52, 64];
+    let clocks = [1e9, 2e9, 5e9, 8e9, 10e9, 12e9, 15e9, 18e9, 20e9, 25e9];
+    let workloads = [
+        Workload::paper_large(),
+        Workload { i_rows: 52, k_contraction: 256, rank: 32 },
+        Workload { i_rows: 1000, k_contraction: 10_000, rank: 17 },
+    ];
+    for &l in &channels {
+        for &f in &clocks {
+            for &db in &[false, true] {
+                for &arrays in &[1usize, 4, 16] {
+                    for w in &workloads {
+                        let mut m = PerfModel::paper();
+                        m.wavelengths = l;
+                        m.clock_hz = f;
+                        m.double_buffer = db;
+                        m.num_arrays = arrays;
+                        let est = m.predict(w).unwrap();
+                        let peak = m.peak_ops();
+                        assert!(
+                            est.sustained_raw_ops <= peak * (1.0 + 1e-12),
+                            "sustained {} > peak {} (λ={l} f={f} db={db} arrays={arrays})",
+                            est.sustained_raw_ops,
+                            peak
+                        );
+                        assert!(est.sustained_useful_ops <= est.sustained_raw_ops);
+                        assert!(est.utilization > 0.0 && est.utilization <= 1.0);
+                        assert!(
+                            est.padding_efficiency > 0.0
+                                && est.padding_efficiency <= 1.0
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The Fig. 5 sweep drivers themselves respect the peak bound at every
+/// point (the series the benches print).
+#[test]
+fn fig5_sweep_points_within_peak() {
+    let pts = fig5_wavelengths(&[1, 2, 4, 8, 16, 32, 52, 64], 20e9).unwrap();
+    for p in &pts {
+        let mut m = PerfModel::paper();
+        m.wavelengths = p.x as usize;
+        assert!(p.sustained_ops <= m.peak_ops() * (1.0 + 1e-12));
+    }
+    let pts = fig5_frequency(&[1e9, 5e9, 10e9, 20e9, 25e9], 52).unwrap();
+    for p in &pts {
+        let mut m = PerfModel::paper();
+        m.clock_hz = p.x;
+        assert!(p.sustained_ops <= m.peak_ops() * (1.0 + 1e-12));
+    }
+}

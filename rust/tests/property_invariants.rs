@@ -71,7 +71,7 @@ fn prop_coordinator_equals_pipeline_bit_exactly() {
             let single = PsramPipeline::new(&mut exec).mttkrp(&x, &factors, 0).unwrap();
 
             let mut pool = Coordinator::spawn(
-                CoordinatorConfig { workers, queue_depth: 2 },
+                CoordinatorConfig { workers, queue_depth: 2, ..Default::default() },
                 |_| Ok(CpuTileExecutor::paper()),
             )
             .unwrap();

@@ -1,5 +1,6 @@
 //! Whole-stack integration: CP-ALS through every backend, coordinator over
-//! analog arrays, and cross-backend agreement.  Needs `artifacts/`.
+//! analog arrays, and cross-backend agreement.  The PJRT tests additionally
+//! need `artifacts/` and the `xla` feature.
 
 use psram_imc::compute::ComputeEngine;
 use psram_imc::coordinator::pool::CoordinatedBackend;
@@ -8,6 +9,7 @@ use psram_imc::cpd::{AlsConfig, CpAls, ExactBackend, PsramBackend};
 use psram_imc::device::{DeviceParams, NoiseModel};
 use psram_imc::mttkrp::pipeline::{AnalogTileExecutor, CpuTileExecutor};
 use psram_imc::psram::PsramArray;
+#[cfg(feature = "xla")]
 use psram_imc::runtime::PjrtTileExecutor;
 use psram_imc::tensor::{DenseTensor, Matrix};
 use psram_imc::util::prng::Prng;
@@ -18,6 +20,8 @@ fn low_rank(seed: u64, shape: &[usize], r: usize, noise: f32) -> DenseTensor {
     DenseTensor::from_cp_factors(&f, noise, &mut rng).unwrap()
 }
 
+// Needs the AOT artifacts and the `xla` feature (PJRT bindings).
+#[cfg(feature = "xla")]
 #[test]
 fn cp_als_through_pjrt_backend_reaches_high_fit() {
     let x = low_rank(1, &[20, 16, 12], 3, 0.0);
@@ -29,6 +33,8 @@ fn cp_als_through_pjrt_backend_reaches_high_fit() {
     assert!(res.final_fit() > 0.95, "fit={}", res.final_fit());
 }
 
+// Needs the AOT artifacts and the `xla` feature (PJRT bindings).
+#[cfg(feature = "xla")]
 #[test]
 fn pjrt_and_analog_backends_identical_fit_history() {
     // Both executors are bit-exact, so the whole ALS trajectory must match.
@@ -55,14 +61,14 @@ fn coordinator_over_analog_arrays_matches_cpu_workers() {
         [80, 10, 30].iter().map(|&d| Matrix::randn(d, 6, &mut rng)).collect();
 
     let mut analog_pool = Coordinator::spawn(
-        CoordinatorConfig { workers: 3, queue_depth: 4 },
+        CoordinatorConfig { workers: 3, queue_depth: 4, ..Default::default() },
         |_| Ok(AnalogTileExecutor::ideal()),
     )
     .unwrap();
     let a = analog_pool.mttkrp(&x, &factors, 0).unwrap();
 
     let mut cpu_pool = Coordinator::spawn(
-        CoordinatorConfig { workers: 2, queue_depth: 4 },
+        CoordinatorConfig { workers: 2, queue_depth: 4, ..Default::default() },
         |_| Ok(CpuTileExecutor::paper()),
     )
     .unwrap();
@@ -135,7 +141,7 @@ fn exact_vs_quantized_fit_gap_is_small() {
 fn coordinated_cp_als_with_many_workers() {
     let x = low_rank(7, &[40, 24, 20], 4, 0.0);
     let pool = Coordinator::spawn(
-        CoordinatorConfig { workers: 6, queue_depth: 12 },
+        CoordinatorConfig { workers: 6, queue_depth: 12, ..Default::default() },
         |_| Ok(CpuTileExecutor::paper()),
     )
     .unwrap();
