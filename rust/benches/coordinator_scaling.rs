@@ -64,7 +64,7 @@ fn main() {
                     Ok(CpuTileExecutor::paper())
                 })
                 .unwrap();
-                pool.mttkrp_unfolded(unf.clone(), &krp).unwrap();
+                pool.mttkrp_unfolded(&unf, &krp).unwrap();
             },
         );
         if shards == 1 {
@@ -77,7 +77,7 @@ fn main() {
         // against the perfmodel prediction for the same array count.
         let mut pool =
             Coordinator::spawn(cfg, |_| Ok(CpuTileExecutor::paper())).unwrap();
-        pool.mttkrp_unfolded(unf.clone(), &krp).unwrap();
+        pool.mttkrp_unfolded(&unf, &krp).unwrap();
         let m = pool.metrics();
         let measured_util = m.utilization();
         let measured_sustained = model.peak_ops() * measured_util;
@@ -112,7 +112,7 @@ fn main() {
                 |_| Ok(CpuTileExecutor::paper()),
             )
             .unwrap();
-            pool.mttkrp_unfolded(unf.clone(), &krp).unwrap();
+            pool.mttkrp_unfolded(&unf, &krp).unwrap();
         });
     }
 
@@ -132,7 +132,7 @@ fn main() {
                 |_| Ok(CpuTileExecutor::paper()),
             )
             .unwrap();
-            pool.mttkrp_unfolded(skew_unf.clone(), &skew_krp).unwrap();
+            pool.mttkrp_unfolded(&skew_unf, &skew_krp).unwrap();
         });
         let _ = t;
     }

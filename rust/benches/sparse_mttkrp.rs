@@ -7,10 +7,14 @@
 #[path = "common/mod.rs"]
 mod common;
 
+use psram_imc::coordinator::{Coordinator, CoordinatorConfig};
+use psram_imc::mttkrp::plan::SparseSlicePlanner;
 use psram_imc::mttkrp::reference::sparse_mttkrp;
 use psram_imc::mttkrp::{CpuTileExecutor, SparsePsramPipeline};
+use psram_imc::perfmodel::PerfModel;
 use psram_imc::tensor::{CooTensor, Matrix};
 use psram_imc::util::prng::Prng;
+use psram_imc::util::units::format_ops;
 
 fn main() {
     let mut rng = Prng::new(17);
@@ -58,4 +62,67 @@ fn main() {
     println!("\n(expected shape: photonic raw-MAC efficiency ≈ density — the array");
     println!(" computes zeros — while the CPU baseline scales with nnz only; the");
     println!(" crossover argument favours the array only above ~columns/rows density)");
+
+    // ---- coordinator-sharded sweep: slice plans across 1..16 shards ----
+    // The slice plan shards by stored factor block (j_dim = 2048 -> 8
+    // groups), so up to 8 shards take home batches and stealing covers the
+    // rest.  The sustained point from the measured cycle metrics must land
+    // exactly on the predict_plan envelope: plan totals are
+    // scheduling-independent by construction.
+    common::section(
+        "AB-SPARSE: coordinator-sharded spMTTKRP (64x2048x16, r32) vs predict_plan",
+    );
+    let shape2 = [64usize, 2048, 16];
+    let total2: usize = shape2.iter().product();
+    let factors2: Vec<Matrix> =
+        shape2.iter().map(|&d| Matrix::randn(d, rank, &mut rng)).collect();
+    for &density in &[0.001f64, 0.01, 0.05] {
+        let nnz = (total2 as f64 * density) as usize;
+        let x = CooTensor::random(&shape2, nnz, &mut rng);
+        let plan = SparseSlicePlanner::new(256, 32, 52)
+            .plan(&x, &factors2, 0)
+            .unwrap();
+        println!(
+            "\n-- density {density}: {} nnz, {} stored-image groups, {} images --",
+            x.nnz(),
+            plan.groups.len(),
+            plan.total_images()
+        );
+        for &shards in &[1usize, 2, 4, 8, 16] {
+            let mut model = PerfModel::paper();
+            model.num_arrays = shards;
+            let est = model.predict_plan(&plan).unwrap();
+            let t = common::bench(
+                &format!("coord sp-mttkrp d={density} shards={shards:>2}"),
+                1,
+                3,
+                || {
+                    let mut pool =
+                        Coordinator::spawn(CoordinatorConfig::new(shards), |_| {
+                            Ok(CpuTileExecutor::paper())
+                        })
+                        .unwrap();
+                    pool.sparse_mttkrp(&x, &factors2, 0).unwrap();
+                },
+            );
+            // Device-model sustained throughput from one fresh run's
+            // metrics, against the predict_plan envelope.
+            let mut pool = Coordinator::spawn(CoordinatorConfig::new(shards), |_| {
+                Ok(CpuTileExecutor::paper())
+            })
+            .unwrap();
+            pool.sparse_mttkrp(&x, &factors2, 0).unwrap();
+            let measured_util = pool.metrics().utilization();
+            let in_env = (measured_util - est.utilization).abs() <= 1e-9;
+            println!(
+                "  -> sustained {} measured vs {} predicted (U {measured_util:.4} \
+                 vs {:.4}: {}), useful {:.3e} MAC/s",
+                format_ops(model.peak_ops() * measured_util),
+                format_ops(est.sustained_raw_ops),
+                est.utilization,
+                if in_env { "OK" } else { "MISS" },
+                est.useful_macs as f64 / t,
+            );
+        }
+    }
 }

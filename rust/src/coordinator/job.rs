@@ -1,52 +1,44 @@
 //! Work items exchanged between the leader and the shard workers.
 //!
-//! The scheduling unit is an [`ImageBatch`]: every image in a batch shares
-//! one contraction (K) block, so a worker can quantize each lane batch of
-//! the streamed operand once and reuse it across the whole batch — the
-//! §V.B compute/write interleave amortization that makes reconfiguration
-//! writes cheap at scale (see `DESIGN.md` §9).
+//! The scheduling unit is a [`PlanBatch`]: a chunk of stored images from
+//! one [`crate::mttkrp::plan::TilePlan`] group, plus a shared handle on
+//! the group's streamed lane blocks.  Every image in a batch shares one
+//! stored-operand block (the group's shard key — a dense contraction
+//! block or a sparse factor J-block), so a worker streams one quantized
+//! operand slice against the whole batch: the §V.B compute/write
+//! interleave amortization that makes reconfiguration writes cheap at
+//! scale (see `DESIGN.md` §10).
 
-use crate::tensor::Matrix;
+use crate::mttkrp::plan::{LaneBlock, PlanImage};
 use std::sync::Arc;
 
-/// One quantized KRP image — the (rank-block, K-block) tile a worker loads
-/// into its array before streaming the shared operand against it.
-pub struct ImageSpec {
-    /// Rank block index.
-    pub rb: usize,
-    /// Quantized KRP image, row-major `[rows][words_per_row]`, padded.
-    pub image: Vec<i8>,
-    /// Per-word-column dequantization scales of the image (`r_cnt` long).
-    pub w_scales: Vec<f32>,
-    /// First rank column and count covered by this image.
-    pub r0: usize,
-    pub r_cnt: usize,
-}
-
-/// A batch of images sharing one contraction block, addressed to one shard.
+/// A chunk of one plan group's images, addressed to one shard.
 ///
-/// Sharding is by contraction block (`shard = kb % workers`), so the
-/// quantized lane batches of the streamed operand — which depend only on
-/// `(kb, lane batch)` — are computed once per batch and reused by every
-/// image in it.
-pub struct ImageBatch {
+/// Sharding is by stored-image key (`shard = key % workers`), so the lane
+/// blocks of a group — shared by every image in it — are streamed by one
+/// worker, and sparse slice reuse amortizes reconfiguration exactly like
+/// dense contraction blocks.
+pub struct PlanBatch {
     /// Request id (monotonic per coordinator).
     pub req_id: u64,
     /// Home shard (worker) this batch was submitted to.  Work stealing may
     /// execute it elsewhere.
     pub shard: usize,
-    /// K (contraction) block index shared by every image in the batch.
-    pub kb: usize,
-    /// First contraction row and count covered by this batch.
-    pub k0: usize,
-    pub k_cnt: usize,
-    /// The images to execute against this contraction block.
-    pub images: Vec<ImageSpec>,
-    /// The shared unfolded operand `X_(mode)` (`[I, K]`).
-    pub unf: Arc<Matrix>,
+    /// Stored-image key of the plan group this batch was chunked from.
+    pub key: usize,
+    /// Plan-order index of the first image in this chunk (the leader
+    /// reduces partials in plan order, so results are deterministic).
+    pub img0: usize,
+    /// The stored images to execute against the shared streams.
+    pub images: Vec<PlanImage>,
+    /// The group's streamed lane blocks, shared by every chunk of the
+    /// group.
+    pub streams: Arc<Vec<LaneBlock>>,
+    /// Output rows of the plan (each partial is `out_rows * r_cnt`).
+    pub out_rows: usize,
 }
 
-impl ImageBatch {
+impl PlanBatch {
     /// Number of images in the batch.
     pub fn len(&self) -> usize {
         self.images.len()
@@ -59,71 +51,78 @@ impl ImageBatch {
 }
 
 /// A worker's answer for one image: the dequantized partial output block.
-pub struct ImagePartial {
-    /// Rank block index.
-    pub rb: usize,
-    /// K block index (the leader reduces partials in (rb, kb) order so the
-    /// f32 result is deterministic).
-    pub kb: usize,
-    /// `[I][r_cnt]` row-major partial (sum over this image's K block).
-    pub partial: Vec<f32>,
+pub struct PlanPartial {
+    /// Plan-order image index (the leader's reduction slot).
+    pub img_idx: usize,
+    /// First rank column this image covers.
     pub r0: usize,
+    /// Rank columns this image covers.
     pub r_cnt: usize,
+    /// `[out_rows][r_cnt]` row-major partial (sum over the image's stored
+    /// block).
+    pub partial: Vec<f32>,
 }
 
 /// All partials of one executed batch, sent back to the leader at once.
 /// Stale-result filtering happens per batch (`req_id`); which worker ran
 /// the batch is recorded in the per-shard metrics, not here.
 pub struct BatchResult {
+    /// Request the batch belonged to.
     pub req_id: u64,
     /// One partial per image, in batch order.
-    pub partials: Vec<ImagePartial>,
+    pub partials: Vec<PlanPartial>,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::fixed::encode_offset;
 
     #[test]
-    fn batch_carries_consistent_block_metadata() {
-        let unf = Arc::new(Matrix::zeros(4, 512));
-        let images: Vec<ImageSpec> = (0..3)
-            .map(|rb| ImageSpec {
-                rb,
+    fn batch_carries_consistent_plan_metadata() {
+        let streams = Arc::new(vec![LaneBlock {
+            codes: vec![encode_offset(0); 2 * 256],
+            x_scales: vec![1.0; 2],
+            targets: vec![0, 3],
+            scale_vec: None,
+            useful_rows: 4,
+        }]);
+        let images: Vec<PlanImage> = (0..3)
+            .map(|rb| PlanImage {
                 image: vec![0; 256 * 32],
                 w_scales: vec![1.0; 32],
                 r0: rb * 32,
                 r_cnt: 32,
             })
             .collect();
-        let b = ImageBatch {
+        let b = PlanBatch {
             req_id: 1,
             shard: 1,
-            kb: 1,
-            k0: 256,
-            k_cnt: 256,
+            key: 5,
+            img0: 6,
             images,
-            unf,
+            streams: Arc::clone(&streams),
+            out_rows: 4,
         };
         assert_eq!(b.len(), 3);
         assert!(!b.is_empty());
-        assert_eq!(b.kb * 256, b.k0);
-        for s in &b.images {
-            assert_eq!(s.rb * 32, s.r0);
-            assert_eq!(s.image.len(), 256 * 32);
+        assert_eq!(b.streams[0].lanes(), 2);
+        for (k, img) in b.images.iter().enumerate() {
+            assert_eq!(img.r0, k * 32);
+            assert_eq!(img.image.len(), 256 * 32);
         }
     }
 
     #[test]
     fn empty_batch_reports_empty() {
-        let b = ImageBatch {
+        let b = PlanBatch {
             req_id: 0,
             shard: 0,
-            kb: 0,
-            k0: 0,
-            k_cnt: 0,
+            key: 0,
+            img0: 0,
             images: Vec::new(),
-            unf: Arc::new(Matrix::zeros(1, 1)),
+            streams: Arc::new(Vec::new()),
+            out_rows: 1,
         };
         assert!(b.is_empty());
         assert_eq!(b.len(), 0);

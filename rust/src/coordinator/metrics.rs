@@ -1,5 +1,11 @@
 //! Lock-free coordinator metrics (atomics; shared by leader and workers),
 //! aggregated globally and per shard.
+//!
+//! Per-shard counters record **reconfiguration write cycles** separately
+//! from **streamed-lane compute cycles** (plus useful/raw MACs), so the
+//! measured rows are directly comparable to
+//! `PerfModel::predict_plan`'s predicted split — the predicted-vs-measured
+//! cycle accounting is a tested invariant, not two disconnected paths.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -12,25 +18,52 @@ pub struct ShardMetrics {
     pub batches: AtomicU64,
     /// Array images processed by this worker.
     pub images: AtomicU64,
-    /// Compute cycles on this worker's array.
-    pub compute_cycles: AtomicU64,
-    /// Write (reconfiguration) cycles on this worker's array.
-    pub write_cycles: AtomicU64,
+    /// Streamed-lane compute cycles on this worker's array.
+    pub streamed_cycles: AtomicU64,
+    /// Reconfiguration (image write) cycles on this worker's array,
+    /// recorded separately from the streamed-lane cycles.
+    pub reconfig_write_cycles: AtomicU64,
+    /// Useful MACs performed by this worker (excludes padding).
+    pub useful_macs: AtomicU64,
+    /// Raw MACs performed by this worker (incl. padding).
+    pub raw_macs: AtomicU64,
     /// Batches this worker stole from another shard's queue.
     pub steals: AtomicU64,
 }
 
 impl ShardMetrics {
-    /// Utilisation of this worker's array so far.
+    /// Utilisation of this worker's array so far:
+    /// streamed / (streamed + reconfiguration).
     pub fn utilization(&self) -> f64 {
-        let c = self.compute_cycles.load(Ordering::Relaxed);
-        let w = self.write_cycles.load(Ordering::Relaxed);
+        let c = self.streamed_cycles.load(Ordering::Relaxed);
+        let w = self.reconfig_write_cycles.load(Ordering::Relaxed);
         if c + w == 0 {
             0.0
         } else {
             c as f64 / (c + w) as f64
         }
     }
+}
+
+/// A point-in-time copy of one shard's counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSnapshot {
+    /// Shard (worker) index.
+    pub shard: usize,
+    /// Batches executed.
+    pub batches: u64,
+    /// Images processed.
+    pub images: u64,
+    /// Streamed-lane compute cycles.
+    pub streamed_cycles: u64,
+    /// Reconfiguration write cycles.
+    pub reconfig_write_cycles: u64,
+    /// Useful MACs.
+    pub useful_macs: u64,
+    /// Raw MACs.
+    pub raw_macs: u64,
+    /// Batches stolen from other shards.
+    pub steals: u64,
 }
 
 /// Aggregate counters across the coordinator's lifetime.
@@ -67,6 +100,7 @@ impl Metrics {
         }
     }
 
+    /// Relaxed add on any counter field.
     #[inline]
     pub fn add(&self, field: &AtomicU64, v: u64) {
         field.fetch_add(v, Ordering::Relaxed);
@@ -108,21 +142,22 @@ impl Metrics {
         ]
     }
 
-    /// Per-shard snapshot rows: `(shard, batches, images, compute, write,
-    /// steals)`.
-    pub fn shard_snapshot(&self) -> Vec<(usize, u64, u64, u64, u64, u64)> {
+    /// Per-shard snapshot rows, one [`ShardSnapshot`] per worker.
+    pub fn shard_snapshot(&self) -> Vec<ShardSnapshot> {
         self.shards
             .iter()
             .enumerate()
-            .map(|(i, s)| {
-                (
-                    i,
-                    s.batches.load(Ordering::Relaxed),
-                    s.images.load(Ordering::Relaxed),
-                    s.compute_cycles.load(Ordering::Relaxed),
-                    s.write_cycles.load(Ordering::Relaxed),
-                    s.steals.load(Ordering::Relaxed),
-                )
+            .map(|(i, s)| ShardSnapshot {
+                shard: i,
+                batches: s.batches.load(Ordering::Relaxed),
+                images: s.images.load(Ordering::Relaxed),
+                streamed_cycles: s.streamed_cycles.load(Ordering::Relaxed),
+                reconfig_write_cycles: s
+                    .reconfig_write_cycles
+                    .load(Ordering::Relaxed),
+                useful_macs: s.useful_macs.load(Ordering::Relaxed),
+                raw_macs: s.raw_macs.load(Ordering::Relaxed),
+                steals: s.steals.load(Ordering::Relaxed),
             })
             .collect()
     }
@@ -154,17 +189,25 @@ mod tests {
     }
 
     #[test]
-    fn shard_rows_track_independently() {
+    fn shard_rows_track_independently_and_split_cycles() {
         let m = Metrics::with_shards(3);
         m.add(&m.shard(0).images, 5);
         m.add(&m.shard(2).steals, 1);
-        m.add(&m.shard(2).compute_cycles, 9);
-        m.add(&m.shard(2).write_cycles, 1);
+        m.add(&m.shard(2).streamed_cycles, 9);
+        m.add(&m.shard(2).reconfig_write_cycles, 1);
+        m.add(&m.shard(2).useful_macs, 12);
+        m.add(&m.shard(2).raw_macs, 24);
         let rows = m.shard_snapshot();
         assert_eq!(rows.len(), 3);
-        assert_eq!(rows[0].2, 5); // shard 0 images
-        assert_eq!(rows[1], (1, 0, 0, 0, 0, 0));
-        assert_eq!(rows[2].5, 1); // shard 2 steals
+        assert_eq!(rows[0].images, 5);
+        assert_eq!(rows[1].batches, 0);
+        assert_eq!(rows[1].streamed_cycles, 0);
+        // reconfiguration writes stay separate from streamed cycles
+        assert_eq!(rows[2].streamed_cycles, 9);
+        assert_eq!(rows[2].reconfig_write_cycles, 1);
+        assert_eq!(rows[2].useful_macs, 12);
+        assert_eq!(rows[2].raw_macs, 24);
+        assert_eq!(rows[2].steals, 1);
         assert!((m.shard(2).utilization() - 0.9).abs() < 1e-12);
     }
 

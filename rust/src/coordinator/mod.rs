@@ -4,31 +4,39 @@
 //! Architecture (std threads + shared shard queues; no tokio offline):
 //!
 //! ```text
-//!            ┌────────────┐  per-shard bounded queues  ┌──────────┐
-//!  request ─▶│   leader   │── batch(kb, rb0..rbN) ────▶│ shard 0  │─ array 0
-//!            │ (tiling +  │── shard = kb % N      ────▶│ shard 1  │─ array 1
-//!            │  batching +│          ⋯      steal ◀───▶│    ⋯     │   ⋯
-//!            │  reduce)   │◀── BatchResult ────────────│ shard N-1│─ array N-1
-//!            └────────────┘                            └──────────┘
+//!             ┌──────────────┐  per-shard bounded queues  ┌──────────┐
+//!  dense ──▶  │    leader    │── PlanBatch(key, imgs) ───▶│ shard 0  │─ array 0
+//!  COO   ──▶  │ (planner:    │── shard = key % N     ────▶│ shard 1  │─ array 1
+//!             │  TilePlan +  │          ⋯      steal ◀───▶│    ⋯     │   ⋯
+//!             │  chunk +     │◀── BatchResult ────────────│ shard N-1│─ array N-1
+//!             │  reduce)     │
+//!             └──────────────┘
 //! ```
 //!
-//! * the **leader** unfolds/tiles the MTTKRP and submits
-//!   [`job::ImageBatch`]es — groups of KRP images sharing one contraction
-//!   (K) block — into *bounded* per-shard queues (backpressure: tiling
-//!   stalls when workers are busy).  Sharding is by contraction block
-//!   (`kb % workers`), so every image in a batch streams the *same* slice
-//!   of the unfolded operand;
+//! * the **leader** lowers any workload — a dense unfolded pair or a COO
+//!   tensor mode — into a [`crate::mttkrp::plan::TilePlan`] and submits
+//!   [`job::PlanBatch`]es (chunks of one plan group's stored images plus a
+//!   shared handle on the group's streamed lane blocks) into *bounded*
+//!   per-shard queues (backpressure: submission stalls when workers are
+//!   busy).  Sharding is by stored-image key (`key % workers`) — a dense
+//!   contraction block or a sparse factor J-block — so every image in a
+//!   batch streams the *same* quantized operand slice and sparse slice
+//!   reuse amortizes reconfiguration exactly like dense blocks;
 //! * each **shard worker** owns one [`crate::mttkrp::TileExecutor`] (one
-//!   array macro).  Per batch it quantizes each lane batch of the shared
-//!   operand once and reuses it across every image — the §V.B
-//!   compute/write interleave that amortizes reconfiguration writes.  An
-//!   idle worker **steals** batches from the longest other queue;
-//! * the leader **reduces** partials in deterministic `(rb, kb)` order, so
-//!   the distributed result is bit-identical to the single-array pipeline.
+//!   array macro) and executes batches through the same
+//!   [`crate::mttkrp::plan::run_image_into`] contract as the single-array
+//!   executor — the §V.B compute/write interleave that amortizes
+//!   reconfiguration writes.  An idle worker **steals** batches from the
+//!   longest other queue;
+//! * the leader **reduces** partials in deterministic plan order, so the
+//!   distributed result is bit-identical to the single-array pipelines —
+//!   dense *and* sparse.
 //!
 //! The pool is persistent: many requests can be submitted over its
 //! lifetime (CP-ALS submits one per mode per sweep), workers stay warm,
-//! and metrics aggregate across requests — globally and per shard.
+//! and metrics aggregate across requests — globally and per shard, with
+//! reconfiguration writes recorded separately from streamed-lane cycles so
+//! the rows are directly comparable to `PerfModel::predict_plan`.
 //! [`pool::CoordinatorConfig::from_model`] derives the pool shape
 //! (workers / queue depth / batch size) from the
 //! [`crate::perfmodel::PerfModel`] geometry instead of hardcoded defaults.
@@ -37,6 +45,8 @@ pub mod job;
 pub mod metrics;
 pub mod pool;
 
-pub use job::{BatchResult, ImageBatch, ImagePartial, ImageSpec};
-pub use metrics::{Metrics, ShardMetrics};
-pub use pool::{CoordinatedBackend, Coordinator, CoordinatorConfig};
+pub use job::{BatchResult, PlanBatch, PlanPartial};
+pub use metrics::{Metrics, ShardMetrics, ShardSnapshot};
+pub use pool::{
+    CoordinatedBackend, CoordinatedSparseBackend, Coordinator, CoordinatorConfig,
+};

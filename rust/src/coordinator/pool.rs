@@ -3,22 +3,38 @@
 //! See the module docs of [`crate::coordinator`] for the architecture.
 //! Scheduling invariants:
 //!
-//! * batches are keyed by contraction block and land on shard
-//!   `kb % workers`; a worker prefers its own queue (front) and steals
-//!   from the longest other queue (back) when it drains;
+//! * work units are plan-derived: the leader lowers any workload into a
+//!   [`TilePlan`] and chunks each plan group into [`PlanBatch`]es; batches
+//!   are keyed by the group's stored-image key and land on shard
+//!   `key % workers` — dense contraction blocks and sparse factor J-blocks
+//!   shard identically, so sparse slice reuse amortizes reconfiguration
+//!   exactly like dense blocks;
+//! * a worker prefers its own queue (front) and steals from the longest
+//!   other queue (back) when it drains;
 //! * the queue is bounded by `queue_depth` *batches* across all shards —
-//!   the leader stalls (and counts a backpressure event) when it is full;
-//! * partials are buffered and reduced in `(rb, kb)` order, so the f32
-//!   result is deterministic and bit-identical to the single-array
-//!   [`crate::mttkrp::PsramPipeline`], independent of worker count,
-//!   batching, and stealing.
+//!   the leader stalls (and counts a backpressure event) when it is full.
+//!   Note the bound is on *outstanding submissions*, not plan memory: the
+//!   whole `TilePlan` (quantized images + lane codes, roughly the operand
+//!   size in u8) is materialized before submission starts — the price of
+//!   an explicit IR, paid back by quantizing each operand slice exactly
+//!   once instead of once per worker batch;
+//! * partials are buffered and reduced in plan order through the same
+//!   [`run_image_into`]/[`fold_partial`] contract as
+//!   [`crate::mttkrp::plan::execute_plan`], so the f32 result is
+//!   deterministic and bit-identical to the single-array pipelines,
+//!   independent of worker count, batching, and stealing.
 
-use super::job::{BatchResult, ImageBatch, ImagePartial, ImageSpec};
+use super::job::{BatchResult, PlanBatch, PlanPartial};
 use super::metrics::Metrics;
 use crate::cpd::backend::MttkrpBackend;
-use crate::mttkrp::pipeline::{quantize_krp_image, quantize_lane_batch, TileExecutor};
+use crate::mttkrp::pipeline::TileExecutor;
+use crate::mttkrp::plan::{
+    fold_partial, run_image_into, DensePlanner, PlanGroup, SparseSlicePlanner,
+    TilePlan,
+};
+use crate::mttkrp::MttkrpStats;
 use crate::perfmodel::{PerfModel, Workload};
-use crate::tensor::{krp_all_but, DenseTensor, Matrix};
+use crate::tensor::{krp_all_but, CooTensor, DenseTensor, Matrix};
 use crate::util::error::{Error, Result};
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -33,9 +49,9 @@ pub struct CoordinatorConfig {
     /// Bounded queue depth: maximum outstanding batches across all shards
     /// (the backpressure window).
     pub queue_depth: usize,
-    /// Images per batch.  Every image in a batch shares one contraction
-    /// block, so the streamed operand is quantized once per batch and the
-    /// per-image reconfiguration writes amortize across it.
+    /// Images per batch.  Every image in a batch shares one stored-operand
+    /// block, so the group's streamed lane blocks are reused across it and
+    /// the per-image reconfiguration writes amortize.
     pub batch_size: usize,
     /// Allow idle workers to steal batches from other shards' queues.
     pub steal: bool,
@@ -62,8 +78,8 @@ impl CoordinatorConfig {
     ///
     /// * `workers` = the model's parallel array count;
     /// * `batch_size` = the workload's rank-block count, so one batch
-    ///   covers a full rank sweep of its contraction block (maximal
-    ///   operand-quantization reuse), clamped to keep batches bounded;
+    ///   covers a full rank sweep of its stored block (maximal
+    ///   operand-stream reuse), clamped to keep batches bounded;
     /// * `queue_depth` = two batches in flight per worker (double
     ///   buffering: one executing, one queued).
     pub fn from_model(model: &PerfModel, workload: &Workload) -> Self {
@@ -88,7 +104,7 @@ enum WorkerMsg {
 /// The per-shard queues behind one mutex.  Lock granularity is fine: a
 /// batch costs milliseconds of compute against microseconds of queueing.
 struct QueueState {
-    queues: Vec<VecDeque<ImageBatch>>,
+    queues: Vec<VecDeque<PlanBatch>>,
     /// Batches currently queued (not yet picked up) across all shards.
     queued: usize,
     shutdown: bool,
@@ -103,7 +119,7 @@ struct Shared {
 /// Pop the next batch for worker `me`: own queue first (front), then — if
 /// stealing is on — the tail of the longest other queue.  Blocks until work
 /// arrives; returns `None` on shutdown (after draining).
-fn next_batch(shared: &Shared, me: usize, steal: bool) -> Option<(ImageBatch, bool)> {
+fn next_batch(shared: &Shared, me: usize, steal: bool) -> Option<(PlanBatch, bool)> {
     let mut st = shared.state.lock().expect("coordinator state poisoned");
     loop {
         if let Some(b) = st.queues[me].pop_front() {
@@ -137,6 +153,7 @@ pub struct Coordinator {
     next_req: u64,
     rows: usize,
     wpr: usize,
+    lanes: usize,
 }
 
 impl Coordinator {
@@ -171,7 +188,7 @@ impl Coordinator {
         }
         let rows = execs[0].rows();
         let wpr = execs[0].words_per_row();
-        let lanes = execs[0].max_lanes(); // geometry check only
+        let lanes = execs[0].max_lanes();
         if execs
             .iter()
             .any(|e| e.rows() != rows || e.words_per_row() != wpr || e.max_lanes() != lanes)
@@ -233,6 +250,7 @@ impl Coordinator {
             next_req: 0,
             rows,
             wpr,
+            lanes,
         })
     }
 
@@ -253,7 +271,7 @@ impl Coordinator {
 
     /// Try to enqueue a batch on its home shard without blocking; returns
     /// the batch back when the bounded queue is full.
-    fn try_submit(&self, batch: ImageBatch) -> std::result::Result<(), ImageBatch> {
+    fn try_submit(&self, batch: PlanBatch) -> std::result::Result<(), PlanBatch> {
         let mut st = self.shared.state.lock().expect("coordinator state poisoned");
         if st.queued >= self.cfg.queue_depth {
             return Err(batch);
@@ -268,73 +286,78 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Distributed quantized MTTKRP: `unf [I, K] @ krp [K, R]`.
-    pub fn mttkrp_unfolded(&mut self, unf: Matrix, krp: &Matrix) -> Result<Matrix> {
-        if unf.cols() != krp.rows() {
-            return Err(Error::shape(format!(
-                "unfolded {}x{} against KRP {}x{}",
-                unf.rows(),
-                unf.cols(),
-                krp.rows(),
-                krp.cols()
+    /// Execute a [`TilePlan`] across the pool: chunk its groups into
+    /// shard-addressed batches, stream them under backpressure, and reduce
+    /// the partials in plan order.
+    pub fn execute_plan(&mut self, plan: TilePlan) -> Result<Matrix> {
+        plan.validate()?;
+        if plan.rows != self.rows || plan.wpr != self.wpr {
+            return Err(Error::Coordinator(format!(
+                "plan tiled for {}x{} words but pool executors are {}x{}",
+                plan.rows, plan.wpr, self.rows, self.wpr
             )));
         }
-        let (i_dim, k_dim, r_dim) = (unf.rows(), unf.cols(), krp.cols());
+        if plan.lanes > self.lanes {
+            return Err(Error::Coordinator(format!(
+                "plan budgets {} lanes but pool executors support {}",
+                plan.lanes, self.lanes
+            )));
+        }
         let req_id = self.next_req;
         self.next_req += 1;
-        let unf = Arc::new(unf);
+        let (out_rows, out_cols) = (plan.out_rows, plan.out_cols);
+        let total_images = plan.total_images();
 
-        let k_blocks = k_dim.div_ceil(self.rows);
-        let r_blocks = r_dim.div_ceil(self.wpr);
-        let total_images = k_blocks * r_blocks;
-        // Batches per contraction block: rank blocks in chunks of
-        // `batch_size`.  Batch b covers kb = b / chunks, chunk = b % chunks.
-        let chunks_per_kb = r_blocks.div_ceil(self.cfg.batch_size).max(1);
-        let total_batches = k_blocks * chunks_per_kb;
-        let images_in_batch = |b: usize| -> usize {
-            let chunk = b % chunks_per_kb;
-            let rb0 = chunk * self.cfg.batch_size;
-            self.cfg.batch_size.min(r_blocks.saturating_sub(rb0))
-        };
+        // Chunk each group's images into batches homed on the group's
+        // shard (shard = stored-image key % workers); the group's streams
+        // are shared by every chunk via Arc.
+        let mut batches: VecDeque<PlanBatch> = VecDeque::new();
+        let mut img_base = 0usize;
+        for group in plan.groups {
+            let PlanGroup { key, images, streams } = group;
+            let n = images.len();
+            let streams = Arc::new(streams);
+            let mut images = images.into_iter();
+            let mut off = 0usize;
+            while off < n {
+                let take = self.cfg.batch_size.min(n - off);
+                batches.push_back(PlanBatch {
+                    req_id,
+                    shard: key % self.cfg.workers,
+                    key,
+                    img0: img_base + off,
+                    images: images.by_ref().take(take).collect(),
+                    streams: Arc::clone(&streams),
+                    out_rows,
+                });
+                off += take;
+            }
+            img_base += n;
+        }
 
-        // Leader: produce batches while consuming results (bounded queue).
-        // Partials are buffered and reduced in (rb, kb) order so the f32
+        // Leader: submit batches while consuming results (bounded queue).
+        // Partials are buffered and reduced in plan order so the f32
         // result is deterministic and bit-identical to the single-array
-        // pipeline, independent of worker count and scheduling.
-        let mut out = Matrix::zeros(i_dim, r_dim);
-        let mut buffered: Vec<Option<ImagePartial>> = Vec::new();
+        // execution, independent of worker count and scheduling.
+        let mut out = Matrix::zeros(out_rows, out_cols);
+        let mut buffered: Vec<Option<PlanPartial>> = Vec::new();
         buffered.resize_with(total_images, || None);
         let mut expected_images = total_images;
         let mut received_images = 0usize;
-        let mut produced = 0usize;
-        let mut pending: Option<ImageBatch> = None;
+        let mut pending: Option<PlanBatch> = None;
         let mut error: Option<Error> = None;
 
         while received_images < expected_images {
-            // Produce the next batch if any, without deadlocking on a full
+            // Submit the next batch if any, without deadlocking on a full
             // queue: when full, fall through and drain one result first.
-            if produced < total_batches && error.is_none() {
-                let batch = match pending.take() {
-                    Some(b) => b,
-                    None => make_batch(
-                        req_id,
-                        produced,
-                        chunks_per_kb,
-                        &unf,
-                        krp,
-                        self.rows,
-                        self.wpr,
-                        &self.cfg,
-                    ),
-                };
-                match self.try_submit(batch) {
-                    Ok(()) => {
-                        produced += 1;
-                        continue;
-                    }
-                    Err(b) => {
-                        self.metrics.add(&self.metrics.backpressure_stalls, 1);
-                        pending = Some(b);
+            if error.is_none() {
+                if let Some(batch) = pending.take().or_else(|| batches.pop_front()) {
+                    match self.try_submit(batch) {
+                        Ok(()) => continue,
+                        Err(b) => {
+                            self.metrics.add(&self.metrics.backpressure_stalls, 1);
+                            pending = Some(b);
+                        }
                     }
                 }
             }
@@ -346,8 +369,7 @@ impl Coordinator {
                         continue; // stale result from an aborted request
                     }
                     for p in res.partials {
-                        let slot = p.rb * k_blocks + p.kb;
-                        buffered[slot] = Some(p);
+                        buffered[p.img_idx] = Some(p);
                         received_images += 1;
                     }
                 }
@@ -366,13 +388,12 @@ impl Coordinator {
 
             // On failure: stop producing, but keep draining what was
             // already queued (their results are filtered next request
-            // otherwise).  Never-produced batches are written off.
-            if error.is_some() && produced < total_batches {
-                let unproduced: usize =
-                    (produced..total_batches).map(images_in_batch).sum();
+            // otherwise).  Never-submitted batches are written off.
+            if error.is_some() {
+                let unproduced: usize = pending.take().map(|b| b.len()).unwrap_or(0)
+                    + batches.iter().map(|b| b.len()).sum::<usize>();
+                batches.clear();
                 expected_images -= unproduced;
-                produced = total_batches;
-                pending = None;
             }
         }
 
@@ -381,20 +402,22 @@ impl Coordinator {
             return Err(e);
         }
 
-        // Deterministic reduction: sum partials in (rb, kb) order — the
-        // same order the single-array pipeline accumulates in.
+        // Deterministic reduction: fold partials in plan order — the same
+        // order the single-array `execute_plan` folds in.
         for slot in buffered.into_iter() {
             let p = slot.ok_or_else(|| {
                 Error::Coordinator("missing partial in reduction".to_string())
             })?;
-            for i in 0..i_dim {
-                let orow = out.row_mut(i);
-                for r in 0..p.r_cnt {
-                    orow[p.r0 + r] += p.partial[i * p.r_cnt + r];
-                }
-            }
+            fold_partial(&mut out, &p.partial, p.r0, p.r_cnt);
         }
         Ok(out)
+    }
+
+    /// Distributed quantized MTTKRP: `unf [I, K] @ krp [K, R]`.
+    pub fn mttkrp_unfolded(&mut self, unf: &Matrix, krp: &Matrix) -> Result<Matrix> {
+        let planner = DensePlanner::new(self.rows, self.wpr, self.lanes);
+        let plan = planner.plan_unfolded(unf, krp)?;
+        self.execute_plan(plan)
     }
 
     /// Distributed MTTKRP of a dense tensor along `mode`.
@@ -406,7 +429,21 @@ impl Coordinator {
     ) -> Result<Matrix> {
         let unf = x.unfold(mode)?;
         let krp = krp_all_but(factors, mode)?;
-        self.mttkrp_unfolded(unf, &krp)
+        self.mttkrp_unfolded(&unf, &krp)
+    }
+
+    /// Distributed sparse (COO) MTTKRP along `mode`: the slice-wise plan
+    /// shards by stored factor block, so slice reuse amortizes
+    /// reconfiguration exactly like dense contraction blocks.
+    pub fn sparse_mttkrp(
+        &mut self,
+        x: &CooTensor,
+        factors: &[Matrix],
+        mode: usize,
+    ) -> Result<Matrix> {
+        let planner = SparseSlicePlanner::new(self.rows, self.wpr, self.lanes);
+        let plan = planner.plan(x, factors, mode)?;
+        self.execute_plan(plan)
     }
 
     /// Gracefully stop the pool (also done on Drop).
@@ -428,128 +465,75 @@ impl Drop for Coordinator {
     }
 }
 
-/// Build batch number `b` of a request: quantize the KRP images of one
-/// (contraction block, rank-block chunk) via the same
-/// [`quantize_krp_image`] the single-array pipeline uses.
-#[allow(clippy::too_many_arguments)]
-fn make_batch(
-    req_id: u64,
-    b: usize,
-    chunks_per_kb: usize,
-    unf: &Arc<Matrix>,
-    krp: &Matrix,
-    rows: usize,
-    wpr: usize,
-    cfg: &CoordinatorConfig,
-) -> ImageBatch {
-    let r_dim = krp.cols();
-    let k_dim = krp.rows();
-    let r_blocks = r_dim.div_ceil(wpr);
-
-    let kb = b / chunks_per_kb;
-    let chunk = b % chunks_per_kb;
-    let k0 = kb * rows;
-    let k_cnt = rows.min(k_dim - k0);
-
-    let rb0 = chunk * cfg.batch_size;
-    let rb_end = r_blocks.min(rb0 + cfg.batch_size);
-    let images: Vec<ImageSpec> = (rb0..rb_end)
-        .map(|rb| {
-            let r0 = rb * wpr;
-            let r_cnt = wpr.min(r_dim - r0);
-            let (image, w_scales) =
-                quantize_krp_image(krp, k0, k_cnt, r0, r_cnt, rows, wpr);
-            ImageSpec { rb, image, w_scales, r0, r_cnt }
-        })
-        .collect();
-
-    ImageBatch {
-        req_id,
-        shard: kb % cfg.workers,
-        kb,
-        k0,
-        k_cnt,
-        images,
-        unf: Arc::clone(unf),
-    }
-}
-
-/// Worker body for one batch: quantize each lane batch of the shared
-/// operand once, stream it against every image, dequantize, return the
-/// partial blocks.
+/// Worker body for one batch: run every image of the batch through the
+/// shared [`run_image_into`] contract, then flush the realised cycle/MAC
+/// counters into the global and per-shard metrics (reconfiguration writes
+/// and streamed cycles recorded separately).
 fn run_batch<E: TileExecutor>(
     exec: &mut E,
-    batch: &ImageBatch,
+    batch: &PlanBatch,
     worker: usize,
     metrics: &Metrics,
 ) -> Result<BatchResult> {
     let rows = exec.rows();
     let wpr = exec.words_per_row();
-    let lanes_max = exec.max_lanes();
-    let i_dim = batch.unf.rows();
-    let i_batches = i_dim.div_ceil(lanes_max);
-    let shard_m = metrics.shard(worker);
-
-    // The quantized lane batches depend only on (kb, ib) — shared by every
-    // image in the batch.  This cache is what batching buys: without it,
-    // every image re-quantizes the whole streamed operand.
-    let mut u_cache: Vec<Option<(Vec<u8>, Vec<f32>)>> = vec![None; i_batches];
-
+    let mut stats = MttkrpStats::default();
     let mut partials = Vec::with_capacity(batch.len());
-    for spec in &batch.images {
-        exec.load_image(&spec.image)?;
-        metrics.add(&metrics.images, 1);
-        metrics.add(&metrics.write_cycles, rows as u64);
-        metrics.add(&shard_m.images, 1);
-        metrics.add(&shard_m.write_cycles, rows as u64);
-
-        let mut partial = vec![0f32; i_dim * spec.r_cnt];
-        for (ib, slot) in u_cache.iter_mut().enumerate() {
-            let i0 = ib * lanes_max;
-            let lane_cnt = lanes_max.min(i_dim - i0);
-            if slot.is_none() {
-                *slot = Some(quantize_lane_batch(
-                    &batch.unf, i0, lane_cnt, batch.k0, batch.k_cnt, rows,
-                ));
-            }
-            let (u, x_scales) = slot.as_ref().expect("just filled");
-
-            let tile = exec.compute(u, lane_cnt)?;
-            metrics.add(&metrics.compute_cycles, 1);
-            metrics.add(&shard_m.compute_cycles, 1);
-            metrics.add(&metrics.raw_macs, (rows * wpr * lane_cnt) as u64);
-            metrics.add(
-                &metrics.useful_macs,
-                (batch.k_cnt * spec.r_cnt * lane_cnt) as u64,
-            );
-
-            for m in 0..lane_cnt {
-                let prow =
-                    &mut partial[(i0 + m) * spec.r_cnt..(i0 + m + 1) * spec.r_cnt];
-                for r in 0..spec.r_cnt {
-                    prow[r] +=
-                        tile[m * wpr + r] as f32 * (x_scales[m] * spec.w_scales[r]);
-                }
+    let mut failed: Option<Error> = None;
+    for (k, img) in batch.images.iter().enumerate() {
+        let mut partial = vec![0f32; batch.out_rows * img.r_cnt];
+        match run_image_into(
+            exec,
+            img,
+            &batch.streams,
+            rows,
+            wpr,
+            batch.out_rows,
+            &mut partial,
+            &mut stats,
+        ) {
+            Ok(()) => partials.push(PlanPartial {
+                img_idx: batch.img0 + k,
+                r0: img.r0,
+                r_cnt: img.r_cnt,
+                partial,
+            }),
+            Err(e) => {
+                failed = Some(e);
+                break;
             }
         }
-        partials.push(ImagePartial {
-            rb: spec.rb,
-            kb: batch.kb,
-            partial,
-            r0: spec.r0,
-            r_cnt: spec.r_cnt,
-        });
+    }
+
+    // Charge what actually ran (even on failure), with reconfiguration
+    // writes split from streamed-lane cycles per shard.
+    let sm = metrics.shard(worker);
+    metrics.add(&metrics.images, stats.images);
+    metrics.add(&metrics.compute_cycles, stats.compute_cycles);
+    metrics.add(&metrics.write_cycles, stats.write_cycles);
+    metrics.add(&metrics.useful_macs, stats.useful_macs);
+    metrics.add(&metrics.raw_macs, stats.raw_macs);
+    metrics.add(&sm.images, stats.images);
+    metrics.add(&sm.streamed_cycles, stats.compute_cycles);
+    metrics.add(&sm.reconfig_write_cycles, stats.write_cycles);
+    metrics.add(&sm.useful_macs, stats.useful_macs);
+    metrics.add(&sm.raw_macs, stats.raw_macs);
+
+    if let Some(e) = failed {
+        return Err(e);
     }
     metrics.add(&metrics.batches, 1);
-    metrics.add(&shard_m.batches, 1);
-
+    metrics.add(&sm.batches, 1);
     Ok(BatchResult { req_id: batch.req_id, partials })
 }
 
-/// A [`MttkrpBackend`] running CP-ALS MTTKRPs through the coordinator —
-/// the default backend for multi-array CP-ALS (see `cpd::backend`).
+/// A [`MttkrpBackend`] running dense CP-ALS MTTKRPs through the
+/// coordinator — the default backend for multi-array CP-ALS (see
+/// `cpd::backend`).
 pub struct CoordinatedBackend<'a> {
+    /// The decomposition target.
     pub tensor: &'a DenseTensor,
+    /// The worker pool (persistent across ALS sweeps).
     pub pool: Coordinator,
 }
 
@@ -579,10 +563,46 @@ impl MttkrpBackend for CoordinatedBackend<'_> {
     }
 }
 
+/// A [`MttkrpBackend`] running *sparse* CP-ALS MTTKRPs through the
+/// coordinator: every spMTTKRP is lowered to a slice-wise [`TilePlan`] and
+/// sharded across the pool by stored factor block.
+pub struct CoordinatedSparseBackend<'a> {
+    /// The COO decomposition target.
+    pub tensor: &'a CooTensor,
+    /// The worker pool (persistent across ALS sweeps).
+    pub pool: Coordinator,
+}
+
+impl<'a> CoordinatedSparseBackend<'a> {
+    /// Wrap an existing pool.
+    pub fn new(tensor: &'a CooTensor, pool: Coordinator) -> Self {
+        CoordinatedSparseBackend { tensor, pool }
+    }
+}
+
+impl MttkrpBackend for CoordinatedSparseBackend<'_> {
+    fn mttkrp(&mut self, factors: &[Matrix], mode: usize) -> Result<Matrix> {
+        self.pool.sparse_mttkrp(self.tensor, factors, mode)
+    }
+
+    fn shape(&self) -> &[usize] {
+        self.tensor.shape()
+    }
+
+    fn norm_sq(&self) -> f64 {
+        self.tensor.values().iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "coordinator-sparse"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::mttkrp::pipeline::{CpuTileExecutor, PsramPipeline};
+    use crate::mttkrp::SparsePsramPipeline;
     use crate::util::prng::Prng;
 
     fn rand_problem(seed: u64, shape: &[usize], r: usize) -> (DenseTensor, Vec<Matrix>) {
@@ -621,6 +641,23 @@ mod tests {
                     "workers={workers} batch={batch_size}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn sparse_distributed_matches_single_pipeline_bit_exactly() {
+        // The slice-wise sparse plan must reduce deterministically too.
+        let mut rng = Prng::new(21);
+        let x = CooTensor::random(&[24, 520, 10], 800, &mut rng);
+        let factors: Vec<Matrix> =
+            [24, 520, 10].iter().map(|&d| Matrix::randn(d, 40, &mut rng)).collect();
+        let mut exec = CpuTileExecutor::paper();
+        let single =
+            SparsePsramPipeline::new(&mut exec).mttkrp(&x, &factors, 0).unwrap();
+        for workers in [1usize, 3] {
+            let mut pool = spawn_cpu_pool(workers);
+            let dist = pool.sparse_mttkrp(&x, &factors, 0).unwrap();
+            assert_eq!(single.data(), dist.data(), "workers={workers}");
         }
     }
 
@@ -702,11 +739,14 @@ mod tests {
         // shard 0.  While worker 0 sleeps in its first load, worker 1 (no
         // delay) must have stolen at least one batch from shard 0's tail.
         let rows = m.shard_snapshot();
-        assert!(rows[1].5 >= 1, "worker 1 stole nothing: {rows:?}");
-        assert_eq!(rows[1].1, rows[1].5, "worker 1 batches must all be steals");
-        let total: u64 = rows.iter().map(|r| r.1).sum();
+        assert!(rows[1].steals >= 1, "worker 1 stole nothing: {rows:?}");
+        assert_eq!(
+            rows[1].batches, rows[1].steals,
+            "worker 1 batches must all be steals"
+        );
+        let total: u64 = rows.iter().map(|r| r.batches).sum();
         assert_eq!(total, 4);
-        assert_eq!(m.steals.load(std::sync::atomic::Ordering::Relaxed), rows[1].5);
+        assert_eq!(m.steals.load(std::sync::atomic::Ordering::Relaxed), rows[1].steals);
     }
 
     #[test]
@@ -728,12 +768,16 @@ mod tests {
         pool.mttkrp(&x, &factors, 0).unwrap();
         let m = pool.metrics();
         let rows = m.shard_snapshot();
-        let images: u64 = rows.iter().map(|r| r.2).sum();
-        let compute: u64 = rows.iter().map(|r| r.3).sum();
-        let write: u64 = rows.iter().map(|r| r.4).sum();
+        let images: u64 = rows.iter().map(|r| r.images).sum();
+        let streamed: u64 = rows.iter().map(|r| r.streamed_cycles).sum();
+        let reconfig: u64 = rows.iter().map(|r| r.reconfig_write_cycles).sum();
+        let useful: u64 = rows.iter().map(|r| r.useful_macs).sum();
+        let raw: u64 = rows.iter().map(|r| r.raw_macs).sum();
         assert_eq!(images, m.snapshot()[1].1);
-        assert_eq!(compute, m.snapshot()[2].1);
-        assert_eq!(write, m.snapshot()[3].1);
+        assert_eq!(streamed, m.snapshot()[2].1);
+        assert_eq!(reconfig, m.snapshot()[3].1);
+        assert_eq!(useful, m.snapshot()[4].1);
+        assert_eq!(raw, m.snapshot()[5].1);
     }
 
     #[test]
@@ -853,6 +897,16 @@ mod tests {
         let mut pool = spawn_cpu_pool(1);
         let unf = Matrix::zeros(4, 100);
         let krp = Matrix::zeros(99, 4);
-        assert!(pool.mttkrp_unfolded(unf, &krp).is_err());
+        assert!(pool.mttkrp_unfolded(&unf, &krp).is_err());
+    }
+
+    #[test]
+    fn mismatched_plan_geometry_rejected() {
+        let mut pool = spawn_cpu_pool(1);
+        let mut rng = Prng::new(8);
+        let unf = Matrix::randn(10, 20, &mut rng);
+        let krp = Matrix::randn(20, 4, &mut rng);
+        let plan = DensePlanner::new(128, 16, 52).plan_unfolded(&unf, &krp).unwrap();
+        assert!(pool.execute_plan(plan).is_err());
     }
 }

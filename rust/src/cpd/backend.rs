@@ -1,12 +1,13 @@
 //! MTTKRP backends for CP-ALS.
 //!
-//! Single-array backends live here; the *default* backend for multi-array
-//! runs is the sharded batched coordinator
-//! ([`CoordinatedBackend`], re-exported from
-//! [`crate::coordinator::pool`]) — the CLI's `cpd` command uses it unless
-//! `--backend` says otherwise.
+//! Single-array backends live here; the *default* backends for multi-array
+//! runs are the sharded batched coordinator's
+//! ([`CoordinatedBackend`] for dense tensors,
+//! [`CoordinatedSparseBackend`] for COO tensors, both re-exported from
+//! [`crate::coordinator::pool`]) — the CLI's `cpd` command uses them
+//! unless `--backend` says otherwise.
 
-pub use crate::coordinator::pool::CoordinatedBackend;
+pub use crate::coordinator::pool::{CoordinatedBackend, CoordinatedSparseBackend};
 use crate::mttkrp::pipeline::{PsramPipeline, TileExecutor};
 use crate::mttkrp::{dense_mttkrp, sparse_mttkrp, MttkrpStats};
 use crate::tensor::{CooTensor, DenseTensor, Matrix};

@@ -9,6 +9,7 @@ pub mod fit;
 
 pub use als::{AlsConfig, AlsResult, CpAls};
 pub use backend::{
-    CoordinatedBackend, ExactBackend, MttkrpBackend, PsramBackend, SparseBackend,
+    CoordinatedBackend, CoordinatedSparseBackend, ExactBackend, MttkrpBackend,
+    PsramBackend, SparseBackend,
 };
 pub use fit::{brute_force_fit, cp_norm_sq};

@@ -15,17 +15,21 @@
 //! * [`tensor`] — dense and sparse (COO) tensors, matricization, Khatri-Rao,
 //!   and the small dense linear algebra CP-ALS needs.
 //! * [`mttkrp`] — the paper's computational primitives CP1/CP2/CP3, the
-//!   tiling/scheduling of MTTKRP onto pSRAM arrays, and CPU reference
-//!   implementations (dense + sparse) used as baselines.
+//!   tile-plan IR (`mttkrp::plan`: planners lower dense/sparse workloads
+//!   into backend-agnostic `TilePlan`s, one `execute_plan` drives any
+//!   executor), and CPU reference implementations (dense + sparse) used
+//!   as baselines.
 //! * [`cpd`] — CP-ALS tensor decomposition with a pluggable MTTKRP backend.
 //! * [`perfmodel`] — the paper's predictive performance model (Fig. 5, the
 //!   17 PetaOps headline) plus sweep drivers.
 //! * [`energy`] — energy accounting from the paper's device numbers
 //!   (1.04 pJ/bit switching, 16.7 aJ/bit static).
 //! * [`coordinator`] — the L3 runtime: a sharded, batched multi-array
-//!   scheduler (batches keyed by contraction block, work stealing between
-//!   shards, backpressure, global + per-shard metrics; std threads — this
-//!   image has no tokio).  Bit-identical to the single-array pipeline.
+//!   scheduler over plan-derived work units (batches keyed by
+//!   stored-image key, work stealing between shards, backpressure,
+//!   global + per-shard metrics; std threads — this image has no tokio).
+//!   Runs dense *and* sparse MTTKRP, bit-identical to the single-array
+//!   pipelines.
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) for the digital baseline and cross-checks
 //!   (behind the `xla` feature; a graceful stub otherwise).

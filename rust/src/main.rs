@@ -5,16 +5,17 @@
 //! psram-imc sweep     --axis wavelengths|frequency
 //! psram-imc cpd       [--shape I,J,K] [--rank R] [--iters N] [--backend exact|psram|coordinator|pjrt]
 //!                     [--workers N] [--batch N] [--noise SIGMA] [--seed S] [--sparse DENSITY]
-//!                     (default backend: coordinator — the sharded batched multi-array pool)
+//!                     (default backend: coordinator — the sharded batched multi-array pool;
+//!                      with --sparse the spMTTKRP slice plans run on the same pool)
 //! psram-imc energy    [--channels N] [--freq GHZ]
 //! psram-imc selftest            # analog vs CPU vs PJRT cross-check
 //! ```
 
 use psram_imc::cli::Args;
 use psram_imc::compute::ComputeEngine;
-use psram_imc::coordinator::pool::CoordinatedBackend;
+use psram_imc::coordinator::pool::{CoordinatedBackend, CoordinatedSparseBackend};
 use psram_imc::coordinator::{Coordinator, CoordinatorConfig};
-use psram_imc::cpd::{AlsConfig, CpAls, ExactBackend, PsramBackend};
+use psram_imc::cpd::{AlsConfig, CpAls, ExactBackend, PsramBackend, SparseBackend};
 use psram_imc::device::{DeviceParams, NoiseModel};
 use psram_imc::energy::EnergyModel;
 use psram_imc::mttkrp::pipeline::{AnalogTileExecutor, CpuTileExecutor};
@@ -172,7 +173,9 @@ fn cmd_cpd(args: &Args) -> Result<()> {
     println!("tensor {shape:?}, rank {rank}, backend {backend_kind}");
 
     // Sparse path: sparsify the synthetic tensor to the requested density
-    // and run spMTTKRP CP-ALS through the pSRAM sparse pipeline.
+    // and run spMTTKRP CP-ALS — by default through the sharded coordinator
+    // (slice plans sharded by stored factor block), or on a single array
+    // with --backend psram, or exactly with --backend exact.
     if sparse_density > 0.0 {
         let total: usize = shape.iter().product();
         let keep = (total as f64 * sparse_density) as usize;
@@ -183,16 +186,42 @@ fn cmd_cpd(args: &Args) -> Result<()> {
         let coo = CooTensor::from_dense(&x, thr);
         println!("sparsified to {} nnz (density {:.4})", coo.nnz(), coo.density());
         let t0 = std::time::Instant::now();
-        let mut backend = SparsePsramBackend::new(&coo, CpuTileExecutor::paper());
-        let res = als.run(&mut backend)?;
-        println!(
-            "sparse pipeline: images={} compute={} write={} U={:.4} raw-eff={:.4}",
-            backend.stats.images,
-            backend.stats.compute_cycles,
-            backend.stats.write_cycles,
-            backend.stats.utilization(),
-            backend.stats.padding_efficiency()
-        );
+        let res = match backend_kind {
+            "coordinator" => {
+                let workers = args.get_or("workers", 4usize)?;
+                let mut cfg = CoordinatorConfig::new(workers);
+                cfg.batch_size = args.get_or("batch", cfg.batch_size)?;
+                println!(
+                    "coordinator config: {} shard(s), queue depth {}, batch {} image(s), steal {}",
+                    cfg.workers, cfg.queue_depth, cfg.batch_size, cfg.steal
+                );
+                let pool = Coordinator::spawn(cfg, |_| Ok(CpuTileExecutor::paper()))?;
+                let mut backend = CoordinatedSparseBackend::new(&coo, pool);
+                let r = als.run(&mut backend)?;
+                print_pool_metrics(&backend.pool);
+                r
+            }
+            "psram" => {
+                let mut backend =
+                    SparsePsramBackend::new(&coo, CpuTileExecutor::paper());
+                let r = als.run(&mut backend)?;
+                println!(
+                    "sparse pipeline: images={} compute={} write={} U={:.4} raw-eff={:.4}",
+                    backend.stats.images,
+                    backend.stats.compute_cycles,
+                    backend.stats.write_cycles,
+                    backend.stats.utilization(),
+                    backend.stats.padding_efficiency()
+                );
+                r
+            }
+            "exact" => als.run(&mut SparseBackend { tensor: &coo })?,
+            other => {
+                return Err(psram_imc::Error::config(format!(
+                    "unknown sparse backend {other:?} (use coordinator, psram or exact)"
+                )))
+            }
+        };
         println!(
             "final fit {:.6} after {} sweeps in {:.2?}",
             res.final_fit(),
@@ -263,14 +292,7 @@ fn cmd_cpd(args: &Args) -> Result<()> {
             };
             let mut backend = CoordinatedBackend { tensor: &x, pool };
             let r = als.run(&mut backend)?;
-            println!("coordinator metrics:");
-            for (k, v) in backend.pool.metrics().snapshot() {
-                println!("  {k:>20}: {v}");
-            }
-            println!("  per-shard (batches / images / compute / write / steals):");
-            for (s, b, im, c, w, st) in backend.pool.metrics().shard_snapshot() {
-                println!("    shard {s}: {b:>5} / {im:>6} / {c:>9} / {w:>9} / {st:>4}");
-            }
+            print_pool_metrics(&backend.pool);
             r
         }
         "pjrt" => {
@@ -296,6 +318,23 @@ fn cmd_cpd(args: &Args) -> Result<()> {
         dt
     );
     Ok(())
+}
+
+/// Print the pool's aggregate metrics plus the per-shard rows, with
+/// streamed compute cycles split from reconfiguration writes.
+fn print_pool_metrics(pool: &Coordinator) {
+    println!("coordinator metrics:");
+    for (k, v) in pool.metrics().snapshot() {
+        println!("  {k:>20}: {v}");
+    }
+    println!("  per-shard (batches / images / streamed / reconfig writes / steals):");
+    for s in pool.metrics().shard_snapshot() {
+        println!(
+            "    shard {}: {:>5} / {:>6} / {:>9} / {:>9} / {:>4}",
+            s.shard, s.batches, s.images, s.streamed_cycles,
+            s.reconfig_write_cycles, s.steals
+        );
+    }
 }
 
 fn cmd_energy(args: &Args) -> Result<()> {

@@ -6,12 +6,19 @@
 //! * [`mapping`] — the paper-literal primitives: CP1 Hadamard products via
 //!   wavelength interleaving (Fig. 3), CP2/CP3 scale-and-accumulate with
 //!   tensor elements stored in the array (Fig. 4).
+//! * [`plan`] — the tile-plan IR: a backend-agnostic description of a
+//!   tiled MTTKRP (stored images, streamed lane blocks, electrical scale
+//!   vectors, accumulation targets).  [`plan::DensePlanner`] and
+//!   [`plan::SparseSlicePlanner`] lower workloads into plans;
+//!   [`plan::execute_plan`] drives any executor over them (DESIGN.md §6).
 //! * [`pipeline`] — the high-utilisation tiled schedule used for full
 //!   MTTKRPs: the Khatri-Rao block (the *reused* operand) is stored as the
 //!   array image and tensor rows stream over wavelength lanes, so one
 //!   reconfiguration (`rows` write cycles) is amortised over `ceil(I/lanes)`
 //!   compute cycles.  DESIGN.md §5 explains why this is the only mapping
-//!   that sustains the paper's headline throughput.
+//!   that sustains the paper's headline throughput.  Both the dense and
+//!   sparse pipelines are thin planner + executor compositions over the
+//!   plan IR.
 //!
 //! All pSRAM paths run through the [`pipeline::TileExecutor`] abstraction so
 //! the same schedule can execute on the analog simulator, a pure-CPU
@@ -19,12 +26,17 @@
 
 pub mod mapping;
 pub mod pipeline;
+pub mod plan;
 pub mod reference;
 pub mod sparse_pipeline;
 
 pub use pipeline::{
     quantize_krp_image, quantize_lane_batch, CpuTileExecutor, MttkrpStats,
     PsramPipeline, TileExecutor,
+};
+pub use plan::{
+    execute_plan, DensePlanner, LaneBlock, PlanGroup, PlanImage,
+    SparseSlicePlanner, TilePlan,
 };
 pub use reference::{dense_mttkrp, sparse_mttkrp};
 pub use sparse_pipeline::{SparsePsramBackend, SparsePsramPipeline};

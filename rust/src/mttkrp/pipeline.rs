@@ -13,6 +13,14 @@
 //! over `ceil(I / lanes)` compute cycles, which is what lets sustained
 //! throughput approach peak (DESIGN.md §5).
 //!
+//! Since the planner/executor split ([`super::plan`], DESIGN.md §6) the
+//! pipeline is a thin composition: [`super::plan::DensePlanner`] lowers
+//! the workload into a [`super::plan::TilePlan`] and
+//! [`super::plan::execute_plan`] drives this pipeline's [`TileExecutor`]
+//! over it.  [`PsramPipeline`] remains the single-array convenience
+//! wrapper; the sharded coordinator schedules the same plans across many
+//! arrays.
+//!
 //! Quantization: the X tile is quantized per (lane-batch, K-block) and the
 //! KRP image per (K-block, R-block), both symmetric int8; integer tile
 //! results are dequantized with the product of scales and accumulated in
@@ -20,6 +28,7 @@
 //! simulator, the CPU integer executor and the PJRT-executed Pallas kernel
 //! produce *identical* f32 outputs.
 
+use super::plan::{execute_plan, DensePlanner};
 use crate::compute::ComputeEngine;
 use crate::psram::{CycleLedger, EnergyLedger, PsramArray};
 use crate::tensor::{krp_all_but, DenseTensor, Matrix};
@@ -258,8 +267,10 @@ pub fn quantize_krp_image(
 /// offset-binary into a zero-padded `[lane_cnt][rows]` block.  Returns the
 /// codes and the per-lane scales.
 ///
-/// Shared by the pipeline's lane-batch cache and the coordinator workers'
-/// per-batch cache (see `coordinator::job::ImageBatch`).
+/// Called once per (K block, lane batch) by
+/// [`super::plan::DensePlanner`] when it lowers a dense workload into a
+/// tile plan, so every executor — single array or coordinator shard —
+/// streams identical codes.
 pub fn quantize_lane_batch(
     unf: &Matrix,
     i0: usize,
@@ -305,83 +316,12 @@ impl<'a, E: TileExecutor> PsramPipeline<'a, E> {
         self.mttkrp_unfolded(&unf, &krp)
     }
 
-    /// Quantized `unf [I, K] @ krp [K, R]` through the array schedule.
+    /// Quantized `unf [I, K] @ krp [K, R]` through the array schedule: a
+    /// thin [`DensePlanner`] + [`execute_plan`] composition.
     pub fn mttkrp_unfolded(&mut self, unf: &Matrix, krp: &Matrix) -> Result<Matrix> {
-        if unf.cols() != krp.rows() {
-            return Err(Error::shape(format!(
-                "unfolded {}x{} against KRP {}x{}",
-                unf.rows(),
-                unf.cols(),
-                krp.rows(),
-                krp.cols()
-            )));
-        }
-        let (i_dim, k_dim, r_dim) = (unf.rows(), unf.cols(), krp.cols());
-        let rows = self.exec.rows();
-        let wpr = self.exec.words_per_row();
-        let lanes_max = self.exec.max_lanes();
-
-        let mut out = Matrix::zeros(i_dim, r_dim);
-
-        // Perf (EXPERIMENTS.md §Perf): the quantized X lane batches depend
-        // only on (K block, lane batch), so they are computed once and
-        // reused across every R block instead of being re-quantized
-        // per image.  Cache layout: [kb][ib] -> (codes, per-lane scales).
-        let k_blocks = k_dim.div_ceil(rows);
-        let i_batches = i_dim.div_ceil(lanes_max);
-        let mut u_cache: Vec<Option<(Vec<u8>, Vec<f32>)>> =
-            Vec::with_capacity(k_blocks * i_batches);
-        u_cache.resize_with(k_blocks * i_batches, || None);
-
-        // R blocks (outer) then K blocks: each (rb, kb) is one array image,
-        // streamed against every lane batch of output rows.
-        for rb in 0..r_dim.div_ceil(wpr) {
-            let r0 = rb * wpr;
-            let r_cnt = wpr.min(r_dim - r0);
-            for kb in 0..k_dim.div_ceil(rows) {
-                let k0 = kb * rows;
-                let k_cnt = rows.min(k_dim - k0);
-
-                // Build + quantize the KRP image [rows][wpr], zero padded.
-                let (image, w_scales) =
-                    quantize_krp_image(krp, k0, k_cnt, r0, r_cnt, rows, wpr);
-                self.exec.load_image(&image)?;
-                self.stats.images += 1;
-                self.stats.write_cycles += rows as u64;
-
-                // Stream lane batches of output rows.
-                for ib in 0..i_dim.div_ceil(lanes_max) {
-                    let i0 = ib * lanes_max;
-                    let lane_cnt = lanes_max.min(i_dim - i0);
-
-                    // Quantize the X tile per LANE (each wavelength's input
-                    // DAC has its own scale), cached across R blocks.
-                    let slot = kb * i_batches + ib;
-                    if u_cache[slot].is_none() {
-                        u_cache[slot] = Some(quantize_lane_batch(
-                            unf, i0, lane_cnt, k0, k_cnt, rows,
-                        ));
-                    }
-                    let (u, x_scales) = u_cache[slot].as_ref().unwrap();
-
-                    let tile = self.exec.compute(u, lane_cnt)?;
-                    self.stats.compute_cycles += 1;
-                    self.stats.raw_macs += (rows * wpr * lane_cnt) as u64;
-                    self.stats.useful_macs += (k_cnt * r_cnt * lane_cnt) as u64;
-
-                    // Dequantize and accumulate with per-lane × per-column
-                    // scales.
-                    for m in 0..lane_cnt {
-                        let orow = out.row_mut(i0 + m);
-                        for r in 0..r_cnt {
-                            orow[r0 + r] +=
-                                tile[m * wpr + r] as f32 * (x_scales[m] * w_scales[r]);
-                        }
-                    }
-                }
-            }
-        }
-        Ok(out)
+        let planner = DensePlanner::for_executor(&*self.exec);
+        let plan = planner.plan_unfolded(unf, krp)?;
+        execute_plan(&mut *self.exec, &plan, &mut self.stats)
     }
 }
 

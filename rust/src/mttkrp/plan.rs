@@ -1,0 +1,740 @@
+//! The tile-plan IR: a backend-agnostic description of a tiled pSRAM
+//! MTTKRP, separated from its execution.
+//!
+//! A [`TilePlan`] says *what* runs on the array — stored-image specs,
+//! streamed lane blocks, electrical scale vectors, and accumulation
+//! targets — without executing anything.  Planners lower a workload into
+//! the IR:
+//!
+//! * [`DensePlanner`] — a dense unfolded matrix pair `[I, K] @ [K, R]`
+//!   (the schedule of `mttkrp::pipeline`);
+//! * [`SparseSlicePlanner`] — a COO tensor mode via the slice-wise mapping
+//!   of `mttkrp::sparse_pipeline` (Algorithm 1 of the paper).
+//!
+//! A single [`execute_plan`] then drives any
+//! [`TileExecutor`] over the plan, and the sharded
+//! coordinator ([`crate::coordinator`]) schedules the same plan across
+//! many executors — so the dense pipeline, the sparse pipeline, and every
+//! coordinator path share one quantization + accumulation contract and
+//! stay bit-identical by construction.  The analytic side of the split is
+//! `PerfModel::predict_plan` ([`crate::perfmodel`]), which scores a plan's
+//! cycles/reconfigurations/occupancy without running it.
+//!
+//! Plan structure:
+//!
+//! ```text
+//!  TilePlan
+//!    └─ groups: [PlanGroup]          one per stored-operand block (the
+//!        ├─ key                      shard key: dense K-block / sparse
+//!        ├─ images:  [PlanImage]     J-block); every image in a group is
+//!        └─ streams: [LaneBlock]     streamed against the *same* lane
+//!                                    blocks, so one quantized operand
+//!                                    slice amortizes across all of them.
+//! ```
+//!
+//! Accumulation contract (shared by single-array and coordinator
+//! execution): each `(group, image)` accumulates its streams into a fresh
+//! partial of `[out_rows, r_cnt]`, which is then folded into the output in
+//! plan order ([`run_image_into`] + [`fold_partial`]).  Because the same
+//! two functions run everywhere, distributed results are bit-identical to
+//! single-array results for every worker count and steal schedule.
+
+use super::pipeline::{
+    quantize_krp_image, quantize_lane_batch, MttkrpStats, TileExecutor,
+};
+use crate::tensor::{krp_all_but, CooTensor, DenseTensor, Matrix};
+use crate::util::error::{Error, Result};
+use crate::util::fixed::{encode_offset, quantize_encode_into};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// One stored-image spec: the quantized `(stored-block, rank-block)` tile a
+/// worker loads into its array before streaming lane blocks against it.
+#[derive(Debug, Clone)]
+pub struct PlanImage {
+    /// Quantized image, row-major `[rows][words_per_row]`, zero padded.
+    pub image: Vec<i8>,
+    /// Per-word-column dequantization scales (`r_cnt` long).
+    pub w_scales: Vec<f32>,
+    /// First rank column covered by this image.
+    pub r0: usize,
+    /// Rank columns covered by this image (`<= words_per_row`).
+    pub r_cnt: usize,
+}
+
+/// One streamed lane block: up to `lanes` offset-binary input rows for one
+/// compute cycle, with their dequantization scales, accumulation targets,
+/// and (for sparse slices) the electrical CP2 scale vector.
+#[derive(Debug, Clone)]
+pub struct LaneBlock {
+    /// Row-major `[lanes][rows]` offset-binary codes, zero padded.
+    pub codes: Vec<u8>,
+    /// Per-lane dequantization scales.
+    pub x_scales: Vec<f32>,
+    /// Output row each lane accumulates into (`lanes` long).
+    pub targets: Vec<usize>,
+    /// Electrical scale vector over the full rank dimension (`out_cols`
+    /// long): the sparse slice's Hadamard factor (CP2), shared (`Arc`)
+    /// by every chunk of the slice.  `None` means all ones (dense
+    /// streams).
+    pub scale_vec: Option<Arc<Vec<f32>>>,
+    /// Useful-MAC rows of one compute cycle of this block, per covered
+    /// rank column: dense `k_cnt * lanes`, sparse the block's nonzeros.
+    pub useful_rows: u64,
+}
+
+impl LaneBlock {
+    /// Wavelength lanes this block occupies.
+    pub fn lanes(&self) -> usize {
+        self.targets.len()
+    }
+}
+
+/// All work tied to one stored-operand block: the images that store it
+/// (one per rank block) and the lane blocks streamed against each of them.
+#[derive(Debug, Clone)]
+pub struct PlanGroup {
+    /// Stored-image key — the coordinator's shard key.  Images of the same
+    /// key share their streamed operand slice, so scheduling a group on
+    /// one shard amortizes both reconfiguration writes and operand
+    /// quantization (dense contraction blocks and sparse slice reuse
+    /// behave identically).
+    pub key: usize,
+    /// Stored images of this group, in rank-block order.
+    pub images: Vec<PlanImage>,
+    /// Lane blocks streamed against every image of the group, in plan
+    /// (deterministic) order.
+    pub streams: Vec<LaneBlock>,
+}
+
+/// A backend-agnostic tiled MTTKRP: what to store, what to stream, where
+/// to accumulate — but nothing executed yet.
+#[derive(Debug, Clone)]
+pub struct TilePlan {
+    /// Array rows (contraction block size) the plan was tiled for.
+    pub rows: usize,
+    /// Word columns per row (rank block size) the plan was tiled for.
+    pub wpr: usize,
+    /// Maximum wavelength lanes any stream may occupy.
+    pub lanes: usize,
+    /// Output rows of the MTTKRP result.
+    pub out_rows: usize,
+    /// Output columns (the decomposition rank) of the result.
+    pub out_cols: usize,
+    /// Work groups, keyed by stored-operand block.
+    pub groups: Vec<PlanGroup>,
+}
+
+impl TilePlan {
+    /// Total stored images (array reconfigurations) in the plan.
+    pub fn total_images(&self) -> usize {
+        self.groups.iter().map(|g| g.images.len()).sum()
+    }
+
+    /// Total compute cycles the plan issues (every image is streamed
+    /// against every lane block of its group).
+    pub fn total_compute_cycles(&self) -> u64 {
+        self.groups
+            .iter()
+            .map(|g| (g.images.len() * g.streams.len()) as u64)
+            .sum()
+    }
+
+    /// Largest lane occupancy of any stream in the plan.
+    pub fn max_lane_occupancy(&self) -> usize {
+        self.groups
+            .iter()
+            .flat_map(|g| g.streams.iter())
+            .map(|s| s.lanes())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Check the plan's internal invariants: image dims match the tile
+    /// geometry, rank blocks stay inside the output, lane occupancy never
+    /// exceeds the plan's lane budget, and every accumulation target is a
+    /// valid output row.
+    pub fn validate(&self) -> Result<()> {
+        if self.rows == 0 || self.wpr == 0 || self.lanes == 0 {
+            return Err(Error::Schedule("degenerate plan geometry".to_string()));
+        }
+        for g in &self.groups {
+            for img in &g.images {
+                if img.image.len() != self.rows * self.wpr {
+                    return Err(Error::Schedule(format!(
+                        "group {}: image of {} words for {}x{} geometry",
+                        g.key,
+                        img.image.len(),
+                        self.rows,
+                        self.wpr
+                    )));
+                }
+                if img.r_cnt == 0
+                    || img.r_cnt > self.wpr
+                    || img.r0 + img.r_cnt > self.out_cols
+                    || img.w_scales.len() != img.r_cnt
+                {
+                    return Err(Error::Schedule(format!(
+                        "group {}: rank block [{}, {}) outside output or scales \
+                         mismatched",
+                        g.key,
+                        img.r0,
+                        img.r0 + img.r_cnt
+                    )));
+                }
+            }
+            for s in &g.streams {
+                let lanes = s.lanes();
+                if lanes == 0 || lanes > self.lanes {
+                    return Err(Error::Schedule(format!(
+                        "group {}: stream occupies {lanes} lanes of {}",
+                        g.key, self.lanes
+                    )));
+                }
+                if s.codes.len() != lanes * self.rows || s.x_scales.len() != lanes {
+                    return Err(Error::Schedule(format!(
+                        "group {}: stream codes/scales sized wrongly",
+                        g.key
+                    )));
+                }
+                if s.targets.iter().any(|&t| t >= self.out_rows) {
+                    return Err(Error::Schedule(format!(
+                        "group {}: accumulation target beyond {} output rows",
+                        g.key, self.out_rows
+                    )));
+                }
+                if let Some(sv) = &s.scale_vec {
+                    if sv.len() != self.out_cols {
+                        return Err(Error::Schedule(format!(
+                            "group {}: scale vector of {} for rank {}",
+                            g.key,
+                            sv.len(),
+                            self.out_cols
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Lowers a dense unfolded matrix pair into a [`TilePlan`]: one group per
+/// contraction (K) block, one image per rank block, one lane block per
+/// batch of output rows — the schedule of `mttkrp::pipeline`, expressed as
+/// data.
+#[derive(Debug, Clone, Copy)]
+pub struct DensePlanner {
+    /// Array rows (contraction block size).
+    pub rows: usize,
+    /// Word columns per row (rank block size).
+    pub wpr: usize,
+    /// Maximum wavelength lanes per compute cycle.
+    pub lanes: usize,
+}
+
+impl DensePlanner {
+    /// Planner for an explicit tile geometry.
+    pub fn new(rows: usize, wpr: usize, lanes: usize) -> Self {
+        DensePlanner { rows, wpr, lanes }
+    }
+
+    /// Planner matching an executor's tile geometry.
+    pub fn for_executor<E: TileExecutor>(exec: &E) -> Self {
+        DensePlanner::new(exec.rows(), exec.words_per_row(), exec.max_lanes())
+    }
+
+    /// Plan the MTTKRP of a dense tensor along `mode`.
+    pub fn plan_mttkrp(
+        &self,
+        x: &DenseTensor,
+        factors: &[Matrix],
+        mode: usize,
+    ) -> Result<TilePlan> {
+        let unf = x.unfold(mode)?;
+        let krp = krp_all_but(factors, mode)?;
+        self.plan_unfolded(&unf, &krp)
+    }
+
+    /// Plan `unf [I, K] @ krp [K, R]` through the array schedule.
+    pub fn plan_unfolded(&self, unf: &Matrix, krp: &Matrix) -> Result<TilePlan> {
+        if self.rows == 0 || self.wpr == 0 || self.lanes == 0 {
+            return Err(Error::Schedule("degenerate planner geometry".to_string()));
+        }
+        if unf.cols() != krp.rows() {
+            return Err(Error::shape(format!(
+                "unfolded {}x{} against KRP {}x{}",
+                unf.rows(),
+                unf.cols(),
+                krp.rows(),
+                krp.cols()
+            )));
+        }
+        let (i_dim, k_dim, r_dim) = (unf.rows(), unf.cols(), krp.cols());
+        let k_blocks = k_dim.div_ceil(self.rows);
+        let r_blocks = r_dim.div_ceil(self.wpr);
+        let i_batches = i_dim.div_ceil(self.lanes);
+
+        let mut groups = Vec::with_capacity(k_blocks);
+        for kb in 0..k_blocks {
+            let k0 = kb * self.rows;
+            let k_cnt = self.rows.min(k_dim - k0);
+
+            let images = (0..r_blocks)
+                .map(|rb| {
+                    let r0 = rb * self.wpr;
+                    let r_cnt = self.wpr.min(r_dim - r0);
+                    let (image, w_scales) = quantize_krp_image(
+                        krp, k0, k_cnt, r0, r_cnt, self.rows, self.wpr,
+                    );
+                    PlanImage { image, w_scales, r0, r_cnt }
+                })
+                .collect();
+
+            let streams = (0..i_batches)
+                .map(|ib| {
+                    let i0 = ib * self.lanes;
+                    let lane_cnt = self.lanes.min(i_dim - i0);
+                    let (codes, x_scales) =
+                        quantize_lane_batch(unf, i0, lane_cnt, k0, k_cnt, self.rows);
+                    LaneBlock {
+                        codes,
+                        x_scales,
+                        targets: (i0..i0 + lane_cnt).collect(),
+                        scale_vec: None,
+                        useful_rows: (k_cnt * lane_cnt) as u64,
+                    }
+                })
+                .collect();
+
+            groups.push(PlanGroup { key: kb, images, streams });
+        }
+
+        Ok(TilePlan {
+            rows: self.rows,
+            wpr: self.wpr,
+            lanes: self.lanes,
+            out_rows: i_dim,
+            out_cols: r_dim,
+            groups,
+        })
+    }
+}
+
+/// Lowers one COO tensor mode into a [`TilePlan`] via the slice-wise
+/// mapping of `mttkrp::sparse_pipeline`: the first non-output mode's
+/// factor is stored (one group per J block — the shard key), sparse fibers
+/// are streamed per slice, and the remaining modes' Hadamard rows become
+/// each stream's electrical scale vector.
+#[derive(Debug, Clone, Copy)]
+pub struct SparseSlicePlanner {
+    /// Array rows (stored-factor block size).
+    pub rows: usize,
+    /// Word columns per row (rank block size).
+    pub wpr: usize,
+    /// Maximum wavelength lanes per compute cycle.
+    pub lanes: usize,
+}
+
+impl SparseSlicePlanner {
+    /// Planner for an explicit tile geometry.
+    pub fn new(rows: usize, wpr: usize, lanes: usize) -> Self {
+        SparseSlicePlanner { rows, wpr, lanes }
+    }
+
+    /// Planner matching an executor's tile geometry.
+    pub fn for_executor<E: TileExecutor>(exec: &E) -> Self {
+        SparseSlicePlanner::new(exec.rows(), exec.words_per_row(), exec.max_lanes())
+    }
+
+    /// Plan the sparse MTTKRP of `x` along `mode`.
+    ///
+    /// `factors[m]` must be `[shape[m], R]`; the plan's output is
+    /// `[shape[mode], R]`.
+    pub fn plan(
+        &self,
+        x: &CooTensor,
+        factors: &[Matrix],
+        mode: usize,
+    ) -> Result<TilePlan> {
+        if self.rows == 0 || self.wpr == 0 || self.lanes == 0 {
+            return Err(Error::Schedule("degenerate planner geometry".to_string()));
+        }
+        let shape = x.shape().to_vec();
+        let nd = shape.len();
+        if factors.len() != nd {
+            return Err(Error::shape(format!(
+                "{} factors for {nd}-mode tensor",
+                factors.len()
+            )));
+        }
+        if mode >= nd {
+            return Err(Error::shape(format!("mode {mode} out of range")));
+        }
+        if nd < 2 {
+            return Err(Error::shape("need >= 2 modes".to_string()));
+        }
+        let r_dim = factors[0].cols();
+        for (m, f) in factors.iter().enumerate() {
+            if f.cols() != r_dim || f.rows() != shape[m] {
+                return Err(Error::shape(format!("factor {m} has wrong shape")));
+            }
+        }
+
+        // m1 = first non-output mode: its factor is stored on the array.
+        let m1 = (0..nd).find(|&m| m != mode).expect("nd >= 2");
+        // remaining modes (excluding `mode` and `m1`) define the slice key.
+        let rest: Vec<usize> = (0..nd).filter(|&m| m != mode && m != m1).collect();
+
+        // ---- organise nonzeros: slice key -> output row -> (j, value) ----
+        // BTreeMap for deterministic iteration order (bit-exact results).
+        let mut slices: BTreeMap<usize, BTreeMap<usize, Vec<(usize, f32)>>> =
+            BTreeMap::new();
+        for (idx, v) in x.iter() {
+            let i = idx[mode] as usize;
+            let j = idx[m1] as usize;
+            let mut key = 0usize;
+            for &m in &rest {
+                key = key * shape[m] + idx[m] as usize;
+            }
+            slices.entry(key).or_default().entry(i).or_default().push((j, v));
+        }
+
+        // Electrical scale vector of each slice over the *full* rank
+        // dimension: the Hadamard product of the `rest` factors' rows
+        // (CP2).  Computed once per slice and shared by every lane block
+        // the slice produces.
+        let mut scale_vecs: BTreeMap<usize, Arc<Vec<f32>>> = BTreeMap::new();
+        for &key in slices.keys() {
+            let mut sv = vec![1f32; r_dim];
+            let mut k = key;
+            for &m in rest.iter().rev() {
+                let im = k % shape[m];
+                k /= shape[m];
+                let frow = factors[m].row(im);
+                for (s, &f) in sv.iter_mut().zip(frow) {
+                    *s *= f;
+                }
+            }
+            scale_vecs.insert(key, Arc::new(sv));
+        }
+
+        let j_dim = shape[m1];
+        let b = &factors[m1];
+        let j_blocks = j_dim.div_ceil(self.rows);
+        let r_blocks = r_dim.div_ceil(self.wpr);
+
+        let mut groups = Vec::with_capacity(j_blocks);
+        for jb in 0..j_blocks {
+            let j0 = jb * self.rows;
+            let j_cnt = self.rows.min(j_dim - j0);
+
+            // Stored images of the factor block, quantized per word column
+            // — the same helper (and therefore the same bits) as the dense
+            // planner.
+            let images = (0..r_blocks)
+                .map(|rb| {
+                    let r0 = rb * self.wpr;
+                    let r_cnt = self.wpr.min(r_dim - r0);
+                    let (image, w_scales) = quantize_krp_image(
+                        b, j0, j_cnt, r0, r_cnt, self.rows, self.wpr,
+                    );
+                    PlanImage { image, w_scales, r0, r_cnt }
+                })
+                .collect();
+
+            // Streamed lane blocks: every slice's rows restricted to this
+            // J block, chunked to the lane budget.
+            let mut streams = Vec::new();
+            for (&key, by_row) in &slices {
+                let sv = &scale_vecs[&key];
+                let mut srows: Vec<(usize, Vec<(usize, f32)>)> = Vec::new();
+                for (&i, entries) in by_row {
+                    let local: Vec<(usize, f32)> = entries
+                        .iter()
+                        .filter(|(j, _)| (j0..j0 + j_cnt).contains(j))
+                        .map(|&(j, v)| (j - j0, v))
+                        .collect();
+                    if !local.is_empty() {
+                        srows.push((i, local));
+                    }
+                }
+                let mut dense_row = vec![0f32; j_cnt];
+                for chunk in srows.chunks(self.lanes) {
+                    let lane_cnt = chunk.len();
+                    let mut codes = vec![encode_offset(0); lane_cnt * self.rows];
+                    let mut x_scales = vec![1f32; lane_cnt];
+                    let mut targets = Vec::with_capacity(lane_cnt);
+                    let mut nnz = 0u64;
+                    for (m, (i, entries)) in chunk.iter().enumerate() {
+                        dense_row.iter_mut().for_each(|v| *v = 0.0);
+                        for &(jl, v) in entries {
+                            dense_row[jl] += v; // duplicates sum (COO)
+                        }
+                        nnz += entries.len() as u64;
+                        x_scales[m] = quantize_encode_into(
+                            &dense_row,
+                            &mut codes[m * self.rows..m * self.rows + j_cnt],
+                        );
+                        targets.push(*i);
+                    }
+                    streams.push(LaneBlock {
+                        codes,
+                        x_scales,
+                        targets,
+                        scale_vec: Some(Arc::clone(sv)),
+                        useful_rows: nnz,
+                    });
+                }
+            }
+
+            groups.push(PlanGroup { key: jb, images, streams });
+        }
+
+        Ok(TilePlan {
+            rows: self.rows,
+            wpr: self.wpr,
+            lanes: self.lanes,
+            out_rows: shape[mode],
+            out_cols: r_dim,
+            groups,
+        })
+    }
+}
+
+/// Execute one stored image against its group's streams: load the image,
+/// issue one compute cycle per lane block, and accumulate the dequantized
+/// results into `partial` (`out_rows * img.r_cnt` entries, zeroed here).
+///
+/// This is the single accumulation contract shared by [`execute_plan`] and
+/// the coordinator workers — both paths call exactly this function, which
+/// is what makes distributed results bit-identical to single-array ones.
+#[allow(clippy::too_many_arguments)]
+pub fn run_image_into<E: TileExecutor>(
+    exec: &mut E,
+    img: &PlanImage,
+    streams: &[LaneBlock],
+    rows: usize,
+    wpr: usize,
+    out_rows: usize,
+    partial: &mut [f32],
+    stats: &mut MttkrpStats,
+) -> Result<()> {
+    exec.load_image(&img.image)?;
+    stats.images += 1;
+    stats.write_cycles += rows as u64;
+
+    let n = out_rows * img.r_cnt;
+    partial[..n].fill(0.0);
+    for s in streams {
+        let lanes = s.lanes();
+        let tile = exec.compute(&s.codes, lanes)?;
+        stats.compute_cycles += 1;
+        stats.raw_macs += (rows * wpr * lanes) as u64;
+        stats.useful_macs += s.useful_rows * img.r_cnt as u64;
+
+        for m in 0..lanes {
+            let t = s.targets[m];
+            let prow = &mut partial[t * img.r_cnt..(t + 1) * img.r_cnt];
+            match &s.scale_vec {
+                // CP2: electrical Hadamard scaling per rank column.
+                Some(sv) => {
+                    for (r, p) in prow.iter_mut().enumerate() {
+                        *p += tile[m * wpr + r] as f32
+                            * (s.x_scales[m] * img.w_scales[r])
+                            * sv[img.r0 + r];
+                    }
+                }
+                None => {
+                    for (r, p) in prow.iter_mut().enumerate() {
+                        *p += tile[m * wpr + r] as f32
+                            * (s.x_scales[m] * img.w_scales[r]);
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Fold one image's partial (`out.rows() * r_cnt` entries) into the output
+/// columns `r0..r0+r_cnt`.  The leader and the single-array executor both
+/// fold in plan order, so the f32 reduction is deterministic.
+pub fn fold_partial(out: &mut Matrix, partial: &[f32], r0: usize, r_cnt: usize) {
+    for i in 0..out.rows() {
+        let orow = out.row_mut(i);
+        let prow = &partial[i * r_cnt..(i + 1) * r_cnt];
+        for (r, &p) in prow.iter().enumerate() {
+            orow[r0 + r] += p;
+        }
+    }
+}
+
+/// Drive one [`TileExecutor`] over a whole [`TilePlan`], accumulating
+/// execution statistics into `stats` and returning the f32 MTTKRP result.
+pub fn execute_plan<E: TileExecutor>(
+    exec: &mut E,
+    plan: &TilePlan,
+    stats: &mut MttkrpStats,
+) -> Result<Matrix> {
+    plan.validate()?;
+    if exec.rows() != plan.rows || exec.words_per_row() != plan.wpr {
+        return Err(Error::shape(format!(
+            "plan tiled for {}x{} words but executor is {}x{}",
+            plan.rows,
+            plan.wpr,
+            exec.rows(),
+            exec.words_per_row()
+        )));
+    }
+    if plan.lanes > exec.max_lanes() {
+        return Err(Error::shape(format!(
+            "plan budgets {} lanes but executor supports {}",
+            plan.lanes,
+            exec.max_lanes()
+        )));
+    }
+
+    let mut out = Matrix::zeros(plan.out_rows, plan.out_cols);
+    let mut partial = vec![0f32; plan.out_rows * plan.wpr];
+    for g in &plan.groups {
+        for img in &g.images {
+            run_image_into(
+                exec,
+                img,
+                &g.streams,
+                plan.rows,
+                plan.wpr,
+                plan.out_rows,
+                &mut partial,
+                stats,
+            )?;
+            fold_partial(
+                &mut out,
+                &partial[..plan.out_rows * img.r_cnt],
+                img.r0,
+                img.r_cnt,
+            );
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mttkrp::pipeline::{CpuTileExecutor, PsramPipeline};
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn dense_plan_counts_match_tiling() {
+        // K = 540 -> 3 K-blocks, R = 40 -> 2 R-blocks, I = 120 -> 3 batches.
+        let mut rng = Prng::new(1);
+        let unf = Matrix::randn(120, 540, &mut rng);
+        let krp = Matrix::randn(540, 40, &mut rng);
+        let plan = DensePlanner::new(256, 32, 52).plan_unfolded(&unf, &krp).unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.groups.len(), 3);
+        assert!(plan.groups.iter().all(|g| g.images.len() == 2));
+        assert!(plan.groups.iter().all(|g| g.streams.len() == 3));
+        assert_eq!(plan.total_images(), 6);
+        assert_eq!(plan.total_compute_cycles(), 18);
+        assert_eq!(plan.max_lane_occupancy(), 52);
+        assert_eq!(plan.out_rows, 120);
+        assert_eq!(plan.out_cols, 40);
+    }
+
+    #[test]
+    fn plan_execution_is_the_pipeline_path() {
+        // The pipeline is a planner+executor composition; planning and
+        // executing by hand must produce the same bits and the same stats.
+        let mut rng = Prng::new(2);
+        let x = DenseTensor::randn(&[30, 11, 7], &mut rng);
+        let factors: Vec<Matrix> =
+            [30, 11, 7].iter().map(|&d| Matrix::randn(d, 6, &mut rng)).collect();
+
+        let mut e1 = CpuTileExecutor::paper();
+        let mut pipe = PsramPipeline::new(&mut e1);
+        let a = pipe.mttkrp(&x, &factors, 1).unwrap();
+
+        let plan =
+            DensePlanner::new(256, 32, 52).plan_mttkrp(&x, &factors, 1).unwrap();
+        let mut e2 = CpuTileExecutor::paper();
+        let mut stats = MttkrpStats::default();
+        let b = execute_plan(&mut e2, &plan, &mut stats).unwrap();
+
+        assert_eq!(a.data(), b.data());
+        assert_eq!(stats.images, pipe.stats.images);
+        assert_eq!(stats.compute_cycles, pipe.stats.compute_cycles);
+        assert_eq!(stats.write_cycles, pipe.stats.write_cycles);
+        assert_eq!(stats.useful_macs, pipe.stats.useful_macs);
+        assert_eq!(stats.raw_macs, pipe.stats.raw_macs);
+    }
+
+    #[test]
+    fn sparse_plan_groups_key_by_stored_block() {
+        // j_dim = 600 -> 3 stored-factor blocks -> 3 groups keyed 0..3.
+        let mut rng = Prng::new(3);
+        let x = CooTensor::random(&[20, 600, 6], 300, &mut rng);
+        let factors: Vec<Matrix> =
+            [20, 600, 6].iter().map(|&d| Matrix::randn(d, 10, &mut rng)).collect();
+        let plan = SparseSlicePlanner::new(256, 32, 52).plan(&x, &factors, 0).unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.groups.len(), 3);
+        for (jb, g) in plan.groups.iter().enumerate() {
+            assert_eq!(g.key, jb);
+            assert_eq!(g.images.len(), 1); // rank 10 -> one rank block
+            for s in &g.streams {
+                assert!(s.scale_vec.is_some());
+                assert!(s.targets.iter().all(|&t| t < 20));
+            }
+        }
+        // every nonzero lands in exactly one (group, stream) useful count
+        let useful: u64 =
+            plan.groups.iter().flat_map(|g| &g.streams).map(|s| s.useful_rows).sum();
+        assert_eq!(useful, x.nnz() as u64);
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected_by_executor() {
+        let mut rng = Prng::new(4);
+        let unf = Matrix::randn(10, 20, &mut rng);
+        let krp = Matrix::randn(20, 4, &mut rng);
+        // Wrong rows.
+        let plan = DensePlanner::new(128, 32, 52).plan_unfolded(&unf, &krp).unwrap();
+        let mut exec = CpuTileExecutor::paper();
+        let mut stats = MttkrpStats::default();
+        assert!(execute_plan(&mut exec, &plan, &mut stats).is_err());
+        // Lane budget beyond the executor.
+        let plan = DensePlanner::new(256, 32, 104).plan_unfolded(&unf, &krp).unwrap();
+        assert!(execute_plan(&mut exec, &plan, &mut stats).is_err());
+    }
+
+    #[test]
+    fn validate_catches_corrupt_plans() {
+        let mut rng = Prng::new(5);
+        let unf = Matrix::randn(10, 20, &mut rng);
+        let krp = Matrix::randn(20, 4, &mut rng);
+        let planner = DensePlanner::new(256, 32, 52);
+
+        let mut plan = planner.plan_unfolded(&unf, &krp).unwrap();
+        plan.groups[0].images[0].image.truncate(7);
+        assert!(plan.validate().is_err());
+
+        let mut plan = planner.plan_unfolded(&unf, &krp).unwrap();
+        plan.groups[0].streams[0].targets[0] = 999;
+        assert!(plan.validate().is_err());
+
+        let mut plan = planner.plan_unfolded(&unf, &krp).unwrap();
+        plan.groups[0].streams[0].scale_vec = Some(Arc::new(vec![1.0; 3]));
+        assert!(plan.validate().is_err());
+    }
+
+    #[test]
+    fn shape_mismatch_rejected_by_planner() {
+        let planner = DensePlanner::new(256, 32, 52);
+        let unf = Matrix::zeros(4, 10);
+        let krp = Matrix::zeros(11, 3);
+        assert!(planner.plan_unfolded(&unf, &krp).is_err());
+    }
+}

@@ -21,27 +21,27 @@
 //! the electrical scale vector is the Hadamard product of those modes'
 //! factor rows.
 //!
+//! Since the planner/executor split ([`super::plan`], DESIGN.md §6) this
+//! module is a thin composition: [`super::plan::SparseSlicePlanner`]
+//! lowers the COO mode into a [`super::plan::TilePlan`] (stored factor
+//! blocks = plan groups, slice fibers = lane blocks, CP2 Hadamard rows =
+//! electrical scale vectors) and [`super::plan::execute_plan`] drives one
+//! [`TileExecutor`] over it.  The sharded coordinator executes the *same*
+//! plans across many arrays (`Coordinator::sparse_mttkrp`).
+//!
 //! Bit-exactness contract: the same [`TileExecutor`] abstraction executes
 //! the tiles, so the analog simulator, the CPU integer executor and the
 //! PJRT Pallas kernel all produce identical results here too.
 
 use super::pipeline::{MttkrpStats, TileExecutor};
+use super::plan::{execute_plan, SparseSlicePlanner};
 use crate::tensor::{CooTensor, Matrix};
-use crate::util::error::{Error, Result};
-use crate::util::fixed::{encode_offset, quantize_encode_into, quantize_sym};
-use std::collections::BTreeMap;
-
-/// One streamed sparse row: an output row `i` and its nonzeros within one
-/// (slice, J-block): `(j_local, value)`.
-#[derive(Debug, Clone)]
-struct SparseRow {
-    i: usize,
-    entries: Vec<(usize, f32)>,
-}
+use crate::util::error::Result;
 
 /// The sparse pSRAM MTTKRP pipeline over any [`TileExecutor`].
 pub struct SparsePsramPipeline<'a, E: TileExecutor> {
     exec: &'a mut E,
+    /// Accumulated execution statistics.
     pub stats: MttkrpStats,
 }
 
@@ -51,7 +51,8 @@ impl<'a, E: TileExecutor> SparsePsramPipeline<'a, E> {
         SparsePsramPipeline { exec, stats: MttkrpStats::default() }
     }
 
-    /// Sparse MTTKRP along `mode`.
+    /// Sparse MTTKRP along `mode`: a thin [`SparseSlicePlanner`] +
+    /// [`execute_plan`] composition.
     ///
     /// `factors[m]` must be `[shape[m], R]`; returns `[shape[mode], R]`.
     pub fn mttkrp(
@@ -60,149 +61,9 @@ impl<'a, E: TileExecutor> SparsePsramPipeline<'a, E> {
         factors: &[Matrix],
         mode: usize,
     ) -> Result<Matrix> {
-        let shape = x.shape().to_vec();
-        let nd = shape.len();
-        if factors.len() != nd {
-            return Err(Error::shape(format!(
-                "{} factors for {nd}-mode tensor",
-                factors.len()
-            )));
-        }
-        if mode >= nd {
-            return Err(Error::shape(format!("mode {mode} out of range")));
-        }
-        if nd < 2 {
-            return Err(Error::shape("need >= 2 modes".to_string()));
-        }
-        let r_dim = factors[0].cols();
-        for (m, f) in factors.iter().enumerate() {
-            if f.cols() != r_dim || f.rows() != shape[m] {
-                return Err(Error::shape(format!("factor {m} has wrong shape")));
-            }
-        }
-
-        // m1 = first non-output mode: its factor is stored on the array.
-        let m1 = (0..nd).find(|&m| m != mode).expect("nd >= 2");
-        // remaining modes (excluding `mode` and `m1`) define the slice key.
-        let rest: Vec<usize> = (0..nd).filter(|&m| m != mode && m != m1).collect();
-
-        // ---- organise nonzeros: slice key -> output row -> (j, value) ----
-        // BTreeMap for deterministic iteration order (bit-exact results).
-        let mut slices: BTreeMap<usize, BTreeMap<usize, Vec<(usize, f32)>>> =
-            BTreeMap::new();
-        for (idx, v) in x.iter() {
-            let i = idx[mode] as usize;
-            let j = idx[m1] as usize;
-            let mut key = 0usize;
-            for &m in &rest {
-                key = key * shape[m] + idx[m] as usize;
-            }
-            slices.entry(key).or_default().entry(i).or_default().push((j, v));
-        }
-
-        let rows = self.exec.rows();
-        let wpr = self.exec.words_per_row();
-        let lanes_max = self.exec.max_lanes();
-        let j_dim = shape[m1];
-        let b = &factors[m1];
-
-        let mut out = Matrix::zeros(shape[mode], r_dim);
-
-        // ---- image loop: (J-block, R-block) outer so one stored image is
-        //      reused across every slice and lane batch ----
-        for rb in 0..r_dim.div_ceil(wpr) {
-            let r0 = rb * wpr;
-            let r_cnt = wpr.min(r_dim - r0);
-            for jb in 0..j_dim.div_ceil(rows) {
-                let j0 = jb * rows;
-                let j_cnt = rows.min(j_dim - j0);
-
-                // Quantize the B block per word column (same scheme as the
-                // dense pipeline).
-                let mut image = vec![0i8; rows * wpr];
-                let mut w_scales = vec![1f32; r_cnt];
-                let mut col = vec![0f32; j_cnt];
-                for r in 0..r_cnt {
-                    for j in 0..j_cnt {
-                        col[j] = b.get(j0 + j, r0 + r);
-                    }
-                    let (cq, cs) = quantize_sym(&col, 8);
-                    w_scales[r] = cs;
-                    for j in 0..j_cnt {
-                        image[j * wpr + r] = cq[j] as i8;
-                    }
-                }
-                self.exec.load_image(&image)?;
-                self.stats.images += 1;
-                self.stats.write_cycles += rows as u64;
-
-                // ---- stream every slice against this image ----
-                for (&key, by_row) in &slices {
-                    // electrical scale vector for this slice: Hadamard of
-                    // the `rest` factors' rows (f32, per rank column).
-                    let mut scale_vec = vec![1f32; r_cnt];
-                    let mut k = key;
-                    // decode the key back into per-mode indices
-                    for &m in rest.iter().rev() {
-                        let im = k % shape[m];
-                        k /= shape[m];
-                        let frow = factors[m].row(im);
-                        for r in 0..r_cnt {
-                            scale_vec[r] *= frow[r0 + r];
-                        }
-                    }
-
-                    // rows of this slice restricted to the current J block
-                    let mut srows: Vec<SparseRow> = Vec::new();
-                    for (&i, entries) in by_row {
-                        let local: Vec<(usize, f32)> = entries
-                            .iter()
-                            .filter(|(j, _)| (j0..j0 + j_cnt).contains(j))
-                            .map(|&(j, v)| (j - j0, v))
-                            .collect();
-                        if !local.is_empty() {
-                            srows.push(SparseRow { i, entries: local });
-                        }
-                    }
-
-                    // lane batches of sparse rows
-                    for batch in srows.chunks(lanes_max) {
-                        let lane_cnt = batch.len();
-                        let mut u = vec![encode_offset(0); lane_cnt * rows];
-                        let mut x_scales = vec![1f32; lane_cnt];
-                        let mut dense_row = vec![0f32; j_cnt];
-                        let mut nnz_in_batch = 0usize;
-                        for (m, srow) in batch.iter().enumerate() {
-                            dense_row.iter_mut().for_each(|v| *v = 0.0);
-                            for &(jl, v) in &srow.entries {
-                                dense_row[jl] += v; // duplicates sum (COO)
-                            }
-                            nnz_in_batch += srow.entries.len();
-                            x_scales[m] = quantize_encode_into(
-                                &dense_row,
-                                &mut u[m * rows..m * rows + j_cnt],
-                            );
-                        }
-
-                        let tile = self.exec.compute(&u, lane_cnt)?;
-                        self.stats.compute_cycles += 1;
-                        self.stats.raw_macs += (rows * wpr * lane_cnt) as u64;
-                        self.stats.useful_macs += (nnz_in_batch * r_cnt) as u64;
-
-                        // CP2 (∘ scale_vec) + CP3 (accumulate) electrically.
-                        for (m, srow) in batch.iter().enumerate() {
-                            let orow = out.row_mut(srow.i);
-                            for r in 0..r_cnt {
-                                orow[r0 + r] += tile[m * wpr + r] as f32
-                                    * (x_scales[m] * w_scales[r])
-                                    * scale_vec[r];
-                            }
-                        }
-                    }
-                }
-            }
-        }
-        Ok(out)
+        let planner = SparseSlicePlanner::for_executor(&*self.exec);
+        let plan = planner.plan(x, factors, mode)?;
+        execute_plan(&mut *self.exec, &plan, &mut self.stats)
     }
 }
 

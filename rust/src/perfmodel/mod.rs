@@ -2,11 +2,18 @@
 //! throughput of a pSRAM array as a function of array geometry, wavelength
 //! channels, operating frequency and workload — plus the sweep drivers that
 //! regenerate Fig. 5 and the 17 PetaOps headline.
+//!
+//! Two entry points: [`PerfModel::predict`] scores an abstract
+//! [`Workload`] (the paper's closed-form §V.B accounting), and
+//! [`PerfModel::predict_plan`] scores a concrete
+//! [`crate::mttkrp::plan::TilePlan`] cycle-exactly — the analytic twin of
+//! actually executing the plan, validated against the coordinator's
+//! measured metrics in `tests/stack_integration.rs`.
 
 pub mod model;
 pub mod roofline;
 pub mod sweep;
 
-pub use model::{PerfEstimate, PerfModel, Workload};
+pub use model::{PerfEstimate, PerfModel, PlanEstimate, Workload};
 pub use roofline::{KernelRoofline, TpuLimits};
 pub use sweep::{fig5_frequency, fig5_wavelengths, headline, SweepPoint};

@@ -23,6 +23,7 @@
 //! The model is validated cycle-exactly against the functional pipeline in
 //! `tests/` (same formulas, measured vs predicted).
 
+use crate::mttkrp::plan::TilePlan;
 use crate::psram::ArrayGeometry;
 use crate::util::error::{Error, Result};
 
@@ -169,6 +170,84 @@ impl PerfModel {
             runtime_s,
         })
     }
+
+    /// Score a concrete [`TilePlan`]: predicted compute cycles,
+    /// reconfiguration writes, lane occupancy, and sustained throughput
+    /// for *this* plan's exact tiling — the analytic twin of executing the
+    /// plan.
+    ///
+    /// The cycle census is exact, not asymptotic: `compute_cycles` and
+    /// `reconfig_write_cycles` equal what the functional executors (and
+    /// the coordinator's metrics) measure when they run the same plan
+    /// (when `write_clock_hz == clock_hz`, measured write cycles are in
+    /// the same units) — a tested invariant, see
+    /// `tests/stack_integration.rs`.  Groups are assigned to arrays by
+    /// `key % num_arrays` (the coordinator's home-shard rule, without
+    /// stealing); the bottleneck array sets the predicted runtime.
+    pub fn predict_plan(&self, plan: &TilePlan) -> Result<PlanEstimate> {
+        self.validate()?;
+        plan.validate()?;
+        if plan.lanes > self.wavelengths {
+            return Err(Error::config(format!(
+                "plan budgets {} lanes but the model has {} wavelengths",
+                plan.lanes, self.wavelengths
+            )));
+        }
+
+        let write_scale = self.clock_hz / self.write_clock_hz;
+        let mut images = 0u64;
+        let mut compute = 0u64;
+        let mut reconfig_write_cycles = 0u64;
+        let mut useful = 0u64;
+        let mut raw = 0u64;
+        let mut shard_cycles = vec![0u64; self.num_arrays];
+        for g in &plan.groups {
+            let gi = g.images.len() as u64;
+            let gc = gi * g.streams.len() as u64;
+            // Scale writes per group so the per-shard split and the total
+            // truncate identically for any write_clock_hz.
+            let gw = ((gi * plan.rows as u64) as f64 * write_scale) as u64;
+
+            let mut g_raw = 0u64;
+            let mut g_useful_rows = 0u64;
+            for s in &g.streams {
+                g_raw += (plan.rows * plan.wpr * s.lanes()) as u64;
+                g_useful_rows += s.useful_rows;
+            }
+            let r_total: u64 = g.images.iter().map(|i| i.r_cnt as u64).sum();
+
+            images += gi;
+            compute += gc;
+            reconfig_write_cycles += gw;
+            raw += gi * g_raw;
+            useful += g_useful_rows * r_total;
+            shard_cycles[g.key % self.num_arrays] +=
+                if self.double_buffer { gc.max(gw) } else { gc + gw };
+        }
+
+        let total = compute + reconfig_write_cycles;
+        let utilization =
+            if total == 0 { 0.0 } else { compute as f64 / total as f64 };
+        let bottleneck_cycles = shard_cycles.iter().copied().max().unwrap_or(0);
+        let runtime_s = bottleneck_cycles as f64 / self.clock_hz;
+        let peak = self.peak_ops();
+        let sustained_raw = peak * utilization;
+        let padding = if raw == 0 { 0.0 } else { useful as f64 / raw as f64 };
+
+        Ok(PlanEstimate {
+            images,
+            compute_cycles: compute,
+            reconfig_write_cycles,
+            bottleneck_cycles,
+            utilization,
+            lane_occupancy: plan.max_lane_occupancy(),
+            useful_macs: useful,
+            raw_macs: raw,
+            runtime_s,
+            sustained_raw_ops: sustained_raw,
+            sustained_useful_ops: sustained_raw * padding,
+        })
+    }
 }
 
 /// Output of the predictive model.
@@ -192,6 +271,37 @@ pub struct PerfEstimate {
     pub write_cycles: u64,
     /// Predicted runtime (s).
     pub runtime_s: f64,
+}
+
+/// Output of [`PerfModel::predict_plan`]: the exact predicted accounting
+/// of one concrete [`TilePlan`].
+#[derive(Debug, Clone, Copy)]
+pub struct PlanEstimate {
+    /// Stored images (array reconfigurations) the plan issues.
+    pub images: u64,
+    /// Streamed-lane compute cycles, summed across all arrays.
+    pub compute_cycles: u64,
+    /// Reconfiguration write cycles (compute-clock units), summed across
+    /// all arrays.
+    pub reconfig_write_cycles: u64,
+    /// Cycles on the most-loaded array under home-shard assignment
+    /// (`key % num_arrays`) — what sets the predicted runtime.
+    pub bottleneck_cycles: u64,
+    /// Compute-cycle fraction: compute / (compute + reconfiguration) —
+    /// the same definition the coordinator metrics measure.
+    pub utilization: f64,
+    /// Largest wavelength-lane occupancy of any stream in the plan.
+    pub lane_occupancy: usize,
+    /// Useful MACs (excludes padding; sparse plans count nnz × R).
+    pub useful_macs: u64,
+    /// Raw MACs including padding.
+    pub raw_macs: u64,
+    /// Predicted runtime (s) of the bottleneck array.
+    pub runtime_s: f64,
+    /// Sustained ops/s counting every active word (peak × utilization).
+    pub sustained_raw_ops: f64,
+    /// Sustained ops/s counting only useful MACs.
+    pub sustained_useful_ops: f64,
 }
 
 #[cfg(test)]
@@ -296,6 +406,85 @@ mod tests {
         let mut bad = PerfModel::paper();
         bad.wavelengths = 0;
         assert!(bad.predict(&Workload::paper_large()).is_err());
+    }
+
+    #[test]
+    fn predict_plan_matches_executed_plan_stats() {
+        use crate::mttkrp::plan::{execute_plan, DensePlanner};
+        use crate::mttkrp::{CpuTileExecutor, MttkrpStats};
+        use crate::tensor::Matrix;
+        use crate::util::prng::Prng;
+
+        let mut rng = Prng::new(41);
+        let unf = Matrix::randn(120, 300, &mut rng);
+        let krp = Matrix::randn(300, 40, &mut rng);
+        let plan = DensePlanner::new(256, 32, 52).plan_unfolded(&unf, &krp).unwrap();
+        let est = PerfModel::paper().predict_plan(&plan).unwrap();
+
+        let mut exec = CpuTileExecutor::paper();
+        let mut stats = MttkrpStats::default();
+        execute_plan(&mut exec, &plan, &mut stats).unwrap();
+        assert_eq!(est.images, stats.images);
+        assert_eq!(est.compute_cycles, stats.compute_cycles);
+        assert_eq!(est.reconfig_write_cycles, stats.write_cycles);
+        assert_eq!(est.useful_macs, stats.useful_macs);
+        assert_eq!(est.raw_macs, stats.raw_macs);
+        assert!((est.utilization - stats.utilization()).abs() < 1e-12);
+        assert!(est.lane_occupancy <= 52);
+    }
+
+    #[test]
+    fn predict_plan_consistent_with_analytic_workload_model() {
+        use crate::mttkrp::plan::DensePlanner;
+        use crate::tensor::Matrix;
+        use crate::util::prng::Prng;
+
+        // For a dense plan on one array the two models must agree exactly.
+        let mut rng = Prng::new(42);
+        let unf = Matrix::randn(120, 300, &mut rng);
+        let krp = Matrix::randn(300, 40, &mut rng);
+        let plan = DensePlanner::new(256, 32, 52).plan_unfolded(&unf, &krp).unwrap();
+        let m = PerfModel::paper();
+        let by_plan = m.predict_plan(&plan).unwrap();
+        let by_workload =
+            m.predict(&Workload { i_rows: 120, k_contraction: 300, rank: 40 }).unwrap();
+        assert_eq!(by_plan.images, by_workload.images);
+        assert_eq!(by_plan.compute_cycles, by_workload.compute_cycles);
+        assert_eq!(by_plan.reconfig_write_cycles, by_workload.write_cycles);
+        assert!((by_plan.utilization - by_workload.utilization).abs() < 1e-12);
+    }
+
+    #[test]
+    fn predict_plan_bottleneck_shrinks_with_more_arrays() {
+        use crate::mttkrp::plan::DensePlanner;
+        use crate::tensor::Matrix;
+        use crate::util::prng::Prng;
+
+        let mut rng = Prng::new(43);
+        let unf = Matrix::randn(200, 1024, &mut rng); // 4 K-block groups
+        let krp = Matrix::randn(1024, 64, &mut rng);
+        let plan = DensePlanner::new(256, 32, 52).plan_unfolded(&unf, &krp).unwrap();
+        let mut m = PerfModel::paper();
+        let one = m.predict_plan(&plan).unwrap();
+        m.num_arrays = 4;
+        let four = m.predict_plan(&plan).unwrap();
+        // totals are scheduling-independent; the bottleneck splits 4 ways
+        assert_eq!(one.compute_cycles, four.compute_cycles);
+        assert_eq!(4 * four.bottleneck_cycles, one.bottleneck_cycles);
+        assert!(four.runtime_s < one.runtime_s / 3.9);
+    }
+
+    #[test]
+    fn predict_plan_rejects_overbudget_lanes() {
+        use crate::mttkrp::plan::DensePlanner;
+        use crate::tensor::Matrix;
+        use crate::util::prng::Prng;
+
+        let mut rng = Prng::new(44);
+        let unf = Matrix::randn(10, 20, &mut rng);
+        let krp = Matrix::randn(20, 4, &mut rng);
+        let plan = DensePlanner::new(256, 32, 104).plan_unfolded(&unf, &krp).unwrap();
+        assert!(PerfModel::paper().predict_plan(&plan).is_err());
     }
 
     #[test]

@@ -3,10 +3,13 @@
 
 use psram_imc::compute::{ComputeEngine, InterleavePattern};
 use psram_imc::coordinator::{Coordinator, CoordinatorConfig};
+use psram_imc::device::DeviceParams;
 use psram_imc::mttkrp::pipeline::{CpuTileExecutor, PsramPipeline};
+use psram_imc::mttkrp::plan::{DensePlanner, SparseSlicePlanner};
 use psram_imc::mttkrp::reference::dense_mttkrp;
+use psram_imc::mttkrp::SparsePsramPipeline;
 use psram_imc::perfmodel::{PerfModel, Workload};
-use psram_imc::psram::PsramArray;
+use psram_imc::psram::{ArrayGeometry, PsramArray};
 use psram_imc::tensor::{krp_all_but, CooTensor, DenseTensor, Matrix};
 use psram_imc::util::fixed::{encode_offset, quant_matmul_ref};
 use psram_imc::util::proptest::{check, check_with, Case, Config};
@@ -200,6 +203,109 @@ fn prop_interleave_pattern_invariant() {
         prop_assert_eq!(nonzero, expected);
         Ok(())
     });
+}
+
+#[test]
+fn prop_tile_plan_occupancy_and_geometry_bounded() {
+    // Any plan the planners emit must fit the physical envelope: lane
+    // occupancy never exceeds the comb's channel capacity, stored images
+    // never exceed the array geometry, and every accumulation target is a
+    // real output row.  `predict_plan` must agree with the plan's own
+    // cycle census.
+    check_with(
+        "plan within comb + array limits",
+        Config { cases: 20, max_size: 20, seed: 0xF7 },
+        |c| {
+            let params = DeviceParams::default();
+            let lanes = params.comb.max_channels();
+            let geom = ArrayGeometry::PAPER;
+            let (rows, wpr) = (geom.rows, geom.words_per_row());
+
+            let shape = rand_shape(c, 6 + c.size);
+            let r = 1 + c.rng.below(48) as usize;
+            let mode = c.rng.below(3) as usize;
+            let x = DenseTensor::randn(&shape, &mut c.rng);
+            let factors: Vec<Matrix> =
+                shape.iter().map(|&d| Matrix::randn(d, r, &mut c.rng)).collect();
+            let dense_plan = DensePlanner::new(rows, wpr, lanes)
+                .plan_mttkrp(&x, &factors, mode)
+                .map_err(|e| e.to_string())?;
+
+            let nnz = c.rng.below(150) as usize;
+            let coo = CooTensor::random(&shape, nnz, &mut c.rng);
+            let sparse_plan = SparseSlicePlanner::new(rows, wpr, lanes)
+                .plan(&coo, &factors, mode)
+                .map_err(|e| e.to_string())?;
+
+            for plan in [&dense_plan, &sparse_plan] {
+                plan.validate().map_err(|e| e.to_string())?;
+                prop_assert!(
+                    plan.max_lane_occupancy() <= lanes,
+                    "occupancy {} exceeds comb capacity {lanes}",
+                    plan.max_lane_occupancy()
+                );
+                for g in &plan.groups {
+                    for img in &g.images {
+                        prop_assert_eq!(img.image.len(), rows * wpr);
+                        prop_assert!(
+                            img.r_cnt <= wpr && img.r0 + img.r_cnt <= plan.out_cols,
+                            "rank block [{}, {}) outside geometry/output",
+                            img.r0,
+                            img.r0 + img.r_cnt
+                        );
+                    }
+                    for s in &g.streams {
+                        prop_assert_eq!(s.codes.len(), s.lanes() * rows);
+                        prop_assert!(
+                            s.targets.iter().all(|&t| t < plan.out_rows),
+                            "accumulation target out of range"
+                        );
+                    }
+                }
+                let est = PerfModel::paper()
+                    .predict_plan(plan)
+                    .map_err(|e| e.to_string())?;
+                prop_assert_eq!(est.images, plan.total_images() as u64);
+                prop_assert_eq!(est.compute_cycles, plan.total_compute_cycles());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sparse_coordinator_equals_sparse_pipeline_bit_exactly() {
+    check_with(
+        "sparse coordinator == single sparse pipeline",
+        Config { cases: 10, max_size: 16, seed: 0xF8 },
+        |c| {
+            let shape = rand_shape(c, 12);
+            let nnz = c.rng.below(200) as usize;
+            let coo = CooTensor::random(&shape, nnz, &mut c.rng);
+            let r = 1 + c.rng.below(40) as usize;
+            let mode = c.rng.below(3) as usize;
+            let factors: Vec<Matrix> =
+                shape.iter().map(|&d| Matrix::randn(d, r, &mut c.rng)).collect();
+            let workers = 1 + c.rng.below(4) as usize;
+
+            let mut exec = CpuTileExecutor::paper();
+            let single = SparsePsramPipeline::new(&mut exec)
+                .mttkrp(&coo, &factors, mode)
+                .unwrap();
+
+            let mut pool = Coordinator::spawn(
+                CoordinatorConfig { workers, queue_depth: 2, ..Default::default() },
+                |_| Ok(CpuTileExecutor::paper()),
+            )
+            .unwrap();
+            let dist = pool.sparse_mttkrp(&coo, &factors, mode).unwrap();
+            prop_assert!(
+                single.data() == dist.data(),
+                "sparse distributed result diverged (workers {workers} mode {mode})"
+            );
+            Ok(())
+        },
+    );
 }
 
 #[test]

@@ -3,15 +3,19 @@
 //! need `artifacts/` and the `xla` feature.
 
 use psram_imc::compute::ComputeEngine;
-use psram_imc::coordinator::pool::CoordinatedBackend;
+use psram_imc::coordinator::pool::{CoordinatedBackend, CoordinatedSparseBackend};
 use psram_imc::coordinator::{Coordinator, CoordinatorConfig};
 use psram_imc::cpd::{AlsConfig, CpAls, ExactBackend, PsramBackend};
 use psram_imc::device::{DeviceParams, NoiseModel};
 use psram_imc::mttkrp::pipeline::{AnalogTileExecutor, CpuTileExecutor};
+use psram_imc::mttkrp::plan::{DensePlanner, SparseSlicePlanner, TilePlan};
+use psram_imc::mttkrp::reference::sparse_mttkrp;
+use psram_imc::mttkrp::SparsePsramPipeline;
+use psram_imc::perfmodel::PerfModel;
 use psram_imc::psram::PsramArray;
 #[cfg(feature = "xla")]
 use psram_imc::runtime::PjrtTileExecutor;
-use psram_imc::tensor::{DenseTensor, Matrix};
+use psram_imc::tensor::{CooTensor, DenseTensor, Matrix};
 use psram_imc::util::prng::Prng;
 
 fn low_rank(seed: u64, shape: &[usize], r: usize, noise: f32) -> DenseTensor {
@@ -135,6 +139,132 @@ fn exact_vs_quantized_fit_gap_is_small() {
         .unwrap();
     let gap = rexact.final_fit() - rquant.final_fit();
     assert!(gap.abs() < 0.05, "exact {} quant {}", rexact.final_fit(), rquant.final_fit());
+}
+
+#[test]
+fn coordinator_sparse_bit_identical_for_any_worker_count_and_steal_schedule() {
+    // j_dim = 600 -> 3 stored-factor blocks, rank 40 -> 2 images per
+    // group, so sharding, batch chunking and stealing are all exercised.
+    let mut rng = Prng::new(31);
+    let shape = [40usize, 600, 18];
+    let x = CooTensor::random(&shape, 2000, &mut rng);
+    let factors: Vec<Matrix> =
+        shape.iter().map(|&d| Matrix::randn(d, 40, &mut rng)).collect();
+
+    let mut exec = CpuTileExecutor::paper();
+    let single = SparsePsramPipeline::new(&mut exec).mttkrp(&x, &factors, 0).unwrap();
+
+    // The quantized result approximates the exact sparse MTTKRP...
+    let exact = sparse_mttkrp(&x, &factors, 0).unwrap();
+    let norm = exact.fro_norm().max(1e-9);
+    let err: f64 = exact
+        .data()
+        .iter()
+        .zip(single.data())
+        .map(|(e, a)| ((e - a) as f64).powi(2))
+        .sum::<f64>()
+        .sqrt();
+    assert!(err / norm < 0.05, "quantized sparse MTTKRP off by {}", err / norm);
+
+    // ...and every coordinator schedule reproduces it bit-exactly.
+    for workers in [1usize, 2, 4] {
+        for steal in [false, true] {
+            for batch_size in [1usize, 2] {
+                let mut pool = Coordinator::spawn(
+                    CoordinatorConfig {
+                        workers,
+                        batch_size,
+                        steal,
+                        ..CoordinatorConfig::new(workers)
+                    },
+                    |_| Ok(CpuTileExecutor::paper()),
+                )
+                .unwrap();
+                let dist = pool.sparse_mttkrp(&x, &factors, 0).unwrap();
+                assert_eq!(
+                    single.data(),
+                    dist.data(),
+                    "workers={workers} steal={steal} batch={batch_size}"
+                );
+            }
+        }
+    }
+}
+
+/// Assert `predict_plan`'s cycle census equals what a fresh pool measures
+/// when it executes the same plan (paper clocks: write cycles are already
+/// in compute-clock units, so the comparison is exact).
+fn assert_predicted_equals_measured(plan: &TilePlan, run: impl FnOnce(&mut Coordinator)) {
+    let mut model = PerfModel::paper();
+    model.num_arrays = 3;
+    let est = model.predict_plan(plan).unwrap();
+    let mut pool = Coordinator::spawn(CoordinatorConfig::new(3), |_| {
+        Ok(CpuTileExecutor::paper())
+    })
+    .unwrap();
+    run(&mut pool);
+    let snap = pool.metrics().snapshot();
+    assert_eq!(est.images, snap[1].1, "images");
+    assert_eq!(est.compute_cycles, snap[2].1, "compute cycles");
+    assert_eq!(est.reconfig_write_cycles, snap[3].1, "reconfiguration writes");
+    assert_eq!(est.useful_macs, snap[4].1, "useful MACs");
+    assert_eq!(est.raw_macs, snap[5].1, "raw MACs");
+    assert!(
+        (est.utilization - pool.metrics().utilization()).abs() < 1e-12,
+        "utilization: predicted {} vs measured {}",
+        est.utilization,
+        pool.metrics().utilization()
+    );
+    // The per-shard split sums to the predicted totals.
+    let rows = pool.metrics().shard_snapshot();
+    let streamed: u64 = rows.iter().map(|r| r.streamed_cycles).sum();
+    let reconfig: u64 = rows.iter().map(|r| r.reconfig_write_cycles).sum();
+    assert_eq!(streamed, est.compute_cycles);
+    assert_eq!(reconfig, est.reconfig_write_cycles);
+}
+
+#[test]
+fn predict_plan_matches_coordinator_measured_cycles_dense_and_sparse() {
+    let mut rng = Prng::new(33);
+
+    // Dense workload: 3 K-block groups x 2 rank blocks x 3 lane batches.
+    let unf = Matrix::randn(150, 700, &mut rng);
+    let krp = Matrix::randn(700, 48, &mut rng);
+    let plan = DensePlanner::new(256, 32, 52).plan_unfolded(&unf, &krp).unwrap();
+    assert_predicted_equals_measured(&plan, |pool| {
+        pool.mttkrp_unfolded(&unf, &krp).unwrap();
+    });
+
+    // Sparse workload: 3 stored-factor groups, slice-chunked streams.
+    let shape = [30usize, 520, 12];
+    let x = CooTensor::random(&shape, 900, &mut rng);
+    let factors: Vec<Matrix> =
+        shape.iter().map(|&d| Matrix::randn(d, 24, &mut rng)).collect();
+    let plan = SparseSlicePlanner::new(256, 32, 52).plan(&x, &factors, 0).unwrap();
+    assert_predicted_equals_measured(&plan, |pool| {
+        pool.sparse_mttkrp(&x, &factors, 0).unwrap();
+    });
+}
+
+#[test]
+fn coordinated_sparse_cp_als_decomposes_sparsified_low_rank() {
+    let mut rng = Prng::new(36);
+    let truth: Vec<Matrix> =
+        [16usize, 14, 12].iter().map(|&d| Matrix::randn(d, 2, &mut rng)).collect();
+    let dense = DenseTensor::from_cp_factors(&truth, 0.0, &mut rng).unwrap();
+    let coo = CooTensor::from_dense(&dense, 0.0); // fully dense in COO form
+    let pool = Coordinator::with_workers(3, |_| Ok(CpuTileExecutor::paper())).unwrap();
+    let mut backend = CoordinatedSparseBackend::new(&coo, pool);
+    // best of 3 starts (ALS is init-sensitive)
+    let mut best = 0.0f64;
+    for seed in [2u64, 3, 4] {
+        let res = CpAls::new(AlsConfig { rank: 2, max_iters: 30, tol: 1e-7, seed })
+            .run(&mut backend)
+            .unwrap();
+        best = best.max(res.final_fit());
+    }
+    assert!(best > 0.95, "fit={best}");
+    assert!(backend.pool.metrics().snapshot()[1].1 > 0); // images
 }
 
 #[test]
