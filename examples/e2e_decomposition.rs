@@ -62,7 +62,7 @@ fn main() -> psram_imc::Result<()> {
     let pool = Coordinator::spawn(CoordinatorConfig::new(4), |_| {
         Ok(AnalogTileExecutor::ideal())
     })?;
-    let mut backend = CoordinatedBackend { tensor: &x, pool };
+    let mut backend = CoordinatedBackend::new(&x, pool);
     // Multi-start ALS (standard practice — ALS is sensitive to init):
     // run 3 seeds, keep the best fit.
     let t0 = std::time::Instant::now();

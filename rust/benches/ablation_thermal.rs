@@ -35,8 +35,13 @@ impl TileExecutor for FaultyExecutor {
         self.inner.array.inject_bit_errors(self.ber, &mut self.rng);
         Ok(())
     }
-    fn compute(&mut self, u: &[u8], lanes: usize) -> psram_imc::Result<Vec<i32>> {
-        self.inner.compute(u, lanes)
+    fn compute_into(
+        &mut self,
+        u: &[u8],
+        lanes: usize,
+        out: &mut [i32],
+    ) -> psram_imc::Result<()> {
+        self.inner.compute_into(u, lanes, out)
     }
     fn cycles(&self) -> psram_imc::psram::CycleLedger {
         self.inner.cycles()

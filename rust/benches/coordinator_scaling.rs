@@ -15,6 +15,7 @@ mod common;
 
 use psram_imc::coordinator::{Coordinator, CoordinatorConfig};
 use psram_imc::mttkrp::pipeline::CpuTileExecutor;
+use psram_imc::mttkrp::plan::DensePlanner;
 use psram_imc::perfmodel::{PerfModel, Workload};
 use psram_imc::tensor::Matrix;
 use psram_imc::util::prng::Prng;
@@ -114,6 +115,30 @@ fn main() {
             .unwrap();
             pool.mttkrp_unfolded(&unf, &krp).unwrap();
         });
+    }
+
+    common::section("COORD: steady-state ALS iteration @ 4 shards (plan cache)");
+    // What CP-ALS actually pays per iteration 2..N: the pool persists, the
+    // plan's shape + streamed codes are cached, and only the KRP images
+    // are requantized in place before the distributed execution.  The
+    // cold row replans (and re-quantizes the whole operand) every call —
+    // the pre-plan-cache behaviour.
+    {
+        let planner = DensePlanner::new(256, 32, 52);
+        let mut pool = Coordinator::spawn(CoordinatorConfig::new(4), |_| {
+            Ok(CpuTileExecutor::paper())
+        })
+        .unwrap();
+        let t_cold = common::bench("cold: plan + execute", 1, 3, || {
+            let plan = planner.plan_unfolded(&unf, &krp).unwrap();
+            pool.execute_plan(&plan).unwrap();
+        });
+        let mut plan = planner.plan_unfolded(&unf, &krp).unwrap();
+        let t_warm = common::bench("steady: replan_into + execute", 1, 3, || {
+            planner.replan_into(None, &krp, &mut plan).unwrap();
+            pool.execute_plan(&plan).unwrap();
+        });
+        println!("  -> steady-state ALS-iteration speedup: {:.2}x", t_cold / t_warm);
     }
 
     common::section("COORD: work stealing on a single-shard-skewed workload @ 4 shards");

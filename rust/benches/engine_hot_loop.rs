@@ -1,0 +1,130 @@
+//! ENGINE — the zero-allocation execution hot loop.
+//!
+//! Four sections, all on the exact integer path (the simulator's
+//! wall-clock, not the modeled device):
+//!
+//! 1. one compute cycle: allocating `compute_cycle` vs scratch-reusing
+//!    `compute_cycle_into` vs the batched `compute_block_into` — simulator
+//!    MACs/s on the paper tile;
+//! 2. dense steady-state: `execute_plan_into` with a warm `PlanScratch`
+//!    over a cached plan (the per-iteration CP-ALS path);
+//! 3. sparse steady-state: same over a slice-wise plan;
+//! 4. planning: cold `plan_unfolded` / `plan` vs in-place `replan_into` —
+//!    the plan-shape cache's per-iteration saving.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use psram_imc::compute::ComputeEngine;
+use psram_imc::mttkrp::pipeline::CpuTileExecutor;
+use psram_imc::mttkrp::plan::{
+    execute_plan_into, DensePlanner, PlanScratch, SparseSlicePlanner,
+};
+use psram_imc::mttkrp::MttkrpStats;
+use psram_imc::psram::PsramArray;
+use psram_imc::tensor::{CooTensor, Matrix};
+use psram_imc::util::prng::Prng;
+
+fn main() {
+    let mut rng = Prng::new(7);
+
+    // ---- 1. single-cycle paths on the paper tile (52×256×32) ----
+    common::section("ENGINE: one compute cycle, 52x256x32 (exact path)");
+    let img: Vec<i8> = (0..256 * 32).map(|_| rng.next_i8()).collect();
+    let u: Vec<u8> = (0..52 * 256).map(|_| rng.next_u8()).collect();
+    let macs_per_cycle = (256 * 32 * 52) as f64;
+
+    let mut eng = ComputeEngine::ideal();
+    let mut array = PsramArray::paper();
+    array.write_image(&img).unwrap();
+    let t = common::bench("compute_cycle (allocating)", 50, 400, || {
+        eng.compute_cycle(&mut array, &u, 52).unwrap();
+    });
+    println!("  -> {:.3e} simulated MAC/s", macs_per_cycle / t);
+
+    let mut out = vec![0i32; 52 * 32];
+    let t = common::bench("compute_cycle_into (scratch)", 50, 400, || {
+        eng.compute_cycle_into(&mut array, &u, 52, &mut out).unwrap();
+    });
+    println!("  -> {:.3e} simulated MAC/s", macs_per_cycle / t);
+
+    // A block of 8 cycles: one ledger/energy charge instead of eight.
+    let block_u: Vec<u8> = (0..8 * 52 * 256).map(|_| rng.next_u8()).collect();
+    let lane_counts = [52usize; 8];
+    let mut block_out = vec![0i32; 8 * 52 * 32];
+    let t = common::bench("compute_block_into (8 cycles)", 10, 100, || {
+        eng.compute_block_into(&mut array, &block_u, &lane_counts, &mut block_out)
+            .unwrap();
+    });
+    println!("  -> {:.3e} simulated MAC/s", 8.0 * macs_per_cycle / t);
+
+    // ---- 2. dense steady state: warm scratch, cached plan ----
+    common::section("ENGINE: dense execute_plan_into steady state (520x2048x64)");
+    let unf = Matrix::randn(520, 2048, &mut rng);
+    let krp = Matrix::randn(2048, 64, &mut rng);
+    let planner = DensePlanner::new(256, 32, 52);
+    let mut dense_plan = planner.plan_unfolded(&unf, &krp).unwrap();
+    let mut exec = CpuTileExecutor::paper();
+    let mut scratch = PlanScratch::default();
+    let mut dense_out = Matrix::zeros(520, 64);
+    let mut stats = MttkrpStats::default();
+    execute_plan_into(&mut exec, &dense_plan, &mut scratch, &mut stats, &mut dense_out)
+        .unwrap(); // warm-up: grows every scratch buffer
+    let raw_macs = {
+        let mut s = MttkrpStats::default();
+        execute_plan_into(&mut exec, &dense_plan, &mut scratch, &mut s, &mut dense_out)
+            .unwrap();
+        s.raw_macs as f64
+    };
+    let t = common::bench("execute_plan_into dense", 1, 5, || {
+        let mut s = MttkrpStats::default();
+        execute_plan_into(&mut exec, &dense_plan, &mut scratch, &mut s, &mut dense_out)
+            .unwrap();
+    });
+    println!("  -> {:.3e} simulated raw MAC/s (zero allocations per cycle)", raw_macs / t);
+
+    // ---- 3. sparse steady state ----
+    common::section("ENGINE: sparse execute_plan_into steady state (64x2048x16, 1% dense)");
+    let shape = [64usize, 2048, 16];
+    let nnz = (shape.iter().product::<usize>() as f64 * 0.01) as usize;
+    let coo = CooTensor::random(&shape, nnz, &mut rng);
+    let factors: Vec<Matrix> =
+        shape.iter().map(|&d| Matrix::randn(d, 32, &mut rng)).collect();
+    let sparse_planner = SparseSlicePlanner::new(256, 32, 52);
+    let mut sparse_plan = sparse_planner.plan(&coo, &factors, 0).unwrap();
+    let mut sparse_out = Matrix::zeros(64, 32);
+    let sparse_macs = {
+        let mut s = MttkrpStats::default();
+        execute_plan_into(&mut exec, &sparse_plan, &mut scratch, &mut s, &mut sparse_out)
+            .unwrap();
+        (s.raw_macs as f64, s.useful_macs as f64)
+    };
+    let t = common::bench("execute_plan_into sparse", 1, 5, || {
+        let mut s = MttkrpStats::default();
+        execute_plan_into(&mut exec, &sparse_plan, &mut scratch, &mut s, &mut sparse_out)
+            .unwrap();
+    });
+    println!(
+        "  -> {:.3e} raw / {:.3e} useful simulated MAC/s",
+        sparse_macs.0 / t,
+        sparse_macs.1 / t
+    );
+
+    // ---- 4. planning: cold plan vs in-place replan ----
+    common::section("ENGINE: plan-shape cache — cold plan vs replan_into");
+    let t_cold = common::bench("dense plan_unfolded (cold)", 1, 5, || {
+        planner.plan_unfolded(&unf, &krp).unwrap();
+    });
+    let t_warm = common::bench("dense replan_into (KRP only)", 1, 5, || {
+        planner.replan_into(None, &krp, &mut dense_plan).unwrap();
+    });
+    println!("  -> per-iteration planning speedup: {:.2}x", t_cold / t_warm);
+
+    let t_cold = common::bench("sparse plan (cold)", 1, 5, || {
+        sparse_planner.plan(&coo, &factors, 0).unwrap();
+    });
+    let t_warm = common::bench("sparse replan_into (stored only)", 1, 5, || {
+        sparse_planner.replan_into(&factors, 0, &mut sparse_plan).unwrap();
+    });
+    println!("  -> per-iteration planning speedup: {:.2}x", t_cold / t_warm);
+}

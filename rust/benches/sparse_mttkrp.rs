@@ -76,12 +76,11 @@ fn main() {
     let total2: usize = shape2.iter().product();
     let factors2: Vec<Matrix> =
         shape2.iter().map(|&d| Matrix::randn(d, rank, &mut rng)).collect();
+    let sparse_planner = SparseSlicePlanner::new(256, 32, 52);
     for &density in &[0.001f64, 0.01, 0.05] {
         let nnz = (total2 as f64 * density) as usize;
         let x = CooTensor::random(&shape2, nnz, &mut rng);
-        let plan = SparseSlicePlanner::new(256, 32, 52)
-            .plan(&x, &factors2, 0)
-            .unwrap();
+        let plan = sparse_planner.plan(&x, &factors2, 0).unwrap();
         println!(
             "\n-- density {density}: {} nnz, {} stored-image groups, {} images --",
             x.nnz(),
@@ -125,4 +124,26 @@ fn main() {
             );
         }
     }
+
+    // ---- steady-state sparse ALS iteration: plan cache @ 4 shards ----
+    // Iterations 2..N of sparse CP-ALS keep the slice maps and quantized
+    // fiber codes; only the stored factor images and CP2 scale vectors
+    // are requantized in place before each distributed execution.
+    common::section("AB-SPARSE: steady-state spALS iteration @ 4 shards (plan cache)");
+    let nnz = (total2 as f64 * 0.01) as usize;
+    let x = CooTensor::random(&shape2, nnz, &mut rng);
+    let mut pool = Coordinator::spawn(CoordinatorConfig::new(4), |_| {
+        Ok(CpuTileExecutor::paper())
+    })
+    .unwrap();
+    let t_cold = common::bench("cold: plan + execute", 1, 3, || {
+        let plan = sparse_planner.plan(&x, &factors2, 0).unwrap();
+        pool.execute_plan(&plan).unwrap();
+    });
+    let mut plan = sparse_planner.plan(&x, &factors2, 0).unwrap();
+    let t_warm = common::bench("steady: replan_into + execute", 1, 3, || {
+        sparse_planner.replan_into(&factors2, 0, &mut plan).unwrap();
+        pool.execute_plan(&plan).unwrap();
+    });
+    println!("  -> steady-state spALS-iteration speedup: {:.2}x", t_cold / t_warm);
 }

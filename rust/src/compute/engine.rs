@@ -13,6 +13,12 @@
 //!
 //! The engine also keeps the cycle/energy ledgers honest: one call is one
 //! compute cycle; modulator, ADC and laser energy are charged per cycle.
+//! The allocation-free entry points are [`ComputeEngine::compute_cycle_into`]
+//! (one cycle into caller scratch) and
+//! [`ComputeEngine::compute_block_into`] (a block of cycles with the
+//! ledger/energy charges applied once for the whole block, so per-cycle
+//! bookkeeping stops dominating small tiles); [`ComputeEngine::compute_cycle`]
+//! remains as the allocating compat wrapper.
 
 use crate::device::{DeviceParams, NoiseModel};
 use crate::psram::PsramArray;
@@ -31,11 +37,51 @@ pub struct ComputeStats {
     pub macs: u64,
 }
 
+/// Walk a compute block cycle by cycle: cycle `i` covers the next
+/// `lane_counts[i] * rows` codes of `u` and the next
+/// `lane_counts[i] * wpr` slots of `out`, handed to `cycle` as advancing
+/// windows.  The single source of truth for the block contract (window
+/// advancement + bounds errors) — shared by
+/// `TileExecutor::compute_block_into`'s default implementation and the
+/// engine's batched-charge path, so the two can never diverge.
+pub fn walk_compute_block<F>(
+    rows: usize,
+    wpr: usize,
+    u: &[u8],
+    lane_counts: &[usize],
+    out: &mut [i32],
+    mut cycle: F,
+) -> Result<()>
+where
+    F: FnMut(&[u8], usize, &mut [i32]) -> Result<()>,
+{
+    let (mut co, mut oo) = (0usize, 0usize);
+    for &lanes in lane_counts {
+        let u_end = co + lanes * rows;
+        let o_end = oo + lanes * wpr;
+        if u_end > u.len() || o_end > out.len() {
+            return Err(Error::shape(format!(
+                "compute block needs {} codes / {} outputs, got {} / {}",
+                u_end,
+                o_end,
+                u.len(),
+                out.len()
+            )));
+        }
+        cycle(&u[co..u_end], lanes, &mut out[oo..o_end])?;
+        co = u_end;
+        oo = o_end;
+    }
+    Ok(())
+}
+
 /// The analog compute engine bound to device parameters.
 #[derive(Debug, Clone)]
 pub struct ComputeEngine {
     params: DeviceParams,
     noise: NoiseModel,
+    /// Column-sum scratch of the faithful path (steady-state reuse).
+    colsum: Vec<i64>,
     pub stats: ComputeStats,
 }
 
@@ -45,13 +91,14 @@ impl ComputeEngine {
         ComputeEngine {
             params: DeviceParams::default(),
             noise: NoiseModel::Off,
+            colsum: Vec::new(),
             stats: ComputeStats::default(),
         }
     }
 
     /// Engine with explicit device parameters and noise model.
     pub fn new(params: DeviceParams, noise: NoiseModel) -> Self {
-        ComputeEngine { params, noise, stats: ComputeStats::default() }
+        ComputeEngine { params, noise, colsum: Vec::new(), stats: ComputeStats::default() }
     }
 
     /// Device parameters.
@@ -98,6 +145,65 @@ impl ComputeEngine {
         u: &[u8],
         lanes: usize,
     ) -> Result<Vec<i32>> {
+        let wpr = array.geometry().words_per_row();
+        let mut out = vec![0i32; lanes * wpr];
+        self.compute_cycle_into(array, u, lanes, &mut out)?;
+        Ok(out)
+    }
+
+    /// Allocation-free [`Self::compute_cycle`]: writes the
+    /// `[lanes][words_per_row]` results into `out` (exactly
+    /// `lanes * words_per_row` long) and charges one cycle on the ledgers.
+    pub fn compute_cycle_into(
+        &mut self,
+        array: &mut PsramArray,
+        u: &[u8],
+        lanes: usize,
+        out: &mut [i32],
+    ) -> Result<()> {
+        self.compute_cycle_raw(array, u, lanes, out)?;
+        self.charge_block(array, 1, lanes as u64);
+        Ok(())
+    }
+
+    /// Stream a block of compute cycles back to back against the stored
+    /// image: cycle `i` reads `lane_counts[i] * rows` codes from `u` and
+    /// writes `lane_counts[i] * words_per_row` results into `out`, both
+    /// advancing contiguously.  Cycle/energy ledgers are charged **once**
+    /// for the whole block (identical cycle counts; energy equal to the
+    /// per-cycle sum because every per-cycle charge is linear in the lane
+    /// count), so per-cycle bookkeeping stops dominating small tiles.
+    pub fn compute_block_into(
+        &mut self,
+        array: &mut PsramArray,
+        u: &[u8],
+        lane_counts: &[usize],
+        out: &mut [i32],
+    ) -> Result<()> {
+        let geom = array.geometry();
+        let (rows, wpr) = (geom.rows, geom.words_per_row());
+        let mut cycles = 0u64;
+        let mut lane_cycles = 0u64;
+        let result = walk_compute_block(rows, wpr, u, lane_counts, out, |codes, lanes, o| {
+            self.compute_cycle_raw(array, codes, lanes, o)?;
+            cycles += 1;
+            lane_cycles += lanes as u64;
+            Ok(())
+        });
+        // Charge exactly what ran — also on a mid-block error.
+        self.charge_block(array, cycles, lane_cycles);
+        result
+    }
+
+    /// One compute cycle with no ledger/energy charges (the caller batches
+    /// them through [`Self::charge_block`]).
+    fn compute_cycle_raw(
+        &mut self,
+        array: &mut PsramArray,
+        u: &[u8],
+        lanes: usize,
+        out: &mut [i32],
+    ) -> Result<()> {
         let geom = array.geometry();
         let rows = geom.rows;
         let wpr = geom.words_per_row();
@@ -112,30 +218,46 @@ impl ComputeEngine {
                 lanes * rows
             )));
         }
+        if out.len() != lanes * wpr {
+            return Err(Error::shape(format!(
+                "output block has {} slots, want lanes*words_per_row = {}",
+                out.len(),
+                lanes * wpr
+            )));
+        }
 
-        let out = if self.is_exact() {
-            self.compute_exact(array.packed_i32(), u, lanes, rows, wpr)
+        if self.is_exact() {
+            self.compute_exact(array.packed_i32(), u, lanes, rows, wpr, out);
         } else {
-            self.compute_faithful(array.packed(), u, lanes, rows, wpr)
-        };
+            self.compute_faithful(array.packed(), u, lanes, rows, wpr, out);
+        }
+        Ok(())
+    }
 
-        // Ledgers: one compute cycle; energy per §III device numbers.
-        array.cycles.compute += 1;
-        array.charge_static(1);
+    /// Charge the cycle/energy ledgers for `cycles` compute cycles that
+    /// streamed `lane_cycles` lanes in total (Σ lanes over the block).
+    /// Every per-cycle charge is linear in the lane count, so one batched
+    /// charge equals the per-cycle sum; §III device numbers.
+    fn charge_block(&mut self, array: &mut PsramArray, cycles: u64, lane_cycles: u64) {
+        if cycles == 0 {
+            return;
+        }
+        let geom = array.geometry();
+        let (rows, wpr) = (geom.rows, geom.words_per_row());
+        array.cycles.compute += cycles;
+        array.charge_static(cycles);
         array.energy.modulator_j +=
-            self.params.shaper.vector_energy_j(lanes * rows);
+            self.params.shaper.vector_energy_j(lane_cycles as usize * rows);
         array.energy.adc_j +=
-            self.params.adc.energy_per_sample_j * (lanes * wpr) as f64;
+            self.params.adc.energy_per_sample_j * (lane_cycles * wpr as u64) as f64;
         // Laser: line power per active lane for one cycle period.
-        array.energy.laser_j += self.params.comb.line_power_w * lanes as f64
-            / self.params.clock_hz;
+        array.energy.laser_j +=
+            self.params.comb.line_power_w * lane_cycles as f64 / self.params.clock_hz;
 
-        self.stats.cycles += 1;
-        let macs = (rows * wpr * lanes) as u64;
+        self.stats.cycles += cycles;
+        let macs = (rows * wpr) as u64 * lane_cycles;
         self.stats.macs += macs;
         self.stats.ops += 2 * macs;
-
-        Ok(out)
     }
 
     /// Bit-exact integer hot path: `out = (u - 128) @ packed`.
@@ -150,8 +272,9 @@ impl ComputeEngine {
         lanes: usize,
         rows: usize,
         wpr: usize,
-    ) -> Vec<i32> {
-        let mut out = vec![0i32; lanes * wpr];
+        out: &mut [i32],
+    ) {
+        out.fill(0);
         for m in 0..lanes {
             let urow = &u[m * rows..(m + 1) * rows];
             let orow = &mut out[m * wpr..(m + 1) * wpr];
@@ -166,7 +289,6 @@ impl ComputeEngine {
                 }
             }
         }
-        out
     }
 
     /// Device-faithful path: optical per-plane gating, photocurrent
@@ -178,20 +300,23 @@ impl ComputeEngine {
         lanes: usize,
         rows: usize,
         wpr: usize,
-    ) -> Vec<i32> {
+        out: &mut [i32],
+    ) {
         // Signed analog full scale of one accumulated readout:
         // rows * max_intensity * max_|weight| (the ADC sees a differential
         // signal; we quantize magnitude against this scale).
         let full_scale = rows as f64 * 255.0 * OFFSET as f64;
-        // Digital offset correction per column: 128 * colsum(w).
-        let mut colsum = vec![0i64; wpr];
+        // Digital offset correction per column: 128 * colsum(w); the
+        // column sums live in engine scratch so steady-state cycles stay
+        // allocation-free.
+        self.colsum.clear();
+        self.colsum.resize(wpr, 0);
         for k in 0..rows {
-            for (n, s) in colsum.iter_mut().enumerate() {
+            for (n, s) in self.colsum.iter_mut().enumerate() {
                 *s += packed[k * wpr + n] as i64;
             }
         }
 
-        let mut out = vec![0i32; lanes * wpr];
         for m in 0..lanes {
             let urow = &u[m * rows..(m + 1) * rows];
             for n in 0..wpr {
@@ -220,11 +345,10 @@ impl ComputeEngine {
                     -self.params.adc.quantize(-noisy, full_scale)
                 };
                 // Electrical-domain offset correction.
-                let v = digit as i64 - OFFSET as i64 * colsum[n];
+                let v = digit as i64 - OFFSET as i64 * self.colsum[n];
                 out[m * wpr + n] = v.clamp(i32::MIN as i64, i32::MAX as i64) as i32;
             }
         }
-        out
     }
 }
 
@@ -325,6 +449,78 @@ mod tests {
         assert!(array.energy.adc_j > 0.0);
         assert!(array.energy.laser_j > 0.0);
         assert!(array.energy.static_j > 0.0);
+    }
+
+    #[test]
+    fn compute_cycle_into_matches_allocating_path() {
+        let (mut a1, u, _) = rand_setup(11, 8);
+        let mut a2 = a1.clone();
+        let mut e1 = ComputeEngine::ideal();
+        let mut e2 = ComputeEngine::ideal();
+        let alloc = e1.compute_cycle(&mut a1, &u, 8).unwrap();
+        let mut out = vec![i32::MAX; 8 * 32];
+        e2.compute_cycle_into(&mut a2, &u, 8, &mut out).unwrap();
+        assert_eq!(alloc, out);
+        assert_eq!(a1.cycles.compute, a2.cycles.compute);
+        assert_eq!(a1.energy.modulator_j, a2.energy.modulator_j);
+        assert_eq!(a1.energy.adc_j, a2.energy.adc_j);
+        assert_eq!(a1.energy.laser_j, a2.energy.laser_j);
+    }
+
+    #[test]
+    fn compute_block_matches_per_cycle_results_and_cycle_counts() {
+        let (mut a1, _, _) = rand_setup(12, 1);
+        let mut a2 = a1.clone();
+        let mut rng = Prng::new(13);
+        let lane_counts = [3usize, 52, 1, 7];
+        let total: usize = lane_counts.iter().sum();
+        let u: Vec<u8> = (0..total * 256).map(|_| rng.next_u8()).collect();
+
+        // Per-cycle reference.
+        let mut e1 = ComputeEngine::ideal();
+        let mut expect = Vec::new();
+        let mut off = 0;
+        for &lanes in &lane_counts {
+            expect.extend(
+                e1.compute_cycle(&mut a1, &u[off..off + lanes * 256], lanes).unwrap(),
+            );
+            off += lanes * 256;
+        }
+
+        // Block path: same bits, same cycle counts, one batched charge.
+        let mut e2 = ComputeEngine::ideal();
+        let mut out = vec![0i32; total * 32];
+        e2.compute_block_into(&mut a2, &u, &lane_counts, &mut out).unwrap();
+        assert_eq!(out, expect);
+        assert_eq!(a2.cycles.compute, 4);
+        assert_eq!(a1.cycles.compute, a2.cycles.compute);
+        assert_eq!(e1.stats.cycles, e2.stats.cycles);
+        assert_eq!(e1.stats.macs, e2.stats.macs);
+        assert_eq!(e1.stats.ops, e2.stats.ops);
+        // Energy: every batched charge is linear in lanes, so each term
+        // equals its per-cycle sum up to f64 rounding.
+        for (name, a, b) in [
+            ("modulator", a1.energy.modulator_j, a2.energy.modulator_j),
+            ("adc", a1.energy.adc_j, a2.energy.adc_j),
+            ("laser", a1.energy.laser_j, a2.energy.laser_j),
+            ("static", a1.energy.static_j, a2.energy.static_j),
+        ] {
+            let rel = (a - b).abs() / a;
+            assert!(rel < 1e-12, "{name} energy diverged by {rel}");
+        }
+    }
+
+    #[test]
+    fn compute_block_rejects_short_buffers_but_charges_completed_cycles() {
+        let (mut array, _, _) = rand_setup(14, 1);
+        let mut eng = ComputeEngine::ideal();
+        let u = vec![128u8; 2 * 256];
+        let mut out = vec![0i32; 2 * 32];
+        // Second cycle's codes run past the buffer.
+        let err = eng.compute_block_into(&mut array, &u, &[1, 4], &mut out);
+        assert!(err.is_err());
+        assert_eq!(array.cycles.compute, 1, "first cycle must still be charged");
+        assert_eq!(eng.stats.cycles, 1);
     }
 
     #[test]

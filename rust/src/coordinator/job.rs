@@ -1,16 +1,19 @@
 //! Work items exchanged between the leader and the shard workers.
 //!
 //! The scheduling unit is a [`PlanBatch`]: a chunk of stored images from
-//! one [`crate::mttkrp::plan::TilePlan`] group, plus a shared handle on
-//! the group's streamed lane blocks.  Every image in a batch shares one
+//! one [`crate::mttkrp::plan::TilePlan`] group.  Since the arena-backed
+//! plan split (DESIGN.md §7), a batch is *indices into a shared plan* —
+//! the group index plus an image range — and carries the plan itself as
+//! two `Arc` handles (`TilePlan` clones are O(1)), so submission copies no
+//! images and no lane blocks.  Every image in a batch shares one
 //! stored-operand block (the group's shard key — a dense contraction
 //! block or a sparse factor J-block), so a worker streams one quantized
 //! operand slice against the whole batch: the §V.B compute/write
 //! interleave amortization that makes reconfiguration writes cheap at
-//! scale (see `DESIGN.md` §10).
+//! scale (see `DESIGN.md` §11).
 
-use crate::mttkrp::plan::{LaneBlock, PlanImage};
-use std::sync::Arc;
+use crate::mttkrp::plan::TilePlan;
+use std::ops::Range;
 
 /// A chunk of one plan group's images, addressed to one shard.
 ///
@@ -29,13 +32,14 @@ pub struct PlanBatch {
     /// Plan-order index of the first image in this chunk (the leader
     /// reduces partials in plan order, so results are deterministic).
     pub img0: usize,
-    /// The stored images to execute against the shared streams.
-    pub images: Vec<PlanImage>,
-    /// The group's streamed lane blocks, shared by every chunk of the
-    /// group.
-    pub streams: Arc<Vec<LaneBlock>>,
-    /// Output rows of the plan (each partial is `out_rows * r_cnt`).
-    pub out_rows: usize,
+    /// Index of the plan group this batch executes.
+    pub group: usize,
+    /// The images to execute (indices into the group's image list),
+    /// streamed against the group's shared lane blocks.
+    pub images: Range<usize>,
+    /// The shared plan (shape + arena handles; cloning is two refcount
+    /// bumps, no payload copies).
+    pub plan: TilePlan,
 }
 
 impl PlanBatch {
@@ -76,53 +80,53 @@ pub struct BatchResult {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::fixed::encode_offset;
+    use crate::mttkrp::plan::DensePlanner;
+    use crate::tensor::Matrix;
+    use crate::util::prng::Prng;
+    use std::sync::Arc;
 
     #[test]
-    fn batch_carries_consistent_plan_metadata() {
-        let streams = Arc::new(vec![LaneBlock {
-            codes: vec![encode_offset(0); 2 * 256],
-            x_scales: vec![1.0; 2],
-            targets: vec![0, 3],
-            scale_vec: None,
-            useful_rows: 4,
-        }]);
-        let images: Vec<PlanImage> = (0..3)
-            .map(|rb| PlanImage {
-                image: vec![0; 256 * 32],
-                w_scales: vec![1.0; 32],
-                r0: rb * 32,
-                r_cnt: 32,
-            })
-            .collect();
+    fn batch_addresses_shared_plan_without_copying() {
+        // R = 96 -> 3 rank-block images in the single K-block group.
+        let mut rng = Prng::new(1);
+        let unf = Matrix::randn(4, 200, &mut rng);
+        let krp = Matrix::randn(200, 96, &mut rng);
+        let plan = DensePlanner::new(256, 32, 52).plan_unfolded(&unf, &krp).unwrap();
+
         let b = PlanBatch {
             req_id: 1,
             shard: 1,
-            key: 5,
-            img0: 6,
-            images,
-            streams: Arc::clone(&streams),
-            out_rows: 4,
+            key: 0,
+            img0: 1,
+            group: 0,
+            images: 1..3,
+            plan: plan.clone(),
         };
-        assert_eq!(b.len(), 3);
+        assert_eq!(b.len(), 2);
         assert!(!b.is_empty());
-        assert_eq!(b.streams[0].lanes(), 2);
-        for (k, img) in b.images.iter().enumerate() {
-            assert_eq!(img.r0, k * 32);
-            assert_eq!(img.image.len(), 256 * 32);
+        // The batch shares the plan's buffers — no payload duplication.
+        assert!(Arc::ptr_eq(&b.plan.shape, &plan.shape));
+        assert!(Arc::ptr_eq(&b.plan.arena, &plan.arena));
+        let group = &b.plan.groups[b.group];
+        for idx in b.images.clone() {
+            assert_eq!(group.images[idx].r0, idx * 32);
         }
     }
 
     #[test]
     fn empty_batch_reports_empty() {
+        let mut rng = Prng::new(2);
+        let unf = Matrix::randn(4, 8, &mut rng);
+        let krp = Matrix::randn(8, 4, &mut rng);
+        let plan = DensePlanner::new(256, 32, 52).plan_unfolded(&unf, &krp).unwrap();
         let b = PlanBatch {
             req_id: 0,
             shard: 0,
             key: 0,
             img0: 0,
-            images: Vec::new(),
-            streams: Arc::new(Vec::new()),
-            out_rows: 1,
+            group: 0,
+            images: 0..0,
+            plan,
         };
         assert!(b.is_empty());
         assert_eq!(b.len(), 0);

@@ -17,7 +17,9 @@
 //!   whole `TilePlan` (quantized images + lane codes, roughly the operand
 //!   size in u8) is materialized before submission starts — the price of
 //!   an explicit IR, paid back by quantizing each operand slice exactly
-//!   once instead of once per worker batch;
+//!   once instead of once per worker batch.  Batches themselves are
+//!   indices into the shared arena-backed plan (two `Arc` bumps each), so
+//!   submission copies no payloads;
 //! * partials are buffered and reduced in plan order through the same
 //!   [`run_image_into`]/[`fold_partial`] contract as
 //!   [`crate::mttkrp::plan::execute_plan`], so the f32 result is
@@ -27,10 +29,11 @@
 use super::job::{BatchResult, PlanBatch, PlanPartial};
 use super::metrics::Metrics;
 use crate::cpd::backend::MttkrpBackend;
+use crate::mttkrp::cache::{DensePlanCache, SparsePlanCache};
 use crate::mttkrp::pipeline::TileExecutor;
 use crate::mttkrp::plan::{
-    fold_partial, run_image_into, DensePlanner, PlanGroup, SparseSlicePlanner,
-    TilePlan,
+    fold_partial, run_image_into, DensePlanner, SparseSlicePlanner, TilePlan,
+    TileScratch,
 };
 use crate::mttkrp::MttkrpStats;
 use crate::perfmodel::{PerfModel, Workload};
@@ -213,29 +216,34 @@ impl Coordinator {
             let shared = Arc::clone(&shared);
             let result_tx: Sender<WorkerMsg> = result_tx.clone();
             let metrics = Arc::clone(&metrics);
-            handles.push(std::thread::spawn(move || loop {
-                let (batch, stolen) = match next_batch(&shared, widx, steal) {
-                    Some(x) => x,
-                    None => break,
-                };
-                if stolen {
-                    metrics.add(&metrics.steals, 1);
-                    metrics.add(&metrics.shard(widx).steals, 1);
-                }
-                let req_id = batch.req_id;
-                let images = batch.len();
-                match run_batch(&mut exec, &batch, widx, &metrics) {
-                    Ok(res) => {
-                        if result_tx.send(WorkerMsg::Done(res)).is_err() {
-                            break;
-                        }
+            handles.push(std::thread::spawn(move || {
+                // Worker-lifetime tile scratch: grown on the first batch,
+                // then every streamed cycle is allocation-free.
+                let mut scratch = TileScratch::default();
+                loop {
+                    let (batch, stolen) = match next_batch(&shared, widx, steal) {
+                        Some(x) => x,
+                        None => break,
+                    };
+                    if stolen {
+                        metrics.add(&metrics.steals, 1);
+                        metrics.add(&metrics.shard(widx).steals, 1);
                     }
-                    Err(e) => {
-                        let _ = result_tx.send(WorkerMsg::Failed {
-                            req_id,
-                            images,
-                            error: e.to_string(),
-                        });
+                    let req_id = batch.req_id;
+                    let images = batch.len();
+                    match run_batch(&mut exec, &batch, widx, &metrics, &mut scratch) {
+                        Ok(res) => {
+                            if result_tx.send(WorkerMsg::Done(res)).is_err() {
+                                break;
+                            }
+                        }
+                        Err(e) => {
+                            let _ = result_tx.send(WorkerMsg::Failed {
+                                req_id,
+                                images,
+                                error: e.to_string(),
+                            });
+                        }
                     }
                 }
             }));
@@ -287,9 +295,10 @@ impl Coordinator {
     }
 
     /// Execute a [`TilePlan`] across the pool: chunk its groups into
-    /// shard-addressed batches, stream them under backpressure, and reduce
-    /// the partials in plan order.
-    pub fn execute_plan(&mut self, plan: TilePlan) -> Result<Matrix> {
+    /// shard-addressed batches (indices into the shared arena-backed
+    /// plan — no payload copies), stream them under backpressure, and
+    /// reduce the partials in plan order.
+    pub fn execute_plan(&mut self, plan: &TilePlan) -> Result<Matrix> {
         plan.validate()?;
         if plan.rows != self.rows || plan.wpr != self.wpr {
             return Err(Error::Coordinator(format!(
@@ -309,15 +318,13 @@ impl Coordinator {
         let total_images = plan.total_images();
 
         // Chunk each group's images into batches homed on the group's
-        // shard (shard = stored-image key % workers); the group's streams
-        // are shared by every chunk via Arc.
+        // shard (shard = stored-image key % workers); every batch shares
+        // the plan's shape + arena via two Arc bumps.
         let mut batches: VecDeque<PlanBatch> = VecDeque::new();
         let mut img_base = 0usize;
-        for group in plan.groups {
-            let PlanGroup { key, images, streams } = group;
-            let n = images.len();
-            let streams = Arc::new(streams);
-            let mut images = images.into_iter();
+        for (gi, group) in plan.groups.iter().enumerate() {
+            let key = group.key;
+            let n = group.images.len();
             let mut off = 0usize;
             while off < n {
                 let take = self.cfg.batch_size.min(n - off);
@@ -326,9 +333,9 @@ impl Coordinator {
                     shard: key % self.cfg.workers,
                     key,
                     img0: img_base + off,
-                    images: images.by_ref().take(take).collect(),
-                    streams: Arc::clone(&streams),
-                    out_rows,
+                    group: gi,
+                    images: off..off + take,
+                    plan: plan.clone(),
                 });
                 off += take;
             }
@@ -413,11 +420,20 @@ impl Coordinator {
         Ok(out)
     }
 
+    /// A dense planner matching the pool's tile geometry.
+    pub fn dense_planner(&self) -> DensePlanner {
+        DensePlanner::new(self.rows, self.wpr, self.lanes)
+    }
+
+    /// A sparse slice planner matching the pool's tile geometry.
+    pub fn sparse_planner(&self) -> SparseSlicePlanner {
+        SparseSlicePlanner::new(self.rows, self.wpr, self.lanes)
+    }
+
     /// Distributed quantized MTTKRP: `unf [I, K] @ krp [K, R]`.
     pub fn mttkrp_unfolded(&mut self, unf: &Matrix, krp: &Matrix) -> Result<Matrix> {
-        let planner = DensePlanner::new(self.rows, self.wpr, self.lanes);
-        let plan = planner.plan_unfolded(unf, krp)?;
-        self.execute_plan(plan)
+        let plan = self.dense_planner().plan_unfolded(unf, krp)?;
+        self.execute_plan(&plan)
     }
 
     /// Distributed MTTKRP of a dense tensor along `mode`.
@@ -441,9 +457,8 @@ impl Coordinator {
         factors: &[Matrix],
         mode: usize,
     ) -> Result<Matrix> {
-        let planner = SparseSlicePlanner::new(self.rows, self.wpr, self.lanes);
-        let plan = planner.plan(x, factors, mode)?;
-        self.execute_plan(plan)
+        let plan = self.sparse_planner().plan(x, factors, mode)?;
+        self.execute_plan(&plan)
     }
 
     /// Gracefully stop the pool (also done on Drop).
@@ -468,28 +483,33 @@ impl Drop for Coordinator {
 /// Worker body for one batch: run every image of the batch through the
 /// shared [`run_image_into`] contract, then flush the realised cycle/MAC
 /// counters into the global and per-shard metrics (reconfiguration writes
-/// and streamed cycles recorded separately).
+/// and streamed cycles recorded separately).  The tile scratch is
+/// worker-lifetime; only the per-image partial (the result payload shipped
+/// to the leader) is allocated here.
 fn run_batch<E: TileExecutor>(
     exec: &mut E,
     batch: &PlanBatch,
     worker: usize,
     metrics: &Metrics,
+    scratch: &mut TileScratch,
 ) -> Result<BatchResult> {
-    let rows = exec.rows();
-    let wpr = exec.words_per_row();
+    let shape = &*batch.plan.shape;
+    let arena = &*batch.plan.arena;
+    let group = &shape.groups[batch.group];
     let mut stats = MttkrpStats::default();
     let mut partials = Vec::with_capacity(batch.len());
     let mut failed: Option<Error> = None;
-    for (k, img) in batch.images.iter().enumerate() {
-        let mut partial = vec![0f32; batch.out_rows * img.r_cnt];
+    for (k, idx) in batch.images.clone().enumerate() {
+        let img = &group.images[idx];
+        let mut partial = vec![0f32; shape.out_rows * img.r_cnt];
         match run_image_into(
             exec,
+            shape,
+            arena,
             img,
-            &batch.streams,
-            rows,
-            wpr,
-            batch.out_rows,
+            &group.streams,
             &mut partial,
+            scratch,
             &mut stats,
         ) {
             Ok(()) => partials.push(PlanPartial {
@@ -529,24 +549,31 @@ fn run_batch<E: TileExecutor>(
 
 /// A [`MttkrpBackend`] running dense CP-ALS MTTKRPs through the
 /// coordinator — the default backend for multi-array CP-ALS (see
-/// `cpd::backend`).
+/// `cpd::backend`).  Holds a per-mode [`DensePlanCache`]: ALS iterations
+/// 2..N skip unfolding and stream quantization entirely, requantizing only
+/// the KRP images in place before each distributed execution.
 pub struct CoordinatedBackend<'a> {
-    /// The decomposition target.
-    pub tensor: &'a DenseTensor,
+    /// The decomposition target.  Private: the plan cache is keyed to this
+    /// tensor, so it must not be swapped under a warm cache.
+    tensor: &'a DenseTensor,
     /// The worker pool (persistent across ALS sweeps).
     pub pool: Coordinator,
+    /// Per-mode plan cache (keyed to `tensor`).
+    cache: DensePlanCache,
 }
 
 impl<'a> CoordinatedBackend<'a> {
     /// Wrap an existing pool.
     pub fn new(tensor: &'a DenseTensor, pool: Coordinator) -> Self {
-        CoordinatedBackend { tensor, pool }
+        let cache = DensePlanCache::new(pool.dense_planner(), tensor.ndim());
+        CoordinatedBackend { tensor, pool, cache }
     }
 }
 
 impl MttkrpBackend for CoordinatedBackend<'_> {
     fn mttkrp(&mut self, factors: &[Matrix], mode: usize) -> Result<Matrix> {
-        self.pool.mttkrp(self.tensor, factors, mode)
+        let plan = self.cache.plan_mttkrp(self.tensor, factors, mode)?;
+        self.pool.execute_plan(plan)
     }
 
     fn shape(&self) -> &[usize] {
@@ -565,24 +592,32 @@ impl MttkrpBackend for CoordinatedBackend<'_> {
 
 /// A [`MttkrpBackend`] running *sparse* CP-ALS MTTKRPs through the
 /// coordinator: every spMTTKRP is lowered to a slice-wise [`TilePlan`] and
-/// sharded across the pool by stored factor block.
+/// sharded across the pool by stored factor block.  Holds a per-mode
+/// [`SparsePlanCache`]: ALS iterations 2..N skip the slice mapping and
+/// fiber quantization, refilling only the stored factor images and CP2
+/// scale vectors in place.
 pub struct CoordinatedSparseBackend<'a> {
-    /// The COO decomposition target.
-    pub tensor: &'a CooTensor,
+    /// The COO decomposition target.  Private: the plan cache is keyed to
+    /// this tensor, so it must not be swapped under a warm cache.
+    tensor: &'a CooTensor,
     /// The worker pool (persistent across ALS sweeps).
     pub pool: Coordinator,
+    /// Per-mode plan cache (keyed to `tensor`).
+    cache: SparsePlanCache,
 }
 
 impl<'a> CoordinatedSparseBackend<'a> {
     /// Wrap an existing pool.
     pub fn new(tensor: &'a CooTensor, pool: Coordinator) -> Self {
-        CoordinatedSparseBackend { tensor, pool }
+        let cache = SparsePlanCache::new(pool.sparse_planner(), tensor.ndim());
+        CoordinatedSparseBackend { tensor, pool, cache }
     }
 }
 
 impl MttkrpBackend for CoordinatedSparseBackend<'_> {
     fn mttkrp(&mut self, factors: &[Matrix], mode: usize) -> Result<Matrix> {
-        self.pool.sparse_mttkrp(self.tensor, factors, mode)
+        let plan = self.cache.plan_mttkrp(self.tensor, factors, mode)?;
+        self.pool.execute_plan(plan)
     }
 
     fn shape(&self) -> &[usize] {
@@ -700,8 +735,8 @@ mod tests {
             std::thread::sleep(self.delay);
             self.inner.load_image(image)
         }
-        fn compute(&mut self, u: &[u8], lanes: usize) -> Result<Vec<i32>> {
-            self.inner.compute(u, lanes)
+        fn compute_into(&mut self, u: &[u8], lanes: usize, out: &mut [i32]) -> Result<()> {
+            self.inner.compute_into(u, lanes, out)
         }
         fn cycles(&self) -> crate::psram::CycleLedger {
             self.inner.cycles()
@@ -835,7 +870,7 @@ mod tests {
             fn load_image(&mut self, _: &[i8]) -> Result<()> {
                 Err(Error::Runtime("injected fault".to_string()))
             }
-            fn compute(&mut self, _: &[u8], _: usize) -> Result<Vec<i32>> {
+            fn compute_into(&mut self, _: &[u8], _: usize, _: &mut [i32]) -> Result<()> {
                 unreachable!()
             }
             fn cycles(&self) -> crate::psram::CycleLedger {
@@ -907,6 +942,6 @@ mod tests {
         let unf = Matrix::randn(10, 20, &mut rng);
         let krp = Matrix::randn(20, 4, &mut rng);
         let plan = DensePlanner::new(128, 16, 52).plan_unfolded(&unf, &krp).unwrap();
-        assert!(pool.execute_plan(plan).is_err());
+        assert!(pool.execute_plan(&plan).is_err());
     }
 }

@@ -80,8 +80,13 @@ impl CpAls {
         }
         let mut lambda = vec![1f32; r];
 
-        // Cache Gram matrices of every factor.
+        // Cache Gram matrices of every factor; V and GH are reusable R×R
+        // Hadamard accumulators — the per-iteration `g.clone()` churn
+        // (nmodes + 1 fresh matrices per sweep) is gone, and each solved
+        // factor's Gram is recomputed in place (`gram_into`).
         let mut grams: Vec<Matrix> = factors.iter().map(|f| f.gram()).collect();
+        let mut v = Matrix::zeros(r, r);
+        let mut gh = Matrix::zeros(r, r);
         let x_norm_sq = backend.norm_sq();
 
         let mut fit_history = Vec::new();
@@ -92,28 +97,33 @@ impl CpAls {
         for _sweep in 0..self.config.max_iters {
             let mut last_m: Option<Matrix> = None;
             for mode in 0..nmodes {
-                // V = Hadamard of all other grams (R x R, SPD-ish).
-                let mut v: Option<Matrix> = None;
+                // V = Hadamard of all other grams (R x R, SPD-ish),
+                // accumulated in place in ascending mode order (the same
+                // f32 product order as the allocating fold it replaced).
+                let mut first = true;
                 for (m, g) in grams.iter().enumerate() {
                     if m == mode {
                         continue;
                     }
-                    v = Some(match v {
-                        None => g.clone(),
-                        Some(acc) => acc.hadamard(g)?,
-                    });
+                    if first {
+                        v.copy_from(g)?;
+                        first = false;
+                    } else {
+                        v.hadamard_assign(g)?;
+                    }
                 }
-                let v = v.expect("nmodes >= 2");
+                debug_assert!(!first, "nmodes >= 2");
 
                 // M = MTTKRP; F = M V⁻¹  (solve V Fᵀ = Mᵀ).
                 let m = backend.mttkrp(&factors, mode)?;
                 let ft = v.solve_spd(&m.transpose())?;
                 let mut f = ft.transpose();
 
-                // Normalise columns; weights move into lambda.
+                // Normalise columns; weights move into lambda.  The mode's
+                // cached Gram is updated in place right after the solve.
                 let norms = f.normalize_columns();
                 lambda.copy_from_slice(&norms);
-                grams[mode] = f.gram();
+                f.gram_into(&mut grams[mode])?;
                 factors[mode] = f;
                 if mode == nmodes - 1 {
                     last_m = Some(m);
@@ -122,14 +132,11 @@ impl CpAls {
             iters += 1;
 
             // Fit via the identities (no materialisation).
-            let mut gh: Option<Matrix> = None;
-            for g in &grams {
-                gh = Some(match gh {
-                    None => g.clone(),
-                    Some(acc) => acc.hadamard(g)?,
-                });
+            gh.copy_from(&grams[0])?;
+            for g in &grams[1..] {
+                gh.hadamard_assign(g)?;
             }
-            let model_sq = cp_norm_sq(&lambda, &gh.unwrap());
+            let model_sq = cp_norm_sq(&lambda, &gh);
             let inner = cp_inner(
                 &last_m.expect("at least one mode"),
                 &factors[nmodes - 1],

@@ -8,7 +8,9 @@
 //! unless `--backend` says otherwise.
 
 pub use crate::coordinator::pool::{CoordinatedBackend, CoordinatedSparseBackend};
-use crate::mttkrp::pipeline::{PsramPipeline, TileExecutor};
+use crate::mttkrp::cache::DensePlanCache;
+use crate::mttkrp::pipeline::TileExecutor;
+use crate::mttkrp::plan::{execute_plan_into, DensePlanner, PlanScratch};
 use crate::mttkrp::{dense_mttkrp, sparse_mttkrp, MttkrpStats};
 use crate::tensor::{CooTensor, DenseTensor, Matrix};
 use crate::util::error::Result;
@@ -78,30 +80,41 @@ impl MttkrpBackend for SparseBackend<'_> {
 }
 
 /// pSRAM-array backend: quantized MTTKRP through the tiled pipeline on any
-/// [`TileExecutor`] (analog simulator, CPU integer, or PJRT).
+/// [`TileExecutor`] (analog simulator, CPU integer, or PJRT).  Holds a
+/// per-mode plan cache and reusable execution scratch, so ALS iterations
+/// 2..N only requantize the KRP images and run the zero-allocation
+/// `execute_plan_into` hot path.
 pub struct PsramBackend<'a, E: TileExecutor> {
-    pub tensor: &'a DenseTensor,
+    /// The decomposition target.  Private: the plan cache is keyed to this
+    /// tensor, so it must not be swapped under a warm cache.
+    tensor: &'a DenseTensor,
     pub exec: E,
     /// Accumulated pipeline statistics across all mttkrp calls.
     pub stats: MttkrpStats,
+    /// Per-mode plan cache (keyed to `tensor`).
+    cache: DensePlanCache,
+    /// Reusable execution scratch (partials + tile block buffer).
+    scratch: PlanScratch,
 }
 
 impl<'a, E: TileExecutor> PsramBackend<'a, E> {
     pub fn new(tensor: &'a DenseTensor, exec: E) -> Self {
-        PsramBackend { tensor, exec, stats: MttkrpStats::default() }
+        let cache = DensePlanCache::new(DensePlanner::for_executor(&exec), tensor.ndim());
+        PsramBackend {
+            tensor,
+            exec,
+            stats: MttkrpStats::default(),
+            cache,
+            scratch: PlanScratch::default(),
+        }
     }
 }
 
 impl<E: TileExecutor> MttkrpBackend for PsramBackend<'_, E> {
     fn mttkrp(&mut self, factors: &[Matrix], mode: usize) -> Result<Matrix> {
-        let mut pipe = PsramPipeline::new(&mut self.exec);
-        let out = pipe.mttkrp(self.tensor, factors, mode)?;
-        let s = pipe.stats;
-        self.stats.images += s.images;
-        self.stats.compute_cycles += s.compute_cycles;
-        self.stats.write_cycles += s.write_cycles;
-        self.stats.useful_macs += s.useful_macs;
-        self.stats.raw_macs += s.raw_macs;
+        let plan = self.cache.plan_mttkrp(self.tensor, factors, mode)?;
+        let mut out = Matrix::zeros(plan.out_rows, plan.out_cols);
+        execute_plan_into(&mut self.exec, plan, &mut self.scratch, &mut self.stats, &mut out)?;
         Ok(out)
     }
 

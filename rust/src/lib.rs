@@ -16,9 +16,11 @@
 //!   and the small dense linear algebra CP-ALS needs.
 //! * [`mttkrp`] — the paper's computational primitives CP1/CP2/CP3, the
 //!   tile-plan IR (`mttkrp::plan`: planners lower dense/sparse workloads
-//!   into backend-agnostic `TilePlan`s, one `execute_plan` drives any
-//!   executor), and CPU reference implementations (dense + sparse) used
-//!   as baselines.
+//!   into backend-agnostic `TilePlan`s — an immutable `PlanShape` plus an
+//!   arena-backed payload — and one `execute_plan`/`execute_plan_into`
+//!   drives any executor with zero steady-state allocations), per-mode
+//!   plan caches for CP-ALS (`mttkrp::cache`), and CPU reference
+//!   implementations (dense + sparse) used as baselines.
 //! * [`cpd`] — CP-ALS tensor decomposition with a pluggable MTTKRP backend.
 //! * [`perfmodel`] — the paper's predictive performance model (Fig. 5, the
 //!   17 PetaOps headline) plus sweep drivers.

@@ -290,7 +290,7 @@ fn cmd_cpd(args: &Args) -> Result<()> {
                     ))
                 })?
             };
-            let mut backend = CoordinatedBackend { tensor: &x, pool };
+            let mut backend = CoordinatedBackend::new(&x, pool);
             let r = als.run(&mut backend)?;
             print_pool_metrics(&backend.pool);
             r

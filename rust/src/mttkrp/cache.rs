@@ -1,0 +1,228 @@
+//! Per-mode plan caches for ALS-style solvers.
+//!
+//! CP-ALS calls `MTTKRP(X, factors, mode)` for every mode of every sweep,
+//! but per mode only the *factors* change between iterations — the tensor
+//! (hence its unfoldings, its sparsity pattern, and every streamed lane
+//! code the planners quantize from it) is fixed.  The caches here exploit
+//! the [`PlanShape`]/[`PlanArena`] split (DESIGN.md §7): the first call
+//! for a mode pays for planning (unfolding, slice maps, stream
+//! quantization, arena layout); every later call only requantizes the
+//! stored-operand payloads in place via `replan_into` and hands back the
+//! same arena-backed [`TilePlan`].  Results are bit-identical to planning
+//! from scratch — `replan_into` runs the same quantizers over the same
+//! blocks — so cached CP-ALS trajectories equal uncached ones exactly
+//! (pinned in `tests/stack_integration.rs`).
+//!
+//! Contract: a cache instance belongs to **one tensor** (the backend that
+//! owns it).  Shapes are invalidated automatically when the factor
+//! dimensions stop matching (e.g. a rank change); feeding a *different*
+//! tensor of identical dimensions is undetectable and yields stale
+//! streams — don't share caches across tensors.
+
+use super::plan::{DensePlanner, SparseSlicePlanner, TilePlan};
+use crate::tensor::{krp_all_but, CooTensor, DenseTensor, Matrix};
+use crate::util::error::{Error, Result};
+
+/// Per-mode cache of dense MTTKRP tile plans.
+#[derive(Debug)]
+pub struct DensePlanCache {
+    planner: DensePlanner,
+    modes: Vec<Option<TilePlan>>,
+}
+
+impl DensePlanCache {
+    /// An empty cache for an `nmodes`-way tensor planned with `planner`.
+    pub fn new(planner: DensePlanner, nmodes: usize) -> Self {
+        DensePlanCache { planner, modes: (0..nmodes).map(|_| None).collect() }
+    }
+
+    /// The plan for `MTTKRP(x, factors, mode)`: a full plan on the first
+    /// call per mode (or after a shape change), an in-place stored-operand
+    /// requantization afterwards — iterations 2..N never unfold the
+    /// tensor or requantize its streamed codes.
+    pub fn plan_mttkrp(
+        &mut self,
+        x: &DenseTensor,
+        factors: &[Matrix],
+        mode: usize,
+    ) -> Result<&TilePlan> {
+        if mode >= self.modes.len() {
+            return Err(Error::shape(format!(
+                "mode {mode} of {}-mode cache",
+                self.modes.len()
+            )));
+        }
+        let krp = krp_all_but(factors, mode)?;
+        let reusable = match &self.modes[mode] {
+            Some(plan) => {
+                plan.stored_len() == krp.rows() && plan.out_cols == krp.cols()
+            }
+            None => false,
+        };
+        if reusable {
+            let plan = self.modes[mode].as_mut().expect("checked above");
+            // The unfolding is unchanged by contract, so only the KRP
+            // images are requantized (`unf = None`).
+            self.planner.replan_into(None, &krp, plan)?;
+        } else {
+            let unf = x.unfold(mode)?;
+            let plan = self.planner.plan_unfolded(&unf, &krp)?;
+            self.modes[mode] = Some(plan);
+        }
+        Ok(self.modes[mode].as_ref().expect("just planned"))
+    }
+
+    /// Drop every cached plan (e.g. when switching tensors).
+    pub fn clear(&mut self) {
+        for m in self.modes.iter_mut() {
+            *m = None;
+        }
+    }
+}
+
+/// Per-mode cache of sparse (COO) MTTKRP tile plans.
+#[derive(Debug)]
+pub struct SparsePlanCache {
+    planner: SparseSlicePlanner,
+    modes: Vec<Option<TilePlan>>,
+}
+
+impl SparsePlanCache {
+    /// An empty cache for an `nmodes`-way tensor planned with `planner`.
+    pub fn new(planner: SparseSlicePlanner, nmodes: usize) -> Self {
+        SparsePlanCache { planner, modes: (0..nmodes).map(|_| None).collect() }
+    }
+
+    /// The plan for the sparse `MTTKRP(x, factors, mode)`: a full plan
+    /// (slice maps + fiber quantization) on the first call per mode, an
+    /// in-place refill of the stored factor images and CP2 scale vectors
+    /// afterwards — the fiber codes depend only on the tensor, which
+    /// CP-ALS never changes.
+    pub fn plan_mttkrp(
+        &mut self,
+        x: &CooTensor,
+        factors: &[Matrix],
+        mode: usize,
+    ) -> Result<&TilePlan> {
+        if mode >= self.modes.len() {
+            return Err(Error::shape(format!(
+                "mode {mode} of {}-mode cache",
+                self.modes.len()
+            )));
+        }
+        let nd = factors.len();
+        let reusable = match &self.modes[mode] {
+            Some(plan) if nd >= 2 && mode < nd => {
+                let m1 = (0..nd).find(|&m| m != mode).expect("nd >= 2");
+                factors[0].cols() == plan.out_cols
+                    && factors[mode].rows() == plan.out_rows
+                    && factors[m1].rows() == plan.stored_len()
+            }
+            _ => false,
+        };
+        if reusable {
+            let plan = self.modes[mode].as_mut().expect("checked above");
+            self.planner.replan_into(factors, mode, plan)?;
+        } else {
+            let plan = self.planner.plan(x, factors, mode)?;
+            self.modes[mode] = Some(plan);
+        }
+        Ok(self.modes[mode].as_ref().expect("just planned"))
+    }
+
+    /// Drop every cached plan (e.g. when switching tensors).
+    pub fn clear(&mut self) {
+        for m in self.modes.iter_mut() {
+            *m = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mttkrp::pipeline::CpuTileExecutor;
+    use crate::mttkrp::plan::execute_plan;
+    use crate::mttkrp::MttkrpStats;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn dense_cache_reuses_and_matches_fresh_plans() {
+        let mut rng = Prng::new(1);
+        let x = DenseTensor::randn(&[30, 11, 7], &mut rng);
+        let planner = DensePlanner::new(256, 32, 52);
+        let mut cache = DensePlanCache::new(planner, 3);
+
+        for iter in 0..3 {
+            let factors: Vec<Matrix> =
+                [30, 11, 7].iter().map(|&d| Matrix::randn(d, 6, &mut rng)).collect();
+            for mode in 0..3 {
+                let cached = {
+                    let plan = cache.plan_mttkrp(&x, &factors, mode).unwrap();
+                    let mut exec = CpuTileExecutor::paper();
+                    let mut stats = MttkrpStats::default();
+                    execute_plan(&mut exec, plan, &mut stats).unwrap()
+                };
+                let fresh_plan = planner.plan_mttkrp(&x, &factors, mode).unwrap();
+                let mut exec = CpuTileExecutor::paper();
+                let mut stats = MttkrpStats::default();
+                let fresh = execute_plan(&mut exec, &fresh_plan, &mut stats).unwrap();
+                assert_eq!(
+                    cached.data(),
+                    fresh.data(),
+                    "iter {iter} mode {mode} diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_cache_replans_on_rank_change() {
+        let mut rng = Prng::new(2);
+        let x = DenseTensor::randn(&[20, 9, 8], &mut rng);
+        let mut cache = DensePlanCache::new(DensePlanner::new(256, 32, 52), 3);
+        let f5: Vec<Matrix> =
+            [20, 9, 8].iter().map(|&d| Matrix::randn(d, 5, &mut rng)).collect();
+        assert_eq!(cache.plan_mttkrp(&x, &f5, 0).unwrap().out_cols, 5);
+        let f7: Vec<Matrix> =
+            [20, 9, 8].iter().map(|&d| Matrix::randn(d, 7, &mut rng)).collect();
+        assert_eq!(cache.plan_mttkrp(&x, &f7, 0).unwrap().out_cols, 7);
+    }
+
+    #[test]
+    fn sparse_cache_reuses_and_matches_fresh_plans() {
+        let mut rng = Prng::new(3);
+        let shape = [24usize, 520, 10];
+        let x = CooTensor::random(&shape, 800, &mut rng);
+        let planner = SparseSlicePlanner::new(256, 32, 52);
+        let mut cache = SparsePlanCache::new(planner, 3);
+
+        for mode in 0..3 {
+            for _iter in 0..2 {
+                let factors: Vec<Matrix> =
+                    shape.iter().map(|&d| Matrix::randn(d, 16, &mut rng)).collect();
+                let cached = {
+                    let plan = cache.plan_mttkrp(&x, &factors, mode).unwrap();
+                    let mut exec = CpuTileExecutor::paper();
+                    let mut stats = MttkrpStats::default();
+                    execute_plan(&mut exec, plan, &mut stats).unwrap()
+                };
+                let fresh_plan = planner.plan(&x, &factors, mode).unwrap();
+                let mut exec = CpuTileExecutor::paper();
+                let mut stats = MttkrpStats::default();
+                let fresh = execute_plan(&mut exec, &fresh_plan, &mut stats).unwrap();
+                assert_eq!(cached.data(), fresh.data(), "mode {mode} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_mode_rejected() {
+        let mut rng = Prng::new(4);
+        let x = DenseTensor::randn(&[4, 4, 4], &mut rng);
+        let factors: Vec<Matrix> =
+            [4, 4, 4].iter().map(|&d| Matrix::randn(d, 2, &mut rng)).collect();
+        let mut cache = DensePlanCache::new(DensePlanner::new(256, 32, 52), 3);
+        assert!(cache.plan_mttkrp(&x, &factors, 3).is_err());
+    }
+}

@@ -8,9 +8,15 @@
 //!   tensor elements stored in the array (Fig. 4).
 //! * [`plan`] — the tile-plan IR: a backend-agnostic description of a
 //!   tiled MTTKRP (stored images, streamed lane blocks, electrical scale
-//!   vectors, accumulation targets).  [`plan::DensePlanner`] and
-//!   [`plan::SparseSlicePlanner`] lower workloads into plans;
-//!   [`plan::execute_plan`] drives any executor over them (DESIGN.md §6).
+//!   vectors, accumulation targets), split into an immutable
+//!   [`plan::PlanShape`] and an arena-backed [`plan::PlanArena`] payload.
+//!   [`plan::DensePlanner`] and [`plan::SparseSlicePlanner`] lower
+//!   workloads into plans (and requantize cached plans in place via
+//!   `replan_into`); [`plan::execute_plan`] /
+//!   [`plan::execute_plan_into`] drive any executor over them with zero
+//!   steady-state allocations (DESIGN.md §6–7).
+//! * [`cache`] — per-mode plan caches for CP-ALS: iterations 2..N skip
+//!   unfolding, slice mapping, and stream quantization entirely.
 //! * [`pipeline`] — the high-utilisation tiled schedule used for full
 //!   MTTKRPs: the Khatri-Rao block (the *reused* operand) is stored as the
 //!   array image and tensor rows stream over wavelength lanes, so one
@@ -24,19 +30,23 @@
 //! the same schedule can execute on the analog simulator, a pure-CPU
 //! integer reference, or the AOT-compiled Pallas kernel via PJRT.
 
+pub mod cache;
 pub mod mapping;
 pub mod pipeline;
 pub mod plan;
 pub mod reference;
 pub mod sparse_pipeline;
 
+pub use cache::{DensePlanCache, SparsePlanCache};
 pub use pipeline::{
-    quantize_krp_image, quantize_lane_batch, CpuTileExecutor, MttkrpStats,
-    PsramPipeline, TileExecutor,
+    quantize_krp_image, quantize_krp_image_into, quantize_lane_batch,
+    quantize_lane_batch_into, CpuTileExecutor, MttkrpStats, PsramPipeline,
+    TileExecutor,
 };
 pub use plan::{
-    execute_plan, DensePlanner, LaneBlock, PlanGroup, PlanImage,
-    SparseSlicePlanner, TilePlan,
+    execute_plan, execute_plan_into, DensePlanner, LaneBlock, PlanArena,
+    PlanGroup, PlanImage, PlanScratch, PlanShape, SparseSlicePlanner,
+    TilePlan, TileScratch,
 };
 pub use reference::{dense_mttkrp, sparse_mttkrp};
 pub use sparse_pipeline::{SparsePsramBackend, SparsePsramPipeline};

@@ -29,17 +29,26 @@
 //! produce *identical* f32 outputs.
 
 use super::plan::{execute_plan, DensePlanner};
-use crate::compute::ComputeEngine;
+use crate::compute::{walk_compute_block, ComputeEngine};
 use crate::psram::{CycleLedger, EnergyLedger, PsramArray};
 use crate::tensor::{krp_all_but, DenseTensor, Matrix};
 use crate::util::error::{Error, Result};
-use crate::util::fixed::{encode_offset, quant_matmul_i32, quantize_encode_into, quantize_sym};
+use crate::util::fixed::{
+    encode_offset, quant_matmul_i32_into, quantize_encode_into, sym_quantize, sym_scale,
+};
 
 /// Executes one quantized array tile: `out[lanes][wpr] = (u-128) @ image`.
 ///
 /// Implementations: the analog simulator ([`AnalogTileExecutor`]), a pure
 /// CPU integer reference ([`CpuTileExecutor`]), and the PJRT runtime
 /// (`runtime::PjrtTileExecutor`).
+///
+/// The required compute entry point is the allocation-free
+/// [`TileExecutor::compute_into`]; [`TileExecutor::compute`] is a provided
+/// compat wrapper that allocates the result, and
+/// [`TileExecutor::compute_block_into`] streams several cycles in one call
+/// so executors with per-cycle bookkeeping (the analog engine's
+/// cycle/energy ledgers) can charge it once per block.
 pub trait TileExecutor {
     /// Array rows (contraction block size).
     fn rows(&self) -> usize;
@@ -53,9 +62,38 @@ pub trait TileExecutor {
     fn load_image(&mut self, image: &[i8]) -> Result<()>;
 
     /// One compute cycle against the loaded image: `u` is row-major
-    /// `[lanes][rows]` offset-binary codes; returns `[lanes][words_per_row]`
-    /// i32 results.
-    fn compute(&mut self, u: &[u8], lanes: usize) -> Result<Vec<i32>>;
+    /// `[lanes][rows]` offset-binary codes; the `[lanes][words_per_row]`
+    /// i32 results are written into `out` (exactly `lanes * words_per_row`
+    /// long, overwritten).  The steady-state hot path — implementations
+    /// must not allocate.
+    fn compute_into(&mut self, u: &[u8], lanes: usize, out: &mut [i32]) -> Result<()>;
+
+    /// Allocating compat wrapper around [`TileExecutor::compute_into`].
+    fn compute(&mut self, u: &[u8], lanes: usize) -> Result<Vec<i32>> {
+        let mut out = vec![0i32; lanes * self.words_per_row()];
+        self.compute_into(u, lanes, &mut out)?;
+        Ok(out)
+    }
+
+    /// Stream a block of compute cycles against the loaded image: cycle
+    /// `i` reads `lane_counts[i] * rows` codes from `u` and writes
+    /// `lane_counts[i] * words_per_row` results into `out`, both advancing
+    /// contiguously (the shared [`walk_compute_block`] contract).  Results
+    /// are bit-identical to issuing the cycles one by one through
+    /// [`TileExecutor::compute_into`]; executors with per-cycle ledgers
+    /// may charge the whole block at once (see [`AnalogTileExecutor`]).
+    fn compute_block_into(
+        &mut self,
+        u: &[u8],
+        lane_counts: &[usize],
+        out: &mut [i32],
+    ) -> Result<()> {
+        let rows = self.rows();
+        let wpr = self.words_per_row();
+        walk_compute_block(rows, wpr, u, lane_counts, out, |codes, lanes, o| {
+            self.compute_into(codes, lanes, o)
+        })
+    }
 
     /// Cycle ledger snapshot (compute/write/idle) for utilisation metrics.
     fn cycles(&self) -> CycleLedger;
@@ -102,8 +140,19 @@ impl TileExecutor for AnalogTileExecutor {
         self.array.write_image(image)
     }
 
-    fn compute(&mut self, u: &[u8], lanes: usize) -> Result<Vec<i32>> {
-        self.engine.compute_cycle(&mut self.array, u, lanes)
+    fn compute_into(&mut self, u: &[u8], lanes: usize, out: &mut [i32]) -> Result<()> {
+        self.engine.compute_cycle_into(&mut self.array, u, lanes, out)
+    }
+
+    /// Batched override: one ledger/energy charge for the whole block
+    /// instead of one per cycle.
+    fn compute_block_into(
+        &mut self,
+        u: &[u8],
+        lane_counts: &[usize],
+        out: &mut [i32],
+    ) -> Result<()> {
+        self.engine.compute_block_into(&mut self.array, u, lane_counts, out)
     }
 
     fn cycles(&self) -> CycleLedger {
@@ -175,15 +224,19 @@ impl TileExecutor for CpuTileExecutor {
         Ok(())
     }
 
-    fn compute(&mut self, u: &[u8], lanes: usize) -> Result<Vec<i32>> {
+    fn compute_into(&mut self, u: &[u8], lanes: usize, out: &mut [i32]) -> Result<()> {
         if lanes == 0 || lanes > self.max_lanes {
             return Err(Error::shape(format!("lanes {lanes} out of range")));
         }
         if u.len() != lanes * self.rows {
             return Err(Error::shape("input block size mismatch".to_string()));
         }
+        if out.len() != lanes * self.wpr {
+            return Err(Error::shape("output block size mismatch".to_string()));
+        }
         self.ledger.compute += 1;
-        Ok(quant_matmul_i32(u, &self.image, lanes, self.rows, self.wpr))
+        quant_matmul_i32_into(u, &self.image, lanes, self.rows, self.wpr, out);
+        Ok(())
     }
 
     fn cycles(&self) -> CycleLedger {
@@ -247,18 +300,42 @@ pub fn quantize_krp_image(
 ) -> (Vec<i8>, Vec<f32>) {
     let mut image = vec![0i8; rows * wpr];
     let mut w_scales = vec![1f32; r_cnt];
-    let mut col = vec![0f32; k_cnt];
+    quantize_krp_image_into(krp, k0, k_cnt, r0, r_cnt, wpr, &mut image, &mut w_scales);
+    (image, w_scales)
+}
+
+/// Allocation-free [`quantize_krp_image`]: requantizes the tile in place.
+/// `image` must be the zero-padded `rows * wpr` region of the plan arena
+/// (only the `k_cnt × r_cnt` top-left block is overwritten — the padding
+/// was zeroed when the arena was laid out and never changes), `w_scales`
+/// the image's `r_cnt` scale slots.  Bit-identical to the allocating path;
+/// this is what `replan_into` runs every CP-ALS iteration.
+#[allow(clippy::too_many_arguments)]
+pub fn quantize_krp_image_into(
+    krp: &Matrix,
+    k0: usize,
+    k_cnt: usize,
+    r0: usize,
+    r_cnt: usize,
+    wpr: usize,
+    image: &mut [i8],
+    w_scales: &mut [f32],
+) {
+    debug_assert!(image.len() >= k_cnt * wpr);
+    debug_assert_eq!(w_scales.len(), r_cnt);
     for r in 0..r_cnt {
+        // Symmetric int8 per word column: the same `sym_scale`/
+        // `sym_quantize` rule as `quantize_sym`, column-gathered in place.
+        let mut amax = 0f32;
         for k in 0..k_cnt {
-            col[k] = krp.get(k0 + k, r0 + r);
+            amax = amax.max(krp.get(k0 + k, r0 + r).abs());
         }
-        let (cq, cs) = quantize_sym(&col, 8);
-        w_scales[r] = cs;
+        let scale = sym_scale(amax, 127.0);
+        w_scales[r] = scale;
         for k in 0..k_cnt {
-            image[k * wpr + r] = cq[k] as i8;
+            image[k * wpr + r] = sym_quantize(krp.get(k0 + k, r0 + r), scale, 127.0) as i8;
         }
     }
-    (image, w_scales)
 }
 
 /// Quantize one lane batch of the unfolded operand: rows `i0..i0+lane_cnt`
@@ -281,11 +358,32 @@ pub fn quantize_lane_batch(
 ) -> (Vec<u8>, Vec<f32>) {
     let mut u = vec![encode_offset(0); lane_cnt * rows];
     let mut x_scales = vec![1f32; lane_cnt];
+    quantize_lane_batch_into(unf, i0, lane_cnt, k0, k_cnt, rows, &mut u, &mut x_scales);
+    (u, x_scales)
+}
+
+/// Allocation-free [`quantize_lane_batch`]: requantizes the lane codes in
+/// place.  `u` must be the `lane_cnt * rows` code region of the plan arena
+/// (only each lane's `k_cnt` prefix is overwritten — the tail holds the
+/// offset-binary zero code from arena layout and never changes),
+/// `x_scales` the block's `lane_cnt` scale slots.
+#[allow(clippy::too_many_arguments)]
+pub fn quantize_lane_batch_into(
+    unf: &Matrix,
+    i0: usize,
+    lane_cnt: usize,
+    k0: usize,
+    k_cnt: usize,
+    rows: usize,
+    u: &mut [u8],
+    x_scales: &mut [f32],
+) {
+    debug_assert!(u.len() >= lane_cnt * rows);
+    debug_assert_eq!(x_scales.len(), lane_cnt);
     for m in 0..lane_cnt {
         let xr = &unf.row(i0 + m)[k0..k0 + k_cnt];
         x_scales[m] = quantize_encode_into(xr, &mut u[m * rows..m * rows + k_cnt]);
     }
-    (u, x_scales)
 }
 
 /// The tiled MTTKRP pipeline over any [`TileExecutor`].
@@ -354,6 +452,27 @@ mod tests {
                 (e - a).abs() <= bound.max(1e-4),
                 "exact {e} vs quantized {a} (bound {bound})"
             );
+        }
+    }
+
+    #[test]
+    fn krp_image_quantization_matches_quantize_sym() {
+        // The in-place image quantizer must stay bit-identical to the
+        // `quantize_sym` definition it replaced in the hot path.
+        use crate::util::fixed::quantize_sym;
+        let mut rng = Prng::new(77);
+        let krp = Matrix::randn(300, 40, &mut rng);
+        let (image, scales) = quantize_krp_image(&krp, 10, 250, 3, 20, 256, 32);
+        let mut col = vec![0f32; 250];
+        for r in 0..20 {
+            for (k, c) in col.iter_mut().enumerate() {
+                *c = krp.get(10 + k, 3 + r);
+            }
+            let (cq, cs) = quantize_sym(&col, 8);
+            assert_eq!(scales[r], cs, "column {r} scale");
+            for (k, &q) in cq.iter().enumerate() {
+                assert_eq!(image[k * 32 + r], q as i8, "word ({k}, {r})");
+            }
         }
     }
 

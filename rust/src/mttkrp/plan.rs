@@ -20,17 +20,36 @@
 //! `PerfModel::predict_plan` ([`crate::perfmodel`]), which scores a plan's
 //! cycles/reconfigurations/occupancy without running it.
 //!
-//! Plan structure:
+//! ## Memory model: shape / arena split
+//!
+//! A plan is two halves (DESIGN.md §7):
+//!
+//! * [`PlanShape`] — the immutable *structure*: grouping, tile geometry,
+//!   accumulation targets, sparse slice keys, and the arena layout
+//!   (offsets + lengths).  Built once per workload shape.
+//! * [`PlanArena`] — the refillable *payload*: every image's quantized
+//!   `i8` words, every stream's offset-binary `u8` codes, all `f32`
+//!   scales, and the sparse CP2 scale vectors, flattened into four
+//!   contiguous buffers addressed by the shape's handles.
 //!
 //! ```text
-//!  TilePlan
-//!    └─ groups: [PlanGroup]          one per stored-operand block (the
-//!        ├─ key                      shard key: dense K-block / sparse
-//!        ├─ images:  [PlanImage]     J-block); every image in a group is
-//!        └─ streams: [LaneBlock]     streamed against the *same* lane
-//!                                    blocks, so one quantized operand
-//!                                    slice amortizes across all of them.
+//!  TilePlan = Arc<PlanShape> + Arc<PlanArena>       (clone = 2 refcounts)
+//!    shape.groups: [PlanGroup]        one per stored-operand block (the
+//!        ├─ key, stored_rows          shard key: dense K-block / sparse
+//!        ├─ images:  [PlanImage]      J-block); every image in a group is
+//!        └─ streams: [LaneBlock]      streamed against the *same* lane
+//!                                     blocks, so one quantized operand
+//!    arena.images / codes /           slice amortizes across all of them.
+//!          scales / scale_vecs        [`PlanImage`]/[`LaneBlock`] hold
+//!                                     offsets into these buffers.
 //! ```
+//!
+//! Because the payload is arena-backed, `TilePlan` clones are O(1) (the
+//! coordinator ships plan handles, not copied vectors), and
+//! `DensePlanner::replan_into` / `SparseSlicePlanner::replan_into`
+//! requantize a cached plan **in place** — the CP-ALS per-mode plan cache
+//! ([`super::cache`]) runs iterations 2..N without planning, unfolding, or
+//! re-quantizing the streamed operand.
 //!
 //! Accumulation contract (shared by single-array and coordinator
 //! execution): each `(group, image)` accumulates its streams into a fresh
@@ -38,9 +57,13 @@
 //! plan order ([`run_image_into`] + [`fold_partial`]).  Because the same
 //! two functions run everywhere, distributed results are bit-identical to
 //! single-array results for every worker count and steal schedule.
+//! [`run_image_into`] streams a group's lane blocks in chunks of
+//! [`BLOCK_CYCLES`] through `TileExecutor::compute_block_into`, reusing
+//! one [`TileScratch`] — steady-state execution performs **zero heap
+//! allocations per compute cycle** (`tests/zero_alloc.rs`).
 
 use super::pipeline::{
-    quantize_krp_image, quantize_lane_batch, MttkrpStats, TileExecutor,
+    quantize_krp_image_into, quantize_lane_batch_into, MttkrpStats, TileExecutor,
 };
 use crate::tensor::{krp_all_but, CooTensor, DenseTensor, Matrix};
 use crate::util::error::{Error, Result};
@@ -48,36 +71,63 @@ use crate::util::fixed::{encode_offset, quantize_encode_into};
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-/// One stored-image spec: the quantized `(stored-block, rank-block)` tile a
-/// worker loads into its array before streaming lane blocks against it.
-#[derive(Debug, Clone)]
+/// Compute cycles per `TileExecutor::compute_block_into` chunk inside
+/// [`run_image_into`]: bounds the tile scratch at
+/// `BLOCK_CYCLES × lanes × wpr` i32s while still amortizing per-cycle
+/// ledger/energy charges across a block.
+pub const BLOCK_CYCLES: usize = 32;
+
+/// One stored-image handle: the quantized `(stored-block, rank-block)`
+/// tile a worker loads into its array before streaming lane blocks
+/// against it.  The payload lives in the plan's [`PlanArena`].
+#[derive(Debug, Clone, Copy)]
 pub struct PlanImage {
-    /// Quantized image, row-major `[rows][words_per_row]`, zero padded.
-    pub image: Vec<i8>,
-    /// Per-word-column dequantization scales (`r_cnt` long).
-    pub w_scales: Vec<f32>,
+    /// Plan-order image slot; the quantized words occupy
+    /// `arena.images[slot * rows * wpr ..][.. rows * wpr]`.
+    pub image: usize,
+    /// Offset of the per-word-column dequantization scales (`r_cnt` long)
+    /// in `arena.scales`.
+    pub w_scales: usize,
     /// First rank column covered by this image.
     pub r0: usize,
     /// Rank columns covered by this image (`<= words_per_row`).
     pub r_cnt: usize,
 }
 
-/// One streamed lane block: up to `lanes` offset-binary input rows for one
-/// compute cycle, with their dequantization scales, accumulation targets,
-/// and (for sparse slices) the electrical CP2 scale vector.
-#[derive(Debug, Clone)]
+impl PlanImage {
+    /// The image's quantized words in `arena` (`tile_words = rows * wpr`).
+    #[inline]
+    pub fn words<'a>(&self, arena: &'a PlanArena, tile_words: usize) -> &'a [i8] {
+        &arena.images[self.image * tile_words..(self.image + 1) * tile_words]
+    }
+
+    /// The image's per-column dequantization scales in `arena`.
+    #[inline]
+    pub fn scales<'a>(&self, arena: &'a PlanArena) -> &'a [f32] {
+        &arena.scales[self.w_scales..self.w_scales + self.r_cnt]
+    }
+}
+
+/// One streamed lane-block handle: up to `lanes` offset-binary input rows
+/// for one compute cycle, with their dequantization scales, accumulation
+/// targets, and (for sparse slices) the electrical CP2 scale vector.  All
+/// payloads live in the plan's [`PlanShape`] / [`PlanArena`] buffers.
+#[derive(Debug, Clone, Copy)]
 pub struct LaneBlock {
-    /// Row-major `[lanes][rows]` offset-binary codes, zero padded.
-    pub codes: Vec<u8>,
-    /// Per-lane dequantization scales.
-    pub x_scales: Vec<f32>,
-    /// Output row each lane accumulates into (`lanes` long).
-    pub targets: Vec<usize>,
-    /// Electrical scale vector over the full rank dimension (`out_cols`
-    /// long): the sparse slice's Hadamard factor (CP2), shared (`Arc`)
-    /// by every chunk of the slice.  `None` means all ones (dense
-    /// streams).
-    pub scale_vec: Option<Arc<Vec<f32>>>,
+    /// Offset of this block's `[lane_cnt][rows]` codes in `arena.codes`.
+    /// A group's streams are laid out contiguously and in plan order, so
+    /// a run of consecutive streams is one contiguous code window.
+    pub codes: usize,
+    /// Offset of the per-lane dequantization scales in `arena.scales`.
+    pub x_scales: usize,
+    /// Offset of the accumulation targets in `shape.targets`.
+    pub targets: usize,
+    /// Wavelength lanes this block occupies.
+    pub lane_cnt: usize,
+    /// Electrical scale-vector slot (CP2, sparse slices): vector `s`
+    /// occupies `arena.scale_vecs[s * out_cols ..][.. out_cols]`.  `None`
+    /// means all ones (dense streams).
+    pub scale_vec: Option<usize>,
     /// Useful-MAC rows of one compute cycle of this block, per covered
     /// rank column: dense `k_cnt * lanes`, sparse the block's nonzeros.
     pub useful_rows: u64,
@@ -85,8 +135,38 @@ pub struct LaneBlock {
 
 impl LaneBlock {
     /// Wavelength lanes this block occupies.
+    #[inline]
     pub fn lanes(&self) -> usize {
-        self.targets.len()
+        self.lane_cnt
+    }
+
+    /// This block's offset-binary codes in `arena`.
+    #[inline]
+    pub fn codes_in<'a>(&self, arena: &'a PlanArena, rows: usize) -> &'a [u8] {
+        &arena.codes[self.codes..self.codes + self.lane_cnt * rows]
+    }
+
+    /// This block's per-lane dequantization scales in `arena`.
+    #[inline]
+    pub fn scales_in<'a>(&self, arena: &'a PlanArena) -> &'a [f32] {
+        &arena.scales[self.x_scales..self.x_scales + self.lane_cnt]
+    }
+
+    /// This block's accumulation targets in `shape`.
+    #[inline]
+    pub fn targets_in<'a>(&self, shape: &'a PlanShape) -> &'a [u32] {
+        &shape.targets[self.targets..self.targets + self.lane_cnt]
+    }
+
+    /// This block's electrical scale vector in `arena`, if any.
+    #[inline]
+    pub fn scale_vec_in<'a>(
+        &self,
+        arena: &'a PlanArena,
+        out_cols: usize,
+    ) -> Option<&'a [f32]> {
+        self.scale_vec
+            .map(|s| &arena.scale_vecs[s * out_cols..(s + 1) * out_cols])
     }
 }
 
@@ -100,6 +180,10 @@ pub struct PlanGroup {
     /// quantization (dense contraction blocks and sparse slice reuse
     /// behave identically).
     pub key: usize,
+    /// Rows of the stored block actually used (dense `k_cnt`, sparse
+    /// `j_cnt`); the remaining `rows - stored_rows` image rows are zero
+    /// padding.  `replan_into` requantizes exactly this many rows.
+    pub stored_rows: usize,
     /// Stored images of this group, in rank-block order.
     pub images: Vec<PlanImage>,
     /// Lane blocks streamed against every image of the group, in plan
@@ -107,10 +191,13 @@ pub struct PlanGroup {
     pub streams: Vec<LaneBlock>,
 }
 
-/// A backend-agnostic tiled MTTKRP: what to store, what to stream, where
-/// to accumulate — but nothing executed yet.
+/// The immutable half of a plan: tile geometry, grouping, accumulation
+/// targets, sparse slice keys, and the arena layout.  Shapes depend only
+/// on the workload's *structure* (dims + sparsity pattern), never on the
+/// operand values — which is what makes per-mode plan caching across
+/// CP-ALS iterations sound.
 #[derive(Debug, Clone)]
-pub struct TilePlan {
+pub struct PlanShape {
     /// Array rows (contraction block size) the plan was tiled for.
     pub rows: usize,
     /// Word columns per row (rank block size) the plan was tiled for.
@@ -123,9 +210,27 @@ pub struct TilePlan {
     pub out_cols: usize,
     /// Work groups, keyed by stored-operand block.
     pub groups: Vec<PlanGroup>,
+    /// Flattened accumulation targets; [`LaneBlock::targets`] indexes here.
+    pub targets: Vec<u32>,
+    /// Linearised slice key of each electrical scale-vector slot (sparse
+    /// plans; empty for dense).  `replan_into` decomposes these to refill
+    /// `arena.scale_vecs` from the current factors.
+    pub scale_keys: Vec<usize>,
+    /// Dimensions of the slice (`rest`) modes, in slice-key order (sparse
+    /// plans; empty for dense) — pins the key decomposition on replan.
+    pub slice_dims: Vec<usize>,
+    /// The tensor mode this plan computes (sparse plans — checked by
+    /// `SparseSlicePlanner::replan_into`, since on symmetric tensors a
+    /// wrong mode can slip past every dimension check; 0 and unused for
+    /// dense-unfolded plans, whose operands are explicit).
+    pub planned_mode: usize,
+    /// Total length of `arena.codes` this shape addresses.
+    pub codes_len: usize,
+    /// Total length of `arena.scales` this shape addresses.
+    pub scales_len: usize,
 }
 
-impl TilePlan {
+impl PlanShape {
     /// Total stored images (array reconfigurations) in the plan.
     pub fn total_images(&self) -> usize {
         self.groups.iter().map(|g| g.images.len()).sum()
@@ -150,66 +255,109 @@ impl TilePlan {
             .unwrap_or(0)
     }
 
-    /// Check the plan's internal invariants: image dims match the tile
-    /// geometry, rank blocks stay inside the output, lane occupancy never
-    /// exceeds the plan's lane budget, and every accumulation target is a
-    /// valid output row.
+    /// Length of the stored operand dimension the groups cover (dense
+    /// `K`, sparse `J`): groups are keyed `0..n` in order, so it is the
+    /// last group's offset plus its used rows.
+    pub fn stored_len(&self) -> usize {
+        match self.groups.last() {
+            None => 0,
+            Some(g) => (self.groups.len() - 1) * self.rows + g.stored_rows,
+        }
+    }
+
+    /// Check the shape's internal invariants: tile geometry sane, image
+    /// slots in plan order, rank blocks inside the output, lane occupancy
+    /// within budget, every handle inside its arena buffer, group code
+    /// windows contiguous, and every accumulation target a valid output
+    /// row.
     pub fn validate(&self) -> Result<()> {
         if self.rows == 0 || self.wpr == 0 || self.lanes == 0 {
             return Err(Error::Schedule("degenerate plan geometry".to_string()));
         }
-        for g in &self.groups {
+        let mut next_slot = 0usize;
+        for (gi, g) in self.groups.iter().enumerate() {
+            // `stored_len()` and `replan_into` derive operand row offsets
+            // from `key * rows`, which is only sound for sequential keys.
+            if g.key != gi {
+                return Err(Error::Schedule(format!(
+                    "group key {} out of plan order (want {gi})",
+                    g.key
+                )));
+            }
+            if g.stored_rows == 0 || g.stored_rows > self.rows {
+                return Err(Error::Schedule(format!(
+                    "group {}: stored_rows {} outside 1..={}",
+                    g.key, g.stored_rows, self.rows
+                )));
+            }
             for img in &g.images {
-                if img.image.len() != self.rows * self.wpr {
+                if img.image != next_slot {
                     return Err(Error::Schedule(format!(
-                        "group {}: image of {} words for {}x{} geometry",
-                        g.key,
-                        img.image.len(),
-                        self.rows,
-                        self.wpr
+                        "group {}: image slot {} out of plan order (want {})",
+                        g.key, img.image, next_slot
                     )));
                 }
+                next_slot += 1;
                 if img.r_cnt == 0
                     || img.r_cnt > self.wpr
                     || img.r0 + img.r_cnt > self.out_cols
-                    || img.w_scales.len() != img.r_cnt
                 {
                     return Err(Error::Schedule(format!(
-                        "group {}: rank block [{}, {}) outside output or scales \
-                         mismatched",
+                        "group {}: rank block [{}, {}) outside output",
                         g.key,
                         img.r0,
                         img.r0 + img.r_cnt
                     )));
                 }
+                if img.w_scales + img.r_cnt > self.scales_len {
+                    return Err(Error::Schedule(format!(
+                        "group {}: image scales outside arena",
+                        g.key
+                    )));
+                }
             }
+            let mut expect_codes: Option<usize> = None;
             for s in &g.streams {
-                let lanes = s.lanes();
+                let lanes = s.lane_cnt;
                 if lanes == 0 || lanes > self.lanes {
                     return Err(Error::Schedule(format!(
                         "group {}: stream occupies {lanes} lanes of {}",
                         g.key, self.lanes
                     )));
                 }
-                if s.codes.len() != lanes * self.rows || s.x_scales.len() != lanes {
+                if let Some(e) = expect_codes {
+                    if s.codes != e {
+                        return Err(Error::Schedule(format!(
+                            "group {}: stream codes not contiguous",
+                            g.key
+                        )));
+                    }
+                }
+                expect_codes = Some(s.codes + lanes * self.rows);
+                if s.codes + lanes * self.rows > self.codes_len
+                    || s.x_scales + lanes > self.scales_len
+                    || s.targets + lanes > self.targets.len()
+                {
                     return Err(Error::Schedule(format!(
-                        "group {}: stream codes/scales sized wrongly",
+                        "group {}: stream handles outside arena",
                         g.key
                     )));
                 }
-                if s.targets.iter().any(|&t| t >= self.out_rows) {
+                if self.targets[s.targets..s.targets + lanes]
+                    .iter()
+                    .any(|&t| t as usize >= self.out_rows)
+                {
                     return Err(Error::Schedule(format!(
                         "group {}: accumulation target beyond {} output rows",
                         g.key, self.out_rows
                     )));
                 }
-                if let Some(sv) = &s.scale_vec {
-                    if sv.len() != self.out_cols {
+                if let Some(slot) = s.scale_vec {
+                    if slot >= self.scale_keys.len() {
                         return Err(Error::Schedule(format!(
-                            "group {}: scale vector of {} for rank {}",
+                            "group {}: scale-vector slot {slot} of {}",
                             g.key,
-                            sv.len(),
-                            self.out_cols
+                            self.scale_keys.len()
                         )));
                     }
                 }
@@ -217,6 +365,298 @@ impl TilePlan {
         }
         Ok(())
     }
+}
+
+/// The refillable half of a plan: contiguous payload buffers addressed by
+/// the shape's handles.  Dense on purpose — one allocation per buffer for
+/// the whole plan, cheap to share (`Arc`), cheap to requantize in place.
+#[derive(Debug, Clone, Default)]
+pub struct PlanArena {
+    /// Quantized image words, `total_images × rows × wpr`, zero padded.
+    pub images: Vec<i8>,
+    /// Offset-binary stream codes; padding holds the zero code (128).
+    pub codes: Vec<u8>,
+    /// f32 scales: per-image word-column scales and per-stream lane scales.
+    pub scales: Vec<f32>,
+    /// Electrical CP2 scale vectors, `scale_keys.len() × out_cols`.
+    pub scale_vecs: Vec<f32>,
+}
+
+impl PlanArena {
+    /// A zero-initialised arena sized for `shape` (image padding zeroed,
+    /// code padding at the offset-binary zero code).
+    pub fn for_shape(shape: &PlanShape) -> PlanArena {
+        PlanArena {
+            images: vec![0i8; shape.total_images() * shape.rows * shape.wpr],
+            codes: vec![encode_offset(0); shape.codes_len],
+            scales: vec![0f32; shape.scales_len],
+            scale_vecs: vec![0f32; shape.scale_keys.len() * shape.out_cols],
+        }
+    }
+}
+
+/// A backend-agnostic tiled MTTKRP: an immutable [`PlanShape`] plus the
+/// [`PlanArena`] payload, both shared.  Cloning is O(1) (two refcount
+/// bumps) — the coordinator ships plan handles into its batches instead of
+/// copying images and lane blocks.
+#[derive(Debug, Clone)]
+pub struct TilePlan {
+    /// The immutable structure (also reachable through `Deref`, so
+    /// `plan.groups` / `plan.rows` keep working).
+    pub shape: Arc<PlanShape>,
+    /// The quantized payload.
+    pub arena: Arc<PlanArena>,
+}
+
+impl std::ops::Deref for TilePlan {
+    type Target = PlanShape;
+
+    fn deref(&self) -> &PlanShape {
+        &self.shape
+    }
+}
+
+impl TilePlan {
+    /// Validate the shape invariants *and* that the arena buffers match
+    /// the layout the shape addresses.
+    pub fn validate(&self) -> Result<()> {
+        self.shape.validate()?;
+        let s = &*self.shape;
+        let a = &*self.arena;
+        if a.images.len() != s.total_images() * s.rows * s.wpr
+            || a.codes.len() != s.codes_len
+            || a.scales.len() != s.scales_len
+            || a.scale_vecs.len() != s.scale_keys.len() * s.out_cols
+        {
+            return Err(Error::Schedule(
+                "plan arena does not match its shape".to_string(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Reusable per-executor scratch for [`run_image_into`]: the block tile
+/// buffer (`BLOCK_CYCLES × lanes × wpr` i32s) and the per-chunk lane
+/// counts.  Grown on first use, then steady-state allocation-free.
+#[derive(Debug, Default)]
+pub struct TileScratch {
+    tile: Vec<i32>,
+    lane_counts: Vec<usize>,
+}
+
+impl TileScratch {
+    /// Grow the buffers to fit `shape` (no-op once warm).
+    pub fn ensure(&mut self, shape: &PlanShape) {
+        let need = BLOCK_CYCLES * shape.lanes * shape.wpr;
+        if self.tile.len() < need {
+            self.tile.resize(need, 0);
+        }
+        if self.lane_counts.capacity() < BLOCK_CYCLES {
+            self.lane_counts.reserve(BLOCK_CYCLES);
+        }
+    }
+}
+
+/// Reusable whole-plan scratch for [`execute_plan_into`]: one partial
+/// accumulator (`out_rows × wpr` f32s) plus the executor tile scratch.
+#[derive(Debug, Default)]
+pub struct PlanScratch {
+    partial: Vec<f32>,
+    tiles: TileScratch,
+}
+
+impl PlanScratch {
+    /// Grow the buffers to fit `shape` (no-op once warm).
+    pub fn ensure(&mut self, shape: &PlanShape) {
+        let need = shape.out_rows * shape.wpr;
+        if self.partial.len() < need {
+            self.partial.resize(need, 0.0);
+        }
+        self.tiles.ensure(shape);
+    }
+}
+
+/// Execute one stored image against its group's streams: load the image,
+/// stream the lane blocks in chunks of [`BLOCK_CYCLES`] through
+/// `TileExecutor::compute_block_into` (one batched ledger charge per
+/// chunk), and accumulate the dequantized results into `partial`
+/// (`out_rows * img.r_cnt` entries, zeroed here).  Steady-state this
+/// performs zero heap allocations — all buffers come from `scratch`.
+///
+/// This is the single accumulation contract shared by [`execute_plan`] and
+/// the coordinator workers — both paths call exactly this function, which
+/// is what makes distributed results bit-identical to single-array ones.
+#[allow(clippy::too_many_arguments)]
+pub fn run_image_into<E: TileExecutor>(
+    exec: &mut E,
+    shape: &PlanShape,
+    arena: &PlanArena,
+    img: &PlanImage,
+    streams: &[LaneBlock],
+    partial: &mut [f32],
+    scratch: &mut TileScratch,
+    stats: &mut MttkrpStats,
+) -> Result<()> {
+    let (rows, wpr) = (shape.rows, shape.wpr);
+    exec.load_image(img.words(arena, rows * wpr))?;
+    stats.images += 1;
+    stats.write_cycles += rows as u64;
+
+    let n = shape.out_rows * img.r_cnt;
+    partial[..n].fill(0.0);
+    let w_scales = img.scales(arena);
+
+    scratch.ensure(shape);
+    let TileScratch { tile, lane_counts } = scratch;
+    for chunk in streams.chunks(BLOCK_CYCLES) {
+        lane_counts.clear();
+        let mut total_lanes = 0usize;
+        for s in chunk {
+            lane_counts.push(s.lanes());
+            total_lanes += s.lanes();
+        }
+        // A group's streams are contiguous in the arena (validated), so
+        // the whole chunk is one code window.
+        let codes_start = chunk[0].codes;
+        let codes = &arena.codes[codes_start..codes_start + total_lanes * rows];
+        let block_out = &mut tile[..total_lanes * wpr];
+        exec.compute_block_into(codes, lane_counts, block_out)?;
+        stats.compute_cycles += chunk.len() as u64;
+
+        let mut oo = 0usize;
+        for s in chunk {
+            let lanes = s.lanes();
+            stats.raw_macs += (rows * wpr * lanes) as u64;
+            stats.useful_macs += s.useful_rows * img.r_cnt as u64;
+            let x_scales = s.scales_in(arena);
+            let targets = s.targets_in(shape);
+            let tiles = &block_out[oo..oo + lanes * wpr];
+            match s.scale_vec_in(arena, shape.out_cols) {
+                // CP2: electrical Hadamard scaling per rank column.
+                Some(sv) => {
+                    for m in 0..lanes {
+                        let t = targets[m] as usize;
+                        let prow =
+                            &mut partial[t * img.r_cnt..(t + 1) * img.r_cnt];
+                        let trow = &tiles[m * wpr..m * wpr + img.r_cnt];
+                        let xs = x_scales[m];
+                        for (r, (p, &v)) in prow.iter_mut().zip(trow).enumerate() {
+                            *p += v as f32 * (xs * w_scales[r]) * sv[img.r0 + r];
+                        }
+                    }
+                }
+                None => {
+                    for m in 0..lanes {
+                        let t = targets[m] as usize;
+                        let prow =
+                            &mut partial[t * img.r_cnt..(t + 1) * img.r_cnt];
+                        let trow = &tiles[m * wpr..m * wpr + img.r_cnt];
+                        let xs = x_scales[m];
+                        for (r, (p, &v)) in prow.iter_mut().zip(trow).enumerate() {
+                            *p += v as f32 * (xs * w_scales[r]);
+                        }
+                    }
+                }
+            }
+            oo += lanes * wpr;
+        }
+    }
+    Ok(())
+}
+
+/// Fold one image's partial (`out.rows() * r_cnt` entries) into the output
+/// columns `r0..r0+r_cnt`.  The leader and the single-array executor both
+/// fold in plan order, so the f32 reduction is deterministic.
+pub fn fold_partial(out: &mut Matrix, partial: &[f32], r0: usize, r_cnt: usize) {
+    for i in 0..out.rows() {
+        let orow = out.row_mut(i);
+        let prow = &partial[i * r_cnt..(i + 1) * r_cnt];
+        for (r, &p) in prow.iter().enumerate() {
+            orow[r0 + r] += p;
+        }
+    }
+}
+
+/// Drive one [`TileExecutor`] over a whole [`TilePlan`], accumulating
+/// execution statistics into `stats` and returning the f32 MTTKRP result.
+/// Allocates the output and scratch once per call; use
+/// [`execute_plan_into`] to reuse them across calls.
+pub fn execute_plan<E: TileExecutor>(
+    exec: &mut E,
+    plan: &TilePlan,
+    stats: &mut MttkrpStats,
+) -> Result<Matrix> {
+    let mut out = Matrix::zeros(plan.out_rows, plan.out_cols);
+    let mut scratch = PlanScratch::default();
+    execute_plan_into(exec, plan, &mut scratch, stats, &mut out)?;
+    Ok(out)
+}
+
+/// Allocation-free [`execute_plan`]: writes the MTTKRP result into `out`
+/// (must be `out_rows × out_cols`; zeroed here) reusing `scratch` across
+/// calls.  Once `scratch` is warm, steady-state execution performs zero
+/// heap allocations per streamed compute cycle — the invariant pinned by
+/// `tests/zero_alloc.rs`.
+pub fn execute_plan_into<E: TileExecutor>(
+    exec: &mut E,
+    plan: &TilePlan,
+    scratch: &mut PlanScratch,
+    stats: &mut MttkrpStats,
+    out: &mut Matrix,
+) -> Result<()> {
+    plan.validate()?;
+    if exec.rows() != plan.rows || exec.words_per_row() != plan.wpr {
+        return Err(Error::shape(format!(
+            "plan tiled for {}x{} words but executor is {}x{}",
+            plan.rows,
+            plan.wpr,
+            exec.rows(),
+            exec.words_per_row()
+        )));
+    }
+    if plan.lanes > exec.max_lanes() {
+        return Err(Error::shape(format!(
+            "plan budgets {} lanes but executor supports {}",
+            plan.lanes,
+            exec.max_lanes()
+        )));
+    }
+    if out.rows() != plan.out_rows || out.cols() != plan.out_cols {
+        return Err(Error::shape(format!(
+            "output is {}x{} but plan produces {}x{}",
+            out.rows(),
+            out.cols(),
+            plan.out_rows,
+            plan.out_cols
+        )));
+    }
+
+    out.data_mut().fill(0.0);
+    scratch.ensure(&plan.shape);
+    let shape = &*plan.shape;
+    let arena = &*plan.arena;
+    for g in &shape.groups {
+        for img in &g.images {
+            run_image_into(
+                exec,
+                shape,
+                arena,
+                img,
+                &g.streams,
+                &mut scratch.partial,
+                &mut scratch.tiles,
+                stats,
+            )?;
+            fold_partial(
+                out,
+                &scratch.partial[..shape.out_rows * img.r_cnt],
+                img.r0,
+                img.r_cnt,
+            );
+        }
+    }
+    Ok(())
 }
 
 /// Lowers a dense unfolded matrix pair into a [`TilePlan`]: one group per
@@ -270,54 +710,157 @@ impl DensePlanner {
                 krp.cols()
             )));
         }
-        let (i_dim, k_dim, r_dim) = (unf.rows(), unf.cols(), krp.cols());
+        let shape = Arc::new(self.plan_shape(unf.rows(), unf.cols(), krp.cols()));
+        let arena = Arc::new(PlanArena::for_shape(&shape));
+        let mut plan = TilePlan { shape, arena };
+        self.replan_into(Some(unf), krp, &mut plan)?;
+        Ok(plan)
+    }
+
+    /// Lay out the shape (grouping + arena offsets) for an `I × K @ K × R`
+    /// workload — structure only, no quantization.
+    fn plan_shape(&self, i_dim: usize, k_dim: usize, r_dim: usize) -> PlanShape {
         let k_blocks = k_dim.div_ceil(self.rows);
         let r_blocks = r_dim.div_ceil(self.wpr);
         let i_batches = i_dim.div_ceil(self.lanes);
 
-        let mut groups = Vec::with_capacity(k_blocks);
-        for kb in 0..k_blocks {
-            let k0 = kb * self.rows;
-            let k_cnt = self.rows.min(k_dim - k0);
-
-            let images = (0..r_blocks)
-                .map(|rb| {
-                    let r0 = rb * self.wpr;
-                    let r_cnt = self.wpr.min(r_dim - r0);
-                    let (image, w_scales) = quantize_krp_image(
-                        krp, k0, k_cnt, r0, r_cnt, self.rows, self.wpr,
-                    );
-                    PlanImage { image, w_scales, r0, r_cnt }
-                })
-                .collect();
-
-            let streams = (0..i_batches)
-                .map(|ib| {
-                    let i0 = ib * self.lanes;
-                    let lane_cnt = self.lanes.min(i_dim - i0);
-                    let (codes, x_scales) =
-                        quantize_lane_batch(unf, i0, lane_cnt, k0, k_cnt, self.rows);
-                    LaneBlock {
-                        codes,
-                        x_scales,
-                        targets: (i0..i0 + lane_cnt).collect(),
-                        scale_vec: None,
-                        useful_rows: (k_cnt * lane_cnt) as u64,
-                    }
-                })
-                .collect();
-
-            groups.push(PlanGroup { key: kb, images, streams });
-        }
-
-        Ok(TilePlan {
+        let mut shape = PlanShape {
             rows: self.rows,
             wpr: self.wpr,
             lanes: self.lanes,
             out_rows: i_dim,
             out_cols: r_dim,
-            groups,
-        })
+            groups: Vec::with_capacity(k_blocks),
+            targets: Vec::with_capacity(k_blocks * i_dim),
+            scale_keys: Vec::new(),
+            slice_dims: Vec::new(),
+            planned_mode: 0,
+            codes_len: 0,
+            scales_len: 0,
+        };
+        let mut img_slot = 0usize;
+        let mut codes_off = 0usize;
+        let mut scales_off = 0usize;
+        for kb in 0..k_blocks {
+            let k0 = kb * self.rows;
+            let k_cnt = self.rows.min(k_dim - k0);
+
+            let mut images = Vec::with_capacity(r_blocks);
+            for rb in 0..r_blocks {
+                let r0 = rb * self.wpr;
+                let r_cnt = self.wpr.min(r_dim - r0);
+                images.push(PlanImage { image: img_slot, w_scales: scales_off, r0, r_cnt });
+                img_slot += 1;
+                scales_off += r_cnt;
+            }
+
+            let mut streams = Vec::with_capacity(i_batches);
+            for ib in 0..i_batches {
+                let i0 = ib * self.lanes;
+                let lane_cnt = self.lanes.min(i_dim - i0);
+                let tgt_off = shape.targets.len();
+                shape.targets.extend((i0..i0 + lane_cnt).map(|t| t as u32));
+                streams.push(LaneBlock {
+                    codes: codes_off,
+                    x_scales: scales_off,
+                    targets: tgt_off,
+                    lane_cnt,
+                    scale_vec: None,
+                    useful_rows: (k_cnt * lane_cnt) as u64,
+                });
+                codes_off += lane_cnt * self.rows;
+                scales_off += lane_cnt;
+            }
+
+            shape.groups.push(PlanGroup { key: kb, stored_rows: k_cnt, images, streams });
+        }
+        shape.codes_len = codes_off;
+        shape.scales_len = scales_off;
+        shape
+    }
+
+    /// Requantize a planned workload's payloads **in place**: the stored
+    /// KRP images (and their scales) from `krp`, and — when `unf` is
+    /// given — the streamed lane codes from `unf`.  Pass `unf = None` when
+    /// the streamed operand is unchanged since planning (CP-ALS: the
+    /// unfolded tensor is fixed per mode, only the KRP moves), which skips
+    /// the whole stream requantization.  Bit-identical to a fresh
+    /// `plan_unfolded` with the same operands.
+    pub fn replan_into(
+        &self,
+        unf: Option<&Matrix>,
+        krp: &Matrix,
+        plan: &mut TilePlan,
+    ) -> Result<()> {
+        let shape = Arc::clone(&plan.shape);
+        if shape.rows != self.rows || shape.wpr != self.wpr || shape.lanes != self.lanes {
+            return Err(Error::Schedule(format!(
+                "replan geometry {}x{}x{} against plan {}x{}x{}",
+                self.rows, self.wpr, self.lanes, shape.rows, shape.wpr, shape.lanes
+            )));
+        }
+        if !shape.scale_keys.is_empty() {
+            return Err(Error::Schedule("dense replan of a sparse plan".to_string()));
+        }
+        let k_dim = shape.stored_len();
+        if krp.rows() != k_dim || krp.cols() != shape.out_cols {
+            return Err(Error::shape(format!(
+                "KRP {}x{} against planned {}x{}",
+                krp.rows(),
+                krp.cols(),
+                k_dim,
+                shape.out_cols
+            )));
+        }
+        if let Some(u) = unf {
+            if u.rows() != shape.out_rows || u.cols() != k_dim {
+                return Err(Error::shape(format!(
+                    "unfolded {}x{} against planned {}x{}",
+                    u.rows(),
+                    u.cols(),
+                    shape.out_rows,
+                    k_dim
+                )));
+            }
+        }
+
+        // Steady state the cache is the only holder, so this is in place;
+        // a racing reader (a worker still dropping its batch) degrades to
+        // one payload copy, never to corruption.
+        let arena = Arc::make_mut(&mut plan.arena);
+        let tile_words = shape.rows * shape.wpr;
+        for g in &shape.groups {
+            let k0 = g.key * shape.rows;
+            for img in &g.images {
+                let start = img.image * tile_words;
+                quantize_krp_image_into(
+                    krp,
+                    k0,
+                    g.stored_rows,
+                    img.r0,
+                    img.r_cnt,
+                    shape.wpr,
+                    &mut arena.images[start..start + tile_words],
+                    &mut arena.scales[img.w_scales..img.w_scales + img.r_cnt],
+                );
+            }
+            if let Some(u) = unf {
+                for s in &g.streams {
+                    let i0 = shape.targets[s.targets] as usize;
+                    quantize_lane_batch_into(
+                        u,
+                        i0,
+                        s.lane_cnt,
+                        k0,
+                        g.stored_rows,
+                        shape.rows,
+                        &mut arena.codes[s.codes..s.codes + s.lane_cnt * shape.rows],
+                        &mut arena.scales[s.x_scales..s.x_scales + s.lane_cnt],
+                    );
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -360,8 +903,8 @@ impl SparseSlicePlanner {
         if self.rows == 0 || self.wpr == 0 || self.lanes == 0 {
             return Err(Error::Schedule("degenerate planner geometry".to_string()));
         }
-        let shape = x.shape().to_vec();
-        let nd = shape.len();
+        let dims = x.shape().to_vec();
+        let nd = dims.len();
         if factors.len() != nd {
             return Err(Error::shape(format!(
                 "{} factors for {nd}-mode tensor",
@@ -376,7 +919,7 @@ impl SparseSlicePlanner {
         }
         let r_dim = factors[0].cols();
         for (m, f) in factors.iter().enumerate() {
-            if f.cols() != r_dim || f.rows() != shape[m] {
+            if f.cols() != r_dim || f.rows() != dims[m] {
                 return Err(Error::shape(format!("factor {m} has wrong shape")));
             }
         }
@@ -395,36 +938,42 @@ impl SparseSlicePlanner {
             let j = idx[m1] as usize;
             let mut key = 0usize;
             for &m in &rest {
-                key = key * shape[m] + idx[m] as usize;
+                key = key * dims[m] + idx[m] as usize;
             }
             slices.entry(key).or_default().entry(i).or_default().push((j, v));
         }
 
-        // Electrical scale vector of each slice over the *full* rank
-        // dimension: the Hadamard product of the `rest` factors' rows
-        // (CP2).  Computed once per slice and shared by every lane block
-        // the slice produces.
-        let mut scale_vecs: BTreeMap<usize, Arc<Vec<f32>>> = BTreeMap::new();
-        for &key in slices.keys() {
-            let mut sv = vec![1f32; r_dim];
-            let mut k = key;
-            for &m in rest.iter().rev() {
-                let im = k % shape[m];
-                k /= shape[m];
-                let frow = factors[m].row(im);
-                for (s, &f) in sv.iter_mut().zip(frow) {
-                    *s *= f;
-                }
-            }
-            scale_vecs.insert(key, Arc::new(sv));
-        }
+        // Electrical scale-vector slots: one per slice key, in key order
+        // (CP2, the Hadamard of the `rest` factors' rows).  The keys are
+        // shape; the vectors themselves are payload, refilled from the
+        // current factors by `fill_scale_vecs`.
+        let scale_keys: Vec<usize> = slices.keys().copied().collect();
+        let slot_of: BTreeMap<usize, usize> =
+            scale_keys.iter().enumerate().map(|(s, &k)| (k, s)).collect();
 
-        let j_dim = shape[m1];
+        let j_dim = dims[m1];
         let b = &factors[m1];
         let j_blocks = j_dim.div_ceil(self.rows);
         let r_blocks = r_dim.div_ceil(self.wpr);
+        let tile_words = self.rows * self.wpr;
 
-        let mut groups = Vec::with_capacity(j_blocks);
+        let mut shape = PlanShape {
+            rows: self.rows,
+            wpr: self.wpr,
+            lanes: self.lanes,
+            out_rows: dims[mode],
+            out_cols: r_dim,
+            groups: Vec::with_capacity(j_blocks),
+            targets: Vec::new(),
+            scale_keys,
+            slice_dims: rest.iter().map(|&m| dims[m]).collect(),
+            planned_mode: mode,
+            codes_len: 0,
+            scales_len: 0,
+        };
+        let mut arena = PlanArena::default();
+        let mut img_slot = 0usize;
+
         for jb in 0..j_blocks {
             let j0 = jb * self.rows;
             let j_cnt = self.rows.min(j_dim - j0);
@@ -432,192 +981,203 @@ impl SparseSlicePlanner {
             // Stored images of the factor block, quantized per word column
             // — the same helper (and therefore the same bits) as the dense
             // planner.
-            let images = (0..r_blocks)
-                .map(|rb| {
-                    let r0 = rb * self.wpr;
-                    let r_cnt = self.wpr.min(r_dim - r0);
-                    let (image, w_scales) = quantize_krp_image(
-                        b, j0, j_cnt, r0, r_cnt, self.rows, self.wpr,
-                    );
-                    PlanImage { image, w_scales, r0, r_cnt }
-                })
-                .collect();
+            let mut images = Vec::with_capacity(r_blocks);
+            for rb in 0..r_blocks {
+                let r0 = rb * self.wpr;
+                let r_cnt = self.wpr.min(r_dim - r0);
+                let img_off = arena.images.len();
+                arena.images.resize(img_off + tile_words, 0);
+                let w_off = arena.scales.len();
+                arena.scales.resize(w_off + r_cnt, 0.0);
+                quantize_krp_image_into(
+                    b,
+                    j0,
+                    j_cnt,
+                    r0,
+                    r_cnt,
+                    self.wpr,
+                    &mut arena.images[img_off..img_off + tile_words],
+                    &mut arena.scales[w_off..w_off + r_cnt],
+                );
+                images.push(PlanImage { image: img_slot, w_scales: w_off, r0, r_cnt });
+                img_slot += 1;
+            }
 
             // Streamed lane blocks: every slice's rows restricted to this
             // J block, chunked to the lane budget.
             let mut streams = Vec::new();
+            let mut dense_row = vec![0f32; j_cnt];
             for (&key, by_row) in &slices {
-                let sv = &scale_vecs[&key];
-                let mut srows: Vec<(usize, Vec<(usize, f32)>)> = Vec::new();
+                let slot = slot_of[&key];
+                let mut srows: Vec<(usize, &Vec<(usize, f32)>)> = Vec::new();
                 for (&i, entries) in by_row {
-                    let local: Vec<(usize, f32)> = entries
-                        .iter()
-                        .filter(|(j, _)| (j0..j0 + j_cnt).contains(j))
-                        .map(|&(j, v)| (j - j0, v))
-                        .collect();
-                    if !local.is_empty() {
-                        srows.push((i, local));
+                    if entries.iter().any(|(j, _)| (j0..j0 + j_cnt).contains(j)) {
+                        srows.push((i, entries));
                     }
                 }
-                let mut dense_row = vec![0f32; j_cnt];
                 for chunk in srows.chunks(self.lanes) {
                     let lane_cnt = chunk.len();
-                    let mut codes = vec![encode_offset(0); lane_cnt * self.rows];
-                    let mut x_scales = vec![1f32; lane_cnt];
-                    let mut targets = Vec::with_capacity(lane_cnt);
+                    let codes_off = arena.codes.len();
+                    arena.codes.resize(codes_off + lane_cnt * self.rows, encode_offset(0));
+                    let xs_off = arena.scales.len();
+                    arena.scales.resize(xs_off + lane_cnt, 0.0);
+                    let tgt_off = shape.targets.len();
                     let mut nnz = 0u64;
                     for (m, (i, entries)) in chunk.iter().enumerate() {
                         dense_row.iter_mut().for_each(|v| *v = 0.0);
-                        for &(jl, v) in entries {
-                            dense_row[jl] += v; // duplicates sum (COO)
+                        let mut local = 0u64;
+                        for &(j, v) in entries.iter() {
+                            if (j0..j0 + j_cnt).contains(&j) {
+                                dense_row[j - j0] += v; // duplicates sum (COO)
+                                local += 1;
+                            }
                         }
-                        nnz += entries.len() as u64;
-                        x_scales[m] = quantize_encode_into(
+                        nnz += local;
+                        let lane = codes_off + m * self.rows;
+                        arena.scales[xs_off + m] = quantize_encode_into(
                             &dense_row,
-                            &mut codes[m * self.rows..m * self.rows + j_cnt],
+                            &mut arena.codes[lane..lane + j_cnt],
                         );
-                        targets.push(*i);
+                        shape.targets.push(*i as u32);
                     }
                     streams.push(LaneBlock {
-                        codes,
-                        x_scales,
-                        targets,
-                        scale_vec: Some(Arc::clone(sv)),
+                        codes: codes_off,
+                        x_scales: xs_off,
+                        targets: tgt_off,
+                        lane_cnt,
+                        scale_vec: Some(slot),
                         useful_rows: nnz,
                     });
                 }
             }
 
-            groups.push(PlanGroup { key: jb, images, streams });
+            shape.groups.push(PlanGroup { key: jb, stored_rows: j_cnt, images, streams });
         }
 
-        Ok(TilePlan {
-            rows: self.rows,
-            wpr: self.wpr,
-            lanes: self.lanes,
-            out_rows: shape[mode],
-            out_cols: r_dim,
-            groups,
-        })
+        shape.codes_len = arena.codes.len();
+        shape.scales_len = arena.scales.len();
+        arena.scale_vecs = vec![0f32; shape.scale_keys.len() * r_dim];
+        fill_scale_vecs(&shape, factors, mode, &mut arena.scale_vecs);
+
+        Ok(TilePlan { shape: Arc::new(shape), arena: Arc::new(arena) })
+    }
+
+    /// Requantize a planned sparse mode's *stored* payloads in place: the
+    /// factor images (mode `m1`) and the CP2 scale vectors (the `rest`
+    /// factors) from the current `factors`.  The streamed fiber codes
+    /// depend only on the tensor values, which CP-ALS never changes, so
+    /// they are left untouched — the contract is that `plan` was built by
+    /// [`SparseSlicePlanner::plan`] for the **same tensor and mode**.
+    /// Bit-identical to a fresh `plan` with the same factors.
+    pub fn replan_into(
+        &self,
+        factors: &[Matrix],
+        mode: usize,
+        plan: &mut TilePlan,
+    ) -> Result<()> {
+        let shape = Arc::clone(&plan.shape);
+        if shape.rows != self.rows || shape.wpr != self.wpr || shape.lanes != self.lanes {
+            return Err(Error::Schedule(format!(
+                "replan geometry {}x{}x{} against plan {}x{}x{}",
+                self.rows, self.wpr, self.lanes, shape.rows, shape.wpr, shape.lanes
+            )));
+        }
+        let nd = factors.len();
+        if nd < 2 || mode >= nd {
+            return Err(Error::shape(format!("mode {mode} of {nd} factors")));
+        }
+        if mode != shape.planned_mode {
+            return Err(Error::Schedule(format!(
+                "replan along mode {mode} of a plan built for mode {}",
+                shape.planned_mode
+            )));
+        }
+        let r_dim = shape.out_cols;
+        for (m, f) in factors.iter().enumerate() {
+            if f.cols() != r_dim {
+                return Err(Error::shape(format!("factor {m} has wrong rank")));
+            }
+        }
+        if factors[mode].rows() != shape.out_rows {
+            return Err(Error::shape(format!(
+                "output factor has {} rows, planned {}",
+                factors[mode].rows(),
+                shape.out_rows
+            )));
+        }
+        let m1 = (0..nd).find(|&m| m != mode).expect("nd >= 2");
+        if factors[m1].rows() != shape.stored_len() {
+            return Err(Error::shape(format!(
+                "stored factor has {} rows, planned {}",
+                factors[m1].rows(),
+                shape.stored_len()
+            )));
+        }
+        let rest: Vec<usize> = (0..nd).filter(|&m| m != mode && m != m1).collect();
+        if rest.len() != shape.slice_dims.len()
+            || rest
+                .iter()
+                .zip(&shape.slice_dims)
+                .any(|(&m, &d)| factors[m].rows() != d)
+        {
+            return Err(Error::shape(
+                "slice-mode factor dimensions diverged from the planned shape"
+                    .to_string(),
+            ));
+        }
+
+        let arena = Arc::make_mut(&mut plan.arena);
+        let tile_words = shape.rows * shape.wpr;
+        let b = &factors[m1];
+        for g in &shape.groups {
+            let j0 = g.key * shape.rows;
+            for img in &g.images {
+                let start = img.image * tile_words;
+                quantize_krp_image_into(
+                    b,
+                    j0,
+                    g.stored_rows,
+                    img.r0,
+                    img.r_cnt,
+                    shape.wpr,
+                    &mut arena.images[start..start + tile_words],
+                    &mut arena.scales[img.w_scales..img.w_scales + img.r_cnt],
+                );
+            }
+        }
+        fill_scale_vecs(&shape, factors, mode, &mut arena.scale_vecs);
+        Ok(())
     }
 }
 
-/// Execute one stored image against its group's streams: load the image,
-/// issue one compute cycle per lane block, and accumulate the dequantized
-/// results into `partial` (`out_rows * img.r_cnt` entries, zeroed here).
-///
-/// This is the single accumulation contract shared by [`execute_plan`] and
-/// the coordinator workers — both paths call exactly this function, which
-/// is what makes distributed results bit-identical to single-array ones.
-#[allow(clippy::too_many_arguments)]
-pub fn run_image_into<E: TileExecutor>(
-    exec: &mut E,
-    img: &PlanImage,
-    streams: &[LaneBlock],
-    rows: usize,
-    wpr: usize,
-    out_rows: usize,
-    partial: &mut [f32],
-    stats: &mut MttkrpStats,
-) -> Result<()> {
-    exec.load_image(&img.image)?;
-    stats.images += 1;
-    stats.write_cycles += rows as u64;
-
-    let n = out_rows * img.r_cnt;
-    partial[..n].fill(0.0);
-    for s in streams {
-        let lanes = s.lanes();
-        let tile = exec.compute(&s.codes, lanes)?;
-        stats.compute_cycles += 1;
-        stats.raw_macs += (rows * wpr * lanes) as u64;
-        stats.useful_macs += s.useful_rows * img.r_cnt as u64;
-
-        for m in 0..lanes {
-            let t = s.targets[m];
-            let prow = &mut partial[t * img.r_cnt..(t + 1) * img.r_cnt];
-            match &s.scale_vec {
-                // CP2: electrical Hadamard scaling per rank column.
-                Some(sv) => {
-                    for (r, p) in prow.iter_mut().enumerate() {
-                        *p += tile[m * wpr + r] as f32
-                            * (s.x_scales[m] * img.w_scales[r])
-                            * sv[img.r0 + r];
-                    }
-                }
-                None => {
-                    for (r, p) in prow.iter_mut().enumerate() {
-                        *p += tile[m * wpr + r] as f32
-                            * (s.x_scales[m] * img.w_scales[r]);
-                    }
-                }
+/// Refill every CP2 scale vector from the current factors: slot `s` is the
+/// Hadamard product of the `rest` factors' rows addressed by
+/// `shape.scale_keys[s]` over the full rank dimension.  Bit-identical to
+/// the original per-slice computation at plan time.
+fn fill_scale_vecs(
+    shape: &PlanShape,
+    factors: &[Matrix],
+    mode: usize,
+    out: &mut [f32],
+) {
+    let nd = factors.len();
+    let m1 = (0..nd).find(|&m| m != mode).expect("nd >= 2");
+    let rest: Vec<usize> = (0..nd).filter(|&m| m != mode && m != m1).collect();
+    let r_dim = shape.out_cols;
+    for (slot, &key) in shape.scale_keys.iter().enumerate() {
+        let sv = &mut out[slot * r_dim..(slot + 1) * r_dim];
+        sv.fill(1.0);
+        let mut k = key;
+        for &m in rest.iter().rev() {
+            let dim = factors[m].rows();
+            let im = k % dim;
+            k /= dim;
+            let frow = factors[m].row(im);
+            for (s, &f) in sv.iter_mut().zip(frow) {
+                *s *= f;
             }
         }
     }
-    Ok(())
-}
-
-/// Fold one image's partial (`out.rows() * r_cnt` entries) into the output
-/// columns `r0..r0+r_cnt`.  The leader and the single-array executor both
-/// fold in plan order, so the f32 reduction is deterministic.
-pub fn fold_partial(out: &mut Matrix, partial: &[f32], r0: usize, r_cnt: usize) {
-    for i in 0..out.rows() {
-        let orow = out.row_mut(i);
-        let prow = &partial[i * r_cnt..(i + 1) * r_cnt];
-        for (r, &p) in prow.iter().enumerate() {
-            orow[r0 + r] += p;
-        }
-    }
-}
-
-/// Drive one [`TileExecutor`] over a whole [`TilePlan`], accumulating
-/// execution statistics into `stats` and returning the f32 MTTKRP result.
-pub fn execute_plan<E: TileExecutor>(
-    exec: &mut E,
-    plan: &TilePlan,
-    stats: &mut MttkrpStats,
-) -> Result<Matrix> {
-    plan.validate()?;
-    if exec.rows() != plan.rows || exec.words_per_row() != plan.wpr {
-        return Err(Error::shape(format!(
-            "plan tiled for {}x{} words but executor is {}x{}",
-            plan.rows,
-            plan.wpr,
-            exec.rows(),
-            exec.words_per_row()
-        )));
-    }
-    if plan.lanes > exec.max_lanes() {
-        return Err(Error::shape(format!(
-            "plan budgets {} lanes but executor supports {}",
-            plan.lanes,
-            exec.max_lanes()
-        )));
-    }
-
-    let mut out = Matrix::zeros(plan.out_rows, plan.out_cols);
-    let mut partial = vec![0f32; plan.out_rows * plan.wpr];
-    for g in &plan.groups {
-        for img in &g.images {
-            run_image_into(
-                exec,
-                img,
-                &g.streams,
-                plan.rows,
-                plan.wpr,
-                plan.out_rows,
-                &mut partial,
-                stats,
-            )?;
-            fold_partial(
-                &mut out,
-                &partial[..plan.out_rows * img.r_cnt],
-                img.r0,
-                img.r_cnt,
-            );
-        }
-    }
-    Ok(out)
 }
 
 #[cfg(test)]
@@ -642,6 +1202,12 @@ mod tests {
         assert_eq!(plan.max_lane_occupancy(), 52);
         assert_eq!(plan.out_rows, 120);
         assert_eq!(plan.out_cols, 40);
+        assert_eq!(plan.stored_len(), 540);
+        // Arena layout matches the shape's accounting.
+        assert_eq!(plan.arena.images.len(), 6 * 256 * 32);
+        assert_eq!(plan.arena.codes.len(), plan.codes_len);
+        assert_eq!(plan.arena.scales.len(), plan.scales_len);
+        assert!(plan.arena.scale_vecs.is_empty());
     }
 
     #[test]
@@ -672,6 +1238,105 @@ mod tests {
     }
 
     #[test]
+    fn execute_plan_into_reuses_scratch_bit_exactly() {
+        let mut rng = Prng::new(21);
+        let unf = Matrix::randn(120, 300, &mut rng);
+        let krp = Matrix::randn(300, 40, &mut rng);
+        let planner = DensePlanner::new(256, 32, 52);
+        let plan = planner.plan_unfolded(&unf, &krp).unwrap();
+
+        let mut exec = CpuTileExecutor::paper();
+        let mut stats = MttkrpStats::default();
+        let fresh = execute_plan(&mut exec, &plan, &mut stats).unwrap();
+
+        let mut scratch = PlanScratch::default();
+        let mut out = Matrix::zeros(120, 40);
+        for _ in 0..3 {
+            let mut exec = CpuTileExecutor::paper();
+            let mut stats = MttkrpStats::default();
+            execute_plan_into(&mut exec, &plan, &mut scratch, &mut stats, &mut out)
+                .unwrap();
+            assert_eq!(out.data(), fresh.data());
+        }
+    }
+
+    #[test]
+    fn dense_replan_matches_fresh_plan_bit_exactly() {
+        let mut rng = Prng::new(22);
+        let unf = Matrix::randn(90, 300, &mut rng);
+        let planner = DensePlanner::new(256, 32, 52);
+        let krp0 = Matrix::randn(300, 40, &mut rng);
+        let mut plan = planner.plan_unfolded(&unf, &krp0).unwrap();
+
+        // New KRP (an ALS iteration): in-place refill == fresh plan.
+        let krp1 = Matrix::randn(300, 40, &mut rng);
+        planner.replan_into(None, &krp1, &mut plan).unwrap();
+        let fresh = planner.plan_unfolded(&unf, &krp1).unwrap();
+        assert_eq!(plan.arena.images, fresh.arena.images);
+        assert_eq!(plan.arena.codes, fresh.arena.codes);
+        assert_eq!(plan.arena.scales, fresh.arena.scales);
+
+        // Executing the refilled plan equals executing the fresh plan.
+        let mut e1 = CpuTileExecutor::paper();
+        let mut s1 = MttkrpStats::default();
+        let a = execute_plan(&mut e1, &plan, &mut s1).unwrap();
+        let mut e2 = CpuTileExecutor::paper();
+        let mut s2 = MttkrpStats::default();
+        let b = execute_plan(&mut e2, &fresh, &mut s2).unwrap();
+        assert_eq!(a.data(), b.data());
+
+        // Mismatched operands are rejected.
+        let bad = Matrix::randn(301, 40, &mut rng);
+        assert!(planner.replan_into(None, &bad, &mut plan).is_err());
+        assert!(planner
+            .replan_into(Some(&Matrix::randn(91, 300, &mut rng)), &krp1, &mut plan)
+            .is_err());
+    }
+
+    #[test]
+    fn sparse_replan_matches_fresh_plan_bit_exactly() {
+        let mut rng = Prng::new(23);
+        let shape = [20usize, 600, 6];
+        let x = CooTensor::random(&shape, 300, &mut rng);
+        let planner = SparseSlicePlanner::new(256, 32, 52);
+        let f0: Vec<Matrix> =
+            shape.iter().map(|&d| Matrix::randn(d, 10, &mut rng)).collect();
+        let mut plan = planner.plan(&x, &f0, 0).unwrap();
+
+        // New factors (an ALS iteration): refill == fresh plan.
+        let f1: Vec<Matrix> =
+            shape.iter().map(|&d| Matrix::randn(d, 10, &mut rng)).collect();
+        planner.replan_into(&f1, 0, &mut plan).unwrap();
+        let fresh = planner.plan(&x, &f1, 0).unwrap();
+        assert_eq!(plan.arena.images, fresh.arena.images);
+        assert_eq!(plan.arena.codes, fresh.arena.codes);
+        assert_eq!(plan.arena.scales, fresh.arena.scales);
+        assert_eq!(plan.arena.scale_vecs, fresh.arena.scale_vecs);
+
+        let mut e1 = CpuTileExecutor::paper();
+        let mut s1 = MttkrpStats::default();
+        let a = execute_plan(&mut e1, &plan, &mut s1).unwrap();
+        let mut e2 = CpuTileExecutor::paper();
+        let mut s2 = MttkrpStats::default();
+        let b = execute_plan(&mut e2, &fresh, &mut s2).unwrap();
+        assert_eq!(a.data(), b.data());
+
+        // Wrong factor dims are rejected.
+        let bad: Vec<Matrix> =
+            [20usize, 601, 6].iter().map(|&d| Matrix::randn(d, 10, &mut rng)).collect();
+        assert!(planner.replan_into(&bad, 0, &mut plan).is_err());
+
+        // A wrong mode is rejected even on a symmetric tensor, where every
+        // dimension check would coincide.
+        let cube = CooTensor::random(&[12, 12, 12], 100, &mut rng);
+        let fc: Vec<Matrix> =
+            (0..3).map(|_| Matrix::randn(12, 4, &mut rng)).collect();
+        let mut cube_plan = planner.plan(&cube, &fc, 0).unwrap();
+        assert!(planner.replan_into(&fc, 1, &mut cube_plan).is_err());
+        assert!(planner.replan_into(&fc, 0, &mut cube_plan).is_ok());
+    }
+
+    #[test]
     fn sparse_plan_groups_key_by_stored_block() {
         // j_dim = 600 -> 3 stored-factor blocks -> 3 groups keyed 0..3.
         let mut rng = Prng::new(3);
@@ -686,7 +1351,7 @@ mod tests {
             assert_eq!(g.images.len(), 1); // rank 10 -> one rank block
             for s in &g.streams {
                 assert!(s.scale_vec.is_some());
-                assert!(s.targets.iter().all(|&t| t < 20));
+                assert!(s.targets_in(&plan.shape).iter().all(|&t| t < 20));
             }
         }
         // every nonzero lands in exactly one (group, stream) useful count
@@ -717,16 +1382,32 @@ mod tests {
         let krp = Matrix::randn(20, 4, &mut rng);
         let planner = DensePlanner::new(256, 32, 52);
 
+        // Arena no longer matching the shape's layout.
         let mut plan = planner.plan_unfolded(&unf, &krp).unwrap();
-        plan.groups[0].images[0].image.truncate(7);
+        Arc::make_mut(&mut plan.arena).images.truncate(7);
         assert!(plan.validate().is_err());
 
+        // Accumulation target beyond the output.
         let mut plan = planner.plan_unfolded(&unf, &krp).unwrap();
-        plan.groups[0].streams[0].targets[0] = 999;
+        Arc::make_mut(&mut plan.shape).targets[0] = 999;
         assert!(plan.validate().is_err());
 
+        // Scale-vector slot with no backing vector.
         let mut plan = planner.plan_unfolded(&unf, &krp).unwrap();
-        plan.groups[0].streams[0].scale_vec = Some(Arc::new(vec![1.0; 3]));
+        Arc::make_mut(&mut plan.shape).groups[0].streams[0].scale_vec = Some(3);
+        assert!(plan.validate().is_err());
+
+        // Non-contiguous group code window.
+        let mut plan = planner.plan_unfolded(&unf, &krp).unwrap();
+        {
+            let shape = Arc::make_mut(&mut plan.shape);
+            if shape.groups[0].streams.len() == 1 {
+                // force a second stream with a gap
+                let mut s = shape.groups[0].streams[0];
+                s.codes += 1;
+                shape.groups[0].streams.push(s);
+            }
+        }
         assert!(plan.validate().is_err());
     }
 
@@ -736,5 +1417,16 @@ mod tests {
         let unf = Matrix::zeros(4, 10);
         let krp = Matrix::zeros(11, 3);
         assert!(planner.plan_unfolded(&unf, &krp).is_err());
+    }
+
+    #[test]
+    fn plan_clone_is_shallow() {
+        let mut rng = Prng::new(6);
+        let unf = Matrix::randn(60, 300, &mut rng);
+        let krp = Matrix::randn(300, 40, &mut rng);
+        let plan = DensePlanner::new(256, 32, 52).plan_unfolded(&unf, &krp).unwrap();
+        let clone = plan.clone();
+        assert!(Arc::ptr_eq(&plan.shape, &clone.shape));
+        assert!(Arc::ptr_eq(&plan.arena, &clone.arena));
     }
 }

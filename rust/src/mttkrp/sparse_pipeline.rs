@@ -33,8 +33,9 @@
 //! the tiles, so the analog simulator, the CPU integer executor and the
 //! PJRT Pallas kernel all produce identical results here too.
 
+use super::cache::SparsePlanCache;
 use super::pipeline::{MttkrpStats, TileExecutor};
-use super::plan::{execute_plan, SparseSlicePlanner};
+use super::plan::{execute_plan, execute_plan_into, PlanScratch, SparseSlicePlanner};
 use crate::tensor::{CooTensor, Matrix};
 use crate::util::error::Result;
 
@@ -68,28 +69,40 @@ impl<'a, E: TileExecutor> SparsePsramPipeline<'a, E> {
 }
 
 /// CP-ALS backend running sparse MTTKRPs through the pSRAM pipeline.
+/// Holds a per-mode plan cache and reusable execution scratch, so ALS
+/// iterations 2..N skip the slice mapping and fiber quantization and run
+/// the zero-allocation `execute_plan_into` hot path.
 pub struct SparsePsramBackend<'a, E: TileExecutor> {
-    pub tensor: &'a CooTensor,
+    /// The decomposition target.  Private: the plan cache is keyed to this
+    /// tensor, so it must not be swapped under a warm cache.
+    tensor: &'a CooTensor,
     pub exec: E,
     pub stats: MttkrpStats,
+    /// Per-mode plan cache (keyed to `tensor`).
+    cache: SparsePlanCache,
+    /// Reusable execution scratch (partials + tile block buffer).
+    scratch: PlanScratch,
 }
 
 impl<'a, E: TileExecutor> SparsePsramBackend<'a, E> {
     pub fn new(tensor: &'a CooTensor, exec: E) -> Self {
-        SparsePsramBackend { tensor, exec, stats: MttkrpStats::default() }
+        let cache =
+            SparsePlanCache::new(SparseSlicePlanner::for_executor(&exec), tensor.ndim());
+        SparsePsramBackend {
+            tensor,
+            exec,
+            stats: MttkrpStats::default(),
+            cache,
+            scratch: PlanScratch::default(),
+        }
     }
 }
 
 impl<E: TileExecutor> crate::cpd::backend::MttkrpBackend for SparsePsramBackend<'_, E> {
     fn mttkrp(&mut self, factors: &[Matrix], mode: usize) -> Result<Matrix> {
-        let mut pipe = SparsePsramPipeline::new(&mut self.exec);
-        let out = pipe.mttkrp(self.tensor, factors, mode)?;
-        let s = pipe.stats;
-        self.stats.images += s.images;
-        self.stats.compute_cycles += s.compute_cycles;
-        self.stats.write_cycles += s.write_cycles;
-        self.stats.useful_macs += s.useful_macs;
-        self.stats.raw_macs += s.raw_macs;
+        let plan = self.cache.plan_mttkrp(self.tensor, factors, mode)?;
+        let mut out = Matrix::zeros(plan.out_rows, plan.out_cols);
+        execute_plan_into(&mut self.exec, plan, &mut self.scratch, &mut self.stats, &mut out)?;
         Ok(out)
     }
 

@@ -23,7 +23,7 @@
 //! The model is validated cycle-exactly against the functional pipeline in
 //! `tests/` (same formulas, measured vs predicted).
 
-use crate::mttkrp::plan::TilePlan;
+use crate::mttkrp::plan::PlanShape;
 use crate::psram::ArrayGeometry;
 use crate::util::error::{Error, Result};
 
@@ -171,10 +171,11 @@ impl PerfModel {
         })
     }
 
-    /// Score a concrete [`TilePlan`]: predicted compute cycles,
-    /// reconfiguration writes, lane occupancy, and sustained throughput
-    /// for *this* plan's exact tiling — the analytic twin of executing the
-    /// plan.
+    /// Score a concrete plan by its [`PlanShape`] (a `&TilePlan` deref
+    /// coerces here — the payload arena is irrelevant to scoring):
+    /// predicted compute cycles, reconfiguration writes, lane occupancy,
+    /// and sustained throughput for *this* plan's exact tiling — the
+    /// analytic twin of executing the plan.
     ///
     /// The cycle census is exact, not asymptotic: `compute_cycles` and
     /// `reconfig_write_cycles` equal what the functional executors (and
@@ -184,7 +185,7 @@ impl PerfModel {
     /// `tests/stack_integration.rs`.  Groups are assigned to arrays by
     /// `key % num_arrays` (the coordinator's home-shard rule, without
     /// stealing); the bottleneck array sets the predicted runtime.
-    pub fn predict_plan(&self, plan: &TilePlan) -> Result<PlanEstimate> {
+    pub fn predict_plan(&self, plan: &PlanShape) -> Result<PlanEstimate> {
         self.validate()?;
         plan.validate()?;
         if plan.lanes > self.wavelengths {
@@ -274,7 +275,7 @@ pub struct PerfEstimate {
 }
 
 /// Output of [`PerfModel::predict_plan`]: the exact predicted accounting
-/// of one concrete [`TilePlan`].
+/// of one concrete plan shape.
 #[derive(Debug, Clone, Copy)]
 pub struct PlanEstimate {
     /// Stored images (array reconfigurations) the plan issues.

@@ -25,6 +25,9 @@ pub struct PsramArray {
     /// Sign-extended i32 mirror (perf: keeps the compute inner loop free of
     /// per-element i8->i32 extension; see EXPERIMENTS.md §Perf).
     packed_i32: Vec<i32>,
+    /// Cached all-zero wordline for padded image writes (avoids a fresh
+    /// `zeros` vector per `write_image_padded` call).
+    zero_row: Vec<i8>,
     /// Cycle ledger for this array.
     pub cycles: CycleLedger,
     /// Energy ledger for this array.
@@ -48,6 +51,7 @@ impl PsramArray {
             words: vec![Word::new(geom.word_bits); n],
             packed: vec![0i8; n],
             packed_i32: vec![0i32; n],
+            zero_row: vec![0i8; geom.words_per_row()],
             cycles: CycleLedger::default(),
             energy: EnergyLedger::default(),
         })
@@ -153,11 +157,18 @@ impl PsramArray {
         for row in 0..rows_used {
             self.write_row(row, &image[row * wpr..(row + 1) * wpr])?;
         }
-        let zeros = vec![0i8; wpr];
+        // Reuse the cached zero wordline (taken out of `self` for the
+        // duration of the writes, then restored — even on error).
+        let zeros = std::mem::take(&mut self.zero_row);
+        let mut result = Ok(());
         for row in rows_used..self.geom.rows {
-            self.write_row(row, &zeros)?;
+            result = self.write_row(row, &zeros);
+            if result.is_err() {
+                break;
+            }
         }
-        Ok(())
+        self.zero_row = zeros;
+        result
     }
 
     /// Charge static (hold) energy for `cycles` cycles across all bitcells.

@@ -86,7 +86,7 @@ impl TileExecutor for PjrtTileExecutor {
         Ok(())
     }
 
-    fn compute(&mut self, u: &[u8], lanes: usize) -> Result<Vec<i32>> {
+    fn compute_into(&mut self, u: &[u8], lanes: usize, out: &mut [i32]) -> Result<()> {
         if lanes == 0 || lanes > self.m {
             return Err(Error::shape(format!(
                 "lanes {lanes} out of range 1..={}",
@@ -96,10 +96,17 @@ impl TileExecutor for PjrtTileExecutor {
         if u.len() != lanes * self.k {
             return Err(Error::shape("input block size mismatch".to_string()));
         }
+        if out.len() != lanes * self.n {
+            return Err(Error::shape("output block size mismatch".to_string()));
+        }
         // Pad to the artifact's static M with the zero code (value 0).
-        let out = if lanes == self.m {
-            self.rt
-                .execute_tile(&self.name, u, &self.image, self.m, self.k, self.n)?
+        // (PJRT materialises its own result buffers; the copy into `out`
+        // keeps the executor contract uniform.)
+        if lanes == self.m {
+            let full = self
+                .rt
+                .execute_tile(&self.name, u, &self.image, self.m, self.k, self.n)?;
+            out.copy_from_slice(&full[..lanes * self.n]);
         } else {
             let mut padded = vec![encode_offset(0); self.m * self.k];
             padded[..lanes * self.k].copy_from_slice(u);
@@ -111,10 +118,10 @@ impl TileExecutor for PjrtTileExecutor {
                 self.k,
                 self.n,
             )?;
-            full[..lanes * self.n].to_vec()
-        };
+            out.copy_from_slice(&full[..lanes * self.n]);
+        }
         self.ledger.compute += 1;
-        Ok(out)
+        Ok(())
     }
 
     fn cycles(&self) -> CycleLedger {

@@ -125,8 +125,24 @@ impl Matrix {
 
     /// Gram matrix `Aᵀ A` (`cols x cols`, SPD for full-rank A).
     pub fn gram(&self) -> Matrix {
+        let mut g = Matrix::zeros(self.cols, self.cols);
+        self.gram_into(&mut g).expect("freshly sized Gram output");
+        g
+    }
+
+    /// Allocation-free [`Matrix::gram`]: writes `Aᵀ A` into `out` (must be
+    /// `cols × cols`; overwritten).  Lets CP-ALS update its cached Gram
+    /// matrices in place after each factor solve instead of reallocating
+    /// one per mode per sweep.
+    pub fn gram_into(&self, out: &mut Matrix) -> Result<()> {
         let n = self.cols;
-        let mut g = Matrix::zeros(n, n);
+        if out.rows != n || out.cols != n {
+            return Err(Error::shape(format!(
+                "gram of {}x{} into {}x{}",
+                self.rows, self.cols, out.rows, out.cols
+            )));
+        }
+        out.data.fill(0.0);
         for r in 0..self.rows {
             let row = self.row(r);
             for i in 0..n {
@@ -134,13 +150,13 @@ impl Matrix {
                 if ai == 0.0 {
                     continue;
                 }
-                let grow = &mut g.data[i * n..(i + 1) * n];
+                let grow = &mut out.data[i * n..(i + 1) * n];
                 for (gj, &aj) in grow.iter_mut().zip(row) {
                     *gj += ai * aj;
                 }
             }
         }
-        g
+        Ok(())
     }
 
     /// Elementwise (Hadamard) product.
@@ -158,6 +174,32 @@ impl Matrix {
             .map(|(a, b)| a * b)
             .collect();
         Matrix::from_vec(self.rows, self.cols, data)
+    }
+
+    /// In-place elementwise (Hadamard) product: `self ∘= other`.
+    pub fn hadamard_assign(&mut self, other: &Matrix) -> Result<()> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::shape(format!(
+                "hadamard {}x{} o {}x{}",
+                self.rows, self.cols, other.rows, other.cols
+            )));
+        }
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a *= b;
+        }
+        Ok(())
+    }
+
+    /// Copy another matrix's contents into this one (dims must match).
+    pub fn copy_from(&mut self, other: &Matrix) -> Result<()> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::shape(format!(
+                "copy {}x{} into {}x{}",
+                other.rows, other.cols, self.rows, self.cols
+            )));
+        }
+        self.data.copy_from_slice(&other.data);
+        Ok(())
     }
 
     /// Frobenius norm.
@@ -289,6 +331,28 @@ mod tests {
                 .iter()
                 .zip(b.data())
                 .all(|(x, y)| (x - y).abs() <= tol)
+    }
+
+    #[test]
+    fn in_place_gram_hadamard_copy_match_allocating_paths() {
+        let a = Matrix::from_vec(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let b = Matrix::from_vec(2, 2, vec![2.0, 0.5, -1.0, 3.0]).unwrap();
+        // gram_into == gram, even over a dirty buffer.
+        let mut g = Matrix::from_vec(2, 2, vec![9.0; 4]).unwrap();
+        a.gram_into(&mut g).unwrap();
+        assert_eq!(g.data(), a.gram().data());
+        // hadamard_assign == hadamard.
+        let mut h = g.clone();
+        h.hadamard_assign(&b).unwrap();
+        assert_eq!(h.data(), g.hadamard(&b).unwrap().data());
+        // copy_from round-trips.
+        let mut c = Matrix::zeros(2, 2);
+        c.copy_from(&b).unwrap();
+        assert_eq!(c.data(), b.data());
+        // dimension mismatches rejected
+        assert!(a.gram_into(&mut Matrix::zeros(3, 3)).is_err());
+        assert!(c.hadamard_assign(&Matrix::zeros(3, 3)).is_err());
+        assert!(c.copy_from(&Matrix::zeros(1, 2)).is_err());
     }
 
     #[test]

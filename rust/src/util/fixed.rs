@@ -17,6 +17,27 @@ pub const OFFSET: i32 = 128;
 /// Bits per pSRAM word in the paper's configuration.
 pub const WORD_BITS: u32 = 8;
 
+/// Scale of a symmetric quantization for a tile whose largest magnitude is
+/// `amax`, at quantization ceiling `qmax` (zero input gets scale 1.0).
+/// The single source of the symmetric-scale rule — [`quantize_sym`] and
+/// the in-place tile quantizers share it.
+#[inline]
+pub fn sym_scale(amax: f32, qmax: f32) -> f32 {
+    if amax > 0.0 {
+        amax / qmax
+    } else {
+        1.0
+    }
+}
+
+/// Quantize one value at a symmetric `scale`: round half to even (matching
+/// `np.rint`), clamp to `±qmax`.  The single source of the symmetric
+/// value rule, shared with [`quantize_sym`].
+#[inline]
+pub fn sym_quantize(x: f32, scale: f32, qmax: f32) -> i32 {
+    round_half_even(x / scale).clamp(-qmax, qmax) as i32
+}
+
 /// Symmetric per-tile quantization: returns `(q, scale)` with `a ≈ scale*q`,
 /// `|q| <= 2^(bits-1) - 1`.  Zero input gets scale 1.0.  Matches
 /// `ref.quantize_sym` (round-half-to-even like `np.rint`).
@@ -24,14 +45,8 @@ pub fn quantize_sym(a: &[f32], bits: u32) -> (Vec<i32>, f32) {
     assert!((2..=16).contains(&bits), "bits={bits}");
     let qmax = ((1i32 << (bits - 1)) - 1) as f32;
     let amax = a.iter().fold(0f32, |m, &x| m.max(x.abs()));
-    let scale = if amax > 0.0 { amax / qmax } else { 1.0 };
-    let q = a
-        .iter()
-        .map(|&x| {
-            let v = round_half_even(x / scale);
-            v.clamp(-qmax, qmax) as i32
-        })
-        .collect();
+    let scale = sym_scale(amax, qmax);
+    let q = a.iter().map(|&x| sym_quantize(x, scale, qmax)).collect();
     (q, scale)
 }
 
@@ -123,9 +138,27 @@ pub fn quantize_encode_into(a: &[f32], out: &mut [u8]) -> f32 {
 /// Same as [`quant_matmul_ref`] but over a pre-sign-extended i32 image —
 /// the optimized hot-path variant (EXPERIMENTS.md §Perf).
 pub fn quant_matmul_i32(u: &[u8], w: &[i32], m: usize, k: usize, n: usize) -> Vec<i32> {
+    let mut out = vec![0i32; m * n];
+    quant_matmul_i32_into(u, w, m, k, n, &mut out);
+    out
+}
+
+/// Allocation-free [`quant_matmul_i32`]: writes the `m * n` result into
+/// `out` (overwritten, not accumulated).  This is the steady-state compute
+/// kernel behind `TileExecutor::compute_into` — zero heap traffic per cycle
+/// (asserted by `tests/zero_alloc.rs`).
+pub fn quant_matmul_i32_into(
+    u: &[u8],
+    w: &[i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [i32],
+) {
     assert_eq!(u.len(), m * k);
     assert_eq!(w.len(), k * n);
-    let mut out = vec![0i32; m * n];
+    assert_eq!(out.len(), m * n);
+    out.fill(0);
     for i in 0..m {
         let urow = &u[i * k..(i + 1) * k];
         let orow = &mut out[i * n..(i + 1) * n];
@@ -142,7 +175,6 @@ pub fn quant_matmul_i32(u: &[u8], w: &[i32], m: usize, k: usize, n: usize) -> Ve
             }
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -230,6 +262,18 @@ mod tests {
             quant_matmul_ref(&u, &w8, m, k, n),
             quant_matmul_i32(&u, &w32, m, k, n)
         );
+    }
+
+    #[test]
+    fn quant_matmul_i32_into_overwrites_stale_output() {
+        let mut p = Prng::new(4);
+        let (m, k, n) = (3usize, 32usize, 5usize);
+        let u: Vec<u8> = (0..m * k).map(|_| p.next_u8()).collect();
+        let w: Vec<i32> = (0..k * n).map(|_| p.next_i8() as i32).collect();
+        let fresh = quant_matmul_i32(&u, &w, m, k, n);
+        let mut out = vec![i32::MAX; m * n]; // poisoned scratch
+        quant_matmul_i32_into(&u, &w, m, k, n, &mut out);
+        assert_eq!(out, fresh);
     }
 
     #[test]

@@ -3,8 +3,10 @@
 
 use psram_imc::compute::{ComputeEngine, InterleavePattern};
 use psram_imc::coordinator::{Coordinator, CoordinatorConfig};
-use psram_imc::device::DeviceParams;
-use psram_imc::mttkrp::pipeline::{CpuTileExecutor, PsramPipeline};
+use psram_imc::device::{Adc, DeviceParams, NoiseModel};
+use psram_imc::mttkrp::pipeline::{
+    AnalogTileExecutor, CpuTileExecutor, PsramPipeline, TileExecutor,
+};
 use psram_imc::mttkrp::plan::{DensePlanner, SparseSlicePlanner};
 use psram_imc::mttkrp::reference::dense_mttkrp;
 use psram_imc::mttkrp::SparsePsramPipeline;
@@ -246,7 +248,10 @@ fn prop_tile_plan_occupancy_and_geometry_bounded() {
                 );
                 for g in &plan.groups {
                     for img in &g.images {
-                        prop_assert_eq!(img.image.len(), rows * wpr);
+                        prop_assert_eq!(
+                            img.words(&plan.arena, rows * wpr).len(),
+                            rows * wpr
+                        );
                         prop_assert!(
                             img.r_cnt <= wpr && img.r0 + img.r_cnt <= plan.out_cols,
                             "rank block [{}, {}) outside geometry/output",
@@ -255,9 +260,14 @@ fn prop_tile_plan_occupancy_and_geometry_bounded() {
                         );
                     }
                     for s in &g.streams {
-                        prop_assert_eq!(s.codes.len(), s.lanes() * rows);
+                        prop_assert_eq!(
+                            s.codes_in(&plan.arena, rows).len(),
+                            s.lanes() * rows
+                        );
                         prop_assert!(
-                            s.targets.iter().all(|&t| t < plan.out_rows),
+                            s.targets_in(&plan.shape)
+                                .iter()
+                                .all(|&t| (t as usize) < plan.out_rows),
                             "accumulation target out of range"
                         );
                     }
@@ -303,6 +313,117 @@ fn prop_sparse_coordinator_equals_sparse_pipeline_bit_exactly() {
                 single.data() == dist.data(),
                 "sparse distributed result diverged (workers {workers} mode {mode})"
             );
+            Ok(())
+        },
+    );
+}
+
+/// Stream `lane_counts` cycles through `compute_block_into` and through
+/// per-cycle `compute_into` on an identically prepared twin; both the
+/// results and the compute-cycle ledgers must agree bit-exactly.
+fn assert_block_equals_cycles<E: TileExecutor>(
+    block_exec: &mut E,
+    cycle_exec: &mut E,
+    u: &[u8],
+    lane_counts: &[usize],
+) -> Result<(), String> {
+    let rows = block_exec.rows();
+    let wpr = block_exec.words_per_row();
+    let total: usize = lane_counts.iter().sum();
+    let mut block_out = vec![0i32; total * wpr];
+    block_exec
+        .compute_block_into(u, lane_counts, &mut block_out)
+        .map_err(|e| e.to_string())?;
+    let (mut co, mut oo) = (0usize, 0usize);
+    for &lanes in lane_counts {
+        let cycle = cycle_exec
+            .compute(&u[co..co + lanes * rows], lanes)
+            .map_err(|e| e.to_string())?;
+        if block_out[oo..oo + lanes * wpr] != cycle[..] {
+            return Err("block result diverged from per-cycle result".to_string());
+        }
+        co += lanes * rows;
+        oo += lanes * wpr;
+    }
+    if block_exec.cycles().compute != cycle_exec.cycles().compute {
+        return Err("block path charged different compute cycles".to_string());
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_compute_into_bit_identical_to_compute() {
+    // The allocation-free entry points (`compute_cycle_into`,
+    // `compute_into`, `compute_block_into`) must be bit-identical to the
+    // allocating paths across random geometries, lane counts, and noise
+    // modes (exact, Gaussian detector noise, coarse ADC).
+    check_with(
+        "compute_into == compute",
+        Config { cases: 20, max_size: 16, seed: 0xF9 },
+        |c| {
+            let rows = [32usize, 64, 128, 256][c.rng.below(4) as usize];
+            let cols = [64usize, 128, 256][c.rng.below(3) as usize];
+            let geom = ArrayGeometry::new(rows, cols, 8).map_err(|e| e.to_string())?;
+            let wpr = geom.words_per_row();
+            let lanes = 1 + c.rng.below(52) as usize;
+            let img: Vec<i8> =
+                (0..geom.total_words()).map(|_| c.rng.next_i8()).collect();
+            let u: Vec<u8> = (0..lanes * rows).map(|_| c.rng.next_u8()).collect();
+
+            // Noise mode: exact fast path, Gaussian noise, or coarse ADC
+            // (the latter two exercise the faithful path + colsum scratch).
+            let pick = c.rng.below(3);
+            let make_engine = || {
+                let mut params = DeviceParams::default();
+                match pick {
+                    0 => ComputeEngine::new(params, NoiseModel::Off),
+                    1 => ComputeEngine::new(params, NoiseModel::gaussian(50.0, 7)),
+                    _ => {
+                        params.adc = Adc::sar(10, f64::INFINITY);
+                        ComputeEngine::new(params, NoiseModel::Off)
+                    }
+                }
+            };
+
+            // Engine level: compute_cycle vs compute_cycle_into on twins.
+            let mut a1 = PsramArray::new(geom).map_err(|e| e.to_string())?;
+            a1.write_image(&img).map_err(|e| e.to_string())?;
+            let mut a2 = a1.clone();
+            let mut e1 = make_engine();
+            let mut e2 = make_engine();
+            let alloc =
+                e1.compute_cycle(&mut a1, &u, lanes).map_err(|e| e.to_string())?;
+            let mut out = vec![i32::MAX; lanes * wpr];
+            e2.compute_cycle_into(&mut a2, &u, lanes, &mut out)
+                .map_err(|e| e.to_string())?;
+            prop_assert!(
+                alloc == out,
+                "engine into-path diverged (rows {rows} wpr {wpr} lanes {lanes} \
+                 mode {pick})"
+            );
+            prop_assert!(a1.cycles.compute == a2.cycles.compute);
+
+            // Executor level on the paper tile: block call == per-cycle
+            // calls, for the CPU integer and the analog executor.
+            let paper_img: Vec<i8> = (0..256 * 32).map(|_| c.rng.next_i8()).collect();
+            let mut lane_counts = Vec::new();
+            for _ in 0..1 + c.rng.below(4) {
+                lane_counts.push(1 + c.rng.below(52) as usize);
+            }
+            let total: usize = lane_counts.iter().sum();
+            let codes: Vec<u8> = (0..total * 256).map(|_| c.rng.next_u8()).collect();
+
+            let mut cpu_a = CpuTileExecutor::paper();
+            let mut cpu_b = CpuTileExecutor::paper();
+            cpu_a.load_image(&paper_img).map_err(|e| e.to_string())?;
+            cpu_b.load_image(&paper_img).map_err(|e| e.to_string())?;
+            assert_block_equals_cycles(&mut cpu_a, &mut cpu_b, &codes, &lane_counts)?;
+
+            let mut an_a = AnalogTileExecutor::ideal();
+            let mut an_b = AnalogTileExecutor::ideal();
+            an_a.load_image(&paper_img).map_err(|e| e.to_string())?;
+            an_b.load_image(&paper_img).map_err(|e| e.to_string())?;
+            assert_block_equals_cycles(&mut an_a, &mut an_b, &codes, &lane_counts)?;
             Ok(())
         },
     );

@@ -5,7 +5,7 @@
 use psram_imc::compute::ComputeEngine;
 use psram_imc::coordinator::pool::{CoordinatedBackend, CoordinatedSparseBackend};
 use psram_imc::coordinator::{Coordinator, CoordinatorConfig};
-use psram_imc::cpd::{AlsConfig, CpAls, ExactBackend, PsramBackend};
+use psram_imc::cpd::{AlsConfig, CpAls, ExactBackend, MttkrpBackend, PsramBackend};
 use psram_imc::device::{DeviceParams, NoiseModel};
 use psram_imc::mttkrp::pipeline::{AnalogTileExecutor, CpuTileExecutor};
 use psram_imc::mttkrp::plan::{DensePlanner, SparseSlicePlanner, TilePlan};
@@ -246,6 +246,73 @@ fn predict_plan_matches_coordinator_measured_cycles_dense_and_sparse() {
     });
 }
 
+/// A deliberately cache-free coordinator backend: plans every MTTKRP from
+/// scratch through `Coordinator::mttkrp` / `sparse_mttkrp`.  Used to pin
+/// the plan-cached default backends bit-exactly to uncached planning.
+struct UncachedDense<'a> {
+    tensor: &'a DenseTensor,
+    pool: Coordinator,
+}
+
+impl MttkrpBackend for UncachedDense<'_> {
+    fn mttkrp(&mut self, factors: &[Matrix], mode: usize) -> psram_imc::Result<Matrix> {
+        self.pool.mttkrp(self.tensor, factors, mode)
+    }
+    fn shape(&self) -> &[usize] {
+        self.tensor.shape()
+    }
+    fn norm_sq(&self) -> f64 {
+        let n = self.tensor.fro_norm();
+        n * n
+    }
+}
+
+struct UncachedSparse<'a> {
+    tensor: &'a CooTensor,
+    pool: Coordinator,
+}
+
+impl MttkrpBackend for UncachedSparse<'_> {
+    fn mttkrp(&mut self, factors: &[Matrix], mode: usize) -> psram_imc::Result<Matrix> {
+        self.pool.sparse_mttkrp(self.tensor, factors, mode)
+    }
+    fn shape(&self) -> &[usize] {
+        self.tensor.shape()
+    }
+    fn norm_sq(&self) -> f64 {
+        self.tensor.values().iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+}
+
+#[test]
+fn plan_cached_als_identical_to_uncached_planning() {
+    // The per-mode plan caches must not change a single bit of the ALS
+    // trajectory: iterations 2..N requantize cached arenas in place, and
+    // the fit history has to equal planning from scratch every call.
+    let x = low_rank(41, &[26, 18, 14], 3, 0.02);
+    let cfg = AlsConfig { rank: 3, max_iters: 12, tol: 0.0, seed: 5 };
+
+    let spawn = || Coordinator::with_workers(3, |_| Ok(CpuTileExecutor::paper())).unwrap();
+    let mut cached = CoordinatedBackend::new(&x, spawn());
+    let r1 = CpAls::new(cfg.clone()).run(&mut cached).unwrap();
+    let mut uncached = UncachedDense { tensor: &x, pool: spawn() };
+    let r2 = CpAls::new(cfg.clone()).run(&mut uncached).unwrap();
+    assert_eq!(r1.fit_history, r2.fit_history);
+    assert_eq!(r1.lambda, r2.lambda);
+    for (a, b) in r1.factors.iter().zip(&r2.factors) {
+        assert_eq!(a.data(), b.data());
+    }
+
+    // Sparse: same invariant through the slice-wise plans.
+    let coo = CooTensor::from_dense(&x, 0.0);
+    let mut cached = CoordinatedSparseBackend::new(&coo, spawn());
+    let r3 = CpAls::new(cfg.clone()).run(&mut cached).unwrap();
+    let mut uncached = UncachedSparse { tensor: &coo, pool: spawn() };
+    let r4 = CpAls::new(cfg).run(&mut uncached).unwrap();
+    assert_eq!(r3.fit_history, r4.fit_history);
+    assert_eq!(r3.lambda, r4.lambda);
+}
+
 #[test]
 fn coordinated_sparse_cp_als_decomposes_sparsified_low_rank() {
     let mut rng = Prng::new(36);
@@ -275,7 +342,7 @@ fn coordinated_cp_als_with_many_workers() {
         |_| Ok(CpuTileExecutor::paper()),
     )
     .unwrap();
-    let mut backend = CoordinatedBackend { tensor: &x, pool };
+    let mut backend = CoordinatedBackend::new(&x, pool);
     let res = CpAls::new(AlsConfig { rank: 4, max_iters: 25, tol: 1e-6, seed: 12 })
         .run(&mut backend)
         .unwrap();

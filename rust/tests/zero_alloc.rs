@@ -1,0 +1,134 @@
+//! Steady-state allocation accounting for the plan execution engine.
+//!
+//! A counting `#[global_allocator]` wraps the system allocator; after a
+//! warm-up run has grown every scratch buffer, a full `execute_plan_into`
+//! pass over dense and sparse plans — and an in-place `replan_into` — must
+//! perform **zero** heap allocations.  This pins the zero-allocation
+//! contract of `compute_into` / `compute_block_into` /
+//! `quant_matmul_i32_into` / the arena-backed plan split end to end: no
+//! per-cycle result vectors, no per-image partial churn, no per-call
+//! scratch.
+//!
+//! Keep this file to a single `#[test]`: the counter is process-global,
+//! and a concurrently running sibling test would perturb the count.
+
+use psram_imc::mttkrp::pipeline::CpuTileExecutor;
+use psram_imc::mttkrp::plan::{
+    execute_plan_into, DensePlanner, PlanScratch, SparseSlicePlanner,
+};
+use psram_imc::mttkrp::MttkrpStats;
+use psram_imc::tensor::{CooTensor, Matrix};
+use psram_imc::util::prng::Prng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// System allocator wrapper counting every allocation event.
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::SeqCst);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+#[test]
+fn steady_state_plan_execution_allocates_nothing() {
+    let mut rng = Prng::new(42);
+
+    // Dense: 2 K-blocks × 2 R-blocks × 3 lane batches.
+    let unf = Matrix::randn(120, 300, &mut rng);
+    let krp_a = Matrix::randn(300, 40, &mut rng);
+    let krp_b = Matrix::randn(300, 40, &mut rng);
+    let planner = DensePlanner::new(256, 32, 52);
+    let mut dense_plan = planner.plan_unfolded(&unf, &krp_a).unwrap();
+
+    // Sparse: 2 stored-factor groups, slice-chunked streams with CP2
+    // scale vectors.
+    let shape = [24usize, 300, 8];
+    let coo = CooTensor::random(&shape, 500, &mut rng);
+    let factors: Vec<Matrix> =
+        shape.iter().map(|&d| Matrix::randn(d, 16, &mut rng)).collect();
+    let sparse_planner = SparseSlicePlanner::new(256, 32, 52);
+    let sparse_plan = sparse_planner.plan(&coo, &factors, 0).unwrap();
+
+    let mut exec = CpuTileExecutor::paper();
+    let mut stats = MttkrpStats::default();
+    let mut scratch = PlanScratch::default();
+    let mut dense_out = Matrix::zeros(120, 40);
+    let mut sparse_out = Matrix::zeros(24, 16);
+
+    // Warm-up: grows the scratch (tile block buffer, partials) once.
+    execute_plan_into(&mut exec, &dense_plan, &mut scratch, &mut stats, &mut dense_out)
+        .unwrap();
+    execute_plan_into(&mut exec, &sparse_plan, &mut scratch, &mut stats, &mut sparse_out)
+        .unwrap();
+    let warm_dense = dense_out.data().to_vec();
+    let warm_sparse = sparse_out.data().to_vec();
+
+    // Steady state: repeated full executions allocate nothing.
+    let before = allocs();
+    for _ in 0..3 {
+        execute_plan_into(
+            &mut exec,
+            &dense_plan,
+            &mut scratch,
+            &mut stats,
+            &mut dense_out,
+        )
+        .unwrap();
+        execute_plan_into(
+            &mut exec,
+            &sparse_plan,
+            &mut scratch,
+            &mut stats,
+            &mut sparse_out,
+        )
+        .unwrap();
+    }
+    let steady = allocs() - before;
+    assert_eq!(
+        steady, 0,
+        "steady-state execute_plan_into made {steady} heap allocations"
+    );
+    // ... and still computes the right bits.
+    assert_eq!(dense_out.data(), &warm_dense[..]);
+    assert_eq!(sparse_out.data(), &warm_sparse[..]);
+
+    // In-place requantization is allocation-free too: the cached arena is
+    // uniquely held, so `Arc::make_mut` never clones.
+    let before = allocs();
+    planner.replan_into(None, &krp_b, &mut dense_plan).unwrap();
+    let replan = allocs() - before;
+    assert_eq!(replan, 0, "replan_into made {replan} heap allocations");
+
+    // The refilled plan executes without allocating either.
+    let before = allocs();
+    execute_plan_into(&mut exec, &dense_plan, &mut scratch, &mut stats, &mut dense_out)
+        .unwrap();
+    let steady = allocs() - before;
+    assert_eq!(steady, 0, "post-replan execution made {steady} allocations");
+}
