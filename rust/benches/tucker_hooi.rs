@@ -1,0 +1,151 @@
+//! TUCKER — the Tucker/HOOI workload on the tile-plan IR.
+//!
+//! Three sections:
+//! 1. TTM shard sweep — one dense TTM plan distributed over 1→16
+//!    coordinator shards, wall-clock + device-model sustained throughput
+//!    against `PerfModel::predict_plan`: the cycle census is *exact*
+//!    (predicted == measured), not an envelope;
+//! 2. steady-state HOOI iteration — what a plan-cached HOOI sweep pays
+//!    per fixed-stream TTM (image requantization only) vs cold planning
+//!    (unfold + transpose + full quantization) every call;
+//! 3. end-to-end HOOI — a full decomposition on the 4-shard coordinator
+//!    with the reconstruction fit.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use psram_imc::coordinator::{Coordinator, CoordinatorConfig};
+use psram_imc::mttkrp::cache::TtmPlanCache;
+use psram_imc::mttkrp::pipeline::CpuTileExecutor;
+use psram_imc::mttkrp::plan::TtmPlanner;
+use psram_imc::perfmodel::{PerfModel, Workload};
+use psram_imc::tensor::{DenseTensor, Matrix};
+use psram_imc::tucker::{
+    tucker_fit, tucker_reconstruct, CoordinatedTtmBackend, TuckerConfig, TuckerHooi,
+};
+use psram_imc::util::prng::Prng;
+use psram_imc::util::units::format_ops;
+
+fn main() {
+    let mut rng = Prng::new(17);
+
+    // One dense TTM: X (4096 x 52 x 40) ×₀ Uᵀ with U [4096, 64] —
+    // 16 contraction blocks x 2 rank blocks = 32 images, 40 lane batches
+    // per group, so sharding and batching are both exercised.
+    let shape = [4096usize, 52, 40];
+    let x = DenseTensor::randn(&shape, &mut rng);
+    let u = Matrix::randn(4096, 64, &mut rng);
+    let planner = TtmPlanner::new(256, 32, 52);
+    let plan = planner.plan_ttm(&x, &u, 0).unwrap();
+    let workload = Workload::ttm(&shape, 0, 64).unwrap();
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    common::section(&format!(
+        "TUCKER: sharded TTM {}x{}x{} x0 U^T (rank 64) vs shard count \
+         ({cores} core(s) available)",
+        shape[0], shape[1], shape[2]
+    ));
+    if cores == 1 {
+        println!("NOTE: single-core machine — parallel speedup is physically impossible;");
+        println!("      this bench then measures coordination OVERHEAD (should be ~flat).");
+    }
+
+    let mut t1 = 0.0;
+    let mut exact = true;
+    for &shards in &[1usize, 2, 4, 8, 16] {
+        let mut model = PerfModel::paper();
+        model.num_arrays = shards;
+        let cfg = CoordinatorConfig::from_model(&model, &workload);
+        let t = common::bench(
+            &format!("ttm 2080x4096x64 shards={shards:>2}"),
+            1,
+            3,
+            || {
+                let mut pool = Coordinator::spawn(cfg.clone(), |_| {
+                    Ok(CpuTileExecutor::paper())
+                })
+                .unwrap();
+                pool.execute_plan(&plan).unwrap();
+            },
+        );
+        if shards == 1 {
+            t1 = t;
+        } else {
+            println!("  -> speedup vs 1 shard: {:.2}x", t1 / t);
+        }
+
+        // predict_plan scores a TTM plan exactly like dense MTTKRP: the
+        // cycle census must equal the pool's measured metrics bit for bit.
+        let est = model.predict_plan(&plan).unwrap();
+        let mut pool =
+            Coordinator::spawn(cfg, |_| Ok(CpuTileExecutor::paper())).unwrap();
+        pool.execute_plan(&plan).unwrap();
+        let m = pool.metrics();
+        let snap = m.snapshot();
+        let ok = est.images == snap[1].1
+            && est.compute_cycles == snap[2].1
+            && est.reconfig_write_cycles == snap[3].1
+            && (est.utilization - m.utilization()).abs() < 1e-12;
+        exact &= ok;
+        println!(
+            "  -> sustained {} measured vs {} predicted \
+             (U {:.4}, predicted==measured: {})",
+            format_ops(model.peak_ops() * m.utilization()),
+            format_ops(est.sustained_raw_ops),
+            est.utilization,
+            if ok { "EXACT" } else { "MISS" },
+        );
+    }
+    println!(
+        "\nprediction envelope: {}",
+        if exact { "cycle-exact at every shard count" } else { "MISSED" }
+    );
+
+    common::section("TUCKER: steady-state HOOI iteration @ 4 shards (plan cache)");
+    // What a plan-cached HOOI sweep pays for a fixed-stream TTM from
+    // iteration 2 on: requantize the stored factor images in place, then
+    // execute.  The cold row re-unfolds, re-transposes, and re-quantizes
+    // the whole streamed operand every call.
+    {
+        let mut pool = Coordinator::spawn(CoordinatorConfig::new(4), |_| {
+            Ok(CpuTileExecutor::paper())
+        })
+        .unwrap();
+        let t_cold = common::bench("cold: unfold + plan + execute", 1, 3, || {
+            let plan = planner.plan_ttm(&x, &u, 0).unwrap();
+            pool.execute_plan(&plan).unwrap();
+        });
+        let mut cache = TtmPlanCache::new(planner);
+        cache.plan_fixed_stream(0, &x, 0, &u).unwrap();
+        let t_warm = common::bench("steady: replan_into + execute", 1, 3, || {
+            let plan = cache.plan_fixed_stream(0, &x, 0, &u).unwrap();
+            pool.execute_plan(plan).unwrap();
+        });
+        println!("  -> steady-state HOOI-iteration speedup: {:.2}x", t_cold / t_warm);
+    }
+
+    common::section("TUCKER: end-to-end HOOI (64x56x48 -> core 8x8x8) @ 4 shards");
+    let shape2 = [64usize, 56, 48];
+    let ranks = vec![8usize, 8, 8];
+    let core = DenseTensor::randn(&ranks, &mut rng);
+    let truth: Vec<Matrix> = shape2
+        .iter()
+        .zip(&ranks)
+        .map(|(&d, &r)| Matrix::randn(d, r, &mut rng))
+        .collect();
+    let x2 = tucker_reconstruct(&core, &truth).unwrap();
+    let hooi = TuckerHooi::new(TuckerConfig {
+        ranks: ranks.clone(),
+        max_iters: 10,
+        tol: 1e-6,
+    });
+    let mut fit = 0.0;
+    common::bench("hooi 10 sweeps (coordinator x4)", 1, 3, || {
+        let pool =
+            Coordinator::with_workers(4, |_| Ok(CpuTileExecutor::paper())).unwrap();
+        let mut backend = CoordinatedTtmBackend::new(pool);
+        let res = hooi.run(&x2, &mut backend).unwrap();
+        fit = tucker_fit(&x2, &res.core, &res.factors).unwrap();
+    });
+    println!("  -> reconstruction fit {fit:.6}");
+}

@@ -7,6 +7,7 @@ use std::collections::HashMap;
 /// Parsed command line: subcommand + options.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// The subcommand (first positional argument).
     pub command: String,
     opts: HashMap<String, String>,
     flags: Vec<String>,

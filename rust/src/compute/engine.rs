@@ -82,6 +82,7 @@ pub struct ComputeEngine {
     noise: NoiseModel,
     /// Column-sum scratch of the faithful path (steady-state reuse).
     colsum: Vec<i64>,
+    /// Accumulated per-engine compute statistics.
     pub stats: ComputeStats,
 }
 

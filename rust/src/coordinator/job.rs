@@ -10,7 +10,7 @@
 //! block or a sparse factor J-block), so a worker streams one quantized
 //! operand slice against the whole batch: the §V.B compute/write
 //! interleave amortization that makes reconfiguration writes cheap at
-//! scale (see `DESIGN.md` §11).
+//! scale (see `DESIGN.md` §12).
 
 use crate::mttkrp::plan::TilePlan;
 use std::ops::Range;

@@ -33,7 +33,7 @@ use crate::mttkrp::cache::{DensePlanCache, SparsePlanCache};
 use crate::mttkrp::pipeline::TileExecutor;
 use crate::mttkrp::plan::{
     fold_partial, run_image_into, DensePlanner, SparseSlicePlanner, TilePlan,
-    TileScratch,
+    TileScratch, TtmPlanner,
 };
 use crate::mttkrp::MttkrpStats;
 use crate::perfmodel::{PerfModel, Workload};
@@ -298,6 +298,34 @@ impl Coordinator {
     /// shard-addressed batches (indices into the shared arena-backed
     /// plan — no payload copies), stream them under backpressure, and
     /// reduce the partials in plan order.
+    ///
+    /// Works for *any* plan the planners emit — dense MTTKRP, sparse
+    /// slice-wise MTTKRP, or Tucker TTM — and is bit-identical to the
+    /// single-array [`crate::mttkrp::plan::execute_plan`] for every
+    /// worker count and steal schedule:
+    ///
+    /// ```
+    /// use psram_imc::coordinator::Coordinator;
+    /// use psram_imc::mttkrp::pipeline::CpuTileExecutor;
+    /// use psram_imc::mttkrp::plan::{execute_plan, DensePlanner};
+    /// use psram_imc::mttkrp::MttkrpStats;
+    /// use psram_imc::tensor::Matrix;
+    /// use psram_imc::util::prng::Prng;
+    ///
+    /// let mut rng = Prng::new(7);
+    /// let unf = Matrix::randn(60, 300, &mut rng); // [I, K]
+    /// let krp = Matrix::randn(300, 8, &mut rng); // [K, R]
+    /// let plan = DensePlanner::new(256, 32, 52).plan_unfolded(&unf, &krp).unwrap();
+    ///
+    /// let mut pool =
+    ///     Coordinator::with_workers(2, |_| Ok(CpuTileExecutor::paper())).unwrap();
+    /// let distributed = pool.execute_plan(&plan).unwrap();
+    ///
+    /// let mut exec = CpuTileExecutor::paper();
+    /// let mut stats = MttkrpStats::default();
+    /// let single = execute_plan(&mut exec, &plan, &mut stats).unwrap();
+    /// assert_eq!(distributed.data(), single.data());
+    /// ```
     pub fn execute_plan(&mut self, plan: &TilePlan) -> Result<Matrix> {
         plan.validate()?;
         if plan.rows != self.rows || plan.wpr != self.wpr {
@@ -428,6 +456,12 @@ impl Coordinator {
     /// A sparse slice planner matching the pool's tile geometry.
     pub fn sparse_planner(&self) -> SparseSlicePlanner {
         SparseSlicePlanner::new(self.rows, self.wpr, self.lanes)
+    }
+
+    /// A TTM planner matching the pool's tile geometry (Tucker/HOOI
+    /// plans; see [`crate::tucker`]).
+    pub fn ttm_planner(&self) -> TtmPlanner {
+        TtmPlanner::new(self.rows, self.wpr, self.lanes)
     }
 
     /// Distributed quantized MTTKRP: `unf [I, K] @ krp [K, R]`.

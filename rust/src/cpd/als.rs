@@ -51,10 +51,12 @@ impl AlsResult {
 
 /// The CP-ALS driver.
 pub struct CpAls {
+    /// The run configuration.
     pub config: AlsConfig,
 }
 
 impl CpAls {
+    /// Driver for a configuration.
     pub fn new(config: AlsConfig) -> Self {
         CpAls { config }
     }

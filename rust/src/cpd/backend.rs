@@ -34,6 +34,7 @@ pub trait MttkrpBackend {
 
 /// Exact f32 dense CPU backend.
 pub struct ExactBackend<'a> {
+    /// The decomposition target.
     pub tensor: &'a DenseTensor,
 }
 
@@ -58,6 +59,7 @@ impl MttkrpBackend for ExactBackend<'_> {
 
 /// Exact f32 sparse (COO) CPU backend.
 pub struct SparseBackend<'a> {
+    /// The decomposition target.
     pub tensor: &'a CooTensor,
 }
 
@@ -88,6 +90,7 @@ pub struct PsramBackend<'a, E: TileExecutor> {
     /// The decomposition target.  Private: the plan cache is keyed to this
     /// tensor, so it must not be swapped under a warm cache.
     tensor: &'a DenseTensor,
+    /// The executor running every plan.
     pub exec: E,
     /// Accumulated pipeline statistics across all mttkrp calls.
     pub stats: MttkrpStats,
@@ -98,6 +101,7 @@ pub struct PsramBackend<'a, E: TileExecutor> {
 }
 
 impl<'a, E: TileExecutor> PsramBackend<'a, E> {
+    /// Backend decomposing `tensor` on `exec`.
     pub fn new(tensor: &'a DenseTensor, exec: E) -> Self {
         let cache = DensePlanCache::new(DensePlanner::for_executor(&exec), tensor.ndim());
         PsramBackend {

@@ -42,11 +42,17 @@ use crate::util::error::{Error, Result};
 /// paper's defaults (§III, §V.A).
 #[derive(Debug, Clone)]
 pub struct DeviceParams {
+    /// O-band frequency comb (the WDM channel source).
     pub comb: FrequencyComb,
+    /// Micro-ring resonator parameters (channel plan, thermal model).
     pub ring: MicroRing,
+    /// Comb shaper encoding inputs onto comb lines.
     pub shaper: CombShaper,
+    /// Photodiode (responsivity + noise sources).
     pub pd: Photodiode,
+    /// Readout ADC (ideal or SAR).
     pub adc: Adc,
+    /// Laser-to-detector optical power budget.
     pub link: LinkBudget,
     /// Compute (read) clock in Hz — the paper operates at 20 GHz.
     pub clock_hz: f64,

@@ -14,8 +14,11 @@ use crate::util::units::format_energy;
 /// Analytic energy model for one configuration.
 #[derive(Debug, Clone)]
 pub struct EnergyModel {
+    /// Photonic component parameters (modulator/ADC/laser energy).
     pub device: DeviceParams,
+    /// Bitcell energy numbers (switching + static).
     pub bitcell: BitcellParams,
+    /// The performance model supplying cycle counts.
     pub model: PerfModel,
     /// Average fraction of bits that toggle on a word write (0.5 for
     /// random data — measured ledgers count exact flips).
@@ -80,10 +83,15 @@ impl EnergyModel {
 /// Predicted energy by source.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EnergyBreakdown {
+    /// Bitcell switching energy (J).
     pub switching_j: f64,
+    /// Bitcell static energy (J).
     pub static_j: f64,
+    /// Input modulator energy (J).
     pub modulator_j: f64,
+    /// Readout ADC energy (J).
     pub adc_j: f64,
+    /// Laser wall-plug energy (J).
     pub laser_j: f64,
 }
 

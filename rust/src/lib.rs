@@ -22,6 +22,10 @@
 //!   plan caches for CP-ALS (`mttkrp::cache`), and CPU reference
 //!   implementations (dense + sparse) used as baselines.
 //! * [`cpd`] — CP-ALS tensor decomposition with a pluggable MTTKRP backend.
+//! * [`tucker`] — Tucker decomposition: HOSVD initialization + HOOI
+//!   iterations whose TTM chains lower through the same tile-plan IR
+//!   (`TtmPlanner`) and run on any executor or the coordinator, with
+//!   per-chain-slot plan caching.
 //! * [`perfmodel`] — the paper's predictive performance model (Fig. 5, the
 //!   17 PetaOps headline) plus sweep drivers.
 //! * [`energy`] — energy accounting from the paper's device numbers
@@ -41,6 +45,10 @@
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured results.
 
+// Every public item carries rustdoc (module docs cite the paper section
+// they model); the CI `cargo doc` gate runs with `-D warnings`.
+#![warn(missing_docs)]
+
 pub mod cli;
 pub mod compute;
 pub mod coordinator;
@@ -52,6 +60,7 @@ pub mod perfmodel;
 pub mod psram;
 pub mod runtime;
 pub mod tensor;
+pub mod tucker;
 pub mod util;
 
 pub use util::error::{Error, Result};

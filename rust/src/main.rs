@@ -7,6 +7,10 @@
 //!                     [--workers N] [--batch N] [--noise SIGMA] [--seed S] [--sparse DENSITY]
 //!                     (default backend: coordinator — the sharded batched multi-array pool;
 //!                      with --sparse the spMTTKRP slice plans run on the same pool)
+//! psram-imc tucker    [--shape I,J,K] [--ranks R1,R2,R3 | --rank R] [--iters N]
+//!                     [--backend exact|psram|coordinator] [--workers N] [--batch N]
+//!                     [--noise SIGMA] [--seed S]
+//!                     (Tucker/HOOI via TTM tile plans; default backend: coordinator)
 //! psram-imc energy    [--channels N] [--freq GHZ]
 //! psram-imc selftest            # analog vs CPU vs PJRT cross-check
 //! ```
@@ -25,6 +29,10 @@ use psram_imc::perfmodel::{fig5_frequency, fig5_wavelengths, PerfModel, Workload
 use psram_imc::psram::PsramArray;
 use psram_imc::runtime::PjrtTileExecutor;
 use psram_imc::tensor::{DenseTensor, Matrix};
+use psram_imc::tucker::{
+    tucker_fit, tucker_reconstruct, CoordinatedTtmBackend, ExactTtmBackend,
+    PsramTtmBackend, TuckerConfig, TuckerHooi,
+};
 use psram_imc::util::prng::Prng;
 use psram_imc::util::units::{format_energy, format_ops};
 use psram_imc::Result;
@@ -52,6 +60,7 @@ fn run(args: &Args) -> Result<()> {
         "perf" => cmd_perf(args),
         "sweep" => cmd_sweep(args),
         "cpd" => cmd_cpd(args),
+        "tucker" => cmd_tucker(args),
         "energy" => cmd_energy(args),
         "selftest" => cmd_selftest(args),
         "" | "help" => {
@@ -74,6 +83,7 @@ COMMANDS:
   perf      predictive performance model (paper §V)
   sweep     Fig. 5 series (--axis wavelengths|frequency)
   cpd       CP-ALS decomposition on a synthetic tensor
+  tucker    Tucker/HOOI decomposition via TTM tile plans
   energy    energy breakdown for the paper workload
   selftest  analog / CPU / PJRT bit-exactness cross-check
   help      this text
@@ -153,6 +163,37 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// One simulated analog array executor: noisy (Gaussian detector noise,
+/// deterministic from `seed`) when `noise > 0`, bit-exact otherwise.
+fn analog_executor(noise: f64, seed: u64) -> AnalogTileExecutor {
+    let engine = if noise > 0.0 {
+        ComputeEngine::new(DeviceParams::default(), NoiseModel::gaussian(noise, seed))
+    } else {
+        ComputeEngine::ideal()
+    };
+    AnalogTileExecutor::new(engine, PsramArray::paper())
+}
+
+/// Print a pool configuration the way every coordinator-backed command does.
+fn print_pool_config(cfg: &CoordinatorConfig) {
+    println!(
+        "coordinator config: {} shard(s), queue depth {}, batch {} image(s), steal {}",
+        cfg.workers, cfg.queue_depth, cfg.batch_size, cfg.steal
+    );
+}
+
+/// Spawn a pool of analog-array workers; with `noise > 0` every worker
+/// gets its own deterministic RNG stream derived from `seed`.
+fn spawn_analog_pool(
+    cfg: CoordinatorConfig,
+    noise: f64,
+    seed: u64,
+) -> Result<Coordinator> {
+    Coordinator::spawn(cfg, |i| {
+        Ok(analog_executor(noise, (seed ^ 0x77).wrapping_add(i as u64)))
+    })
+}
+
 fn cmd_cpd(args: &Args) -> Result<()> {
     let shape = args.get_usize_list("shape")?.unwrap_or_else(|| vec![48, 40, 36]);
     let rank = args.get_or("rank", 8usize)?;
@@ -191,10 +232,7 @@ fn cmd_cpd(args: &Args) -> Result<()> {
                 let workers = args.get_or("workers", 4usize)?;
                 let mut cfg = CoordinatorConfig::new(workers);
                 cfg.batch_size = args.get_or("batch", cfg.batch_size)?;
-                println!(
-                    "coordinator config: {} shard(s), queue depth {}, batch {} image(s), steal {}",
-                    cfg.workers, cfg.queue_depth, cfg.batch_size, cfg.steal
-                );
+                print_pool_config(&cfg);
                 let pool = Coordinator::spawn(cfg, |_| Ok(CpuTileExecutor::paper()))?;
                 let mut backend = CoordinatedSparseBackend::new(&coo, pool);
                 let r = als.run(&mut backend)?;
@@ -235,15 +273,7 @@ fn cmd_cpd(args: &Args) -> Result<()> {
     let res = match backend_kind {
         "exact" => als.run(&mut ExactBackend { tensor: &x })?,
         "psram" => {
-            let engine = if noise > 0.0 {
-                ComputeEngine::new(
-                    DeviceParams::default(),
-                    NoiseModel::gaussian(noise, seed ^ 0x77),
-                )
-            } else {
-                ComputeEngine::ideal()
-            };
-            let exec = AnalogTileExecutor::new(engine, PsramArray::paper());
+            let exec = analog_executor(noise, seed ^ 0x77);
             let mut backend = PsramBackend::new(&x, exec);
             let r = als.run(&mut backend)?;
             println!(
@@ -268,28 +298,10 @@ fn cmd_cpd(args: &Args) -> Result<()> {
             };
             let mut cfg = CoordinatorConfig::from_model(&model, &wl);
             cfg.batch_size = args.get_or("batch", cfg.batch_size)?;
-            println!(
-                "coordinator config: {} shard(s), queue depth {}, batch {} image(s), steal {}",
-                cfg.workers, cfg.queue_depth, cfg.batch_size, cfg.steal
-            );
+            print_pool_config(&cfg);
             // --noise works here too: noisy analog workers (per-worker RNG
             // streams) instead of the exact integer executor.
-            let pool = if noise > 0.0 {
-                Coordinator::spawn(cfg, |i| {
-                    let engine = ComputeEngine::new(
-                        DeviceParams::default(),
-                        NoiseModel::gaussian(noise, (seed ^ 0x77).wrapping_add(i as u64)),
-                    );
-                    Ok(AnalogTileExecutor::new(engine, PsramArray::paper()))
-                })?
-            } else {
-                Coordinator::spawn(cfg, |_| {
-                    Ok(AnalogTileExecutor::new(
-                        ComputeEngine::ideal(),
-                        PsramArray::paper(),
-                    ))
-                })?
-            };
+            let pool = spawn_analog_pool(cfg, noise, seed)?;
             let mut backend = CoordinatedBackend::new(&x, pool);
             let r = als.run(&mut backend)?;
             print_pool_metrics(&backend.pool);
@@ -313,6 +325,96 @@ fn cmd_cpd(args: &Args) -> Result<()> {
     println!(
         "final fit {:.6} after {} sweeps ({}) in {:.2?}",
         res.final_fit(),
+        res.iters,
+        if res.converged { "converged" } else { "max iters" },
+        dt
+    );
+    Ok(())
+}
+
+fn cmd_tucker(args: &Args) -> Result<()> {
+    let shape = args.get_usize_list("shape")?.unwrap_or_else(|| vec![32, 28, 24]);
+    let rank = args.get_or("rank", 6usize)?;
+    let ranks = args
+        .get_usize_list("ranks")?
+        .unwrap_or_else(|| vec![rank; shape.len()]);
+    let iters = args.get_or("iters", 25usize)?;
+    let seed = args.get_or("seed", 42u64)?;
+    let noise = args.get_or("noise", 0.0f64)?;
+    let backend_kind = args.get("backend").unwrap_or("coordinator");
+    if ranks.len() != shape.len() {
+        return Err(psram_imc::Error::config(format!(
+            "--ranks has {} entries for a {}-mode shape",
+            ranks.len(),
+            shape.len()
+        )));
+    }
+
+    // Synthetic low-multilinear-rank tensor + measurement noise.
+    let mut rng = Prng::new(seed);
+    let core = DenseTensor::randn(&ranks, &mut rng);
+    let truth: Vec<Matrix> = shape
+        .iter()
+        .zip(&ranks)
+        .map(|(&d, &r)| Matrix::randn(d, r, &mut rng))
+        .collect();
+    let mut x = tucker_reconstruct(&core, &truth)?;
+    for v in x.data_mut() {
+        *v += 0.01 * rng.normal() as f32;
+    }
+
+    let hooi = TuckerHooi::new(TuckerConfig {
+        ranks: ranks.clone(),
+        max_iters: iters,
+        tol: 1e-6,
+    });
+    println!("tensor {shape:?}, ranks {ranks:?}, backend {backend_kind}");
+
+    let t0 = std::time::Instant::now();
+    let res = match backend_kind {
+        "exact" => hooi.run(&x, &mut ExactTtmBackend)?,
+        "psram" => {
+            // --noise: detector noise on the simulated analog array.
+            let exec = analog_executor(noise, seed ^ 0x77);
+            let mut backend = PsramTtmBackend::new(exec);
+            let r = hooi.run(&x, &mut backend)?;
+            println!(
+                "pipeline: images={} compute_cycles={} write_cycles={} U={:.4}",
+                backend.stats.images,
+                backend.stats.compute_cycles,
+                backend.stats.write_cycles,
+                backend.stats.utilization()
+            );
+            r
+        }
+        "coordinator" => {
+            let workers = args.get_or("workers", 4usize)?;
+            let mut cfg = CoordinatorConfig::new(workers);
+            cfg.batch_size = args.get_or("batch", cfg.batch_size)?;
+            print_pool_config(&cfg);
+            let pool = spawn_analog_pool(cfg, noise, seed)?;
+            let mut backend = CoordinatedTtmBackend::new(pool);
+            let r = hooi.run(&x, &mut backend)?;
+            print_pool_metrics(&backend.pool);
+            r
+        }
+        other => {
+            return Err(psram_imc::Error::config(format!(
+                "unknown tucker backend {other:?} (use coordinator, psram or exact)"
+            )))
+        }
+    };
+    let dt = t0.elapsed();
+
+    for (i, fit) in res.fit_history.iter().enumerate() {
+        println!("sweep {:>3}: fit {:.6}", i + 1, fit);
+    }
+    // Ground-truth reconstruction fit alongside the in-run identity fit.
+    let bf = tucker_fit(&x, &res.core, &res.factors)?;
+    println!(
+        "final fit {:.6} (reconstruction fit {:.6}) after {} sweeps ({}) in {:.2?}",
+        res.final_fit(),
+        bf,
         res.iters,
         if res.converged { "converged" } else { "max iters" },
         dt

@@ -18,8 +18,13 @@
 //! dimensions stop matching (e.g. a rank change); feeding a *different*
 //! tensor of identical dimensions is undetectable and yields stale
 //! streams — don't share caches across tensors.
+//!
+//! Tucker/HOOI gets the same treatment from [`TtmPlanCache`]: one slot
+//! per TTM-chain position instead of one per mode, with the first TTM of
+//! every chain (which streams the fixed decomposition target) skipping
+//! stream requantization exactly like the dense MTTKRP cache.
 
-use super::plan::{DensePlanner, SparseSlicePlanner, TilePlan};
+use super::plan::{DensePlanner, SparseSlicePlanner, TilePlan, TtmPlanner};
 use crate::tensor::{krp_all_but, CooTensor, DenseTensor, Matrix};
 use crate::util::error::{Error, Result};
 
@@ -138,6 +143,123 @@ impl SparsePlanCache {
     }
 }
 
+/// Slot-indexed cache of TTM tile plans for Tucker/HOOI
+/// ([`crate::tucker`]).
+///
+/// HOOI runs, per output mode, a fixed *chain* of TTMs whose shapes never
+/// change across iterations (the mode dimensions and target ranks are
+/// fixed) — only the payloads move.  The driver assigns each chain
+/// position a stable `slot`; the cache keeps one arena-backed plan per
+/// slot and requantizes it in place on every later call:
+///
+/// * [`TtmPlanCache::plan_fixed_stream`] — for slots whose streamed
+///   operand is the *decomposition target* (the first TTM of every
+///   chain): iterations 2..N skip the unfolding, the transpose, and the
+///   whole stream requantization, refilling only the stored factor
+///   images (`replan_into(None, u)`);
+/// * [`TtmPlanCache::plan_streamed`] — for slots streaming an
+///   intermediate chain tensor that changes every iteration: streams and
+///   images are both refilled in place, but the plan layout (grouping,
+///   arena allocation) is still reused.
+///
+/// Same contract as the MTTKRP caches: one cache per decomposition
+/// target, bit-identical to planning from scratch (pinned in
+/// `tests/stack_integration.rs`).
+#[derive(Debug)]
+pub struct TtmPlanCache {
+    planner: TtmPlanner,
+    slots: Vec<Option<TilePlan>>,
+}
+
+impl TtmPlanCache {
+    /// An empty cache planning with `planner`; slots grow on demand.
+    pub fn new(planner: TtmPlanner) -> Self {
+        TtmPlanCache { planner, slots: Vec::new() }
+    }
+
+    fn slot_mut(&mut self, slot: usize) -> &mut Option<TilePlan> {
+        if slot >= self.slots.len() {
+            self.slots.resize_with(slot + 1, || None);
+        }
+        &mut self.slots[slot]
+    }
+
+    /// The plan for `X ×_mode Uᵀ` where the streamed operand of this slot
+    /// is **call-invariant** (the decomposition target `x`): the tensor is
+    /// only unfolded (and its stream quantized) when the slot is cold or a
+    /// dimension stopped matching; otherwise only the stored factor images
+    /// are requantized.
+    pub fn plan_fixed_stream(
+        &mut self,
+        slot: usize,
+        x: &DenseTensor,
+        mode: usize,
+        u: &Matrix,
+    ) -> Result<&TilePlan> {
+        if mode >= x.ndim() {
+            return Err(Error::shape(format!(
+                "TTM mode {mode} of {}-mode tensor",
+                x.ndim()
+            )));
+        }
+        let rest: usize = x
+            .shape()
+            .iter()
+            .enumerate()
+            .filter(|&(m, _)| m != mode)
+            .map(|(_, &d)| d)
+            .product();
+        let planner = self.planner;
+        let entry = self.slot_mut(slot);
+        let reusable = match entry.as_ref() {
+            Some(plan) => {
+                plan.out_rows == rest
+                    && plan.stored_len() == u.rows()
+                    && plan.out_cols == u.cols()
+            }
+            None => false,
+        };
+        if reusable {
+            let plan = entry.as_mut().expect("checked above");
+            planner.replan_into(None, u, plan)?;
+        } else {
+            let xt = x.unfold(mode)?.transpose();
+            *entry = Some(planner.plan_streamed(&xt, u)?);
+        }
+        Ok(entry.as_ref().expect("just planned"))
+    }
+
+    /// The plan for `xt [rest, I] @ u [I, R]` where the streamed operand
+    /// changes every call (an intermediate chain tensor): streams and
+    /// images are requantized in place into the cached arena.
+    pub fn plan_streamed(&mut self, slot: usize, xt: &Matrix, u: &Matrix) -> Result<&TilePlan> {
+        let planner = self.planner;
+        let entry = self.slot_mut(slot);
+        let reusable = match entry.as_ref() {
+            Some(plan) => {
+                plan.out_rows == xt.rows()
+                    && plan.stored_len() == u.rows()
+                    && plan.out_cols == u.cols()
+            }
+            None => false,
+        };
+        if reusable {
+            let plan = entry.as_mut().expect("checked above");
+            planner.replan_into(Some(xt), u, plan)?;
+        } else {
+            *entry = Some(planner.plan_streamed(xt, u)?);
+        }
+        Ok(entry.as_ref().expect("just planned"))
+    }
+
+    /// Drop every cached plan (e.g. when switching tensors).
+    pub fn clear(&mut self) {
+        for s in self.slots.iter_mut() {
+            *s = None;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,6 +336,76 @@ mod tests {
                 assert_eq!(cached.data(), fresh.data(), "mode {mode} diverged");
             }
         }
+    }
+
+    #[test]
+    fn ttm_cache_reuses_and_matches_fresh_plans() {
+        let mut rng = Prng::new(5);
+        let x = DenseTensor::randn(&[14, 10, 8], &mut rng);
+        let planner = TtmPlanner::new(256, 32, 52);
+        let mut cache = TtmPlanCache::new(planner);
+
+        for iter in 0..3 {
+            let u = Matrix::randn(14, 4, &mut rng);
+            // Fixed-stream slot: the closure computes the transposed
+            // unfolding only on the cold call.
+            let cached = {
+                let plan = cache.plan_fixed_stream(0, &x, 0, &u).unwrap();
+                let mut exec = CpuTileExecutor::paper();
+                let mut stats = MttkrpStats::default();
+                execute_plan(&mut exec, plan, &mut stats).unwrap()
+            };
+            let fresh_plan = planner.plan_ttm(&x, &u, 0).unwrap();
+            let mut exec = CpuTileExecutor::paper();
+            let mut stats = MttkrpStats::default();
+            let fresh = execute_plan(&mut exec, &fresh_plan, &mut stats).unwrap();
+            assert_eq!(cached.data(), fresh.data(), "iter {iter} diverged");
+
+            // Changing-stream slot: a fresh intermediate every call.
+            let y = DenseTensor::randn(&[14, 10, 8], &mut rng);
+            let yt = y.unfold(1).unwrap().transpose();
+            let uy = Matrix::randn(10, 4, &mut rng);
+            let cached = {
+                let plan = cache.plan_streamed(1, &yt, &uy).unwrap();
+                let mut exec = CpuTileExecutor::paper();
+                let mut stats = MttkrpStats::default();
+                execute_plan(&mut exec, plan, &mut stats).unwrap()
+            };
+            let fresh_plan = planner.plan_streamed(&yt, &uy).unwrap();
+            let mut exec = CpuTileExecutor::paper();
+            let mut stats = MttkrpStats::default();
+            let fresh = execute_plan(&mut exec, &fresh_plan, &mut stats).unwrap();
+            assert_eq!(cached.data(), fresh.data(), "iter {iter} stream diverged");
+        }
+    }
+
+    #[test]
+    fn ttm_cache_replans_when_streamed_dimensions_change() {
+        // Same stored dimension and rank but different non-mode dims: the
+        // reuse check must notice the streamed operand changed shape and
+        // replan instead of serving the stale stream.
+        let mut rng = Prng::new(7);
+        let x1 = DenseTensor::randn(&[12, 7, 5], &mut rng);
+        let x2 = DenseTensor::randn(&[12, 9, 9], &mut rng);
+        let u = Matrix::randn(12, 4, &mut rng);
+        let mut cache = TtmPlanCache::new(TtmPlanner::new(256, 32, 52));
+        let p = cache.plan_fixed_stream(0, &x1, 0, &u).unwrap();
+        assert_eq!(p.out_rows, 35);
+        let p = cache.plan_fixed_stream(0, &x2, 0, &u).unwrap();
+        assert_eq!(p.out_rows, 81);
+    }
+
+    #[test]
+    fn ttm_cache_replans_on_rank_change() {
+        let mut rng = Prng::new(6);
+        let x = DenseTensor::randn(&[12, 6, 5], &mut rng);
+        let mut cache = TtmPlanCache::new(TtmPlanner::new(256, 32, 52));
+        let u4 = Matrix::randn(12, 4, &mut rng);
+        let p = cache.plan_fixed_stream(0, &x, 0, &u4).unwrap();
+        assert_eq!(p.out_cols, 4);
+        let u6 = Matrix::randn(12, 6, &mut rng);
+        let p = cache.plan_fixed_stream(0, &x, 0, &u6).unwrap();
+        assert_eq!(p.out_cols, 6);
     }
 
     #[test]

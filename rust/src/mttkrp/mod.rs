@@ -10,13 +10,15 @@
 //!   tiled MTTKRP (stored images, streamed lane blocks, electrical scale
 //!   vectors, accumulation targets), split into an immutable
 //!   [`plan::PlanShape`] and an arena-backed [`plan::PlanArena`] payload.
-//!   [`plan::DensePlanner`] and [`plan::SparseSlicePlanner`] lower
+//!   [`plan::DensePlanner`], [`plan::TtmPlanner`] (the Tucker/HOOI TTM
+//!   lowering, `crate::tucker`) and [`plan::SparseSlicePlanner`] lower
 //!   workloads into plans (and requantize cached plans in place via
 //!   `replan_into`); [`plan::execute_plan`] /
 //!   [`plan::execute_plan_into`] drive any executor over them with zero
 //!   steady-state allocations (DESIGN.md §6–7).
-//! * [`cache`] — per-mode plan caches for CP-ALS: iterations 2..N skip
-//!   unfolding, slice mapping, and stream quantization entirely.
+//! * [`cache`] — per-mode plan caches for CP-ALS (and per-chain-slot
+//!   caches for Tucker/HOOI): iterations 2..N skip unfolding, slice
+//!   mapping, and stream quantization entirely.
 //! * [`pipeline`] — the high-utilisation tiled schedule used for full
 //!   MTTKRPs: the Khatri-Rao block (the *reused* operand) is stored as the
 //!   array image and tensor rows stream over wavelength lanes, so one
@@ -37,7 +39,7 @@ pub mod plan;
 pub mod reference;
 pub mod sparse_pipeline;
 
-pub use cache::{DensePlanCache, SparsePlanCache};
+pub use cache::{DensePlanCache, SparsePlanCache, TtmPlanCache};
 pub use pipeline::{
     quantize_krp_image, quantize_krp_image_into, quantize_lane_batch,
     quantize_lane_batch_into, CpuTileExecutor, MttkrpStats, PsramPipeline,
@@ -46,7 +48,7 @@ pub use pipeline::{
 pub use plan::{
     execute_plan, execute_plan_into, DensePlanner, LaneBlock, PlanArena,
     PlanGroup, PlanImage, PlanScratch, PlanShape, SparseSlicePlanner,
-    TilePlan, TileScratch,
+    TilePlan, TileScratch, TtmPlanner,
 };
 pub use reference::{dense_mttkrp, sparse_mttkrp};
 pub use sparse_pipeline::{SparsePsramBackend, SparsePsramPipeline};

@@ -107,7 +107,9 @@ pub trait TileExecutor {
 /// The analog-simulator executor: a [`ComputeEngine`] bound to one
 /// [`PsramArray`].
 pub struct AnalogTileExecutor {
+    /// The analog compute engine (noise model, ADC, energy charging).
     pub engine: ComputeEngine,
+    /// The simulated pSRAM array holding the current image.
     pub array: PsramArray,
 }
 
@@ -389,6 +391,7 @@ pub fn quantize_lane_batch_into(
 /// The tiled MTTKRP pipeline over any [`TileExecutor`].
 pub struct PsramPipeline<'a, E: TileExecutor> {
     exec: &'a mut E,
+    /// Accumulated pipeline statistics across all mttkrp calls.
     pub stats: MttkrpStats,
 }
 

@@ -8,6 +8,9 @@
 //!
 //! * [`DensePlanner`] — a dense unfolded matrix pair `[I, K] @ [K, R]`
 //!   (the schedule of `mttkrp::pipeline`);
+//! * [`TtmPlanner`] — a dense TTM `X ×_mode Uᵀ` in unfolded-transpose form
+//!   (the Tucker/HOOI workhorse, `crate::tucker`), sharing the dense
+//!   grouping and requantization rules verbatim;
 //! * [`SparseSlicePlanner`] — a COO tensor mode via the slice-wise mapping
 //!   of `mttkrp::sparse_pipeline` (Algorithm 1 of the paper).
 //!
@@ -663,6 +666,30 @@ pub fn execute_plan_into<E: TileExecutor>(
 /// contraction (K) block, one image per rank block, one lane block per
 /// batch of output rows — the schedule of `mttkrp::pipeline`, expressed as
 /// data.
+///
+/// ```
+/// use psram_imc::mttkrp::pipeline::CpuTileExecutor;
+/// use psram_imc::mttkrp::plan::{execute_plan, DensePlanner};
+/// use psram_imc::mttkrp::MttkrpStats;
+/// use psram_imc::tensor::Matrix;
+/// use psram_imc::util::prng::Prng;
+///
+/// // Plan unf [I=60, K=300] @ krp [K=300, R=40] for the paper tile
+/// // geometry (256 rows x 32 words x 52 lanes)...
+/// let mut rng = Prng::new(1);
+/// let unf = Matrix::randn(60, 300, &mut rng);
+/// let krp = Matrix::randn(300, 40, &mut rng);
+/// let plan = DensePlanner::new(256, 32, 52).plan_unfolded(&unf, &krp).unwrap();
+/// assert_eq!(plan.groups.len(), 2); // ceil(300 / 256) contraction blocks
+/// assert_eq!(plan.total_images(), 4); // x ceil(40 / 32) rank blocks
+///
+/// // ...and execute it on any TileExecutor.
+/// let mut exec = CpuTileExecutor::paper();
+/// let mut stats = MttkrpStats::default();
+/// let out = execute_plan(&mut exec, &plan, &mut stats).unwrap();
+/// assert_eq!((out.rows(), out.cols()), (60, 40));
+/// assert_eq!(stats.images, 4);
+/// ```
 #[derive(Debug, Clone, Copy)]
 pub struct DensePlanner {
     /// Array rows (contraction block size).
@@ -861,6 +888,125 @@ impl DensePlanner {
             }
         }
         Ok(())
+    }
+}
+
+/// Lowers one dense TTM (tensor-times-matrix — the Tucker/HOOI workhorse,
+/// `crate::tucker`) into a [`TilePlan`] through the same array schedule as
+/// [`DensePlanner`].
+///
+/// `Y = X ×_mode Uᵀ` is executed in unfolded-transpose form
+/// `Y_(mode)ᵀ = X_(mode)ᵀ @ U`: the factor `U` (`[shape[mode], R]`) is the
+/// *stored* image — it is reused by every streamed tensor column, and it
+/// is the only operand that changes across HOOI iterations — while the
+/// `prod(other dims)` columns of the unfolding stream over wavelength
+/// lanes.  The identical amortization argument as MTTKRP's stored
+/// Khatri-Rao block (one reconfiguration per `ceil(rest/lanes)` compute
+/// cycles), and the identical plan geometry, so every executor —
+/// [`execute_plan_into`], the sharded coordinator, and
+/// `PerfModel::predict_plan` — handles a TTM plan exactly like a dense
+/// MTTKRP plan.
+///
+/// ```
+/// use psram_imc::mttkrp::pipeline::CpuTileExecutor;
+/// use psram_imc::mttkrp::plan::{execute_plan, TtmPlanner};
+/// use psram_imc::mttkrp::MttkrpStats;
+/// use psram_imc::tensor::{DenseTensor, Matrix};
+/// use psram_imc::util::prng::Prng;
+///
+/// let mut rng = Prng::new(1);
+/// let x = DenseTensor::randn(&[6, 5, 4], &mut rng);
+/// let u = Matrix::randn(6, 3, &mut rng); // mode-0 factor, rank 3
+///
+/// // Plan Y = X ×₀ Uᵀ and execute it on the CPU integer executor.
+/// let plan = TtmPlanner::new(256, 32, 52).plan_ttm(&x, &u, 0).unwrap();
+/// let mut exec = CpuTileExecutor::paper();
+/// let mut stats = MttkrpStats::default();
+/// let out = execute_plan(&mut exec, &plan, &mut stats).unwrap();
+///
+/// // The output is Y_(0)ᵀ: one row per streamed tensor column (5*4),
+/// // one column per rank.  It approximates the exact n-mode product.
+/// assert_eq!((out.rows(), out.cols()), (20, 3));
+/// let exact = x.nmode_product(&u.transpose(), 0).unwrap();
+/// let exact_t = exact.unfold(0).unwrap().transpose();
+/// // int8 error bound: K * (sx*|w|max/2 + sw*|x|max/2 + sx*sw/4).
+/// let tol = 6.0 * x.unfold(0).unwrap().max_abs() * u.max_abs() / 100.0;
+/// for (a, e) in out.data().iter().zip(exact_t.data()) {
+///     assert!((a - e).abs() <= tol, "quantized {a} vs exact {e}");
+/// }
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct TtmPlanner {
+    /// Array rows (contraction block size — tiles the tensor mode).
+    pub rows: usize,
+    /// Word columns per row (rank block size).
+    pub wpr: usize,
+    /// Maximum wavelength lanes per compute cycle.
+    pub lanes: usize,
+}
+
+impl TtmPlanner {
+    /// Planner for an explicit tile geometry.
+    pub fn new(rows: usize, wpr: usize, lanes: usize) -> Self {
+        TtmPlanner { rows, wpr, lanes }
+    }
+
+    /// Planner matching an executor's tile geometry.
+    pub fn for_executor<E: TileExecutor>(exec: &E) -> Self {
+        TtmPlanner::new(exec.rows(), exec.words_per_row(), exec.max_lanes())
+    }
+
+    /// The dense planner this geometry lowers through: a TTM *is* a dense
+    /// unfolded pair once transposed, so the grouping, arena layout, and
+    /// requantization rules are shared verbatim.
+    fn dense(&self) -> DensePlanner {
+        DensePlanner::new(self.rows, self.wpr, self.lanes)
+    }
+
+    /// Plan `Y = X ×_mode Uᵀ` (`u: [shape[mode], R]`).  The plan's output
+    /// is `Y_(mode)ᵀ`, i.e. `[prod(other dims), R]` — fold its transpose
+    /// along `mode` to get the result tensor
+    /// (`crate::tensor::DenseTensor::fold`).
+    pub fn plan_ttm(&self, x: &DenseTensor, u: &Matrix, mode: usize) -> Result<TilePlan> {
+        if mode >= x.ndim() {
+            return Err(Error::shape(format!(
+                "TTM mode {mode} of {}-mode tensor",
+                x.ndim()
+            )));
+        }
+        if u.rows() != x.shape()[mode] {
+            return Err(Error::shape(format!(
+                "TTM factor {}x{} against mode {mode} of {:?}",
+                u.rows(),
+                u.cols(),
+                x.shape()
+            )));
+        }
+        let xt = x.unfold(mode)?.transpose();
+        self.plan_streamed(&xt, u)
+    }
+
+    /// Plan an already-unfolded TTM `xt [rest, I_mode] @ u [I_mode, R]`
+    /// (`xt` = the transposed mode unfolding — of the target tensor or of
+    /// an intermediate chain tensor).
+    pub fn plan_streamed(&self, xt: &Matrix, u: &Matrix) -> Result<TilePlan> {
+        self.dense().plan_unfolded(xt, u)
+    }
+
+    /// Requantize a planned TTM's payloads **in place**: the stored factor
+    /// images from `u`, and — when `xt` is given — the streamed codes.
+    /// Pass `xt = None` when the streamed operand is unchanged since
+    /// planning (the first TTM of every HOOI chain streams the fixed
+    /// decomposition target), which skips the whole stream
+    /// requantization.  Bit-identical to a fresh [`TtmPlanner::plan_streamed`]
+    /// with the same operands.
+    pub fn replan_into(
+        &self,
+        xt: Option<&Matrix>,
+        u: &Matrix,
+        plan: &mut TilePlan,
+    ) -> Result<()> {
+        self.dense().replan_into(xt, u, plan)
     }
 }
 
@@ -1334,6 +1480,55 @@ mod tests {
         let mut cube_plan = planner.plan(&cube, &fc, 0).unwrap();
         assert!(planner.replan_into(&fc, 1, &mut cube_plan).is_err());
         assert!(planner.replan_into(&fc, 0, &mut cube_plan).is_ok());
+    }
+
+    #[test]
+    fn ttm_plan_is_a_dense_plan_of_the_transposed_unfolding() {
+        // Planning a TTM and planning the transposed unfolding by hand must
+        // produce identical plans (shape accounting and payload bits).
+        let mut rng = Prng::new(31);
+        let x = DenseTensor::randn(&[10, 8, 6], &mut rng);
+        let u = Matrix::randn(8, 5, &mut rng);
+        let ttm = TtmPlanner::new(256, 32, 52).plan_ttm(&x, &u, 1).unwrap();
+        ttm.validate().unwrap();
+        let xt = x.unfold(1).unwrap().transpose();
+        let dense = DensePlanner::new(256, 32, 52).plan_unfolded(&xt, &u).unwrap();
+        assert_eq!(ttm.out_rows, 60); // prod of the other modes
+        assert_eq!(ttm.out_cols, 5);
+        assert_eq!(ttm.stored_len(), 8);
+        assert_eq!(ttm.arena.images, dense.arena.images);
+        assert_eq!(ttm.arena.codes, dense.arena.codes);
+        assert_eq!(ttm.arena.scales, dense.arena.scales);
+    }
+
+    #[test]
+    fn ttm_replan_matches_fresh_plan_bit_exactly() {
+        let mut rng = Prng::new(32);
+        let x = DenseTensor::randn(&[12, 9, 7], &mut rng);
+        let planner = TtmPlanner::new(256, 32, 52);
+        let u0 = Matrix::randn(12, 4, &mut rng);
+        let mut plan = planner.plan_ttm(&x, &u0, 0).unwrap();
+
+        // New factor (a HOOI iteration): image-only refill == fresh plan.
+        let u1 = Matrix::randn(12, 4, &mut rng);
+        planner.replan_into(None, &u1, &mut plan).unwrap();
+        let fresh = planner.plan_ttm(&x, &u1, 0).unwrap();
+        assert_eq!(plan.arena.images, fresh.arena.images);
+        assert_eq!(plan.arena.codes, fresh.arena.codes);
+        assert_eq!(plan.arena.scales, fresh.arena.scales);
+
+        // Changing the streamed operand too (an intermediate chain tensor).
+        let y = DenseTensor::randn(&[12, 9, 7], &mut rng);
+        let yt = y.unfold(0).unwrap().transpose();
+        planner.replan_into(Some(&yt), &u1, &mut plan).unwrap();
+        let fresh = planner.plan_streamed(&yt, &u1).unwrap();
+        assert_eq!(plan.arena.images, fresh.arena.images);
+        assert_eq!(plan.arena.codes, fresh.arena.codes);
+        assert_eq!(plan.arena.scales, fresh.arena.scales);
+
+        // Mismatched factor or mode rejected.
+        assert!(planner.plan_ttm(&x, &Matrix::zeros(11, 4), 0).is_err());
+        assert!(planner.plan_ttm(&x, &u1, 3).is_err());
     }
 
     #[test]

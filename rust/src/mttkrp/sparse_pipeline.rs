@@ -76,7 +76,9 @@ pub struct SparsePsramBackend<'a, E: TileExecutor> {
     /// The decomposition target.  Private: the plan cache is keyed to this
     /// tensor, so it must not be swapped under a warm cache.
     tensor: &'a CooTensor,
+    /// The executor running every plan.
     pub exec: E,
+    /// Accumulated pipeline statistics across all mttkrp calls.
     pub stats: MttkrpStats,
     /// Per-mode plan cache (keyed to `tensor`).
     cache: SparsePlanCache,
@@ -85,6 +87,7 @@ pub struct SparsePsramBackend<'a, E: TileExecutor> {
 }
 
 impl<'a, E: TileExecutor> SparsePsramBackend<'a, E> {
+    /// Backend decomposing `tensor` on `exec`.
     pub fn new(tensor: &'a CooTensor, exec: E) -> Self {
         let cache =
             SparsePlanCache::new(SparseSlicePlanner::for_executor(&exec), tensor.ndim());

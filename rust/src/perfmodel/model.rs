@@ -46,6 +46,28 @@ impl Workload {
         Workload { i_rows: 1_000_000, k_contraction: 1_000_000_000_000, rank: 32 }
     }
 
+    /// The unfolded-transpose workload of one dense TTM `X ×_mode Uᵀ`
+    /// (the Tucker/HOOI primitive, `crate::tucker`): the
+    /// `prod(other dims)` tensor columns stream against the stored
+    /// `[shape[mode], rank]` factor, i.e. `I = prod(others)`,
+    /// `K = shape[mode]`, `R = rank` in the model's `[I, K] @ [K, R]`
+    /// form.
+    pub fn ttm(shape: &[usize], mode: usize, rank: u64) -> Result<Self> {
+        if mode >= shape.len() {
+            return Err(Error::config(format!(
+                "TTM mode {mode} of a {}-mode shape",
+                shape.len()
+            )));
+        }
+        let rest: u64 = shape
+            .iter()
+            .enumerate()
+            .filter(|&(m, _)| m != mode)
+            .map(|(_, &d)| d as u64)
+            .product();
+        Ok(Workload { i_rows: rest, k_contraction: shape[mode] as u64, rank })
+    }
+
     /// Total useful MACs (f64: the paper workload exceeds u64 range).
     pub fn useful_macs(&self) -> f64 {
         self.i_rows as f64 * self.k_contraction as f64 * self.rank as f64
@@ -185,6 +207,33 @@ impl PerfModel {
     /// `tests/stack_integration.rs`.  Groups are assigned to arrays by
     /// `key % num_arrays` (the coordinator's home-shard rule, without
     /// stealing); the bottleneck array sets the predicted runtime.
+    ///
+    /// The census is planner-agnostic: dense MTTKRP, sparse slice-wise
+    /// MTTKRP, and Tucker TTM plans (`crate::tucker`) all score through
+    /// the same group walk, so every workload gets the identical
+    /// predicted == measured treatment.
+    ///
+    /// ```
+    /// use psram_imc::mttkrp::plan::{execute_plan, DensePlanner};
+    /// use psram_imc::mttkrp::{CpuTileExecutor, MttkrpStats};
+    /// use psram_imc::perfmodel::PerfModel;
+    /// use psram_imc::tensor::Matrix;
+    /// use psram_imc::util::prng::Prng;
+    ///
+    /// let mut rng = Prng::new(1);
+    /// let unf = Matrix::randn(60, 300, &mut rng);
+    /// let krp = Matrix::randn(300, 40, &mut rng);
+    /// let plan = DensePlanner::new(256, 32, 52).plan_unfolded(&unf, &krp).unwrap();
+    ///
+    /// // Predict, then execute: the cycle census matches exactly.
+    /// let est = PerfModel::paper().predict_plan(&plan).unwrap();
+    /// let mut exec = CpuTileExecutor::paper();
+    /// let mut stats = MttkrpStats::default();
+    /// execute_plan(&mut exec, &plan, &mut stats).unwrap();
+    /// assert_eq!(est.images, stats.images);
+    /// assert_eq!(est.compute_cycles, stats.compute_cycles);
+    /// assert_eq!(est.reconfig_write_cycles, stats.write_cycles);
+    /// ```
     pub fn predict_plan(&self, plan: &PlanShape) -> Result<PlanEstimate> {
         self.validate()?;
         plan.validate()?;
@@ -473,6 +522,33 @@ mod tests {
         assert_eq!(one.compute_cycles, four.compute_cycles);
         assert_eq!(4 * four.bottleneck_cycles, one.bottleneck_cycles);
         assert!(four.runtime_s < one.runtime_s / 3.9);
+    }
+
+    #[test]
+    fn ttm_workload_matches_ttm_plan_census() {
+        use crate::mttkrp::plan::TtmPlanner;
+        use crate::tensor::{DenseTensor, Matrix};
+        use crate::util::prng::Prng;
+
+        // The analytic TTM workload and the concrete TTM plan must agree
+        // exactly on one array — the same predicted == measured treatment
+        // dense MTTKRP gets.
+        let mut rng = Prng::new(45);
+        let x = DenseTensor::randn(&[300, 13, 9], &mut rng);
+        let u = Matrix::randn(300, 40, &mut rng);
+        let plan = TtmPlanner::new(256, 32, 52).plan_ttm(&x, &u, 0).unwrap();
+        let m = PerfModel::paper();
+        let by_plan = m.predict_plan(&plan).unwrap();
+        let w = Workload::ttm(&[300, 13, 9], 0, 40).unwrap();
+        assert_eq!(w.i_rows, 13 * 9);
+        assert_eq!(w.k_contraction, 300);
+        let by_workload = m.predict(&w).unwrap();
+        assert_eq!(by_plan.images, by_workload.images);
+        assert_eq!(by_plan.compute_cycles, by_workload.compute_cycles);
+        assert_eq!(by_plan.reconfig_write_cycles, by_workload.write_cycles);
+        assert!((by_plan.utilization - by_workload.utilization).abs() < 1e-12);
+
+        assert!(Workload::ttm(&[300, 13, 9], 3, 40).is_err());
     }
 
     #[test]

@@ -32,9 +32,13 @@ impl TpuLimits {
 /// N word columns, `block_k` rows per grid step).
 #[derive(Debug, Clone, Copy)]
 pub struct KernelRoofline {
+    /// Wavelength lanes per call.
     pub m: usize,
+    /// Word rows (contraction block).
     pub k: usize,
+    /// Word columns (rank block).
     pub n: usize,
+    /// Rows per grid step.
     pub block_k: usize,
 }
 

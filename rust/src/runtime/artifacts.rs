@@ -10,6 +10,7 @@ use std::path::{Path, PathBuf};
 /// A quantized tile-kernel variant (`u8[M,K] x s8[K,N] -> s32[M,N]`).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TileVariant {
+    /// Variant name from the manifest.
     pub name: String,
     /// Wavelength lanes per call.
     pub m: usize,
@@ -24,6 +25,7 @@ pub struct TileVariant {
 /// The parsed artifact manifest.
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
+    /// Tile-kernel variants, as listed in the manifest.
     pub tiles: Vec<TileVariant>,
     /// Non-tile artifacts: (name, path).
     pub others: Vec<(String, PathBuf)>,

@@ -160,6 +160,81 @@ impl DenseTensor {
         Ok(out)
     }
 
+    /// Inverse of [`DenseTensor::unfold`]: rebuild the tensor of `shape`
+    /// whose mode-`mode` unfolding is `m` (`[shape[mode], prod(others)]`,
+    /// remaining modes in increasing order, last fastest).  This is what
+    /// turns an executed TTM plan's output matrix back into a tensor so
+    /// Tucker's TTM chains can feed one contraction into the next
+    /// (`crate::tucker`).
+    pub fn fold(m: &Matrix, mode: usize, shape: &[usize]) -> Result<DenseTensor> {
+        if mode >= shape.len() {
+            return Err(Error::shape(format!(
+                "fold mode {mode} of {}-mode shape",
+                shape.len()
+            )));
+        }
+        let rest: usize = shape
+            .iter()
+            .enumerate()
+            .filter(|&(mm, _)| mm != mode)
+            .map(|(_, &d)| d)
+            .product();
+        if m.rows() != shape[mode] || m.cols() != rest {
+            return Err(Error::shape(format!(
+                "fold of {}x{} into tensor {shape:?} along mode {mode}",
+                m.rows(),
+                m.cols()
+            )));
+        }
+        let mut t = DenseTensor::zeros(shape);
+        let mut idx = vec![0usize; shape.len()];
+        for flat in 0..t.data.len() {
+            let row = idx[mode];
+            let mut col = 0usize;
+            for (mm, &im) in idx.iter().enumerate() {
+                if mm != mode {
+                    col = col * shape[mm] + im;
+                }
+            }
+            t.data[flat] = m.get(row, col);
+            for mm in (0..shape.len()).rev() {
+                idx[mm] += 1;
+                if idx[mm] < shape[mm] {
+                    break;
+                }
+                idx[mm] = 0;
+            }
+        }
+        Ok(t)
+    }
+
+    /// Mode-`mode` tensor-times-matrix (n-mode) product `Y = X ×_mode U`:
+    /// `Y_(mode) = U @ X_(mode)` with `U: [j, shape[mode]]`, so `Y` keeps
+    /// every dimension except mode `mode`, which becomes `j`.  Exact f32 —
+    /// the reference every quantized TTM tile plan
+    /// (`crate::mttkrp::plan::TtmPlanner`) is validated against.
+    pub fn nmode_product(&self, u: &Matrix, mode: usize) -> Result<DenseTensor> {
+        if mode >= self.ndim() {
+            return Err(Error::shape(format!(
+                "mode {mode} of {}-mode tensor",
+                self.ndim()
+            )));
+        }
+        if u.cols() != self.shape[mode] {
+            return Err(Error::shape(format!(
+                "n-mode product of {}x{} along mode {mode} of {:?}",
+                u.rows(),
+                u.cols(),
+                self.shape
+            )));
+        }
+        let unf = self.unfold(mode)?;
+        let y = u.matmul(&unf)?;
+        let mut shape = self.shape.clone();
+        shape[mode] = u.rows();
+        DenseTensor::fold(&y, mode, &shape)
+    }
+
     /// Frobenius norm.
     pub fn fro_norm(&self) -> f64 {
         crate::util::stats::fro_norm(&self.data)
@@ -229,6 +304,56 @@ mod tests {
     #[test]
     fn unfold_bad_mode_errors() {
         assert!(seq_tensor(&[2, 2]).unfold(2).is_err());
+    }
+
+    #[test]
+    fn fold_inverts_unfold_every_mode() {
+        let t = seq_tensor(&[2, 3, 4]);
+        for mode in 0..3 {
+            let m = t.unfold(mode).unwrap();
+            let back = DenseTensor::fold(&m, mode, &[2, 3, 4]).unwrap();
+            assert_eq!(back.data(), t.data(), "mode {mode}");
+        }
+        // shape mismatches rejected
+        let m = t.unfold(0).unwrap();
+        assert!(DenseTensor::fold(&m, 1, &[2, 3, 4]).is_err());
+        assert!(DenseTensor::fold(&m, 3, &[2, 3, 4]).is_err());
+    }
+
+    #[test]
+    fn nmode_product_matches_literal_contraction() {
+        let t = seq_tensor(&[2, 3, 4]);
+        let u = Matrix::from_vec(2, 3, (0..6).map(|i| i as f32).collect()).unwrap();
+        let y = t.nmode_product(&u, 1).unwrap();
+        assert_eq!(y.shape(), &[2, 2, 4]);
+        for i in 0..2 {
+            for j in 0..2 {
+                for k in 0..4 {
+                    let mut want = 0f32;
+                    for jj in 0..3 {
+                        want += u.get(j, jj) * t.at(&[i, jj, k]);
+                    }
+                    assert_eq!(y.at(&[i, j, k]), want);
+                }
+            }
+        }
+        // contraction-dimension mismatch rejected
+        assert!(t.nmode_product(&u, 0).is_err());
+        assert!(t.nmode_product(&u, 3).is_err());
+    }
+
+    #[test]
+    fn nmode_products_commute_across_distinct_modes() {
+        let mut rng = Prng::new(9);
+        let t = DenseTensor::randn(&[4, 5, 6], &mut rng);
+        let a = Matrix::randn(3, 4, &mut rng);
+        let b = Matrix::randn(2, 6, &mut rng);
+        let ab = t.nmode_product(&a, 0).unwrap().nmode_product(&b, 2).unwrap();
+        let ba = t.nmode_product(&b, 2).unwrap().nmode_product(&a, 0).unwrap();
+        assert_eq!(ab.shape(), &[3, 5, 2]);
+        for (x, y) in ab.data().iter().zip(ba.data()) {
+            assert!((x - y).abs() < 1e-4);
+        }
     }
 
     #[test]

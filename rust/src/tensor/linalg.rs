@@ -47,10 +47,12 @@ impl Matrix {
         m
     }
 
+    /// Row count.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Column count.
     pub fn cols(&self) -> usize {
         self.cols
     }
@@ -65,11 +67,13 @@ impl Matrix {
         &mut self.data
     }
 
+    /// Element at `(r, c)`.
     #[inline]
     pub fn get(&self, r: usize, c: usize) -> f32 {
         self.data[r * self.cols + c]
     }
 
+    /// Set element at `(r, c)`.
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
         self.data[r * self.cols + c] = v;
@@ -157,6 +161,28 @@ impl Matrix {
             }
         }
         Ok(())
+    }
+
+    /// Row Gram matrix `A Aᵀ` (`rows × rows`), computed directly from the
+    /// rows — unlike `transpose().gram()`, no transposed copy of the
+    /// operand is materialised.  This is the Tucker/HOOI factor-update
+    /// kernel, called on tensor-sized unfoldings once per mode per sweep.
+    pub fn gram_rows(&self) -> Matrix {
+        let n = self.rows;
+        let mut g = Matrix::zeros(n, n);
+        for i in 0..n {
+            let ri = self.row(i);
+            for j in i..n {
+                let rj = self.row(j);
+                let mut s = 0f32;
+                for (a, b) in ri.iter().zip(rj) {
+                    s += a * b;
+                }
+                g.set(i, j, s);
+                g.set(j, i, s);
+            }
+        }
+        g
     }
 
     /// Elementwise (Hadamard) product.
@@ -318,6 +344,124 @@ impl Matrix {
         }
         Ok(x)
     }
+
+    /// Full eigendecomposition of a *symmetric* matrix via the cyclic
+    /// Jacobi method (f64 internally).  Returns the eigenvalues in
+    /// descending order and the matching eigenvectors as the columns of an
+    /// orthonormal matrix (column `i` pairs with eigenvalue `i`).
+    ///
+    /// Deterministic: the rotation schedule is fixed and each
+    /// eigenvector's sign is normalised (largest-magnitude entry
+    /// non-negative), so repeated calls — and therefore whole Tucker/HOOI
+    /// trajectories built on it — are bit-reproducible.  Sized for the
+    /// small symmetric Gram matrices HOSVD/HOOI diagonalise
+    /// (`Y_(n) Y_(n)ᵀ`, at most a mode dimension square); O(n³) per sweep.
+    pub fn sym_eig(&self) -> Result<(Vec<f32>, Matrix)> {
+        if self.rows != self.cols {
+            return Err(Error::shape("sym_eig of non-square matrix".to_string()));
+        }
+        if self.data.iter().any(|v| !v.is_finite()) {
+            return Err(Error::Numerical(
+                "sym_eig of a matrix with non-finite entries".to_string(),
+            ));
+        }
+        let n = self.rows;
+        let mut a: Vec<f64> = self.data.iter().map(|&v| v as f64).collect();
+        // Symmetrize defensively: f32 accumulation can leave the two
+        // triangles a ULP apart, which Jacobi would chase forever.
+        for i in 0..n {
+            for j in 0..i {
+                let m = 0.5 * (a[i * n + j] + a[j * n + i]);
+                a[i * n + j] = m;
+                a[j * n + i] = m;
+            }
+        }
+        let mut v = vec![0f64; n * n];
+        for i in 0..n {
+            v[i * n + i] = 1.0;
+        }
+        let norm_sq: f64 = a.iter().map(|x| x * x).sum();
+        for _sweep in 0..100 {
+            let off_sq: f64 = (0..n)
+                .flat_map(|i| (i + 1..n).map(move |j| (i, j)))
+                .map(|(i, j)| a[i * n + j] * a[i * n + j])
+                .sum();
+            if off_sq <= 1e-26 * norm_sq.max(f64::MIN_POSITIVE) {
+                break;
+            }
+            for p in 0..n {
+                for q in p + 1..n {
+                    let apq = a[p * n + q];
+                    if apq.abs() <= 1e-300 {
+                        continue;
+                    }
+                    // Classic Jacobi rotation zeroing a[p][q].
+                    let theta = (a[q * n + q] - a[p * n + p]) / (2.0 * apq);
+                    let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                    let c = 1.0 / (t * t + 1.0).sqrt();
+                    let s = t * c;
+                    for k in 0..n {
+                        let akp = a[k * n + p];
+                        let akq = a[k * n + q];
+                        a[k * n + p] = c * akp - s * akq;
+                        a[k * n + q] = s * akp + c * akq;
+                    }
+                    for k in 0..n {
+                        let apk = a[p * n + k];
+                        let aqk = a[q * n + k];
+                        a[p * n + k] = c * apk - s * aqk;
+                        a[q * n + k] = s * apk + c * aqk;
+                    }
+                    for k in 0..n {
+                        let vkp = v[k * n + p];
+                        let vkq = v[k * n + q];
+                        v[k * n + p] = c * vkp - s * vkq;
+                        v[k * n + q] = s * vkp + c * vkq;
+                    }
+                }
+            }
+        }
+        let mut order: Vec<usize> = (0..n).collect();
+        order.sort_by(|&i, &j| {
+            a[j * n + j].partial_cmp(&a[i * n + i]).expect("finite eigenvalues")
+        });
+        let eigvals: Vec<f32> = order.iter().map(|&i| a[i * n + i] as f32).collect();
+        let mut vecs = Matrix::zeros(n, n);
+        for (col, &src) in order.iter().enumerate() {
+            // Sign convention: largest-|entry| component non-negative.
+            let mut pivot = 0usize;
+            for k in 1..n {
+                if v[k * n + src].abs() > v[pivot * n + src].abs() {
+                    pivot = k;
+                }
+            }
+            let sign = if v[pivot * n + src] < 0.0 { -1.0 } else { 1.0 };
+            for k in 0..n {
+                vecs.set(k, col, (sign * v[k * n + src]) as f32);
+            }
+        }
+        Ok((eigvals, vecs))
+    }
+
+    /// The `r` leading eigenvectors of a symmetric matrix as an
+    /// `[n, r]` column-orthonormal matrix — the truncated basis HOSVD and
+    /// every HOOI factor update reduce to (`crate::tucker`).
+    pub fn top_eigenvectors(&self, r: usize) -> Result<Matrix> {
+        if r == 0 || r > self.rows {
+            return Err(Error::shape(format!(
+                "top {r} eigenvectors of a {}x{} matrix",
+                self.rows, self.cols
+            )));
+        }
+        let (_, vecs) = self.sym_eig()?;
+        let mut out = Matrix::zeros(self.rows, r);
+        for i in 0..self.rows {
+            for c in 0..r {
+                out.set(i, c, vecs.get(i, c));
+            }
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -452,6 +596,62 @@ mod tests {
         assert_eq!(norms[1], 0.0);
         assert!((m.get(0, 0) - 0.6).abs() < 1e-6);
         assert!((m.get(1, 0) - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gram_rows_matches_transpose_gram() {
+        let mut rng = Prng::new(8);
+        let a = Matrix::randn(7, 11, &mut rng);
+        let direct = a.gram_rows();
+        let via_transpose = a.transpose().gram();
+        assert_eq!((direct.rows(), direct.cols()), (7, 7));
+        assert!(approx(&direct, &via_transpose, 1e-4));
+    }
+
+    #[test]
+    fn sym_eig_diagonalises_and_reconstructs() {
+        let mut rng = Prng::new(6);
+        let a = Matrix::randn(8, 8, &mut rng);
+        let spd = a.gram(); // symmetric PSD
+        let (vals, vecs) = spd.sym_eig().unwrap();
+        // descending order
+        for w in vals.windows(2) {
+            assert!(w[0] >= w[1], "eigenvalues not sorted: {vals:?}");
+        }
+        // orthonormal columns
+        let vtv = vecs.transpose().matmul(&vecs).unwrap();
+        assert!(approx(&vtv, &Matrix::eye(8), 1e-4));
+        // A == V diag(vals) Vᵀ
+        let mut vd = vecs.clone();
+        for (c, &l) in vals.iter().enumerate() {
+            vd.scale_column(c, l);
+        }
+        let re = vd.matmul(&vecs.transpose()).unwrap();
+        assert!(approx(&re, &spd, 1e-3));
+    }
+
+    #[test]
+    fn sym_eig_known_2x2() {
+        // [[2, 1], [1, 2]] has eigenvalues 3 and 1.
+        let m = Matrix::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]).unwrap();
+        let (vals, _) = m.sym_eig().unwrap();
+        assert!((vals[0] - 3.0).abs() < 1e-5 && (vals[1] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn top_eigenvectors_shape_and_bounds() {
+        let mut rng = Prng::new(7);
+        let spd = Matrix::randn(6, 6, &mut rng).gram();
+        let u = spd.top_eigenvectors(3).unwrap();
+        assert_eq!((u.rows(), u.cols()), (6, 3));
+        let utu = u.transpose().matmul(&u).unwrap();
+        assert!(approx(&utu, &Matrix::eye(3), 1e-4));
+        assert!(spd.top_eigenvectors(0).is_err());
+        assert!(spd.top_eigenvectors(7).is_err());
+        assert!(Matrix::zeros(2, 3).sym_eig().is_err());
+        let mut nan = Matrix::zeros(2, 2);
+        nan.set(0, 1, f32::NAN);
+        assert!(nan.sym_eig().is_err());
     }
 
     #[test]

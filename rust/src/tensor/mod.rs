@@ -1,8 +1,11 @@
 //! Tensors and the small dense linear algebra CP-ALS needs.
 //!
 //! * [`linalg`] — row-major f32 [`Matrix`] with matmul, Gram, Hadamard,
-//!   Cholesky solve, column normalisation.
-//! * [`dense`] — N-mode dense tensors with mode-n unfolding.
+//!   Cholesky solve, column normalisation, and a symmetric Jacobi
+//!   eigensolver (`sym_eig`) for the Tucker/HOOI factor updates.
+//! * [`dense`] — N-mode dense tensors with mode-n unfolding, its inverse
+//!   (`fold`), and the exact n-mode (TTM) product reference
+//!   (`nmode_product`).
 //! * [`sparse`] — COO sparse tensors (the shape real MTTKRP workloads take).
 //! * [`kr`] — Khatri-Rao products, matching the unfolding convention.
 //!

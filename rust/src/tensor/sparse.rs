@@ -103,10 +103,12 @@ impl CooTensor {
         Ok(())
     }
 
+    /// Tensor shape.
     pub fn shape(&self) -> &[usize] {
         &self.shape
     }
 
+    /// Number of modes.
     pub fn ndim(&self) -> usize {
         self.shape.len()
     }

@@ -1,0 +1,274 @@
+//! TTM execution backends for the Tucker/HOOI driver.
+//!
+//! The driver ([`super::hooi::TuckerHooi`]) reduces every factor and core
+//! update to chains of dense TTMs in unfolded-transpose form
+//! (`Y_(mode)ᵀ = X_(mode)ᵀ @ U`); a [`TtmBackend`] executes one such
+//! contraction.  Three implementations mirror the CP-ALS backend lineup:
+//!
+//! * [`ExactTtmBackend`] — exact f32 CPU matmul (the reference / baseline);
+//! * [`PsramTtmBackend`] — one simulated array via any
+//!   [`TileExecutor`], lowering through
+//!   [`crate::mttkrp::plan::TtmPlanner`] with a per-chain-slot plan cache
+//!   and the zero-allocation `execute_plan_into` hot path;
+//! * [`CoordinatedTtmBackend`] — the sharded batched multi-array pool
+//!   ([`crate::coordinator`]); TTM plans shard by stored factor block and
+//!   reduce bit-identically to the single-array path.
+//!
+//! Plan caching: the backend receives a stable `slot` per chain position
+//! and a [`TtmStream`] describing the streamed operand.  `Fixed` streams
+//! (the decomposition target — the first TTM of every HOOI chain) skip
+//! the unfolding, the transpose, and the stream requantization entirely
+//! after the first call; `Changing` streams (intermediate chain tensors)
+//! still reuse the cached plan layout and requantize in place.
+
+use crate::coordinator::Coordinator;
+use crate::mttkrp::cache::TtmPlanCache;
+use crate::mttkrp::pipeline::{MttkrpStats, TileExecutor};
+use crate::mttkrp::plan::{execute_plan_into, PlanScratch, TtmPlanner};
+use crate::tensor::{DenseTensor, Matrix};
+use crate::util::error::Result;
+
+/// The streamed operand of one TTM.
+#[derive(Clone, Copy)]
+pub enum TtmStream<'a> {
+    /// The decomposition target along `mode` — fixed across HOOI
+    /// iterations, so plan-cached backends skip the unfolding and the
+    /// whole stream requantization after the first call for a slot.
+    Fixed(&'a DenseTensor, usize),
+    /// An already-unfolded-and-transposed intermediate (`[rest, I]`) that
+    /// changes every call (later TTMs of a chain).
+    Changing(&'a Matrix),
+}
+
+impl TtmStream<'_> {
+    /// Materialise the streamed operand `X_(mode)ᵀ` (allocates for
+    /// `Fixed`; cached backends avoid calling this on warm slots).
+    pub fn to_matrix(&self) -> Result<Matrix> {
+        match self {
+            TtmStream::Fixed(x, mode) => Ok(x.unfold(*mode)?.transpose()),
+            TtmStream::Changing(xt) => Ok((*xt).clone()),
+        }
+    }
+}
+
+/// Executes one dense TTM `Y_(mode)ᵀ = X_(mode)ᵀ @ u` for the Tucker/HOOI
+/// driver; `slot` is the driver-assigned chain position used for plan
+/// caching.  Returns the `[rest, u.cols()]` result matrix.
+pub trait TtmBackend {
+    /// Execute the TTM of `stream` against the factor `u [I, R]`.
+    fn ttm(&mut self, slot: usize, stream: TtmStream<'_>, u: &Matrix) -> Result<Matrix>;
+
+    /// Backend label for logs.
+    fn name(&self) -> &'static str {
+        "ttm-backend"
+    }
+}
+
+/// Exact f32 CPU TTM backend (no quantization) — the reference every
+/// pSRAM Tucker path is validated against, and the `--backend exact` CLI
+/// option.
+pub struct ExactTtmBackend;
+
+impl TtmBackend for ExactTtmBackend {
+    fn ttm(&mut self, _slot: usize, stream: TtmStream<'_>, u: &Matrix) -> Result<Matrix> {
+        match stream {
+            TtmStream::Fixed(x, mode) => x.unfold(mode)?.transpose().matmul(u),
+            TtmStream::Changing(xt) => xt.matmul(u),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "exact-ttm"
+    }
+}
+
+/// Single-array pSRAM TTM backend over any [`TileExecutor`] (analog
+/// simulator, CPU integer, or PJRT): TTMs lower through
+/// [`TtmPlanner`] into tile plans, cached per chain slot, and execute on
+/// the zero-allocation `execute_plan_into` hot path with reusable scratch.
+///
+/// Contract (same as every plan-cached backend): one backend instance
+/// serves **one decomposition target**.  A different tensor of identical
+/// dimensions would pass the cache's shape checks and silently stream
+/// stale quantized codes — call [`PsramTtmBackend::clear_cache`] before
+/// reusing the instance on another tensor.
+pub struct PsramTtmBackend<E: TileExecutor> {
+    /// The executor running every plan.
+    pub exec: E,
+    /// Accumulated execution statistics across all TTM calls.
+    pub stats: MttkrpStats,
+    /// Per-chain-slot plan cache (keyed to one decomposition target).
+    cache: TtmPlanCache,
+    /// Reusable execution scratch (partials + tile block buffer).
+    scratch: PlanScratch,
+}
+
+impl<E: TileExecutor> PsramTtmBackend<E> {
+    /// Wrap an executor; the plan cache adopts its tile geometry.
+    pub fn new(exec: E) -> Self {
+        let cache = TtmPlanCache::new(TtmPlanner::for_executor(&exec));
+        PsramTtmBackend {
+            exec,
+            stats: MttkrpStats::default(),
+            cache,
+            scratch: PlanScratch::default(),
+        }
+    }
+
+    /// Drop every cached plan — required before decomposing a different
+    /// tensor with the same backend instance.
+    pub fn clear_cache(&mut self) {
+        self.cache.clear();
+    }
+}
+
+impl<E: TileExecutor> TtmBackend for PsramTtmBackend<E> {
+    fn ttm(&mut self, slot: usize, stream: TtmStream<'_>, u: &Matrix) -> Result<Matrix> {
+        let plan = match stream {
+            TtmStream::Fixed(x, mode) => {
+                self.cache.plan_fixed_stream(slot, x, mode, u)?
+            }
+            TtmStream::Changing(xt) => self.cache.plan_streamed(slot, xt, u)?,
+        };
+        let mut out = Matrix::zeros(plan.out_rows, plan.out_cols);
+        execute_plan_into(&mut self.exec, plan, &mut self.scratch, &mut self.stats, &mut out)?;
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "psram-ttm"
+    }
+}
+
+/// Multi-array TTM backend: every TTM plan is sharded across the
+/// coordinator pool by stored factor block and reduced in plan order —
+/// bit-identical to the single-array [`PsramTtmBackend`] for every worker
+/// count and steal schedule (the shared `run_image_into`/`fold_partial`
+/// contract).  The default backend of the `tucker` CLI subcommand.
+///
+/// Contract: one backend instance serves **one decomposition target**;
+/// call [`CoordinatedTtmBackend::clear_cache`] before reusing it (and its
+/// warm pool) on another tensor.
+pub struct CoordinatedTtmBackend {
+    /// The worker pool (persistent across HOOI sweeps).
+    pub pool: Coordinator,
+    /// Per-chain-slot plan cache (keyed to one decomposition target).
+    cache: TtmPlanCache,
+}
+
+impl CoordinatedTtmBackend {
+    /// Wrap an existing pool; the plan cache adopts its tile geometry.
+    pub fn new(pool: Coordinator) -> Self {
+        let cache = TtmPlanCache::new(pool.ttm_planner());
+        CoordinatedTtmBackend { pool, cache }
+    }
+
+    /// Drop every cached plan — required before decomposing a different
+    /// tensor with the same backend instance (the pool itself stays warm).
+    pub fn clear_cache(&mut self) {
+        self.cache.clear();
+    }
+}
+
+impl TtmBackend for CoordinatedTtmBackend {
+    fn ttm(&mut self, slot: usize, stream: TtmStream<'_>, u: &Matrix) -> Result<Matrix> {
+        let plan = match stream {
+            TtmStream::Fixed(x, mode) => {
+                self.cache.plan_fixed_stream(slot, x, mode, u)?
+            }
+            TtmStream::Changing(xt) => self.cache.plan_streamed(slot, xt, u)?,
+        };
+        self.pool.execute_plan(plan)
+    }
+
+    fn name(&self) -> &'static str {
+        "coordinator-ttm"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mttkrp::pipeline::CpuTileExecutor;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn psram_ttm_approximates_exact_within_quant_bound() {
+        let mut rng = Prng::new(1);
+        let x = DenseTensor::randn(&[10, 8, 6], &mut rng);
+        let u = Matrix::randn(8, 4, &mut rng);
+
+        let exact =
+            ExactTtmBackend.ttm(0, TtmStream::Fixed(&x, 1), &u).unwrap();
+        let mut psram = PsramTtmBackend::new(CpuTileExecutor::paper());
+        let approx = psram.ttm(0, TtmStream::Fixed(&x, 1), &u).unwrap();
+
+        assert_eq!((approx.rows(), approx.cols()), (60, 4));
+        let xt = x.unfold(1).unwrap().transpose();
+        let k = xt.cols() as f32;
+        let (sx, sw) = (xt.max_abs() / 127.0, u.max_abs() / 127.0);
+        let bound =
+            (k * (sx * u.max_abs() / 2.0 + sw * xt.max_abs() / 2.0 + sx * sw / 4.0))
+                .max(1e-4);
+        for (e, a) in exact.data().iter().zip(approx.data()) {
+            assert!((e - a).abs() <= bound, "err {} > {bound}", (e - a).abs());
+        }
+        assert!(psram.stats.images > 0);
+    }
+
+    #[test]
+    fn fixed_stream_slot_reuses_plan_bit_exactly() {
+        // Two calls with different factors: the second requantizes images
+        // only, and must equal a cold backend's result bit for bit.
+        let mut rng = Prng::new(2);
+        let x = DenseTensor::randn(&[12, 7, 5], &mut rng);
+        let u0 = Matrix::randn(12, 4, &mut rng);
+        let u1 = Matrix::randn(12, 4, &mut rng);
+
+        let mut warm = PsramTtmBackend::new(CpuTileExecutor::paper());
+        warm.ttm(0, TtmStream::Fixed(&x, 0), &u0).unwrap();
+        let b = warm.ttm(0, TtmStream::Fixed(&x, 0), &u1).unwrap();
+
+        let mut cold = PsramTtmBackend::new(CpuTileExecutor::paper());
+        let a = cold.ttm(0, TtmStream::Fixed(&x, 0), &u1).unwrap();
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn clear_cache_unbinds_the_decomposition_target() {
+        // A same-shape tensor swap is undetectable by the cache's shape
+        // checks; clear_cache() is the documented escape hatch.
+        let mut rng = Prng::new(4);
+        let x1 = DenseTensor::randn(&[12, 7, 5], &mut rng);
+        let x2 = DenseTensor::randn(&[12, 7, 5], &mut rng);
+        let u = Matrix::randn(12, 4, &mut rng);
+
+        let mut backend = PsramTtmBackend::new(CpuTileExecutor::paper());
+        backend.ttm(0, TtmStream::Fixed(&x1, 0), &u).unwrap();
+        backend.clear_cache();
+        let b = backend.ttm(0, TtmStream::Fixed(&x2, 0), &u).unwrap();
+
+        let mut cold = PsramTtmBackend::new(CpuTileExecutor::paper());
+        let a = cold.ttm(0, TtmStream::Fixed(&x2, 0), &u).unwrap();
+        assert_eq!(a.data(), b.data());
+    }
+
+    #[test]
+    fn coordinated_ttm_matches_single_array_bit_exactly() {
+        let mut rng = Prng::new(3);
+        let x = DenseTensor::randn(&[300, 11, 9], &mut rng);
+        let u = Matrix::randn(300, 40, &mut rng);
+
+        let mut single = PsramTtmBackend::new(CpuTileExecutor::paper());
+        let a = single.ttm(0, TtmStream::Fixed(&x, 0), &u).unwrap();
+        for workers in [1usize, 3] {
+            let pool = Coordinator::with_workers(workers, |_| {
+                Ok(CpuTileExecutor::paper())
+            })
+            .unwrap();
+            let mut dist = CoordinatedTtmBackend::new(pool);
+            let b = dist.ttm(0, TtmStream::Fixed(&x, 0), &u).unwrap();
+            assert_eq!(a.data(), b.data(), "workers={workers}");
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! Tucker decomposition on the pSRAM stack: HOSVD initialization plus
+//! HOOI iterations whose TTM (tensor-times-matrix) chains run through the
+//! tile-plan IR.
+//!
+//! The paper pitches the pSRAM array as a general tensor-decomposition
+//! accelerator; CP-ALS/MTTKRP (the [`crate::cpd`] stack) is one workload
+//! on it, and Tucker via TTM chains is the canonical sibling.  A TTM in
+//! unfolded-transpose form, `Y_(mode)ᵀ = X_(mode)ᵀ @ U`, is *exactly* the
+//! `[I, K] @ [K, R]` shape the array schedule was built for — the factor
+//! is the stored (reused, iteration-varying) operand, tensor columns
+//! stream over wavelength lanes — so Tucker needs **no new device
+//! modeling**: [`crate::mttkrp::plan::TtmPlanner`] lowers each
+//! contraction to a `PlanShape`/`PlanArena` plan, any `TileExecutor` (or
+//! the sharded coordinator) executes it through the zero-allocation
+//! `execute_plan_into` contract, and `PerfModel::predict_plan` scores it
+//! cycle-exactly like every dense MTTKRP plan.
+//!
+//! Module layout (mirroring `cpd`):
+//!
+//! * [`backend`] — the [`TtmBackend`] trait and its exact / single-array
+//!   / coordinator implementations;
+//! * [`hooi`] — HOSVD init, the [`TuckerHooi`] driver (TTM chain + factor
+//!   eigenupdate + truncated core update per sweep), and the exact
+//!   reference helpers ([`hosvd`], [`tucker_core`],
+//!   [`tucker_reconstruct`], [`tucker_fit`]).
+//!
+//! All the hot-path invariants pinned for MTTKRP hold verbatim for
+//! Tucker plans: zero-allocation steady state, bit-exact sharded vs
+//! single-pipeline execution, and bit-identical plan-cache reuse
+//! (`tests/stack_integration.rs`).  DESIGN.md §9 maps the subsystem;
+//! EXPERIMENTS.md §8 records the coordinator sweep.
+
+pub mod backend;
+pub mod hooi;
+
+pub use backend::{
+    CoordinatedTtmBackend, ExactTtmBackend, PsramTtmBackend, TtmBackend, TtmStream,
+};
+pub use hooi::{
+    hosvd, tucker_core, tucker_fit, tucker_reconstruct, TuckerConfig, TuckerHooi,
+    TuckerResult,
+};

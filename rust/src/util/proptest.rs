@@ -24,8 +24,11 @@ pub struct Case {
 
 /// Configuration for a property run.
 pub struct Config {
+    /// Number of generated cases.
     pub cases: usize,
+    /// Upper bound on the per-case size parameter.
     pub max_size: usize,
+    /// Base seed of the run.
     pub seed: u64,
 }
 

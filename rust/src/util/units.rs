@@ -16,31 +16,37 @@ pub const K_BOLTZMANN: f64 = 1.380_649e-23;
 /// Planck constant (J·s).
 pub const H_PLANCK: f64 = 6.626_070_15e-34;
 
+/// GHz -> Hz.
 #[inline]
 pub fn ghz(f: f64) -> f64 {
     f * 1e9
 }
 
+/// Hz -> GHz.
 #[inline]
 pub fn to_ghz(hz: f64) -> f64 {
     hz / 1e9
 }
 
+/// Picojoules -> J.
 #[inline]
 pub fn pj(e: f64) -> f64 {
     e * 1e-12
 }
 
+/// Attojoules -> J.
 #[inline]
 pub fn aj(e: f64) -> f64 {
     e * 1e-18
 }
 
+/// Nanometres -> m.
 #[inline]
 pub fn nm(l: f64) -> f64 {
     l * 1e-9
 }
 
+/// Milliwatts -> W.
 #[inline]
 pub fn mw(p: f64) -> f64 {
     p * 1e-3

@@ -7,9 +7,9 @@ use psram_imc::device::{Adc, DeviceParams, NoiseModel};
 use psram_imc::mttkrp::pipeline::{
     AnalogTileExecutor, CpuTileExecutor, PsramPipeline, TileExecutor,
 };
-use psram_imc::mttkrp::plan::{DensePlanner, SparseSlicePlanner};
+use psram_imc::mttkrp::plan::{execute_plan, DensePlanner, SparseSlicePlanner, TtmPlanner};
 use psram_imc::mttkrp::reference::dense_mttkrp;
-use psram_imc::mttkrp::SparsePsramPipeline;
+use psram_imc::mttkrp::{MttkrpStats, SparsePsramPipeline};
 use psram_imc::perfmodel::{PerfModel, Workload};
 use psram_imc::psram::{ArrayGeometry, PsramArray};
 use psram_imc::tensor::{krp_all_but, CooTensor, DenseTensor, Matrix};
@@ -278,6 +278,114 @@ fn prop_tile_plan_occupancy_and_geometry_bounded() {
                 prop_assert_eq!(est.images, plan.total_images() as u64);
                 prop_assert_eq!(est.compute_cycles, plan.total_compute_cycles());
             }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ttm_plan_execution_matches_nmode_reference() {
+    // A TTM tile plan executed on the integer executor must approximate
+    // the exact n-mode product within the analytic int8 bound, for random
+    // tensor shapes, modes, ranks, and tile geometries — and noisy analog
+    // twins with identical seeds must execute the same plan
+    // bit-identically (deterministic noise streams).
+    check_with(
+        "ttm plan ≈ exact n-mode product",
+        Config { cases: 20, max_size: 16, seed: 0x7A11 },
+        |c| {
+            let shape = rand_shape(c, 6 + c.size);
+            let mode = c.rng.below(3) as usize;
+            let r = 1 + c.rng.below(10) as usize;
+            let x = DenseTensor::randn(&shape, &mut c.rng);
+            let u = Matrix::randn(shape[mode], r, &mut c.rng);
+
+            let rows = [64usize, 128, 256][c.rng.below(3) as usize];
+            let wpr = [16usize, 32][c.rng.below(2) as usize];
+            let lanes = 1 + c.rng.below(52) as usize;
+
+            let plan = TtmPlanner::new(rows, wpr, lanes)
+                .plan_ttm(&x, &u, mode)
+                .map_err(|e| e.to_string())?;
+            let mut exec = CpuTileExecutor::new(rows, wpr, lanes);
+            let mut stats = MttkrpStats::default();
+            let approx =
+                execute_plan(&mut exec, &plan, &mut stats).map_err(|e| e.to_string())?;
+
+            let exact = x.nmode_product(&u.transpose(), mode).unwrap();
+            let exact_t = exact.unfold(mode).unwrap().transpose();
+            let xt = x.unfold(mode).unwrap().transpose();
+            let k = xt.cols() as f32;
+            let sx = xt.max_abs() / 127.0;
+            let sw = u.max_abs() / 127.0;
+            let bound = (k
+                * (sx * u.max_abs() / 2.0 + sw * xt.max_abs() / 2.0 + sx * sw / 4.0))
+                .max(1e-4);
+            for (e, a) in exact_t.data().iter().zip(approx.data()) {
+                prop_assert!(
+                    (e - a).abs() <= bound,
+                    "err {} > bound {bound} (shape {shape:?} mode {mode} r {r} \
+                     geom {rows}x{wpr}x{lanes})",
+                    (e - a).abs()
+                );
+            }
+
+            // Noise mode (paper geometry only — the analog array is fixed
+            // at 256x32): identically seeded noisy twins agree bit for bit.
+            if rows == 256 && wpr == 32 {
+                let make = || {
+                    AnalogTileExecutor::new(
+                        ComputeEngine::new(
+                            DeviceParams::default(),
+                            NoiseModel::gaussian(25.0, 99),
+                        ),
+                        PsramArray::paper(),
+                    )
+                };
+                let mut e1 = make();
+                let mut s1 = MttkrpStats::default();
+                let a = execute_plan(&mut e1, &plan, &mut s1).map_err(|e| e.to_string())?;
+                let mut e2 = make();
+                let mut s2 = MttkrpStats::default();
+                let b = execute_plan(&mut e2, &plan, &mut s2).map_err(|e| e.to_string())?;
+                prop_assert!(a.data() == b.data(), "noisy analog twins diverged");
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ttm_coordinator_equals_single_executor_bit_exactly() {
+    check_with(
+        "ttm coordinator == single executor",
+        Config { cases: 10, max_size: 16, seed: 0xF9A7 },
+        |c| {
+            let shape = rand_shape(c, 10);
+            let mode = c.rng.below(3) as usize;
+            let r = 1 + c.rng.below(40) as usize;
+            let x = DenseTensor::randn(&shape, &mut c.rng);
+            let u = Matrix::randn(shape[mode], r, &mut c.rng);
+            let workers = 1 + c.rng.below(4) as usize;
+
+            let plan = TtmPlanner::new(256, 32, 52)
+                .plan_ttm(&x, &u, mode)
+                .map_err(|e| e.to_string())?;
+            let mut exec = CpuTileExecutor::paper();
+            let mut stats = MttkrpStats::default();
+            let single =
+                execute_plan(&mut exec, &plan, &mut stats).map_err(|e| e.to_string())?;
+
+            let mut pool = Coordinator::spawn(
+                CoordinatorConfig { workers, queue_depth: 2, ..Default::default() },
+                |_| Ok(CpuTileExecutor::paper()),
+            )
+            .unwrap();
+            let dist = pool.execute_plan(&plan).map_err(|e| e.to_string())?;
+            prop_assert!(
+                single.data() == dist.data(),
+                "ttm distributed result diverged (workers {workers} mode {mode})"
+            );
             Ok(())
         },
     );

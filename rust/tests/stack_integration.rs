@@ -8,7 +8,7 @@ use psram_imc::coordinator::{Coordinator, CoordinatorConfig};
 use psram_imc::cpd::{AlsConfig, CpAls, ExactBackend, MttkrpBackend, PsramBackend};
 use psram_imc::device::{DeviceParams, NoiseModel};
 use psram_imc::mttkrp::pipeline::{AnalogTileExecutor, CpuTileExecutor};
-use psram_imc::mttkrp::plan::{DensePlanner, SparseSlicePlanner, TilePlan};
+use psram_imc::mttkrp::plan::{DensePlanner, SparseSlicePlanner, TilePlan, TtmPlanner};
 use psram_imc::mttkrp::reference::sparse_mttkrp;
 use psram_imc::mttkrp::SparsePsramPipeline;
 use psram_imc::perfmodel::PerfModel;
@@ -16,6 +16,10 @@ use psram_imc::psram::PsramArray;
 #[cfg(feature = "xla")]
 use psram_imc::runtime::PjrtTileExecutor;
 use psram_imc::tensor::{CooTensor, DenseTensor, Matrix};
+use psram_imc::tucker::{
+    tucker_fit, tucker_reconstruct, CoordinatedTtmBackend, PsramTtmBackend,
+    TtmBackend, TtmStream, TuckerConfig, TuckerHooi,
+};
 use psram_imc::util::prng::Prng;
 
 fn low_rank(seed: u64, shape: &[usize], r: usize, noise: f32) -> DenseTensor {
@@ -244,6 +248,99 @@ fn predict_plan_matches_coordinator_measured_cycles_dense_and_sparse() {
     assert_predicted_equals_measured(&plan, |pool| {
         pool.sparse_mttkrp(&x, &factors, 0).unwrap();
     });
+}
+
+#[test]
+fn predict_plan_matches_coordinator_measured_cycles_ttm() {
+    // The Tucker TTM workload gets the same cycle-exact predicted ==
+    // measured treatment as dense and sparse MTTKRP: 3 contraction-block
+    // groups x 2 rank blocks, distributed over 3 shards.
+    let mut rng = Prng::new(34);
+    let x = DenseTensor::randn(&[700, 25, 6], &mut rng);
+    let u = Matrix::randn(700, 48, &mut rng);
+    let plan = TtmPlanner::new(256, 32, 52).plan_ttm(&x, &u, 0).unwrap();
+    assert_predicted_equals_measured(&plan, |pool| {
+        pool.execute_plan(&plan).unwrap();
+    });
+}
+
+/// A deliberately cache-free TTM backend: materialises the streamed
+/// operand and plans every contraction from scratch.  Used to pin the
+/// plan-cached Tucker backends bit-exactly to uncached planning.
+struct UncachedTtm {
+    pool: Coordinator,
+}
+
+impl TtmBackend for UncachedTtm {
+    fn ttm(
+        &mut self,
+        _slot: usize,
+        stream: TtmStream<'_>,
+        u: &Matrix,
+    ) -> psram_imc::Result<Matrix> {
+        let xt = stream.to_matrix()?;
+        let plan = self.pool.ttm_planner().plan_streamed(&xt, u)?;
+        self.pool.execute_plan(&plan)
+    }
+}
+
+#[test]
+fn plan_cached_hooi_identical_to_uncached_planning() {
+    // The per-chain-slot TTM plan cache must not change a single bit of
+    // the HOOI trajectory: iterations 2..N requantize cached arenas in
+    // place, and the fit history, factors, and core have to equal planning
+    // from scratch every call — on the coordinator *and* on a single
+    // array (all three share the quantization + accumulation contract).
+    let mut rng = Prng::new(43);
+    let core = DenseTensor::randn(&[3, 3, 3], &mut rng);
+    let truth: Vec<Matrix> =
+        [22usize, 16, 12].iter().map(|&d| Matrix::randn(d, 3, &mut rng)).collect();
+    let x = tucker_reconstruct(&core, &truth).unwrap();
+    let hooi = TuckerHooi::new(TuckerConfig {
+        ranks: vec![3, 3, 3],
+        max_iters: 8,
+        tol: 0.0,
+    });
+
+    let spawn = || Coordinator::with_workers(3, |_| Ok(CpuTileExecutor::paper())).unwrap();
+    let mut cached = CoordinatedTtmBackend::new(spawn());
+    let r1 = hooi.run(&x, &mut cached).unwrap();
+    let mut uncached = UncachedTtm { pool: spawn() };
+    let r2 = hooi.run(&x, &mut uncached).unwrap();
+    assert_eq!(r1.fit_history, r2.fit_history);
+    assert_eq!(r1.core.data(), r2.core.data());
+    for (a, b) in r1.factors.iter().zip(&r2.factors) {
+        assert_eq!(a.data(), b.data());
+    }
+
+    // The single-array cached backend joins the same bit-identical family.
+    let mut single = PsramTtmBackend::new(CpuTileExecutor::paper());
+    let r3 = hooi.run(&x, &mut single).unwrap();
+    assert_eq!(r1.fit_history, r3.fit_history);
+    assert_eq!(r1.core.data(), r3.core.data());
+}
+
+#[test]
+fn coordinated_hooi_over_analog_arrays_decomposes() {
+    // End to end: Tucker/HOOI on a pool of simulated analog arrays
+    // recovers an exact low-multilinear-rank tensor.
+    let mut rng = Prng::new(44);
+    let core = DenseTensor::randn(&[2, 2, 2], &mut rng);
+    let truth: Vec<Matrix> =
+        [18usize, 14, 10].iter().map(|&d| Matrix::randn(d, 2, &mut rng)).collect();
+    let x = tucker_reconstruct(&core, &truth).unwrap();
+    let pool = Coordinator::spawn(
+        CoordinatorConfig { workers: 3, queue_depth: 4, ..Default::default() },
+        |_| Ok(AnalogTileExecutor::ideal()),
+    )
+    .unwrap();
+    let mut backend = CoordinatedTtmBackend::new(pool);
+    let res = TuckerHooi::new(TuckerConfig::new(vec![2, 2, 2]))
+        .run(&x, &mut backend)
+        .unwrap();
+    let fit = tucker_fit(&x, &res.core, &res.factors).unwrap();
+    assert!(fit > 0.95, "fit={fit}");
+    assert!(backend.pool.metrics().snapshot()[1].1 > 0); // images
 }
 
 /// A deliberately cache-free coordinator backend: plans every MTTKRP from
