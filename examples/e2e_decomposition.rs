@@ -3,23 +3,23 @@
 //! but materialised and non-trivial) workload.
 //!
 //! Pipeline exercised:
-//!   L3 coordinator (leader/worker pool, 4 simulated pSRAM arrays)
+//!   PsramSession (Coordinated engine: leader/worker pool, 4 simulated
+//!   analog pSRAM arrays)
 //!     → analog compute engine (device-faithful bit-plane path)
 //!     → cross-checked against the AOT-compiled JAX/Pallas kernel via PJRT
 //!   CP-ALS (Algorithm 1) on a 96×80×72 rank-16 tensor (553k elements)
-//!   fit curve + sustained-throughput + energy accounting logged.
+//!   fit curve + per-job metrics + predicted-vs-measured + energy logged.
 //!
 //! ```bash
 //! cargo run --release --example e2e_decomposition
 //! ```
 
-use psram_imc::coordinator::pool::CoordinatedBackend;
-use psram_imc::coordinator::{Coordinator, CoordinatorConfig};
-use psram_imc::cpd::{brute_force_fit, AlsConfig, CpAls};
+use psram_imc::cpd::{brute_force_fit, AlsConfig, CpAls, CpTarget};
 use psram_imc::energy::EnergyModel;
 use psram_imc::mttkrp::pipeline::{AnalogTileExecutor, PsramPipeline};
 use psram_imc::perfmodel::{PerfModel, Workload};
 use psram_imc::runtime::PjrtTileExecutor;
+use psram_imc::session::{Engine, JobId, Kernel, PsramSession};
 use psram_imc::tensor::{DenseTensor, Matrix};
 use psram_imc::util::prng::Prng;
 use psram_imc::util::units::{format_energy, format_ops};
@@ -57,19 +57,29 @@ fn main() -> psram_imc::Result<()> {
         Err(e) => println!("      SKIPPED (artifacts not built?): {e}"),
     }
 
-    // ---------- stage 2: distributed CP-ALS ----------
-    println!("\n[2/3] CP-ALS on the coordinator (4 analog pSRAM arrays)…");
-    let pool = Coordinator::spawn(CoordinatorConfig::new(4), |_| {
-        Ok(AnalogTileExecutor::ideal())
-    })?;
-    let mut backend = CoordinatedBackend::new(&x, pool);
+    // ---------- stage 2: distributed CP-ALS through one session ----------
+    println!("\n[2/3] CP-ALS on a coordinated session (4 analog pSRAM arrays)…");
+    let session = PsramSession::builder()
+        .engine(Engine::Coordinated { shards: 4 })
+        .analog(true)
+        .build()?;
+    // The session predicts the exact plan it will execute — log the
+    // mode-0 MTTKRP forecast before running anything.
+    let forecast = session
+        .predict(&Kernel::DenseMttkrp { x: &x, factors: &truth, mode: 0 })?;
+    println!(
+        "      predict(mode-0 MTTKRP): {} images, {} streamed + {} reconfig cycles",
+        forecast.images, forecast.compute_cycles, forecast.reconfig_write_cycles
+    );
+
     // Multi-start ALS (standard practice — ALS is sensitive to init):
-    // run 3 seeds, keep the best fit.
+    // run 3 seeds, keep the best fit.  All starts share the session's
+    // warm pool and plan cache.
     let t0 = std::time::Instant::now();
     let mut res = None;
     for seed in [2u64, 99, 1] {
         let als = CpAls::new(AlsConfig { rank, max_iters: 25, tol: 1e-6, seed });
-        let r = als.run(&mut backend)?;
+        let r = als.run(&session, CpTarget::Dense(&x))?;
         println!("      start seed {seed}: fit {:.6} after {} sweeps", r.final_fit(), r.iters);
         if res.as_ref().map_or(true, |b: &psram_imc::cpd::AlsResult| r.final_fit() > b.final_fit()) {
             res = Some(r);
@@ -92,7 +102,7 @@ fn main() -> psram_imc::Result<()> {
 
     // ---------- stage 3: throughput + energy accounting ----------
     println!("\n[3/3] performance accounting…");
-    let m = backend.pool.metrics();
+    let m = session.metrics();
     let snap = m.snapshot();
     let compute_cycles = snap[2].1;
     let write_cycles = snap[3].1;
@@ -105,6 +115,15 @@ fn main() -> psram_imc::Result<()> {
     println!("      useful MACs      : {useful_macs}");
     println!("      backpressure     : {} stalls", snap[6].1);
     println!("      wall-clock       : {wall:.2?}");
+
+    // Per-job attribution (everything above ran as the default job):
+    let job = session.job_metrics(JobId::DEFAULT);
+    println!(
+        "      job 0            : {} kernel(s), {} cycles attributed, {}",
+        job.requests,
+        job.total_cycles(),
+        format_energy(session.job_energy(JobId::DEFAULT).total_j())
+    );
 
     // What this run would take on the physical device (4 arrays @ 20 GHz):
     let device_s = (compute_cycles + write_cycles) as f64 / 4.0 / 20e9;

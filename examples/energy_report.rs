@@ -1,14 +1,14 @@
 //! Energy report: measured (simulator ledgers) vs analytic (energy model)
-//! breakdowns, plus the paper-scale projection.
+//! breakdowns, plus per-job attribution and the paper-scale projection.
 //!
 //! ```bash
 //! cargo run --release --example energy_report
 //! ```
 
-use psram_imc::cpd::{AlsConfig, CpAls, PsramBackend};
+use psram_imc::cpd::{AlsConfig, CpAls, CpTarget};
 use psram_imc::energy::EnergyModel;
-use psram_imc::mttkrp::pipeline::{AnalogTileExecutor, TileExecutor};
 use psram_imc::perfmodel::Workload;
+use psram_imc::session::{Engine, JobId, PsramSession};
 use psram_imc::tensor::{DenseTensor, Matrix};
 use psram_imc::util::prng::Prng;
 use psram_imc::util::units::format_energy;
@@ -19,11 +19,14 @@ fn main() -> psram_imc::Result<()> {
     let shape = [48usize, 40, 36];
     let truth: Vec<Matrix> = shape.iter().map(|&d| Matrix::randn(d, 8, &mut rng)).collect();
     let x = DenseTensor::from_cp_factors(&truth, 0.02, &mut rng)?;
-    let mut backend = PsramBackend::new(&x, AnalogTileExecutor::ideal());
+    let session = PsramSession::builder()
+        .engine(Engine::SingleArray)
+        .analog(true)
+        .build()?;
     let res = CpAls::new(AlsConfig { rank: 8, max_iters: 15, tol: 1e-6, seed: 3 })
-        .run(&mut backend)?;
+        .run(&session, CpTarget::Dense(&x))?;
 
-    let measured = backend.exec.energy().unwrap();
+    let measured = session.energy().expect("analog engine meters energy");
     println!(
         "measured on simulator — CP-ALS rank 8 on {:?}, {} sweeps, fit {:.4}:",
         shape,
@@ -34,9 +37,21 @@ fn main() -> psram_imc::Result<()> {
         println!("  {name:>10}: {:>12}  {:5.1}%", format_energy(j), 100.0 * frac);
     }
     println!("  {:>10}: {:>12}", "total", format_energy(measured.total_j()));
+    let job = session.job_metrics(JobId::DEFAULT);
     println!(
         "  per useful op: {}",
-        format_energy(measured.total_j() / (2.0 * backend.stats.useful_macs as f64))
+        format_energy(measured.total_j() / (2.0 * job.useful_macs as f64))
+    );
+
+    // ---- per-job analytic attribution (the session's tenant view) ----
+    // The same cycle split the job accumulated, run through the analytic
+    // model — this is what each tenant of a shared pool is billed.
+    let attributed = session.job_energy(JobId::DEFAULT);
+    println!(
+        "\nper-job attribution (job 0): {} over {} cycles ({} images)",
+        format_energy(attributed.total_j()),
+        job.total_cycles(),
+        job.images
     );
 
     // ---- analytic: the same cycle counts through the energy model ----

@@ -2,7 +2,8 @@
 use psram_imc::compute::ComputeEngine;
 use psram_imc::mttkrp::pipeline::{CpuTileExecutor, PsramPipeline, TileExecutor};
 use psram_imc::psram::PsramArray;
-use psram_imc::tensor::Matrix;
+use psram_imc::session::{Kernel, PsramSession};
+use psram_imc::tensor::{DenseTensor, Matrix};
 use psram_imc::util::prng::Prng;
 use std::time::Instant;
 
@@ -47,4 +48,27 @@ fn main() {
         PsramPipeline::new(&mut e).mttkrp_unfolded(&unf, &krp).unwrap();
     });
     println!("  -> {:.3e} MAC/s", pmacs / t);
+
+    // hot loop 4: the session steady state — warm plan cache + run_into,
+    // i.e. what an ALS iteration 2..N pays through the unified API
+    // (in-place requantization + zero-allocation execution), vs the cold
+    // first submission that plans from scratch.
+    let x = DenseTensor::randn(&[520, 32, 16], &mut rng);
+    let factors: Vec<Matrix> =
+        [520usize, 32, 16].iter().map(|&d| Matrix::randn(d, 64, &mut rng)).collect();
+    let smacs = 520.0 * (32.0 * 16.0) * 64.0;
+    let kernel = Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 };
+    let t_cold = time("session cold: plan + run 520x512x64", 5, || {
+        let s = PsramSession::builder().build().unwrap();
+        s.run(kernel).unwrap();
+    });
+    println!("  -> {:.3e} MAC/s", smacs / t_cold);
+    let session = PsramSession::builder().build().unwrap();
+    let mut out = Matrix::zeros(520, 64);
+    session.run_into(kernel, &mut out).unwrap(); // warm the cache
+    let t_warm = time("session steady: run_into (warm cache)", 10, || {
+        session.run_into(kernel, &mut out).unwrap();
+    });
+    println!("  -> {:.3e} MAC/s", smacs / t_warm);
+    println!("  -> steady-state speedup: {:.2}x", t_cold / t_warm);
 }

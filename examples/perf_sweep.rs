@@ -6,6 +6,10 @@
 //! ```
 
 use psram_imc::perfmodel::{fig5_frequency, fig5_wavelengths, headline};
+use psram_imc::session::{Kernel, PsramSession};
+use psram_imc::tensor::{CooTensor, DenseTensor, Matrix};
+use psram_imc::tucker::TtmStream;
+use psram_imc::util::prng::Prng;
 use psram_imc::util::stats::linear_fit;
 use psram_imc::util::units::format_ops;
 
@@ -54,5 +58,40 @@ fn main() -> psram_imc::Result<()> {
     println!("  peak      : {}", format_ops(peak));
     println!("  sustained : {}  (paper: 17 PetaOps)", format_ops(sustained));
     println!("  util      : {util:.4}");
+
+    // ---- session.predict: one forecast path for every kernel kind ----
+    // The session scores the exact tile plan it would execute — the same
+    // census the executed metrics report, for dense MTTKRP, sparse
+    // MTTKRP, and Tucker TTM alike.
+    let mut rng = Prng::new(5);
+    let x = DenseTensor::randn(&[120, 24, 20], &mut rng);
+    let coo = CooTensor::random(&[120, 480, 20], 4000, &mut rng);
+    let factors: Vec<Matrix> =
+        [120, 24, 20].iter().map(|&d| Matrix::randn(d, 32, &mut rng)).collect();
+    let sfactors: Vec<Matrix> =
+        [120, 480, 20].iter().map(|&d| Matrix::randn(d, 32, &mut rng)).collect();
+    let u = Matrix::randn(120, 32, &mut rng);
+    let session = PsramSession::builder().build()?;
+    println!("\nsession.predict per kernel (one submission surface):");
+    println!(
+        "{:>14} | {:>7} | {:>10} | {:>10} | {:>8} | {:>16}",
+        "kernel", "images", "streamed", "reconfig", "util", "sustained"
+    );
+    for kernel in [
+        Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 },
+        Kernel::SparseMttkrp { x: &coo, factors: &sfactors, mode: 0 },
+        Kernel::Ttm { stream: TtmStream::Fixed(&x, 0), u: &u, slot: 0 },
+    ] {
+        let est = session.predict(&kernel)?;
+        println!(
+            "{:>14} | {:>7} | {:>10} | {:>10} | {:>8.4} | {:>16}",
+            kernel.name(),
+            est.images,
+            est.compute_cycles,
+            est.reconfig_write_cycles,
+            est.utilization,
+            format_ops(est.sustained_raw_ops)
+        );
+    }
     Ok(())
 }

@@ -1,12 +1,12 @@
 //! Quickstart: decompose a small synthetic tensor on the simulated
-//! photonic SRAM array.
+//! photonic SRAM array through the unified `PsramSession` API.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use psram_imc::cpd::{AlsConfig, CpAls, PsramBackend};
-use psram_imc::mttkrp::pipeline::{AnalogTileExecutor, TileExecutor};
+use psram_imc::cpd::{AlsConfig, CpAls, CpTarget};
+use psram_imc::session::{Engine, JobId, PsramSession};
 use psram_imc::tensor::{DenseTensor, Matrix};
 use psram_imc::util::prng::Prng;
 use psram_imc::util::units::format_energy;
@@ -19,14 +19,16 @@ fn main() -> psram_imc::Result<()> {
     let x = DenseTensor::from_cp_factors(&truth, 0.01, &mut rng)?;
     println!("tensor {:?} ({} elements), true rank 4, 1% noise", shape, x.len());
 
-    // 2. A simulated 256x256-bit pSRAM array with the paper's device
-    //    parameters, bit-exact (noise off, ideal ADC).
-    let exec = AnalogTileExecutor::ideal();
-    let mut backend = PsramBackend::new(&x, exec);
+    // 2. One session = one device: a simulated 256x256-bit pSRAM array
+    //    with the paper's parameters, bit-exact (noise off, ideal ADC).
+    let session = PsramSession::builder()
+        .engine(Engine::SingleArray)
+        .analog(true)
+        .build()?;
 
-    // 3. CP-ALS entirely through the photonic array simulator.
+    // 3. CP-ALS entirely through `session.run(Kernel::DenseMttkrp ...)`.
     let als = CpAls::new(AlsConfig { rank: 4, max_iters: 40, tol: 1e-6, seed: 3 });
-    let res = als.run(&mut backend)?;
+    let res = als.run(&session, CpTarget::Dense(&x))?;
 
     for (i, fit) in res.fit_history.iter().enumerate() {
         println!("  sweep {:>2}: fit {fit:.6}", i + 1);
@@ -38,19 +40,21 @@ fn main() -> psram_imc::Result<()> {
         if res.converged { "converged" } else { "max iters" }
     );
 
-    // 4. What the array did, physically.
-    let stats = backend.stats;
-    let energy = backend.exec.energy().unwrap();
+    // 4. What the array did, physically: the session meters every kernel
+    //    it executed (the same counters the coordinator engine reports).
+    let m = session.job_metrics(JobId::DEFAULT);
+    let energy = session.energy().expect("analog engine meters energy");
     println!("\narray activity:");
-    println!("  images written : {}", stats.images);
-    println!("  compute cycles : {}", stats.compute_cycles);
-    println!("  write cycles   : {}", stats.write_cycles);
-    println!("  utilization    : {:.4}", stats.utilization());
-    println!("  useful MACs    : {}", stats.useful_macs);
+    println!("  kernels run    : {}", m.requests);
+    println!("  images written : {}", m.images);
+    println!("  compute cycles : {}", m.streamed_cycles);
+    println!("  write cycles   : {}", m.reconfig_write_cycles);
+    println!("  utilization    : {:.4}", m.utilization());
+    println!("  useful MACs    : {}", m.useful_macs);
     println!("  energy         : {}", format_energy(energy.total_j()));
     println!(
         "  per useful op  : {}",
-        format_energy(energy.total_j() / (2.0 * stats.useful_macs as f64))
+        format_energy(energy.total_j() / (2.0 * m.useful_macs as f64))
     );
     Ok(())
 }

@@ -82,7 +82,7 @@ fn main() {
             };
             let mut backend = PsramBackend::new(&x, exec);
             let res = CpAls::new(AlsConfig { rank: 3, max_iters: 20, tol: 1e-7, seed })
-                .run(&mut backend)
+                .run_backend(&mut backend)
                 .unwrap();
             best = best.max(brute_force_fit(&x, &res.factors, &res.lambda));
         }

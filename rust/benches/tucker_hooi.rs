@@ -144,7 +144,7 @@ fn main() {
         let pool =
             Coordinator::with_workers(4, |_| Ok(CpuTileExecutor::paper())).unwrap();
         let mut backend = CoordinatedTtmBackend::new(pool);
-        let res = hooi.run(&x2, &mut backend).unwrap();
+        let res = hooi.run_backend(&x2, &mut backend).unwrap();
         fit = tucker_fit(&x2, &res.core, &res.factors).unwrap();
     });
     println!("  -> reconstruction fit {fit:.6}");

@@ -10,7 +10,7 @@
 //! block or a sparse factor J-block), so a worker streams one quantized
 //! operand slice against the whole batch: the §V.B compute/write
 //! interleave amortization that makes reconfiguration writes cheap at
-//! scale (see `DESIGN.md` §12).
+//! scale (see `DESIGN.md` §13).
 
 use crate::mttkrp::plan::TilePlan;
 use std::ops::Range;
@@ -24,6 +24,10 @@ use std::ops::Range;
 pub struct PlanBatch {
     /// Request id (monotonic per coordinator).
     pub req_id: u64,
+    /// Tenant job the request belongs to (`crate::session::JobId`); the
+    /// executing worker charges this job's metrics row, so multi-tenant
+    /// sessions get exact per-job cycle attribution.
+    pub job: u64,
     /// Home shard (worker) this batch was submitted to.  Work stealing may
     /// execute it elsewhere.
     pub shard: usize,
@@ -95,6 +99,7 @@ mod tests {
 
         let b = PlanBatch {
             req_id: 1,
+            job: 0,
             shard: 1,
             key: 0,
             img0: 1,
@@ -121,6 +126,7 @@ mod tests {
         let plan = DensePlanner::new(256, 32, 52).plan_unfolded(&unf, &krp).unwrap();
         let b = PlanBatch {
             req_id: 0,
+            job: 0,
             shard: 0,
             key: 0,
             img0: 0,

@@ -1,13 +1,24 @@
 //! Lock-free coordinator metrics (atomics; shared by leader and workers),
-//! aggregated globally and per shard.
+//! aggregated globally, per shard, and — for multi-tenant sessions — per
+//! job.
 //!
 //! Per-shard counters record **reconfiguration write cycles** separately
 //! from **streamed-lane compute cycles** (plus useful/raw MACs), so the
 //! measured rows are directly comparable to
 //! `PerfModel::predict_plan`'s predicted split — the predicted-vs-measured
 //! cycle accounting is a tested invariant, not two disconnected paths.
+//!
+//! Per-job counters ([`JobMetrics`]) attribute the same split to the
+//! tenant that submitted the work (`crate::session::JobId`): every
+//! [`crate::coordinator::job::PlanBatch`] carries its job id, and the
+//! worker that executes it charges that job's row regardless of which
+//! shard ran it.  Job rows are created lazily on first use (a `Mutex`-ed
+//! map looked up once per batch; the counters themselves stay atomic).
 
+use crate::mttkrp::pipeline::MttkrpStats;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Counters for one shard (shard `i` is owned by worker `i`; stolen batches
 /// are charged to the worker that *executed* them, so shard rows show the
@@ -66,6 +77,69 @@ pub struct ShardSnapshot {
     pub steals: u64,
 }
 
+/// Counters for one tenant job (see `crate::session::JobId`): the same
+/// cycle split as [`ShardMetrics`], attributed to the job that submitted
+/// the work instead of the worker that ran it.  Stolen batches charge the
+/// submitting job — attribution follows the workload, not the schedule.
+#[derive(Debug, Default)]
+pub struct JobMetrics {
+    /// Requests (kernel submissions) completed for this job.
+    pub requests: AtomicU64,
+    /// Batches executed for this job.
+    pub batches: AtomicU64,
+    /// Array images processed for this job.
+    pub images: AtomicU64,
+    /// Streamed-lane compute cycles spent on this job.
+    pub streamed_cycles: AtomicU64,
+    /// Reconfiguration (image write) cycles spent on this job.
+    pub reconfig_write_cycles: AtomicU64,
+    /// Useful MACs performed for this job (excludes padding).
+    pub useful_macs: AtomicU64,
+    /// Raw MACs performed for this job (incl. padding).
+    pub raw_macs: AtomicU64,
+}
+
+/// A point-in-time copy of one job's counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobSnapshot {
+    /// Job id the row belongs to.
+    pub job: u64,
+    /// Requests (kernel submissions) completed.
+    pub requests: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Images processed.
+    pub images: u64,
+    /// Streamed-lane compute cycles.
+    pub streamed_cycles: u64,
+    /// Reconfiguration write cycles.
+    pub reconfig_write_cycles: u64,
+    /// Useful MACs.
+    pub useful_macs: u64,
+    /// Raw MACs.
+    pub raw_macs: u64,
+}
+
+impl JobSnapshot {
+    /// Total array cycles attributed to the job (streamed +
+    /// reconfiguration) — the quantity `session.predict` must match
+    /// cycle-exactly.
+    pub fn total_cycles(&self) -> u64 {
+        self.streamed_cycles + self.reconfig_write_cycles
+    }
+
+    /// Utilisation of the cycles attributed to this job:
+    /// streamed / (streamed + reconfiguration).
+    pub fn utilization(&self) -> f64 {
+        let t = self.total_cycles();
+        if t == 0 {
+            0.0
+        } else {
+            self.streamed_cycles as f64 / t as f64
+        }
+    }
+}
+
 /// Aggregate counters across the coordinator's lifetime.
 #[derive(Debug, Default)]
 pub struct Metrics {
@@ -89,6 +163,9 @@ pub struct Metrics {
     pub steals: AtomicU64,
     /// Per-shard counters (one entry per worker; empty for `default()`).
     pub shards: Vec<ShardMetrics>,
+    /// Per-job counters, created lazily on first use (multi-tenant
+    /// sessions; empty until a job submits work).
+    jobs: Mutex<HashMap<u64, Arc<JobMetrics>>>,
 }
 
 impl Metrics {
@@ -140,6 +217,90 @@ impl Metrics {
             ("batches", self.batches.load(Ordering::Relaxed)),
             ("steals", self.steals.load(Ordering::Relaxed)),
         ]
+    }
+
+    /// Charge one executed unit's realised counters — images, streamed
+    /// vs reconfiguration cycles, useful/raw MACs — into the global row,
+    /// shard `shard`'s row, and job `job`'s row in one place, so the
+    /// single-array session and the coordinator workers can never drift
+    /// apart on the counter layout.  Batch/request counters stay with
+    /// the caller (they differ per site: workers count batches only on
+    /// success, leaders count requests once per plan); the resolved job
+    /// row is returned so callers charge those without a second map
+    /// lookup.
+    pub fn charge(&self, shard: usize, job: u64, stats: &MttkrpStats) -> Arc<JobMetrics> {
+        self.add(&self.images, stats.images);
+        self.add(&self.compute_cycles, stats.compute_cycles);
+        self.add(&self.write_cycles, stats.write_cycles);
+        self.add(&self.useful_macs, stats.useful_macs);
+        self.add(&self.raw_macs, stats.raw_macs);
+        let sm = self.shard(shard);
+        self.add(&sm.images, stats.images);
+        self.add(&sm.streamed_cycles, stats.compute_cycles);
+        self.add(&sm.reconfig_write_cycles, stats.write_cycles);
+        self.add(&sm.useful_macs, stats.useful_macs);
+        self.add(&sm.raw_macs, stats.raw_macs);
+        let jm = self.job(job);
+        self.add(&jm.images, stats.images);
+        self.add(&jm.streamed_cycles, stats.compute_cycles);
+        self.add(&jm.reconfig_write_cycles, stats.write_cycles);
+        self.add(&jm.useful_macs, stats.useful_macs);
+        self.add(&jm.raw_macs, stats.raw_macs);
+        jm
+    }
+
+    /// The counter row for job `id`, created (zeroed) on first use.  The
+    /// returned handle stays valid after later insertions — callers may
+    /// hold it across many batches.
+    pub fn job(&self, id: u64) -> Arc<JobMetrics> {
+        let mut jobs = self.jobs.lock().expect("job metrics poisoned");
+        Arc::clone(jobs.entry(id).or_default())
+    }
+
+    /// A point-in-time copy of job `id`'s counters — all-zero if the job
+    /// has not submitted work yet.  A pure read: unlike
+    /// [`Metrics::job`], querying a job that never ran does *not* create
+    /// its row, so monitoring loops cannot pollute
+    /// [`Metrics::jobs_snapshot`] or grow the map.
+    pub fn job_snapshot(&self, id: u64) -> JobSnapshot {
+        let row = {
+            let jobs = self.jobs.lock().expect("job metrics poisoned");
+            jobs.get(&id).cloned()
+        };
+        match row {
+            Some(row) => JobSnapshot {
+                job: id,
+                requests: row.requests.load(Ordering::Relaxed),
+                batches: row.batches.load(Ordering::Relaxed),
+                images: row.images.load(Ordering::Relaxed),
+                streamed_cycles: row.streamed_cycles.load(Ordering::Relaxed),
+                reconfig_write_cycles: row
+                    .reconfig_write_cycles
+                    .load(Ordering::Relaxed),
+                useful_macs: row.useful_macs.load(Ordering::Relaxed),
+                raw_macs: row.raw_macs.load(Ordering::Relaxed),
+            },
+            None => JobSnapshot {
+                job: id,
+                requests: 0,
+                batches: 0,
+                images: 0,
+                streamed_cycles: 0,
+                reconfig_write_cycles: 0,
+                useful_macs: 0,
+                raw_macs: 0,
+            },
+        }
+    }
+
+    /// Snapshot rows for every job that has submitted work, sorted by id.
+    pub fn jobs_snapshot(&self) -> Vec<JobSnapshot> {
+        let mut ids: Vec<u64> = {
+            let jobs = self.jobs.lock().expect("job metrics poisoned");
+            jobs.keys().copied().collect()
+        };
+        ids.sort_unstable();
+        ids.into_iter().map(|id| self.job_snapshot(id)).collect()
     }
 
     /// Per-shard snapshot rows, one [`ShardSnapshot`] per worker.
@@ -209,6 +370,29 @@ mod tests {
         assert_eq!(rows[2].raw_macs, 24);
         assert_eq!(rows[2].steals, 1);
         assert!((m.shard(2).utilization() - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn job_rows_created_lazily_and_track_independently() {
+        let m = Metrics::with_shards(2);
+        assert!(m.jobs_snapshot().is_empty());
+        m.add(&m.job(7).images, 3);
+        m.add(&m.job(7).streamed_cycles, 9);
+        m.add(&m.job(7).reconfig_write_cycles, 1);
+        m.add(&m.job(2).requests, 1);
+        let rows = m.jobs_snapshot();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].job, 2);
+        assert_eq!(rows[0].requests, 1);
+        assert_eq!(rows[1].job, 7);
+        assert_eq!(rows[1].images, 3);
+        assert_eq!(rows[1].total_cycles(), 10);
+        assert!((rows[1].utilization() - 0.9).abs() < 1e-12);
+        // Snapshot of an untouched job is all-zero, not a panic — and a
+        // pure read: it must not create a phantom row.
+        assert_eq!(m.job_snapshot(99).total_cycles(), 0);
+        assert_eq!(m.job_snapshot(99).utilization(), 0.0);
+        assert_eq!(m.jobs_snapshot().len(), 2, "job_snapshot must not insert");
     }
 
     #[test]

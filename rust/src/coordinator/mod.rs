@@ -41,12 +41,19 @@
 //! (workers / queue depth / batch size) from the
 //! [`crate::perfmodel::PerfModel`] geometry instead of hardcoded defaults.
 
+//!
+//! Multi-tenancy: a request can be attributed to a tenant job
+//! ([`Coordinator::execute_plan_for`]) — every batch then charges that
+//! job's [`metrics::JobMetrics`] row in addition to the global and
+//! per-shard counters, so N decomposition jobs interleaving on one warm
+//! pool (the `crate::session` layer) each get exact cycle accounting.
+
 pub mod job;
 pub mod metrics;
 pub mod pool;
 
 pub use job::{BatchResult, PlanBatch, PlanPartial};
-pub use metrics::{Metrics, ShardMetrics, ShardSnapshot};
+pub use metrics::{JobMetrics, JobSnapshot, Metrics, ShardMetrics, ShardSnapshot};
 pub use pool::{
     CoordinatedBackend, CoordinatedSparseBackend, Coordinator, CoordinatorConfig,
 };

@@ -267,6 +267,13 @@ impl Coordinator {
         &self.metrics
     }
 
+    /// A shared handle on the pool metrics, usable after the pool is
+    /// locked away behind a session (the counters are atomics — reading
+    /// through this handle never blocks the leader).
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
     /// Worker (shard) count.
     pub fn workers(&self) -> usize {
         self.cfg.workers
@@ -327,7 +334,46 @@ impl Coordinator {
     /// assert_eq!(distributed.data(), single.data());
     /// ```
     pub fn execute_plan(&mut self, plan: &TilePlan) -> Result<Matrix> {
+        self.execute_plan_for(plan, 0)
+    }
+
+    /// [`Coordinator::execute_plan`] with explicit tenant attribution:
+    /// every batch of the request carries `job`, so the workers charge
+    /// that job's [`Metrics`] row (images, streamed cycles,
+    /// reconfiguration writes, MACs) in addition to the global and
+    /// per-shard counters — the measurement side of the session layer's
+    /// per-job `predict == measured` contract.
+    pub fn execute_plan_for(&mut self, plan: &TilePlan, job: u64) -> Result<Matrix> {
+        let mut out = Matrix::zeros(plan.out_rows, plan.out_cols);
+        self.execute_plan_into_for(plan, job, &mut out)?;
+        Ok(out)
+    }
+
+    /// Allocation-reusing [`Coordinator::execute_plan_for`]: writes the
+    /// result into `out` (must be `out_rows × out_cols`; zeroed here), so
+    /// steady-state callers — the session's `run_into` hot path — reuse
+    /// one output buffer across requests.
+    pub fn execute_plan_into_for(
+        &mut self,
+        plan: &TilePlan,
+        job: u64,
+        out: &mut Matrix,
+    ) -> Result<()> {
         plan.validate()?;
+        if self.is_shut() {
+            return Err(Error::Coordinator(
+                "coordinator pool is shut down".to_string(),
+            ));
+        }
+        if out.rows() != plan.out_rows || out.cols() != plan.out_cols {
+            return Err(Error::Coordinator(format!(
+                "output is {}x{} but plan produces {}x{}",
+                out.rows(),
+                out.cols(),
+                plan.out_rows,
+                plan.out_cols
+            )));
+        }
         if plan.rows != self.rows || plan.wpr != self.wpr {
             return Err(Error::Coordinator(format!(
                 "plan tiled for {}x{} words but pool executors are {}x{}",
@@ -342,7 +388,6 @@ impl Coordinator {
         }
         let req_id = self.next_req;
         self.next_req += 1;
-        let (out_rows, out_cols) = (plan.out_rows, plan.out_cols);
         let total_images = plan.total_images();
 
         // Chunk each group's images into batches homed on the group's
@@ -358,6 +403,7 @@ impl Coordinator {
                 let take = self.cfg.batch_size.min(n - off);
                 batches.push_back(PlanBatch {
                     req_id,
+                    job,
                     shard: key % self.cfg.workers,
                     key,
                     img0: img_base + off,
@@ -374,7 +420,7 @@ impl Coordinator {
         // Partials are buffered and reduced in plan order so the f32
         // result is deterministic and bit-identical to the single-array
         // execution, independent of worker count and scheduling.
-        let mut out = Matrix::zeros(out_rows, out_cols);
+        out.data_mut().fill(0.0);
         let mut buffered: Vec<Option<PlanPartial>> = Vec::new();
         buffered.resize_with(total_images, || None);
         let mut expected_images = total_images;
@@ -433,6 +479,8 @@ impl Coordinator {
         }
 
         self.metrics.add(&self.metrics.requests, 1);
+        let jm = self.metrics.job(job);
+        self.metrics.add(&jm.requests, 1);
         if let Some(e) = error {
             return Err(e);
         }
@@ -443,9 +491,9 @@ impl Coordinator {
             let p = slot.ok_or_else(|| {
                 Error::Coordinator("missing partial in reduction".to_string())
             })?;
-            fold_partial(&mut out, &p.partial, p.r0, p.r_cnt);
+            fold_partial(out, &p.partial, p.r0, p.r_cnt);
         }
-        Ok(out)
+        Ok(())
     }
 
     /// A dense planner matching the pool's tile geometry.
@@ -495,10 +543,26 @@ impl Coordinator {
         self.execute_plan(&plan)
     }
 
-    /// Gracefully stop the pool (also done on Drop).
+    /// True once [`Coordinator::shutdown`] has run (explicitly or via
+    /// `Drop`); a shut pool rejects new plans instead of deadlocking.
+    pub fn is_shut(&self) -> bool {
+        self.shared.state.lock().expect("coordinator state poisoned").shutdown
+    }
+
+    /// Gracefully stop the pool: drain queued work, join every worker.
+    ///
+    /// Idempotent by construction — the shutdown flag is sticky and the
+    /// join handles are drained on the first call, so calling it twice,
+    /// or dropping the pool after an explicit shutdown (`Drop` calls this
+    /// too), is a cheap no-op rather than a panic or a deadlock (pinned
+    /// by `shutdown_is_idempotent_and_drop_safe`).  Requests submitted
+    /// after shutdown fail fast with a `Coordinator` error.
     pub fn shutdown(&mut self) {
         {
             let mut st = self.shared.state.lock().expect("coordinator state poisoned");
+            if st.shutdown && self.handles.is_empty() {
+                return; // already fully shut — nothing to signal or join
+            }
             st.shutdown = true;
         }
         self.shared.work_cv.notify_all();
@@ -560,24 +624,16 @@ fn run_batch<E: TileExecutor>(
     }
 
     // Charge what actually ran (even on failure), with reconfiguration
-    // writes split from streamed-lane cycles per shard.
-    let sm = metrics.shard(worker);
-    metrics.add(&metrics.images, stats.images);
-    metrics.add(&metrics.compute_cycles, stats.compute_cycles);
-    metrics.add(&metrics.write_cycles, stats.write_cycles);
-    metrics.add(&metrics.useful_macs, stats.useful_macs);
-    metrics.add(&metrics.raw_macs, stats.raw_macs);
-    metrics.add(&sm.images, stats.images);
-    metrics.add(&sm.streamed_cycles, stats.compute_cycles);
-    metrics.add(&sm.reconfig_write_cycles, stats.write_cycles);
-    metrics.add(&sm.useful_macs, stats.useful_macs);
-    metrics.add(&sm.raw_macs, stats.raw_macs);
+    // writes split from streamed-lane cycles per shard — and attributed
+    // to the submitting job (stolen batches still charge their job).
+    let jm = metrics.charge(worker, batch.job, &stats);
 
     if let Some(e) = failed {
         return Err(e);
     }
     metrics.add(&metrics.batches, 1);
-    metrics.add(&sm.batches, 1);
+    metrics.add(&metrics.shard(worker).batches, 1);
+    metrics.add(&jm.batches, 1);
     Ok(BatchResult { req_id: batch.req_id, partials })
 }
 
@@ -933,11 +989,90 @@ mod tests {
         let pool = spawn_cpu_pool(3);
         let mut backend = CoordinatedBackend::new(&x, pool);
         let res = CpAls::new(AlsConfig { rank: 3, max_iters: 25, tol: 1e-6, seed: 1 })
-            .run(&mut backend)
+            .run_backend(&mut backend)
             .unwrap();
         // int8-quantized MTTKRP inside ALS: high fit, not perfect.
         assert!(res.final_fit() > 0.9, "fit={}", res.final_fit());
         assert!(backend.pool.metrics().snapshot()[0].1 >= 3 * 2);
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_drop_safe() {
+        // Double shutdown, shutdown-then-drop, and shutdown of a pool
+        // that already ran work: none may panic or deadlock.
+        let (x, factors) = rand_problem(31, &[20, 8, 8], 8);
+        let mut pool = spawn_cpu_pool(2);
+        pool.mttkrp(&x, &factors, 0).unwrap();
+        assert!(!pool.is_shut());
+        pool.shutdown();
+        assert!(pool.is_shut());
+        pool.shutdown(); // second explicit call: no-op
+        assert!(pool.is_shut());
+        drop(pool); // Drop after explicit shutdown: no-op
+
+        // Shutdown without ever submitting work is equally safe.
+        let mut idle = spawn_cpu_pool(1);
+        idle.shutdown();
+        idle.shutdown();
+    }
+
+    #[test]
+    fn execute_after_shutdown_fails_fast() {
+        let (x, factors) = rand_problem(32, &[20, 8, 8], 8);
+        let mut pool = spawn_cpu_pool(2);
+        pool.shutdown();
+        // Submitting to a shut pool must error out, not hang on a queue
+        // no worker will ever drain.
+        let err = pool.mttkrp(&x, &factors, 0).unwrap_err();
+        assert!(err.to_string().contains("shut down"), "{err}");
+    }
+
+    #[test]
+    fn per_job_attribution_sums_to_global_and_is_schedule_independent() {
+        let (xa, fa) = rand_problem(33, &[104, 20, 52], 64);
+        let (xb, fb) = rand_problem(34, &[60, 16, 16], 32);
+        let mut pool = spawn_cpu_pool(3);
+        let planner = pool.dense_planner();
+        let plan_a = planner.plan_mttkrp(&xa, &fa, 0).unwrap();
+        let plan_b = planner.plan_mttkrp(&xb, &fb, 0).unwrap();
+        pool.execute_plan_for(&plan_a, 1).unwrap();
+        pool.execute_plan_for(&plan_b, 2).unwrap();
+        pool.execute_plan_for(&plan_a, 1).unwrap();
+
+        let m = pool.metrics();
+        let ja = m.job_snapshot(1);
+        let jb = m.job_snapshot(2);
+        assert_eq!(ja.requests, 2);
+        assert_eq!(jb.requests, 1);
+        // Per-job rows partition the global counters exactly.
+        assert_eq!(ja.images + jb.images, m.snapshot()[1].1);
+        assert_eq!(ja.streamed_cycles + jb.streamed_cycles, m.snapshot()[2].1);
+        assert_eq!(
+            ja.reconfig_write_cycles + jb.reconfig_write_cycles,
+            m.snapshot()[3].1
+        );
+        assert_eq!(ja.useful_macs + jb.useful_macs, m.snapshot()[4].1);
+        assert_eq!(ja.raw_macs + jb.raw_macs, m.snapshot()[5].1);
+        // Attribution is deterministic: job A charged exactly twice one
+        // plan's census regardless of worker scheduling.
+        assert_eq!(ja.images % 2, 0);
+        assert_eq!(ja.streamed_cycles % 2, 0);
+        assert_eq!(ja.reconfig_write_cycles % 2, 0);
+    }
+
+    #[test]
+    fn execute_plan_into_reuses_output_and_zeroes_stale_values() {
+        let (x, factors) = rand_problem(35, &[30, 8, 8], 8);
+        let mut pool = spawn_cpu_pool(2);
+        let plan = pool.dense_planner().plan_mttkrp(&x, &factors, 0).unwrap();
+        let fresh = pool.execute_plan(&plan).unwrap();
+        let mut out = Matrix::zeros(30, 8);
+        out.data_mut().fill(123.0); // stale garbage must not leak through
+        pool.execute_plan_into_for(&plan, 0, &mut out).unwrap();
+        assert_eq!(out.data(), fresh.data());
+        // Wrong output geometry is rejected before any work is queued.
+        let mut bad = Matrix::zeros(29, 8);
+        assert!(pool.execute_plan_into_for(&plan, 0, &mut bad).is_err());
     }
 
     #[test]

@@ -4,7 +4,8 @@
 
 use super::backend::MttkrpBackend;
 use super::fit::{cp_inner, cp_norm_sq, relative_fit};
-use crate::tensor::Matrix;
+use crate::session::{JobId, Kernel, PsramSession, SessionJob};
+use crate::tensor::{CooTensor, DenseTensor, Matrix};
 use crate::util::error::{Error, Result};
 use crate::util::prng::Prng;
 
@@ -49,6 +50,73 @@ impl AlsResult {
     }
 }
 
+/// The tensor a CP-ALS run decomposes, submitted through a session.
+#[derive(Clone, Copy)]
+pub enum CpTarget<'a> {
+    /// A dense decomposition target (MTTKRPs lower through
+    /// `Kernel::DenseMttkrp`).
+    Dense(&'a DenseTensor),
+    /// A COO decomposition target (MTTKRPs lower through
+    /// `Kernel::SparseMttkrp`).
+    Sparse(&'a CooTensor),
+}
+
+impl CpTarget<'_> {
+    /// The tensor shape.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            CpTarget::Dense(x) => x.shape(),
+            CpTarget::Sparse(x) => x.shape(),
+        }
+    }
+
+    /// Squared Frobenius norm (for the fit identity).
+    pub fn norm_sq(&self) -> f64 {
+        match self {
+            CpTarget::Dense(x) => {
+                let n = x.fro_norm();
+                n * n
+            }
+            CpTarget::Sparse(x) => {
+                x.values().iter().map(|&v| (v as f64) * (v as f64)).sum()
+            }
+        }
+    }
+}
+
+/// Adapter running every MTTKRP of an ALS sweep through one session job —
+/// `CpAls::run` is literally `run_backend` over this, so the session path
+/// and the legacy backend path share a single driver loop.
+struct SessionMttkrp<'s> {
+    job: &'s SessionJob,
+    target: CpTarget<'s>,
+}
+
+impl MttkrpBackend for SessionMttkrp<'_> {
+    fn mttkrp(&mut self, factors: &[Matrix], mode: usize) -> Result<Matrix> {
+        match self.target {
+            CpTarget::Dense(x) => {
+                self.job.run(Kernel::DenseMttkrp { x, factors, mode })
+            }
+            CpTarget::Sparse(x) => {
+                self.job.run(Kernel::SparseMttkrp { x, factors, mode })
+            }
+        }
+    }
+
+    fn shape(&self) -> &[usize] {
+        self.target.shape()
+    }
+
+    fn norm_sq(&self) -> f64 {
+        self.target.norm_sq()
+    }
+
+    fn name(&self) -> &'static str {
+        "session"
+    }
+}
+
 /// The CP-ALS driver.
 pub struct CpAls {
     /// The run configuration.
@@ -61,8 +129,57 @@ impl CpAls {
         CpAls { config }
     }
 
-    /// Run CP-ALS against any MTTKRP backend.
-    pub fn run<B: MttkrpBackend>(&self, backend: &mut B) -> Result<AlsResult> {
+    /// Run CP-ALS on a [`PsramSession`] (under the default job): every
+    /// MTTKRP of every sweep is one `session.run(Kernel::...)` submission,
+    /// so the same call works on the exact, single-array, and coordinated
+    /// engines — and is bit-identical to the legacy per-kernel backends
+    /// (pinned in `tests/session_api.rs`).
+    ///
+    /// ```
+    /// use psram_imc::cpd::{AlsConfig, CpAls, CpTarget};
+    /// use psram_imc::session::PsramSession;
+    /// use psram_imc::tensor::{DenseTensor, Matrix};
+    /// use psram_imc::util::prng::Prng;
+    ///
+    /// let mut rng = Prng::new(4);
+    /// let truth: Vec<Matrix> =
+    ///     [12, 10, 8].iter().map(|&d| Matrix::randn(d, 3, &mut rng)).collect();
+    /// let x = DenseTensor::from_cp_factors(&truth, 0.0, &mut rng).unwrap();
+    ///
+    /// let session = PsramSession::builder().build().unwrap();
+    /// let als = CpAls::new(AlsConfig { rank: 3, max_iters: 30, tol: 1e-6, seed: 1 });
+    /// let res = als.run(&session, CpTarget::Dense(&x)).unwrap();
+    /// assert!(res.final_fit() > 0.9, "fit={}", res.final_fit());
+    /// ```
+    pub fn run(&self, session: &PsramSession, target: CpTarget<'_>) -> Result<AlsResult> {
+        self.run_job(&session.job(JobId::DEFAULT), target)
+    }
+
+    /// [`CpAls::run`] under an explicit session job — the multi-tenant
+    /// entry: N concurrent ALS jobs, each with its own [`SessionJob`]
+    /// handle, interleave on one shared session/pool with per-job plan
+    /// caching and cycle attribution.
+    ///
+    /// The job's plan-cache namespace is cleared on entry *and* exit.
+    /// On entry because a cached plan from a previous decomposition of a
+    /// same-shape tensor would pass every dimension check yet stream
+    /// that tensor's stale quantized codes; on exit because each cached
+    /// arena holds a full quantized copy of the tensor's streams — a
+    /// long-lived session running many jobs under fresh [`JobId`]s would
+    /// otherwise grow without bound.  Sweeps 2..N inside the run still
+    /// get full plan reuse; other tenants' warm plans are untouched.
+    pub fn run_job(&self, job: &SessionJob, target: CpTarget<'_>) -> Result<AlsResult> {
+        job.clear();
+        let res = self.run_backend(&mut SessionMttkrp { job, target });
+        job.clear();
+        res
+    }
+
+    /// Run CP-ALS against a bare MTTKRP backend — the legacy entry point
+    /// (superseded by [`CpAls::run`]); kept for the exact reference
+    /// backends and for pinning session results against the per-kernel
+    /// backend structs.
+    pub fn run_backend<B: MttkrpBackend>(&self, backend: &mut B) -> Result<AlsResult> {
         let shape = backend.shape().to_vec();
         let nmodes = shape.len();
         let r = self.config.rank;
@@ -177,7 +294,7 @@ mod tests {
         let x = low_rank_tensor(1, &[12, 10, 8], 3, 0.0);
         let mut backend = ExactBackend { tensor: &x };
         let als = CpAls::new(AlsConfig { rank: 3, max_iters: 60, tol: 1e-7, seed: 7 });
-        let res = als.run(&mut backend).unwrap();
+        let res = als.run_backend(&mut backend).unwrap();
         assert!(res.final_fit() > 0.999, "fit={}", res.final_fit());
     }
 
@@ -187,7 +304,7 @@ mod tests {
         let x = low_rank_tensor(2, &[10, 9, 8], 4, 0.05);
         let mut backend = ExactBackend { tensor: &x };
         let als = CpAls::new(AlsConfig { rank: 4, max_iters: 30, tol: 0.0, seed: 3 });
-        let res = als.run(&mut backend).unwrap();
+        let res = als.run_backend(&mut backend).unwrap();
         for w in res.fit_history.windows(2) {
             assert!(w[1] >= w[0] - 1e-4, "fit dropped: {} -> {}", w[0], w[1]);
         }
@@ -203,7 +320,7 @@ mod tests {
         let mut best = 0.0f64;
         for seed in [1u64, 2, 3] {
             let als = CpAls::new(AlsConfig { rank: 3, max_iters: 100, tol: 1e-7, seed });
-            best = best.max(als.run(&mut backend).unwrap().final_fit());
+            best = best.max(als.run_backend(&mut backend).unwrap().final_fit());
         }
         assert!(best > 0.8 && best < 0.9999, "fit={best}");
     }
@@ -214,7 +331,7 @@ mod tests {
         let coo = CooTensor::from_dense(&x, 0.0);
         let mut backend = SparseBackend { tensor: &coo };
         let als = CpAls::new(AlsConfig { rank: 2, max_iters: 50, tol: 1e-7, seed: 2 });
-        let res = als.run(&mut backend).unwrap();
+        let res = als.run_backend(&mut backend).unwrap();
         assert!(res.final_fit() > 0.999, "fit={}", res.final_fit());
     }
 
@@ -223,7 +340,7 @@ mod tests {
         let x = low_rank_tensor(5, &[16, 12, 10], 3, 0.0);
         let mut backend = PsramBackend::new(&x, CpuTileExecutor::paper());
         let als = CpAls::new(AlsConfig { rank: 3, max_iters: 40, tol: 1e-6, seed: 9 });
-        let res = als.run(&mut backend).unwrap();
+        let res = als.run_backend(&mut backend).unwrap();
         // int8 quantized MTTKRP: fit should still be high, not perfect.
         assert!(res.final_fit() > 0.97, "fit={}", res.final_fit());
         assert!(backend.stats.compute_cycles > 0);
@@ -234,7 +351,7 @@ mod tests {
         let x = low_rank_tensor(6, &[6, 5, 4, 3], 2, 0.0);
         let mut backend = ExactBackend { tensor: &x };
         let als = CpAls::new(AlsConfig { rank: 2, max_iters: 80, tol: 1e-8, seed: 4 });
-        let res = als.run(&mut backend).unwrap();
+        let res = als.run_backend(&mut backend).unwrap();
         assert!(res.final_fit() > 0.99, "fit={}", res.final_fit());
         assert_eq!(res.factors.len(), 4);
     }
@@ -244,7 +361,7 @@ mod tests {
         let x = low_rank_tensor(7, &[8, 7, 6], 2, 0.0);
         let mut backend = ExactBackend { tensor: &x };
         let res = CpAls::new(AlsConfig { rank: 5, max_iters: 5, tol: 1e-9, seed: 5 })
-            .run(&mut backend)
+            .run_backend(&mut backend)
             .unwrap();
         assert_eq!(res.lambda.len(), 5);
         assert_eq!(res.factors[0].rows(), 8);
@@ -261,11 +378,39 @@ mod tests {
     }
 
     #[test]
+    fn session_als_bit_identical_to_legacy_psram_backend() {
+        use crate::session::PsramSession;
+        let x = low_rank_tensor(9, &[16, 12, 10], 3, 0.0);
+        let als = CpAls::new(AlsConfig { rank: 3, max_iters: 12, tol: 1e-8, seed: 5 });
+        let mut legacy = PsramBackend::new(&x, CpuTileExecutor::paper());
+        let a = als.run_backend(&mut legacy).unwrap();
+        let session = PsramSession::builder().build().unwrap();
+        let b = als.run(&session, CpTarget::Dense(&x)).unwrap();
+        assert_eq!(a.fit_history, b.fit_history);
+        assert_eq!(a.lambda, b.lambda);
+        for (fa, fb) in a.factors.iter().zip(&b.factors) {
+            assert_eq!(fa.data(), fb.data());
+        }
+    }
+
+    #[test]
+    fn exact_session_matches_exact_backend() {
+        use crate::session::{Engine, PsramSession};
+        let x = low_rank_tensor(10, &[10, 9, 8], 3, 0.0);
+        let als = CpAls::new(AlsConfig { rank: 3, max_iters: 15, tol: 1e-8, seed: 2 });
+        let a = als.run_backend(&mut ExactBackend { tensor: &x }).unwrap();
+        let session =
+            PsramSession::builder().engine(Engine::Exact).build().unwrap();
+        let b = als.run(&session, CpTarget::Dense(&x)).unwrap();
+        assert_eq!(a.fit_history, b.fit_history);
+    }
+
+    #[test]
     fn invalid_configs_rejected() {
         let x = low_rank_tensor(8, &[4, 4, 4], 2, 0.0);
         let mut backend = ExactBackend { tensor: &x };
         assert!(CpAls::new(AlsConfig { rank: 0, ..Default::default() })
-            .run(&mut backend)
+            .run_backend(&mut backend)
             .is_err());
     }
 }

@@ -1,11 +1,19 @@
-//! MTTKRP backends for CP-ALS.
+//! MTTKRP backends for CP-ALS — **the legacy per-kernel layer**.
 //!
-//! Single-array backends live here; the *default* backends for multi-array
-//! runs are the sharded batched coordinator's
-//! ([`CoordinatedBackend`] for dense tensors,
-//! [`CoordinatedSparseBackend`] for COO tensors, both re-exported from
-//! [`crate::coordinator::pool`]) — the CLI's `cpd` command uses them
-//! unless `--backend` says otherwise.
+//! The public submission surface is now the unified
+//! [`crate::session::PsramSession`] (`session.run(Kernel::DenseMttkrp …)`),
+//! which subsumes every struct here behind one builder + one kernel enum;
+//! the CLI and the examples go through it.  This module remains for two
+//! jobs:
+//!
+//! * the exact CPU references ([`ExactBackend`], [`SparseBackend`]) that
+//!   every quantized path is validated against, and
+//! * pinning the session bit-identical to the pre-session backends
+//!   ([`PsramBackend`], and the coordinator's [`CoordinatedBackend`] /
+//!   [`CoordinatedSparseBackend`] re-exported from
+//!   [`crate::coordinator::pool`]) in `tests/session_api.rs`.
+//!
+//! Drive any of them with [`crate::cpd::CpAls::run_backend`].
 
 pub use crate::coordinator::pool::{CoordinatedBackend, CoordinatedSparseBackend};
 use crate::mttkrp::cache::DensePlanCache;

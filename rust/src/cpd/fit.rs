@@ -159,7 +159,7 @@ mod tests {
         let x = DenseTensor::from_cp_factors(&f, 0.05, &mut rng).unwrap();
         let mut backend = ExactBackend { tensor: &x };
         let res = CpAls::new(AlsConfig { rank: 2, max_iters: 30, tol: 1e-7, seed: 4 })
-            .run(&mut backend)
+            .run_backend(&mut backend)
             .unwrap();
         let bf = brute_force_fit(&x, &res.factors, &res.lambda);
         assert!(

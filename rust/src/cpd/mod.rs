@@ -1,13 +1,21 @@
 //! Canonical Polyadic Decomposition via Alternating Least Squares
-//! (Algorithm 1 of the paper), with a pluggable MTTKRP backend so the same
-//! driver runs on the exact CPU reference, the analog pSRAM simulator, or
-//! the PJRT-executed Pallas kernel.
+//! (Algorithm 1 of the paper).
+//!
+//! The primary entry point is session-based: [`CpAls::run`] takes a
+//! [`crate::session::PsramSession`] and a [`CpTarget`] (dense or COO),
+//! and submits every MTTKRP of every sweep as one
+//! `session.run(Kernel::...)` — the same driver therefore runs on the
+//! exact engine, a single simulated array, or the sharded coordinator,
+//! and [`CpAls::run_job`] lets N concurrent ALS jobs share one session.
+//! The pluggable [`MttkrpBackend`] trait and its per-kernel structs
+//! remain as the legacy layer (exact references + the bit-identity pins
+//! in `tests/session_api.rs`), driven via [`CpAls::run_backend`].
 
 pub mod als;
 pub mod backend;
 pub mod fit;
 
-pub use als::{AlsConfig, AlsResult, CpAls};
+pub use als::{AlsConfig, AlsResult, CpAls, CpTarget};
 pub use backend::{
     CoordinatedBackend, CoordinatedSparseBackend, ExactBackend, MttkrpBackend,
     PsramBackend, SparseBackend,

@@ -21,7 +21,15 @@
 //!   drives any executor with zero steady-state allocations), per-mode
 //!   plan caches for CP-ALS (`mttkrp::cache`), and CPU reference
 //!   implementations (dense + sparse) used as baselines.
-//! * [`cpd`] — CP-ALS tensor decomposition with a pluggable MTTKRP backend.
+//! * [`session`] — **the public submission surface**: a builder-constructed
+//!   [`session::PsramSession`] owns the executor or coordinator pool, the
+//!   unified job-namespaced plan cache, and the perf model; every workload
+//!   — dense MTTKRP, sparse MTTKRP, Tucker TTM — is one
+//!   [`session::Kernel`] submitted through `session.run`, and N concurrent
+//!   decomposition jobs share one device with per-job plan namespaces,
+//!   cycle attribution, and a cycle-exact `session.predict` path.
+//! * [`cpd`] — CP-ALS tensor decomposition driven through a session (a
+//!   pluggable legacy backend trait remains for references and pinning).
 //! * [`tucker`] — Tucker decomposition: HOSVD initialization + HOOI
 //!   iterations whose TTM chains lower through the same tile-plan IR
 //!   (`TtmPlanner`) and run on any executor or the coordinator, with
@@ -59,6 +67,7 @@ pub mod mttkrp;
 pub mod perfmodel;
 pub mod psram;
 pub mod runtime;
+pub mod session;
 pub mod tensor;
 pub mod tucker;
 pub mod util;

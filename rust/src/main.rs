@@ -14,25 +14,25 @@
 //! psram-imc energy    [--channels N] [--freq GHZ]
 //! psram-imc selftest            # analog vs CPU vs PJRT cross-check
 //! ```
+//!
+//! Every decomposition command builds one [`PsramSession`] — the unified
+//! submission surface — and picks an engine from `--backend`: `exact`
+//! maps to `Engine::Exact`, `psram` to `Engine::SingleArray` (the analog
+//! simulator; `--noise` adds detector noise), `coordinator` to
+//! `Engine::Coordinated` over `--workers` shards.  `pjrt` still drives
+//! the legacy single-array backend directly (the PJRT runtime is not
+//! `Send`-guaranteed under the `xla` feature).
 
 use psram_imc::cli::Args;
-use psram_imc::compute::ComputeEngine;
-use psram_imc::coordinator::pool::{CoordinatedBackend, CoordinatedSparseBackend};
-use psram_imc::coordinator::{Coordinator, CoordinatorConfig};
-use psram_imc::cpd::{AlsConfig, CpAls, ExactBackend, PsramBackend, SparseBackend};
-use psram_imc::device::{DeviceParams, NoiseModel};
+use psram_imc::coordinator::CoordinatorConfig;
+use psram_imc::cpd::{AlsConfig, CpAls, CpTarget, PsramBackend};
 use psram_imc::energy::EnergyModel;
 use psram_imc::mttkrp::pipeline::{AnalogTileExecutor, CpuTileExecutor};
-use psram_imc::mttkrp::SparsePsramBackend;
-use psram_imc::tensor::CooTensor;
 use psram_imc::perfmodel::{fig5_frequency, fig5_wavelengths, PerfModel, Workload};
-use psram_imc::psram::PsramArray;
 use psram_imc::runtime::PjrtTileExecutor;
-use psram_imc::tensor::{DenseTensor, Matrix};
-use psram_imc::tucker::{
-    tucker_fit, tucker_reconstruct, CoordinatedTtmBackend, ExactTtmBackend,
-    PsramTtmBackend, TuckerConfig, TuckerHooi,
-};
+use psram_imc::session::{Engine, NoiseMode, PsramSession};
+use psram_imc::tensor::{CooTensor, DenseTensor, Matrix};
+use psram_imc::tucker::{tucker_fit, tucker_reconstruct, TuckerConfig, TuckerHooi};
 use psram_imc::util::prng::Prng;
 use psram_imc::util::units::{format_energy, format_ops};
 use psram_imc::Result;
@@ -163,15 +163,41 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// One simulated analog array executor: noisy (Gaussian detector noise,
-/// deterministic from `seed`) when `noise > 0`, bit-exact otherwise.
-fn analog_executor(noise: f64, seed: u64) -> AnalogTileExecutor {
-    let engine = if noise > 0.0 {
-        ComputeEngine::new(DeviceParams::default(), NoiseModel::gaussian(noise, seed))
-    } else {
-        ComputeEngine::ideal()
-    };
-    AnalogTileExecutor::new(engine, PsramArray::paper())
+/// Build the session for a decomposition command: `--backend` picks the
+/// engine, `--noise` the detector-noise mode, `--workers`/`--batch` the
+/// pool shape.  `analog` selects the device-faithful simulator for the
+/// pSRAM engines (the sparse paths default to the fast CPU twin — the two
+/// are bit-identical with noise off).
+fn build_session(
+    args: &Args,
+    backend_kind: &str,
+    noise: f64,
+    seed: u64,
+    analog: bool,
+    pool_config: Option<CoordinatorConfig>,
+) -> Result<PsramSession> {
+    let mut b = PsramSession::builder().analog(analog);
+    if noise > 0.0 {
+        b = b.noise(NoiseMode::Gaussian { sigma_lsb: noise, seed });
+    }
+    match backend_kind {
+        "exact" => b.engine(Engine::Exact).build(),
+        "psram" => b.engine(Engine::SingleArray).build(),
+        "coordinator" => {
+            let workers = args.get_or("workers", 4usize)?;
+            let mut cfg =
+                pool_config.unwrap_or_else(|| CoordinatorConfig::new(workers));
+            cfg.workers = workers;
+            cfg.batch_size = args.get_or("batch", cfg.batch_size)?;
+            print_pool_config(&cfg);
+            b.engine(Engine::Coordinated { shards: workers })
+                .pool_config(cfg)
+                .build()
+        }
+        other => Err(psram_imc::Error::config(format!(
+            "unknown backend {other:?} (use coordinator, psram or exact)"
+        ))),
+    }
 }
 
 /// Print a pool configuration the way every coordinator-backed command does.
@@ -182,16 +208,36 @@ fn print_pool_config(cfg: &CoordinatorConfig) {
     );
 }
 
-/// Spawn a pool of analog-array workers; with `noise > 0` every worker
-/// gets its own deterministic RNG stream derived from `seed`.
-fn spawn_analog_pool(
-    cfg: CoordinatorConfig,
-    noise: f64,
-    seed: u64,
-) -> Result<Coordinator> {
-    Coordinator::spawn(cfg, |i| {
-        Ok(analog_executor(noise, (seed ^ 0x77).wrapping_add(i as u64)))
-    })
+/// Print a session's aggregate metrics plus the per-shard rows, with
+/// streamed compute cycles split from reconfiguration writes (the exact
+/// engine has no cycles to report and is skipped).
+fn print_session_metrics(session: &PsramSession) {
+    if session.engine() == Engine::Exact {
+        return;
+    }
+    let m = session.metrics();
+    println!("session metrics ({:?}):", session.engine());
+    for (k, v) in m.snapshot() {
+        println!("  {k:>20}: {v}");
+    }
+    println!("  per-shard (batches / images / streamed / reconfig writes / steals):");
+    for s in m.shard_snapshot() {
+        println!(
+            "    shard {}: {:>5} / {:>6} / {:>9} / {:>9} / {:>4}",
+            s.shard, s.batches, s.images, s.streamed_cycles,
+            s.reconfig_write_cycles, s.steals
+        );
+    }
+    for j in m.jobs_snapshot() {
+        println!(
+            "  job {}: {} request(s), {} image(s), U={:.4}, {} attributed",
+            j.job,
+            j.requests,
+            j.images,
+            j.utilization(),
+            format_energy(session.job_energy(psram_imc::session::JobId(j.job)).total_j()),
+        );
+    }
 }
 
 fn cmd_cpd(args: &Args) -> Result<()> {
@@ -214,9 +260,10 @@ fn cmd_cpd(args: &Args) -> Result<()> {
     println!("tensor {shape:?}, rank {rank}, backend {backend_kind}");
 
     // Sparse path: sparsify the synthetic tensor to the requested density
-    // and run spMTTKRP CP-ALS — by default through the sharded coordinator
-    // (slice plans sharded by stored factor block), or on a single array
-    // with --backend psram, or exactly with --backend exact.
+    // and run spMTTKRP CP-ALS through the same session surface — by
+    // default on the sharded coordinator (slice plans sharded by stored
+    // factor block), on a single array with --backend psram, or exactly
+    // with --backend exact.
     if sparse_density > 0.0 {
         let total: usize = shape.iter().product();
         let keep = (total as f64 * sparse_density) as usize;
@@ -227,39 +274,9 @@ fn cmd_cpd(args: &Args) -> Result<()> {
         let coo = CooTensor::from_dense(&x, thr);
         println!("sparsified to {} nnz (density {:.4})", coo.nnz(), coo.density());
         let t0 = std::time::Instant::now();
-        let res = match backend_kind {
-            "coordinator" => {
-                let workers = args.get_or("workers", 4usize)?;
-                let mut cfg = CoordinatorConfig::new(workers);
-                cfg.batch_size = args.get_or("batch", cfg.batch_size)?;
-                print_pool_config(&cfg);
-                let pool = Coordinator::spawn(cfg, |_| Ok(CpuTileExecutor::paper()))?;
-                let mut backend = CoordinatedSparseBackend::new(&coo, pool);
-                let r = als.run(&mut backend)?;
-                print_pool_metrics(&backend.pool);
-                r
-            }
-            "psram" => {
-                let mut backend =
-                    SparsePsramBackend::new(&coo, CpuTileExecutor::paper());
-                let r = als.run(&mut backend)?;
-                println!(
-                    "sparse pipeline: images={} compute={} write={} U={:.4} raw-eff={:.4}",
-                    backend.stats.images,
-                    backend.stats.compute_cycles,
-                    backend.stats.write_cycles,
-                    backend.stats.utilization(),
-                    backend.stats.padding_efficiency()
-                );
-                r
-            }
-            "exact" => als.run(&mut SparseBackend { tensor: &coo })?,
-            other => {
-                return Err(psram_imc::Error::config(format!(
-                    "unknown sparse backend {other:?} (use coordinator, psram or exact)"
-                )))
-            }
-        };
+        let session = build_session(args, backend_kind, noise, seed, false, None)?;
+        let res = als.run(&session, CpTarget::Sparse(&coo))?;
+        print_session_metrics(&session);
         println!(
             "final fit {:.6} after {} sweeps in {:.2?}",
             res.final_fit(),
@@ -271,50 +288,38 @@ fn cmd_cpd(args: &Args) -> Result<()> {
 
     let t0 = std::time::Instant::now();
     let res = match backend_kind {
-        "exact" => als.run(&mut ExactBackend { tensor: &x })?,
-        "psram" => {
-            let exec = analog_executor(noise, seed ^ 0x77);
-            let mut backend = PsramBackend::new(&x, exec);
-            let r = als.run(&mut backend)?;
-            println!(
-                "pipeline: images={} compute_cycles={} write_cycles={} U={:.4}",
-                backend.stats.images,
-                backend.stats.compute_cycles,
-                backend.stats.write_cycles,
-                backend.stats.utilization()
-            );
-            r
-        }
-        "coordinator" => {
-            // Pool shape derived from the perf model geometry + workload
-            // (workers = arrays, batch = rank blocks per contraction block).
-            let workers = args.get_or("workers", 4usize)?;
-            let mut model = PerfModel::paper();
-            model.num_arrays = workers;
-            let wl = Workload {
-                i_rows: shape[0] as u64,
-                k_contraction: shape[1..].iter().product::<usize>() as u64,
-                rank: rank as u64,
-            };
-            let mut cfg = CoordinatorConfig::from_model(&model, &wl);
-            cfg.batch_size = args.get_or("batch", cfg.batch_size)?;
-            print_pool_config(&cfg);
-            // --noise works here too: noisy analog workers (per-worker RNG
-            // streams) instead of the exact integer executor.
-            let pool = spawn_analog_pool(cfg, noise, seed)?;
-            let mut backend = CoordinatedBackend::new(&x, pool);
-            let r = als.run(&mut backend)?;
-            print_pool_metrics(&backend.pool);
-            r
-        }
+        // The PJRT executor stays on the legacy single-array backend (it
+        // is not guaranteed Send under the `xla` feature, so it cannot
+        // live inside a shareable session).
         "pjrt" => {
             let exec = PjrtTileExecutor::paper()?;
             println!("pjrt artifact: {}", exec.artifact());
             let mut backend = PsramBackend::new(&x, exec);
-            als.run(&mut backend)?
+            als.run_backend(&mut backend)?
         }
-        other => {
-            return Err(psram_imc::Error::config(format!("unknown backend {other:?}")))
+        _ => {
+            // Pool shape derived from the perf model geometry + workload
+            // (workers = arrays, batch = rank blocks per contraction
+            // block); --noise adds per-worker deterministic detector
+            // noise on the analog arrays.
+            let pool_cfg = if backend_kind == "coordinator" {
+                let workers = args.get_or("workers", 4usize)?;
+                let mut model = PerfModel::paper();
+                model.num_arrays = workers;
+                let wl = Workload {
+                    i_rows: shape[0] as u64,
+                    k_contraction: shape[1..].iter().product::<usize>() as u64,
+                    rank: rank as u64,
+                };
+                Some(CoordinatorConfig::from_model(&model, &wl))
+            } else {
+                None
+            };
+            let session =
+                build_session(args, backend_kind, noise, seed, true, pool_cfg)?;
+            let r = als.run(&session, CpTarget::Dense(&x))?;
+            print_session_metrics(&session);
+            r
         }
     };
     let dt = t0.elapsed();
@@ -371,39 +376,9 @@ fn cmd_tucker(args: &Args) -> Result<()> {
     println!("tensor {shape:?}, ranks {ranks:?}, backend {backend_kind}");
 
     let t0 = std::time::Instant::now();
-    let res = match backend_kind {
-        "exact" => hooi.run(&x, &mut ExactTtmBackend)?,
-        "psram" => {
-            // --noise: detector noise on the simulated analog array.
-            let exec = analog_executor(noise, seed ^ 0x77);
-            let mut backend = PsramTtmBackend::new(exec);
-            let r = hooi.run(&x, &mut backend)?;
-            println!(
-                "pipeline: images={} compute_cycles={} write_cycles={} U={:.4}",
-                backend.stats.images,
-                backend.stats.compute_cycles,
-                backend.stats.write_cycles,
-                backend.stats.utilization()
-            );
-            r
-        }
-        "coordinator" => {
-            let workers = args.get_or("workers", 4usize)?;
-            let mut cfg = CoordinatorConfig::new(workers);
-            cfg.batch_size = args.get_or("batch", cfg.batch_size)?;
-            print_pool_config(&cfg);
-            let pool = spawn_analog_pool(cfg, noise, seed)?;
-            let mut backend = CoordinatedTtmBackend::new(pool);
-            let r = hooi.run(&x, &mut backend)?;
-            print_pool_metrics(&backend.pool);
-            r
-        }
-        other => {
-            return Err(psram_imc::Error::config(format!(
-                "unknown tucker backend {other:?} (use coordinator, psram or exact)"
-            )))
-        }
-    };
+    let session = build_session(args, backend_kind, noise, seed, true, None)?;
+    let res = hooi.run(&x, &session)?;
+    print_session_metrics(&session);
     let dt = t0.elapsed();
 
     for (i, fit) in res.fit_history.iter().enumerate() {
@@ -420,23 +395,6 @@ fn cmd_tucker(args: &Args) -> Result<()> {
         dt
     );
     Ok(())
-}
-
-/// Print the pool's aggregate metrics plus the per-shard rows, with
-/// streamed compute cycles split from reconfiguration writes.
-fn print_pool_metrics(pool: &Coordinator) {
-    println!("coordinator metrics:");
-    for (k, v) in pool.metrics().snapshot() {
-        println!("  {k:>20}: {v}");
-    }
-    println!("  per-shard (batches / images / streamed / reconfig writes / steals):");
-    for s in pool.metrics().shard_snapshot() {
-        println!(
-            "    shard {}: {:>5} / {:>6} / {:>9} / {:>9} / {:>4}",
-            s.shard, s.batches, s.images, s.streamed_cycles,
-            s.reconfig_write_cycles, s.steals
-        );
-    }
 }
 
 fn cmd_energy(args: &Args) -> Result<()> {

@@ -23,6 +23,12 @@
 //! per TTM-chain position instead of one per mode, with the first TTM of
 //! every chain (which streams the fixed decomposition target) skipping
 //! stream requantization exactly like the dense MTTKRP cache.
+//!
+//! These three caches are the *legacy* per-kernel stores, kept for the
+//! backend structs they serve; the session layer unifies all three reuse
+//! rules behind one keyed, job-namespaced store —
+//! [`crate::session::PlanCache`] — which is what the public
+//! `PsramSession` API caches through.
 
 use super::plan::{DensePlanner, SparseSlicePlanner, TilePlan, TtmPlanner};
 use crate::tensor::{krp_all_but, CooTensor, DenseTensor, Matrix};

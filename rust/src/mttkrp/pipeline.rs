@@ -104,6 +104,53 @@ pub trait TileExecutor {
     }
 }
 
+// Boxed executors forward every method (including the batched
+// `compute_block_into` override and the energy ledger), so
+// `Box<dyn TileExecutor + Send>` — the session layer's erased executor —
+// behaves identically to the concrete type it wraps.
+impl<T: TileExecutor + ?Sized> TileExecutor for Box<T> {
+    fn rows(&self) -> usize {
+        (**self).rows()
+    }
+
+    fn words_per_row(&self) -> usize {
+        (**self).words_per_row()
+    }
+
+    fn max_lanes(&self) -> usize {
+        (**self).max_lanes()
+    }
+
+    fn load_image(&mut self, image: &[i8]) -> Result<()> {
+        (**self).load_image(image)
+    }
+
+    fn compute_into(&mut self, u: &[u8], lanes: usize, out: &mut [i32]) -> Result<()> {
+        (**self).compute_into(u, lanes, out)
+    }
+
+    fn compute(&mut self, u: &[u8], lanes: usize) -> Result<Vec<i32>> {
+        (**self).compute(u, lanes)
+    }
+
+    fn compute_block_into(
+        &mut self,
+        u: &[u8],
+        lane_counts: &[usize],
+        out: &mut [i32],
+    ) -> Result<()> {
+        (**self).compute_block_into(u, lane_counts, out)
+    }
+
+    fn cycles(&self) -> CycleLedger {
+        (**self).cycles()
+    }
+
+    fn energy(&self) -> Option<EnergyLedger> {
+        (**self).energy()
+    }
+}
+
 /// The analog-simulator executor: a [`ComputeEngine`] bound to one
 /// [`PsramArray`].
 pub struct AnalogTileExecutor {

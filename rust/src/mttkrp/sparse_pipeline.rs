@@ -235,7 +235,7 @@ mod tests {
         let mut backend = SparsePsramBackend::new(&coo, CpuTileExecutor::paper());
         for seed in [2u64, 3, 4] {
             let res = CpAls::new(AlsConfig { rank: 2, max_iters: 30, tol: 1e-7, seed })
-                .run(&mut backend)
+                .run_backend(&mut backend)
                 .unwrap();
             best = best.max(res.final_fit());
         }

@@ -1,0 +1,504 @@
+//! The unified plan cache: one keyed store subsuming the three legacy
+//! per-kernel caches (`mttkrp::cache`), with per-job namespaces.
+//!
+//! Keys are `(job, kernel kind, slot)` — see [`PlanKey`]:
+//!
+//! * the **kind** ([`super::KernelKind`]) separates planner families, so
+//!   a dense MTTKRP plan and a TTM plan of *identical* tile geometry
+//!   (same `out_rows`/`out_cols`/`stored_len`) can never alias — their
+//!   streamed payloads differ even when every dimension matches;
+//! * the **job** namespace isolates tenants: two jobs decomposing
+//!   different tensors of the same shape reuse only their *own* cached
+//!   streams (same-shape aliasing across jobs is impossible by key);
+//! * the **slot** is the kernel's mode (MTTKRP) or chain position (TTM).
+//!
+//! Reuse rules are inherited verbatim from the legacy caches — a cached
+//! plan is requantized in place (`replan_into`) when the operand
+//! dimensions still match, replanned from scratch otherwise — so cached
+//! session trajectories are bit-identical to planning fresh every call
+//! (pinned in `tests/session_api.rs`).
+//!
+//! Contract (unchanged from the legacy caches, now per *(job, slot)*):
+//! one `(job, kind, slot)` serves **one** operand identity.  Swapping in
+//! a different tensor of identical dimensions under the same key is
+//! undetectable; use a fresh [`super::JobId`] per decomposition job, or
+//! [`PlanCache::clear_job`] when recycling one.
+
+use super::kernel::{Kernel, KernelKind};
+use crate::mttkrp::plan::{DensePlanner, SparseSlicePlanner, TilePlan, TtmPlanner};
+use crate::tensor::{krp_all_but, CooTensor, DenseTensor, Matrix};
+use crate::tucker::backend::TtmStream;
+use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Key of one cached plan: tenant job × planner family × slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Tenant job namespace (`JobId.0`).
+    pub job: u64,
+    /// Planner family — dense/sparse/TTM plans never alias.
+    pub kind: KernelKind,
+    /// Mode (MTTKRP) or chain slot (TTM) within the namespace.
+    pub slot: usize,
+}
+
+/// One cached plan plus the provenance of its streamed payload.
+#[derive(Debug)]
+struct CachedPlan {
+    plan: TilePlan,
+    /// TTM entries only: `Some(mode)` when the cached streams were last
+    /// quantized from the fixed decomposition target's `mode` unfolding,
+    /// `None` after a changing-stream fill.  A fixed-stream reuse is
+    /// only allowed when the mode matches — dimension checks alone
+    /// cannot tell two unfold modes of a cube tensor apart, and serving
+    /// the wrong mode's streams would be a silent wrong answer.
+    /// MTTKRP entries always store `None` (their slot *is* the mode).
+    fixed_mode: Option<usize>,
+}
+
+/// The unified, job-namespaced plan store of a session.  All three
+/// planner families share one tile geometry (the session's array model).
+#[derive(Debug)]
+pub struct PlanCache {
+    dense: DensePlanner,
+    sparse: SparseSlicePlanner,
+    ttm: TtmPlanner,
+    plans: HashMap<PlanKey, CachedPlan>,
+}
+
+impl PlanCache {
+    /// An empty cache planning for the given tile geometry.
+    pub fn new(rows: usize, wpr: usize, lanes: usize) -> Self {
+        PlanCache {
+            dense: DensePlanner::new(rows, wpr, lanes),
+            sparse: SparseSlicePlanner::new(rows, wpr, lanes),
+            ttm: TtmPlanner::new(rows, wpr, lanes),
+            plans: HashMap::new(),
+        }
+    }
+
+    /// Cached plans currently held (across all jobs).
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// True when no plan is cached.
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+
+    /// Drop every cached plan, all jobs.
+    pub fn clear(&mut self) {
+        self.plans.clear();
+    }
+
+    /// Drop every plan of one job's namespace, leaving other tenants'
+    /// warm plans untouched.
+    pub fn clear_job(&mut self, job: u64) {
+        self.plans.retain(|k, _| k.job != job);
+    }
+
+    /// The plan for `kernel` under job `job`: requantized in place when
+    /// the cached shape still fits (ALS/HOOI iterations 2..N), planned
+    /// from scratch otherwise.  Bit-identical to [`PlanCache::plan_fresh`]
+    /// with the same operands.
+    pub fn plan_kernel(&mut self, job: u64, kernel: &Kernel<'_>) -> Result<&TilePlan> {
+        let key = PlanKey { job, kind: kernel.kind(), slot: kernel.slot() };
+        match kernel {
+            Kernel::DenseMttkrp { x, factors, mode } => {
+                self.plan_dense(key, x, factors, *mode)
+            }
+            Kernel::SparseMttkrp { x, factors, mode } => {
+                self.plan_sparse(key, x, factors, *mode)
+            }
+            Kernel::Ttm { stream, u, .. } => match stream {
+                TtmStream::Fixed(x, mode) => self.plan_ttm_fixed(key, x, *mode, u),
+                TtmStream::Changing(xt) => self.plan_ttm_streamed(key, xt, u),
+            },
+        }
+    }
+
+    /// Plan `kernel` without consulting or touching the store
+    /// (`CachePolicy::Disabled`, and `predict` on cold sessions that must
+    /// not warm tenant namespaces).
+    pub fn plan_fresh(&self, kernel: &Kernel<'_>) -> Result<TilePlan> {
+        match kernel {
+            Kernel::DenseMttkrp { x, factors, mode } => {
+                self.dense.plan_mttkrp(x, factors, *mode)
+            }
+            Kernel::SparseMttkrp { x, factors, mode } => {
+                self.sparse.plan(x, factors, *mode)
+            }
+            Kernel::Ttm { stream, u, .. } => match stream {
+                TtmStream::Fixed(x, mode) => {
+                    let xt = x.unfold(*mode)?.transpose();
+                    self.ttm.plan_streamed(&xt, u)
+                }
+                TtmStream::Changing(xt) => self.ttm.plan_streamed(xt, u),
+            },
+        }
+    }
+
+    /// Dense MTTKRP slot: reusable when the contraction length, rank,
+    /// and output mode dimension all still match — then only the KRP
+    /// images are requantized (the tensor's unfolding and streamed codes
+    /// are fixed per mode).
+    fn plan_dense(
+        &mut self,
+        key: PlanKey,
+        x: &DenseTensor,
+        factors: &[Matrix],
+        mode: usize,
+    ) -> Result<&TilePlan> {
+        if mode >= x.ndim() {
+            return Err(Error::shape(format!(
+                "mode {mode} of {}-mode tensor",
+                x.ndim()
+            )));
+        }
+        let krp = krp_all_but(factors, mode)?;
+        let reusable = match self.plans.get(&key) {
+            Some(entry) => {
+                entry.plan.stored_len() == krp.rows()
+                    && entry.plan.out_cols == krp.cols()
+                    && entry.plan.out_rows == x.shape()[mode]
+            }
+            None => false,
+        };
+        if reusable {
+            let entry = self.plans.get_mut(&key).expect("checked above");
+            self.dense.replan_into(None, &krp, &mut entry.plan)?;
+        } else {
+            let unf = x.unfold(mode)?;
+            let plan = self.dense.plan_unfolded(&unf, &krp)?;
+            self.plans.insert(key, CachedPlan { plan, fixed_mode: None });
+        }
+        Ok(&self.plans.get(&key).expect("just planned").plan)
+    }
+
+    /// Sparse MTTKRP slot: reusable when rank and the output/stored
+    /// factor dimensions match — then the stored factor images and CP2
+    /// scale vectors are refilled in place (fiber codes depend only on
+    /// the tensor, which ALS never changes).
+    fn plan_sparse(
+        &mut self,
+        key: PlanKey,
+        x: &CooTensor,
+        factors: &[Matrix],
+        mode: usize,
+    ) -> Result<&TilePlan> {
+        let nd = factors.len();
+        let reusable = match self.plans.get(&key) {
+            Some(entry) if nd >= 2 && mode < nd => {
+                let m1 = (0..nd).find(|&m| m != mode).expect("nd >= 2");
+                factors[0].cols() == entry.plan.out_cols
+                    && factors[mode].rows() == entry.plan.out_rows
+                    && factors[m1].rows() == entry.plan.stored_len()
+            }
+            _ => false,
+        };
+        if reusable {
+            let entry = self.plans.get_mut(&key).expect("checked above");
+            self.sparse.replan_into(factors, mode, &mut entry.plan)?;
+        } else {
+            let plan = self.sparse.plan(x, factors, mode)?;
+            self.plans.insert(key, CachedPlan { plan, fixed_mode: None });
+        }
+        Ok(&self.plans.get(&key).expect("just planned").plan)
+    }
+
+    /// Fixed-stream TTM slot (the streamed operand is the decomposition
+    /// target): warm calls skip the unfolding, the transpose, and the
+    /// whole stream requantization — only the stored factor images are
+    /// refilled.
+    fn plan_ttm_fixed(
+        &mut self,
+        key: PlanKey,
+        x: &DenseTensor,
+        mode: usize,
+        u: &Matrix,
+    ) -> Result<&TilePlan> {
+        if mode >= x.ndim() {
+            return Err(Error::shape(format!(
+                "TTM mode {mode} of {}-mode tensor",
+                x.ndim()
+            )));
+        }
+        let rest: usize = x
+            .shape()
+            .iter()
+            .enumerate()
+            .filter(|&(m, _)| m != mode)
+            .map(|(_, &d)| d)
+            .product();
+        // Layout reuse needs the dimensions to match; *skipping the
+        // stream requantization* additionally needs the cached streams to
+        // have come from this exact mode's unfolding (`fixed_mode`) —
+        // a cube tensor's modes are dimension-indistinguishable.
+        let layout_ok = match self.plans.get(&key) {
+            Some(entry) => {
+                entry.plan.out_rows == rest
+                    && entry.plan.stored_len() == u.rows()
+                    && entry.plan.out_cols == u.cols()
+            }
+            None => false,
+        };
+        if layout_ok {
+            let streams_ok = self.plans.get(&key).expect("checked above").fixed_mode
+                == Some(mode);
+            let entry = self.plans.get_mut(&key).expect("checked above");
+            if streams_ok {
+                self.ttm.replan_into(None, u, &mut entry.plan)?;
+            } else {
+                // Same geometry, different provenance: reuse the layout
+                // but requantize the streams from this mode's unfolding.
+                let xt = x.unfold(mode)?.transpose();
+                self.ttm.replan_into(Some(&xt), u, &mut entry.plan)?;
+                entry.fixed_mode = Some(mode);
+            }
+        } else {
+            let xt = x.unfold(mode)?.transpose();
+            let plan = self.ttm.plan_streamed(&xt, u)?;
+            self.plans.insert(key, CachedPlan { plan, fixed_mode: Some(mode) });
+        }
+        Ok(&self.plans.get(&key).expect("just planned").plan)
+    }
+
+    /// Changing-stream TTM slot (an intermediate chain matrix): streams
+    /// and images are both requantized in place into the cached arena,
+    /// but the plan layout (grouping, arena allocation) is reused.
+    fn plan_ttm_streamed(
+        &mut self,
+        key: PlanKey,
+        xt: &Matrix,
+        u: &Matrix,
+    ) -> Result<&TilePlan> {
+        // A changing stream is fully requantized on every call, so layout
+        // reuse is safe regardless of what last filled the slot; the
+        // provenance tag is reset so a later fixed-stream call on this
+        // slot cannot skip its own stream requantization.
+        let reusable = match self.plans.get(&key) {
+            Some(entry) => {
+                entry.plan.out_rows == xt.rows()
+                    && entry.plan.stored_len() == u.rows()
+                    && entry.plan.out_cols == u.cols()
+            }
+            None => false,
+        };
+        if reusable {
+            let entry = self.plans.get_mut(&key).expect("checked above");
+            self.ttm.replan_into(Some(xt), u, &mut entry.plan)?;
+            entry.fixed_mode = None;
+        } else {
+            let plan = self.ttm.plan_streamed(xt, u)?;
+            self.plans.insert(key, CachedPlan { plan, fixed_mode: None });
+        }
+        Ok(&self.plans.get(&key).expect("just planned").plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mttkrp::plan::execute_plan;
+    use crate::mttkrp::pipeline::CpuTileExecutor;
+    use crate::mttkrp::MttkrpStats;
+    use crate::util::prng::Prng;
+
+    fn exec_plan(plan: &TilePlan) -> Matrix {
+        let mut exec = CpuTileExecutor::paper();
+        let mut stats = MttkrpStats::default();
+        execute_plan(&mut exec, plan, &mut stats).unwrap()
+    }
+
+    #[test]
+    fn dense_and_ttm_of_identical_geometry_do_not_alias() {
+        // A dense MTTKRP plan and a TTM plan engineered to share every
+        // dimension the reuse checks look at (out_rows 6, stored 16,
+        // out_cols 4).  If the keys aliased, the second submission would
+        // pass the reuse check and stream the first kernel's stale codes.
+        let mut rng = Prng::new(1);
+        let xd = DenseTensor::randn(&[6, 8, 2], &mut rng);
+        let factors: Vec<Matrix> =
+            [6, 8, 2].iter().map(|&d| Matrix::randn(d, 4, &mut rng)).collect();
+        let xt_src = DenseTensor::randn(&[16, 3, 2], &mut rng);
+        let u = Matrix::randn(16, 4, &mut rng);
+
+        let mut cache = PlanCache::new(256, 32, 52);
+        let dense_kernel = Kernel::DenseMttkrp { x: &xd, factors: &factors, mode: 0 };
+        let ttm_kernel =
+            Kernel::Ttm { stream: TtmStream::Fixed(&xt_src, 0), u: &u, slot: 0 };
+
+        // Same job, same slot number, same plan geometry — different kind.
+        let d = exec_plan(cache.plan_kernel(0, &dense_kernel).unwrap());
+        {
+            let plan = cache.plan_kernel(0, &dense_kernel).unwrap();
+            assert_eq!((plan.out_rows, plan.out_cols, plan.stored_len()), (6, 4, 16));
+        }
+        let t = exec_plan(cache.plan_kernel(0, &ttm_kernel).unwrap());
+        assert_eq!(cache.len(), 2, "kinds must occupy distinct keys");
+
+        let d_fresh = exec_plan(&cache.plan_fresh(&dense_kernel).unwrap());
+        let t_fresh = exec_plan(&cache.plan_fresh(&ttm_kernel).unwrap());
+        assert_eq!(d.data(), d_fresh.data());
+        assert_eq!(t.data(), t_fresh.data());
+
+        // And the dense slot is still warm and still correct.
+        let d2 = exec_plan(cache.plan_kernel(0, &dense_kernel).unwrap());
+        assert_eq!(d2.data(), d_fresh.data());
+    }
+
+    #[test]
+    fn job_namespaces_isolate_same_shape_tensors() {
+        // Two jobs decompose *different* tensors of identical shape.  A
+        // shared namespace would let job 2 reuse job 1's streamed codes
+        // (the dimensions all match); per-job keys make that impossible.
+        let mut rng = Prng::new(2);
+        let x1 = DenseTensor::randn(&[10, 7, 5], &mut rng);
+        let x2 = DenseTensor::randn(&[10, 7, 5], &mut rng);
+        let factors: Vec<Matrix> =
+            [10, 7, 5].iter().map(|&d| Matrix::randn(d, 3, &mut rng)).collect();
+        let k1 = Kernel::DenseMttkrp { x: &x1, factors: &factors, mode: 0 };
+        let k2 = Kernel::DenseMttkrp { x: &x2, factors: &factors, mode: 0 };
+
+        let mut cache = PlanCache::new(256, 32, 52);
+        let a1 = exec_plan(cache.plan_kernel(1, &k1).unwrap());
+        let a2 = exec_plan(cache.plan_kernel(2, &k2).unwrap());
+        assert_eq!(cache.len(), 2);
+        assert_eq!(a1.data(), exec_plan(&cache.plan_fresh(&k1).unwrap()).data());
+        assert_eq!(a2.data(), exec_plan(&cache.plan_fresh(&k2).unwrap()).data());
+        assert_ne!(a1.data(), a2.data(), "different tensors, different results");
+    }
+
+    #[test]
+    fn clear_job_evicts_one_namespace_only() {
+        let mut rng = Prng::new(3);
+        let x = DenseTensor::randn(&[8, 6, 4], &mut rng);
+        let factors: Vec<Matrix> =
+            [8, 6, 4].iter().map(|&d| Matrix::randn(d, 3, &mut rng)).collect();
+        let mut cache = PlanCache::new(256, 32, 52);
+        for mode in 0..3 {
+            let k = Kernel::DenseMttkrp { x: &x, factors: &factors, mode };
+            cache.plan_kernel(1, &k).unwrap();
+            cache.plan_kernel(2, &k).unwrap();
+        }
+        assert_eq!(cache.len(), 6);
+        cache.clear_job(1);
+        assert_eq!(cache.len(), 3);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn warm_slots_requantize_bit_identically_across_factor_updates() {
+        // The ALS pattern: tensor fixed, factors change every call.  Warm
+        // results must equal fresh plans bit for bit, for every kind.
+        let mut rng = Prng::new(4);
+        let x = DenseTensor::randn(&[20, 9, 8], &mut rng);
+        let coo = CooTensor::random(&[24, 300, 10], 500, &mut rng);
+        let mut cache = PlanCache::new(256, 32, 52);
+
+        for iter in 0..3 {
+            let factors: Vec<Matrix> =
+                [20, 9, 8].iter().map(|&d| Matrix::randn(d, 6, &mut rng)).collect();
+            let sf: Vec<Matrix> = [24, 300, 10]
+                .iter()
+                .map(|&d| Matrix::randn(d, 6, &mut rng))
+                .collect();
+            let u = Matrix::randn(20, 5, &mut rng);
+            for (i, k) in [
+                Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 },
+                Kernel::SparseMttkrp { x: &coo, factors: &sf, mode: 1 },
+                Kernel::Ttm { stream: TtmStream::Fixed(&x, 0), u: &u, slot: 0 },
+            ]
+            .iter()
+            .enumerate()
+            {
+                let warm = exec_plan(cache.plan_kernel(0, k).unwrap());
+                let fresh = exec_plan(&cache.plan_fresh(k).unwrap());
+                assert_eq!(
+                    warm.data(),
+                    fresh.data(),
+                    "iter {iter} kernel {i} diverged"
+                );
+            }
+        }
+        assert_eq!(cache.len(), 3);
+    }
+
+    #[test]
+    fn ttm_mode_flip_on_one_slot_requantizes_streams() {
+        // Cube tensor: every unfold mode has identical dimensions, so the
+        // reuse checks alone cannot tell them apart.  Flipping the mode
+        // on one slot must requantize the streams, not serve mode-0's.
+        let mut rng = Prng::new(7);
+        let x = DenseTensor::randn(&[12, 12, 12], &mut rng);
+        let u = Matrix::randn(12, 4, &mut rng);
+        let mut cache = PlanCache::new(256, 32, 52);
+
+        let k0 = Kernel::Ttm { stream: TtmStream::Fixed(&x, 0), u: &u, slot: 0 };
+        let k1 = Kernel::Ttm { stream: TtmStream::Fixed(&x, 1), u: &u, slot: 0 };
+        let a0 = exec_plan(cache.plan_kernel(0, &k0).unwrap());
+        let a1 = exec_plan(cache.plan_kernel(0, &k1).unwrap());
+        assert_eq!(a0.data(), exec_plan(&cache.plan_fresh(&k0).unwrap()).data());
+        assert_eq!(
+            a1.data(),
+            exec_plan(&cache.plan_fresh(&k1).unwrap()).data(),
+            "mode flip served stale streams"
+        );
+        // Flip back: provenance must track the latest fill.
+        let a0b = exec_plan(cache.plan_kernel(0, &k0).unwrap());
+        assert_eq!(a0b.data(), a0.data());
+    }
+
+    #[test]
+    fn ttm_stream_kind_flip_on_one_slot_requantizes_streams() {
+        // Changing then Fixed on the same slot with identical dims: the
+        // fixed call must not skip its stream requantization.
+        let mut rng = Prng::new(8);
+        let x = DenseTensor::randn(&[12, 7, 5], &mut rng);
+        let y = DenseTensor::randn(&[12, 7, 5], &mut rng);
+        let yt = y.unfold(0).unwrap().transpose();
+        let u = Matrix::randn(12, 4, &mut rng);
+        let mut cache = PlanCache::new(256, 32, 52);
+
+        let changing = Kernel::Ttm { stream: TtmStream::Changing(&yt), u: &u, slot: 2 };
+        let fixed = Kernel::Ttm { stream: TtmStream::Fixed(&x, 0), u: &u, slot: 2 };
+        exec_plan(cache.plan_kernel(0, &changing).unwrap());
+        let got = exec_plan(cache.plan_kernel(0, &fixed).unwrap());
+        assert_eq!(
+            got.data(),
+            exec_plan(&cache.plan_fresh(&fixed).unwrap()).data(),
+            "kind flip served the changing stream's codes"
+        );
+    }
+
+    #[test]
+    fn rank_change_replans_instead_of_reusing() {
+        let mut rng = Prng::new(5);
+        let x = DenseTensor::randn(&[12, 6, 5], &mut rng);
+        let mut cache = PlanCache::new(256, 32, 52);
+        let f5: Vec<Matrix> =
+            [12, 6, 5].iter().map(|&d| Matrix::randn(d, 5, &mut rng)).collect();
+        let k5 = Kernel::DenseMttkrp { x: &x, factors: &f5, mode: 0 };
+        assert_eq!(cache.plan_kernel(0, &k5).unwrap().out_cols, 5);
+        let f7: Vec<Matrix> =
+            [12, 6, 5].iter().map(|&d| Matrix::randn(d, 7, &mut rng)).collect();
+        let k7 = Kernel::DenseMttkrp { x: &x, factors: &f7, mode: 0 };
+        assert_eq!(cache.plan_kernel(0, &k7).unwrap().out_cols, 7);
+    }
+
+    #[test]
+    fn out_of_range_modes_rejected() {
+        let mut rng = Prng::new(6);
+        let x = DenseTensor::randn(&[4, 4, 4], &mut rng);
+        let factors: Vec<Matrix> =
+            [4, 4, 4].iter().map(|&d| Matrix::randn(d, 2, &mut rng)).collect();
+        let u = Matrix::randn(4, 2, &mut rng);
+        let mut cache = PlanCache::new(256, 32, 52);
+        let k = Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 3 };
+        assert!(cache.plan_kernel(0, &k).is_err());
+        let t = Kernel::Ttm { stream: TtmStream::Fixed(&x, 3), u: &u, slot: 0 };
+        assert!(cache.plan_kernel(0, &t).is_err());
+    }
+}

@@ -1,0 +1,202 @@
+//! The unified kernel-submission type: everything a [`super::PsramSession`]
+//! can execute, in one enum.
+//!
+//! The paper treats the pSRAM array as one device that different tensor
+//! kernels are *mapped onto*; [`Kernel`] is that mapping surface.  All
+//! three variants lower to the same `PlanShape`/`PlanArena` tile-plan IR
+//! (`crate::mttkrp::plan`), so the session plans once and dispatches every
+//! kernel through the identical `execute_plan_into` contract — adding a
+//! workload to the system means adding a `Kernel` variant, not a new
+//! backend struct.
+//!
+//! A `Kernel` is a *borrowed description* (`Copy` — two or three
+//! references and a slot index); the session never takes ownership of
+//! operands.
+
+use crate::mttkrp::reference::{dense_mttkrp, sparse_mttkrp};
+use crate::tensor::{CooTensor, DenseTensor, Matrix};
+use crate::tucker::backend::TtmStream;
+use crate::util::error::Result;
+
+/// One kernel submission: what to compute, against which operands.
+///
+/// ```
+/// use psram_imc::session::{Kernel, PsramSession};
+/// use psram_imc::tensor::{DenseTensor, Matrix};
+/// use psram_imc::util::prng::Prng;
+///
+/// let mut rng = Prng::new(5);
+/// let x = DenseTensor::randn(&[12, 10, 8], &mut rng);
+/// let factors: Vec<Matrix> =
+///     [12, 10, 8].iter().map(|&d| Matrix::randn(d, 4, &mut rng)).collect();
+///
+/// // The same submission surface serves every backend engine.
+/// let session = PsramSession::builder().build().unwrap();
+/// let m = session
+///     .run(Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 })
+///     .unwrap();
+/// assert_eq!((m.rows(), m.cols()), (12, 4));
+/// ```
+#[derive(Clone, Copy)]
+pub enum Kernel<'a> {
+    /// Dense MTTKRP along `mode`: `A ← X_(mode) · KRP(factors ≠ mode)`.
+    /// Lowered by `DensePlanner`; the plan-cache slot is `mode`.
+    DenseMttkrp {
+        /// The decomposition target.
+        x: &'a DenseTensor,
+        /// Factor matrices, one per mode (`[shape[m], R]`).
+        factors: &'a [Matrix],
+        /// Output mode.
+        mode: usize,
+    },
+    /// Sparse (COO) MTTKRP along `mode`, lowered slice-wise by
+    /// `SparseSlicePlanner`; the plan-cache slot is `mode`.
+    SparseMttkrp {
+        /// The COO decomposition target.
+        x: &'a CooTensor,
+        /// Factor matrices, one per mode (`[shape[m], R]`).
+        factors: &'a [Matrix],
+        /// Output mode.
+        mode: usize,
+    },
+    /// Dense TTM `Y_(mode)ᵀ = X_(mode)ᵀ @ u` (the Tucker/HOOI primitive),
+    /// lowered by `TtmPlanner`.  `slot` is the caller-assigned chain
+    /// position used as the plan-cache slot.  The cache tracks each
+    /// slot's stream provenance (unfold mode, fixed vs changing), so
+    /// switching mode or stream kind on a slot requantizes instead of
+    /// serving stale streams — stable slots are a performance pattern,
+    /// not a correctness contract.
+    Ttm {
+        /// The streamed operand (fixed decomposition target, or an
+        /// intermediate chain matrix that changes every call).
+        stream: TtmStream<'a>,
+        /// The stored factor `[I_mode, R]`.
+        u: &'a Matrix,
+        /// Stable chain-position slot for plan caching.
+        slot: usize,
+    },
+}
+
+/// Which planner family a [`Kernel`] lowers through — one third of the
+/// unified plan-cache key, so dense, sparse, and TTM plans of identical
+/// tile geometry can never alias each other.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelKind {
+    /// Dense MTTKRP plans (`DensePlanner`).
+    DenseMttkrp,
+    /// Sparse slice-wise MTTKRP plans (`SparseSlicePlanner`).
+    SparseMttkrp,
+    /// Tucker TTM plans (`TtmPlanner`), fixed- and changing-stream alike.
+    Ttm,
+}
+
+impl Kernel<'_> {
+    /// The planner family this kernel lowers through.
+    pub fn kind(&self) -> KernelKind {
+        match self {
+            Kernel::DenseMttkrp { .. } => KernelKind::DenseMttkrp,
+            Kernel::SparseMttkrp { .. } => KernelKind::SparseMttkrp,
+            Kernel::Ttm { .. } => KernelKind::Ttm,
+        }
+    }
+
+    /// The plan-cache slot within the kind's namespace: the mode for
+    /// MTTKRP kernels, the chain slot for TTM kernels.
+    pub fn slot(&self) -> usize {
+        match self {
+            Kernel::DenseMttkrp { mode, .. } => *mode,
+            Kernel::SparseMttkrp { mode, .. } => *mode,
+            Kernel::Ttm { slot, .. } => *slot,
+        }
+    }
+
+    /// Label for logs and metrics rows.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::DenseMttkrp { .. } => "dense-mttkrp",
+            Kernel::SparseMttkrp { .. } => "sparse-mttkrp",
+            Kernel::Ttm { .. } => "ttm",
+        }
+    }
+
+    /// Execute the kernel exactly on the CPU (f32, no quantization) — the
+    /// `Engine::Exact` path and the reference every pSRAM engine is
+    /// validated against.
+    pub fn run_exact(&self) -> Result<Matrix> {
+        match self {
+            Kernel::DenseMttkrp { x, factors, mode } => {
+                dense_mttkrp(x, factors, *mode)
+            }
+            Kernel::SparseMttkrp { x, factors, mode } => {
+                sparse_mttkrp(x, factors, *mode)
+            }
+            Kernel::Ttm { stream, u, .. } => match stream {
+                TtmStream::Fixed(x, mode) => {
+                    x.unfold(*mode)?.transpose().matmul(u)
+                }
+                TtmStream::Changing(xt) => xt.matmul(u),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    #[test]
+    fn kinds_slots_and_names() {
+        let mut rng = Prng::new(1);
+        let x = DenseTensor::randn(&[4, 4, 4], &mut rng);
+        let coo = CooTensor::from_dense(&x, 0.0);
+        let factors: Vec<Matrix> =
+            [4, 4, 4].iter().map(|&d| Matrix::randn(d, 2, &mut rng)).collect();
+        let u = Matrix::randn(4, 2, &mut rng);
+
+        let d = Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 1 };
+        let s = Kernel::SparseMttkrp { x: &coo, factors: &factors, mode: 2 };
+        let t = Kernel::Ttm { stream: TtmStream::Fixed(&x, 0), u: &u, slot: 5 };
+        assert_eq!(d.kind(), KernelKind::DenseMttkrp);
+        assert_eq!(s.kind(), KernelKind::SparseMttkrp);
+        assert_eq!(t.kind(), KernelKind::Ttm);
+        assert_eq!((d.slot(), s.slot(), t.slot()), (1, 2, 5));
+        assert_eq!(d.name(), "dense-mttkrp");
+        assert_eq!(s.name(), "sparse-mttkrp");
+        assert_eq!(t.name(), "ttm");
+    }
+
+    #[test]
+    fn run_exact_matches_references() {
+        let mut rng = Prng::new(2);
+        let x = DenseTensor::randn(&[6, 5, 4], &mut rng);
+        let coo = CooTensor::from_dense(&x, 0.0);
+        let factors: Vec<Matrix> =
+            [6, 5, 4].iter().map(|&d| Matrix::randn(d, 3, &mut rng)).collect();
+        let u = Matrix::randn(5, 3, &mut rng);
+
+        let d = Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 }
+            .run_exact()
+            .unwrap();
+        let want = dense_mttkrp(&x, &factors, 0).unwrap();
+        assert_eq!(d.data(), want.data());
+
+        let s = Kernel::SparseMttkrp { x: &coo, factors: &factors, mode: 1 }
+            .run_exact()
+            .unwrap();
+        let want = sparse_mttkrp(&coo, &factors, 1).unwrap();
+        assert_eq!(s.data(), want.data());
+
+        let t = Kernel::Ttm { stream: TtmStream::Fixed(&x, 1), u: &u, slot: 0 }
+            .run_exact()
+            .unwrap();
+        let want = x.unfold(1).unwrap().transpose().matmul(&u).unwrap();
+        assert_eq!(t.data(), want.data());
+
+        let xt = x.unfold(1).unwrap().transpose();
+        let t2 = Kernel::Ttm { stream: TtmStream::Changing(&xt), u: &u, slot: 1 }
+            .run_exact()
+            .unwrap();
+        assert_eq!(t2.data(), t.data());
+    }
+}

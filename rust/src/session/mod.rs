@@ -1,0 +1,920 @@
+//! The unified `PsramSession` API: one kernel-submission surface over
+//! every backend engine, with multi-tenant job sharing of the
+//! coordinator pool.
+//!
+//! The paper's predictive model treats the pSRAM array as **one device**
+//! that different kernels — dense/sparse MTTKRP, Tucker TTM — are mapped
+//! onto.  This module makes the public API match that model:
+//!
+//! * [`SessionBuilder`] — device/array parameters (a
+//!   [`PerfModel`]), an execution [`Engine`] (`Exact`, `SingleArray`, or
+//!   `Coordinated { shards }`), a [`NoiseMode`], and a [`CachePolicy`];
+//! * [`PsramSession`] — owns the executor or coordinator pool, the
+//!   unified job-namespaced [`PlanCache`] (subsuming the three legacy
+//!   per-kernel caches), and the `PerfModel`;
+//! * [`Kernel`] — the one submission type; `session.run(kernel)` /
+//!   `session.run_into(kernel, &mut out)` plan through the cache and
+//!   dispatch every kernel through the identical `execute_plan_into`
+//!   contract, so results are bit-identical to the legacy per-kernel
+//!   backends (pinned in `tests/session_api.rs`);
+//! * [`SessionJob`] — a cheap cloneable `(session, JobId)` handle:
+//!   N concurrent decomposition jobs interleave on one warm coordinator
+//!   pool, each with its own plan-cache namespace and its own cycle/energy
+//!   attribution in [`Metrics`] ([`crate::coordinator::JobSnapshot`]);
+//! * [`PsramSession::predict`] — scores the exact plan a submission
+//!   executes through `PerfModel::predict_plan`, so
+//!   **predicted == measured** holds per job (tested cycle-exactly).
+//!
+//! Sessions are internally synchronized (`Send + Sync`): the plan cache
+//! and the engine state live behind separate mutexes, and a submission
+//! resolves its plan (an `Arc`-backed handle) and *releases* the cache
+//! lock before executing — one tenant's running kernel never blocks
+//! another tenant's planning or requantization.  Execution itself
+//! time-shares the device: the single-array engine serializes at kernel
+//! granularity, the coordinated engine at request granularity (the
+//! leader runs one plan at a time; tenants' *requests* interleave FIFO
+//! on the warm pool, their batches do not co-run).  What multi-tenancy
+//! buys is one shared warm device with exact per-job attribution — the
+//! "many jobs, one device" sharing the ROADMAP asks for.
+//!
+//! `CpAls` and `TuckerHooi` run on sessions ([`crate::cpd::CpAls::run`],
+//! [`crate::tucker::TuckerHooi::run`]); the per-kernel backend structs in
+//! `cpd::backend` / `tucker::backend` remain as the thin legacy layer the
+//! session is pinned bit-identical against.
+
+pub mod cache;
+pub mod kernel;
+
+pub use cache::{PlanCache, PlanKey};
+pub use kernel::{Kernel, KernelKind};
+
+use crate::compute::ComputeEngine;
+use crate::coordinator::{Coordinator, CoordinatorConfig, JobSnapshot, Metrics};
+use crate::device::{DeviceParams, NoiseModel};
+use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::mttkrp::pipeline::{AnalogTileExecutor, CpuTileExecutor, MttkrpStats, TileExecutor};
+use crate::mttkrp::plan::{execute_plan_into, PlanScratch, TilePlan};
+use crate::perfmodel::{PerfEstimate, PerfModel, PlanEstimate};
+use crate::psram::{ArrayGeometry, EnergyLedger, PsramArray};
+use crate::tensor::Matrix;
+use crate::util::error::{Error, Result};
+use std::sync::{Arc, Mutex};
+
+/// Identifier of one tenant job on a session.  Jobs namespace the plan
+/// cache (same-shape tensors of different jobs can never alias) and the
+/// metrics attribution.  `JobId::DEFAULT` (0) is what the plain
+/// [`PsramSession::run`] entry points use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct JobId(
+    /// The raw job number — the namespace key in plan caches and metrics.
+    pub u64,
+);
+
+impl JobId {
+    /// The default job every plain `session.run` call is attributed to.
+    pub const DEFAULT: JobId = JobId(0);
+}
+
+/// Which execution engine a session drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Exact f32 CPU references (no quantization, no device) — the
+    /// baseline every pSRAM engine is validated against.
+    Exact,
+    /// One simulated pSRAM array (CPU integer twin by default; the
+    /// device-faithful analog simulator with
+    /// [`SessionBuilder::analog`] or any non-ideal [`NoiseMode`]).
+    SingleArray,
+    /// The sharded batched multi-array pool (`crate::coordinator`) with
+    /// `shards` worker arrays — with noise off, bit-identical to
+    /// `SingleArray` for every shard count and steal schedule, and
+    /// shareable by many jobs.  (With noise on, each worker carries its
+    /// own noise stream and work stealing makes batch placement
+    /// timing-dependent, so noisy pooled results are statistically — not
+    /// bitwise — reproducible.)
+    Coordinated {
+        /// Worker (array macro) count.
+        shards: usize,
+    },
+}
+
+/// Detector-noise configuration of the simulated arrays.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NoiseMode {
+    /// Bit-exact execution (ideal ADC, no detector noise).
+    Ideal,
+    /// Gaussian detector noise of `sigma_lsb` ADC LSBs; worker `i` of a
+    /// pool derives its own deterministic stream from `seed` (the same
+    /// `(seed ^ 0x77) + i` rule as the CLI).  Single-array noisy runs
+    /// are bitwise reproducible; pooled noisy runs are not (work
+    /// stealing makes the batch→worker→stream pairing timing-dependent)
+    /// — only their noise *statistics* are pinned by the seed.
+    Gaussian {
+        /// Noise sigma in ADC LSBs.
+        sigma_lsb: f64,
+        /// Base seed of the per-worker noise streams.
+        seed: u64,
+    },
+}
+
+/// Plan-cache policy of a session.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// Cache plans per `(job, kernel kind, slot)` and requantize in place
+    /// on reuse — ALS/HOOI iterations 2..N skip planning entirely.
+    /// Bit-identical to `Disabled` (tested).
+    Enabled,
+    /// Plan every submission from scratch (debugging / memory-bound use).
+    Disabled,
+}
+
+/// Builder for a [`PsramSession`].
+///
+/// ```
+/// use psram_imc::session::{Engine, Kernel, NoiseMode, PsramSession};
+/// use psram_imc::tensor::{DenseTensor, Matrix};
+/// use psram_imc::util::prng::Prng;
+///
+/// // Device/array params come from the perf model; pick an engine.
+/// let session = PsramSession::builder()
+///     .engine(Engine::Coordinated { shards: 2 })
+///     .build()
+///     .unwrap();
+///
+/// let mut rng = Prng::new(9);
+/// let x = DenseTensor::randn(&[10, 8, 6], &mut rng);
+/// let factors: Vec<Matrix> =
+///     [10, 8, 6].iter().map(|&d| Matrix::randn(d, 4, &mut rng)).collect();
+/// let kernel = Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 };
+///
+/// // predict() scores the exact plan run() executes: cycle-exact.
+/// let predicted = session.predict(&kernel).unwrap();
+/// session.run(kernel).unwrap();
+/// let measured = session.job_metrics(Default::default());
+/// assert_eq!(predicted.compute_cycles, measured.streamed_cycles);
+/// assert_eq!(predicted.reconfig_write_cycles, measured.reconfig_write_cycles);
+/// ```
+pub struct SessionBuilder {
+    model: PerfModel,
+    engine: Engine,
+    noise: NoiseMode,
+    policy: CachePolicy,
+    analog: bool,
+    pool_config: Option<CoordinatorConfig>,
+    executor: Option<Box<dyn TileExecutor + Send>>,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            model: PerfModel::paper(),
+            engine: Engine::SingleArray,
+            noise: NoiseMode::Ideal,
+            policy: CachePolicy::Enabled,
+            analog: false,
+            pool_config: None,
+            executor: None,
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// A builder with the paper defaults: paper array model, single-array
+    /// engine, CPU integer executor, no noise, plan caching on.
+    pub fn new() -> Self {
+        SessionBuilder::default()
+    }
+
+    /// Device/array parameters (geometry, wavelengths, clocks, array
+    /// count for `predict`).  `num_arrays` is overwritten by the engine's
+    /// actual array count on `build`.
+    pub fn model(mut self, model: PerfModel) -> Self {
+        self.model = model;
+        self
+    }
+
+    /// The execution engine (default: [`Engine::SingleArray`]).
+    pub fn engine(mut self, engine: Engine) -> Self {
+        self.engine = engine;
+        self
+    }
+
+    /// Detector-noise mode (default: [`NoiseMode::Ideal`]).  Any
+    /// non-ideal mode implies the analog device simulator.
+    pub fn noise(mut self, noise: NoiseMode) -> Self {
+        self.noise = noise;
+        self
+    }
+
+    /// Plan-cache policy (default: [`CachePolicy::Enabled`]).
+    pub fn cache(mut self, policy: CachePolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Use the device-faithful analog array simulator (cycle/energy
+    /// ledgers, ADC path) instead of the fast CPU integer twin.  The two
+    /// are bit-identical when noise is off; analog additionally meters
+    /// energy ([`PsramSession::energy`]).
+    pub fn analog(mut self, analog: bool) -> Self {
+        self.analog = analog;
+        self
+    }
+
+    /// Override the coordinated engine's pool shape (queue depth, batch
+    /// size, stealing).  Its `workers` field wins over
+    /// `Engine::Coordinated { shards }`.
+    pub fn pool_config(mut self, cfg: CoordinatorConfig) -> Self {
+        self.pool_config = Some(cfg);
+        self
+    }
+
+    /// Provide a custom single-array executor (e.g. the PJRT runtime).
+    /// Its tile geometry must match the model's; only valid with
+    /// [`Engine::SingleArray`].
+    pub fn executor(mut self, exec: Box<dyn TileExecutor + Send>) -> Self {
+        self.executor = Some(exec);
+        self
+    }
+
+    /// One simulated array executor for worker `i`.
+    fn make_executor(&self, worker: usize) -> Box<dyn TileExecutor + Send> {
+        let analog = self.analog || !matches!(self.noise, NoiseMode::Ideal);
+        if analog {
+            let engine = match self.noise {
+                NoiseMode::Ideal => ComputeEngine::ideal(),
+                NoiseMode::Gaussian { sigma_lsb, seed } => ComputeEngine::new(
+                    DeviceParams::default(),
+                    NoiseModel::gaussian(
+                        sigma_lsb,
+                        (seed ^ 0x77).wrapping_add(worker as u64),
+                    ),
+                ),
+            };
+            Box::new(AnalogTileExecutor::new(engine, PsramArray::paper()))
+        } else {
+            Box::new(CpuTileExecutor::new(
+                self.model.geom.rows,
+                self.model.geom.words_per_row(),
+                self.model.wavelengths,
+            ))
+        }
+    }
+
+    /// Build the session: validate the model, construct the engine state
+    /// (spawning the pool for [`Engine::Coordinated`]), and size the
+    /// unified plan cache to the array geometry.
+    pub fn build(self) -> Result<PsramSession> {
+        let mut model = self.model.clone();
+        model.validate()?;
+        let analog = self.analog || !matches!(self.noise, NoiseMode::Ideal);
+        if analog {
+            // The analog simulator is the paper device: its array and
+            // comb are fixed, so the model must describe that hardware.
+            if model.geom != ArrayGeometry::PAPER {
+                return Err(Error::config(format!(
+                    "analog engine simulates the paper {}x{} array; custom \
+                     geometries need the CPU executor",
+                    ArrayGeometry::PAPER.rows,
+                    ArrayGeometry::PAPER.cols_bits
+                )));
+            }
+            let comb = DeviceParams::default().comb.max_channels();
+            if model.wavelengths > comb {
+                return Err(Error::config(format!(
+                    "{} wavelengths exceed the analog comb's {comb} channels",
+                    model.wavelengths
+                )));
+            }
+        }
+        if self.executor.is_some() && !matches!(self.engine, Engine::SingleArray) {
+            return Err(Error::config(
+                "a custom executor requires Engine::SingleArray".to_string(),
+            ));
+        }
+
+        let rows = model.geom.rows;
+        let wpr = model.geom.words_per_row();
+        let lanes = model.wavelengths;
+
+        let state = match self.engine {
+            Engine::Exact => {
+                model.num_arrays = 1;
+                EngineState::Exact
+            }
+            Engine::SingleArray => {
+                model.num_arrays = 1;
+                let exec = match self.executor {
+                    Some(exec) => {
+                        if exec.rows() != rows
+                            || exec.words_per_row() != wpr
+                            || exec.max_lanes() < lanes
+                        {
+                            return Err(Error::config(format!(
+                                "custom executor is {}x{} words x {} lanes but \
+                                 the model needs {rows}x{wpr} x {lanes}",
+                                exec.rows(),
+                                exec.words_per_row(),
+                                exec.max_lanes()
+                            )));
+                        }
+                        exec
+                    }
+                    None => self.make_executor(0),
+                };
+                EngineState::Single {
+                    metrics: Arc::new(Metrics::with_shards(1)),
+                    state: Mutex::new(SingleState {
+                        exec,
+                        scratch: PlanScratch::default(),
+                    }),
+                }
+            }
+            Engine::Coordinated { shards } => {
+                let cfg = self
+                    .pool_config
+                    .clone()
+                    .unwrap_or_else(|| CoordinatorConfig::new(shards));
+                model.num_arrays = cfg.workers.max(1);
+                let pool = Coordinator::spawn(cfg, |i| Ok(self.make_executor(i)))?;
+                EngineState::Pool { metrics: pool.metrics_handle(), pool: Mutex::new(pool) }
+            }
+        };
+
+        Ok(PsramSession {
+            core: Arc::new(SessionCore {
+                model,
+                engine: self.engine,
+                policy: self.policy,
+                cache: Mutex::new(PlanCache::new(rows, wpr, lanes)),
+                exact_metrics: Arc::new(Metrics::default()),
+                state,
+            }),
+        })
+    }
+}
+
+/// Single-array engine state: the executor plus its reusable scratch.
+struct SingleState {
+    exec: Box<dyn TileExecutor + Send>,
+    scratch: PlanScratch,
+}
+
+/// The engine behind a session.  Metrics handles live *outside* the
+/// engine mutexes (the counters are atomics), so metric reads never
+/// block on a running kernel.
+enum EngineState {
+    /// Exact CPU references (no device state).
+    Exact,
+    /// One simulated array behind a mutex (kernel-granularity sharing;
+    /// same counter layout as the coordinator, so `session.metrics()`
+    /// reads uniformly across engines).
+    Single {
+        metrics: Arc<Metrics>,
+        state: Mutex<SingleState>,
+    },
+    /// The coordinator pool behind a mutex (request-granularity sharing).
+    Pool {
+        metrics: Arc<Metrics>,
+        pool: Mutex<Coordinator>,
+    },
+}
+
+/// Shared state of a session; `PsramSession` and every [`SessionJob`] are
+/// `Arc` handles onto one of these.
+struct SessionCore {
+    model: PerfModel,
+    engine: Engine,
+    policy: CachePolicy,
+    /// The unified plan store.  Submissions lock it only to resolve a
+    /// plan (an `Arc`-backed clone) and release it before taking the
+    /// engine lock — the two are never held together.
+    cache: Mutex<PlanCache>,
+    /// Request counters for the exact engine (no cycles to meter).
+    exact_metrics: Arc<Metrics>,
+    state: EngineState,
+}
+
+impl SessionCore {
+    fn metrics(&self) -> Arc<Metrics> {
+        match &self.state {
+            EngineState::Exact => Arc::clone(&self.exact_metrics),
+            EngineState::Single { metrics, .. } => Arc::clone(metrics),
+            EngineState::Pool { metrics, .. } => Arc::clone(metrics),
+        }
+    }
+}
+
+/// The unified session handle — see the [module docs](self) for the full
+/// architecture.
+///
+/// ```
+/// use psram_imc::session::{Kernel, PsramSession};
+/// use psram_imc::tensor::{DenseTensor, Matrix};
+/// use psram_imc::util::prng::Prng;
+///
+/// let mut rng = Prng::new(3);
+/// let x = DenseTensor::randn(&[14, 9, 7], &mut rng);
+/// let factors: Vec<Matrix> =
+///     [14, 9, 7].iter().map(|&d| Matrix::randn(d, 5, &mut rng)).collect();
+///
+/// // Default session: one simulated array, plan caching on.
+/// let session = PsramSession::builder().build().unwrap();
+/// let a = session
+///     .run(Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 1 })
+///     .unwrap();
+/// assert_eq!((a.rows(), a.cols()), (9, 5));
+///
+/// // run_into reuses a caller buffer on the zero-allocation hot path.
+/// let mut out = Matrix::zeros(9, 5);
+/// session
+///     .run_into(Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 1 }, &mut out)
+///     .unwrap();
+/// assert_eq!(out.data(), a.data());
+/// ```
+#[derive(Clone)]
+pub struct PsramSession {
+    core: Arc<SessionCore>,
+}
+
+impl PsramSession {
+    /// Start building a session.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    /// A handle submitting under job `id`: cheap, cloneable, `Send` —
+    /// hand one to each concurrent decomposition job sharing this
+    /// session's device.
+    pub fn job(&self, id: JobId) -> SessionJob {
+        SessionJob { core: Arc::clone(&self.core), id }
+    }
+
+    /// Run a kernel under the default job and return the result matrix.
+    pub fn run(&self, kernel: Kernel<'_>) -> Result<Matrix> {
+        self.job(JobId::DEFAULT).run(kernel)
+    }
+
+    /// Run a kernel under the default job into a caller-provided output
+    /// (must match the kernel's result dimensions; zeroed here).
+    pub fn run_into(&self, kernel: Kernel<'_>, out: &mut Matrix) -> Result<()> {
+        self.job(JobId::DEFAULT).run_into(kernel, out)
+    }
+
+    /// Score the exact plan `run` would execute for this kernel (default
+    /// job): predicted images, streamed cycles, reconfiguration writes,
+    /// lane occupancy, sustained throughput.  On the pSRAM engines this
+    /// is cycle-exact against the measured metrics of the matching `run`
+    /// (tested); on [`Engine::Exact`] it is the device model's forecast
+    /// (the exact engine executes no array cycles).
+    pub fn predict(&self, kernel: &Kernel<'_>) -> Result<PlanEstimate> {
+        self.job(JobId::DEFAULT).predict(kernel)
+    }
+
+    /// The engine this session was built with.
+    pub fn engine(&self) -> Engine {
+        self.core.engine
+    }
+
+    /// The device/array model (with `num_arrays` reflecting the engine).
+    pub fn model(&self) -> &PerfModel {
+        &self.core.model
+    }
+
+    /// The session's metrics: global, per-shard, and per-job counters
+    /// (atomics — reading never blocks submissions).
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.core.metrics()
+    }
+
+    /// Point-in-time counters of one job (all-zero before its first
+    /// submission).
+    pub fn job_metrics(&self, id: JobId) -> JobSnapshot {
+        self.core.metrics().job_snapshot(id.0)
+    }
+
+    /// Analytic energy attribution of one job: the job's measured cycle
+    /// split run through the paper's [`EnergyModel`] (single-array-
+    /// equivalent accounting — per-job cycles are summed across shards).
+    pub fn job_energy(&self, id: JobId) -> EnergyBreakdown {
+        let snap = self.job_metrics(id);
+        let mut em = EnergyModel::paper();
+        em.model = self.core.model.clone();
+        em.model.num_arrays = 1;
+        let padding = if snap.raw_macs == 0 {
+            0.0
+        } else {
+            snap.useful_macs as f64 / snap.raw_macs as f64
+        };
+        let peak = em.model.peak_ops();
+        let est = PerfEstimate {
+            peak_ops: peak,
+            sustained_raw_ops: peak * snap.utilization(),
+            sustained_useful_ops: peak * snap.utilization() * padding,
+            utilization: snap.utilization(),
+            padding_efficiency: padding,
+            images: snap.images,
+            compute_cycles: snap.streamed_cycles,
+            write_cycles: snap.reconfig_write_cycles,
+            runtime_s: snap.total_cycles() as f64 / em.model.clock_hz,
+        };
+        em.predict(&est)
+    }
+
+    /// The measured energy ledger of a single-array analog engine
+    /// (`None` for exact/CPU/pool engines, which meter analytically).
+    pub fn energy(&self) -> Option<EnergyLedger> {
+        match &self.core.state {
+            EngineState::Single { state, .. } => {
+                state.lock().expect("session executor poisoned").exec.energy()
+            }
+            _ => None,
+        }
+    }
+
+    /// Number of plans currently cached across all jobs.
+    pub fn cached_plans(&self) -> usize {
+        self.core.cache.lock().expect("session cache poisoned").len()
+    }
+
+    /// Drop every cached plan (all jobs).
+    pub fn clear_cache(&self) {
+        self.core.cache.lock().expect("session cache poisoned").clear();
+    }
+
+    /// Drop one job's cached plans, leaving other tenants warm — required
+    /// before recycling a [`JobId`] for a different same-shape tensor.
+    pub fn clear_job(&self, id: JobId) {
+        self.core.cache.lock().expect("session cache poisoned").clear_job(id.0);
+    }
+}
+
+/// A `(session, job)` submission handle — the unit of multi-tenancy.
+/// Clone one per concurrent decomposition job; all clones share the
+/// session's device (executor or pool), while plans and metrics stay
+/// namespaced per job.
+#[derive(Clone)]
+pub struct SessionJob {
+    core: Arc<SessionCore>,
+    id: JobId,
+}
+
+impl SessionJob {
+    /// This handle's job id.
+    pub fn id(&self) -> JobId {
+        self.id
+    }
+
+    /// Run a kernel under this job and return the result matrix.
+    pub fn run(&self, kernel: Kernel<'_>) -> Result<Matrix> {
+        if matches!(self.core.state, EngineState::Exact) {
+            let out = kernel.run_exact()?;
+            self.charge_request();
+            return Ok(out);
+        }
+        let plan = self.resolve_plan(&kernel)?;
+        let mut out = Matrix::zeros(plan.out_rows, plan.out_cols);
+        self.execute(&plan, &mut out)?;
+        Ok(out)
+    }
+
+    /// Run a kernel under this job into a caller-provided output (must
+    /// match the kernel's result dimensions; zeroed here).  With a warm
+    /// plan cache this is the steady-state hot path: no planning, no
+    /// output allocation, in-place operand requantization only.
+    pub fn run_into(&self, kernel: Kernel<'_>, out: &mut Matrix) -> Result<()> {
+        if matches!(self.core.state, EngineState::Exact) {
+            let m = kernel.run_exact()?;
+            if out.rows() != m.rows() || out.cols() != m.cols() {
+                return Err(Error::shape(format!(
+                    "output is {}x{} but kernel produces {}x{}",
+                    out.rows(),
+                    out.cols(),
+                    m.rows(),
+                    m.cols()
+                )));
+            }
+            out.data_mut().copy_from_slice(m.data());
+            self.charge_request();
+            return Ok(());
+        }
+        let plan = self.resolve_plan(&kernel)?;
+        self.execute(&plan, out)
+    }
+
+    /// Score the exact plan this job's `run` would execute — see
+    /// [`PsramSession::predict`].  With caching enabled this resolves
+    /// (and warms) the same cache slot `run` uses, so the scored plan and
+    /// the executed plan are one object.  On the exact engine the
+    /// estimate is the device model's forecast for this kernel (the
+    /// exact engine itself executes no cycles), and the cache is never
+    /// warmed — `run` will not read it.
+    pub fn predict(&self, kernel: &Kernel<'_>) -> Result<PlanEstimate> {
+        let plan = if matches!(self.core.state, EngineState::Exact) {
+            let cache = self.core.cache.lock().expect("session cache poisoned");
+            cache.plan_fresh(kernel)?
+        } else {
+            self.resolve_plan(kernel)?
+        };
+        self.core.model.predict_plan(&plan)
+    }
+
+    /// Resolve the plan for one submission: through the job's cache
+    /// namespace (requantized in place on reuse) or freshly planned under
+    /// `CachePolicy::Disabled`.  Returns an `Arc`-backed handle (O(1)
+    /// clone) so the cache lock is released before execution — one
+    /// tenant's running kernel never blocks another tenant's planning.
+    fn resolve_plan(&self, kernel: &Kernel<'_>) -> Result<TilePlan> {
+        let mut cache = self.core.cache.lock().expect("session cache poisoned");
+        match self.core.policy {
+            CachePolicy::Enabled => Ok(cache.plan_kernel(self.id.0, kernel)?.clone()),
+            CachePolicy::Disabled => cache.plan_fresh(kernel),
+        }
+    }
+
+    /// Point-in-time counters of this job.
+    pub fn metrics(&self) -> JobSnapshot {
+        self.core.metrics().job_snapshot(self.id.0)
+    }
+
+    /// Analytic energy attribution of this job — see
+    /// [`PsramSession::job_energy`].
+    pub fn job_energy(&self) -> EnergyBreakdown {
+        PsramSession { core: Arc::clone(&self.core) }.job_energy(self.id)
+    }
+
+    /// Drop this job's cached plans.
+    pub fn clear(&self) {
+        self.core.cache.lock().expect("session cache poisoned").clear_job(self.id.0);
+    }
+
+    /// Execute a resolved plan on the session's engine, charging this
+    /// job's metrics.
+    fn execute(&self, plan: &TilePlan, out: &mut Matrix) -> Result<()> {
+        match &self.core.state {
+            EngineState::Exact => unreachable!("exact engine handled by callers"),
+            EngineState::Single { metrics, state } => {
+                let mut st = state.lock().expect("session executor poisoned");
+                let mut stats = MttkrpStats::default();
+                let SingleState { exec, scratch } = &mut *st;
+                execute_plan_into(exec, plan, scratch, &mut stats, out)?;
+                // Same counter layout as a coordinator worker plus the
+                // leader's request/batch bookkeeping (one batch per
+                // single-array submission).
+                let jm = metrics.charge(0, self.id.0, &stats);
+                metrics.add(&metrics.requests, 1);
+                metrics.add(&metrics.batches, 1);
+                metrics.add(&metrics.shard(0).batches, 1);
+                metrics.add(&jm.requests, 1);
+                metrics.add(&jm.batches, 1);
+                Ok(())
+            }
+            EngineState::Pool { pool, .. } => {
+                let mut pool = pool.lock().expect("session pool poisoned");
+                pool.execute_plan_into_for(plan, self.id.0, out)
+            }
+        }
+    }
+
+    /// Count a request on the exact engine (no cycles to meter).
+    fn charge_request(&self) {
+        let m = &self.core.exact_metrics;
+        m.add(&m.requests, 1);
+        let jm = m.job(self.id.0);
+        m.add(&jm.requests, 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mttkrp::pipeline::PsramPipeline;
+    use crate::mttkrp::SparsePsramPipeline;
+    use crate::tensor::{CooTensor, DenseTensor};
+    use crate::tucker::backend::TtmStream;
+    use crate::util::prng::Prng;
+
+    // Sessions must be shareable across tenant threads.
+    #[allow(dead_code)]
+    fn assert_thread_safe() {
+        fn check<T: Send + Sync>() {}
+        check::<PsramSession>();
+        check::<SessionJob>();
+    }
+
+    fn problem(seed: u64, shape: &[usize], r: usize) -> (DenseTensor, Vec<Matrix>) {
+        let mut rng = Prng::new(seed);
+        let x = DenseTensor::randn(shape, &mut rng);
+        let factors = shape.iter().map(|&d| Matrix::randn(d, r, &mut rng)).collect();
+        (x, factors)
+    }
+
+    #[test]
+    fn single_array_session_matches_pipeline_bit_exactly() {
+        let (x, factors) = problem(1, &[30, 11, 7], 6);
+        let session = PsramSession::builder().build().unwrap();
+        for mode in 0..3 {
+            let got = session
+                .run(Kernel::DenseMttkrp { x: &x, factors: &factors, mode })
+                .unwrap();
+            let mut exec = CpuTileExecutor::paper();
+            let want = PsramPipeline::new(&mut exec).mttkrp(&x, &factors, mode).unwrap();
+            assert_eq!(got.data(), want.data(), "mode {mode}");
+        }
+        // Cached second pass stays bit-identical.
+        let got = session
+            .run(Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 })
+            .unwrap();
+        let mut exec = CpuTileExecutor::paper();
+        let want = PsramPipeline::new(&mut exec).mttkrp(&x, &factors, 0).unwrap();
+        assert_eq!(got.data(), want.data());
+        assert_eq!(session.cached_plans(), 3);
+    }
+
+    #[test]
+    fn sparse_session_matches_sparse_pipeline_bit_exactly() {
+        let mut rng = Prng::new(2);
+        let x = CooTensor::random(&[24, 300, 10], 600, &mut rng);
+        let factors: Vec<Matrix> =
+            [24, 300, 10].iter().map(|&d| Matrix::randn(d, 8, &mut rng)).collect();
+        let session = PsramSession::builder().build().unwrap();
+        let got = session
+            .run(Kernel::SparseMttkrp { x: &x, factors: &factors, mode: 0 })
+            .unwrap();
+        let mut exec = CpuTileExecutor::paper();
+        let want = SparsePsramPipeline::new(&mut exec).mttkrp(&x, &factors, 0).unwrap();
+        assert_eq!(got.data(), want.data());
+    }
+
+    #[test]
+    fn coordinated_session_bit_identical_to_single_array() {
+        let (x, factors) = problem(3, &[60, 9, 40], 20);
+        let single = PsramSession::builder().build().unwrap();
+        let pooled = PsramSession::builder()
+            .engine(Engine::Coordinated { shards: 3 })
+            .build()
+            .unwrap();
+        for mode in 0..3 {
+            let k = Kernel::DenseMttkrp { x: &x, factors: &factors, mode };
+            let a = single.run(k).unwrap();
+            let b = pooled.run(k).unwrap();
+            assert_eq!(a.data(), b.data(), "mode {mode}");
+        }
+    }
+
+    #[test]
+    fn exact_engine_runs_references() {
+        let (x, factors) = problem(4, &[8, 7, 6], 3);
+        let session =
+            PsramSession::builder().engine(Engine::Exact).build().unwrap();
+        let got = session
+            .run(Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 2 })
+            .unwrap();
+        let want = crate::mttkrp::reference::dense_mttkrp(&x, &factors, 2).unwrap();
+        assert_eq!(got.data(), want.data());
+        assert_eq!(session.metrics().snapshot()[0].1, 1); // requests
+        assert_eq!(session.job_metrics(JobId::DEFAULT).requests, 1);
+        assert_eq!(session.job_metrics(JobId::DEFAULT).total_cycles(), 0);
+    }
+
+    #[test]
+    fn run_into_reuses_buffer_and_validates_dims() {
+        let (x, factors) = problem(5, &[20, 8, 6], 4);
+        let session = PsramSession::builder().build().unwrap();
+        let k = Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 };
+        let fresh = session.run(k).unwrap();
+        let mut out = Matrix::zeros(20, 4);
+        out.data_mut().fill(7.0);
+        session.run_into(k, &mut out).unwrap();
+        assert_eq!(out.data(), fresh.data());
+        let mut bad = Matrix::zeros(19, 4);
+        assert!(session.run_into(k, &mut bad).is_err());
+        // Exact engine validates too.
+        let exact = PsramSession::builder().engine(Engine::Exact).build().unwrap();
+        let mut out = Matrix::zeros(20, 4);
+        exact.run_into(k, &mut out).unwrap();
+        let mut bad = Matrix::zeros(4, 20);
+        assert!(exact.run_into(k, &mut bad).is_err());
+    }
+
+    #[test]
+    fn predict_is_cycle_exact_against_measured_metrics() {
+        let (x, factors) = problem(6, &[52, 10, 30], 40);
+        for engine in [Engine::SingleArray, Engine::Coordinated { shards: 2 }] {
+            let session = PsramSession::builder().engine(engine).build().unwrap();
+            let k = Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 };
+            let est = session.predict(&k).unwrap();
+            session.run(k).unwrap();
+            let m = session.job_metrics(JobId::DEFAULT);
+            assert_eq!(est.images, m.images, "{engine:?}");
+            assert_eq!(est.compute_cycles, m.streamed_cycles, "{engine:?}");
+            assert_eq!(est.reconfig_write_cycles, m.reconfig_write_cycles);
+            assert_eq!(est.useful_macs, m.useful_macs);
+            assert_eq!(est.raw_macs, m.raw_macs);
+        }
+    }
+
+    #[test]
+    fn cache_disabled_is_bit_identical_to_enabled() {
+        let (x, _) = problem(7, &[18, 9, 8], 5);
+        let mut rng = Prng::new(77);
+        let cached = PsramSession::builder().build().unwrap();
+        let uncached = PsramSession::builder()
+            .cache(CachePolicy::Disabled)
+            .build()
+            .unwrap();
+        for _iter in 0..2 {
+            let factors: Vec<Matrix> =
+                [18, 9, 8].iter().map(|&d| Matrix::randn(d, 5, &mut rng)).collect();
+            for mode in 0..3 {
+                let k = Kernel::DenseMttkrp { x: &x, factors: &factors, mode };
+                let a = cached.run(k).unwrap();
+                let b = uncached.run(k).unwrap();
+                assert_eq!(a.data(), b.data(), "mode {mode}");
+            }
+        }
+        assert_eq!(cached.cached_plans(), 3);
+        assert_eq!(uncached.cached_plans(), 0);
+    }
+
+    #[test]
+    fn noisy_sessions_are_deterministic_twins() {
+        let (x, factors) = problem(8, &[26, 8, 8], 4);
+        let k = Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 };
+        let mk = || {
+            PsramSession::builder()
+                .noise(NoiseMode::Gaussian { sigma_lsb: 1.0, seed: 11 })
+                .build()
+                .unwrap()
+        };
+        let a = mk().run(k).unwrap();
+        let b = mk().run(k).unwrap();
+        assert_eq!(a.data(), b.data(), "same seed, same bits");
+        let ideal = PsramSession::builder().build().unwrap().run(k).unwrap();
+        assert_ne!(a.data(), ideal.data(), "noise must perturb the result");
+    }
+
+    #[test]
+    fn ttm_kernel_matches_exact_within_quant_bound() {
+        let mut rng = Prng::new(9);
+        let x = DenseTensor::randn(&[12, 7, 5], &mut rng);
+        let u = Matrix::randn(12, 4, &mut rng);
+        let session = PsramSession::builder().build().unwrap();
+        let k = Kernel::Ttm { stream: TtmStream::Fixed(&x, 0), u: &u, slot: 0 };
+        let approx = session.run(k).unwrap();
+        let exact = k.run_exact().unwrap();
+        assert_eq!((approx.rows(), approx.cols()), (35, 4));
+        let xt = x.unfold(0).unwrap().transpose();
+        let kdim = xt.cols() as f32;
+        let (sx, sw) = (xt.max_abs() / 127.0, u.max_abs() / 127.0);
+        let bound = (kdim
+            * (sx * u.max_abs() / 2.0 + sw * xt.max_abs() / 2.0 + sx * sw / 4.0))
+            .max(1e-4);
+        for (e, a) in exact.data().iter().zip(approx.data()) {
+            assert!((e - a).abs() <= bound);
+        }
+    }
+
+    #[test]
+    fn builder_rejects_invalid_configurations() {
+        // Zero shards.
+        assert!(PsramSession::builder()
+            .engine(Engine::Coordinated { shards: 0 })
+            .build()
+            .is_err());
+        // Analog comb overflow.
+        let mut m = PerfModel::paper();
+        m.wavelengths = 104;
+        assert!(PsramSession::builder().model(m).analog(true).build().is_err());
+        // Custom executor with a pool engine.
+        assert!(PsramSession::builder()
+            .engine(Engine::Coordinated { shards: 2 })
+            .executor(Box::new(CpuTileExecutor::paper()))
+            .build()
+            .is_err());
+        // Custom executor with mismatched geometry.
+        assert!(PsramSession::builder()
+            .executor(Box::new(CpuTileExecutor::new(128, 16, 52)))
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn job_energy_attribution_scales_with_work() {
+        let (x, factors) = problem(10, &[40, 8, 8], 8);
+        let session = PsramSession::builder()
+            .engine(Engine::Coordinated { shards: 2 })
+            .build()
+            .unwrap();
+        let j1 = session.job(JobId(1));
+        let j2 = session.job(JobId(2));
+        let k = Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 };
+        j1.run(k).unwrap();
+        j2.run(k).unwrap();
+        j2.run(k).unwrap();
+        let e1 = session.job_energy(JobId(1)).total_j();
+        let e2 = session.job_energy(JobId(2)).total_j();
+        assert!(e1 > 0.0);
+        assert!(e2 > e1, "twice the work must cost more energy: {e2} vs {e1}");
+    }
+}

@@ -1,6 +1,14 @@
-//! TTM execution backends for the Tucker/HOOI driver.
+//! TTM execution backends for the Tucker/HOOI driver — **the legacy
+//! per-kernel layer** (plus [`TtmStream`], which the unified session's
+//! `Kernel::Ttm` reuses as its streamed-operand description).
 //!
-//! The driver ([`super::hooi::TuckerHooi`]) reduces every factor and core
+//! The public surface is now [`crate::session::PsramSession`]
+//! (`session.run(Kernel::Ttm { .. })`, driven by
+//! [`crate::tucker::TuckerHooi::run`]); this module remains for the exact
+//! reference and for pinning the session bit-identical to the
+//! pre-session backends, via [`crate::tucker::TuckerHooi::run_backend`].
+//!
+//! The driver reduces every factor and core
 //! update to chains of dense TTMs in unfolded-transpose form
 //! (`Y_(mode)ᵀ = X_(mode)ᵀ @ U`); a [`TtmBackend`] executes one such
 //! contraction.  Three implementations mirror the CP-ALS backend lineup:

@@ -26,8 +26,24 @@
 //! requantization exactly like CP-ALS's per-mode MTTKRP cache.
 
 use super::backend::{TtmBackend, TtmStream};
+use crate::session::{JobId, Kernel, PsramSession, SessionJob};
 use crate::tensor::{DenseTensor, Matrix};
 use crate::util::error::{Error, Result};
+
+/// Adapter running every TTM of a HOOI sweep through one session job —
+/// `TuckerHooi::run` is literally `run_backend` over this, so the session
+/// path and the legacy backend path share a single driver loop.
+struct SessionTtm<'s>(&'s SessionJob);
+
+impl TtmBackend for SessionTtm<'_> {
+    fn ttm(&mut self, slot: usize, stream: TtmStream<'_>, u: &Matrix) -> Result<Matrix> {
+        self.0.run(Kernel::Ttm { stream, u, slot })
+    }
+
+    fn name(&self) -> &'static str {
+        "session"
+    }
+}
 
 /// Tucker/HOOI configuration.
 #[derive(Debug, Clone)]
@@ -72,11 +88,13 @@ impl TuckerResult {
 }
 
 /// The HOOI driver: HOSVD init, then alternating TTM-chain + eigenbasis
-/// sweeps against any [`TtmBackend`].
+/// sweeps on a [`PsramSession`] (or, via [`TuckerHooi::run_backend`], any
+/// legacy [`TtmBackend`]).
 ///
 /// ```
+/// use psram_imc::session::{Engine, PsramSession};
 /// use psram_imc::tensor::{DenseTensor, Matrix};
-/// use psram_imc::tucker::{tucker_reconstruct, ExactTtmBackend, TuckerConfig, TuckerHooi};
+/// use psram_imc::tucker::{tucker_reconstruct, TuckerConfig, TuckerHooi};
 /// use psram_imc::util::prng::Prng;
 ///
 /// // A 6x5x4 tensor of exact multilinear rank (2, 2, 2)...
@@ -86,9 +104,12 @@ impl TuckerResult {
 ///     [6, 5, 4].iter().map(|&d| Matrix::randn(d, 2, &mut rng)).collect();
 /// let x = tucker_reconstruct(&core, &factors).unwrap();
 ///
-/// // ...is recovered (fit ≈ 1) by HOOI at the same ranks.
+/// // ...is recovered (fit ≈ 1) by HOOI on a session: every TTM of every
+/// // chain is one `session.run(Kernel::Ttm { .. })` submission.  The
+/// // exact engine shown here and the pSRAM engines share this one path.
+/// let session = PsramSession::builder().engine(Engine::Exact).build().unwrap();
 /// let hooi = TuckerHooi::new(TuckerConfig::new(vec![2, 2, 2]));
-/// let res = hooi.run(&x, &mut ExactTtmBackend).unwrap();
+/// let res = hooi.run(&x, &session).unwrap();
 /// assert!(res.final_fit() > 0.999, "fit={}", res.final_fit());
 /// assert_eq!(res.core.shape(), &[2, 2, 2]);
 /// ```
@@ -103,8 +124,40 @@ impl TuckerHooi {
         TuckerHooi { config }
     }
 
-    /// Run HOSVD + HOOI on `x` against `backend`.
-    pub fn run<B: TtmBackend>(&self, x: &DenseTensor, backend: &mut B) -> Result<TuckerResult> {
+    /// Run HOSVD + HOOI on `x` through a [`PsramSession`] (default job):
+    /// chain position `t` of output mode `n` submits
+    /// `Kernel::Ttm { slot: n*(nd-1)+t, .. }`, so plan caching and the
+    /// cycle-exact `session.predict` path apply to every TTM.
+    pub fn run(&self, x: &DenseTensor, session: &PsramSession) -> Result<TuckerResult> {
+        self.run_job(x, &session.job(JobId::DEFAULT))
+    }
+
+    /// [`TuckerHooi::run`] under an explicit session job — the
+    /// multi-tenant entry (one [`SessionJob`] per concurrent
+    /// decomposition sharing a pool).
+    ///
+    /// The job's plan-cache namespace is cleared on entry *and* exit: on
+    /// entry because a cached plan from a previous same-shape
+    /// decomposition would pass the dimension checks yet stream stale
+    /// quantized codes; on exit so the cached arenas (full quantized
+    /// stream copies) do not accumulate across jobs on a long-lived
+    /// session.  Sweeps 2..N inside the run still get full plan reuse.
+    pub fn run_job(&self, x: &DenseTensor, job: &SessionJob) -> Result<TuckerResult> {
+        job.clear();
+        let res = self.run_backend(x, &mut SessionTtm(job));
+        job.clear();
+        res
+    }
+
+    /// Run HOSVD + HOOI on `x` against a bare TTM backend — the legacy
+    /// entry point (superseded by [`TuckerHooi::run`]); kept for the
+    /// exact reference backend and for pinning session results against
+    /// the per-kernel backend structs.
+    pub fn run_backend<B: TtmBackend>(
+        &self,
+        x: &DenseTensor,
+        backend: &mut B,
+    ) -> Result<TuckerResult> {
         let shape = x.shape().to_vec();
         let nd = shape.len();
         let ranks = &self.config.ranks;
@@ -309,7 +362,7 @@ mod tests {
     fn hooi_recovers_exact_low_multilinear_rank_tensor() {
         let x = low_mlrank(1, &[10, 9, 8], &[3, 2, 2]);
         let hooi = TuckerHooi::new(TuckerConfig::new(vec![3, 2, 2]));
-        let res = hooi.run(&x, &mut ExactTtmBackend).unwrap();
+        let res = hooi.run_backend(&x, &mut ExactTtmBackend).unwrap();
         assert!(res.final_fit() > 0.999, "fit={}", res.final_fit());
         assert_eq!(res.core.shape(), &[3, 2, 2]);
         // factors are column-orthonormal
@@ -354,7 +407,7 @@ mod tests {
         let x = low_mlrank(4, &[12, 10, 8], &[2, 2, 2]);
         let hooi = TuckerHooi::new(TuckerConfig::new(vec![2, 2, 2]));
         let mut backend = PsramTtmBackend::new(CpuTileExecutor::paper());
-        let res = hooi.run(&x, &mut backend).unwrap();
+        let res = hooi.run_backend(&x, &mut backend).unwrap();
         let fit = tucker_fit(&x, &res.core, &res.factors).unwrap();
         assert!(fit > 0.95, "fit={fit}");
         assert!(backend.stats.images > 0);
@@ -362,15 +415,31 @@ mod tests {
     }
 
     #[test]
+    fn session_hooi_bit_identical_to_legacy_psram_backend() {
+        use crate::session::PsramSession;
+        let x = low_mlrank(7, &[12, 10, 8], &[2, 2, 2]);
+        let hooi = TuckerHooi::new(TuckerConfig::new(vec![2, 2, 2]));
+        let mut legacy = PsramTtmBackend::new(CpuTileExecutor::paper());
+        let a = hooi.run_backend(&x, &mut legacy).unwrap();
+        let session = PsramSession::builder().build().unwrap();
+        let b = hooi.run(&x, &session).unwrap();
+        assert_eq!(a.fit_history, b.fit_history);
+        assert_eq!(a.core.data(), b.core.data());
+        for (fa, fb) in a.factors.iter().zip(&b.factors) {
+            assert_eq!(fa.data(), fb.data());
+        }
+    }
+
+    #[test]
     fn invalid_configs_rejected() {
         let x = low_mlrank(5, &[6, 5, 4], &[2, 2, 2]);
         for ranks in [vec![2, 2], vec![0, 2, 2], vec![7, 2, 2]] {
             let hooi = TuckerHooi::new(TuckerConfig::new(ranks));
-            assert!(hooi.run(&x, &mut ExactTtmBackend).is_err());
+            assert!(hooi.run_backend(&x, &mut ExactTtmBackend).is_err());
         }
         let mut cfg = TuckerConfig::new(vec![2, 2, 2]);
         cfg.max_iters = 0;
-        assert!(TuckerHooi::new(cfg).run(&x, &mut ExactTtmBackend).is_err());
+        assert!(TuckerHooi::new(cfg).run_backend(&x, &mut ExactTtmBackend).is_err());
         assert!(hosvd(&x, &[2, 2]).is_err());
     }
 
@@ -378,7 +447,7 @@ mod tests {
     fn four_mode_tucker() {
         let x = low_mlrank(6, &[6, 5, 4, 3], &[2, 2, 2, 2]);
         let hooi = TuckerHooi::new(TuckerConfig::new(vec![2, 2, 2, 2]));
-        let res = hooi.run(&x, &mut ExactTtmBackend).unwrap();
+        let res = hooi.run_backend(&x, &mut ExactTtmBackend).unwrap();
         assert!(res.final_fit() > 0.99, "fit={}", res.final_fit());
         assert_eq!(res.factors.len(), 4);
         assert_eq!(res.core.shape(), &[2, 2, 2, 2]);

@@ -17,11 +17,14 @@
 //!
 //! Module layout (mirroring `cpd`):
 //!
-//! * [`backend`] — the [`TtmBackend`] trait and its exact / single-array
-//!   / coordinator implementations;
+//! * [`backend`] — [`TtmStream`] (the streamed-operand description shared
+//!   with `session::Kernel::Ttm`), plus the legacy [`TtmBackend`] trait
+//!   and its exact / single-array / coordinator implementations;
 //! * [`hooi`] — HOSVD init, the [`TuckerHooi`] driver (TTM chain + factor
-//!   eigenupdate + truncated core update per sweep), and the exact
-//!   reference helpers ([`hosvd`], [`tucker_core`],
+//!   eigenupdate + truncated core update per sweep) running on a
+//!   [`crate::session::PsramSession`] (`TuckerHooi::run`; the legacy
+//!   backends stay reachable via `TuckerHooi::run_backend`), and the
+//!   exact reference helpers ([`hosvd`], [`tucker_core`],
 //!   [`tucker_reconstruct`], [`tucker_fit`]).
 //!
 //! All the hot-path invariants pinned for MTTKRP hold verbatim for

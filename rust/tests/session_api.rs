@@ -1,0 +1,453 @@
+//! The unified `PsramSession` surface: bit-identity against the legacy
+//! per-kernel backends for all three kernels, per-job namespace isolation
+//! under real concurrency, and the cycle-exact per-job
+//! `predict == measured` contract.
+
+use psram_imc::coordinator::pool::{CoordinatedBackend, CoordinatedSparseBackend};
+use psram_imc::coordinator::Coordinator;
+use psram_imc::cpd::{AlsConfig, CpAls, CpTarget, PsramBackend};
+use psram_imc::mttkrp::pipeline::CpuTileExecutor;
+use psram_imc::mttkrp::{SparsePsramBackend, SparsePsramPipeline};
+use psram_imc::session::{CachePolicy, Engine, JobId, Kernel, PsramSession, SessionJob};
+use psram_imc::tensor::{CooTensor, DenseTensor, Matrix};
+use psram_imc::tucker::{
+    CoordinatedTtmBackend, PsramTtmBackend, TtmStream, TuckerConfig, TuckerHooi,
+};
+use psram_imc::util::prng::Prng;
+use psram_imc::util::proptest::{check_with, Config};
+
+fn low_rank(seed: u64, shape: &[usize], r: usize, noise: f32) -> DenseTensor {
+    let mut rng = Prng::new(seed);
+    let f: Vec<Matrix> = shape.iter().map(|&d| Matrix::randn(d, r, &mut rng)).collect();
+    DenseTensor::from_cp_factors(&f, noise, &mut rng).unwrap()
+}
+
+fn cpu_session(engine: Engine) -> PsramSession {
+    PsramSession::builder().engine(engine).build().unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Bit-identity: session vs the legacy backend path, all three kernels.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_session_bit_identical_to_legacy_path_all_kernels() {
+    // Random geometries/ranks; for each case the session (single-array,
+    // cached) must reproduce the legacy per-kernel path bit for bit on a
+    // dense MTTKRP, a sparse MTTKRP, and a TTM.
+    check_with(
+        "session == legacy backends, all kernels",
+        Config { cases: 12, max_size: 24, seed: 0x5E55 },
+        |case| {
+            let rng = &mut case.rng;
+            let d0 = 4 + rng.below(3 + case.size as u64) as usize;
+            let d1 = 3 + rng.below(3 + case.size as u64) as usize;
+            let d2 = 2 + rng.below(1 + case.size as u64 / 2) as usize;
+            let r = 1 + rng.below(10) as usize;
+            let shape = [d0, d1, d2];
+            let x = DenseTensor::randn(&shape, rng);
+            let factors: Vec<Matrix> =
+                shape.iter().map(|&d| Matrix::randn(d, r, rng)).collect();
+            let mode = rng.below(3) as usize;
+
+            let session = cpu_session(Engine::SingleArray);
+
+            // Dense MTTKRP vs the legacy cached PsramBackend.
+            use psram_imc::cpd::backend::MttkrpBackend;
+            let mut legacy = PsramBackend::new(&x, CpuTileExecutor::paper());
+            let want = legacy.mttkrp(&factors, mode).map_err(|e| e.to_string())?;
+            let got = session
+                .run(Kernel::DenseMttkrp { x: &x, factors: &factors, mode })
+                .map_err(|e| e.to_string())?;
+            if got.data() != want.data() {
+                return Err(format!("dense kernel diverged (mode {mode})"));
+            }
+
+            // Sparse MTTKRP vs the legacy cached SparsePsramBackend.
+            let coo = CooTensor::from_dense(&x, 0.0);
+            let mut legacy = SparsePsramBackend::new(&coo, CpuTileExecutor::paper());
+            let want = legacy.mttkrp(&factors, mode).map_err(|e| e.to_string())?;
+            let got = session
+                .run(Kernel::SparseMttkrp { x: &coo, factors: &factors, mode })
+                .map_err(|e| e.to_string())?;
+            if got.data() != want.data() {
+                return Err(format!("sparse kernel diverged (mode {mode})"));
+            }
+
+            // TTM vs the legacy cached PsramTtmBackend.
+            use psram_imc::tucker::backend::TtmBackend;
+            let u = Matrix::randn(shape[mode], r, rng);
+            let mut legacy = PsramTtmBackend::new(CpuTileExecutor::paper());
+            let want = legacy
+                .ttm(0, TtmStream::Fixed(&x, mode), &u)
+                .map_err(|e| e.to_string())?;
+            let got = session
+                .run(Kernel::Ttm { stream: TtmStream::Fixed(&x, mode), u: &u, slot: 0 })
+                .map_err(|e| e.to_string())?;
+            if got.data() != want.data() {
+                return Err(format!("ttm kernel diverged (mode {mode})"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn coordinated_session_als_bit_identical_to_legacy_coordinated_backend() {
+    let x = low_rank(21, &[26, 18, 14], 3, 0.02);
+    let cfg = AlsConfig { rank: 3, max_iters: 10, tol: 0.0, seed: 5 };
+
+    let pool = Coordinator::with_workers(3, |_| Ok(CpuTileExecutor::paper())).unwrap();
+    let mut legacy = CoordinatedBackend::new(&x, pool);
+    let a = CpAls::new(cfg.clone()).run_backend(&mut legacy).unwrap();
+
+    let session = cpu_session(Engine::Coordinated { shards: 3 });
+    let b = CpAls::new(cfg).run(&session, CpTarget::Dense(&x)).unwrap();
+
+    assert_eq!(a.fit_history, b.fit_history);
+    assert_eq!(a.lambda, b.lambda);
+    for (fa, fb) in a.factors.iter().zip(&b.factors) {
+        assert_eq!(fa.data(), fb.data());
+    }
+}
+
+#[test]
+fn coordinated_session_sparse_als_bit_identical_to_legacy() {
+    let x = low_rank(22, &[16, 14, 12], 2, 0.0);
+    let coo = CooTensor::from_dense(&x, 0.0);
+    let cfg = AlsConfig { rank: 2, max_iters: 8, tol: 0.0, seed: 3 };
+
+    let pool = Coordinator::with_workers(3, |_| Ok(CpuTileExecutor::paper())).unwrap();
+    let mut legacy = CoordinatedSparseBackend::new(&coo, pool);
+    let a = CpAls::new(cfg.clone()).run_backend(&mut legacy).unwrap();
+
+    let session = cpu_session(Engine::Coordinated { shards: 3 });
+    let b = CpAls::new(cfg).run(&session, CpTarget::Sparse(&coo)).unwrap();
+
+    assert_eq!(a.fit_history, b.fit_history);
+    assert_eq!(a.lambda, b.lambda);
+}
+
+#[test]
+fn coordinated_session_hooi_bit_identical_to_legacy() {
+    let mut rng = Prng::new(23);
+    let core = DenseTensor::randn(&[2, 2, 2], &mut rng);
+    let truth: Vec<Matrix> =
+        [18usize, 14, 10].iter().map(|&d| Matrix::randn(d, 2, &mut rng)).collect();
+    let x = psram_imc::tucker::tucker_reconstruct(&core, &truth).unwrap();
+    let hooi =
+        TuckerHooi::new(TuckerConfig { ranks: vec![2, 2, 2], max_iters: 6, tol: 0.0 });
+
+    let pool = Coordinator::with_workers(3, |_| Ok(CpuTileExecutor::paper())).unwrap();
+    let mut legacy = CoordinatedTtmBackend::new(pool);
+    let a = hooi.run_backend(&x, &mut legacy).unwrap();
+
+    let session = cpu_session(Engine::Coordinated { shards: 3 });
+    let b = hooi.run(&x, &session).unwrap();
+
+    assert_eq!(a.fit_history, b.fit_history);
+    assert_eq!(a.core.data(), b.core.data());
+    for (fa, fb) in a.factors.iter().zip(&b.factors) {
+        assert_eq!(fa.data(), fb.data());
+    }
+}
+
+#[test]
+fn cache_policy_disabled_bit_identical_on_coordinated_engine() {
+    let x = low_rank(24, &[20, 12, 10], 3, 0.01);
+    let cfg = AlsConfig { rank: 3, max_iters: 6, tol: 0.0, seed: 9 };
+    let cached = cpu_session(Engine::Coordinated { shards: 2 });
+    let uncached = PsramSession::builder()
+        .engine(Engine::Coordinated { shards: 2 })
+        .cache(CachePolicy::Disabled)
+        .build()
+        .unwrap();
+    let a = CpAls::new(cfg.clone()).run(&cached, CpTarget::Dense(&x)).unwrap();
+    let b = CpAls::new(cfg).run(&uncached, CpTarget::Dense(&x)).unwrap();
+    assert_eq!(a.fit_history, b.fit_history);
+    // run_job releases its namespace on exit — neither session retains
+    // plan arenas after the decomposition finishes.
+    assert_eq!(cached.cached_plans(), 0);
+    assert_eq!(uncached.cached_plans(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// Multi-tenancy: concurrent jobs on one pool.
+// ---------------------------------------------------------------------------
+
+/// Sum the predicted cycle census of `reps` submissions of each kernel,
+/// through the job's own cache namespace (so the scored plans are the
+/// executed plans).
+fn predict_total(job: &SessionJob, kernels: &[Kernel<'_>], reps: u64) -> (u64, u64, u64) {
+    let mut images = 0u64;
+    let mut streamed = 0u64;
+    let mut reconfig = 0u64;
+    for k in kernels {
+        let est = job.predict(k).unwrap();
+        images += reps * est.images;
+        streamed += reps * est.compute_cycles;
+        reconfig += reps * est.reconfig_write_cycles;
+    }
+    (images, streamed, reconfig)
+}
+
+#[test]
+fn concurrent_jobs_share_pool_with_cycle_exact_attribution() {
+    // Two tenants, two threads, ONE coordinated session.  Each submits
+    // its own kernels; afterwards every job's measured counters must
+    // equal its predicted census exactly, the global counters must be
+    // the per-job sum, and each job's results must be bit-identical to
+    // an isolated single-array run.
+    let (xa, fa) = {
+        let mut rng = Prng::new(31);
+        let x = DenseTensor::randn(&[60, 16, 20], &mut rng);
+        let f: Vec<Matrix> =
+            [60, 16, 20].iter().map(|&d| Matrix::randn(d, 24, &mut rng)).collect();
+        (x, f)
+    };
+    let (xb, fb) = {
+        let mut rng = Prng::new(32);
+        let x = DenseTensor::randn(&[80, 12, 12], &mut rng);
+        let f: Vec<Matrix> =
+            [80, 12, 12].iter().map(|&d| Matrix::randn(d, 16, &mut rng)).collect();
+        (x, f)
+    };
+    let session = cpu_session(Engine::Coordinated { shards: 3 });
+    let job_a = session.job(JobId(1));
+    let job_b = session.job(JobId(2));
+
+    let kernels_a: Vec<Kernel<'_>> = (0..3)
+        .map(|mode| Kernel::DenseMttkrp { x: &xa, factors: &fa, mode })
+        .collect();
+    let kernels_b: Vec<Kernel<'_>> = (0..3)
+        .map(|mode| Kernel::DenseMttkrp { x: &xb, factors: &fb, mode })
+        .collect();
+    let reps = 2u64;
+
+    let (mut out_a, mut out_b) = (Vec::new(), Vec::new());
+    std::thread::scope(|scope| {
+        let ja = &job_a;
+        let jb = &job_b;
+        let (ka, kb) = (&kernels_a, &kernels_b);
+        let ha = scope.spawn(move || {
+            let mut outs = Vec::new();
+            for _ in 0..reps {
+                for k in ka {
+                    outs.push(ja.run(*k).unwrap());
+                }
+            }
+            outs
+        });
+        let hb = scope.spawn(move || {
+            let mut outs = Vec::new();
+            for _ in 0..reps {
+                for k in kb {
+                    outs.push(jb.run(*k).unwrap());
+                }
+            }
+            outs
+        });
+        out_a = ha.join().unwrap();
+        out_b = hb.join().unwrap();
+    });
+
+    // Results are unaffected by tenancy: bit-identical to isolated runs.
+    let solo = cpu_session(Engine::SingleArray);
+    for (i, k) in kernels_a.iter().enumerate() {
+        let want = solo.run(*k).unwrap();
+        assert_eq!(out_a[i].data(), want.data(), "job A kernel {i}");
+        assert_eq!(out_a[i + 3].data(), want.data(), "job A kernel {i} rep 2");
+    }
+    let solo_b = cpu_session(Engine::SingleArray);
+    for (i, k) in kernels_b.iter().enumerate() {
+        let want = solo_b.run(*k).unwrap();
+        assert_eq!(out_b[i].data(), want.data(), "job B kernel {i}");
+    }
+
+    // Predicted == measured, per job, cycle-exactly.
+    let (img_a, str_a, rec_a) = predict_total(&job_a, &kernels_a, reps);
+    let (img_b, str_b, rec_b) = predict_total(&job_b, &kernels_b, reps);
+    let ma = job_a.metrics();
+    let mb = job_b.metrics();
+    assert_eq!(ma.requests, reps * 3);
+    assert_eq!(mb.requests, reps * 3);
+    assert_eq!(ma.images, img_a, "job A images");
+    assert_eq!(ma.streamed_cycles, str_a, "job A streamed cycles");
+    assert_eq!(ma.reconfig_write_cycles, rec_a, "job A reconfig writes");
+    assert_eq!(mb.images, img_b, "job B images");
+    assert_eq!(mb.streamed_cycles, str_b, "job B streamed cycles");
+    assert_eq!(mb.reconfig_write_cycles, rec_b, "job B reconfig writes");
+
+    // Per-job rows partition the global counters.
+    let snap = session.metrics().snapshot();
+    assert_eq!(ma.images + mb.images, snap[1].1);
+    assert_eq!(ma.streamed_cycles + mb.streamed_cycles, snap[2].1);
+    assert_eq!(ma.reconfig_write_cycles + mb.reconfig_write_cycles, snap[3].1);
+}
+
+#[test]
+fn concurrent_cp_als_jobs_match_isolated_runs_and_predictions() {
+    // The acceptance shape: >= 2 full CP-ALS jobs interleave on one
+    // coordinated session; every job's trajectory equals its isolated
+    // run bit for bit, and its attributed cycles equal the predicted
+    // census of (iters x nmodes) plan executions.
+    let xs: Vec<DenseTensor> = vec![
+        low_rank(41, &[22, 14, 10], 3, 0.02),
+        low_rank(42, &[22, 14, 10], 3, 0.02), // same shape: namespaces matter
+        low_rank(43, &[18, 16, 8], 2, 0.01),
+    ];
+    let cfgs: Vec<AlsConfig> = vec![
+        AlsConfig { rank: 3, max_iters: 7, tol: 0.0, seed: 1 },
+        AlsConfig { rank: 3, max_iters: 7, tol: 0.0, seed: 2 },
+        AlsConfig { rank: 2, max_iters: 9, tol: 0.0, seed: 3 },
+    ];
+
+    let session = cpu_session(Engine::Coordinated { shards: 2 });
+    let mut results = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for (i, (x, cfg)) in xs.iter().zip(&cfgs).enumerate() {
+            let job = session.job(JobId(i as u64 + 1));
+            let cfg = cfg.clone();
+            handles.push(scope.spawn(move || {
+                CpAls::new(cfg).run_job(&job, CpTarget::Dense(x)).unwrap()
+            }));
+        }
+        for h in handles {
+            results.push(h.join().unwrap());
+        }
+    });
+
+    for (i, ((x, cfg), res)) in xs.iter().zip(&cfgs).zip(&results).enumerate() {
+        // Isolated single-array rerun: must match bit for bit.
+        let solo = cpu_session(Engine::SingleArray);
+        let want = CpAls::new(cfg.clone()).run(&solo, CpTarget::Dense(x)).unwrap();
+        assert_eq!(res.fit_history, want.fit_history, "job {i} trajectory");
+        assert_eq!(res.lambda, want.lambda, "job {i} lambda");
+        for (fa, fb) in res.factors.iter().zip(&want.factors) {
+            assert_eq!(fa.data(), fb.data(), "job {i} factors");
+        }
+
+        // Cycle-exact per-job attribution: iters executions per mode.
+        let job = session.job(JobId(i as u64 + 1));
+        let kernels: Vec<Kernel<'_>> = (0..3)
+            .map(|mode| Kernel::DenseMttkrp { x, factors: &res.factors, mode })
+            .collect();
+        let (img, streamed, reconfig) =
+            predict_total(&job, &kernels, res.iters as u64);
+        let m = job.metrics();
+        assert_eq!(m.requests, 3 * res.iters as u64, "job {i} requests");
+        assert_eq!(m.images, img, "job {i} images");
+        assert_eq!(m.streamed_cycles, streamed, "job {i} streamed");
+        assert_eq!(m.reconfig_write_cycles, reconfig, "job {i} reconfig");
+    }
+}
+
+#[test]
+fn sequential_same_shape_decompositions_do_not_reuse_stale_streams() {
+    // Two decompositions of *different* tensors with identical shape and
+    // rank, back to back on one session under the default job: every
+    // dimension check passes, so without the namespace clear in
+    // CpAls::run_job the second run would silently stream the first
+    // tensor's quantized codes.  Each run must equal its isolated run.
+    let x1 = low_rank(71, &[18, 12, 10], 3, 0.01);
+    let x2 = low_rank(72, &[18, 12, 10], 3, 0.01);
+    let cfg = AlsConfig { rank: 3, max_iters: 6, tol: 0.0, seed: 4 };
+
+    let session = cpu_session(Engine::SingleArray);
+    let r1 = CpAls::new(cfg.clone()).run(&session, CpTarget::Dense(&x1)).unwrap();
+    let r2 = CpAls::new(cfg.clone()).run(&session, CpTarget::Dense(&x2)).unwrap();
+
+    let w1 = CpAls::new(cfg.clone())
+        .run(&cpu_session(Engine::SingleArray), CpTarget::Dense(&x1))
+        .unwrap();
+    let w2 = CpAls::new(cfg.clone())
+        .run(&cpu_session(Engine::SingleArray), CpTarget::Dense(&x2))
+        .unwrap();
+    assert_eq!(r1.fit_history, w1.fit_history);
+    assert_eq!(r2.fit_history, w2.fit_history, "second run reused stale streams");
+
+    // Tucker too: same session, same shapes, different tensors.
+    let hooi =
+        TuckerHooi::new(TuckerConfig { ranks: vec![2, 2, 2], max_iters: 4, tol: 0.0 });
+    let t1 = hooi.run(&x1, &session).unwrap();
+    let t2 = hooi.run(&x2, &session).unwrap();
+    let v1 = hooi.run(&x1, &cpu_session(Engine::SingleArray)).unwrap();
+    let v2 = hooi.run(&x2, &cpu_session(Engine::SingleArray)).unwrap();
+    assert_eq!(t1.fit_history, v1.fit_history);
+    assert_eq!(t2.fit_history, v2.fit_history, "second HOOI reused stale streams");
+
+    // And nothing accumulates: every driver run releases its namespace,
+    // so a long-lived session does not retain per-job plan arenas.
+    assert_eq!(session.cached_plans(), 0);
+}
+
+#[test]
+fn job_namespaces_prevent_same_shape_cross_talk() {
+    // Two jobs, two different tensors of identical shape, interleaved on
+    // one session: every result must match the per-tensor reference.
+    // (With a shared cache the second job would reuse the first job's
+    // streamed codes — this is the aliasing the namespaces kill.)
+    let mut rng = Prng::new(51);
+    let x1 = DenseTensor::randn(&[14, 10, 8], &mut rng);
+    let x2 = DenseTensor::randn(&[14, 10, 8], &mut rng);
+    let factors: Vec<Matrix> =
+        [14, 10, 8].iter().map(|&d| Matrix::randn(d, 4, &mut rng)).collect();
+
+    let session = cpu_session(Engine::SingleArray);
+    let j1 = session.job(JobId(1));
+    let j2 = session.job(JobId(2));
+    for _ in 0..2 {
+        for mode in 0..3 {
+            let a = j1
+                .run(Kernel::DenseMttkrp { x: &x1, factors: &factors, mode })
+                .unwrap();
+            let b = j2
+                .run(Kernel::DenseMttkrp { x: &x2, factors: &factors, mode })
+                .unwrap();
+            let mut exec = CpuTileExecutor::paper();
+            let want1 = psram_imc::mttkrp::pipeline::PsramPipeline::new(&mut exec)
+                .mttkrp(&x1, &factors, mode)
+                .unwrap();
+            let mut exec = CpuTileExecutor::paper();
+            let want2 = psram_imc::mttkrp::pipeline::PsramPipeline::new(&mut exec)
+                .mttkrp(&x2, &factors, mode)
+                .unwrap();
+            assert_eq!(a.data(), want1.data(), "job 1 mode {mode}");
+            assert_eq!(b.data(), want2.data(), "job 2 mode {mode}");
+        }
+    }
+    assert_eq!(session.cached_plans(), 6);
+    session.clear_job(JobId(1));
+    assert_eq!(session.cached_plans(), 3);
+    session.clear_cache();
+    assert_eq!(session.cached_plans(), 0);
+}
+
+#[test]
+fn sparse_session_round_trip_matches_pipeline() {
+    // The sparse kernel through a coordinated session stays bit-identical
+    // to the single-array sparse pipeline (planner + pool contract).
+    let mut rng = Prng::new(61);
+    let x = CooTensor::random(&[30, 520, 12], 900, &mut rng);
+    let factors: Vec<Matrix> =
+        [30, 520, 12].iter().map(|&d| Matrix::randn(d, 24, &mut rng)).collect();
+    let mut exec = CpuTileExecutor::paper();
+    let want = SparsePsramPipeline::new(&mut exec).mttkrp(&x, &factors, 0).unwrap();
+    let session = cpu_session(Engine::Coordinated { shards: 3 });
+    let got = session
+        .run(Kernel::SparseMttkrp { x: &x, factors: &factors, mode: 0 })
+        .unwrap();
+    assert_eq!(got.data(), want.data());
+
+    // And predict is cycle-exact for the sparse kernel too (fresh job so
+    // the snapshot covers exactly this one submission).
+    let j = session.job(JobId(7));
+    let k = Kernel::SparseMttkrp { x: &x, factors: &factors, mode: 1 };
+    let est = j.predict(&k).unwrap();
+    j.run(k).unwrap();
+    let m = j.metrics();
+    assert_eq!(est.images, m.images);
+    assert_eq!(est.compute_cycles, m.streamed_cycles);
+    assert_eq!(est.reconfig_write_cycles, m.reconfig_write_cycles);
+}

@@ -36,7 +36,7 @@ fn cp_als_through_pjrt_backend_reaches_high_fit() {
     let exec = PjrtTileExecutor::paper().unwrap();
     let mut backend = PsramBackend::new(&x, exec);
     let res = CpAls::new(AlsConfig { rank: 3, max_iters: 25, tol: 1e-6, seed: 11 })
-        .run(&mut backend)
+        .run_backend(&mut backend)
         .unwrap();
     assert!(res.final_fit() > 0.95, "fit={}", res.final_fit());
 }
@@ -50,10 +50,10 @@ fn pjrt_and_analog_backends_identical_fit_history() {
     let cfg = AlsConfig { rank: 3, max_iters: 8, tol: 0.0, seed: 5 };
 
     let mut b1 = PsramBackend::new(&x, PjrtTileExecutor::paper().unwrap());
-    let r1 = CpAls::new(cfg.clone()).run(&mut b1).unwrap();
+    let r1 = CpAls::new(cfg.clone()).run_backend(&mut b1).unwrap();
 
     let mut b2 = PsramBackend::new(&x, AnalogTileExecutor::ideal());
-    let r2 = CpAls::new(cfg).run(&mut b2).unwrap();
+    let r2 = CpAls::new(cfg).run_backend(&mut b2).unwrap();
 
     assert_eq!(r1.fit_history, r2.fit_history);
     assert_eq!(r1.lambda, r2.lambda);
@@ -97,7 +97,7 @@ fn noisy_analog_backend_still_decomposes() {
     let exec = AnalogTileExecutor::new(engine, PsramArray::paper());
     let mut backend = PsramBackend::new(&x, exec);
     let res = CpAls::new(AlsConfig { rank: 3, max_iters: 30, tol: 1e-6, seed: 21 })
-        .run(&mut backend)
+        .run_backend(&mut backend)
         .unwrap();
     // verify with the ground-truth fit (the identity-based one is not
     // trustworthy under noise)
@@ -121,7 +121,7 @@ fn noise_sweep_degrades_true_fit() {
         let exec = AnalogTileExecutor::new(engine, PsramArray::paper());
         let mut backend = PsramBackend::new(&x, exec);
         let res = CpAls::new(AlsConfig { rank: 2, max_iters: 20, tol: 1e-7, seed: 3 })
-            .run(&mut backend)
+            .run_backend(&mut backend)
             .unwrap();
         fits.push(psram_imc::cpd::brute_force_fit(&x, &res.factors, &res.lambda));
     }
@@ -135,11 +135,11 @@ fn exact_vs_quantized_fit_gap_is_small() {
     let x = low_rank(6, &[22, 18, 14], 4, 0.05);
     let mut exact = ExactBackend { tensor: &x };
     let rexact = CpAls::new(AlsConfig { rank: 4, max_iters: 30, tol: 1e-6, seed: 8 })
-        .run(&mut exact)
+        .run_backend(&mut exact)
         .unwrap();
     let mut quant = PsramBackend::new(&x, CpuTileExecutor::paper());
     let rquant = CpAls::new(AlsConfig { rank: 4, max_iters: 30, tol: 1e-6, seed: 8 })
-        .run(&mut quant)
+        .run_backend(&mut quant)
         .unwrap();
     let gap = rexact.final_fit() - rquant.final_fit();
     assert!(gap.abs() < 0.05, "exact {} quant {}", rexact.final_fit(), rquant.final_fit());
@@ -304,9 +304,9 @@ fn plan_cached_hooi_identical_to_uncached_planning() {
 
     let spawn = || Coordinator::with_workers(3, |_| Ok(CpuTileExecutor::paper())).unwrap();
     let mut cached = CoordinatedTtmBackend::new(spawn());
-    let r1 = hooi.run(&x, &mut cached).unwrap();
+    let r1 = hooi.run_backend(&x, &mut cached).unwrap();
     let mut uncached = UncachedTtm { pool: spawn() };
-    let r2 = hooi.run(&x, &mut uncached).unwrap();
+    let r2 = hooi.run_backend(&x, &mut uncached).unwrap();
     assert_eq!(r1.fit_history, r2.fit_history);
     assert_eq!(r1.core.data(), r2.core.data());
     for (a, b) in r1.factors.iter().zip(&r2.factors) {
@@ -315,7 +315,7 @@ fn plan_cached_hooi_identical_to_uncached_planning() {
 
     // The single-array cached backend joins the same bit-identical family.
     let mut single = PsramTtmBackend::new(CpuTileExecutor::paper());
-    let r3 = hooi.run(&x, &mut single).unwrap();
+    let r3 = hooi.run_backend(&x, &mut single).unwrap();
     assert_eq!(r1.fit_history, r3.fit_history);
     assert_eq!(r1.core.data(), r3.core.data());
 }
@@ -336,7 +336,7 @@ fn coordinated_hooi_over_analog_arrays_decomposes() {
     .unwrap();
     let mut backend = CoordinatedTtmBackend::new(pool);
     let res = TuckerHooi::new(TuckerConfig::new(vec![2, 2, 2]))
-        .run(&x, &mut backend)
+        .run_backend(&x, &mut backend)
         .unwrap();
     let fit = tucker_fit(&x, &res.core, &res.factors).unwrap();
     assert!(fit > 0.95, "fit={fit}");
@@ -391,9 +391,9 @@ fn plan_cached_als_identical_to_uncached_planning() {
 
     let spawn = || Coordinator::with_workers(3, |_| Ok(CpuTileExecutor::paper())).unwrap();
     let mut cached = CoordinatedBackend::new(&x, spawn());
-    let r1 = CpAls::new(cfg.clone()).run(&mut cached).unwrap();
+    let r1 = CpAls::new(cfg.clone()).run_backend(&mut cached).unwrap();
     let mut uncached = UncachedDense { tensor: &x, pool: spawn() };
-    let r2 = CpAls::new(cfg.clone()).run(&mut uncached).unwrap();
+    let r2 = CpAls::new(cfg.clone()).run_backend(&mut uncached).unwrap();
     assert_eq!(r1.fit_history, r2.fit_history);
     assert_eq!(r1.lambda, r2.lambda);
     for (a, b) in r1.factors.iter().zip(&r2.factors) {
@@ -403,9 +403,9 @@ fn plan_cached_als_identical_to_uncached_planning() {
     // Sparse: same invariant through the slice-wise plans.
     let coo = CooTensor::from_dense(&x, 0.0);
     let mut cached = CoordinatedSparseBackend::new(&coo, spawn());
-    let r3 = CpAls::new(cfg.clone()).run(&mut cached).unwrap();
+    let r3 = CpAls::new(cfg.clone()).run_backend(&mut cached).unwrap();
     let mut uncached = UncachedSparse { tensor: &coo, pool: spawn() };
-    let r4 = CpAls::new(cfg).run(&mut uncached).unwrap();
+    let r4 = CpAls::new(cfg).run_backend(&mut uncached).unwrap();
     assert_eq!(r3.fit_history, r4.fit_history);
     assert_eq!(r3.lambda, r4.lambda);
 }
@@ -423,7 +423,7 @@ fn coordinated_sparse_cp_als_decomposes_sparsified_low_rank() {
     let mut best = 0.0f64;
     for seed in [2u64, 3, 4] {
         let res = CpAls::new(AlsConfig { rank: 2, max_iters: 30, tol: 1e-7, seed })
-            .run(&mut backend)
+            .run_backend(&mut backend)
             .unwrap();
         best = best.max(res.final_fit());
     }
@@ -441,7 +441,7 @@ fn coordinated_cp_als_with_many_workers() {
     .unwrap();
     let mut backend = CoordinatedBackend::new(&x, pool);
     let res = CpAls::new(AlsConfig { rank: 4, max_iters: 25, tol: 1e-6, seed: 12 })
-        .run(&mut backend)
+        .run_backend(&mut backend)
         .unwrap();
     assert!(res.final_fit() > 0.9, "fit={}", res.final_fit());
     let m = backend.pool.metrics();
