@@ -1,13 +1,39 @@
 //! Shared measurement harness for the benches (criterion is unavailable
-//! offline; this provides warmup + repetition + median/stddev reporting
-//! with a stable, grep-friendly output format).
+//! offline; this provides warmup + repetition + median/min/stddev
+//! reporting with a stable, grep-friendly output format) plus a
+//! [`Recorder`] that mirrors results into a machine-readable
+//! `telemetry::BenchReport` when the bench is invoked with
+//! `--json <path>` (`cargo bench --bench <name> -- --json out.json`).
 #![allow(dead_code)] // each bench uses a subset of these helpers
 
+use psram_imc::telemetry::{capture_env, BenchRecord, BenchReport, Direction};
+use std::path::PathBuf;
 use std::time::Instant;
 
+/// Summary statistics of one timed section.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    /// Median seconds across the measured repetitions.
+    pub median: f64,
+    /// Mean seconds.
+    pub mean: f64,
+    /// Fastest repetition (the least-noise estimate).
+    pub min: f64,
+    /// Population standard deviation of the repetitions.
+    pub std: f64,
+    /// Number of measured repetitions the row summarizes.
+    pub n: u64,
+}
+
 /// Time `f` with `warmup` unmeasured and `reps` measured runs; prints a
-/// result row and returns the median seconds.
-pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> f64 {
+/// result row and returns the full statistics (median/mean/min/std and
+/// the sample count `n` they were computed over).
+pub fn bench_stats<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    reps: usize,
+    mut f: F,
+) -> BenchStats {
     assert!(reps >= 1);
     for _ in 0..warmup {
         f();
@@ -20,17 +46,25 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, mut f: F) -> f6
     }
     times.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let median = times[times.len() / 2];
+    let min = times[0];
     let mean = times.iter().sum::<f64>() / reps as f64;
     let std = (times.iter().map(|t| (t - mean) * (t - mean)).sum::<f64>()
         / reps as f64)
         .sqrt();
     println!(
-        "bench {name:<42} median {:>12} mean {:>12} ± {:>10} ({reps} reps)",
+        "bench {name:<42} median {:>12} mean {:>12} ± {:>10} min {:>12} (n={reps})",
         fmt_s(median),
         fmt_s(mean),
-        fmt_s(std)
+        fmt_s(std),
+        fmt_s(min),
     );
-    median
+    BenchStats { median, mean, min, std, n: reps as u64 }
+}
+
+/// [`bench_stats`] returning just the median seconds (the historical
+/// return; sweep-style benches that only need one scalar use this).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, reps: usize, f: F) -> f64 {
+    bench_stats(name, warmup, reps, f).median
 }
 
 /// Human-readable seconds.
@@ -49,4 +83,82 @@ pub fn fmt_s(s: f64) -> String {
 /// Section header.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Mirrors bench results into a [`BenchReport`] written on [`finish`]
+/// (`Recorder::finish`) when the bench was invoked with `--json <path>`.
+///
+/// Records are collected unconditionally (the cost is trivial next to
+/// the measurements) so a bench behaves identically with and without the
+/// flag; only the final write is conditional.  Duplicate metric names
+/// are a bench bug and panic immediately.
+pub struct Recorder {
+    report: BenchReport,
+    path: Option<PathBuf>,
+}
+
+impl Recorder {
+    /// A recorder for bench `suite`, reading `--json <path>` from the
+    /// process arguments (other arguments — e.g. the `--bench` cargo
+    /// appends — are ignored).
+    pub fn from_args(suite: &str) -> Recorder {
+        let mut path = None;
+        let mut args = std::env::args().skip(1);
+        while let Some(a) = args.next() {
+            if a == "--json" {
+                match args.next() {
+                    Some(p) => path = Some(PathBuf::from(p)),
+                    None => panic!("--json requires a path argument"),
+                }
+            }
+        }
+        Recorder {
+            report: BenchReport::new(suite, capture_env(None)),
+            path,
+        }
+    }
+
+    /// Append one record (panics on duplicate names or non-finite
+    /// values — both are bench bugs, not runtime conditions).
+    pub fn record(&mut self, rec: BenchRecord) {
+        let name = rec.name.clone();
+        self.report
+            .push(rec)
+            .unwrap_or_else(|e| panic!("telemetry record {name:?}: {e}"));
+    }
+
+    /// Append a wall-clock timing row: the median of `stats` with its
+    /// sample count, marked non-gating.
+    pub fn wall(&mut self, name: &str, stats: &BenchStats) {
+        self.record(
+            BenchRecord::new(name, stats.median, "s")
+                .better(Direction::Lower)
+                .wall_clock()
+                .samples(stats.n),
+        );
+    }
+
+    /// Time a section through [`bench_stats`] *and* mirror it into the
+    /// report under `name`, returning the statistics.
+    pub fn timed<F: FnMut()>(
+        &mut self,
+        name: &str,
+        warmup: usize,
+        reps: usize,
+        f: F,
+    ) -> BenchStats {
+        let stats = bench_stats(name, warmup, reps, f);
+        self.wall(name, &stats);
+        stats
+    }
+
+    /// Write the report if `--json` was passed; always safe to call last.
+    pub fn finish(&self) {
+        if let Some(path) = &self.path {
+            self.report
+                .write_file(path)
+                .unwrap_or_else(|e| panic!("telemetry write {path:?}: {e}"));
+            println!("\ntelemetry: wrote {} records to {}", self.report.records.len(), path.display());
+        }
+    }
 }

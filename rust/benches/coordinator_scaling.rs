@@ -18,6 +18,7 @@ use psram_imc::mttkrp::pipeline::CpuTileExecutor;
 use psram_imc::mttkrp::plan::DensePlanner;
 use psram_imc::perfmodel::{PerfModel, Workload};
 use psram_imc::session::{Engine, JobId, Kernel, PsramSession};
+use psram_imc::telemetry::{BenchRecord, Direction};
 use psram_imc::tensor::{DenseTensor, Matrix};
 use psram_imc::util::prng::Prng;
 use psram_imc::util::units::format_ops;
@@ -30,6 +31,7 @@ use std::sync::atomic::Ordering;
 const ENVELOPE: f64 = 0.02;
 
 fn main() {
+    let mut rec = common::Recorder::from_args("bench_coordinator_scaling");
     let mut rng = Prng::new(13);
     // 16 K-blocks x 4 R-blocks = 64 images, 20 lane batches each.
     let (i_dim, k_dim, r_dim) = (1040usize, 4096usize, 128usize);
@@ -57,7 +59,7 @@ fn main() {
         let mut model = PerfModel::paper();
         model.num_arrays = shards;
         let cfg = CoordinatorConfig::from_model(&model, &workload);
-        let t = common::bench(
+        let t = rec.timed(
             &format!("mttkrp {i_dim}x{k_dim}x{r_dim} shards={shards:>2}"),
             1,
             3,
@@ -70,9 +72,9 @@ fn main() {
             },
         );
         if shards == 1 {
-            t1 = t;
+            t1 = t.median;
         } else {
-            println!("  -> speedup vs 1 shard: {:.2}x", t1 / t);
+            println!("  -> speedup vs 1 shard: {:.2}x", t1 / t.median);
         }
 
         // Device-model throughput from the cycle metrics of one fresh run,
@@ -100,6 +102,36 @@ fn main() {
             m.images.load(Ordering::Relaxed),
             m.steals.load(Ordering::Relaxed)
         );
+        rec.record(
+            BenchRecord::new(
+                format!("shards{shards}.measured_utilization"),
+                measured_util,
+                "ratio",
+            )
+            .tol(1e-9),
+        );
+        rec.record(
+            BenchRecord::new(
+                format!("shards{shards}.predicted_utilization"),
+                est.utilization,
+                "ratio",
+            )
+            .tol(1e-9),
+        );
+        rec.record(
+            BenchRecord::new(
+                format!("shards{shards}.measured_sustained_ops"),
+                measured_sustained,
+                "ops/s",
+            )
+            .better(Direction::Higher)
+            .tol(1e-9),
+        );
+        rec.record(BenchRecord::new(
+            format!("shards{shards}.measured_images"),
+            m.images.load(Ordering::Relaxed) as f64,
+            "images",
+        ));
     }
     println!(
         "\nprediction envelope: {}",
@@ -108,7 +140,7 @@ fn main() {
 
     common::section("COORD: write amortization — images per batch @ 4 shards");
     for &batch in &[1usize, 2, 4] {
-        common::bench(&format!("mttkrp batch_size={batch}"), 1, 3, || {
+        rec.timed(&format!("mttkrp batch_size={batch}"), 1, 3, || {
             let mut pool = Coordinator::spawn(
                 CoordinatorConfig { batch_size: batch, ..CoordinatorConfig::new(4) },
                 |_| Ok(CpuTileExecutor::paper()),
@@ -130,16 +162,19 @@ fn main() {
             Ok(CpuTileExecutor::paper())
         })
         .unwrap();
-        let t_cold = common::bench("cold: plan + execute", 1, 3, || {
+        let t_cold = rec.timed("cold: plan + execute", 1, 3, || {
             let plan = planner.plan_unfolded(&unf, &krp).unwrap();
             pool.execute_plan(&plan).unwrap();
         });
         let mut plan = planner.plan_unfolded(&unf, &krp).unwrap();
-        let t_warm = common::bench("steady: replan_into + execute", 1, 3, || {
+        let t_warm = rec.timed("steady: replan_into + execute", 1, 3, || {
             planner.replan_into(None, &krp, &mut plan).unwrap();
             pool.execute_plan(&plan).unwrap();
         });
-        println!("  -> steady-state ALS-iteration speedup: {:.2}x", t_cold / t_warm);
+        println!(
+            "  -> steady-state ALS-iteration speedup: {:.2}x",
+            t_cold.median / t_warm.median
+        );
     }
 
     common::section("COORD: multi-tenant jobs sharing one pool (PsramSession)");
@@ -220,6 +255,15 @@ fn main() {
                     format_ops(hi),
                     format_ops(single_env.sustained_raw_ops),
                 );
+                rec.record(
+                    BenchRecord::new(
+                        format!("multi_tenant.shards{shards}.jobs{jobs}.wall_s"),
+                        wall,
+                        "s",
+                    )
+                    .better(Direction::Lower)
+                    .wall_clock(),
+                );
             }
         }
     }
@@ -230,7 +274,7 @@ fn main() {
     let skew_unf = Matrix::randn(1040, 256, &mut rng);
     let skew_krp = Matrix::randn(256, 512, &mut rng);
     for &steal in &[false, true] {
-        let t = common::bench(&format!("skewed mttkrp steal={steal}"), 1, 3, || {
+        let t = rec.timed(&format!("skewed mttkrp steal={steal}"), 1, 3, || {
             let mut pool = Coordinator::spawn(
                 CoordinatorConfig {
                     batch_size: 1,
@@ -244,4 +288,6 @@ fn main() {
         });
         let _ = t;
     }
+
+    rec.finish();
 }

@@ -11,6 +11,9 @@
 //! 3. sparse steady-state: same over a slice-wise plan;
 //! 4. planning: cold `plan_unfolded` / `plan` vs in-place `replan_into` —
 //!    the plan-shape cache's per-iteration saving.
+//!
+//! `-- --json out.json` mirrors every timing row plus the steady-state
+//! cycle/MAC censuses into a telemetry report.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -22,10 +25,12 @@ use psram_imc::mttkrp::plan::{
 };
 use psram_imc::mttkrp::MttkrpStats;
 use psram_imc::psram::PsramArray;
+use psram_imc::telemetry::{BenchRecord, Direction};
 use psram_imc::tensor::{CooTensor, Matrix};
 use psram_imc::util::prng::Prng;
 
 fn main() {
+    let mut rec = common::Recorder::from_args("bench_engine_hot_loop");
     let mut rng = Prng::new(7);
 
     // ---- 1. single-cycle paths on the paper tile (52×256×32) ----
@@ -37,26 +42,26 @@ fn main() {
     let mut eng = ComputeEngine::ideal();
     let mut array = PsramArray::paper();
     array.write_image(&img).unwrap();
-    let t = common::bench("compute_cycle (allocating)", 50, 400, || {
+    let t = rec.timed("compute_cycle (allocating)", 50, 400, || {
         eng.compute_cycle(&mut array, &u, 52).unwrap();
     });
-    println!("  -> {:.3e} simulated MAC/s", macs_per_cycle / t);
+    println!("  -> {:.3e} simulated MAC/s", macs_per_cycle / t.median);
 
     let mut out = vec![0i32; 52 * 32];
-    let t = common::bench("compute_cycle_into (scratch)", 50, 400, || {
+    let t = rec.timed("compute_cycle_into (scratch)", 50, 400, || {
         eng.compute_cycle_into(&mut array, &u, 52, &mut out).unwrap();
     });
-    println!("  -> {:.3e} simulated MAC/s", macs_per_cycle / t);
+    println!("  -> {:.3e} simulated MAC/s", macs_per_cycle / t.median);
 
     // A block of 8 cycles: one ledger/energy charge instead of eight.
     let block_u: Vec<u8> = (0..8 * 52 * 256).map(|_| rng.next_u8()).collect();
     let lane_counts = [52usize; 8];
     let mut block_out = vec![0i32; 8 * 52 * 32];
-    let t = common::bench("compute_block_into (8 cycles)", 10, 100, || {
+    let t = rec.timed("compute_block_into (8 cycles)", 10, 100, || {
         eng.compute_block_into(&mut array, &block_u, &lane_counts, &mut block_out)
             .unwrap();
     });
-    println!("  -> {:.3e} simulated MAC/s", 8.0 * macs_per_cycle / t);
+    println!("  -> {:.3e} simulated MAC/s", 8.0 * macs_per_cycle / t.median);
 
     // ---- 2. dense steady state: warm scratch, cached plan ----
     common::section("ENGINE: dense execute_plan_into steady state (520x2048x64)");
@@ -74,14 +79,27 @@ fn main() {
         let mut s = MttkrpStats::default();
         execute_plan_into(&mut exec, &dense_plan, &mut scratch, &mut s, &mut dense_out)
             .unwrap();
+        rec.record(BenchRecord::new("dense.compute_cycles", s.compute_cycles as f64, "cycles"));
+        rec.record(BenchRecord::new("dense.write_cycles", s.write_cycles as f64, "cycles"));
+        rec.record(BenchRecord::new("dense.raw_macs", s.raw_macs as f64, "MACs"));
+        rec.record(BenchRecord::new("dense.useful_macs", s.useful_macs as f64, "MACs"));
         s.raw_macs as f64
     };
-    let t = common::bench("execute_plan_into dense", 1, 5, || {
+    let t = rec.timed("execute_plan_into dense", 1, 5, || {
         let mut s = MttkrpStats::default();
         execute_plan_into(&mut exec, &dense_plan, &mut scratch, &mut s, &mut dense_out)
             .unwrap();
     });
-    println!("  -> {:.3e} simulated raw MAC/s (zero allocations per cycle)", raw_macs / t);
+    println!(
+        "  -> {:.3e} simulated raw MAC/s (zero allocations per cycle)",
+        raw_macs / t.median
+    );
+    rec.record(
+        BenchRecord::new("dense.simulated_raw_mac_per_s", raw_macs / t.median, "MAC/s")
+            .better(Direction::Higher)
+            .wall_clock()
+            .samples(t.n),
+    );
 
     // ---- 3. sparse steady state ----
     common::section("ENGINE: sparse execute_plan_into steady state (64x2048x16, 1% dense)");
@@ -97,34 +115,46 @@ fn main() {
         let mut s = MttkrpStats::default();
         execute_plan_into(&mut exec, &sparse_plan, &mut scratch, &mut s, &mut sparse_out)
             .unwrap();
+        rec.record(BenchRecord::new("sparse.compute_cycles", s.compute_cycles as f64, "cycles"));
+        rec.record(BenchRecord::new("sparse.write_cycles", s.write_cycles as f64, "cycles"));
+        rec.record(BenchRecord::new("sparse.raw_macs", s.raw_macs as f64, "MACs"));
+        rec.record(BenchRecord::new("sparse.useful_macs", s.useful_macs as f64, "MACs"));
         (s.raw_macs as f64, s.useful_macs as f64)
     };
-    let t = common::bench("execute_plan_into sparse", 1, 5, || {
+    let t = rec.timed("execute_plan_into sparse", 1, 5, || {
         let mut s = MttkrpStats::default();
         execute_plan_into(&mut exec, &sparse_plan, &mut scratch, &mut s, &mut sparse_out)
             .unwrap();
     });
     println!(
         "  -> {:.3e} raw / {:.3e} useful simulated MAC/s",
-        sparse_macs.0 / t,
-        sparse_macs.1 / t
+        sparse_macs.0 / t.median,
+        sparse_macs.1 / t.median
     );
 
     // ---- 4. planning: cold plan vs in-place replan ----
     common::section("ENGINE: plan-shape cache — cold plan vs replan_into");
-    let t_cold = common::bench("dense plan_unfolded (cold)", 1, 5, || {
+    let t_cold = rec.timed("dense plan_unfolded (cold)", 1, 5, || {
         planner.plan_unfolded(&unf, &krp).unwrap();
     });
-    let t_warm = common::bench("dense replan_into (KRP only)", 1, 5, || {
+    let t_warm = rec.timed("dense replan_into (KRP only)", 1, 5, || {
         planner.replan_into(None, &krp, &mut dense_plan).unwrap();
     });
-    println!("  -> per-iteration planning speedup: {:.2}x", t_cold / t_warm);
+    println!(
+        "  -> per-iteration planning speedup: {:.2}x",
+        t_cold.median / t_warm.median
+    );
 
-    let t_cold = common::bench("sparse plan (cold)", 1, 5, || {
+    let t_cold = rec.timed("sparse plan (cold)", 1, 5, || {
         sparse_planner.plan(&coo, &factors, 0).unwrap();
     });
-    let t_warm = common::bench("sparse replan_into (stored only)", 1, 5, || {
+    let t_warm = rec.timed("sparse replan_into (stored only)", 1, 5, || {
         sparse_planner.replan_into(&factors, 0, &mut sparse_plan).unwrap();
     });
-    println!("  -> per-iteration planning speedup: {:.2}x", t_cold / t_warm);
+    println!(
+        "  -> per-iteration planning speedup: {:.2}x",
+        t_cold.median / t_warm.median
+    );
+
+    rec.finish();
 }

@@ -2,17 +2,25 @@
 //! 52 λ / 20 GHz / 8-bit.  Reproduced from the model, validated against the
 //! functional pipeline's measured cycle counts, and accompanied by the
 //! simulator's own wall-clock throughput (the L3 perf target).
+//!
+//! `cargo bench --bench headline_petaops -- --json out.json` mirrors the
+//! printed numbers into a machine-readable telemetry report (the
+//! committed `BENCH_headline.json` baseline comes from the reduced-size
+//! `psram-imc bench-report` suite instead — see `telemetry::suite`).
 
 #[path = "common/mod.rs"]
 mod common;
 
 use psram_imc::mttkrp::pipeline::{AnalogTileExecutor, CpuTileExecutor, PsramPipeline};
 use psram_imc::perfmodel::{headline, PerfModel, Workload};
+use psram_imc::telemetry::{BenchRecord, Direction};
 use psram_imc::tensor::Matrix;
 use psram_imc::util::prng::Prng;
 use psram_imc::util::units::format_ops;
 
 fn main() {
+    let mut rec = common::Recorder::from_args("bench_headline_petaops");
+
     common::section("headline: peak and sustained at the paper configuration");
     let (peak, sustained, util) = headline().unwrap();
     println!("peak      : {}", format_ops(peak));
@@ -20,6 +28,17 @@ fn main() {
     println!("util      : {util:.4}");
     assert!((peak / 1e15 - 17.04).abs() < 0.01);
     assert!(sustained / peak > 0.98);
+    rec.record(
+        BenchRecord::new("peak_ops", peak, "ops/s")
+            .better(Direction::Higher)
+            .tol(1e-6),
+    );
+    rec.record(
+        BenchRecord::new("sustained_ops", sustained, "ops/s")
+            .better(Direction::Higher)
+            .tol(1e-6),
+    );
+    rec.record(BenchRecord::new("utilization", util, "ratio").tol(1e-9));
 
     common::section("model vs measured cycles (reuse-heavy scaled workload)");
     // I = 20800 rows (400 lane batches), K = 512 (2 images), R = 32.
@@ -46,21 +65,54 @@ fn main() {
     assert_eq!(est.images, pipe.stats.images);
     assert_eq!(est.compute_cycles, pipe.stats.compute_cycles);
     assert_eq!(est.write_cycles, pipe.stats.write_cycles);
+    rec.record(BenchRecord::new(
+        "scaled.measured_images",
+        pipe.stats.images as f64,
+        "images",
+    ));
+    rec.record(BenchRecord::new(
+        "scaled.measured_compute_cycles",
+        pipe.stats.compute_cycles as f64,
+        "cycles",
+    ));
+    rec.record(BenchRecord::new(
+        "scaled.measured_write_cycles",
+        pipe.stats.write_cycles as f64,
+        "cycles",
+    ));
+    rec.record(
+        BenchRecord::new("scaled.measured_utilization", pipe.stats.utilization(), "ratio")
+            .tol(1e-9),
+    );
 
     common::section("simulator wall-clock throughput (L3 perf target)");
     // CPU integer executor (the optimized digital hot path):
     let macs = pipe.stats.useful_macs as f64;
-    let t_cpu = common::bench("cpu-executor mttkrp 20800x512x32", 1, 5, || {
+    let t_cpu = rec.timed("cpu-executor mttkrp 20800x512x32", 1, 5, || {
         let mut e = CpuTileExecutor::paper();
         let mut p = PsramPipeline::new(&mut e);
         p.mttkrp_unfolded(&unf, &krp).unwrap();
     });
-    println!("  cpu executor    : {:.3e} MAC/s", macs / t_cpu);
+    println!("  cpu executor    : {:.3e} MAC/s", macs / t_cpu.median);
+    rec.record(
+        BenchRecord::new("cpu_executor_mac_per_s", macs / t_cpu.median, "MAC/s")
+            .better(Direction::Higher)
+            .wall_clock()
+            .samples(t_cpu.n),
+    );
     // Analog simulator (device-faithful fast path):
-    let t_sim = common::bench("analog-sim mttkrp 20800x512x32", 1, 3, || {
+    let t_sim = rec.timed("analog-sim mttkrp 20800x512x32", 1, 3, || {
         let mut e = AnalogTileExecutor::ideal();
         let mut p = PsramPipeline::new(&mut e);
         p.mttkrp_unfolded(&unf, &krp).unwrap();
     });
-    println!("  analog simulator: {:.3e} MAC/s", macs / t_sim);
+    println!("  analog simulator: {:.3e} MAC/s", macs / t_sim.median);
+    rec.record(
+        BenchRecord::new("analog_sim_mac_per_s", macs / t_sim.median, "MAC/s")
+            .better(Direction::Higher)
+            .wall_clock()
+            .samples(t_sim.n),
+    );
+
+    rec.finish();
 }

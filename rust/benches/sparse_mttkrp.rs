@@ -12,11 +12,13 @@ use psram_imc::mttkrp::plan::SparseSlicePlanner;
 use psram_imc::mttkrp::reference::sparse_mttkrp;
 use psram_imc::mttkrp::{CpuTileExecutor, SparsePsramPipeline};
 use psram_imc::perfmodel::PerfModel;
+use psram_imc::telemetry::BenchRecord;
 use psram_imc::tensor::{CooTensor, Matrix};
 use psram_imc::util::prng::Prng;
 use psram_imc::util::units::format_ops;
 
 fn main() {
+    let mut rec = common::Recorder::from_args("bench_sparse_mttkrp");
     let mut rng = Prng::new(17);
     let shape = [128usize, 256, 64];
     let total = shape.iter().product::<usize>();
@@ -36,17 +38,33 @@ fn main() {
         let mut pipe = SparsePsramPipeline::new(&mut exec);
         pipe.mttkrp(&x, &factors, 0).unwrap();
         let stats = pipe.stats;
-        let t = common::bench(&format!("sp-mttkrp density={density}"), 1, 3, || {
+        let t = rec.timed(&format!("sp-mttkrp density={density}"), 1, 3, || {
             let mut e = CpuTileExecutor::paper();
             SparsePsramPipeline::new(&mut e).mttkrp(&x, &factors, 0).unwrap();
         });
         println!(
             "{density:>9} | {:>9} | {:>12} | {:>10.4} | {:>10.4} | {:>12.3e}",
             x.nnz(),
-            common::fmt_s(t),
+            common::fmt_s(t.median),
             stats.utilization(),
             stats.padding_efficiency(),
-            stats.useful_macs as f64 / t
+            stats.useful_macs as f64 / t.median
+        );
+        rec.record(
+            BenchRecord::new(
+                format!("density{density}.measured_utilization"),
+                stats.utilization(),
+                "ratio",
+            )
+            .tol(1e-9),
+        );
+        rec.record(
+            BenchRecord::new(
+                format!("density{density}.padding_efficiency"),
+                stats.padding_efficiency(),
+                "ratio",
+            )
+            .tol(1e-9),
         );
     }
 
@@ -54,10 +72,10 @@ fn main() {
     for &density in &[0.01f64, 0.2] {
         let nnz = (total as f64 * density) as usize;
         let x = CooTensor::random(&shape, nnz, &mut rng);
-        let t = common::bench(&format!("cpu sparse_mttkrp density={density}"), 1, 5, || {
+        let t = rec.timed(&format!("cpu sparse_mttkrp density={density}"), 1, 5, || {
             sparse_mttkrp(&x, &factors, 0).unwrap();
         });
-        println!("  -> {:.3e} useful MAC/s", (x.nnz() * rank) as f64 / t);
+        println!("  -> {:.3e} useful MAC/s", (x.nnz() * rank) as f64 / t.median);
     }
     println!("\n(expected shape: photonic raw-MAC efficiency ≈ density — the array");
     println!(" computes zeros — while the CPU baseline scales with nnz only; the");
@@ -91,7 +109,7 @@ fn main() {
             let mut model = PerfModel::paper();
             model.num_arrays = shards;
             let est = model.predict_plan(&plan).unwrap();
-            let t = common::bench(
+            let t = rec.timed(
                 &format!("coord sp-mttkrp d={density} shards={shards:>2}"),
                 1,
                 3,
@@ -120,7 +138,23 @@ fn main() {
                 format_ops(est.sustained_raw_ops),
                 est.utilization,
                 if in_env { "OK" } else { "MISS" },
-                est.useful_macs as f64 / t,
+                est.useful_macs as f64 / t.median,
+            );
+            rec.record(
+                BenchRecord::new(
+                    format!("coord.d{density}.shards{shards}.measured_utilization"),
+                    measured_util,
+                    "ratio",
+                )
+                .tol(1e-9),
+            );
+            rec.record(
+                BenchRecord::new(
+                    format!("coord.d{density}.shards{shards}.predicted_utilization"),
+                    est.utilization,
+                    "ratio",
+                )
+                .tol(1e-9),
             );
         }
     }
@@ -136,14 +170,19 @@ fn main() {
         Ok(CpuTileExecutor::paper())
     })
     .unwrap();
-    let t_cold = common::bench("cold: plan + execute", 1, 3, || {
+    let t_cold = rec.timed("cold: plan + execute", 1, 3, || {
         let plan = sparse_planner.plan(&x, &factors2, 0).unwrap();
         pool.execute_plan(&plan).unwrap();
     });
     let mut plan = sparse_planner.plan(&x, &factors2, 0).unwrap();
-    let t_warm = common::bench("steady: replan_into + execute", 1, 3, || {
+    let t_warm = rec.timed("steady: replan_into + execute", 1, 3, || {
         sparse_planner.replan_into(&factors2, 0, &mut plan).unwrap();
         pool.execute_plan(&plan).unwrap();
     });
-    println!("  -> steady-state spALS-iteration speedup: {:.2}x", t_cold / t_warm);
+    println!(
+        "  -> steady-state spALS-iteration speedup: {:.2}x",
+        t_cold.median / t_warm.median
+    );
+
+    rec.finish();
 }

@@ -19,6 +19,7 @@ use psram_imc::mttkrp::cache::TtmPlanCache;
 use psram_imc::mttkrp::pipeline::CpuTileExecutor;
 use psram_imc::mttkrp::plan::TtmPlanner;
 use psram_imc::perfmodel::{PerfModel, Workload};
+use psram_imc::telemetry::BenchRecord;
 use psram_imc::tensor::{DenseTensor, Matrix};
 use psram_imc::tucker::{
     tucker_fit, tucker_reconstruct, CoordinatedTtmBackend, TuckerConfig, TuckerHooi,
@@ -27,6 +28,7 @@ use psram_imc::util::prng::Prng;
 use psram_imc::util::units::format_ops;
 
 fn main() {
+    let mut rec = common::Recorder::from_args("bench_tucker_hooi");
     let mut rng = Prng::new(17);
 
     // One dense TTM: X (4096 x 52 x 40) ×₀ Uᵀ with U [4096, 64] —
@@ -56,7 +58,7 @@ fn main() {
         let mut model = PerfModel::paper();
         model.num_arrays = shards;
         let cfg = CoordinatorConfig::from_model(&model, &workload);
-        let t = common::bench(
+        let t = rec.timed(
             &format!("ttm 2080x4096x64 shards={shards:>2}"),
             1,
             3,
@@ -69,9 +71,9 @@ fn main() {
             },
         );
         if shards == 1 {
-            t1 = t;
+            t1 = t.median;
         } else {
-            println!("  -> speedup vs 1 shard: {:.2}x", t1 / t);
+            println!("  -> speedup vs 1 shard: {:.2}x", t1 / t.median);
         }
 
         // predict_plan scores a TTM plan exactly like dense MTTKRP: the
@@ -95,6 +97,32 @@ fn main() {
             est.utilization,
             if ok { "EXACT" } else { "MISS" },
         );
+        rec.record(BenchRecord::new(
+            format!("ttm.shards{shards}.measured_images"),
+            snap[1].1 as f64,
+            "images",
+        ));
+        rec.record(BenchRecord::new(
+            format!("ttm.shards{shards}.measured_compute_cycles"),
+            snap[2].1 as f64,
+            "cycles",
+        ));
+        rec.record(
+            BenchRecord::new(
+                format!("ttm.shards{shards}.measured_utilization"),
+                m.utilization(),
+                "ratio",
+            )
+            .tol(1e-9),
+        );
+        rec.record(
+            BenchRecord::new(
+                format!("ttm.shards{shards}.predicted_utilization"),
+                est.utilization,
+                "ratio",
+            )
+            .tol(1e-9),
+        );
     }
     println!(
         "\nprediction envelope: {}",
@@ -111,17 +139,20 @@ fn main() {
             Ok(CpuTileExecutor::paper())
         })
         .unwrap();
-        let t_cold = common::bench("cold: unfold + plan + execute", 1, 3, || {
+        let t_cold = rec.timed("cold: unfold + plan + execute", 1, 3, || {
             let plan = planner.plan_ttm(&x, &u, 0).unwrap();
             pool.execute_plan(&plan).unwrap();
         });
         let mut cache = TtmPlanCache::new(planner);
         cache.plan_fixed_stream(0, &x, 0, &u).unwrap();
-        let t_warm = common::bench("steady: replan_into + execute", 1, 3, || {
+        let t_warm = rec.timed("steady: replan_into + execute", 1, 3, || {
             let plan = cache.plan_fixed_stream(0, &x, 0, &u).unwrap();
             pool.execute_plan(plan).unwrap();
         });
-        println!("  -> steady-state HOOI-iteration speedup: {:.2}x", t_cold / t_warm);
+        println!(
+            "  -> steady-state HOOI-iteration speedup: {:.2}x",
+            t_cold.median / t_warm.median
+        );
     }
 
     common::section("TUCKER: end-to-end HOOI (64x56x48 -> core 8x8x8) @ 4 shards");
@@ -140,7 +171,7 @@ fn main() {
         tol: 1e-6,
     });
     let mut fit = 0.0;
-    common::bench("hooi 10 sweeps (coordinator x4)", 1, 3, || {
+    rec.timed("hooi 10 sweeps (coordinator x4)", 1, 3, || {
         let pool =
             Coordinator::with_workers(4, |_| Ok(CpuTileExecutor::paper())).unwrap();
         let mut backend = CoordinatedTtmBackend::new(pool);
@@ -148,4 +179,9 @@ fn main() {
         fit = tucker_fit(&x2, &res.core, &res.factors).unwrap();
     });
     println!("  -> reconstruction fit {fit:.6}");
+    // 1e-3, not tighter: the fit goes through ln/sin_cos in randn and a
+    // full HOOI sweep, so the last few ulps vary across libm versions.
+    rec.record(BenchRecord::new("hooi.reconstruction_fit", fit, "fit").tol(1e-3));
+
+    rec.finish();
 }

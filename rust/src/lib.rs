@@ -47,6 +47,11 @@
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) for the digital baseline and cross-checks
 //!   (behind the `xla` feature; a graceful stub otherwise).
+//! * [`telemetry`] — machine-readable perf telemetry: `BenchReport`
+//!   records (hand-rolled JSON, std-only), environment capture, a
+//!   tolerance-aware baseline differ, and the cheap deterministic suite
+//!   behind the committed `BENCH_*.json` baselines and the CI
+//!   regression gate (`psram-imc bench-report`).
 //! * [`util`] — PRNG, statistics, fixed-point helpers, a tiny
 //!   property-testing harness, physical units.
 //!
@@ -68,6 +73,7 @@ pub mod perfmodel;
 pub mod psram;
 pub mod runtime;
 pub mod session;
+pub mod telemetry;
 pub mod tensor;
 pub mod tucker;
 pub mod util;

@@ -13,6 +13,12 @@
 //!                     (Tucker/HOOI via TTM tile plans; default backend: coordinator)
 //! psram-imc energy    [--channels N] [--freq GHZ]
 //! psram-imc selftest            # analog vs CPU vs PJRT cross-check
+//! psram-imc bench-report [--write] [--dir PATH] [--only AREA[,AREA..]]
+//!                        [--date YYYY-MM-DD] [--verbose]
+//!                     (runs the cheap deterministic telemetry suite and
+//!                      diffs it against the committed BENCH_*.json
+//!                      baselines — the CI regression gate; --write
+//!                      re-baselines instead of checking)
 //! ```
 //!
 //! Every decomposition command builds one [`PsramSession`] — the unified
@@ -63,6 +69,7 @@ fn run(args: &Args) -> Result<()> {
         "tucker" => cmd_tucker(args),
         "energy" => cmd_energy(args),
         "selftest" => cmd_selftest(args),
+        "bench-report" => cmd_bench_report(args),
         "" | "help" => {
             print!("{}", HELP);
             Ok(())
@@ -86,6 +93,8 @@ COMMANDS:
   tucker    Tucker/HOOI decomposition via TTM tile plans
   energy    energy breakdown for the paper workload
   selftest  analog / CPU / PJRT bit-exactness cross-check
+  bench-report  run the deterministic telemetry suite and diff it against
+            the committed BENCH_*.json baselines (--write re-baselines)
   help      this text
 ";
 
@@ -409,6 +418,91 @@ fn cmd_energy(args: &Args) -> Result<()> {
     }
     println!("  {:>10}: {:>12}", "total", format_energy(e.total_j()));
     println!("  per useful op: {}", format_energy(e.per_op_j(2.0 * w.useful_macs())));
+    Ok(())
+}
+
+/// `bench-report`: run the cheap deterministic telemetry suite
+/// ([`psram_imc::telemetry::suite`]) and either diff it against the
+/// committed `BENCH_<area>.json` baselines (the default — the CI
+/// regression gate, exit 1 on any gating regression) or re-generate them
+/// with `--write`.
+///
+/// * `--dir PATH` — baseline directory (default `.`, the repo root when
+///   run via `cargo run`);
+/// * `--only AREA[,AREA..]` — restrict to a subset of
+///   [`psram_imc::telemetry::suite::AREAS`];
+/// * `--date YYYY-MM-DD` — pin the report date (otherwise `BENCH_DATE`
+///   or the system clock);
+/// * `--verbose` — also print unchanged metrics in the diff tables.
+fn cmd_bench_report(args: &Args) -> Result<()> {
+    use psram_imc::telemetry::{capture_env, diff, suite, BenchReport, MetricKind};
+    use std::path::PathBuf;
+
+    let dir = PathBuf::from(args.get("dir").unwrap_or("."));
+    let only: Option<Vec<String>> = args
+        .get("only")
+        .map(|s| s.split(',').map(|p| p.trim().to_string()).collect());
+    if let Some(o) = &only {
+        for name in o {
+            if !suite::AREAS.contains(&name.as_str()) {
+                return Err(psram_imc::Error::config(format!(
+                    "--only: unknown area {name:?} (areas: {})",
+                    suite::AREAS.join(", ")
+                )));
+            }
+        }
+    }
+    let areas: Vec<&str> = match &only {
+        None => suite::AREAS.to_vec(),
+        Some(o) => suite::AREAS
+            .iter()
+            .copied()
+            .filter(|a| o.iter().any(|x| x == a))
+            .collect(),
+    };
+
+    let env = capture_env(args.get("date"));
+    let write = args.flag("write");
+    let verbose = args.flag("verbose");
+    println!(
+        "bench-report: {} area(s); env: rev {} | {} cpu(s) | {} | {} | {}",
+        areas.len(),
+        env.git_rev,
+        env.cpu_count,
+        env.build_profile,
+        env.os,
+        env.date
+    );
+
+    let mut regressed = false;
+    for area in &areas {
+        let mut report = suite::run_area(area, &env)?;
+        let path = dir.join(suite::file_name(area));
+        if write {
+            // Committed baselines carry only gating records: wall-clock
+            // rows would churn the files on every re-baseline without
+            // ever gating (they diff as `added`/`info`).
+            report.records.retain(|r| r.kind == MetricKind::Deterministic);
+            report.write_file(&path)?;
+            println!("wrote {} ({} records)", path.display(), report.records.len());
+        } else {
+            let baseline = BenchReport::read_file(&path)?;
+            let d = diff(&baseline, &report);
+            println!("\n== {area}: fresh run vs baseline {} ==", path.display());
+            print!("{}", d.summary(verbose));
+            regressed |= d.has_regressions();
+        }
+    }
+    if regressed {
+        return Err(psram_imc::Error::telemetry(
+            "performance regression beyond tolerance (rows marked REGRESSED/\
+             REMOVED above); if intentional, re-baseline with \
+             `psram-imc bench-report --write` and commit the BENCH_*.json",
+        ));
+    }
+    if !write {
+        println!("\nbench-report: all gating metrics within tolerance");
+    }
     Ok(())
 }
 

@@ -1,0 +1,382 @@
+//! Tolerance-aware baseline diffing — the CI regression gate.
+//!
+//! [`diff`] matches a current [`BenchReport`] against a committed
+//! baseline record-by-record (by name) and classifies every metric using
+//! the *baseline's* direction, kind, and relative tolerance (the baseline
+//! is the contract; a current run cannot loosen it):
+//!
+//! * [`DiffStatus::Regressed`] — moved against its [`Direction`] by more
+//!   than `rel_tol` (for [`Direction::Exact`] metrics, *any* drift beyond
+//!   tolerance regresses, improvements included: predicted == measured
+//!   pins must be re-baselined deliberately, not silently absorbed);
+//! * [`DiffStatus::Improved`] / [`DiffStatus::Unchanged`] — the benign
+//!   outcomes;
+//! * [`DiffStatus::Info`] — wall-clock metrics: reported, never gating;
+//! * [`DiffStatus::Removed`] — in the baseline, missing from the current
+//!   run.  A vanished deterministic metric gates (a silently dropped pin
+//!   is a regression of coverage); a vanished wall-clock metric does not;
+//! * [`DiffStatus::Added`] — new in the current run; never gates.
+//!
+//! [`ReportDiff::has_regressions`] is the single bit CI acts on.
+
+use super::{BenchReport, Direction, MetricKind};
+
+/// Classification of one metric in a baseline diff.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiffStatus {
+    /// Moved in the improving direction by more than the tolerance.
+    Improved,
+    /// Within tolerance of the baseline.
+    Unchanged,
+    /// Moved against the metric's direction by more than the tolerance
+    /// (or drifted at all, for `Exact` metrics) — gates CI.
+    Regressed,
+    /// Wall-clock metric: change reported, never gating.
+    Info,
+    /// Present only in the current run.
+    Added,
+    /// Present only in the baseline (gates when the baseline record was
+    /// deterministic).
+    Removed,
+}
+
+impl DiffStatus {
+    /// Short label for tables.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DiffStatus::Improved => "improved",
+            DiffStatus::Unchanged => "unchanged",
+            DiffStatus::Regressed => "REGRESSED",
+            DiffStatus::Info => "info",
+            DiffStatus::Added => "added",
+            DiffStatus::Removed => "REMOVED",
+        }
+    }
+}
+
+/// One metric's baseline-vs-current comparison.
+#[derive(Debug, Clone)]
+pub struct DiffEntry {
+    /// Metric name.
+    pub name: String,
+    /// Baseline value (`None` for [`DiffStatus::Added`]).
+    pub baseline: Option<f64>,
+    /// Current value (`None` for [`DiffStatus::Removed`]).
+    pub current: Option<f64>,
+    /// Signed relative change `(current - baseline) / |baseline|`
+    /// (`None` when either side is missing; `±inf` collapses to the
+    /// tolerance comparison when the baseline is exactly zero).
+    pub rel_change: Option<f64>,
+    /// Relative tolerance the classification used (the baseline's).
+    pub rel_tol: f64,
+    /// Classification.
+    pub status: DiffStatus,
+    /// Whether this entry can gate CI (deterministic baseline records).
+    pub gated: bool,
+}
+
+/// The full diff of one report pair.
+#[derive(Debug, Clone)]
+pub struct ReportDiff {
+    /// Suite name (from the baseline).
+    pub suite: String,
+    /// Per-metric entries, baseline order first, then added metrics.
+    pub entries: Vec<DiffEntry>,
+}
+
+impl ReportDiff {
+    /// The gating failures: regressed or removed deterministic metrics.
+    pub fn regressions(&self) -> Vec<&DiffEntry> {
+        self.entries
+            .iter()
+            .filter(|e| {
+                e.gated
+                    && matches!(
+                        e.status,
+                        DiffStatus::Regressed | DiffStatus::Removed
+                    )
+            })
+            .collect()
+    }
+
+    /// True when any gating metric regressed — the bit CI fails on.
+    pub fn has_regressions(&self) -> bool {
+        !self.regressions().is_empty()
+    }
+
+    /// A printable summary table (one row per non-`Unchanged` entry, plus
+    /// a count line; `verbose` includes unchanged rows too).
+    pub fn summary(&self, verbose: bool) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let mut unchanged = 0usize;
+        for e in &self.entries {
+            if e.status == DiffStatus::Unchanged && !verbose {
+                unchanged += 1;
+                continue;
+            }
+            let fmt_side = |v: Option<f64>| match v {
+                Some(v) => format!("{v:.6e}"),
+                None => "-".to_string(),
+            };
+            let delta = match e.rel_change {
+                Some(d) if d.is_finite() => format!("{:+.4}%", 100.0 * d),
+                _ => "-".to_string(),
+            };
+            let _ = writeln!(
+                out,
+                "  {:<52} {:>13} -> {:>13}  {:>10}  {}",
+                e.name,
+                fmt_side(e.baseline),
+                fmt_side(e.current),
+                delta,
+                e.status.as_str()
+            );
+            if e.status == DiffStatus::Unchanged {
+                unchanged += 1;
+            }
+        }
+        let _ = writeln!(
+            out,
+            "  {} metric(s): {} unchanged, {} regressed/removed (gating), \
+             {} informational",
+            self.entries.len(),
+            unchanged,
+            self.regressions().len(),
+            self.entries
+                .iter()
+                .filter(|e| e.status == DiffStatus::Info)
+                .count(),
+        );
+        out
+    }
+}
+
+/// Diff `current` against `baseline` (see the module docs for the
+/// classification rules).  Environment metadata is *not* compared — a
+/// baseline generated on a different machine or commit is still a valid
+/// contract for the deterministic metrics.
+pub fn diff(baseline: &BenchReport, current: &BenchReport) -> ReportDiff {
+    let mut entries = Vec::with_capacity(baseline.records.len());
+    for b in &baseline.records {
+        let gated = b.kind == MetricKind::Deterministic;
+        let entry = match current.get(&b.name) {
+            None => DiffEntry {
+                name: b.name.clone(),
+                baseline: Some(b.value),
+                current: None,
+                rel_change: None,
+                rel_tol: b.rel_tol,
+                status: DiffStatus::Removed,
+                gated,
+            },
+            Some(c) => {
+                let rel = if b.value != 0.0 {
+                    (c.value - b.value) / b.value.abs()
+                } else if c.value == 0.0 {
+                    0.0
+                } else {
+                    f64::INFINITY.copysign(c.value)
+                };
+                let status = if b.kind == MetricKind::WallClock {
+                    DiffStatus::Info
+                } else {
+                    classify(b.better, rel, b.rel_tol)
+                };
+                DiffEntry {
+                    name: b.name.clone(),
+                    baseline: Some(b.value),
+                    current: Some(c.value),
+                    rel_change: Some(rel),
+                    rel_tol: b.rel_tol,
+                    status,
+                    gated,
+                }
+            }
+        };
+        entries.push(entry);
+    }
+    for c in &current.records {
+        if baseline.get(&c.name).is_none() {
+            entries.push(DiffEntry {
+                name: c.name.clone(),
+                baseline: None,
+                current: Some(c.value),
+                rel_change: None,
+                rel_tol: c.rel_tol,
+                status: DiffStatus::Added,
+                gated: false,
+            });
+        }
+    }
+    ReportDiff { suite: baseline.suite.clone(), entries }
+}
+
+fn classify(better: Direction, rel: f64, tol: f64) -> DiffStatus {
+    match better {
+        Direction::Exact => {
+            if rel.abs() <= tol {
+                DiffStatus::Unchanged
+            } else {
+                DiffStatus::Regressed
+            }
+        }
+        Direction::Higher => {
+            if rel < -tol {
+                DiffStatus::Regressed
+            } else if rel > tol {
+                DiffStatus::Improved
+            } else {
+                DiffStatus::Unchanged
+            }
+        }
+        Direction::Lower => {
+            if rel > tol {
+                DiffStatus::Regressed
+            } else if rel < -tol {
+                DiffStatus::Improved
+            } else {
+                DiffStatus::Unchanged
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::{BenchEnv, BenchRecord};
+
+    fn env() -> BenchEnv {
+        BenchEnv {
+            git_rev: "r".into(),
+            cpu_count: 1,
+            build_profile: "release".into(),
+            date: "2026-08-07".into(),
+            os: "linux/x86_64".into(),
+        }
+    }
+
+    fn report(records: Vec<BenchRecord>) -> BenchReport {
+        let mut r = BenchReport::new("t", env());
+        for rec in records {
+            r.push(rec).unwrap();
+        }
+        r
+    }
+
+    fn status_of(d: &ReportDiff, name: &str) -> DiffStatus {
+        d.entries.iter().find(|e| e.name == name).unwrap().status
+    }
+
+    #[test]
+    fn higher_is_better_classification() {
+        let base = report(vec![
+            BenchRecord::new("ops", 100.0, "ops/s").better(Direction::Higher).tol(0.01)
+        ]);
+        for (cur, want) in [
+            (100.5, DiffStatus::Unchanged),
+            (99.5, DiffStatus::Unchanged),
+            (102.0, DiffStatus::Improved),
+            (98.0, DiffStatus::Regressed),
+        ] {
+            let c = report(vec![BenchRecord::new("ops", cur, "ops/s")]);
+            assert_eq!(status_of(&diff(&base, &c), "ops"), want, "cur={cur}");
+        }
+    }
+
+    #[test]
+    fn lower_is_better_classification() {
+        let base = report(vec![
+            BenchRecord::new("energy", 10.0, "J").better(Direction::Lower).tol(0.05)
+        ]);
+        for (cur, want) in [
+            (10.2, DiffStatus::Unchanged),
+            (9.0, DiffStatus::Improved),
+            (11.0, DiffStatus::Regressed),
+        ] {
+            let c = report(vec![BenchRecord::new("energy", cur, "J")]);
+            assert_eq!(status_of(&diff(&base, &c), "energy"), want, "cur={cur}");
+        }
+    }
+
+    #[test]
+    fn exact_pins_regress_in_both_directions() {
+        let base = report(vec![BenchRecord::new("cycles", 1000.0, "cycles")]);
+        for (cur, want) in [
+            (1000.0, DiffStatus::Unchanged),
+            (999.0, DiffStatus::Regressed),
+            (1001.0, DiffStatus::Regressed),
+        ] {
+            let c = report(vec![BenchRecord::new("cycles", cur, "cycles")]);
+            assert_eq!(status_of(&diff(&base, &c), "cycles"), want, "cur={cur}");
+        }
+    }
+
+    #[test]
+    fn zero_baseline_handled() {
+        let base = report(vec![BenchRecord::new("z", 0.0, "x").tol(0.1)]);
+        let same = report(vec![BenchRecord::new("z", 0.0, "x")]);
+        assert_eq!(status_of(&diff(&base, &same), "z"), DiffStatus::Unchanged);
+        let moved = report(vec![BenchRecord::new("z", 0.5, "x")]);
+        assert_eq!(status_of(&diff(&base, &moved), "z"), DiffStatus::Regressed);
+    }
+
+    #[test]
+    fn wall_clock_never_gates() {
+        let base = report(vec![
+            BenchRecord::new("wall", 1.0, "s").better(Direction::Lower).wall_clock()
+        ]);
+        let slow = report(vec![BenchRecord::new("wall", 100.0, "s").wall_clock()]);
+        let d = diff(&base, &slow);
+        assert_eq!(status_of(&d, "wall"), DiffStatus::Info);
+        assert!(!d.has_regressions());
+        // ... even when it disappears entirely
+        let gone = report(vec![]);
+        let d = diff(&base, &gone);
+        assert_eq!(status_of(&d, "wall"), DiffStatus::Removed);
+        assert!(!d.has_regressions());
+    }
+
+    #[test]
+    fn removed_deterministic_metric_gates() {
+        let base = report(vec![BenchRecord::new("pin", 7.0, "x")]);
+        let d = diff(&base, &report(vec![]));
+        assert_eq!(status_of(&d, "pin"), DiffStatus::Removed);
+        assert!(d.has_regressions());
+    }
+
+    #[test]
+    fn added_metric_does_not_gate() {
+        let base = report(vec![]);
+        let cur = report(vec![BenchRecord::new("new", 1.0, "x")]);
+        let d = diff(&base, &cur);
+        assert_eq!(status_of(&d, "new"), DiffStatus::Added);
+        assert!(!d.has_regressions());
+    }
+
+    #[test]
+    fn baseline_tolerance_wins_over_current() {
+        // the committed contract can't be loosened by the current run
+        let base = report(vec![BenchRecord::new("m", 100.0, "x").tol(0.0)]);
+        let cur = report(vec![BenchRecord::new("m", 101.0, "x").tol(10.0)]);
+        assert_eq!(status_of(&diff(&base, &cur), "m"), DiffStatus::Regressed);
+    }
+
+    #[test]
+    fn summary_formats() {
+        let base = report(vec![
+            BenchRecord::new("a", 1.0, "x"),
+            BenchRecord::new("b", 2.0, "x"),
+        ]);
+        let cur = report(vec![
+            BenchRecord::new("a", 1.0, "x"),
+            BenchRecord::new("b", 3.0, "x"),
+        ]);
+        let d = diff(&base, &cur);
+        let s = d.summary(false);
+        assert!(s.contains("REGRESSED"), "{s}");
+        assert!(!s.contains("\n  a "), "unchanged rows hidden: {s}");
+        assert!(d.summary(true).contains('a'));
+    }
+}

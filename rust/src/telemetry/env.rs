@@ -1,0 +1,106 @@
+//! Environment capture for telemetry reports: git revision, CPU count,
+//! build profile, date, OS/arch — the provenance block that makes a
+//! committed `BENCH_*.json` auditable ("which commit, which machine shape,
+//! which day produced these numbers").
+
+use super::BenchEnv;
+use std::process::Command;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Capture the current environment.
+///
+/// `date_override` (CI passes `--date` / the `BENCH_DATE` env var) wins
+/// over the system clock so re-generated baselines can be byte-stable in
+/// a pipeline; otherwise the UTC date is derived from `SystemTime`.
+pub fn capture_env(date_override: Option<&str>) -> BenchEnv {
+    let date = date_override
+        .map(str::to_string)
+        .or_else(|| std::env::var("BENCH_DATE").ok())
+        .unwrap_or_else(system_utc_date);
+    BenchEnv {
+        git_rev: git_rev(),
+        cpu_count: std::thread::available_parallelism()
+            .map(|n| n.get() as u64)
+            .unwrap_or(1),
+        build_profile: if cfg!(debug_assertions) { "debug" } else { "release" }
+            .to_string(),
+        date,
+        os: format!("{}/{}", std::env::consts::OS, std::env::consts::ARCH),
+    }
+}
+
+/// Short git revision of `HEAD`, or `"unknown"` when git (or a repo) is
+/// unavailable — telemetry must degrade, not fail, outside a checkout.
+fn git_rev() -> String {
+    let out = Command::new("git")
+        .args(["rev-parse", "--short=12", "HEAD"])
+        .output();
+    match out {
+        Ok(o) if o.status.success() => {
+            let rev = String::from_utf8_lossy(&o.stdout).trim().to_string();
+            if rev.is_empty() {
+                "unknown".to_string()
+            } else {
+                rev
+            }
+        }
+        _ => "unknown".to_string(),
+    }
+}
+
+/// `YYYY-MM-DD` (UTC) from the system clock, via the standard
+/// civil-from-days algorithm (no chrono offline).
+fn system_utc_date() -> String {
+    let secs = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let (y, m, d) = civil_from_days((secs / 86_400) as i64);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// Days-since-epoch to (year, month, day), Howard Hinnant's algorithm.
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097); // [0, 146096]
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32;
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn civil_dates_known_points() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1)); // 2024-01-01
+        assert_eq!(civil_from_days(20_672), (2026, 8, 7)); // 2026-08-07
+        assert_eq!(civil_from_days(-1), (1969, 12, 31));
+    }
+
+    #[test]
+    fn capture_is_well_formed() {
+        let e = capture_env(Some("2026-08-07"));
+        assert_eq!(e.date, "2026-08-07");
+        assert!(e.cpu_count >= 1);
+        assert!(e.build_profile == "debug" || e.build_profile == "release");
+        assert!(e.os.contains('/'));
+        assert!(!e.git_rev.is_empty());
+    }
+
+    #[test]
+    fn date_override_beats_clock() {
+        assert_eq!(capture_env(Some("1999-12-31")).date, "1999-12-31");
+        // no override: a plausible YYYY-MM-DD from the clock (or BENCH_DATE)
+        let d = capture_env(None).date;
+        assert_eq!(d.len(), 10, "date {d:?}");
+        assert_eq!(d.as_bytes()[4], b'-');
+    }
+}

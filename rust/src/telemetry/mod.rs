@@ -1,0 +1,464 @@
+//! Machine-readable performance telemetry.
+//!
+//! The paper's headline claim (17 PetaOps sustained MTTKRP, §V.B) and
+//! every derived perf number used to live only in bench printouts and one
+//! regression pin.  This module turns them into *versioned data*: each
+//! bench area emits a [`BenchReport`] — environment metadata plus a flat
+//! list of named [`BenchRecord`] metrics — serialized as JSON to
+//! `BENCH_<area>.json` at the repo root, committed as the baseline, and
+//! diffed by CI against a fresh measurement on every push.
+//!
+//! Components (all std-only, no external crates):
+//!
+//! * [`json`] — a hand-rolled JSON value model, writer, and parser
+//!   (finite numbers only; unknown fields tolerated on decode so old
+//!   binaries read newer baselines).
+//! * [`BenchReport`] / [`BenchRecord`] — the data model.  Every record
+//!   carries its improvement direction ([`Direction`]), a relative
+//!   tolerance for the CI diff, a [`MetricKind`] separating
+//!   bit-reproducible cycle/energy metrics from wall-clock measurements
+//!   (which never gate), and the sample count `n` it was measured over.
+//! * [`env`] — environment capture: git revision, CPU count, build
+//!   profile, date (CI passes `BENCH_DATE`; otherwise derived from the
+//!   system clock), OS/arch.
+//! * [`diff`] — tolerance-aware classification of every metric as
+//!   improved / unchanged / regressed (plus added / removed / info), the
+//!   CI gate.
+//! * [`suite`] — the cheap deterministic measurement suite behind the
+//!   `psram-imc bench-report` CLI subcommand: reduced-size versions of
+//!   the headline, hot-loop, coordinator-scaling, and workload benches,
+//!   each emitting measured cycle censuses *alongside* the
+//!   [`crate::perfmodel::PerfModel::predict_plan`] predicted envelope.
+//!
+//! Reproducibility contract: every [`MetricKind::Deterministic`] record
+//! is a pure function of the code and the seeded PRNG streams — cycle
+//! counts, MAC censuses, utilizations, predicted ops, analytic energy.
+//! Two back-to-back suite runs produce identical values (pinned by
+//! `tests/telemetry.rs`), which is what makes a committed baseline
+//! diffable in CI at all.  Wall-clock records ride along as
+//! [`MetricKind::WallClock`] and are reported but never gate.
+
+pub mod diff;
+pub mod env;
+pub mod json;
+pub mod suite;
+
+pub use diff::{diff, DiffEntry, DiffStatus, ReportDiff};
+pub use env::capture_env;
+
+use crate::util::error::{Error, Result};
+use json::Json;
+
+/// Schema version stamped into every report; bumped on breaking layout
+/// changes (parsers tolerate unknown fields, so additive changes don't
+/// bump it).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// Which direction of change is an improvement for a metric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    /// Larger is better (throughput, utilization).
+    Higher,
+    /// Smaller is better (energy, runtime).
+    Lower,
+    /// The value is pinned: *any* drift beyond tolerance is a regression
+    /// (cycle censuses, image counts — predicted == measured invariants).
+    Exact,
+}
+
+impl Direction {
+    fn as_str(self) -> &'static str {
+        match self {
+            Direction::Higher => "higher",
+            Direction::Lower => "lower",
+            Direction::Exact => "exact",
+        }
+    }
+
+    fn from_str(s: &str) -> Option<Direction> {
+        match s {
+            "higher" => Some(Direction::Higher),
+            "lower" => Some(Direction::Lower),
+            "exact" => Some(Direction::Exact),
+            _ => None,
+        }
+    }
+}
+
+/// Whether a metric is bit-reproducible or a wall-clock measurement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    /// A pure function of code + seeds (cycle counts, predicted ops,
+    /// analytic energy): gates the CI diff.
+    Deterministic,
+    /// Host wall-clock time or derived throughput: recorded for the
+    /// trajectory, never gates.
+    WallClock,
+}
+
+impl MetricKind {
+    fn as_str(self) -> &'static str {
+        match self {
+            MetricKind::Deterministic => "deterministic",
+            MetricKind::WallClock => "wall_clock",
+        }
+    }
+
+    fn from_str(s: &str) -> Option<MetricKind> {
+        match s {
+            "deterministic" => Some(MetricKind::Deterministic),
+            "wall_clock" => Some(MetricKind::WallClock),
+            _ => None,
+        }
+    }
+}
+
+/// One named metric in a report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    /// Dotted metric path, e.g. `headline.sustained_ops` or
+    /// `coordinator.shards4.measured_utilization`.
+    pub name: String,
+    /// The measured or predicted value (finite; the JSON writer rejects
+    /// NaN/inf).
+    pub value: f64,
+    /// Unit label (`ops/s`, `cycles`, `J`, `ratio`, `s`, ...).
+    pub unit: String,
+    /// Which direction of change is an improvement.
+    pub better: Direction,
+    /// Deterministic (gating) vs wall-clock (informational).
+    pub kind: MetricKind,
+    /// Relative tolerance for the baseline diff: changes with
+    /// `|Δ|/|baseline| <= rel_tol` are classified unchanged.
+    pub rel_tol: f64,
+    /// Sample count the value was measured over (1 for single-shot
+    /// sections and model outputs; the timing helpers record their
+    /// repetition count here).
+    pub n: u64,
+}
+
+impl BenchRecord {
+    /// A pinned deterministic record (`Direction::Exact`, zero tolerance,
+    /// `n = 1`) — the right default for cycle/image/MAC censuses.
+    pub fn new(name: impl Into<String>, value: f64, unit: impl Into<String>) -> Self {
+        BenchRecord {
+            name: name.into(),
+            value,
+            unit: unit.into(),
+            better: Direction::Exact,
+            kind: MetricKind::Deterministic,
+            rel_tol: 0.0,
+            n: 1,
+        }
+    }
+
+    /// Set the improvement direction.
+    pub fn better(mut self, d: Direction) -> Self {
+        self.better = d;
+        self
+    }
+
+    /// Set the relative tolerance used by [`diff`].
+    pub fn tol(mut self, rel_tol: f64) -> Self {
+        self.rel_tol = rel_tol;
+        self
+    }
+
+    /// Mark as a wall-clock (non-gating) metric.
+    pub fn wall_clock(mut self) -> Self {
+        self.kind = MetricKind::WallClock;
+        self
+    }
+
+    /// Set the sample count.
+    pub fn samples(mut self, n: u64) -> Self {
+        self.n = n;
+        self
+    }
+}
+
+/// Environment metadata stamped into every report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchEnv {
+    /// `git rev-parse --short=12 HEAD` at generation time (`unknown` when
+    /// git is unavailable) — the provenance of the committed numbers.
+    pub git_rev: String,
+    /// Logical CPUs visible to the generating process.
+    pub cpu_count: u64,
+    /// `debug` or `release`.
+    pub build_profile: String,
+    /// Generation date `YYYY-MM-DD` (UTC): `BENCH_DATE`/`--date` when
+    /// passed in by CI, otherwise derived from the system clock.
+    pub date: String,
+    /// `std::env::consts::OS` / `ARCH` of the generating host.
+    pub os: String,
+}
+
+impl BenchEnv {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("git_rev".into(), Json::Str(self.git_rev.clone())),
+            ("cpu_count".into(), Json::Num(self.cpu_count as f64)),
+            ("build_profile".into(), Json::Str(self.build_profile.clone())),
+            ("date".into(), Json::Str(self.date.clone())),
+            ("os".into(), Json::Str(self.os.clone())),
+        ])
+    }
+
+    fn from_json(v: &Json) -> BenchEnv {
+        let s = |key: &str| {
+            v.get(key)
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string()
+        };
+        BenchEnv {
+            git_rev: s("git_rev"),
+            cpu_count: v.get("cpu_count").and_then(Json::as_num).unwrap_or(0.0) as u64,
+            build_profile: s("build_profile"),
+            date: s("date"),
+            os: s("os"),
+        }
+    }
+}
+
+/// A full telemetry report: one bench area's metrics plus provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchReport {
+    /// Schema version (see [`SCHEMA_VERSION`]).
+    pub schema: u64,
+    /// The bench area (`headline`, `engine`, `coordinator`, `workloads`,
+    /// or a bench binary's own name).
+    pub suite: String,
+    /// Environment the numbers were generated in.
+    pub env: BenchEnv,
+    /// The metrics, in emission order.
+    pub records: Vec<BenchRecord>,
+}
+
+impl BenchReport {
+    /// An empty report for `suite` in `env`.
+    pub fn new(suite: impl Into<String>, env: BenchEnv) -> Self {
+        BenchReport {
+            schema: SCHEMA_VERSION,
+            suite: suite.into(),
+            env,
+            records: Vec::new(),
+        }
+    }
+
+    /// Append a record.  Duplicate names are rejected — the diff matches
+    /// by name, so a duplicate would silently shadow its twin.
+    pub fn push(&mut self, rec: BenchRecord) -> Result<()> {
+        if !rec.value.is_finite() {
+            return Err(Error::telemetry(format!(
+                "record {:?} has non-finite value {}",
+                rec.name, rec.value
+            )));
+        }
+        if self.get(&rec.name).is_some() {
+            return Err(Error::telemetry(format!(
+                "duplicate record name {:?} in suite {:?}",
+                rec.name, self.suite
+            )));
+        }
+        self.records.push(rec);
+        Ok(())
+    }
+
+    /// Look up a record by name.
+    pub fn get(&self, name: &str) -> Option<&BenchRecord> {
+        self.records.iter().find(|r| r.name == name)
+    }
+
+    /// Look up a record's value by name.
+    pub fn value(&self, name: &str) -> Option<f64> {
+        self.get(name).map(|r| r.value)
+    }
+
+    /// Serialize to pretty JSON.  Fails if any value is non-finite (a
+    /// report with NaN/inf must never reach disk).
+    pub fn to_json(&self) -> Result<String> {
+        let records = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::Obj(vec![
+                    ("name".into(), Json::Str(r.name.clone())),
+                    ("value".into(), Json::Num(r.value)),
+                    ("unit".into(), Json::Str(r.unit.clone())),
+                    ("better".into(), Json::Str(r.better.as_str().into())),
+                    ("kind".into(), Json::Str(r.kind.as_str().into())),
+                    ("rel_tol".into(), Json::Num(r.rel_tol)),
+                    ("n".into(), Json::Num(r.n as f64)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("schema".into(), Json::Num(self.schema as f64)),
+            ("suite".into(), Json::Str(self.suite.clone())),
+            ("env".into(), self.env.to_json()),
+            ("records".into(), Json::Arr(records)),
+        ])
+        .to_string_pretty()
+    }
+
+    /// Parse a report from JSON text.
+    ///
+    /// Unknown fields — at the top level, inside `env`, and inside each
+    /// record — are ignored, so a binary at schema N reads baselines
+    /// written by a later additive schema.  Missing optional fields fall
+    /// back to conservative defaults (`Exact` direction, zero tolerance,
+    /// deterministic, `n = 1`); `name` and `value` are required.
+    pub fn from_json(text: &str) -> Result<BenchReport> {
+        let v = Json::parse(text)?;
+        let suite = v
+            .get("suite")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        let schema =
+            v.get("schema").and_then(Json::as_num).unwrap_or(SCHEMA_VERSION as f64)
+                as u64;
+        let env = v
+            .get("env")
+            .map(BenchEnv::from_json)
+            .unwrap_or_else(|| BenchEnv::from_json(&Json::Obj(vec![])));
+        let mut report = BenchReport { schema, suite, env, records: Vec::new() };
+        let records = v
+            .get("records")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::telemetry("report has no 'records' array"))?;
+        for (i, r) in records.iter().enumerate() {
+            let name = r
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| {
+                    Error::telemetry(format!("record {i} has no 'name'"))
+                })?
+                .to_string();
+            let value = r.get("value").and_then(Json::as_num).ok_or_else(|| {
+                Error::telemetry(format!("record {name:?} has no numeric 'value'"))
+            })?;
+            let rec = BenchRecord {
+                name,
+                value,
+                unit: r
+                    .get("unit")
+                    .and_then(Json::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                better: r
+                    .get("better")
+                    .and_then(Json::as_str)
+                    .and_then(Direction::from_str)
+                    .unwrap_or(Direction::Exact),
+                kind: r
+                    .get("kind")
+                    .and_then(Json::as_str)
+                    .and_then(MetricKind::from_str)
+                    .unwrap_or(MetricKind::Deterministic),
+                rel_tol: r.get("rel_tol").and_then(Json::as_num).unwrap_or(0.0),
+                n: r.get("n").and_then(Json::as_num).unwrap_or(1.0) as u64,
+            };
+            report.push(rec)?;
+        }
+        Ok(report)
+    }
+
+    /// Write the report to `path` as pretty JSON.
+    pub fn write_file(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json()?)?;
+        Ok(())
+    }
+
+    /// Read a report from `path`.
+    pub fn read_file(path: &std::path::Path) -> Result<BenchReport> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::telemetry(format!("cannot read {}: {e}", path.display()))
+        })?;
+        Self::from_json(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env() -> BenchEnv {
+        BenchEnv {
+            git_rev: "abc123def456".into(),
+            cpu_count: 8,
+            build_profile: "release".into(),
+            date: "2026-08-07".into(),
+            os: "linux/x86_64".into(),
+        }
+    }
+
+    #[test]
+    fn report_roundtrips() {
+        let mut r = BenchReport::new("headline", env());
+        r.push(BenchRecord::new("headline.peak_ops", 17.039e15, "ops/s")
+            .better(Direction::Higher)
+            .tol(1e-6))
+            .unwrap();
+        r.push(BenchRecord::new("headline.images", 64.0, "images")).unwrap();
+        r.push(
+            BenchRecord::new("headline.wall_s", 0.0123, "s").wall_clock().samples(5),
+        )
+        .unwrap();
+        let text = r.to_json().unwrap();
+        assert_eq!(BenchReport::from_json(&text).unwrap(), r);
+    }
+
+    #[test]
+    fn non_finite_records_rejected() {
+        let mut r = BenchReport::new("x", env());
+        assert!(r.push(BenchRecord::new("nan", f64::NAN, "")).is_err());
+        assert!(r.push(BenchRecord::new("inf", f64::INFINITY, "")).is_err());
+        assert!(r.records.is_empty());
+    }
+
+    #[test]
+    fn duplicate_names_rejected() {
+        let mut r = BenchReport::new("x", env());
+        r.push(BenchRecord::new("m", 1.0, "")).unwrap();
+        assert!(r.push(BenchRecord::new("m", 2.0, "")).is_err());
+    }
+
+    #[test]
+    fn unknown_fields_tolerated() {
+        let text = r#"{
+          "schema": 1,
+          "suite": "headline",
+          "novel_top_level": [1, 2, 3],
+          "env": {"git_rev": "abc", "future": true},
+          "records": [
+            {"name": "m", "value": 2.5, "unit": "x", "future_field": "yes"}
+          ]
+        }"#;
+        let r = BenchReport::from_json(text).unwrap();
+        assert_eq!(r.suite, "headline");
+        assert_eq!(r.env.git_rev, "abc");
+        assert_eq!(r.value("m"), Some(2.5));
+        // conservative defaults for missing optional fields
+        let rec = r.get("m").unwrap();
+        assert_eq!(rec.better, Direction::Exact);
+        assert_eq!(rec.kind, MetricKind::Deterministic);
+        assert_eq!(rec.rel_tol, 0.0);
+        assert_eq!(rec.n, 1);
+    }
+
+    #[test]
+    fn missing_required_fields_rejected() {
+        assert!(BenchReport::from_json("{\"suite\": \"x\"}").is_err());
+        assert!(BenchReport::from_json(
+            "{\"records\": [{\"value\": 1.0}]}"
+        )
+        .is_err());
+        assert!(BenchReport::from_json(
+            "{\"records\": [{\"name\": \"m\"}]}"
+        )
+        .is_err());
+    }
+}

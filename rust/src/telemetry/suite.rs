@@ -1,0 +1,441 @@
+//! The cheap telemetry suite behind `psram-imc bench-report`: reduced-size
+//! versions of the headline, engine hot-loop, coordinator-scaling, and
+//! workload (sparse + Tucker) benches, each emitting a [`BenchReport`]
+//! whose deterministic records are a pure function of the code and the
+//! fixed PRNG seeds.
+//!
+//! Every area pairs *measured* cycle censuses (from actually executing
+//! plans on the functional simulator) with the *predicted* envelope from
+//! [`PerfModel::predict`] / [`PerfModel::predict_plan`] — the
+//! sustained-vs-predicted artifact the paper (and the follow-on
+//! system-level modeling work) treats as primary.  Wall-clock timings ride
+//! along as [`MetricKind::WallClock`](super::MetricKind) records and never
+//! gate.
+//!
+//! Workload sizes are deliberately small (the whole suite runs in seconds
+//! in release mode — the CI job budget is minutes) but non-degenerate:
+//! every area exercises multiple contraction blocks, rank blocks, and
+//! partial lane batches, so the cycle censuses cover the same tiling
+//! arithmetic the full benches do.
+
+use super::{BenchEnv, BenchRecord, BenchReport, Direction};
+use crate::coordinator::{Coordinator, CoordinatorConfig};
+use crate::energy::EnergyModel;
+use crate::mttkrp::pipeline::{CpuTileExecutor, PsramPipeline};
+use crate::mttkrp::plan::{
+    execute_plan, DensePlanner, SparseSlicePlanner, TilePlan, TtmPlanner,
+};
+use crate::mttkrp::MttkrpStats;
+use crate::perfmodel::{headline, PerfModel, Workload};
+use crate::session::{Engine, PsramSession};
+use crate::tensor::{CooTensor, DenseTensor, Matrix};
+use crate::tucker::{tucker_reconstruct, TuckerConfig, TuckerHooi};
+use crate::util::error::{Error, Result};
+use crate::util::prng::Prng;
+use std::time::Instant;
+
+/// The four bench areas, in baseline-file order.
+pub const AREAS: [&str; 4] = ["headline", "engine", "coordinator", "workloads"];
+
+/// Relative tolerance for ratio metrics (utilization, padding): exact up
+/// to f64 formatting noise.
+const TOL_RATIO: f64 = 1e-9;
+/// Relative tolerance for model throughput/energy metrics: pure f64
+/// arithmetic, allowed a hair of slack for cross-platform rounding.
+const TOL_MODEL: f64 = 1e-6;
+/// Relative tolerance for decomposition fits.  The Gaussian seed data
+/// goes through platform `ln`/`sin_cos` (not correctly-rounded, so the
+/// synthetic tensor itself shifts at f32 noise scale across hosts) and
+/// the f32 HOOI pipeline on top; the gate is "the fit stays ~1", not a
+/// bit pattern.
+const TOL_FIT: f64 = 1e-3;
+
+/// Baseline file name for an area: `BENCH_<area>.json`.
+pub fn file_name(area: &str) -> String {
+    format!("BENCH_{area}.json")
+}
+
+/// Run one area's cheap suite.  Unknown areas are an error (the CLI
+/// surfaces [`AREAS`]).
+pub fn run_area(area: &str, env: &BenchEnv) -> Result<BenchReport> {
+    let mut report = BenchReport::new(area, env.clone());
+    match area {
+        "headline" => headline_area(&mut report)?,
+        "engine" => engine_area(&mut report)?,
+        "coordinator" => coordinator_area(&mut report)?,
+        "workloads" => workloads_area(&mut report)?,
+        other => {
+            return Err(Error::telemetry(format!(
+                "unknown bench area {other:?} (areas: {})",
+                AREAS.join(", ")
+            )))
+        }
+    }
+    Ok(report)
+}
+
+/// Run every area (the default `bench-report` scope).
+pub fn run_all(env: &BenchEnv) -> Result<Vec<BenchReport>> {
+    AREAS.iter().map(|a| run_area(a, env)).collect()
+}
+
+/// Median wall seconds of `reps` runs of `f` (one unmeasured warmup).
+fn time_median<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    f();
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+fn count(name: &str, v: u64, unit: &str) -> BenchRecord {
+    BenchRecord::new(name, v as f64, unit)
+}
+
+fn ratio(name: &str, v: f64) -> BenchRecord {
+    BenchRecord::new(name, v, "ratio").tol(TOL_RATIO)
+}
+
+fn wall(name: &str, secs: f64, n: u64) -> BenchRecord {
+    BenchRecord::new(name, secs, "s")
+        .better(Direction::Lower)
+        .wall_clock()
+        .samples(n)
+}
+
+/// §V.B headline: the model's 17.04-PetaOps peak + near-peak sustained
+/// point, the predicted == measured cycle census on a reuse-heavy scaled
+/// workload, and the analytic energy of the paper workload.
+fn headline_area(report: &mut BenchReport) -> Result<()> {
+    let (peak, sustained, util) = headline()?;
+    report.push(
+        BenchRecord::new("headline.peak_ops", peak, "ops/s")
+            .better(Direction::Higher)
+            .tol(TOL_MODEL),
+    )?;
+    report.push(
+        BenchRecord::new("headline.sustained_ops", sustained, "ops/s")
+            .better(Direction::Higher)
+            .tol(TOL_MODEL),
+    )?;
+    report.push(ratio("headline.utilization", util))?;
+
+    // Reuse-heavy scaled workload (40 lane batches, 2 contraction blocks,
+    // rank 32): the functional pipeline's measured census must equal the
+    // analytic model's prediction — the pin behind the paper's Fig. 5.
+    let (i, k, r) = (2080usize, 512usize, 32usize);
+    let mut rng = Prng::new(3);
+    let unf = Matrix::randn(i, k, &mut rng);
+    let krp = Matrix::randn(k, r, &mut rng);
+    let mut exec = CpuTileExecutor::paper();
+    let mut pipe = PsramPipeline::new(&mut exec);
+    pipe.mttkrp_unfolded(&unf, &krp)?;
+    let stats = pipe.stats;
+    let est = PerfModel::paper().predict(&Workload {
+        i_rows: i as u64,
+        k_contraction: k as u64,
+        rank: r as u64,
+    })?;
+    report.push(count("headline.scaled.measured_images", stats.images, "images"))?;
+    report.push(count(
+        "headline.scaled.measured_compute_cycles",
+        stats.compute_cycles,
+        "cycles",
+    ))?;
+    report.push(count(
+        "headline.scaled.measured_write_cycles",
+        stats.write_cycles,
+        "cycles",
+    ))?;
+    report.push(count("headline.scaled.predicted_images", est.images, "images"))?;
+    report.push(count(
+        "headline.scaled.predicted_compute_cycles",
+        est.compute_cycles,
+        "cycles",
+    ))?;
+    report.push(count(
+        "headline.scaled.predicted_write_cycles",
+        est.write_cycles,
+        "cycles",
+    ))?;
+    report.push(ratio("headline.scaled.measured_utilization", stats.utilization()))?;
+    report.push(ratio("headline.scaled.predicted_utilization", est.utilization))?;
+
+    // Analytic energy of the paper's 1M-per-mode workload (the simulator
+    // cannot run it; the model predicts the ledger totals).
+    let em = EnergyModel::paper();
+    let paper_est = em.model.predict(&Workload::paper_large())?;
+    let breakdown = em.predict(&paper_est);
+    let useful_ops = 2.0 * Workload::paper_large().useful_macs();
+    report.push(
+        BenchRecord::new("headline.paper_energy_total_j", breakdown.total_j(), "J")
+            .better(Direction::Lower)
+            .tol(TOL_MODEL),
+    )?;
+    report.push(
+        BenchRecord::new(
+            "headline.paper_energy_per_op_j",
+            breakdown.per_op_j(useful_ops),
+            "J/op",
+        )
+        .better(Direction::Lower)
+        .tol(TOL_MODEL),
+    )?;
+
+    // Simulator wall-clock (informational).
+    let reps = 2;
+    let t = time_median(reps, || {
+        let mut e = CpuTileExecutor::paper();
+        let mut p = PsramPipeline::new(&mut e);
+        p.mttkrp_unfolded(&unf, &krp).unwrap();
+    });
+    report.push(wall("headline.scaled.mttkrp_wall_s", t, reps as u64))?;
+    report.push(
+        BenchRecord::new(
+            "headline.scaled.simulated_mac_per_s",
+            stats.useful_macs as f64 / t,
+            "MAC/s",
+        )
+        .better(Direction::Higher)
+        .wall_clock()
+        .samples(reps as u64),
+    )?;
+    Ok(())
+}
+
+/// Push the measured-vs-predicted census of one executed plan under
+/// `prefix.*` (the shared shape of the engine and workload areas).
+fn push_plan_census(
+    report: &mut BenchReport,
+    prefix: &str,
+    plan: &TilePlan,
+    stats: &MttkrpStats,
+) -> Result<()> {
+    let est = PerfModel::paper().predict_plan(plan)?;
+    for (metric, measured, predicted, unit) in [
+        ("images", stats.images, est.images, "images"),
+        ("compute_cycles", stats.compute_cycles, est.compute_cycles, "cycles"),
+        ("write_cycles", stats.write_cycles, est.reconfig_write_cycles, "cycles"),
+        ("useful_macs", stats.useful_macs, est.useful_macs, "MACs"),
+        ("raw_macs", stats.raw_macs, est.raw_macs, "MACs"),
+    ] {
+        report.push(count(&format!("{prefix}.measured_{metric}"), measured, unit))?;
+        report.push(count(&format!("{prefix}.predicted_{metric}"), predicted, unit))?;
+    }
+    report.push(ratio(&format!("{prefix}.measured_utilization"), stats.utilization()))?;
+    report.push(ratio(&format!("{prefix}.predicted_utilization"), est.utilization))?;
+    report.push(ratio(
+        &format!("{prefix}.padding_efficiency"),
+        stats.padding_efficiency(),
+    ))?;
+    report.push(
+        BenchRecord::new(
+            format!("{prefix}.predicted_sustained_ops"),
+            est.sustained_raw_ops,
+            "ops/s",
+        )
+        .better(Direction::Higher)
+        .tol(TOL_MODEL),
+    )?;
+    Ok(())
+}
+
+/// The zero-allocation execution hot loop: one dense plan's steady-state
+/// census plus its wall-clock simulated-MAC rate.
+fn engine_area(report: &mut BenchReport) -> Result<()> {
+    let mut rng = Prng::new(7);
+    // 2 contraction blocks × 2 rank blocks = 4 images, 10 lane batches.
+    let unf = Matrix::randn(520, 512, &mut rng);
+    let krp = Matrix::randn(512, 64, &mut rng);
+    let plan = DensePlanner::new(256, 32, 52).plan_unfolded(&unf, &krp)?;
+    let mut exec = CpuTileExecutor::paper();
+    let mut stats = MttkrpStats::default();
+    execute_plan(&mut exec, &plan, &mut stats)?;
+    push_plan_census(report, "engine.dense", &plan, &stats)?;
+
+    let reps = 3;
+    let t = time_median(reps, || {
+        let mut s = MttkrpStats::default();
+        execute_plan(&mut exec, &plan, &mut s).unwrap();
+    });
+    report.push(wall("engine.dense.execute_wall_s", t, reps as u64))?;
+    report.push(
+        BenchRecord::new(
+            "engine.dense.simulated_raw_mac_per_s",
+            stats.raw_macs as f64 / t,
+            "MAC/s",
+        )
+        .better(Direction::Higher)
+        .wall_clock()
+        .samples(reps as u64),
+    )?;
+    Ok(())
+}
+
+/// Coordinator scaling: one dense plan distributed over 1/2/4 shards —
+/// the pool's measured cycle totals are scheduling-independent, so the
+/// measured utilization must land exactly on `predict_plan`'s.
+fn coordinator_area(report: &mut BenchReport) -> Result<()> {
+    let mut rng = Prng::new(13);
+    // 4 contraction blocks × 2 rank blocks = 8 images over 4 shard keys.
+    let unf = Matrix::randn(520, 1024, &mut rng);
+    let krp = Matrix::randn(1024, 64, &mut rng);
+    let plan = DensePlanner::new(256, 32, 52).plan_unfolded(&unf, &krp)?;
+
+    for shards in [1usize, 2, 4] {
+        let mut model = PerfModel::paper();
+        model.num_arrays = shards;
+        let est = model.predict_plan(&plan)?;
+        let mut pool = Coordinator::spawn(CoordinatorConfig::new(shards), |_| {
+            Ok(CpuTileExecutor::paper())
+        })?;
+        let t0 = Instant::now();
+        pool.execute_plan(&plan)?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        let m = pool.metrics();
+        let snap = m.snapshot();
+        let get = |key: &str| {
+            snap.iter().find(|(k, _)| *k == key).map(|(_, v)| *v).unwrap_or(0)
+        };
+        let p = format!("coordinator.shards{shards}");
+        report.push(count(&format!("{p}.measured_images"), get("images"), "images"))?;
+        report.push(count(
+            &format!("{p}.measured_compute_cycles"),
+            get("compute_cycles"),
+            "cycles",
+        ))?;
+        report.push(count(
+            &format!("{p}.measured_write_cycles"),
+            get("write_cycles"),
+            "cycles",
+        ))?;
+        report.push(ratio(&format!("{p}.measured_utilization"), m.utilization()))?;
+        report.push(ratio(&format!("{p}.predicted_utilization"), est.utilization))?;
+        report.push(count(
+            &format!("{p}.predicted_bottleneck_cycles"),
+            est.bottleneck_cycles,
+            "cycles",
+        ))?;
+        report.push(
+            BenchRecord::new(
+                format!("{p}.predicted_sustained_ops"),
+                est.sustained_raw_ops,
+                "ops/s",
+            )
+            .better(Direction::Higher)
+            .tol(TOL_MODEL),
+        )?;
+        report.push(wall(&format!("{p}.execute_wall_s"), wall_s, 1))?;
+    }
+    Ok(())
+}
+
+/// The workload benches: sparse COO MTTKRP and the Tucker TTM census
+/// (both predicted == measured through `predict_plan`), plus a small
+/// end-to-end HOOI fit on the exact engine.
+fn workloads_area(report: &mut BenchReport) -> Result<()> {
+    let mut rng = Prng::new(17);
+
+    // Sparse: 64×2048×16 at 1% density, rank 32 — slice plans grouped by
+    // stored factor block.
+    let shape = [64usize, 2048, 16];
+    let nnz = (shape.iter().product::<usize>() as f64 * 0.01) as usize;
+    let coo = CooTensor::random(&shape, nnz, &mut rng);
+    let factors: Vec<Matrix> =
+        shape.iter().map(|&d| Matrix::randn(d, 32, &mut rng)).collect();
+    let plan = SparseSlicePlanner::new(256, 32, 52).plan(&coo, &factors, 0)?;
+    report.push(count("workloads.sparse.nnz", coo.nnz() as u64, "nnz"))?;
+    let mut exec = CpuTileExecutor::paper();
+    let mut stats = MttkrpStats::default();
+    execute_plan(&mut exec, &plan, &mut stats)?;
+    push_plan_census(report, "workloads.sparse", &plan, &stats)?;
+    let reps = 2;
+    let t = time_median(reps, || {
+        let mut s = MttkrpStats::default();
+        execute_plan(&mut exec, &plan, &mut s).unwrap();
+    });
+    report.push(wall("workloads.sparse.execute_wall_s", t, reps as u64))?;
+
+    // Tucker TTM: X (512×52×20) ×₀ Uᵀ, rank 32 — 2 contraction blocks ×
+    // 1 rank block, 20 lane batches of streamed tensor columns.
+    let x = DenseTensor::randn(&[512, 52, 20], &mut rng);
+    let u = Matrix::randn(512, 32, &mut rng);
+    let ttm_plan = TtmPlanner::new(256, 32, 52).plan_ttm(&x, &u, 0)?;
+    let mut ttm_stats = MttkrpStats::default();
+    execute_plan(&mut exec, &ttm_plan, &mut ttm_stats)?;
+    push_plan_census(report, "workloads.ttm", &ttm_plan, &ttm_stats)?;
+
+    // End-to-end HOOI on the exact engine: a fixed-seed low-multilinear-
+    // rank reconstruction target, so the ideal fit is exactly 1 and any
+    // real run lands within f32 noise of it.  The sweep count is NOT a
+    // deterministic contract: the early-stop compares successive fits,
+    // and once the fit saturates, that difference is floating-point
+    // noise — so `iters` rides along as an informational record.
+    let ranks = vec![4usize, 4, 4];
+    let core = DenseTensor::randn(&ranks, &mut rng);
+    let truth: Vec<Matrix> = [24usize, 20, 16]
+        .iter()
+        .zip(&ranks)
+        .map(|(&d, &r)| Matrix::randn(d, r, &mut rng))
+        .collect();
+    let x2 = tucker_reconstruct(&core, &truth)?;
+    let hooi = TuckerHooi::new(TuckerConfig {
+        ranks: ranks.clone(),
+        max_iters: 4,
+        tol: 1e-12,
+    });
+    let session = PsramSession::builder().engine(Engine::Exact).build()?;
+    let res = hooi.run(&x2, &session)?;
+    report.push(
+        BenchRecord::new("workloads.hooi.iters", res.iters as f64, "sweeps")
+            .wall_clock(),
+    )?;
+    report.push(
+        BenchRecord::new("workloads.hooi.fit", res.final_fit(), "fit")
+            .better(Direction::Higher)
+            .tol(TOL_FIT),
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::capture_env;
+
+    #[test]
+    fn unknown_area_rejected() {
+        let env = capture_env(Some("2026-08-07"));
+        assert!(run_area("nope", &env).is_err());
+    }
+
+    #[test]
+    fn file_names_match_areas() {
+        assert_eq!(file_name("headline"), "BENCH_headline.json");
+        assert_eq!(AREAS.len(), 4);
+    }
+
+    #[test]
+    fn headline_area_census_is_predicted_exact() {
+        let env = capture_env(Some("2026-08-07"));
+        let r = run_area("headline", &env).unwrap();
+        // the measured pipeline census equals the analytic model's
+        for m in ["images", "compute_cycles", "write_cycles"] {
+            assert_eq!(
+                r.value(&format!("headline.scaled.measured_{m}")),
+                r.value(&format!("headline.scaled.predicted_{m}")),
+                "census metric {m}"
+            );
+        }
+        // the paper pin: 17.04 PetaOps peak, sustained <= peak
+        let peak = r.value("headline.peak_ops").unwrap();
+        let sustained = r.value("headline.sustained_ops").unwrap();
+        assert!((peak / 1e15 - 17.04).abs() < 0.005);
+        assert!(sustained <= peak);
+    }
+}

@@ -30,6 +30,10 @@ pub enum Error {
     /// Numerical failure (non-finite values, singular matrix, ...).
     Numerical(String),
 
+    /// A telemetry report is malformed or failed a baseline check
+    /// (bad JSON, non-finite metric, regression beyond tolerance).
+    Telemetry(String),
+
     /// An underlying I/O failure.
     Io(std::io::Error),
 
@@ -49,6 +53,7 @@ impl fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Numerical(m) => write!(f, "numerical error: {m}"),
+            Error::Telemetry(m) => write!(f, "telemetry error: {m}"),
             Error::Io(e) => write!(f, "{e}"),
             Error::Xla(m) => write!(f, "{m}"),
         }
@@ -89,6 +94,11 @@ impl Error {
     /// Shorthand for a configuration error with formatted context.
     pub fn config(msg: impl Into<String>) -> Self {
         Error::Config(msg.into())
+    }
+
+    /// Shorthand for a telemetry error with formatted context.
+    pub fn telemetry(msg: impl Into<String>) -> Self {
+        Error::Telemetry(msg.into())
     }
 }
 

@@ -4,6 +4,7 @@
 use psram_imc::perfmodel::{
     fig5_frequency, fig5_wavelengths, headline, PerfModel, Workload,
 };
+use psram_imc::telemetry::BenchReport;
 
 /// §V.B: peak = 2 × total_words × wavelengths × clock
 ///             = 2 × 8192 × 52 × 20 GHz ≈ 17.04 PetaOps.
@@ -30,6 +31,32 @@ fn headline_driver_consistent() {
     assert_eq!(peak, PerfModel::paper().peak_ops());
     assert!(sustained <= peak);
     assert!(util > 0.98 && util <= 1.0, "util = {util}");
+}
+
+/// The committed telemetry baseline (`BENCH_headline.json` at the repo
+/// root) carries the same paper numbers the model computes live: the
+/// 17.04-PetaOps pin holds on the *file*, sustained stays below peak, and
+/// the committed values are bit-equal to `PerfModel::paper()` /
+/// `headline()` — a drift in either the model or the baseline fails here
+/// before CI's diff job ever runs.
+#[test]
+fn committed_headline_baseline_matches_live_model() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_headline.json");
+    let report = BenchReport::read_file(&path).unwrap();
+    let peak = report.value("headline.peak_ops").unwrap();
+    let sustained = report.value("headline.sustained_ops").unwrap();
+    assert!(
+        (peak / 1e15 - 17.04).abs() < 0.005,
+        "committed peak = {:.4} PetaOps",
+        peak / 1e15
+    );
+    assert!(sustained <= peak);
+    assert_eq!(peak, PerfModel::paper().peak_ops());
+    let (live_peak, live_sustained, _) = headline().unwrap();
+    assert_eq!(peak, live_peak);
+    assert_eq!(sustained, live_sustained);
 }
 
 /// Sustained performance can never exceed peak, for every configuration

@@ -1,0 +1,264 @@
+//! Integration tests for the telemetry subsystem: JSON round-trip
+//! properties, suite determinism (the property that makes a committed
+//! baseline diffable at all), and the committed `BENCH_*.json` baselines
+//! themselves — a fresh suite run must diff clean against them, and an
+//! injected regression must gate.
+
+use psram_imc::telemetry::json::Json;
+use psram_imc::telemetry::suite::{self, AREAS};
+use psram_imc::telemetry::{
+    capture_env, diff, BenchEnv, BenchRecord, BenchReport, Direction, DiffStatus,
+    MetricKind,
+};
+use psram_imc::util::proptest::{check_with, Config};
+use std::path::Path;
+
+fn test_env() -> BenchEnv {
+    capture_env(Some("2026-08-07"))
+}
+
+/// Repo-root path of a committed baseline file.
+fn baseline_path(area: &str) -> std::path::PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(suite::file_name(area))
+}
+
+// ---------------------------------------------------------------------------
+// Satellite: JSON writer/parser round-trip property.
+// ---------------------------------------------------------------------------
+
+/// Arbitrary reports survive `to_json` → `from_json` unchanged: every
+/// finite value (including subnormals, negative zero, and full-precision
+/// irrationals), every direction/kind/tolerance combination, and string
+/// fields that need escaping (quotes, backslashes, newlines, unicode).
+#[test]
+fn report_roundtrip_property() {
+    check_with(
+        "telemetry report JSON round-trip",
+        Config { cases: 200, max_size: 24, ..Config::default() },
+        |c| {
+            let mut report = BenchReport::new(
+                format!("suite-\"{}\"-\u{3bb}", c.index),
+                test_env(),
+            );
+            let n_records = 1 + c.rng.below(c.size as u64 + 1);
+            for k in 0..n_records {
+                let value = match c.rng.below(6) {
+                    0 => 0.0,
+                    1 => c.rng.below(u64::MAX >> 11) as f64,
+                    2 => -(c.rng.below(1_000_000) as f64),
+                    3 => c.rng.normal() * 1e-300, // subnormal territory
+                    4 => c.rng.uniform(),
+                    _ => {
+                        // random bit patterns cover the whole f64 space;
+                        // keep only the finite ones (the writer rejects
+                        // the rest by design, tested separately)
+                        let v = f64::from_bits(c.rng.next_u64());
+                        if v.is_finite() {
+                            v
+                        } else {
+                            -0.0
+                        }
+                    }
+                };
+                let better = match c.rng.below(3) {
+                    0 => Direction::Higher,
+                    1 => Direction::Lower,
+                    _ => Direction::Exact,
+                };
+                let mut rec = BenchRecord::new(
+                    format!("m{k}.path\\with \"escapes\"\n\tand \u{1f389}"),
+                    value,
+                    ["ops/s", "cycles", "J", "ratio", "", "λ/s"]
+                        [c.rng.below(6) as usize],
+                )
+                .better(better)
+                .tol(c.rng.uniform())
+                .samples(c.rng.below(1000));
+                if c.rng.below(2) == 1 {
+                    rec = rec.wall_clock();
+                }
+                report.push(rec).map_err(|e| e.to_string())?;
+            }
+            let text = report.to_json().map_err(|e| e.to_string())?;
+            let back = BenchReport::from_json(&text).map_err(|e| e.to_string())?;
+            if back != report {
+                return Err(format!("round-trip mismatch:\n{text}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Non-finite values are rejected at every layer: pushing a record, the
+/// JSON writer, and the parser (`NaN` tokens and overflowing literals).
+#[test]
+fn non_finite_rejected_at_every_layer() {
+    let mut r = BenchReport::new("x", test_env());
+    assert!(r.push(BenchRecord::new("a", f64::NAN, "")).is_err());
+    assert!(r.push(BenchRecord::new("a", f64::INFINITY, "")).is_err());
+    assert!(r.push(BenchRecord::new("a", f64::NEG_INFINITY, "")).is_err());
+    assert!(r.records.is_empty());
+
+    assert!(Json::Num(f64::NAN).to_string_pretty().is_err());
+    for bad in ["NaN", "Infinity", "-Infinity", "1e999", "-1e999", "[1e400]"] {
+        assert!(Json::parse(bad).is_err(), "parser accepted {bad:?}");
+    }
+}
+
+/// A baseline written by a future (additive) schema still parses: unknown
+/// fields at every level are ignored and missing optional fields take the
+/// conservative defaults.
+#[test]
+fn future_schema_baselines_still_parse() {
+    let text = r#"{
+      "schema": 2,
+      "suite": "headline",
+      "generator": "vNEXT",
+      "env": {"git_rev": "abc123", "hostname": "ci-7", "cpu_count": 64},
+      "records": [
+        {"name": "headline.peak_ops", "value": 1.704e16, "unit": "ops/s",
+         "better": "higher", "rel_tol": 1e-6, "confidence_interval": [1, 2]},
+        {"name": "future.metric", "value": -3.5}
+      ]
+    }"#;
+    let r = BenchReport::from_json(text).unwrap();
+    assert_eq!(r.schema, 2);
+    assert_eq!(r.env.git_rev, "abc123");
+    assert_eq!(r.env.cpu_count, 64);
+    assert_eq!(r.value("headline.peak_ops"), Some(1.704e16));
+    let fut = r.get("future.metric").unwrap();
+    assert_eq!(fut.better, Direction::Exact);
+    assert_eq!(fut.kind, MetricKind::Deterministic);
+    assert_eq!(fut.rel_tol, 0.0);
+    assert_eq!(fut.n, 1);
+}
+
+// ---------------------------------------------------------------------------
+// Satellite: suite determinism — two back-to-back runs emit identical
+// deterministic metrics (wall-clock records exempt).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn suite_deterministic_metrics_are_run_to_run_identical() {
+    let env = test_env();
+    for area in AREAS {
+        let a = suite::run_area(area, &env).unwrap();
+        let b = suite::run_area(area, &env).unwrap();
+        assert_eq!(
+            a.records.len(),
+            b.records.len(),
+            "area {area}: record count changed between runs"
+        );
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(ra.name, rb.name, "area {area}: record order changed");
+            if ra.kind == MetricKind::Deterministic {
+                assert_eq!(
+                    ra.value.to_bits(),
+                    rb.value.to_bits(),
+                    "area {area}: {} drifted between identical runs \
+                     ({} vs {})",
+                    ra.name,
+                    ra.value,
+                    rb.value
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The committed baselines: every BENCH_*.json parses, carries provenance,
+// and a fresh suite run diffs clean against it — the same gate CI runs.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn committed_baselines_parse_with_provenance() {
+    for area in AREAS {
+        let r = BenchReport::read_file(&baseline_path(area)).unwrap();
+        assert_eq!(r.suite, area);
+        assert_eq!(r.schema, psram_imc::telemetry::SCHEMA_VERSION);
+        assert!(!r.records.is_empty(), "area {area}: empty baseline");
+        assert_ne!(r.env.git_rev, "unknown", "area {area}: no provenance rev");
+        assert_eq!(r.env.build_profile, "release");
+        // committed baselines carry only gating records: wall-clock noise
+        // from a live run classifies as `added` and never gates
+        for rec in &r.records {
+            assert_eq!(
+                rec.kind,
+                MetricKind::Deterministic,
+                "area {area}: wall-clock record {} committed",
+                rec.name
+            );
+        }
+    }
+}
+
+#[test]
+fn fresh_suite_run_diffs_clean_against_committed_baselines() {
+    let env = test_env();
+    for area in AREAS {
+        let baseline = BenchReport::read_file(&baseline_path(area)).unwrap();
+        let current = suite::run_area(area, &env).unwrap();
+        let d = diff(&baseline, &current);
+        assert!(
+            !d.has_regressions(),
+            "area {area} regressed vs committed baseline:\n{}",
+            d.summary(true)
+        );
+        // every committed record is present in a live run (nothing Removed)
+        for e in &d.entries {
+            assert_ne!(
+                e.status,
+                DiffStatus::Removed,
+                "area {area}: committed metric {} missing from a live run",
+                e.name
+            );
+        }
+    }
+}
+
+/// The gate actually gates: injecting a beyond-tolerance regression into a
+/// fresh run (cycle-census drift, throughput loss, energy increase) must
+/// trip `has_regressions`, and re-baselining (diffing the perturbed report
+/// against itself) must clear it.
+#[test]
+fn injected_regressions_trip_the_gate() {
+    let env = test_env();
+    let baseline = BenchReport::read_file(&baseline_path("headline")).unwrap();
+    let fresh = suite::run_area("headline", &env).unwrap();
+
+    let perturb = |name: &str, factor: f64| {
+        let mut bad = fresh.clone();
+        let rec =
+            bad.records.iter_mut().find(|r| r.name == name).unwrap_or_else(|| {
+                panic!("suite no longer emits {name}")
+            });
+        rec.value *= factor;
+        bad
+    };
+
+    // Exact cycle-census pin: any drift regresses, improvements included.
+    for factor in [1.5, 0.5] {
+        let bad = perturb("headline.scaled.measured_compute_cycles", factor);
+        let d = diff(&baseline, &bad);
+        assert!(d.has_regressions(), "census drift x{factor} not gated");
+    }
+    // Higher-is-better throughput: only the drop regresses.
+    assert!(diff(&baseline, &perturb("headline.sustained_ops", 0.9))
+        .has_regressions());
+    assert!(!diff(&baseline, &perturb("headline.sustained_ops", 1.1))
+        .has_regressions());
+    // Lower-is-better energy: only the increase regresses.
+    assert!(diff(&baseline, &perturb("headline.paper_energy_total_j", 1.1))
+        .has_regressions());
+    assert!(!diff(&baseline, &perturb("headline.paper_energy_total_j", 0.9))
+        .has_regressions());
+    // Within-tolerance noise does not gate (1e-6 relative on throughput).
+    assert!(!diff(&baseline, &perturb("headline.sustained_ops", 1.0 - 1e-9))
+        .has_regressions());
+
+    // Re-baselining clears the gate: a report always diffs clean against
+    // itself, perturbed or not.
+    let bad = perturb("headline.peak_ops", 0.5);
+    assert!(!diff(&bad, &bad).has_regressions());
+}
