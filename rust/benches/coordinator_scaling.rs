@@ -132,11 +132,66 @@ fn main() {
             m.images.load(Ordering::Relaxed) as f64,
             "images",
         ));
+        rec.record(
+            BenchRecord::new(
+                format!("shards{shards}.images_per_s"),
+                m.images.load(Ordering::Relaxed) as f64 / t.median,
+                "images/s",
+            )
+            .better(Direction::Higher)
+            .wall_clock()
+            .samples(t.n),
+        );
     }
     println!(
         "\nprediction envelope: {}",
         if envelope_ok { "all shard counts within the model envelope" } else { "MISSED" }
     );
+
+    common::section("COORD: autotuned executors (chunking + intra-shard striping) @ 4 shards");
+    // Same workload, same pool shape — the only delta is per-worker
+    // tuning.  The census (and the f32 result) is bit-identical either
+    // way; the stripe width shares host cores across the 4 shards.
+    {
+        let tuned = psram_imc::tune::auto_tune(256, 32, 52, 4);
+        let t_untuned = rec.timed("mttkrp 4 shards untuned", 1, 3, || {
+            let mut pool = Coordinator::spawn(
+                CoordinatorConfig::new(4),
+                |_| Ok(CpuTileExecutor::paper()),
+            )
+            .unwrap();
+            pool.mttkrp_unfolded(&unf, &krp).unwrap();
+        });
+        let t_tuned = rec.timed(
+            &format!(
+                "mttkrp 4 shards tuned (bc={}, workers={})",
+                tuned.block_cycles, tuned.intra_workers
+            ),
+            1,
+            3,
+            || {
+                let mut pool = Coordinator::spawn(
+                    CoordinatorConfig::new(4),
+                    |_| Ok(CpuTileExecutor::paper().with_tuning(&tuned)),
+                )
+                .unwrap();
+                pool.mttkrp_unfolded(&unf, &krp).unwrap();
+            },
+        );
+        println!(
+            "  -> tuned speedup @ 4 shards: {:.2}x",
+            t_untuned.median / t_tuned.median
+        );
+        rec.record(
+            BenchRecord::new(
+                "tuned.shards4.speedup",
+                t_untuned.median / t_tuned.median,
+                "ratio",
+            )
+            .better(Direction::Higher)
+            .wall_clock(),
+        );
+    }
 
     common::section("COORD: write amortization — images per batch @ 4 shards");
     for &batch in &[1usize, 2, 4] {

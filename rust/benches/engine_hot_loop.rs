@@ -63,6 +63,27 @@ fn main() {
     });
     println!("  -> {:.3e} simulated MAC/s", 8.0 * macs_per_cycle / t.median);
 
+    // Direct blocked-kernel rate (no engine dispatch, no ledger): the
+    // register-tiled i8×i8→i32 inner loop on the full 52×256×32 tile.
+    let image_i32: Vec<i32> = img.iter().map(|&v| v as i32).collect();
+    let mut ker_out = vec![0i32; 52 * 32];
+    let t = rec.timed("quant_matmul_i32_into (kernel only)", 50, 400, || {
+        psram_imc::util::fixed::quant_matmul_i32_into(
+            &u, &image_i32, 52, 256, 32, &mut ker_out,
+        );
+    });
+    println!(
+        "  -> {:.3e} kernel MAC/s ({:.2} GMAC/s)",
+        macs_per_cycle / t.median,
+        macs_per_cycle / t.median / 1e9
+    );
+    rec.record(
+        BenchRecord::new("kernel.gmac_per_s", macs_per_cycle / t.median / 1e9, "GMAC/s")
+            .better(Direction::Higher)
+            .wall_clock()
+            .samples(t.n),
+    );
+
     // ---- 2. dense steady state: warm scratch, cached plan ----
     common::section("ENGINE: dense execute_plan_into steady state (520x2048x64)");
     let unf = Matrix::randn(520, 2048, &mut rng);
@@ -99,6 +120,54 @@ fn main() {
             .better(Direction::Higher)
             .wall_clock()
             .samples(t.n),
+    );
+    let t_untuned = t.median;
+
+    // Autotuned executor: geometry-driven chunking + intra-shard striping.
+    // The census is bit-identical by contract (tests/intra_parallel.rs
+    // pins it), so only the wall-clock rate is recorded.
+    let tuned = psram_imc::tune::auto_tune(256, 32, 52, 1);
+    let mut texec = CpuTileExecutor::paper().with_tuning(&tuned);
+    let mut tscratch = PlanScratch::default();
+    {
+        let mut s = MttkrpStats::default();
+        execute_plan_into(&mut texec, &dense_plan, &mut tscratch, &mut s, &mut dense_out)
+            .unwrap(); // warm-up: grows the tuned-size scratch
+    }
+    let t = rec.timed(
+        &format!(
+            "execute_plan_into dense tuned (bc={}, workers={})",
+            tuned.block_cycles, tuned.intra_workers
+        ),
+        1,
+        5,
+        || {
+            let mut s = MttkrpStats::default();
+            execute_plan_into(
+                &mut texec,
+                &dense_plan,
+                &mut tscratch,
+                &mut s,
+                &mut dense_out,
+            )
+            .unwrap();
+        },
+    );
+    println!(
+        "  -> {:.3e} simulated raw MAC/s tuned ({:.2}x vs untuned)",
+        raw_macs / t.median,
+        t_untuned / t.median
+    );
+    rec.record(
+        BenchRecord::new("dense.tuned_raw_mac_per_s", raw_macs / t.median, "MAC/s")
+            .better(Direction::Higher)
+            .wall_clock()
+            .samples(t.n),
+    );
+    rec.record(
+        BenchRecord::new("dense.tuned_speedup", t_untuned / t.median, "ratio")
+            .better(Direction::Higher)
+            .wall_clock(),
     );
 
     // ---- 3. sparse steady state ----

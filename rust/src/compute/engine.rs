@@ -263,9 +263,11 @@ impl ComputeEngine {
 
     /// Bit-exact integer hot path: `out = (u - 128) @ packed`.
     ///
-    /// Written k-outer so the inner loop is a contiguous AXPY over the
-    /// output row — autovectorizes well and skips zero inputs (which CP1's
-    /// interleaved schedule produces in abundance).
+    /// Delegates to the shared register-tiled kernel
+    /// [`quant_matmul_i32_into`](crate::util::fixed::quant_matmul_i32_into)
+    /// — the same blocked AXPY the digital executor runs, so the
+    /// analog-exact path and the CPU tile path can never diverge and both
+    /// pick up kernel speedups together.
     fn compute_exact(
         &self,
         packed: &[i32],
@@ -275,21 +277,7 @@ impl ComputeEngine {
         wpr: usize,
         out: &mut [i32],
     ) {
-        out.fill(0);
-        for m in 0..lanes {
-            let urow = &u[m * rows..(m + 1) * rows];
-            let orow = &mut out[m * wpr..(m + 1) * wpr];
-            for (k, &code) in urow.iter().enumerate() {
-                let x = code as i32 - OFFSET;
-                if x == 0 {
-                    continue;
-                }
-                let wrow = &packed[k * wpr..(k + 1) * wpr];
-                for (o, &w) in orow.iter_mut().zip(wrow) {
-                    *o += x * w;
-                }
-            }
-        }
+        crate::util::fixed::quant_matmul_i32_into(u, packed, lanes, rows, wpr, out);
     }
 
     /// Device-faithful path: optical per-plane gating, photocurrent

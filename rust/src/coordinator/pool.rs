@@ -24,7 +24,14 @@
 //!   [`run_image_into`]/[`fold_partial`] contract as
 //!   [`crate::mttkrp::plan::execute_plan`], so the f32 result is
 //!   deterministic and bit-identical to the single-array pipelines,
-//!   independent of worker count, batching, and stealing.
+//!   independent of worker count, batching, and stealing;
+//! * executors are free to parallelize *inside* a shard: `run_image_into`
+//!   streams in chunks of the executor's own
+//!   [`TileExecutor::block_cycles`], and a tuned
+//!   [`crate::mttkrp::pipeline::CpuTileExecutor`] may stripe each chunk
+//!   over an intra-shard [`crate::mttkrp::IntraPool`] — both are
+//!   bit-invisible here (the contract guarantees results and the cycle
+//!   census are independent of chunking and stripe width).
 
 use super::job::{BatchResult, PlanBatch, PlanPartial};
 use super::metrics::Metrics;

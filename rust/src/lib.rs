@@ -47,6 +47,11 @@
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) for the digital baseline and cross-checks
 //!   (behind the `xla` feature; a graceful stub otherwise).
+//! * [`tune`] — the geometry-driven autotuner: derives the digital
+//!   executor's streaming chunk size and intra-shard worker width from
+//!   the tile geometry plus a one-shot microbenchmark at session build
+//!   time (cached per geometry), replacing fixed constants; the
+//!   deterministic cycle census is invariant under any tuned chunking.
 //! * [`telemetry`] — machine-readable perf telemetry: `BenchReport`
 //!   records (hand-rolled JSON, std-only), environment capture, a
 //!   tolerance-aware baseline differ, and the cheap deterministic suite
@@ -76,6 +81,7 @@ pub mod session;
 pub mod telemetry;
 pub mod tensor;
 pub mod tucker;
+pub mod tune;
 pub mod util;
 
 pub use util::error::{Error, Result};

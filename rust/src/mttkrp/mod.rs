@@ -19,6 +19,11 @@
 //! * [`cache`] — per-mode plan caches for CP-ALS (and per-chain-slot
 //!   caches for Tucker/HOOI): iterations 2..N skip unfolding, slice
 //!   mapping, and stream quantization entirely.
+//! * [`par`] — intra-shard data parallelism: a persistent worker pool
+//!   that stripes one compute block's cycles over a few host threads
+//!   with disjoint output windows, bit-identical to sequential execution
+//!   for any width (the coordinator parallelizes *across* shards; this
+//!   parallelizes *inside* one).
 //! * [`pipeline`] — the high-utilisation tiled schedule used for full
 //!   MTTKRPs: the Khatri-Rao block (the *reused* operand) is stored as the
 //!   array image and tensor rows stream over wavelength lanes, so one
@@ -34,12 +39,14 @@
 
 pub mod cache;
 pub mod mapping;
+pub mod par;
 pub mod pipeline;
 pub mod plan;
 pub mod reference;
 pub mod sparse_pipeline;
 
 pub use cache::{DensePlanCache, SparsePlanCache, TtmPlanCache};
+pub use par::IntraPool;
 pub use pipeline::{
     quantize_krp_image, quantize_krp_image_into, quantize_lane_batch,
     quantize_lane_batch_into, CpuTileExecutor, MttkrpStats, PsramPipeline,

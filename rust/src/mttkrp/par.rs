@@ -1,0 +1,353 @@
+//! Intra-shard data parallelism: a persistent worker pool that splits one
+//! compute block's cycles across a small set of host threads.
+//!
+//! The coordinator parallelizes *across* shards (one executor per shard);
+//! this module parallelizes *inside* a shard.  A block of stream cycles
+//! (the `compute_block_into` contract) is striped over `width` workers —
+//! worker `w` computes the cycles with index `i % width == w` — and each
+//! cycle writes a disjoint window of the shared output tile, so no two
+//! workers ever touch the same bytes.  Every cycle runs the exact
+//! [`quant_matmul_i32_into`] integer kernel the sequential path runs, and
+//! i32 arithmetic is associative-exact, so the result is **bit-identical
+//! to sequential execution for any worker count** (pinned by
+//! `tests/intra_parallel.rs`).  The f32 dequantize/accumulate stage in
+//! `run_image_into` stays sequential in stream order — that is where
+//! reordering *would* change bits (sparse plans can target one output row
+//! from many streams), so it is deliberately not parallelized.
+//!
+//! The pool is built once (threads spawned at session build time) and
+//! reused for every block: dispatch is a mutex + condvar epoch handoff
+//! with no per-block channel traffic or heap allocation, keeping the
+//! steady-state zero-allocation census of `tests/zero_alloc.rs` intact.
+
+use crate::util::error::{Error, Result};
+use crate::util::fixed::quant_matmul_i32_into;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+/// One block dispatch, shipped to the workers as raw windows.  The caller
+/// blocks inside [`IntraPool::compute_block`] until every worker is done,
+/// so the pointed-to buffers strictly outlive the job (the epoch handoff
+/// makes stale re-reads impossible).
+#[derive(Clone, Copy)]
+struct BlockJob {
+    codes: *const u8,
+    image: *const i32,
+    image_len: usize,
+    out: *mut i32,
+    lane_counts: *const usize,
+    n_cycles: usize,
+    rows: usize,
+    wpr: usize,
+}
+
+// Safety: the raw windows are only dereferenced between job publication
+// and the caller's completion wait, during which the caller holds the
+// originating borrows (`&[u8]`, `&[i32]`, `&mut [i32]`) alive; workers
+// write disjoint `out` windows (one cycle belongs to exactly one worker).
+unsafe impl Send for BlockJob {}
+
+/// State shared between the caller and the pool threads.
+struct Cell {
+    /// Monotonic job counter: a worker only picks up a job whose epoch it
+    /// has not seen, so one published job runs exactly once per worker.
+    epoch: u64,
+    job: Option<BlockJob>,
+    /// Pool threads still working on the current epoch.
+    remaining: usize,
+    /// A worker stripe panicked (the block result must not be trusted).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    cell: Mutex<Cell>,
+    /// Signalled when a new epoch is published (or on shutdown).
+    work: Condvar,
+    /// Signalled when `remaining` reaches zero.
+    done: Condvar,
+}
+
+impl Shared {
+    /// Lock the cell, recovering from poisoning (a panicked worker stripe
+    /// is already reported through `Cell::panicked` — the mutex state
+    /// itself is always consistent because critical sections never panic).
+    fn lock(&self) -> MutexGuard<'_, Cell> {
+        self.cell.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// A persistent intra-shard worker pool of `width` workers: `width - 1`
+/// spawned threads plus the calling thread, which always computes stripe 0
+/// (so `width == 1` degrades to plain sequential execution with no
+/// threads at all).
+///
+/// ```
+/// use psram_imc::mttkrp::par::IntraPool;
+/// use psram_imc::util::fixed::{encode_offset, quant_matmul_i32_into};
+/// let pool = IntraPool::new(2);
+/// let (rows, wpr) = (4usize, 3usize);
+/// let image: Vec<i32> = (0..rows * wpr).map(|v| v as i32 - 5).collect();
+/// let codes = vec![encode_offset(2); 3 * rows]; // 3 one-lane cycles
+/// let lane_counts = [1usize, 1, 1];
+/// let mut par = vec![0i32; 3 * wpr];
+/// pool.compute_block(&codes, &image, &lane_counts, rows, wpr, &mut par)?;
+/// let mut seq = vec![0i32; 3 * wpr];
+/// quant_matmul_i32_into(&codes, &image, 3, rows, wpr, &mut seq);
+/// assert_eq!(par, seq); // bit-identical to sequential
+/// # Ok::<(), psram_imc::Error>(())
+/// ```
+pub struct IntraPool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+    width: usize,
+}
+
+impl std::fmt::Debug for IntraPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("IntraPool").field("width", &self.width).finish()
+    }
+}
+
+impl IntraPool {
+    /// Spawn a pool of `width` workers (`width.max(1)`; the calling thread
+    /// is one of them, so `width - 1` threads are spawned).
+    pub fn new(width: usize) -> Self {
+        let width = width.max(1);
+        let shared = Arc::new(Shared {
+            cell: Mutex::new(Cell {
+                epoch: 0,
+                job: None,
+                remaining: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let handles = (1..width)
+            .map(|worker| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared, worker, width))
+            })
+            .collect();
+        IntraPool { shared, handles, width }
+    }
+
+    /// Worker count (including the calling thread).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Compute one block of cycles against `image`, bit-identical to the
+    /// sequential walk: cycle `i` reads `lane_counts[i] * rows` codes and
+    /// writes `lane_counts[i] * wpr` outputs, both windows advancing
+    /// contiguously.  The caller must have validated the window bounds
+    /// (`Σ lanes*rows <= u.len()`, `Σ lanes*wpr <= out.len()`); this is
+    /// checked again defensively.  Blocks until every stripe is done.
+    pub fn compute_block(
+        &self,
+        u: &[u8],
+        image: &[i32],
+        lane_counts: &[usize],
+        rows: usize,
+        wpr: usize,
+        out: &mut [i32],
+    ) -> Result<()> {
+        let total: usize = lane_counts.iter().sum();
+        if total * rows > u.len() || total * wpr > out.len() {
+            return Err(Error::shape(format!(
+                "compute block needs {} codes / {} outputs, got {} / {}",
+                total * rows,
+                total * wpr,
+                u.len(),
+                out.len()
+            )));
+        }
+        let job = BlockJob {
+            codes: u.as_ptr(),
+            image: image.as_ptr(),
+            image_len: image.len(),
+            out: out.as_mut_ptr(),
+            lane_counts: lane_counts.as_ptr(),
+            n_cycles: lane_counts.len(),
+            rows,
+            wpr,
+        };
+        if self.handles.is_empty() {
+            // Width 1: no threads — run every cycle on the caller.
+            unsafe { run_stripe(&job, 0, 1) };
+            return Ok(());
+        }
+        {
+            let mut cell = self.shared.lock();
+            cell.epoch = cell.epoch.wrapping_add(1);
+            cell.job = Some(job);
+            cell.remaining = self.handles.len();
+            cell.panicked = false;
+            self.shared.work.notify_all();
+        }
+        // The caller is worker 0 — it computes its stripe while the pool
+        // threads compute theirs, then waits for the stragglers.
+        let caller = catch_unwind(AssertUnwindSafe(|| unsafe {
+            run_stripe(&job, 0, self.width)
+        }));
+        let mut cell = self.shared.lock();
+        while cell.remaining > 0 {
+            cell = self.shared.done.wait(cell).unwrap_or_else(|e| e.into_inner());
+        }
+        cell.job = None;
+        let panicked = cell.panicked;
+        drop(cell);
+        if let Err(p) = caller {
+            std::panic::resume_unwind(p);
+        }
+        if panicked {
+            return Err(Error::Coordinator(
+                "intra-shard worker panicked during a compute block".to_string(),
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl Drop for IntraPool {
+    fn drop(&mut self) {
+        {
+            let mut cell = self.shared.lock();
+            cell.shutdown = true;
+            self.shared.work.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Pool-thread main loop: wait for an unseen epoch, run the stripe, report
+/// completion.  A panicking stripe is caught so the pool (and the caller's
+/// completion wait) survives; the block then fails with a pool error.
+fn worker_loop(shared: &Shared, worker: usize, width: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut cell = shared.lock();
+            loop {
+                if cell.shutdown {
+                    return;
+                }
+                match cell.job {
+                    Some(job) if cell.epoch != seen => {
+                        seen = cell.epoch;
+                        break job;
+                    }
+                    _ => {}
+                }
+                cell = shared.work.wait(cell).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        let res = catch_unwind(AssertUnwindSafe(|| unsafe {
+            run_stripe(&job, worker, width)
+        }));
+        let mut cell = shared.lock();
+        if res.is_err() {
+            cell.panicked = true;
+        }
+        cell.remaining -= 1;
+        if cell.remaining == 0 {
+            shared.done.notify_all();
+        }
+    }
+}
+
+/// Run one worker's stripe of the block: the cycles with
+/// `index % width == worker`, each through the shared integer kernel.
+///
+/// # Safety
+/// The job's windows must be live (guaranteed by `compute_block`'s
+/// completion wait) and in bounds (validated before dispatch); distinct
+/// `worker` values touch disjoint `out` windows.
+unsafe fn run_stripe(job: &BlockJob, worker: usize, width: usize) {
+    let lane_counts = std::slice::from_raw_parts(job.lane_counts, job.n_cycles);
+    let image = std::slice::from_raw_parts(job.image, job.image_len);
+    let (mut co, mut oo) = (0usize, 0usize);
+    for (i, &lanes) in lane_counts.iter().enumerate() {
+        let c_len = lanes * job.rows;
+        let o_len = lanes * job.wpr;
+        if i % width == worker {
+            let codes = std::slice::from_raw_parts(job.codes.add(co), c_len);
+            let out = std::slice::from_raw_parts_mut(job.out.add(oo), o_len);
+            quant_matmul_i32_into(codes, image, lanes, job.rows, job.wpr, out);
+        }
+        co += c_len;
+        oo += o_len;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::fixed::quant_matmul_i32;
+    use crate::util::prng::Prng;
+
+    fn block_case(seed: u64, lane_counts: &[usize], rows: usize, wpr: usize) {
+        let mut p = Prng::new(seed);
+        let total: usize = lane_counts.iter().sum();
+        let u: Vec<u8> = (0..total * rows).map(|_| p.next_u8()).collect();
+        let image: Vec<i32> = (0..rows * wpr).map(|_| p.next_i8() as i32).collect();
+        // Sequential reference: one kernel call per cycle window.
+        let mut seq = vec![0i32; total * wpr];
+        let (mut co, mut oo) = (0usize, 0usize);
+        for &lanes in lane_counts {
+            let r = quant_matmul_i32(&u[co..co + lanes * rows], &image, lanes, rows, wpr);
+            seq[oo..oo + lanes * wpr].copy_from_slice(&r);
+            co += lanes * rows;
+            oo += lanes * wpr;
+        }
+        for width in [1usize, 2, 3, 4] {
+            let pool = IntraPool::new(width);
+            let mut out = vec![i32::MAX; total * wpr];
+            pool.compute_block(&u, &image, lane_counts, rows, wpr, &mut out).unwrap();
+            assert_eq!(out, seq, "width={width} lane_counts={lane_counts:?}");
+        }
+    }
+
+    #[test]
+    fn pool_matches_sequential_across_widths() {
+        block_case(1, &[3, 52, 1, 7], 64, 16);
+        block_case(2, &[1], 32, 8);
+        block_case(3, &[2, 2, 2, 2, 2, 5], 16, 4);
+        block_case(4, &[], 16, 4);
+    }
+
+    #[test]
+    fn pool_is_reusable_across_blocks() {
+        let pool = IntraPool::new(3);
+        let mut p = Prng::new(9);
+        let (rows, wpr) = (32usize, 8usize);
+        let image: Vec<i32> = (0..rows * wpr).map(|_| p.next_i8() as i32).collect();
+        for round in 0..16 {
+            let lanes = 1 + (round % 4);
+            let cycles = 1 + (round % 5);
+            let total = lanes * cycles;
+            let u: Vec<u8> = (0..total * rows).map(|_| p.next_u8()).collect();
+            let counts = vec![lanes; cycles];
+            let mut out = vec![0i32; total * wpr];
+            pool.compute_block(&u, &image, &counts, rows, wpr, &mut out).unwrap();
+            let seq = quant_matmul_i32(&u, &image, total, rows, wpr);
+            assert_eq!(out, seq, "round {round}");
+        }
+    }
+
+    #[test]
+    fn pool_rejects_short_buffers() {
+        let pool = IntraPool::new(2);
+        let image = vec![0i32; 16 * 4];
+        let u = vec![128u8; 16];
+        let mut out = vec![0i32; 4];
+        // Two one-lane cycles need 32 codes / 8 outputs.
+        let err = pool.compute_block(&u, &image, &[1, 1], 16, 4, &mut out);
+        assert!(err.is_err());
+    }
+}

@@ -28,6 +28,7 @@
 //! simulator, the CPU integer executor and the PJRT-executed Pallas kernel
 //! produce *identical* f32 outputs.
 
+use super::par::IntraPool;
 use super::plan::{execute_plan, DensePlanner};
 use crate::compute::{walk_compute_block, ComputeEngine};
 use crate::psram::{CycleLedger, EnergyLedger, PsramArray};
@@ -95,6 +96,18 @@ pub trait TileExecutor {
         })
     }
 
+    /// Preferred stream cycles per [`TileExecutor::compute_block_into`]
+    /// call — the chunk size `run_image_into` streams through this
+    /// executor.  Defaults to the fixed
+    /// [`BLOCK_CYCLES`](super::plan::BLOCK_CYCLES); tuned digital
+    /// executors override it (see [`crate::tune`]).  The deterministic
+    /// cycle census is invariant under any value ≥ 1 — `compute_cycles`
+    /// counts streams, not chunks, and every ledger charge is linear in
+    /// lanes (pinned by `tests/intra_parallel.rs`).
+    fn block_cycles(&self) -> usize {
+        super::plan::BLOCK_CYCLES
+    }
+
     /// Cycle ledger snapshot (compute/write/idle) for utilisation metrics.
     fn cycles(&self) -> CycleLedger;
 
@@ -140,6 +153,10 @@ impl<T: TileExecutor + ?Sized> TileExecutor for Box<T> {
         out: &mut [i32],
     ) -> Result<()> {
         (**self).compute_block_into(u, lane_counts, out)
+    }
+
+    fn block_cycles(&self) -> usize {
+        (**self).block_cycles()
     }
 
     fn cycles(&self) -> CycleLedger {
@@ -217,6 +234,14 @@ impl TileExecutor for AnalogTileExecutor {
 /// cross-checks and as the fast digital baseline).  Cycle accounting
 /// follows the same rules as the analog array (1 write cycle per row,
 /// 1 compute cycle per call).
+///
+/// By default the executor is untuned: sequential execution in fixed
+/// [`BLOCK_CYCLES`](super::plan::BLOCK_CYCLES) chunks.
+/// [`CpuTileExecutor::with_tuning`] applies [`crate::tune`] parameters —
+/// a geometry-derived chunk size and an intra-shard worker pool
+/// ([`super::par::IntraPool`]) that stripes each block's cycles across a
+/// few host threads.  Both knobs are bit-invisible: the integer kernel is
+/// associative-exact and the census counts streams, not chunks.
 pub struct CpuTileExecutor {
     rows: usize,
     wpr: usize,
@@ -224,6 +249,10 @@ pub struct CpuTileExecutor {
     /// Sign-extended image (perf: i32 inner loop; EXPERIMENTS.md §Perf).
     image: Vec<i32>,
     ledger: CycleLedger,
+    /// Tuned chunk size for `run_image_into`'s streaming loop.
+    block_cycles: usize,
+    /// Intra-shard worker pool (`None` = sequential execution).
+    pool: Option<IntraPool>,
 }
 
 impl CpuTileExecutor {
@@ -240,7 +269,28 @@ impl CpuTileExecutor {
             max_lanes,
             image: vec![0i32; rows * wpr],
             ledger: CycleLedger::default(),
+            block_cycles: super::plan::BLOCK_CYCLES,
+            pool: None,
         }
+    }
+
+    /// Apply tuned execution parameters: the streaming chunk size and,
+    /// for `intra_workers >= 2`, a persistent intra-shard worker pool
+    /// (threads spawned here, reused for every block).  Results stay
+    /// bit-identical to the untuned executor for any parameter values.
+    pub fn with_tuning(mut self, params: &crate::tune::TuneParams) -> Self {
+        self.block_cycles = params.block_cycles.max(1);
+        self.pool = if params.intra_workers >= 2 {
+            Some(IntraPool::new(params.intra_workers))
+        } else {
+            None
+        };
+        self
+    }
+
+    /// Intra-shard worker width (1 = sequential).
+    pub fn intra_workers(&self) -> usize {
+        self.pool.as_ref().map_or(1, IntraPool::width)
     }
 }
 
@@ -286,6 +336,56 @@ impl TileExecutor for CpuTileExecutor {
         self.ledger.compute += 1;
         quant_matmul_i32_into(u, &self.image, lanes, self.rows, self.wpr, out);
         Ok(())
+    }
+
+    /// Batched override: the sequential path walks the shared block
+    /// contract; with an intra-shard pool the block's cycles are striped
+    /// across the workers (disjoint output windows, same integer kernel —
+    /// bit-identical for any width; `tests/intra_parallel.rs`).  The
+    /// ledger charge is `lane_counts.len()` either way, so the census is
+    /// execution-strategy-independent.
+    fn compute_block_into(
+        &mut self,
+        u: &[u8],
+        lane_counts: &[usize],
+        out: &mut [i32],
+    ) -> Result<()> {
+        match &self.pool {
+            None => {
+                let (rows, wpr) = (self.rows, self.wpr);
+                walk_compute_block(rows, wpr, u, lane_counts, out, |codes, lanes, o| {
+                    self.compute_into(codes, lanes, o)
+                })
+            }
+            Some(pool) => {
+                // Parallel path: validate the whole block up front
+                // (mirroring walk_compute_block + compute_into), then fan
+                // out infallibly.
+                let (mut co, mut oo) = (0usize, 0usize);
+                for &lanes in lane_counts {
+                    if lanes == 0 || lanes > self.max_lanes {
+                        return Err(Error::shape(format!("lanes {lanes} out of range")));
+                    }
+                    co += lanes * self.rows;
+                    oo += lanes * self.wpr;
+                    if co > u.len() || oo > out.len() {
+                        return Err(Error::shape(format!(
+                            "compute block needs {} codes / {} outputs, got {} / {}",
+                            co,
+                            oo,
+                            u.len(),
+                            out.len()
+                        )));
+                    }
+                }
+                self.ledger.compute += lane_counts.len() as u64;
+                pool.compute_block(u, &self.image, lane_counts, self.rows, self.wpr, out)
+            }
+        }
+    }
+
+    fn block_cycles(&self) -> usize {
+        self.block_cycles
     }
 
     fn cycles(&self) -> CycleLedger {

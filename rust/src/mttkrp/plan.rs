@@ -60,10 +60,13 @@
 //! plan order ([`run_image_into`] + [`fold_partial`]).  Because the same
 //! two functions run everywhere, distributed results are bit-identical to
 //! single-array results for every worker count and steal schedule.
-//! [`run_image_into`] streams a group's lane blocks in chunks of
-//! [`BLOCK_CYCLES`] through `TileExecutor::compute_block_into`, reusing
-//! one [`TileScratch`] — steady-state execution performs **zero heap
-//! allocations per compute cycle** (`tests/zero_alloc.rs`).
+//! [`run_image_into`] streams a group's lane blocks in chunks of the
+//! executor's `block_cycles` (default [`BLOCK_CYCLES`], tuned per
+//! geometry by [`crate::tune`]) through
+//! `TileExecutor::compute_block_into`, reusing one [`TileScratch`] —
+//! steady-state execution performs **zero heap allocations per compute
+//! cycle** (`tests/zero_alloc.rs`), and results plus the deterministic
+//! census are invariant under the chunk size.
 
 use super::pipeline::{
     quantize_krp_image_into, quantize_lane_batch_into, MttkrpStats, TileExecutor,
@@ -74,10 +77,13 @@ use crate::util::fixed::{encode_offset, quantize_encode_into};
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-/// Compute cycles per `TileExecutor::compute_block_into` chunk inside
-/// [`run_image_into`]: bounds the tile scratch at
+/// Default compute cycles per `TileExecutor::compute_block_into` chunk
+/// inside [`run_image_into`]: bounds the tile scratch at
 /// `BLOCK_CYCLES × lanes × wpr` i32s while still amortizing per-cycle
-/// ledger/energy charges across a block.
+/// ledger/energy charges across a block.  Digital executors may override
+/// `TileExecutor::block_cycles` with a [`crate::tune`]-derived value;
+/// the analog executor keeps this fixed default so its batched f64
+/// energy charges stay bit-stable across runs.
 pub const BLOCK_CYCLES: usize = 32;
 
 /// One stored-image handle: the quantized `(stored-block, rank-block)`
@@ -440,7 +446,7 @@ impl TilePlan {
 }
 
 /// Reusable per-executor scratch for [`run_image_into`]: the block tile
-/// buffer (`BLOCK_CYCLES × lanes × wpr` i32s) and the per-chunk lane
+/// buffer (`block_cycles × lanes × wpr` i32s) and the per-chunk lane
 /// counts.  Grown on first use, then steady-state allocation-free.
 #[derive(Debug, Default)]
 pub struct TileScratch {
@@ -449,14 +455,22 @@ pub struct TileScratch {
 }
 
 impl TileScratch {
-    /// Grow the buffers to fit `shape` (no-op once warm).
+    /// Grow the buffers to fit `shape` at the default [`BLOCK_CYCLES`]
+    /// chunking (no-op once warm).
     pub fn ensure(&mut self, shape: &PlanShape) {
-        let need = BLOCK_CYCLES * shape.lanes * shape.wpr;
+        self.ensure_block(shape, BLOCK_CYCLES);
+    }
+
+    /// Grow the buffers to fit `shape` streamed in chunks of
+    /// `block_cycles` (the executor's tuned chunk size; no-op once warm).
+    pub fn ensure_block(&mut self, shape: &PlanShape, block_cycles: usize) {
+        let bc = block_cycles.max(1);
+        let need = bc * shape.lanes * shape.wpr;
         if self.tile.len() < need {
             self.tile.resize(need, 0);
         }
-        if self.lane_counts.capacity() < BLOCK_CYCLES {
-            self.lane_counts.reserve(BLOCK_CYCLES);
+        if self.lane_counts.capacity() < bc {
+            self.lane_counts.reserve(bc);
         }
     }
 }
@@ -470,22 +484,35 @@ pub struct PlanScratch {
 }
 
 impl PlanScratch {
-    /// Grow the buffers to fit `shape` (no-op once warm).
+    /// Grow the buffers to fit `shape` at the default [`BLOCK_CYCLES`]
+    /// chunking (no-op once warm).
     pub fn ensure(&mut self, shape: &PlanShape) {
+        self.ensure_block(shape, BLOCK_CYCLES);
+    }
+
+    /// Grow the buffers to fit `shape` streamed in chunks of
+    /// `block_cycles` (no-op once warm).
+    pub fn ensure_block(&mut self, shape: &PlanShape, block_cycles: usize) {
         let need = shape.out_rows * shape.wpr;
         if self.partial.len() < need {
             self.partial.resize(need, 0.0);
         }
-        self.tiles.ensure(shape);
+        self.tiles.ensure_block(shape, block_cycles);
     }
 }
 
 /// Execute one stored image against its group's streams: load the image,
-/// stream the lane blocks in chunks of [`BLOCK_CYCLES`] through
+/// stream the lane blocks in chunks of the executor's
+/// `TileExecutor::block_cycles` (default [`BLOCK_CYCLES`], tuned per
+/// geometry by [`crate::tune`]) through
 /// `TileExecutor::compute_block_into` (one batched ledger charge per
 /// chunk), and accumulate the dequantized results into `partial`
 /// (`out_rows * img.r_cnt` entries, zeroed here).  Steady-state this
 /// performs zero heap allocations — all buffers come from `scratch`.
+/// The chunk size never changes results or the deterministic census: the
+/// integer block is associative-exact, the f32 accumulate below walks
+/// streams in plan order whatever the chunk boundaries, and
+/// `compute_cycles` counts streams, not chunks.
 ///
 /// This is the single accumulation contract shared by [`execute_plan`] and
 /// the coordinator workers — both paths call exactly this function, which
@@ -510,9 +537,10 @@ pub fn run_image_into<E: TileExecutor>(
     partial[..n].fill(0.0);
     let w_scales = img.scales(arena);
 
-    scratch.ensure(shape);
+    let bc = exec.block_cycles().max(1);
+    scratch.ensure_block(shape, bc);
     let TileScratch { tile, lane_counts } = scratch;
-    for chunk in streams.chunks(BLOCK_CYCLES) {
+    for chunk in streams.chunks(bc) {
         lane_counts.clear();
         let mut total_lanes = 0usize;
         for s in chunk {
@@ -636,7 +664,7 @@ pub fn execute_plan_into<E: TileExecutor>(
     }
 
     out.data_mut().fill(0.0);
-    scratch.ensure(&plan.shape);
+    scratch.ensure_block(&plan.shape, exec.block_cycles().max(1));
     let shape = &*plan.shape;
     let arena = &*plan.arena;
     for g in &shape.groups {

@@ -57,6 +57,7 @@ use crate::mttkrp::plan::{execute_plan_into, PlanScratch, TilePlan};
 use crate::perfmodel::{PerfEstimate, PerfModel, PlanEstimate};
 use crate::psram::{ArrayGeometry, EnergyLedger, PsramArray};
 use crate::tensor::Matrix;
+use crate::tune::TuneParams;
 use crate::util::error::{Error, Result};
 use std::sync::{Arc, Mutex};
 
@@ -117,6 +118,23 @@ pub enum NoiseMode {
     },
 }
 
+/// How a session tunes its digital (CPU) executors at build time.
+///
+/// Tuning never changes results or the deterministic cycle census — the
+/// chunk size and worker width are bit-invisible by construction (see
+/// [`crate::tune`]); it only changes host wall-clock.  Analog executors
+/// are never tuned: they keep the fixed default chunk so their batched
+/// f64 energy charges stay bit-stable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TunePolicy {
+    /// Geometry-derived parameters refined by a one-shot microbenchmark
+    /// ([`crate::tune::auto_tune`]), cached process-wide per geometry so
+    /// repeated builds pay nothing.  The default.
+    Auto,
+    /// Explicit parameters (reproducible builds, tests, sweeps).
+    Fixed(TuneParams),
+}
+
 /// Plan-cache policy of a session.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CachePolicy {
@@ -162,6 +180,8 @@ pub struct SessionBuilder {
     analog: bool,
     pool_config: Option<CoordinatorConfig>,
     executor: Option<Box<dyn TileExecutor + Send>>,
+    tuning: TunePolicy,
+    intra_workers: Option<usize>,
 }
 
 impl Default for SessionBuilder {
@@ -174,6 +194,8 @@ impl Default for SessionBuilder {
             analog: false,
             pool_config: None,
             executor: None,
+            tuning: TunePolicy::Auto,
+            intra_workers: None,
         }
     }
 }
@@ -237,8 +259,26 @@ impl SessionBuilder {
         self
     }
 
-    /// One simulated array executor for worker `i`.
-    fn make_executor(&self, worker: usize) -> Box<dyn TileExecutor + Send> {
+    /// Tuning policy for the digital executors (default
+    /// [`TunePolicy::Auto`]).  Bit-invisible: tuning only changes host
+    /// wall-clock, never results or the deterministic census.
+    pub fn tuning(mut self, policy: TunePolicy) -> Self {
+        self.tuning = policy;
+        self
+    }
+
+    /// Override the intra-shard worker width (1 = sequential execution;
+    /// `n >= 2` stripes each compute block over `n` host threads per
+    /// array).  Wins over the tuning policy's pick.
+    pub fn intra_workers(mut self, width: usize) -> Self {
+        self.intra_workers = Some(width.max(1));
+        self
+    }
+
+    /// One simulated array executor for worker `i`.  Digital executors
+    /// get the resolved tuning; analog executors are never tuned (their
+    /// batched f64 energy charges must stay chunk-stable).
+    fn make_executor(&self, worker: usize, tuned: &TuneParams) -> Box<dyn TileExecutor + Send> {
         let analog = self.analog || !matches!(self.noise, NoiseMode::Ideal);
         if analog {
             let engine = match self.noise {
@@ -253,11 +293,14 @@ impl SessionBuilder {
             };
             Box::new(AnalogTileExecutor::new(engine, PsramArray::paper()))
         } else {
-            Box::new(CpuTileExecutor::new(
-                self.model.geom.rows,
-                self.model.geom.words_per_row(),
-                self.model.wavelengths,
-            ))
+            Box::new(
+                CpuTileExecutor::new(
+                    self.model.geom.rows,
+                    self.model.geom.words_per_row(),
+                    self.model.wavelengths,
+                )
+                .with_tuning(tuned),
+            )
         }
     }
 
@@ -297,6 +340,34 @@ impl SessionBuilder {
         let wpr = model.geom.words_per_row();
         let lanes = model.wavelengths;
 
+        // Resolve the tuned execution parameters once per build, before
+        // any executor is constructed.  Only digital (CPU) executors
+        // consume them, so sessions that build none — exact engine,
+        // analog simulator, custom executor — skip the microbenchmark.
+        let arrays = match self.engine {
+            Engine::Coordinated { shards } => {
+                self.pool_config.as_ref().map_or(shards, |c| c.workers).max(1)
+            }
+            _ => 1,
+        };
+        let builds_cpu = !analog
+            && match self.engine {
+                Engine::Exact => false,
+                Engine::SingleArray => self.executor.is_none(),
+                Engine::Coordinated { .. } => true,
+            };
+        let mut tuned = if builds_cpu {
+            match self.tuning {
+                TunePolicy::Auto => crate::tune::auto_tune(rows, wpr, lanes, arrays),
+                TunePolicy::Fixed(p) => p,
+            }
+        } else {
+            TuneParams::default()
+        };
+        if let Some(width) = self.intra_workers {
+            tuned.intra_workers = width;
+        }
+
         let state = match self.engine {
             Engine::Exact => {
                 model.num_arrays = 1;
@@ -320,7 +391,7 @@ impl SessionBuilder {
                         }
                         exec
                     }
-                    None => self.make_executor(0),
+                    None => self.make_executor(0, &tuned),
                 };
                 EngineState::Single {
                     metrics: Arc::new(Metrics::with_shards(1)),
@@ -336,7 +407,7 @@ impl SessionBuilder {
                     .clone()
                     .unwrap_or_else(|| CoordinatorConfig::new(shards));
                 model.num_arrays = cfg.workers.max(1);
-                let pool = Coordinator::spawn(cfg, |i| Ok(self.make_executor(i)))?;
+                let pool = Coordinator::spawn(cfg, |i| Ok(self.make_executor(i, &tuned)))?;
                 EngineState::Pool { metrics: pool.metrics_handle(), pool: Mutex::new(pool) }
             }
         };

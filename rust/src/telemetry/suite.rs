@@ -21,7 +21,7 @@
 use super::{BenchEnv, BenchRecord, BenchReport, Direction};
 use crate::coordinator::{Coordinator, CoordinatorConfig};
 use crate::energy::EnergyModel;
-use crate::mttkrp::pipeline::{CpuTileExecutor, PsramPipeline};
+use crate::mttkrp::pipeline::{CpuTileExecutor, PsramPipeline, TileExecutor};
 use crate::mttkrp::plan::{
     execute_plan, DensePlanner, SparseSlicePlanner, TilePlan, TtmPlanner,
 };
@@ -274,6 +274,63 @@ fn engine_area(report: &mut BenchReport) -> Result<()> {
         .wall_clock()
         .samples(reps as u64),
     )?;
+    report.push(
+        BenchRecord::new(
+            "engine.dense.images_per_s",
+            stats.images as f64 / t,
+            "images/s",
+        )
+        .better(Direction::Higher)
+        .wall_clock()
+        .samples(reps as u64),
+    )?;
+
+    // Autotuned executor (geometry-driven chunking + intra-shard
+    // striping): the census is bit-identical by contract — pinned by
+    // tests/intra_parallel.rs — so only the wall-clock rate rides along.
+    let tuned = crate::tune::auto_tune(
+        exec.rows(),
+        exec.words_per_row(),
+        exec.max_lanes(),
+        1,
+    );
+    let mut texec = CpuTileExecutor::paper().with_tuning(&tuned);
+    let tt = time_median(reps, || {
+        let mut s = MttkrpStats::default();
+        execute_plan(&mut texec, &plan, &mut s).unwrap();
+    });
+    report.push(wall("engine.dense.tuned_execute_wall_s", tt, reps as u64))?;
+    report.push(
+        BenchRecord::new(
+            "engine.dense.tuned_raw_mac_per_s",
+            stats.raw_macs as f64 / tt,
+            "MAC/s",
+        )
+        .better(Direction::Higher)
+        .wall_clock()
+        .samples(reps as u64),
+    )?;
+
+    // Direct kernel rate: the blocked i8×i8→i32 inner loop on one full
+    // synthetic tile (m = lanes, k = rows, n = words-per-row).
+    let (m, k, n) = (exec.max_lanes(), exec.rows(), exec.words_per_row());
+    let mut krng = Prng::new(29);
+    let codes: Vec<u8> = (0..m * k).map(|_| krng.next_u8()).collect();
+    let image: Vec<i32> = (0..k * n).map(|_| krng.next_i8() as i32).collect();
+    let mut out = vec![0i32; m * n];
+    let kt = time_median(reps, || {
+        crate::util::fixed::quant_matmul_i32_into(&codes, &image, m, k, n, &mut out);
+    });
+    report.push(
+        BenchRecord::new(
+            "engine.kernel.gmac_per_s",
+            (m * k * n) as f64 / kt / 1e9,
+            "GMAC/s",
+        )
+        .better(Direction::Higher)
+        .wall_clock()
+        .samples(reps as u64),
+    )?;
     Ok(())
 }
 
@@ -331,6 +388,16 @@ fn coordinator_area(report: &mut BenchReport) -> Result<()> {
             .tol(TOL_MODEL),
         )?;
         report.push(wall(&format!("{p}.execute_wall_s"), wall_s, 1))?;
+        report.push(
+            BenchRecord::new(
+                format!("{p}.images_per_s"),
+                get("images") as f64 / wall_s,
+                "images/s",
+            )
+            .better(Direction::Higher)
+            .wall_clock()
+            .samples(1),
+        )?;
     }
     Ok(())
 }

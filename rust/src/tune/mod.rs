@@ -1,0 +1,216 @@
+//! Geometry-driven autotuner for the digital execution hot path.
+//!
+//! The executor's streaming chunk size used to be the fixed
+//! [`BLOCK_CYCLES`] = 32; this module derives it from the tile geometry
+//! the way [`PerfModel`](crate::perfmodel::PerfModel) derives cycle
+//! counts: the chunk's working set — `lanes × rows` input codes plus
+//! `lanes × wpr` i32 outputs per cycle, walked against one shared
+//! `rows × wpr` image — is sized to a fixed cache budget, then refined by
+//! a **one-shot microbenchmark** at session build time (a few timed
+//! passes of the real [`quant_matmul_i32_into`] kernel over synthetic
+//! data, cached process-wide per geometry so repeated session builds pay
+//! nothing).  The intra-shard worker width divides the host cores across
+//! the session's arrays so a coordinated pool never oversubscribes.
+//!
+//! Correctness is chunking-independent by construction: the integer
+//! kernel is associative-exact, the f32 dequantize/accumulate in
+//! `run_image_into` walks streams in plan order whatever the chunk
+//! boundaries, and the deterministic cycle census counts *streams*, not
+//! chunks — `compute_cycles`, `raw_macs` and the ledgers are linear in
+//! lanes, so any `block_cycles ≥ 1` yields a bit-identical census
+//! (pinned by `tests/intra_parallel.rs`).  Tuning applies to the digital
+//! [`CpuTileExecutor`](crate::mttkrp::pipeline::CpuTileExecutor) only:
+//! the analog executor keeps the fixed chunk so its batched f64 energy
+//! charges stay bit-stable against the committed telemetry baselines.
+
+use crate::mttkrp::plan::BLOCK_CYCLES;
+use crate::util::fixed::quant_matmul_i32_into;
+use crate::util::prng::Prng;
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+/// Streaming working-set budget per chunk (codes + output tile), sized
+/// for a typical per-core L2 slice.
+const STREAM_BUDGET_BYTES: usize = 1 << 20;
+/// Smallest chunk worth batching a ledger charge over.
+const MIN_BLOCK_CYCLES: usize = 8;
+/// Largest chunk — bounds the tile scratch like `BLOCK_CYCLES` used to.
+const MAX_BLOCK_CYCLES: usize = 128;
+/// Intra-shard width ceiling: the stripe split amortizes poorly past a
+/// few workers because the f32 accumulate stage stays sequential.
+const MAX_INTRA_WORKERS: usize = 4;
+
+/// Tuned execution parameters for one digital executor, produced by
+/// [`auto_tune`] and consumed by
+/// [`CpuTileExecutor::with_tuning`](crate::mttkrp::pipeline::CpuTileExecutor::with_tuning).
+///
+/// The `Default` value reproduces the untuned executor exactly: the fixed
+/// [`BLOCK_CYCLES`] chunk and sequential (width-1) execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TuneParams {
+    /// Stream cycles per `compute_block_into` chunk (replaces the fixed
+    /// [`BLOCK_CYCLES`]); the deterministic census is invariant under any
+    /// value ≥ 1.
+    pub block_cycles: usize,
+    /// Intra-shard worker width (1 = sequential, no pool threads).
+    pub intra_workers: usize,
+}
+
+impl Default for TuneParams {
+    fn default() -> Self {
+        TuneParams { block_cycles: BLOCK_CYCLES, intra_workers: 1 }
+    }
+}
+
+/// Pure-geometry chunk pick: the largest chunk whose streaming working
+/// set (`lanes × (rows + 4·wpr)` bytes per cycle) fits the cache budget,
+/// clamped to `[8, 128]`.  For the paper tile (256 × 32 × 52λ) this
+/// lands on 52 cycles — one full lane batch per chunk.
+pub fn geometry_block_cycles(rows: usize, wpr: usize, lanes: usize) -> usize {
+    let per_cycle = lanes.max(1) * (rows + 4 * wpr);
+    (STREAM_BUDGET_BYTES / per_cycle.max(1)).clamp(MIN_BLOCK_CYCLES, MAX_BLOCK_CYCLES)
+}
+
+/// Intra-shard worker width for a session running `num_arrays` executors:
+/// host cores divided across the arrays, clamped to `[1, 4]`.
+pub fn intra_width(num_arrays: usize) -> usize {
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    (host / num_arrays.max(1)).clamp(1, MAX_INTRA_WORKERS)
+}
+
+/// Wall seconds to stream `total` cycles of `lanes × rows` codes through
+/// the kernel in chunks of `bc` cycles (the shape of `run_image_into`'s
+/// inner loop, minus the f32 stage the chunk size cannot affect).
+#[allow(clippy::too_many_arguments)]
+fn time_chunked(
+    bc: usize,
+    total: usize,
+    rows: usize,
+    wpr: usize,
+    lanes: usize,
+    codes: &[u8],
+    image: &[i32],
+    tile: &mut [i32],
+) -> f64 {
+    let t0 = Instant::now();
+    let mut done = 0usize;
+    while done < total {
+        let cycles = bc.min(total - done);
+        for c in 0..cycles {
+            let u = &codes[c * lanes * rows..(c + 1) * lanes * rows];
+            let out = &mut tile[c * lanes * wpr..(c + 1) * lanes * wpr];
+            quant_matmul_i32_into(u, image, lanes, rows, wpr, out);
+        }
+        done += cycles;
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// One-shot microbenchmark: time the geometry pick against its ×½ / ×2
+/// neighbours and the legacy fixed chunk on synthetic data, return the
+/// fastest.  Runs ~tens of milliseconds once per geometry (callers cache
+/// through [`auto_tune`]).
+pub fn microbench_block_cycles(rows: usize, wpr: usize, lanes: usize) -> usize {
+    let geo = geometry_block_cycles(rows, wpr, lanes);
+    if rows == 0 || wpr == 0 || lanes == 0 {
+        return geo;
+    }
+    let mut cands = vec![
+        geo,
+        (geo / 2).max(MIN_BLOCK_CYCLES),
+        (geo * 2).min(MAX_BLOCK_CYCLES),
+        BLOCK_CYCLES,
+    ];
+    cands.sort_unstable();
+    cands.dedup();
+    let max_bc = *cands.last().unwrap();
+    let mut rng = Prng::new(0xB10C);
+    let codes: Vec<u8> = (0..max_bc * lanes * rows).map(|_| rng.next_u8()).collect();
+    let image: Vec<i32> = (0..rows * wpr).map(|_| rng.next_i8() as i32).collect();
+    let mut tile = vec![0i32; max_bc * lanes * wpr];
+    let (mut best_t, mut best) = (f64::INFINITY, geo);
+    for &bc in &cands {
+        // One warm pass primes the caches, one timed pass scores.
+        time_chunked(bc, max_bc, rows, wpr, lanes, &codes, &image, &mut tile);
+        let t = time_chunked(bc, max_bc, rows, wpr, lanes, &codes, &image, &mut tile);
+        if t < best_t {
+            best_t = t;
+            best = bc;
+        }
+    }
+    best
+}
+
+type Key = (usize, usize, usize, usize);
+
+fn cache() -> &'static Mutex<Vec<(Key, TuneParams)>> {
+    static CACHE: OnceLock<Mutex<Vec<(Key, TuneParams)>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Tune a digital executor for `rows × wpr × lanes` tiles on a session
+/// running `num_arrays` arrays: geometry-derived chunk size refined by
+/// the one-shot microbenchmark, plus the intra-shard width.  Results are
+/// cached process-wide per `(rows, wpr, lanes, num_arrays)`, so only the
+/// first session build for a geometry pays the benchmark.
+pub fn auto_tune(rows: usize, wpr: usize, lanes: usize, num_arrays: usize) -> TuneParams {
+    let key = (rows, wpr, lanes, num_arrays);
+    if let Some((_, p)) = cache().lock().unwrap().iter().find(|(k, _)| *k == key) {
+        return *p;
+    }
+    let params = TuneParams {
+        block_cycles: microbench_block_cycles(rows, wpr, lanes),
+        intra_workers: intra_width(num_arrays),
+    };
+    let mut c = cache().lock().unwrap();
+    if !c.iter().any(|(k, _)| *k == key) {
+        c.push((key, params));
+    }
+    params
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_params_reproduce_untuned_executor() {
+        let p = TuneParams::default();
+        assert_eq!(p.block_cycles, BLOCK_CYCLES);
+        assert_eq!(p.intra_workers, 1);
+    }
+
+    #[test]
+    fn geometry_pick_fills_the_budget_for_the_paper_tile() {
+        // 52 λ × (256 codes + 128 out bytes) ≈ 20 KB/cycle → 52 cycles.
+        let bc = geometry_block_cycles(256, 32, 52);
+        assert_eq!(bc, 52);
+        // Tiny tiles clamp high, huge tiles clamp low.
+        assert_eq!(geometry_block_cycles(16, 4, 1), MAX_BLOCK_CYCLES);
+        assert_eq!(geometry_block_cycles(4096, 512, 128), MIN_BLOCK_CYCLES);
+    }
+
+    #[test]
+    fn intra_width_is_bounded_and_shares_cores() {
+        for arrays in [1usize, 2, 4, 16, 0] {
+            let w = intra_width(arrays);
+            assert!((1..=MAX_INTRA_WORKERS).contains(&w), "arrays={arrays} w={w}");
+        }
+        // More arrays can never get a wider stripe than fewer arrays.
+        assert!(intra_width(16) <= intra_width(1));
+    }
+
+    #[test]
+    fn auto_tune_is_cached_and_in_range() {
+        let a = auto_tune(64, 8, 4, 1);
+        let b = auto_tune(64, 8, 4, 1);
+        assert_eq!(a, b, "second call must come from the cache");
+        assert!((MIN_BLOCK_CYCLES..=MAX_BLOCK_CYCLES).contains(&a.block_cycles));
+        assert!((1..=MAX_INTRA_WORKERS).contains(&a.intra_workers));
+    }
+
+    #[test]
+    fn degenerate_geometry_skips_the_microbench() {
+        assert_eq!(microbench_block_cycles(0, 32, 52), MAX_BLOCK_CYCLES);
+    }
+}

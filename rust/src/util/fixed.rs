@@ -118,17 +118,48 @@ pub fn quant_matmul_ref(u: &[u8], w: &[i8], m: usize, k: usize, n: usize) -> Vec
     out
 }
 
+/// Maximum absolute value of `a` (0.0 for an empty or all-NaN input),
+/// reduced over eight independent accumulator lanes so the scan
+/// vectorizes.  Bit-identical to the sequential `fold(0.0, max)`:
+/// `f32::max` over the non-negative magnitudes `abs` produces is
+/// order-independent, and a NaN operand is dropped by `max` in either
+/// reduction order.
+#[inline]
+pub fn max_abs(a: &[f32]) -> f32 {
+    let mut lanes = [0f32; 8];
+    let mut chunks = a.chunks_exact(8);
+    for c in chunks.by_ref() {
+        for (m, &x) in lanes.iter_mut().zip(c) {
+            *m = m.max(x.abs());
+        }
+    }
+    let mut m = lanes.iter().fold(0f32, |m, &v| m.max(v));
+    for &x in chunks.remainder() {
+        m = m.max(x.abs());
+    }
+    m
+}
+
 /// Fused quantize+encode: symmetric int8 quantization of `a` written
 /// directly as offset-binary codes into `out[..a.len()]` (no intermediate
 /// allocation — the pipeline hot path; EXPERIMENTS.md §Perf).  Returns the
 /// scale.  Bit-identical to `quantize_sym` + `encode_offset`.
+///
+/// Exactly `a.len()` codes are written and `out[a.len()..]` is left
+/// untouched.  **Panics** (in every build profile) if `out` is shorter
+/// than `a` — the previous `debug_assert` let release builds silently
+/// truncate the encoded tile.
 pub fn quantize_encode_into(a: &[f32], out: &mut [u8]) -> f32 {
-    debug_assert!(out.len() >= a.len());
+    assert!(
+        out.len() >= a.len(),
+        "quantize_encode_into: out holds {} codes, need {}",
+        out.len(),
+        a.len()
+    );
     let qmax = 127f32;
-    let amax = a.iter().fold(0f32, |m, &x| m.max(x.abs()));
-    let scale = if amax > 0.0 { amax / qmax } else { 1.0 };
+    let scale = sym_scale(max_abs(a), qmax);
     let inv = 1.0 / scale;
-    for (o, &x) in out.iter_mut().zip(a) {
+    for (o, &x) in out[..a.len()].iter_mut().zip(a) {
         let v = round_half_even(x * inv).clamp(-qmax, qmax) as i32;
         *o = (v + OFFSET) as u8;
     }
@@ -147,6 +178,11 @@ pub fn quant_matmul_i32(u: &[u8], w: &[i32], m: usize, k: usize, n: usize) -> Ve
 /// `out` (overwritten, not accumulated).  This is the steady-state compute
 /// kernel behind `TileExecutor::compute_into` — zero heap traffic per cycle
 /// (asserted by `tests/zero_alloc.rs`).
+///
+/// The inner loop is register-tiled four contraction steps at a time
+/// (`quant_axpy_row`); i32 addition is associative, so any blocking is
+/// bit-identical to the scalar reference — pinned by the
+/// `blocked_kernel_matches_ref_across_geometries` property test.
 pub fn quant_matmul_i32_into(
     u: &[u8],
     w: &[i32],
@@ -162,17 +198,50 @@ pub fn quant_matmul_i32_into(
     for i in 0..m {
         let urow = &u[i * k..(i + 1) * k];
         let orow = &mut out[i * n..(i + 1) * n];
-        for (p, &code) in urow.iter().enumerate() {
-            let x = code as i32 - OFFSET;
-            if x == 0 {
-                continue;
+        quant_axpy_row(urow, w, n, orow);
+    }
+}
+
+/// One output row of the quantized matmul: `orow += (urow - 128) @ w`.
+///
+/// Blocked four contraction steps (`k`) at a time so each pass over the
+/// output row retires four AXPYs — ¼ the `orow` load/store traffic of the
+/// plain zip AXPY, which profiling showed was store-bound (§Perf log).
+/// A whole quad of zero codes (the offset-binary resting state) is
+/// skipped outright; the scalar tail keeps the per-element skip.  All
+/// arithmetic is exact i32, so the result is bit-identical to the scalar
+/// walk for every `k`, including tails of 1–3.
+#[inline]
+fn quant_axpy_row(urow: &[u8], w: &[i32], n: usize, orow: &mut [i32]) {
+    let k = urow.len();
+    let k4 = k & !3;
+    let mut p = 0;
+    while p < k4 {
+        let x0 = urow[p] as i32 - OFFSET;
+        let x1 = urow[p + 1] as i32 - OFFSET;
+        let x2 = urow[p + 2] as i32 - OFFSET;
+        let x3 = urow[p + 3] as i32 - OFFSET;
+        // or == 0 iff every lane is 0: any set bit in any lane survives.
+        if (x0 | x1 | x2 | x3) != 0 {
+            let w0 = &w[p * n..(p + 1) * n];
+            let w1 = &w[(p + 1) * n..(p + 2) * n];
+            let w2 = &w[(p + 2) * n..(p + 3) * n];
+            let w3 = &w[(p + 3) * n..(p + 4) * n];
+            let quads = orow.iter_mut().zip(w0).zip(w1).zip(w2).zip(w3);
+            for ((((o, &a), &b), &c), &d) in quads {
+                *o += x0 * a + x1 * b + x2 * c + x3 * d;
             }
-            let wrow = &w[p * n..(p + 1) * n];
-            // plain zip AXPY — measured faster than manual 8-wide unrolling
-            // (the autovectorizer handles this shape well); see §Perf log.
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += x * wv;
-            }
+        }
+        p += 4;
+    }
+    for p in k4..k {
+        let x = urow[p] as i32 - OFFSET;
+        if x == 0 {
+            continue;
+        }
+        let wrow = &w[p * n..(p + 1) * n];
+        for (o, &wv) in orow.iter_mut().zip(wrow) {
+            *o += x * wv;
         }
     }
 }
@@ -274,6 +343,104 @@ mod tests {
         let mut out = vec![i32::MAX; m * n]; // poisoned scratch
         quant_matmul_i32_into(&u, &w, m, k, n, &mut out);
         assert_eq!(out, fresh);
+    }
+
+    #[test]
+    fn max_abs_matches_sequential_fold() {
+        let mut p = Prng::new(11);
+        for len in [0usize, 1, 7, 8, 9, 64, 513] {
+            let a: Vec<f32> = (0..len).map(|_| p.normal() as f32).collect();
+            let seq = a.iter().fold(0f32, |m, &x| m.max(x.abs()));
+            assert_eq!(max_abs(&a), seq, "len={len}");
+        }
+        // NaN is dropped in either reduction order.
+        assert_eq!(max_abs(&[1.0, f32::NAN, -3.0]), 3.0);
+        assert_eq!(max_abs(&[f32::NAN; 9]), 0.0);
+    }
+
+    #[test]
+    fn quantize_encode_into_writes_exactly_len() {
+        let mut p = Prng::new(5);
+        let a: Vec<f32> = (0..37).map(|_| p.normal() as f32).collect();
+        let mut wide = vec![0xABu8; a.len() + 9];
+        let s = quantize_encode_into(&a, &mut wide);
+        let (q, s_ref) = quantize_sym(&a, 8);
+        assert_eq!(s, s_ref);
+        for (qi, c) in q.iter().zip(&wide) {
+            assert_eq!(encode_offset(*qi), *c);
+        }
+        // The tail past a.len() is untouched — no silent over-write.
+        assert!(wide[a.len()..].iter().all(|&b| b == 0xAB));
+    }
+
+    #[test]
+    #[should_panic(expected = "quantize_encode_into")]
+    fn quantize_encode_into_rejects_short_out() {
+        // The old debug_assert let release builds silently truncate; the
+        // contract is now a hard panic in every profile.
+        let a = [1.0f32; 8];
+        let mut out = [0u8; 7];
+        quantize_encode_into(&a, &mut out);
+    }
+
+    /// The blocked kernel must be bit-exact against the scalar reference
+    /// across degenerate and tail-heavy geometries: m/k/n of 0 and 1,
+    /// k not a multiple of the 4-wide quad tile (tails 1–3), and n both
+    /// tiny and wider than a cache line.
+    #[test]
+    fn blocked_kernel_matches_ref_across_geometries() {
+        let mut p = Prng::new(6);
+        for (m, k, n) in [
+            (0usize, 0usize, 0usize),
+            (0, 5, 3),
+            (3, 0, 4),
+            (3, 4, 0),
+            (1, 1, 1),
+            (2, 3, 5),
+            (5, 64, 7),
+            (4, 31, 13),
+            (2, 65, 1),
+            (1, 66, 52),
+            (7, 129, 52),
+            (1, 8, 256),
+        ] {
+            let u: Vec<u8> = (0..m * k).map(|_| p.next_u8()).collect();
+            let w8: Vec<i8> = (0..k * n).map(|_| p.next_i8()).collect();
+            let w32: Vec<i32> = w8.iter().map(|&v| v as i32).collect();
+            assert_eq!(
+                quant_matmul_ref(&u, &w8, m, k, n),
+                quant_matmul_i32(&u, &w32, m, k, n),
+                "m={m} k={k} n={n}"
+            );
+        }
+    }
+
+    /// The skip-zero fast path: whole quads of resting-state codes
+    /// (x = 0), all-zero rows, and zeros interleaved with live codes must
+    /// not perturb the result.
+    #[test]
+    fn blocked_kernel_skip_zero_paths() {
+        let mut p = Prng::new(7);
+        let (m, k, n) = (4usize, 22usize, 9usize);
+        let w8: Vec<i8> = (0..k * n).map(|_| p.next_i8()).collect();
+        let w32: Vec<i32> = w8.iter().map(|&v| v as i32).collect();
+        let zero = encode_offset(0);
+        // row 0: all zero codes; row 1: zero quads alternating with live
+        // quads; row 2: random; row 3: zeros everywhere except the tail.
+        let mut u = vec![zero; m * k];
+        for (p4, c) in u[k..2 * k].iter_mut().enumerate() {
+            if (p4 / 4) % 2 == 1 {
+                *c = p.next_u8();
+            }
+        }
+        for c in u[2 * k..3 * k].iter_mut() {
+            *c = p.next_u8();
+        }
+        u[3 * k + (k - 1)] = p.next_u8();
+        assert_eq!(
+            quant_matmul_ref(&u, &w8, m, k, n),
+            quant_matmul_i32(&u, &w32, m, k, n)
+        );
     }
 
     #[test]

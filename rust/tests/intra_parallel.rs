@@ -1,0 +1,127 @@
+//! Bit-identity and census-invariance pins for the tuned digital
+//! execution path: geometry-driven streaming chunks
+//! (`TileExecutor::block_cycles`) and the intra-shard worker pool
+//! (`mttkrp::par::IntraPool`).
+//!
+//! The contract under test (DESIGN.md §7, `tune` module docs): tuning is
+//! **bit-invisible** — for any `block_cycles >= 1` and any intra-shard
+//! width, the f32 results, the `MttkrpStats` census, and the executor's
+//! `CycleLedger` are identical to the untuned sequential executor, on
+//! dense and sparse plans alike.  This is what lets the autotuner pick
+//! whatever chunking is fastest without touching the committed
+//! `BENCH_*.json` baselines.
+
+use psram_imc::coordinator::{Coordinator, CoordinatorConfig};
+use psram_imc::mttkrp::pipeline::TileExecutor;
+use psram_imc::mttkrp::plan::{
+    execute_plan, DensePlanner, SparseSlicePlanner, TilePlan, BLOCK_CYCLES,
+};
+use psram_imc::mttkrp::{CpuTileExecutor, MttkrpStats};
+use psram_imc::psram::CycleLedger;
+use psram_imc::tensor::{CooTensor, Matrix};
+use psram_imc::tune::TuneParams;
+use psram_imc::util::prng::Prng;
+
+type Census = (u64, u64, u64, u64, u64);
+
+fn census(s: &MttkrpStats) -> Census {
+    (s.images, s.compute_cycles, s.write_cycles, s.useful_macs, s.raw_macs)
+}
+
+/// Execute `plan` on a fresh executor tuned with `params`; return the
+/// result bits, the stats census, and the executor's cycle ledger.
+fn run(plan: &TilePlan, params: TuneParams) -> (Vec<f32>, Census, CycleLedger) {
+    let mut exec = CpuTileExecutor::paper().with_tuning(&params);
+    let mut stats = MttkrpStats::default();
+    let out = execute_plan(&mut exec, plan, &mut stats).unwrap();
+    (out.data().to_vec(), census(&stats), exec.cycles())
+}
+
+/// 2 K-blocks × 2 R-blocks × 3 lane batches (52 + 52 + 16-lane tail).
+fn dense_plan() -> TilePlan {
+    let mut rng = Prng::new(31);
+    let unf = Matrix::randn(120, 300, &mut rng);
+    let krp = Matrix::randn(300, 40, &mut rng);
+    DensePlanner::new(256, 32, 52).plan_unfolded(&unf, &krp).unwrap()
+}
+
+/// Slice-grouped sparse plan: many short, ragged stream blocks — the
+/// case where chunk boundaries and stripe assignment move the most.
+fn sparse_plan() -> TilePlan {
+    let mut rng = Prng::new(32);
+    let shape = [24usize, 300, 8];
+    let coo = CooTensor::random(&shape, 500, &mut rng);
+    let factors: Vec<Matrix> =
+        shape.iter().map(|&d| Matrix::randn(d, 16, &mut rng)).collect();
+    SparseSlicePlanner::new(256, 32, 52).plan(&coo, &factors, 0).unwrap()
+}
+
+#[test]
+fn intra_parallel_execution_is_bit_identical_to_sequential() {
+    for (name, plan) in [("dense", dense_plan()), ("sparse", sparse_plan())] {
+        let baseline = run(&plan, TuneParams::default());
+        for workers in [1usize, 2, 4] {
+            let got = run(
+                &plan,
+                TuneParams { intra_workers: workers, ..TuneParams::default() },
+            );
+            assert_eq!(got, baseline, "{name} plan, workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn census_is_invariant_under_any_chunking() {
+    for (name, plan) in [("dense", dense_plan()), ("sparse", sparse_plan())] {
+        let baseline = run(&plan, TuneParams::default());
+        for bc in [1usize, 3, 8, 52, 128] {
+            for workers in [1usize, 3] {
+                let got =
+                    run(&plan, TuneParams { block_cycles: bc, intra_workers: workers });
+                assert_eq!(
+                    got, baseline,
+                    "{name} plan, block_cycles={bc} workers={workers}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tuned_executor_reports_its_parameters() {
+    let tuned = CpuTileExecutor::paper()
+        .with_tuning(&TuneParams { block_cycles: 52, intra_workers: 3 });
+    assert_eq!(tuned.block_cycles(), 52);
+    assert_eq!(tuned.intra_workers(), 3);
+    let untuned = CpuTileExecutor::paper();
+    assert_eq!(untuned.block_cycles(), BLOCK_CYCLES);
+    assert_eq!(untuned.intra_workers(), 1);
+}
+
+#[test]
+fn coordinator_with_tuned_workers_is_bit_identical() {
+    let mut rng = Prng::new(33);
+    // 3 K-blocks × 2 R-blocks = 6 images over 3 shard keys.
+    let unf = Matrix::randn(130, 600, &mut rng);
+    let krp = Matrix::randn(600, 48, &mut rng);
+    let plan = DensePlanner::new(256, 32, 52).plan_unfolded(&unf, &krp).unwrap();
+    let (want, want_census, _) = run(&plan, TuneParams::default());
+
+    let tuned = TuneParams { block_cycles: 17, intra_workers: 2 };
+    let mut pool = Coordinator::spawn(
+        CoordinatorConfig::new(2),
+        |_| Ok(CpuTileExecutor::paper().with_tuning(&tuned)),
+    )
+    .unwrap();
+    let got = pool.execute_plan(&plan).unwrap();
+    assert_eq!(got.data(), &want[..], "pooled tuned result must match sequential");
+
+    let snap = pool.metrics().snapshot();
+    let get = |key: &str| {
+        snap.iter().find(|(k, _)| *k == key).map(|(_, v)| *v).unwrap_or(0)
+    };
+    let (images, compute, write, _, _) = want_census;
+    assert_eq!(get("images"), images);
+    assert_eq!(get("compute_cycles"), compute);
+    assert_eq!(get("write_cycles"), write);
+}

@@ -451,3 +451,59 @@ fn sparse_session_round_trip_matches_pipeline() {
     assert_eq!(est.compute_cycles, m.streamed_cycles);
     assert_eq!(est.reconfig_write_cycles, m.reconfig_write_cycles);
 }
+
+#[test]
+fn tuning_policy_is_bit_invisible_at_the_session_surface() {
+    // Fixed tuning (any chunk size, any intra-shard width) and the
+    // untuned defaults must produce identical bits and identical
+    // measured cycle metrics on both pSRAM engines — tuning only moves
+    // host wall-clock.
+    use psram_imc::session::TunePolicy;
+    use psram_imc::tune::TuneParams;
+    let mut rng = Prng::new(71);
+    let x = DenseTensor::randn(&[60, 9, 40], &mut rng);
+    let factors: Vec<Matrix> =
+        [60, 9, 40].iter().map(|&d| Matrix::randn(d, 20, &mut rng)).collect();
+    let k = Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 };
+
+    for engine in [Engine::SingleArray, Engine::Coordinated { shards: 2 }] {
+        let baseline = PsramSession::builder()
+            .engine(engine)
+            .tuning(TunePolicy::Fixed(TuneParams::default()))
+            .build()
+            .unwrap();
+        let want = baseline.run(k).unwrap();
+        let want_m = baseline.job_metrics(JobId::DEFAULT);
+
+        let tuned = PsramSession::builder()
+            .engine(engine)
+            .tuning(TunePolicy::Fixed(TuneParams {
+                block_cycles: 19,
+                intra_workers: 1,
+            }))
+            .intra_workers(2)
+            .build()
+            .unwrap();
+        let got = tuned.run(k).unwrap();
+        let got_m = tuned.job_metrics(JobId::DEFAULT);
+
+        assert_eq!(got.data(), want.data(), "{engine:?}");
+        assert_eq!(got_m.images, want_m.images, "{engine:?}");
+        assert_eq!(got_m.streamed_cycles, want_m.streamed_cycles, "{engine:?}");
+        assert_eq!(
+            got_m.reconfig_write_cycles, want_m.reconfig_write_cycles,
+            "{engine:?}"
+        );
+        assert_eq!(got_m.useful_macs, want_m.useful_macs, "{engine:?}");
+        assert_eq!(got_m.raw_macs, want_m.raw_macs, "{engine:?}");
+    }
+
+    // The default Auto policy stays bit-identical too (it only picks
+    // different wall-clock parameters).
+    let auto = PsramSession::builder().build().unwrap();
+    let fixed = PsramSession::builder()
+        .tuning(TunePolicy::Fixed(TuneParams::default()))
+        .build()
+        .unwrap();
+    assert_eq!(auto.run(k).unwrap().data(), fixed.run(k).unwrap().data());
+}

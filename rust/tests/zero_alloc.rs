@@ -18,6 +18,7 @@ use psram_imc::mttkrp::plan::{
 };
 use psram_imc::mttkrp::MttkrpStats;
 use psram_imc::tensor::{CooTensor, Matrix};
+use psram_imc::tune::TuneParams;
 use psram_imc::util::prng::Prng;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -131,4 +132,33 @@ fn steady_state_plan_execution_allocates_nothing() {
         .unwrap();
     let steady = allocs() - before;
     assert_eq!(steady, 0, "post-replan execution made {steady} allocations");
+    let warm_b = dense_out.data().to_vec();
+
+    // A tuned executor obeys the same contract: the intra-shard pool's
+    // threads are spawned at construction and its epoch handoff is
+    // futex-based, so after one warm-up (which grows the tuned-size tile
+    // scratch) the striped steady state allocates nothing either — per
+    // worker or otherwise.
+    let tuned = TuneParams { block_cycles: 64, intra_workers: 2 };
+    let mut texec = CpuTileExecutor::paper().with_tuning(&tuned);
+    let mut tscratch = PlanScratch::default();
+    execute_plan_into(&mut texec, &dense_plan, &mut tscratch, &mut stats, &mut dense_out)
+        .unwrap();
+    let before = allocs();
+    for _ in 0..3 {
+        execute_plan_into(
+            &mut texec,
+            &dense_plan,
+            &mut tscratch,
+            &mut stats,
+            &mut dense_out,
+        )
+        .unwrap();
+    }
+    let steady = allocs() - before;
+    assert_eq!(
+        steady, 0,
+        "tuned/striped execute_plan_into made {steady} heap allocations"
+    );
+    assert_eq!(dense_out.data(), &warm_b[..]);
 }
