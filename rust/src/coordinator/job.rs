@@ -44,6 +44,15 @@ pub struct PlanBatch {
     /// The shared plan (shape + arena handles; cloning is two refcount
     /// bumps, no payload copies).
     pub plan: TilePlan,
+    /// Transient-fault retry attempts already spent on this batch.  The
+    /// leader increments it when a worker reports a retryable
+    /// [`crate::util::error::Error::Fault`] and re-queues the batch;
+    /// once it exceeds the pool's
+    /// [`crate::coordinator::pool::RecoveryPolicy::max_batch_retries`]
+    /// the fault surfaces to the caller.  Re-queues after a worker
+    /// *death* do not charge an attempt — the batch did not fail, its
+    /// worker did.
+    pub attempt: u32,
 }
 
 impl PlanBatch {
@@ -106,6 +115,7 @@ mod tests {
             group: 0,
             images: 1..3,
             plan: plan.clone(),
+            attempt: 0,
         };
         assert_eq!(b.len(), 2);
         assert!(!b.is_empty());
@@ -133,6 +143,7 @@ mod tests {
             group: 0,
             images: 0..0,
             plan,
+            attempt: 0,
         };
         assert!(b.is_empty());
         assert_eq!(b.len(), 0);

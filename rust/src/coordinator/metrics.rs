@@ -15,7 +15,7 @@
 //! shard ran it.  Job rows are created lazily on first use (a `Mutex`-ed
 //! map looked up once per batch; the counters themselves stay atomic).
 
-use crate::mttkrp::pipeline::MttkrpStats;
+use crate::mttkrp::pipeline::{MttkrpStats, RecoveryStats};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -97,6 +97,23 @@ pub struct JobMetrics {
     pub useful_macs: AtomicU64,
     /// Raw MACs performed for this job (incl. padding).
     pub raw_macs: AtomicU64,
+    /// Transient-fault batch retries spent on this job's work (each one
+    /// re-executed a batch after a retryable `Error::Fault`).
+    pub retries: AtomicU64,
+    /// Batches re-queued for this job because their worker died mid-flight.
+    pub requeued_batches: AtomicU64,
+    /// Stored-image scrub rewrites performed while executing this job's
+    /// batches (checksum-detected upsets repaired from the golden arena
+    /// copy).
+    pub scrubs: AtomicU64,
+    /// Array write cycles spent on those scrub rewrites.  Recovery cost is
+    /// recorded *separately* from `reconfig_write_cycles` so the fault-free
+    /// cycle census — and `session.predict`'s cycle-exact match against it
+    /// — is unchanged by recovery work.
+    pub scrub_write_cycles: AtomicU64,
+    /// Submissions rerouted to the exact digital engine after recovery was
+    /// exhausted (`FaultPolicy::fallback`).
+    pub fallbacks: AtomicU64,
 }
 
 /// A point-in-time copy of one job's counters.
@@ -118,12 +135,25 @@ pub struct JobSnapshot {
     pub useful_macs: u64,
     /// Raw MACs.
     pub raw_macs: u64,
+    /// Transient-fault batch retries.
+    pub retries: u64,
+    /// Batches re-queued after a worker death.
+    pub requeued_batches: u64,
+    /// Stored-image scrub rewrites.
+    pub scrubs: u64,
+    /// Write cycles spent on scrub rewrites (recovery cost, kept out of
+    /// [`JobSnapshot::total_cycles`] so predict==measured holds fault-free).
+    pub scrub_write_cycles: u64,
+    /// Submissions rerouted to the exact digital engine.
+    pub fallbacks: u64,
 }
 
 impl JobSnapshot {
     /// Total array cycles attributed to the job (streamed +
     /// reconfiguration) — the quantity `session.predict` must match
-    /// cycle-exactly.
+    /// cycle-exactly.  Recovery write cycles are reported separately
+    /// ([`JobSnapshot::scrub_write_cycles`]); add them for the realised
+    /// device occupancy under faults.
     pub fn total_cycles(&self) -> u64 {
         self.streamed_cycles + self.reconfig_write_cycles
     }
@@ -161,6 +191,19 @@ pub struct Metrics {
     pub batches: AtomicU64,
     /// Batches executed by a worker other than their home shard.
     pub steals: AtomicU64,
+    /// Transient-fault batch retries across the pool.
+    pub batch_retries: AtomicU64,
+    /// Batches re-queued because their worker died mid-flight.
+    pub requeued_batches: AtomicU64,
+    /// Worker threads that died (panicked) while executing a batch.
+    pub worker_deaths: AtomicU64,
+    /// Dead workers respawned by the supervisor.
+    pub worker_respawns: AtomicU64,
+    /// Stored-image scrub rewrites across the pool.
+    pub scrubs: AtomicU64,
+    /// Array write cycles spent on scrub rewrites (kept out of
+    /// `write_cycles` so the fault-free census is unchanged by recovery).
+    pub scrub_write_cycles: AtomicU64,
     /// Per-shard counters (one entry per worker; empty for `default()`).
     pub shards: Vec<ShardMetrics>,
     /// Per-job counters, created lazily on first use (multi-tenant
@@ -216,6 +259,21 @@ impl Metrics {
             ),
             ("batches", self.batches.load(Ordering::Relaxed)),
             ("steals", self.steals.load(Ordering::Relaxed)),
+            ("batch_retries", self.batch_retries.load(Ordering::Relaxed)),
+            (
+                "requeued_batches",
+                self.requeued_batches.load(Ordering::Relaxed),
+            ),
+            ("worker_deaths", self.worker_deaths.load(Ordering::Relaxed)),
+            (
+                "worker_respawns",
+                self.worker_respawns.load(Ordering::Relaxed),
+            ),
+            ("scrubs", self.scrubs.load(Ordering::Relaxed)),
+            (
+                "scrub_write_cycles",
+                self.scrub_write_cycles.load(Ordering::Relaxed),
+            ),
         ]
     }
 
@@ -249,11 +307,32 @@ impl Metrics {
         jm
     }
 
+    /// Charge one executed unit's *recovery* counters (scrub rewrites and
+    /// their write cycles) into the global row, shard `shard`'s row is
+    /// untouched (scrubs are pool-level events, the per-shard census stays
+    /// the fault-free split), and job `job`'s row.
+    pub fn charge_recovery(&self, job: u64, rec: &RecoveryStats) {
+        if rec.scrubs == 0 {
+            return;
+        }
+        self.add(&self.scrubs, rec.scrubs);
+        self.add(&self.scrub_write_cycles, rec.scrub_write_cycles);
+        let jm = self.job(job);
+        self.add(&jm.scrubs, rec.scrubs);
+        self.add(&jm.scrub_write_cycles, rec.scrub_write_cycles);
+    }
+
     /// The counter row for job `id`, created (zeroed) on first use.  The
     /// returned handle stays valid after later insertions — callers may
-    /// hold it across many batches.
+    /// hold it across many batches.  A poisoned map (a worker panicked
+    /// mid-lookup) is recovered rather than propagated: the map holds only
+    /// `Arc`s to poison-safe atomic rows, and metrics must stay chargeable
+    /// while the coordinator supervises the panic.
     pub fn job(&self, id: u64) -> Arc<JobMetrics> {
-        let mut jobs = self.jobs.lock().expect("job metrics poisoned");
+        let mut jobs = self
+            .jobs
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
         Arc::clone(jobs.entry(id).or_default())
     }
 
@@ -264,7 +343,11 @@ impl Metrics {
     /// [`Metrics::jobs_snapshot`] or grow the map.
     pub fn job_snapshot(&self, id: u64) -> JobSnapshot {
         let row = {
-            let jobs = self.jobs.lock().expect("job metrics poisoned");
+            // Poison-recovered for the same reason as `Metrics::job`.
+            let jobs = self
+                .jobs
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             jobs.get(&id).cloned()
         };
         match row {
@@ -279,6 +362,11 @@ impl Metrics {
                     .load(Ordering::Relaxed),
                 useful_macs: row.useful_macs.load(Ordering::Relaxed),
                 raw_macs: row.raw_macs.load(Ordering::Relaxed),
+                retries: row.retries.load(Ordering::Relaxed),
+                requeued_batches: row.requeued_batches.load(Ordering::Relaxed),
+                scrubs: row.scrubs.load(Ordering::Relaxed),
+                scrub_write_cycles: row.scrub_write_cycles.load(Ordering::Relaxed),
+                fallbacks: row.fallbacks.load(Ordering::Relaxed),
             },
             None => JobSnapshot {
                 job: id,
@@ -289,6 +377,11 @@ impl Metrics {
                 reconfig_write_cycles: 0,
                 useful_macs: 0,
                 raw_macs: 0,
+                retries: 0,
+                requeued_batches: 0,
+                scrubs: 0,
+                scrub_write_cycles: 0,
+                fallbacks: 0,
             },
         }
     }
@@ -296,7 +389,11 @@ impl Metrics {
     /// Snapshot rows for every job that has submitted work, sorted by id.
     pub fn jobs_snapshot(&self) -> Vec<JobSnapshot> {
         let mut ids: Vec<u64> = {
-            let jobs = self.jobs.lock().expect("job metrics poisoned");
+            // Poison-recovered for the same reason as `Metrics::job`.
+            let jobs = self
+                .jobs
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             jobs.keys().copied().collect()
         };
         ids.sort_unstable();
@@ -402,5 +499,26 @@ mod tests {
         let snap = m.snapshot();
         assert_eq!(snap[0].0, "requests");
         assert_eq!(snap[6], ("backpressure_stalls", 2));
+        // Fault counters are appended after the historical rows.
+        assert_eq!(snap[7].0, "batches");
+        assert_eq!(snap[8].0, "steals");
+        assert_eq!(snap[9].0, "batch_retries");
+        assert_eq!(snap[14], ("scrub_write_cycles", 0));
+    }
+
+    #[test]
+    fn recovery_charges_global_and_job_but_not_census() {
+        let m = Metrics::with_shards(2);
+        let rec = RecoveryStats { scrubs: 2, scrub_write_cycles: 512 };
+        m.charge_recovery(7, &rec);
+        m.charge_recovery(7, &RecoveryStats::default()); // no-op
+        assert_eq!(m.scrubs.load(Ordering::Relaxed), 2);
+        assert_eq!(m.scrub_write_cycles.load(Ordering::Relaxed), 512);
+        // The fault-free census is untouched by recovery work.
+        assert_eq!(m.write_cycles.load(Ordering::Relaxed), 0);
+        let js = m.job_snapshot(7);
+        assert_eq!(js.scrubs, 2);
+        assert_eq!(js.scrub_write_cycles, 512);
+        assert_eq!(js.total_cycles(), 0, "recovery is outside total_cycles");
     }
 }

@@ -47,6 +47,20 @@
 //! job's [`metrics::JobMetrics`] row in addition to the global and
 //! per-shard counters, so N decomposition jobs interleaving on one warm
 //! pool (the `crate::session` layer) each get exact cycle accounting.
+//!
+//! Supervision: the leader accounts for exactly one message per issued
+//! batch, so worker failures can never hang a request.  A batch that
+//! fails with a retryable [`crate::util::error::Error::Fault`] is
+//! re-queued with capped exponential backoff up to
+//! [`pool::RecoveryPolicy::max_batch_retries`]; a worker that *dies*
+//! (panics) has its in-flight batch re-queued (no retry charged) and is
+//! respawned from the retained executor factory within
+//! [`pool::RecoveryPolicy::respawn_budget`].  When the budget is
+//! exhausted the pool marks itself broken: the current request returns a
+//! typed [`crate::util::error::Error::Coordinator`] and later
+//! submissions fail fast instead of queueing work no worker will drain.
+//! Under any fault schedule the result is bit-identical to the
+//! fault-free run or a typed error — never silent corruption.
 
 pub mod job;
 pub mod metrics;
@@ -56,4 +70,5 @@ pub use job::{BatchResult, PlanBatch, PlanPartial};
 pub use metrics::{JobMetrics, JobSnapshot, Metrics, ShardMetrics, ShardSnapshot};
 pub use pool::{
     CoordinatedBackend, CoordinatedSparseBackend, Coordinator, CoordinatorConfig,
+    RecoveryPolicy,
 };

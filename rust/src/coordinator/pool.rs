@@ -36,6 +36,7 @@
 use super::job::{BatchResult, PlanBatch, PlanPartial};
 use super::metrics::Metrics;
 use crate::cpd::backend::MttkrpBackend;
+use crate::fault::Backoff;
 use crate::mttkrp::cache::{DensePlanCache, SparsePlanCache};
 use crate::mttkrp::pipeline::TileExecutor;
 use crate::mttkrp::plan::{
@@ -48,8 +49,38 @@ use crate::tensor::{krp_all_but, CooTensor, DenseTensor, Matrix};
 use crate::util::error::{Error, Result};
 use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
+
+/// How the leader recovers from worker faults (see `crate::fault` for the
+/// fault model).  Part of [`CoordinatorConfig`]; the session surface maps
+/// its `crate::fault::FaultPolicy` onto this.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecoveryPolicy {
+    /// Re-executions allowed per batch after a retryable
+    /// [`Error::is_transient_fault`] failure, before the fault surfaces
+    /// to the caller.  Deterministic errors (shape, config, runtime)
+    /// never retry — they would fail identically.
+    pub max_batch_retries: u32,
+    /// Capped exponential backoff between those retries (host wall-clock
+    /// only; never charged to the modeled cycle ledgers).
+    pub backoff: Backoff,
+    /// Dead (panicked) workers the supervisor may respawn over the pool's
+    /// lifetime.  Once exhausted, the next death breaks the pool: the
+    /// in-flight request fails with a typed `Error::Coordinator` and
+    /// later submissions fail fast (never a hang, never a leaked worker).
+    pub respawn_budget: u32,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy {
+            max_batch_retries: 2,
+            backoff: Backoff::default(),
+            respawn_budget: 2,
+        }
+    }
+}
 
 /// Pool configuration.
 #[derive(Debug, Clone)]
@@ -65,11 +96,19 @@ pub struct CoordinatorConfig {
     pub batch_size: usize,
     /// Allow idle workers to steal batches from other shards' queues.
     pub steal: bool,
+    /// Fault recovery: batch retry/backoff and the worker respawn budget.
+    pub recovery: RecoveryPolicy,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        CoordinatorConfig { workers: 4, queue_depth: 8, batch_size: 4, steal: true }
+        CoordinatorConfig {
+            workers: 4,
+            queue_depth: 8,
+            batch_size: 4,
+            steal: true,
+            recovery: RecoveryPolicy::default(),
+        }
     }
 }
 
@@ -101,18 +140,50 @@ impl CoordinatorConfig {
             queue_depth: 2 * workers,
             batch_size: r_blocks.clamp(1, 16),
             steal: true,
+            recovery: RecoveryPolicy::default(),
         }
     }
 }
 
-/// What a worker sends back for one executed batch.
+/// What a worker sends back for one executed batch.  Every batch a worker
+/// picks up produces *exactly one* message — `Done`, `Failed`, or `Died`
+/// (sent as the thread's last act before exiting on a panic) — which is
+/// what lets the leader account for every outstanding image without ever
+/// blocking on a result that cannot arrive.
 enum WorkerMsg {
     Done(BatchResult),
-    Failed { req_id: u64, images: usize, error: String },
+    /// The batch errored; it is returned to the leader so retryable
+    /// (`Error::is_transient_fault`) failures can be re-queued.
+    Failed { batch: PlanBatch, error: Error },
+    /// The worker panicked mid-batch and is exiting; the in-flight batch
+    /// is returned for re-queueing and the worker needs a respawn.
+    Died { worker: usize, batch: PlanBatch, panic: String },
+}
+
+/// Render a worker panic payload for error context.  Injected deaths
+/// (`crate::fault::InjectedDeath`) are labelled precisely; string panics
+/// pass through.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(d) = payload.downcast_ref::<crate::fault::InjectedDeath>() {
+        format!("injected worker death (worker {}, load {})", d.worker, d.load_idx)
+    } else if let Some(s) = payload.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
+    }
 }
 
 /// The per-shard queues behind one mutex.  Lock granularity is fine: a
 /// batch costs milliseconds of compute against microseconds of queueing.
+///
+/// Lock poisoning: every critical section on this state is a plain-data
+/// queue operation that cannot panic, so a poisoned mutex can only mean a
+/// thread died *elsewhere* while holding the guard across an unrelated
+/// abort.  All lock sites therefore recover the guard
+/// (`PoisonError::into_inner`) instead of propagating a panic — the
+/// supervisor must keep scheduling while it cleans up a dead worker.
 struct QueueState {
     queues: Vec<VecDeque<PlanBatch>>,
     /// Batches currently queued (not yet picked up) across all shards.
@@ -126,11 +197,18 @@ struct Shared {
     work_cv: Condvar,
 }
 
+impl Shared {
+    /// Lock the queue state, recovering from poisoning (see [`QueueState`]).
+    fn lock(&self) -> std::sync::MutexGuard<'_, QueueState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
 /// Pop the next batch for worker `me`: own queue first (front), then — if
 /// stealing is on — the tail of the longest other queue.  Blocks until work
 /// arrives; returns `None` on shutdown (after draining).
 fn next_batch(shared: &Shared, me: usize, steal: bool) -> Option<(PlanBatch, bool)> {
-    let mut st = shared.state.lock().expect("coordinator state poisoned");
+    let mut st = shared.lock();
     loop {
         if let Some(b) = st.queues[me].pop_front() {
             st.queued -= 1;
@@ -141,6 +219,8 @@ fn next_batch(shared: &Shared, me: usize, steal: bool) -> Option<(PlanBatch, boo
                 .filter(|&j| j != me && !st.queues[j].is_empty())
                 .max_by_key(|&j| st.queues[j].len());
             if let Some(j) = victim {
+                // The filter above guarantees the victim queue is
+                // non-empty while we still hold the lock.
                 let b = st.queues[j].pop_back().expect("victim queue non-empty");
                 st.queued -= 1;
                 return Some((b, true));
@@ -149,8 +229,68 @@ fn next_batch(shared: &Shared, me: usize, steal: bool) -> Option<(PlanBatch, boo
         if st.shutdown {
             return None;
         }
-        st = shared.work_cv.wait(st).expect("coordinator state poisoned");
+        st = shared
+            .work_cv
+            .wait(st)
+            .unwrap_or_else(PoisonError::into_inner);
     }
+}
+
+/// A worker's boxed executor (the pool stores executors type-erased so a
+/// respawn factory can rebuild any of them).
+type BoxedExec = Box<dyn TileExecutor + Send>;
+/// The retained executor factory used to respawn dead workers.
+type ExecFactory = Box<dyn FnMut(usize) -> Result<BoxedExec> + Send>;
+
+/// Spawn one shard worker thread.  The body is wrapped in `catch_unwind`,
+/// so a panicking executor (a real bug or an injected
+/// `crate::fault::FaultKind::WorkerDeath`) reports `Died` to the leader —
+/// carrying the in-flight batch for re-queueing — instead of silently
+/// vanishing and hanging the reduction.
+fn spawn_worker(
+    widx: usize,
+    mut exec: BoxedExec,
+    shared: Arc<Shared>,
+    result_tx: Sender<WorkerMsg>,
+    metrics: Arc<Metrics>,
+    steal: bool,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        // Worker-lifetime tile scratch: grown on the first batch, then
+        // every streamed cycle is allocation-free.
+        let mut scratch = TileScratch::default();
+        loop {
+            let (batch, stolen) = match next_batch(&shared, widx, steal) {
+                Some(x) => x,
+                None => break,
+            };
+            if stolen {
+                metrics.add(&metrics.steals, 1);
+                metrics.add(&metrics.shard(widx).steals, 1);
+            }
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || run_batch(&mut exec, &batch, widx, &metrics, &mut scratch),
+            ));
+            match outcome {
+                Ok(Ok(res)) => {
+                    if result_tx.send(WorkerMsg::Done(res)).is_err() {
+                        break;
+                    }
+                }
+                Ok(Err(error)) => {
+                    let _ = result_tx.send(WorkerMsg::Failed { batch, error });
+                }
+                Err(payload) => {
+                    // Last act: hand the batch back, then die.  The
+                    // executor may be in an arbitrary state — it exits
+                    // with this thread and a respawn builds a fresh one.
+                    let panic = panic_message(payload.as_ref());
+                    let _ = result_tx.send(WorkerMsg::Died { worker: widx, batch, panic });
+                    break;
+                }
+            }
+        }
+    })
 }
 
 /// The persistent sharded coordinator.
@@ -159,7 +299,20 @@ pub struct Coordinator {
     metrics: Arc<Metrics>,
     shared: Arc<Shared>,
     result_rx: Receiver<WorkerMsg>,
+    /// Kept so respawned workers can clone a sender — and so `recv` can
+    /// never observe a closed channel while the leader still waits.
+    result_tx: Sender<WorkerMsg>,
+    /// The executor factory, retained to respawn dead workers.
+    factory: ExecFactory,
     handles: Vec<JoinHandle<()>>,
+    /// Liveness per shard worker (false between a death and its respawn).
+    alive: Vec<bool>,
+    /// Respawns remaining from [`RecoveryPolicy::respawn_budget`].
+    respawns_left: u32,
+    /// Set when supervision could not restore the pool (respawn budget
+    /// exhausted or the factory failed): submissions fail fast with this
+    /// context instead of queueing work no worker will run.
+    broken: Option<String>,
     next_req: u64,
     rows: usize,
     wpr: usize,
@@ -171,17 +324,25 @@ impl Coordinator {
     pub fn with_workers<E, F>(workers: usize, make_exec: F) -> Result<Self>
     where
         E: TileExecutor + Send + 'static,
-        F: Fn(usize) -> Result<E>,
+        F: FnMut(usize) -> Result<E> + Send + 'static,
     {
         Coordinator::spawn(CoordinatorConfig::new(workers), make_exec)
     }
 
     /// Spawn a pool; `make_exec(worker_idx)` builds each worker's executor.
     /// All executors must share the same tile geometry.
-    pub fn spawn<E, F>(cfg: CoordinatorConfig, make_exec: F) -> Result<Self>
+    ///
+    /// The factory is retained for the pool's lifetime: when a worker
+    /// dies (panics), the supervisor calls it again with the same index
+    /// to respawn a replacement, within
+    /// [`RecoveryPolicy::respawn_budget`] — hence the `Send + 'static`
+    /// bounds.  Factories that capture per-call state should derive the
+    /// executor from the worker index alone so respawned workers are
+    /// equivalent to their predecessors.
+    pub fn spawn<E, F>(cfg: CoordinatorConfig, mut make_exec: F) -> Result<Self>
     where
         E: TileExecutor + Send + 'static,
-        F: Fn(usize) -> Result<E>,
+        F: FnMut(usize) -> Result<E> + Send + 'static,
     {
         if cfg.workers == 0 {
             return Err(Error::Coordinator("zero workers".to_string()));
@@ -192,9 +353,9 @@ impl Coordinator {
         if cfg.batch_size == 0 {
             return Err(Error::Coordinator("zero batch size".to_string()));
         }
-        let mut execs = Vec::with_capacity(cfg.workers);
+        let mut execs: Vec<BoxedExec> = Vec::with_capacity(cfg.workers);
         for i in 0..cfg.workers {
-            execs.push(make_exec(i)?);
+            execs.push(Box::new(make_exec(i)?));
         }
         let rows = execs[0].rows();
         let wpr = execs[0].words_per_row();
@@ -219,54 +380,74 @@ impl Coordinator {
 
         let steal = cfg.steal;
         let mut handles = Vec::with_capacity(cfg.workers);
-        for (widx, mut exec) in execs.into_iter().enumerate() {
-            let shared = Arc::clone(&shared);
-            let result_tx: Sender<WorkerMsg> = result_tx.clone();
-            let metrics = Arc::clone(&metrics);
-            handles.push(std::thread::spawn(move || {
-                // Worker-lifetime tile scratch: grown on the first batch,
-                // then every streamed cycle is allocation-free.
-                let mut scratch = TileScratch::default();
-                loop {
-                    let (batch, stolen) = match next_batch(&shared, widx, steal) {
-                        Some(x) => x,
-                        None => break,
-                    };
-                    if stolen {
-                        metrics.add(&metrics.steals, 1);
-                        metrics.add(&metrics.shard(widx).steals, 1);
-                    }
-                    let req_id = batch.req_id;
-                    let images = batch.len();
-                    match run_batch(&mut exec, &batch, widx, &metrics, &mut scratch) {
-                        Ok(res) => {
-                            if result_tx.send(WorkerMsg::Done(res)).is_err() {
-                                break;
-                            }
-                        }
-                        Err(e) => {
-                            let _ = result_tx.send(WorkerMsg::Failed {
-                                req_id,
-                                images,
-                                error: e.to_string(),
-                            });
-                        }
-                    }
-                }
-            }));
+        for (widx, exec) in execs.into_iter().enumerate() {
+            handles.push(spawn_worker(
+                widx,
+                exec,
+                Arc::clone(&shared),
+                result_tx.clone(),
+                Arc::clone(&metrics),
+                steal,
+            ));
         }
 
+        let respawns_left = cfg.recovery.respawn_budget;
+        let alive = vec![true; cfg.workers];
         Ok(Coordinator {
             cfg,
             metrics,
             shared,
             result_rx,
+            result_tx,
+            factory: Box::new(move |i| {
+                make_exec(i).map(|e| Box::new(e) as BoxedExec)
+            }),
             handles,
+            alive,
+            respawns_left,
+            broken: None,
             next_req: 0,
             rows,
             wpr,
             lanes,
         })
+    }
+
+    /// Respawn dead worker `widx` within the budget.  On success the
+    /// worker is live again (its shard queue drains as before); on
+    /// failure the returned message says why the pool cannot be restored.
+    fn respawn(&mut self, widx: usize) -> std::result::Result<(), String> {
+        if self.respawns_left == 0 {
+            return Err(format!(
+                "worker {widx} died and the respawn budget is exhausted"
+            ));
+        }
+        let exec = match (self.factory)(widx) {
+            Ok(e) => e,
+            Err(e) => {
+                return Err(format!("worker {widx} died and respawn failed: {e}"))
+            }
+        };
+        if exec.rows() != self.rows
+            || exec.words_per_row() != self.wpr
+            || exec.max_lanes() != self.lanes
+        {
+            return Err(format!(
+                "worker {widx} died and the respawned executor has mismatched geometry"
+            ));
+        }
+        self.respawns_left -= 1;
+        self.handles.push(spawn_worker(
+            widx,
+            exec,
+            Arc::clone(&self.shared),
+            self.result_tx.clone(),
+            Arc::clone(&self.metrics),
+            self.cfg.steal,
+        ));
+        self.alive[widx] = true;
+        self.metrics.add(&self.metrics.worker_respawns, 1);
+        Ok(())
     }
 
     /// Pool metrics.
@@ -294,7 +475,7 @@ impl Coordinator {
     /// Try to enqueue a batch on its home shard without blocking; returns
     /// the batch back when the bounded queue is full.
     fn try_submit(&self, batch: PlanBatch) -> std::result::Result<(), PlanBatch> {
-        let mut st = self.shared.state.lock().expect("coordinator state poisoned");
+        let mut st = self.shared.lock();
         if st.queued >= self.cfg.queue_depth {
             return Err(batch);
         }
@@ -372,6 +553,14 @@ impl Coordinator {
                 "coordinator pool is shut down".to_string(),
             ));
         }
+        if let Some(why) = &self.broken {
+            // Fail fast: a broken pool has at least one permanently dead
+            // shard, so queueing work would hang (steal-off) or silently
+            // degrade.  The caller gets the original supervision context.
+            return Err(Error::Coordinator(format!(
+                "coordinator pool is broken: {why}"
+            )));
+        }
         if out.rows() != plan.out_rows || out.cols() != plan.out_cols {
             return Err(Error::Coordinator(format!(
                 "output is {}x{} but plan produces {}x{}",
@@ -417,6 +606,7 @@ impl Coordinator {
                     group: gi,
                     images: off..off + take,
                     plan: plan.clone(),
+                    attempt: 0,
                 });
                 off += take;
             }
@@ -450,7 +640,10 @@ impl Coordinator {
                 }
             }
 
-            // Consume one result.
+            // Consume one result.  Every submitted batch produces exactly
+            // one message (Done / Failed / Died), so this loop's
+            // accounting can always terminate without hanging on a result
+            // that cannot arrive.
             match self.result_rx.recv() {
                 Ok(WorkerMsg::Done(res)) => {
                     if res.req_id != req_id {
@@ -461,11 +654,85 @@ impl Coordinator {
                         received_images += 1;
                     }
                 }
-                Ok(WorkerMsg::Failed { req_id: rid, images, error: e }) => {
-                    if rid == req_id {
-                        received_images += images;
+                Ok(WorkerMsg::Failed { mut batch, error: why }) => {
+                    if batch.req_id != req_id {
+                        continue; // stale failure from an aborted request
+                    }
+                    if error.is_none()
+                        && why.is_transient_fault()
+                        && batch.attempt < self.cfg.recovery.max_batch_retries
+                    {
+                        // Retryable fault under budget: back off, then
+                        // re-queue at the front so the retry runs before
+                        // fresh work.  The backoff is host wall-clock —
+                        // the device is idle, so nothing is charged to
+                        // the cycle ledgers.
+                        self.cfg.recovery.backoff.wait(batch.attempt);
+                        batch.attempt += 1;
+                        self.metrics.add(&self.metrics.batch_retries, 1);
+                        let jm = self.metrics.job(batch.job);
+                        self.metrics.add(&jm.retries, 1);
+                        batches.push_front(batch);
+                    } else {
+                        // Deterministic error, retries exhausted, or the
+                        // request already failed: surface the first error
+                        // typed and write the batch off.
+                        received_images += batch.len();
                         if error.is_none() {
-                            error = Some(Error::Coordinator(e));
+                            error = Some(why);
+                        }
+                    }
+                }
+                Ok(WorkerMsg::Died { worker, batch, panic }) => {
+                    self.metrics.add(&self.metrics.worker_deaths, 1);
+                    self.alive[worker] = false;
+                    let stale = batch.req_id != req_id;
+                    match self.respawn(worker) {
+                        Ok(()) => {
+                            // Supervision succeeded: the shard is live
+                            // again.  Re-queue the in-flight batch — a
+                            // death charges no retry attempt (the batch
+                            // did not fail; its worker did).
+                            if !stale {
+                                if error.is_none() {
+                                    self.metrics.add(&self.metrics.requeued_batches, 1);
+                                    let jm = self.metrics.job(batch.job);
+                                    self.metrics.add(&jm.requeued_batches, 1);
+                                    batches.push_front(batch);
+                                } else {
+                                    received_images += batch.len();
+                                }
+                            }
+                        }
+                        Err(why) => {
+                            // The pool cannot be restored: fail this
+                            // request with a typed error, mark the pool
+                            // broken (later submissions fail fast), and
+                            // write off everything no worker will run.
+                            let ctx = format!("{why} (panic: {panic})");
+                            self.broken = Some(ctx.clone());
+                            if error.is_none() {
+                                error = Some(Error::Coordinator(ctx));
+                            }
+                            if !stale {
+                                received_images += batch.len();
+                            }
+                            // Drain the dead shard's queue under the lock
+                            // (race-free against stealing); live workers
+                            // keep draining every other shard, and any
+                            // batch stolen before this point produces its
+                            // own message.
+                            let drained: VecDeque<PlanBatch> = {
+                                let mut st = self.shared.lock();
+                                let q = std::mem::take(&mut st.queues[worker]);
+                                st.queued -= q.len();
+                                q
+                            };
+                            for b in drained {
+                                if b.req_id == req_id {
+                                    received_images += b.len();
+                                }
+                            }
                         }
                     }
                 }
@@ -553,7 +820,21 @@ impl Coordinator {
     /// True once [`Coordinator::shutdown`] has run (explicitly or via
     /// `Drop`); a shut pool rejects new plans instead of deadlocking.
     pub fn is_shut(&self) -> bool {
-        self.shared.state.lock().expect("coordinator state poisoned").shutdown
+        self.shared.lock().shutdown
+    }
+
+    /// Why the pool is broken (supervision could not restore a dead
+    /// worker), or `None` while it is healthy.  A broken pool rejects new
+    /// plans fast with a typed `Error::Coordinator`; shutdown/drop stay
+    /// clean.
+    pub fn broken(&self) -> Option<&str> {
+        self.broken.as_deref()
+    }
+
+    /// Worker respawns still available from
+    /// [`RecoveryPolicy::respawn_budget`].
+    pub fn respawns_left(&self) -> u32 {
+        self.respawns_left
     }
 
     /// Gracefully stop the pool: drain queued work, join every worker.
@@ -566,7 +847,7 @@ impl Coordinator {
     /// after shutdown fail fast with a `Coordinator` error.
     pub fn shutdown(&mut self) {
         {
-            let mut st = self.shared.state.lock().expect("coordinator state poisoned");
+            let mut st = self.shared.lock();
             if st.shutdown && self.handles.is_empty() {
                 return; // already fully shut — nothing to signal or join
             }
@@ -634,6 +915,12 @@ fn run_batch<E: TileExecutor>(
     // writes split from streamed-lane cycles per shard — and attributed
     // to the submitting job (stolen batches still charge their job).
     let jm = metrics.charge(worker, batch.job, &stats);
+    // Recovery work (integrity-scrub rewrites) performed by the executor
+    // during this batch is charged separately from the fault-free census
+    // — its write cycles already landed in the executor's own
+    // `CycleLedger` via the scrub's `load_image` re-write.
+    let rec = exec.drain_recovery();
+    metrics.charge_recovery(batch.job, &rec);
 
     if let Some(e) = failed {
         return Err(e);
@@ -855,6 +1142,7 @@ mod tests {
                 queue_depth: 64,
                 batch_size: 1,
                 steal: true,
+                ..Default::default()
             },
             |i| {
                 Ok(SlowExec {
@@ -923,6 +1211,7 @@ mod tests {
                 queue_depth: 1,
                 batch_size: 1,
                 steal: true,
+                ..Default::default()
             },
             |_| Ok(CpuTileExecutor::paper()),
         )
@@ -1119,5 +1408,194 @@ mod tests {
         let krp = Matrix::randn(20, 4, &mut rng);
         let plan = DensePlanner::new(128, 16, 52).plan_unfolded(&unf, &krp).unwrap();
         assert!(pool.execute_plan(&plan).is_err());
+    }
+
+    use crate::fault::{
+        silence_injected_death_panics, Backoff, DeathMode, FaultEvent, FaultInjector,
+        FaultKind, FaultPlan, FaultPolicy, FaultyExecutor,
+    };
+
+    /// A single-worker pool whose executor injects `events` (worker 0
+    /// only, so every schedule is deterministic).
+    fn fault_pool(
+        events: Vec<FaultEvent>,
+        recovery: RecoveryPolicy,
+    ) -> (Coordinator, Arc<FaultInjector>) {
+        silence_injected_death_panics();
+        let inj = Arc::new(FaultInjector::new(&FaultPlan::new(77, events)));
+        let injector = Arc::clone(&inj);
+        let pool = Coordinator::spawn(
+            CoordinatorConfig { recovery, ..CoordinatorConfig::new(1) },
+            move |i| {
+                Ok(FaultyExecutor::new(
+                    CpuTileExecutor::paper(),
+                    Arc::clone(&injector),
+                    i,
+                    DeathMode::Panic,
+                    &FaultPolicy::default(),
+                ))
+            },
+        )
+        .unwrap();
+        (pool, inj)
+    }
+
+    fn no_wait() -> RecoveryPolicy {
+        RecoveryPolicy { backoff: Backoff::none(), ..RecoveryPolicy::default() }
+    }
+
+    /// `[20, 8, 8]` at rank 8 lowers to exactly one image (one batch), so
+    /// a single-worker pool executes a fully deterministic load schedule.
+    fn single_batch_problem(seed: u64) -> (DenseTensor, Vec<Matrix>, Matrix) {
+        let (x, factors) = rand_problem(seed, &[20, 8, 8], 8);
+        let mut exec = CpuTileExecutor::paper();
+        let single = PsramPipeline::new(&mut exec).mttkrp(&x, &factors, 0).unwrap();
+        (x, factors, single)
+    }
+
+    #[test]
+    fn transient_fault_retries_to_bitexact_result() {
+        let (x, factors, single) = single_batch_problem(41);
+        let (mut pool, inj) = fault_pool(
+            vec![FaultEvent { worker: 0, load_idx: 0, kind: FaultKind::Transient }],
+            no_wait(),
+        );
+        let dist = pool.mttkrp(&x, &factors, 0).unwrap();
+        assert_eq!(single.data(), dist.data(), "retried run must stay bit-exact");
+        assert_eq!(inj.injected(), (0, 1, 0));
+        let m = pool.metrics();
+        use std::sync::atomic::Ordering;
+        assert_eq!(m.batch_retries.load(Ordering::Relaxed), 1);
+        assert_eq!(m.job_snapshot(0).retries, 1);
+        assert_eq!(m.worker_deaths.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn retries_exhausted_surface_typed_fault_and_pool_survives() {
+        let (x, factors, single) = single_batch_problem(42);
+        let (mut pool, _inj) = fault_pool(
+            vec![
+                FaultEvent { worker: 0, load_idx: 0, kind: FaultKind::Transient },
+                FaultEvent { worker: 0, load_idx: 1, kind: FaultKind::Transient },
+            ],
+            RecoveryPolicy { max_batch_retries: 1, ..no_wait() },
+        );
+        let err = pool.mttkrp(&x, &factors, 0).unwrap_err();
+        assert!(err.is_transient_fault(), "typed fault expected, got {err}");
+        assert!(err.to_string().contains("injected transient"), "{err}");
+        // The pool survives: the schedule is exhausted, so the same
+        // request now succeeds bit-exactly.
+        let dist = pool.mttkrp(&x, &factors, 0).unwrap();
+        assert_eq!(single.data(), dist.data());
+    }
+
+    #[test]
+    fn image_upset_is_scrubbed_and_charged_outside_the_census() {
+        let (x, factors, single) = single_batch_problem(43);
+        // Fault-free reference pool for the cycle census.
+        let (mut clean, _) = fault_pool(Vec::new(), no_wait());
+        clean.mttkrp(&x, &factors, 0).unwrap();
+        let clean_snap = clean.metrics().snapshot();
+
+        let (mut pool, inj) = fault_pool(
+            vec![FaultEvent {
+                worker: 0,
+                load_idx: 0,
+                kind: FaultKind::ImageUpset { bits: 5 },
+            }],
+            no_wait(),
+        );
+        let dist = pool.mttkrp(&x, &factors, 0).unwrap();
+        assert_eq!(single.data(), dist.data(), "scrubbed run must stay bit-exact");
+        assert_eq!(inj.injected(), (1, 0, 0));
+        use std::sync::atomic::Ordering;
+        let m = pool.metrics();
+        assert_eq!(m.scrubs.load(Ordering::Relaxed), 1);
+        // One rewrite of a 256-row image, charged as recovery...
+        assert_eq!(m.scrub_write_cycles.load(Ordering::Relaxed), 256);
+        let js = m.job_snapshot(0);
+        assert_eq!(js.scrubs, 1);
+        assert_eq!(js.scrub_write_cycles, 256);
+        // ...while the fault-free census (incl. reconfiguration writes)
+        // is identical to the clean pool's.
+        assert_eq!(m.snapshot()[..7], clean_snap[..7]);
+    }
+
+    #[test]
+    fn worker_death_is_supervised_requeued_and_respawned() {
+        let (x, factors, single) = single_batch_problem(44);
+        let (mut pool, inj) = fault_pool(
+            vec![FaultEvent { worker: 0, load_idx: 0, kind: FaultKind::WorkerDeath }],
+            no_wait(),
+        );
+        let dist = pool.mttkrp(&x, &factors, 0).unwrap();
+        assert_eq!(single.data(), dist.data(), "respawned run must stay bit-exact");
+        assert_eq!(inj.injected(), (0, 0, 1));
+        use std::sync::atomic::Ordering;
+        let m = pool.metrics();
+        assert_eq!(m.worker_deaths.load(Ordering::Relaxed), 1);
+        assert_eq!(m.worker_respawns.load(Ordering::Relaxed), 1);
+        assert_eq!(m.requeued_batches.load(Ordering::Relaxed), 1);
+        assert_eq!(m.job_snapshot(0).requeued_batches, 1);
+        assert_eq!(pool.respawns_left(), no_wait().respawn_budget - 1);
+        assert!(pool.broken().is_none());
+        // The healed pool keeps serving requests.
+        let again = pool.mttkrp(&x, &factors, 0).unwrap();
+        assert_eq!(single.data(), again.data());
+    }
+
+    #[test]
+    fn respawn_budget_exhausted_breaks_pool_with_typed_error() {
+        let (x, factors, _) = single_batch_problem(45);
+        let (mut pool, _inj) = fault_pool(
+            vec![FaultEvent { worker: 0, load_idx: 0, kind: FaultKind::WorkerDeath }],
+            RecoveryPolicy { respawn_budget: 0, ..no_wait() },
+        );
+        let err = pool.mttkrp(&x, &factors, 0).unwrap_err();
+        assert!(matches!(err, Error::Coordinator(_)), "{err}");
+        assert!(err.to_string().contains("respawn budget"), "{err}");
+        assert!(pool.broken().is_some());
+        // Submit-after-worker-death fails fast with a typed error — no
+        // hang on a queue no worker will drain.
+        let err2 = pool.mttkrp(&x, &factors, 0).unwrap_err();
+        assert!(err2.to_string().contains("broken"), "{err2}");
+        // Shutdown and drop stay clean with a dead shard.
+        pool.shutdown();
+        assert!(pool.is_shut());
+        drop(pool);
+    }
+
+    #[test]
+    fn deterministic_errors_never_retry() {
+        // `Error::Runtime` is not a transient fault: it must surface on
+        // the first failure with zero retries (it would fail identically).
+        struct Broken2;
+        impl TileExecutor for Broken2 {
+            fn rows(&self) -> usize {
+                256
+            }
+            fn words_per_row(&self) -> usize {
+                32
+            }
+            fn max_lanes(&self) -> usize {
+                52
+            }
+            fn load_image(&mut self, _: &[i8]) -> Result<()> {
+                Err(Error::Runtime("deterministic failure".to_string()))
+            }
+            fn compute_into(&mut self, _: &[u8], _: usize, _: &mut [i32]) -> Result<()> {
+                unreachable!()
+            }
+            fn cycles(&self) -> crate::psram::CycleLedger {
+                crate::psram::CycleLedger::default()
+            }
+        }
+        let (x, factors, _) = single_batch_problem(46);
+        let mut pool = Coordinator::with_workers(1, |_| Ok(Broken2)).unwrap();
+        let err = pool.mttkrp(&x, &factors, 0).unwrap_err();
+        assert!(!err.is_transient_fault());
+        assert!(err.to_string().contains("deterministic failure"), "{err}");
+        use std::sync::atomic::Ordering;
+        assert_eq!(pool.metrics().batch_retries.load(Ordering::Relaxed), 0);
     }
 }

@@ -1,0 +1,800 @@
+//! Deterministic fault injection and the self-healing primitives above it.
+//!
+//! The paper's 17-PetaOps headline assumes an ideal device, but real
+//! pSRAM arrays drift thermally, lose stored bits to retention upsets
+//! (`crate::device::mrr::MicroRing::thermal_ber`,
+//! [`crate::psram::PsramArray::inject_bit_errors`]), and live in hosts
+//! whose workers can die.  This module supplies the *controlled* version
+//! of those failures plus the detection/recovery machinery the rest of
+//! the stack builds on:
+//!
+//! * [`FaultPlan`] — a deterministic, seeded schedule of [`FaultEvent`]s
+//!   (stored-image bit upsets, transient executor errors, worker deaths),
+//!   reproducible from a single `u64` seed so every chaos test is
+//!   replayable (`tests/chaos.rs`, `CHAOS_SEED`);
+//! * [`FaultInjector`] — the thread-safe consume-once event store the
+//!   executors query; each event fires exactly once even across worker
+//!   respawns;
+//! * [`FaultyExecutor`] — a [`TileExecutor`] wrapper that injects the
+//!   scheduled faults at its image-load sites and implements the
+//!   **integrity scrub**: a checksum per stored image, verified before
+//!   every compute block, with corrupted images rewritten from the golden
+//!   plan-arena copy under a bounded per-image budget.  Scrub rewrites go
+//!   through the inner executor's `load_image`, so their write cycles are
+//!   *charged* to its [`crate::psram::CycleLedger`] — recovery has a
+//!   modeled cost, not a free pass;
+//! * [`FaultPolicy`] / [`Backoff`] — the session-surface recovery policy
+//!   ([`crate::session::SessionBuilder::fault_policy`]): batch retries
+//!   with capped exponential backoff, scrub on/off, worker respawn
+//!   budget, and optional fallback to the exact digital engine.
+//!
+//! The invariant the layers above pin (`tests/chaos.rs`): under any
+//! injected fault schedule, a session either returns results
+//! **bit-identical to the fault-free run** (recovery succeeded) or a
+//! **typed error** ([`Error::Fault`] / `Error::Coordinator`) — never
+//! silent corruption, never a hang, never a leaked worker.  Detection is
+//! unconditional (checksums are always verified when an injector is
+//! installed); only *repair* is policy-gated.
+
+use crate::mttkrp::pipeline::{RecoveryStats, TileExecutor};
+use crate::psram::{CycleLedger, EnergyLedger};
+use crate::util::error::{Error, Result};
+use crate::util::prng::Prng;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// One kind of injected failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Flip `bits` stored words of the image right after it is loaded —
+    /// the retention-upset model.  Detected by the integrity checksum;
+    /// repaired (rewritten from the golden arena copy) when scrub is on.
+    ImageUpset {
+        /// Number of stored words corrupted.
+        bits: u32,
+    },
+    /// The image load fails once with a transient [`Error::Fault`] — the
+    /// retryable class (controller glitch, thermal trip).
+    Transient,
+    /// The worker thread executing the batch dies (panics).  The
+    /// coordinator's supervision detects it, re-queues the in-flight
+    /// batch, and respawns the worker within its budget.
+    WorkerDeath,
+}
+
+/// One scheduled failure: `kind` fires when worker `worker` performs its
+/// `load_idx`-th image load (0-based, counted per worker lifetime
+/// *including* respawned incarnations — the injector consumes each event
+/// exactly once, so a respawned worker restarting its local counter can
+/// never re-fire an already-fired event).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Worker (shard) index the event targets; single-array engines use
+    /// worker 0.
+    pub worker: usize,
+    /// The worker-local image-load index at which the event fires.
+    pub load_idx: u64,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// Shape of a randomly drawn fault schedule — how many events of each
+/// kind [`FaultPlan::from_seed`] scatters over the
+/// `workers × horizon_loads` injection grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Workers the schedule may target.
+    pub workers: usize,
+    /// Load-index horizon events are drawn from (`0..horizon_loads`).
+    pub horizon_loads: u64,
+    /// Stored-image upset events to draw.
+    pub upsets: usize,
+    /// Words corrupted per upset.
+    pub upset_bits: u32,
+    /// Transient-error events to draw.
+    pub transients: usize,
+    /// Worker-death events to draw.
+    pub deaths: usize,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            workers: 1,
+            horizon_loads: 16,
+            upsets: 1,
+            upset_bits: 4,
+            transients: 1,
+            deaths: 0,
+        }
+    }
+}
+
+/// A deterministic, seeded fault schedule.  The same `(seed, spec)` or
+/// `(seed, events)` pair always produces the same schedule — the replay
+/// contract behind `CHAOS_SEED` (EXPERIMENTS.md §Chaos).
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// The seed; also salts the per-event corruption PRNG streams.
+    pub seed: u64,
+    /// The scheduled events.
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// An explicit schedule (tests pin exact sites with this).
+    pub fn new(seed: u64, events: Vec<FaultEvent>) -> Self {
+        FaultPlan { seed, events }
+    }
+
+    /// Draw a schedule from a single seed: `spec.upsets + spec.transients
+    /// + spec.deaths` events scattered uniformly over the
+    /// `workers × horizon_loads` grid.  Pure function of `(seed, spec)`.
+    pub fn from_seed(seed: u64, spec: &FaultSpec) -> Self {
+        let mut rng = Prng::new(seed ^ 0xFA17_FA17_FA17_FA17);
+        let workers = spec.workers.max(1) as u64;
+        let horizon = spec.horizon_loads.max(1);
+        let mut events = Vec::new();
+        let mut draw = |kind: FaultKind, n: usize, events: &mut Vec<FaultEvent>| {
+            for _ in 0..n {
+                events.push(FaultEvent {
+                    worker: rng.below(workers) as usize,
+                    load_idx: rng.below(horizon),
+                    kind,
+                });
+            }
+        };
+        draw(FaultKind::ImageUpset { bits: spec.upset_bits.max(1) }, spec.upsets, &mut events);
+        draw(FaultKind::Transient, spec.transients, &mut events);
+        draw(FaultKind::WorkerDeath, spec.deaths, &mut events);
+        FaultPlan { seed, events }
+    }
+
+    /// Total scheduled events.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when the schedule is empty (a no-op injector).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// Thread-safe consume-once store of a [`FaultPlan`]'s events, shared
+/// (`Arc`) by every [`FaultyExecutor`] of a session or pool.  Each event
+/// fires at most once: a respawned worker restarts its load counter at 0,
+/// but the events its predecessor already consumed are gone, so death
+/// loops cannot recur beyond the schedule.
+#[derive(Debug)]
+pub struct FaultInjector {
+    seed: u64,
+    /// `(worker, load_idx) -> pending kinds`, drained as they fire.
+    pending: Mutex<HashMap<(usize, u64), Vec<FaultKind>>>,
+    /// Stored-image upsets actually injected.
+    pub injected_upsets: AtomicU64,
+    /// Transient errors actually injected.
+    pub injected_transients: AtomicU64,
+    /// Worker deaths actually injected.
+    pub injected_deaths: AtomicU64,
+}
+
+impl FaultInjector {
+    /// Build the injector for one schedule.
+    pub fn new(plan: &FaultPlan) -> Self {
+        let mut pending: HashMap<(usize, u64), Vec<FaultKind>> = HashMap::new();
+        for e in &plan.events {
+            pending.entry((e.worker, e.load_idx)).or_default().push(e.kind);
+        }
+        FaultInjector {
+            seed: plan.seed,
+            pending: Mutex::new(pending),
+            injected_upsets: AtomicU64::new(0),
+            injected_transients: AtomicU64::new(0),
+            injected_deaths: AtomicU64::new(0),
+        }
+    }
+
+    /// The schedule's seed (salts corruption streams).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Consume the events scheduled at `(worker, load_idx)`, if any.
+    /// Events are returned once and never again.  A poisoned map (a
+    /// panicking thread mid-injection) is recovered, not propagated: the
+    /// map only holds plain data and the injector must stay usable while
+    /// the coordinator supervises the panic that poisoned it.
+    pub fn take(&self, worker: usize, load_idx: u64) -> Vec<FaultKind> {
+        let mut pending =
+            self.pending.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        pending.remove(&(worker, load_idx)).unwrap_or_default()
+    }
+
+    /// Events not yet fired (0 once the whole schedule has been injected).
+    pub fn remaining(&self) -> usize {
+        let pending =
+            self.pending.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        pending.values().map(Vec::len).sum()
+    }
+
+    /// `(upsets, transients, deaths)` injected so far.
+    pub fn injected(&self) -> (u64, u64, u64) {
+        (
+            self.injected_upsets.load(Ordering::Relaxed),
+            self.injected_transients.load(Ordering::Relaxed),
+            self.injected_deaths.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Cheap FNV-1a checksum of a stored image — the per-image integrity
+/// fingerprint the scrub verifies before every compute block.  (A real
+/// controller would keep a hardware CRC per image; the cost model charges
+/// the *re-write*, not the check, which rides the existing read path.)
+pub fn image_checksum(words: &[i8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &w in words {
+        h ^= w as u8 as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// How a [`FaultyExecutor`] realises a [`FaultKind::WorkerDeath`] event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeathMode {
+    /// Panic (unwinds out of the executor) — the coordinator's workers
+    /// catch it, report `Died` to the leader, and exit; this is the mode
+    /// that exercises supervision.
+    Panic,
+    /// Return a typed [`Error::Fault`] instead — the mode for engines
+    /// with no worker thread to kill (the single-array session engine),
+    /// where a panic would unwind into the caller.
+    Error,
+}
+
+/// Payload carried by an injected worker-death panic, so the worker's
+/// `catch_unwind` can label the death precisely.
+#[derive(Debug)]
+pub struct InjectedDeath {
+    /// Worker that died.
+    pub worker: usize,
+    /// Load index the death fired at.
+    pub load_idx: u64,
+}
+
+/// Install (once, process-wide) a panic-hook filter that silences the
+/// default hook's stderr report for *injected* worker deaths — panics
+/// whose payload is an [`InjectedDeath`].  Real panics still print
+/// normally.  Chaos tests call this so supervised-death schedules do not
+/// spam the test output; every call after the first is a no-op.
+pub fn silence_injected_death_panics() {
+    use std::sync::Once;
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if info.payload().downcast_ref::<InjectedDeath>().is_none() {
+                prev(info);
+            }
+        }));
+    });
+}
+
+/// Capped exponential backoff between fault retries: attempt `n` sleeps
+/// `min(base * 2^n, cap)`.  Host-side wall-clock only — backoff is *not*
+/// charged to the modeled cycle ledgers (the device is idle, not
+/// computing; see DESIGN.md §Fault).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Backoff {
+    /// First-retry delay.
+    pub base: Duration,
+    /// Upper bound on any single delay.
+    pub cap: Duration,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Backoff { base: Duration::from_millis(1), cap: Duration::from_millis(50) }
+    }
+}
+
+impl Backoff {
+    /// No waiting at all (tests, tight chaos loops).
+    pub fn none() -> Self {
+        Backoff { base: Duration::ZERO, cap: Duration::ZERO }
+    }
+
+    /// The delay before retry attempt `attempt` (0-based).
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let shift = attempt.min(16);
+        self.base.saturating_mul(1u32 << shift).min(self.cap)
+    }
+
+    /// Sleep out the delay for `attempt` (no-op for a zero delay).
+    pub fn wait(&self, attempt: u32) {
+        let d = self.delay(attempt);
+        if !d.is_zero() {
+            std::thread::sleep(d);
+        }
+    }
+}
+
+/// The session-surface recovery policy
+/// ([`crate::session::SessionBuilder::fault_policy`]).  Construct with
+/// struct-update syntax over [`FaultPolicy::default`]:
+///
+/// ```
+/// use psram_imc::fault::{Backoff, FaultPolicy};
+/// let policy = FaultPolicy {
+///     retries: 3,
+///     backoff: Backoff::none(),
+///     scrub: true,
+///     fallback: true,
+///     ..FaultPolicy::default()
+/// };
+/// assert_eq!(policy.scrub_budget, FaultPolicy::default().scrub_budget);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultPolicy {
+    /// Transient-fault retries per batch (coordinator) or per submission
+    /// (single-array engine) before the fault surfaces.
+    pub retries: u32,
+    /// Backoff between those retries.
+    pub backoff: Backoff,
+    /// Repair checksum-detected image corruption by rewriting the image
+    /// from the golden arena copy (bounded by `scrub_budget`).  With
+    /// scrub off, detected corruption surfaces as a typed
+    /// [`Error::Fault`] instead — detection is never disabled, so silent
+    /// corruption is impossible either way.
+    pub scrub: bool,
+    /// When recovery is exhausted (fault rate exceeded every budget),
+    /// reroute the submission to the exact digital engine
+    /// ([`crate::session::Kernel::run_exact`]) instead of erroring; the
+    /// degradation is surfaced in the job's `fallbacks` counter.
+    pub fallback: bool,
+    /// Scrub rewrites allowed per image load before the image is declared
+    /// unrecoverable.
+    pub scrub_budget: u32,
+    /// Dead workers the coordinator may respawn per request before
+    /// surfacing a clean `Error::Coordinator`.
+    pub respawn_budget: u32,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        FaultPolicy {
+            retries: 2,
+            backoff: Backoff::default(),
+            scrub: true,
+            fallback: false,
+            scrub_budget: 4,
+            respawn_budget: 2,
+        }
+    }
+}
+
+/// A [`TileExecutor`] wrapper that injects a [`FaultPlan`]'s events at
+/// its image-load sites and performs the integrity scrub.  Wraps any
+/// executor (CPU, analog, PJRT); sessions install it automatically when
+/// a [`FaultInjector`] is configured
+/// ([`crate::session::SessionBuilder::fault_injector`]).
+///
+/// Fault semantics per image load `n` (worker-local counter):
+///
+/// * [`FaultKind::Transient`] — the load fails once with
+///   [`Error::Fault`]; the batch that issued it is retried by the layer
+///   above.
+/// * [`FaultKind::WorkerDeath`] — panic or typed error per [`DeathMode`].
+/// * [`FaultKind::ImageUpset`] — the image is loaded *corrupted* (bit
+///   flips drawn from a PRNG keyed by `(seed, worker, n)`), modeling an
+///   upset of the stored cells.  The wrapper then verifies the stored
+///   checksum against the golden image before every compute block:
+///   a mismatch triggers a rewrite from the golden copy (scrub on,
+///   charged to the inner ledger, counted in [`RecoveryStats`]) or a
+///   typed [`Error::Fault`] (scrub off / budget exhausted).
+pub struct FaultyExecutor<E: TileExecutor> {
+    inner: E,
+    injector: std::sync::Arc<FaultInjector>,
+    worker: usize,
+    death: DeathMode,
+    scrub: bool,
+    scrub_budget: u32,
+    /// Worker-local image-load counter (injection clock).
+    loads: u64,
+    /// Golden copy of the current image (what the plan arena holds).
+    golden: Vec<i8>,
+    /// What was actually written to the inner executor (may be corrupted).
+    stored: Vec<i8>,
+    /// Checksum of `golden`.
+    golden_sum: u64,
+    /// Scrub rewrites spent on the current image.
+    scrubs_this_image: u32,
+    recovery: RecoveryStats,
+}
+
+impl<E: TileExecutor> FaultyExecutor<E> {
+    /// Wrap `inner` for `worker`, drawing events from `injector`.
+    pub fn new(
+        inner: E,
+        injector: std::sync::Arc<FaultInjector>,
+        worker: usize,
+        death: DeathMode,
+        policy: &FaultPolicy,
+    ) -> Self {
+        FaultyExecutor {
+            inner,
+            injector,
+            worker,
+            death,
+            scrub: policy.scrub,
+            scrub_budget: policy.scrub_budget,
+            loads: 0,
+            golden: Vec::new(),
+            stored: Vec::new(),
+            golden_sum: 0,
+            scrubs_this_image: 0,
+            recovery: RecoveryStats::default(),
+        }
+    }
+
+    /// The wrapped executor.
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    /// Verify the stored image against the golden checksum; rewrite (or
+    /// error) on mismatch.  Called after every load and before every
+    /// compute block.
+    fn verify_and_scrub(&mut self) -> Result<()> {
+        if self.golden.is_empty() || image_checksum(&self.stored) == self.golden_sum {
+            return Ok(());
+        }
+        if !self.scrub {
+            return Err(Error::fault(format!(
+                "stored-image corruption detected on worker {} (scrub disabled)",
+                self.worker
+            )));
+        }
+        if self.scrubs_this_image >= self.scrub_budget {
+            return Err(Error::fault(format!(
+                "stored-image corruption on worker {} exceeded the scrub \
+                 budget of {} rewrites",
+                self.worker, self.scrub_budget
+            )));
+        }
+        self.scrubs_this_image += 1;
+        // Rewrite from the golden copy through the inner load path, so
+        // the reconfiguration cost lands in the inner cycle ledger.
+        self.inner.load_image(&self.golden)?;
+        self.stored.clear();
+        self.stored.extend_from_slice(&self.golden);
+        self.recovery.scrubs += 1;
+        self.recovery.scrub_write_cycles += self.inner.rows() as u64;
+        Ok(())
+    }
+}
+
+impl<E: TileExecutor> TileExecutor for FaultyExecutor<E> {
+    fn rows(&self) -> usize {
+        self.inner.rows()
+    }
+
+    fn words_per_row(&self) -> usize {
+        self.inner.words_per_row()
+    }
+
+    fn max_lanes(&self) -> usize {
+        self.inner.max_lanes()
+    }
+
+    fn load_image(&mut self, image: &[i8]) -> Result<()> {
+        let idx = self.loads;
+        self.loads += 1;
+        let mut upset_bits = 0u32;
+        for kind in self.injector.take(self.worker, idx) {
+            match kind {
+                FaultKind::Transient => {
+                    self.injector.injected_transients.fetch_add(1, Ordering::Relaxed);
+                    return Err(Error::fault(format!(
+                        "injected transient fault (worker {}, load {idx})",
+                        self.worker
+                    )));
+                }
+                FaultKind::WorkerDeath => {
+                    self.injector.injected_deaths.fetch_add(1, Ordering::Relaxed);
+                    match self.death {
+                        DeathMode::Panic => std::panic::panic_any(InjectedDeath {
+                            worker: self.worker,
+                            load_idx: idx,
+                        }),
+                        DeathMode::Error => {
+                            return Err(Error::fault(format!(
+                                "injected worker death (worker {}, load {idx})",
+                                self.worker
+                            )))
+                        }
+                    }
+                }
+                FaultKind::ImageUpset { bits } => upset_bits += bits,
+            }
+        }
+
+        self.golden.clear();
+        self.golden.extend_from_slice(image);
+        self.golden_sum = image_checksum(image);
+        self.scrubs_this_image = 0;
+        self.stored.clear();
+        self.stored.extend_from_slice(image);
+        if upset_bits > 0 && !image.is_empty() {
+            self.injector.injected_upsets.fetch_add(1, Ordering::Relaxed);
+            // Deterministic corruption stream per (seed, worker, load).
+            let mut rng = Prng::new(
+                self.injector
+                    .seed
+                    .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    .wrapping_add((self.worker as u64) << 32)
+                    .wrapping_add(idx),
+            );
+            for _ in 0..upset_bits {
+                let w = rng.below(self.stored.len() as u64) as usize;
+                let b = rng.below(8) as u8;
+                self.stored[w] = (self.stored[w] as u8 ^ (1 << b)) as i8;
+            }
+        }
+        self.inner.load_image(&self.stored)?;
+        // Detect (and repair, policy permitting) the upset immediately.
+        self.verify_and_scrub()
+    }
+
+    fn compute_into(&mut self, u: &[u8], lanes: usize, out: &mut [i32]) -> Result<()> {
+        self.verify_and_scrub()?;
+        self.inner.compute_into(u, lanes, out)
+    }
+
+    fn compute_block_into(
+        &mut self,
+        u: &[u8],
+        lane_counts: &[usize],
+        out: &mut [i32],
+    ) -> Result<()> {
+        self.verify_and_scrub()?;
+        self.inner.compute_block_into(u, lane_counts, out)
+    }
+
+    fn block_cycles(&self) -> usize {
+        self.inner.block_cycles()
+    }
+
+    fn cycles(&self) -> CycleLedger {
+        self.inner.cycles()
+    }
+
+    fn energy(&self) -> Option<EnergyLedger> {
+        self.inner.energy()
+    }
+
+    fn drain_recovery(&mut self) -> RecoveryStats {
+        std::mem::take(&mut self.recovery)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mttkrp::pipeline::CpuTileExecutor;
+    use std::sync::Arc;
+
+    fn tiny_exec() -> CpuTileExecutor {
+        CpuTileExecutor::new(8, 4, 4)
+    }
+
+    fn image(n: usize, seed: u64) -> Vec<i8> {
+        let mut rng = Prng::new(seed);
+        (0..n).map(|_| rng.next_i8()).collect()
+    }
+
+    #[test]
+    fn plans_are_deterministic_from_seed() {
+        let spec = FaultSpec {
+            workers: 4,
+            horizon_loads: 64,
+            upsets: 3,
+            upset_bits: 2,
+            transients: 2,
+            deaths: 1,
+        };
+        let a = FaultPlan::from_seed(99, &spec);
+        let b = FaultPlan::from_seed(99, &spec);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.len(), 6);
+        let c = FaultPlan::from_seed(100, &spec);
+        assert_ne!(a.events, c.events, "different seed, different schedule");
+        assert!(a.events.iter().all(|e| e.worker < 4 && e.load_idx < 64));
+    }
+
+    #[test]
+    fn injector_consumes_events_exactly_once() {
+        let plan = FaultPlan::new(
+            1,
+            vec![
+                FaultEvent { worker: 0, load_idx: 2, kind: FaultKind::Transient },
+                FaultEvent { worker: 0, load_idx: 2, kind: FaultKind::WorkerDeath },
+                FaultEvent { worker: 1, load_idx: 0, kind: FaultKind::Transient },
+            ],
+        );
+        let inj = FaultInjector::new(&plan);
+        assert_eq!(inj.remaining(), 3);
+        assert!(inj.take(0, 1).is_empty());
+        let fired = inj.take(0, 2);
+        assert_eq!(fired.len(), 2);
+        assert!(inj.take(0, 2).is_empty(), "events fire once");
+        assert_eq!(inj.remaining(), 1);
+    }
+
+    #[test]
+    fn checksum_detects_single_bit_flips() {
+        let img = image(64, 7);
+        let sum = image_checksum(&img);
+        assert_eq!(sum, image_checksum(&img));
+        let mut upset = img.clone();
+        upset[17] = (upset[17] as u8 ^ 1) as i8;
+        assert_ne!(sum, image_checksum(&upset));
+    }
+
+    #[test]
+    fn transient_fault_fires_once_then_load_succeeds() {
+        let plan = FaultPlan::new(
+            2,
+            vec![FaultEvent { worker: 0, load_idx: 0, kind: FaultKind::Transient }],
+        );
+        let inj = Arc::new(FaultInjector::new(&plan));
+        let mut exec = FaultyExecutor::new(
+            tiny_exec(),
+            Arc::clone(&inj),
+            0,
+            DeathMode::Error,
+            &FaultPolicy::default(),
+        );
+        let img = image(32, 3);
+        let err = exec.load_image(&img).unwrap_err();
+        assert!(err.is_transient_fault(), "{err}");
+        exec.load_image(&img).unwrap();
+        assert_eq!(inj.injected(), (0, 1, 0));
+    }
+
+    #[test]
+    fn upset_is_scrubbed_and_charged() {
+        let plan = FaultPlan::new(
+            3,
+            vec![FaultEvent {
+                worker: 0,
+                load_idx: 0,
+                kind: FaultKind::ImageUpset { bits: 3 },
+            }],
+        );
+        let inj = Arc::new(FaultInjector::new(&plan));
+        let mut exec = FaultyExecutor::new(
+            tiny_exec(),
+            Arc::clone(&inj),
+            0,
+            DeathMode::Error,
+            &FaultPolicy::default(),
+        );
+        let img = image(32, 5);
+        let writes_before = exec.cycles().write;
+        exec.load_image(&img).unwrap();
+        let rec = exec.drain_recovery();
+        assert_eq!(rec.scrubs, 1);
+        assert_eq!(rec.scrub_write_cycles, 8);
+        // One normal load + one scrub rewrite, both charged.
+        assert_eq!(exec.cycles().write - writes_before, 16);
+        assert_eq!(exec.drain_recovery(), RecoveryStats::default(), "drained");
+        // The inner executor holds the golden image again.
+        assert_eq!(image_checksum(&exec.stored), image_checksum(&img));
+    }
+
+    #[test]
+    fn upset_with_scrub_disabled_is_a_typed_error_not_silent() {
+        let plan = FaultPlan::new(
+            4,
+            vec![FaultEvent {
+                worker: 0,
+                load_idx: 0,
+                kind: FaultKind::ImageUpset { bits: 2 },
+            }],
+        );
+        let inj = Arc::new(FaultInjector::new(&plan));
+        let policy = FaultPolicy { scrub: false, ..FaultPolicy::default() };
+        let mut exec =
+            FaultyExecutor::new(tiny_exec(), Arc::clone(&inj), 0, DeathMode::Error, &policy);
+        let err = exec.load_image(&image(32, 6)).unwrap_err();
+        assert!(matches!(err, Error::Fault(_)), "{err}");
+        assert!(err.to_string().contains("scrub disabled"));
+    }
+
+    #[test]
+    fn death_mode_error_returns_typed_fault() {
+        let plan = FaultPlan::new(
+            5,
+            vec![FaultEvent { worker: 0, load_idx: 0, kind: FaultKind::WorkerDeath }],
+        );
+        let inj = Arc::new(FaultInjector::new(&plan));
+        let mut exec = FaultyExecutor::new(
+            tiny_exec(),
+            Arc::clone(&inj),
+            0,
+            DeathMode::Error,
+            &FaultPolicy::default(),
+        );
+        let err = exec.load_image(&image(32, 8)).unwrap_err();
+        assert!(err.to_string().contains("worker death"), "{err}");
+        assert_eq!(inj.injected(), (0, 0, 1));
+    }
+
+    #[test]
+    fn death_mode_panic_unwinds_with_typed_payload() {
+        let plan = FaultPlan::new(
+            6,
+            vec![FaultEvent { worker: 3, load_idx: 0, kind: FaultKind::WorkerDeath }],
+        );
+        let inj = Arc::new(FaultInjector::new(&plan));
+        let mut exec = FaultyExecutor::new(
+            tiny_exec(),
+            Arc::clone(&inj),
+            3,
+            DeathMode::Panic,
+            &FaultPolicy::default(),
+        );
+        let img = image(32, 9);
+        let payload = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = exec.load_image(&img);
+        }))
+        .unwrap_err();
+        let death = payload.downcast_ref::<InjectedDeath>().expect("typed payload");
+        assert_eq!(death.worker, 3);
+        assert_eq!(death.load_idx, 0);
+    }
+
+    #[test]
+    fn faulty_executor_is_transparent_without_events() {
+        let plan = FaultPlan::new(7, Vec::new());
+        let inj = Arc::new(FaultInjector::new(&plan));
+        let mut plain = tiny_exec();
+        let mut wrapped = FaultyExecutor::new(
+            tiny_exec(),
+            inj,
+            0,
+            DeathMode::Panic,
+            &FaultPolicy::default(),
+        );
+        let img = image(32, 10);
+        plain.load_image(&img).unwrap();
+        wrapped.load_image(&img).unwrap();
+        let codes: Vec<u8> = (0..2 * 8).map(|i| (i * 11) as u8).collect();
+        let mut a = vec![0i32; 2 * 4];
+        let mut b = vec![0i32; 2 * 4];
+        plain.compute_into(&codes, 2, &mut a).unwrap();
+        wrapped.compute_into(&codes, 2, &mut b).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(plain.cycles(), wrapped.cycles());
+        assert_eq!(wrapped.drain_recovery(), RecoveryStats::default());
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential() {
+        let b = Backoff {
+            base: Duration::from_millis(2),
+            cap: Duration::from_millis(9),
+        };
+        assert_eq!(b.delay(0), Duration::from_millis(2));
+        assert_eq!(b.delay(1), Duration::from_millis(4));
+        assert_eq!(b.delay(2), Duration::from_millis(8));
+        assert_eq!(b.delay(3), Duration::from_millis(9), "capped");
+        assert_eq!(b.delay(60), Duration::from_millis(9), "shift clamped");
+        assert_eq!(Backoff::none().delay(5), Duration::ZERO);
+    }
+}

@@ -44,6 +44,14 @@
 //!   global + per-shard metrics; std threads — this image has no tokio).
 //!   Runs dense *and* sparse MTTKRP, bit-identical to the single-array
 //!   pipelines.
+//! * [`fault`] — deterministic fault injection (seeded `FaultPlan`s of
+//!   stored-image upsets, transient errors, worker deaths) and the
+//!   self-healing primitives above it: checksum-verified image scrub with
+//!   ledger-charged rewrites, retry/backoff policy, and the
+//!   `FaultyExecutor` wrapper the session installs.  The coordinator
+//!   supervises worker deaths (re-queue + bounded respawn) and the
+//!   session can fall back to the exact digital engine
+//!   (`session::SessionBuilder::fault_policy`).
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) for the digital baseline and cross-checks
 //!   (behind the `xla` feature; a graceful stub otherwise).
@@ -73,6 +81,7 @@ pub mod coordinator;
 pub mod cpd;
 pub mod device;
 pub mod energy;
+pub mod fault;
 pub mod mttkrp;
 pub mod perfmodel;
 pub mod psram;

@@ -50,7 +50,7 @@ pub use par::IntraPool;
 pub use pipeline::{
     quantize_krp_image, quantize_krp_image_into, quantize_lane_batch,
     quantize_lane_batch_into, CpuTileExecutor, MttkrpStats, PsramPipeline,
-    TileExecutor,
+    RecoveryStats, TileExecutor,
 };
 pub use plan::{
     execute_plan, execute_plan_into, DensePlanner, LaneBlock, PlanArena,

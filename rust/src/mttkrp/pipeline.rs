@@ -115,6 +115,37 @@ pub trait TileExecutor {
     fn energy(&self) -> Option<EnergyLedger> {
         None
     }
+
+    /// Drain recovery counters accumulated since the last call.  Plain
+    /// executors never recover anything and return the zero default; the
+    /// fault-layer wrapper ([`crate::fault::FaultyExecutor`]) reports its
+    /// integrity-scrub rewrites here so the coordinator workers can fold
+    /// them into the [`crate::coordinator::Metrics`] fault counters.
+    fn drain_recovery(&mut self) -> RecoveryStats {
+        RecoveryStats::default()
+    }
+}
+
+/// Recovery work an executor performed transparently (today: stored-image
+/// integrity scrubs).  Scrub rewrites are *charged* cycles — they land in
+/// the executor's own [`CycleLedger`] via the re-issued image load — so
+/// recovery has a modeled cost; this struct additionally surfaces them as
+/// counters the coordinator attributes per job.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RecoveryStats {
+    /// Stored images detected as corrupted and rewritten from the golden
+    /// arena copy.
+    pub scrubs: u64,
+    /// Write cycles spent on those rewrites (`rows` per full-image scrub).
+    pub scrub_write_cycles: u64,
+}
+
+impl RecoveryStats {
+    /// Accumulate another drain into this one.
+    pub fn merge(&mut self, other: &RecoveryStats) {
+        self.scrubs += other.scrubs;
+        self.scrub_write_cycles += other.scrub_write_cycles;
+    }
 }
 
 // Boxed executors forward every method (including the batched
@@ -165,6 +196,10 @@ impl<T: TileExecutor + ?Sized> TileExecutor for Box<T> {
 
     fn energy(&self) -> Option<EnergyLedger> {
         (**self).energy()
+    }
+
+    fn drain_recovery(&mut self) -> RecoveryStats {
+        (**self).drain_recovery()
     }
 }
 

@@ -223,6 +223,34 @@ impl PsramArray {
         }
         flips
     }
+
+    /// Integrity scrub: compare the stored image against a `golden`
+    /// row-major `[rows][words_per_row]` copy and rewrite only the rows
+    /// that differ — each through [`PsramArray::write_row`], so every
+    /// repaired row costs one charged write cycle plus per-toggled-bitcell
+    /// switching energy.  Returns the number of rows rewritten: the
+    /// targeted (and cheaper) counterpart of a full image reload after
+    /// [`PsramArray::inject_bit_errors`] upsets.
+    pub fn scrub_image(&mut self, golden: &[i8]) -> Result<usize> {
+        let wpr = self.geom.words_per_row();
+        let rows = self.geom.rows;
+        if golden.len() != rows * wpr {
+            return Err(Error::shape(format!(
+                "scrub image needs {} words, got {}",
+                rows * wpr,
+                golden.len()
+            )));
+        }
+        let mut rewritten = 0usize;
+        for r in 0..rows {
+            let base = r * wpr;
+            if self.packed[base..base + wpr] != golden[base..base + wpr] {
+                self.write_row(r, &golden[base..base + wpr])?;
+                rewritten += 1;
+            }
+        }
+        Ok(rewritten)
+    }
 }
 
 #[cfg(test)]
@@ -232,6 +260,38 @@ mod tests {
 
     fn rand_image(rng: &mut Prng, n: usize) -> Vec<i8> {
         (0..n).map(|_| rng.next_i8()).collect()
+    }
+
+    #[test]
+    fn scrub_rewrites_only_corrupted_rows_and_charges_them() {
+        let mut a = PsramArray::paper();
+        let mut rng = Prng::new(31);
+        let img = rand_image(&mut rng, a.geometry().total_words());
+        a.write_image(&img).unwrap();
+        let clean_writes = a.cycles.write;
+        // No corruption: a scrub is free.
+        assert_eq!(a.scrub_image(&img).unwrap(), 0);
+        assert_eq!(a.cycles.write, clean_writes);
+        // Flip bits until at least one word changed, then scrub.
+        let mut flips = 0;
+        let mut ber_rng = Prng::new(32);
+        while flips == 0 {
+            flips = a.inject_bit_errors(1e-4, &mut ber_rng);
+        }
+        let dirty_rows = (0..a.geometry().rows)
+            .filter(|&r| {
+                let wpr = a.geometry().words_per_row();
+                (0..wpr).any(|c| a.word(r, c) != img[r * wpr + c])
+            })
+            .count();
+        assert!(dirty_rows > 0);
+        let repaired = a.scrub_image(&img).unwrap();
+        assert_eq!(repaired, dirty_rows, "exactly the corrupted rows rewrite");
+        assert_eq!(a.cycles.write, clean_writes + dirty_rows as u64);
+        assert_eq!(a.packed(), &img[..], "image restored bit-exactly");
+        assert!(a.check_mirror());
+        // Geometry mismatch is a typed error.
+        assert!(a.scrub_image(&img[1..]).is_err());
     }
 
     #[test]

@@ -23,7 +23,17 @@
 //!   attribution in [`Metrics`] ([`crate::coordinator::JobSnapshot`]);
 //! * [`PsramSession::predict`] — scores the exact plan a submission
 //!   executes through `PerfModel::predict_plan`, so
-//!   **predicted == measured** holds per job (tested cycle-exactly).
+//!   **predicted == measured** holds per job (tested cycle-exactly);
+//! * [`SessionBuilder::fault_policy`] — resilience: transient faults are
+//!   retried with capped backoff (in place on the single array, at batch
+//!   granularity inside the pool), checksum-detected stored-image upsets
+//!   are scrubbed from the golden arena copy (charged, reported
+//!   separately from the fault-free census), dead pool workers are
+//!   respawned within a budget, and an exhausted recovery budget can
+//!   reroute the submission to the exact digital engine — all surfaced
+//!   in job metrics (retries, scrubs, re-queues, fallbacks).  A seeded
+//!   [`SessionBuilder::fault_injector`] replays any fault schedule
+//!   deterministically (`crate::fault`).
 //!
 //! Sessions are internally synchronized (`Send + Sync`): the plan cache
 //! and the engine state live behind separate mutexes, and a submission
@@ -49,9 +59,12 @@ pub use cache::{PlanCache, PlanKey};
 pub use kernel::{Kernel, KernelKind};
 
 use crate::compute::ComputeEngine;
-use crate::coordinator::{Coordinator, CoordinatorConfig, JobSnapshot, Metrics};
+use crate::coordinator::{
+    Coordinator, CoordinatorConfig, JobSnapshot, Metrics, RecoveryPolicy,
+};
 use crate::device::{DeviceParams, NoiseModel};
 use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::fault::{DeathMode, FaultInjector, FaultPolicy, FaultyExecutor};
 use crate::mttkrp::pipeline::{AnalogTileExecutor, CpuTileExecutor, MttkrpStats, TileExecutor};
 use crate::mttkrp::plan::{execute_plan_into, PlanScratch, TilePlan};
 use crate::perfmodel::{PerfEstimate, PerfModel, PlanEstimate};
@@ -59,7 +72,7 @@ use crate::psram::{ArrayGeometry, EnergyLedger, PsramArray};
 use crate::tensor::Matrix;
 use crate::tune::TuneParams;
 use crate::util::error::{Error, Result};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, PoisonError};
 
 /// Identifier of one tenant job on a session.  Jobs namespace the plan
 /// cache (same-shape tensors of different jobs can never alias) and the
@@ -182,6 +195,8 @@ pub struct SessionBuilder {
     executor: Option<Box<dyn TileExecutor + Send>>,
     tuning: TunePolicy,
     intra_workers: Option<usize>,
+    fault: Option<FaultPolicy>,
+    injector: Option<Arc<FaultInjector>>,
 }
 
 impl Default for SessionBuilder {
@@ -196,6 +211,8 @@ impl Default for SessionBuilder {
             executor: None,
             tuning: TunePolicy::Auto,
             intra_workers: None,
+            fault: None,
+            injector: None,
         }
     }
 }
@@ -275,32 +292,46 @@ impl SessionBuilder {
         self
     }
 
-    /// One simulated array executor for worker `i`.  Digital executors
-    /// get the resolved tuning; analog executors are never tuned (their
-    /// batched f64 energy charges must stay chunk-stable).
-    fn make_executor(&self, worker: usize, tuned: &TuneParams) -> Box<dyn TileExecutor + Send> {
-        let analog = self.analog || !matches!(self.noise, NoiseMode::Ideal);
-        if analog {
-            let engine = match self.noise {
-                NoiseMode::Ideal => ComputeEngine::ideal(),
-                NoiseMode::Gaussian { sigma_lsb, seed } => ComputeEngine::new(
-                    DeviceParams::default(),
-                    NoiseModel::gaussian(
-                        sigma_lsb,
-                        (seed ^ 0x77).wrapping_add(worker as u64),
-                    ),
-                ),
-            };
-            Box::new(AnalogTileExecutor::new(engine, PsramArray::paper()))
-        } else {
-            Box::new(
-                CpuTileExecutor::new(
-                    self.model.geom.rows,
-                    self.model.geom.words_per_row(),
-                    self.model.wavelengths,
-                )
-                .with_tuning(tuned),
-            )
+    /// Fault-handling policy of the session (default
+    /// [`FaultPolicy::default`]: retry transient faults with backoff,
+    /// scrub detected image upsets, no digital fallback).  On the
+    /// coordinated engine the policy also shapes the pool's
+    /// [`RecoveryPolicy`] (batch retries, backoff, worker respawn
+    /// budget), overriding any [`SessionBuilder::pool_config`] recovery
+    /// settings.  With [`FaultPolicy::fallback`] set, a submission whose
+    /// recovery budget is exhausted reroutes to the exact digital engine
+    /// ([`Kernel::run_exact`]) instead of erroring — counted in
+    /// [`crate::coordinator::JobSnapshot::fallbacks`].
+    pub fn fault_policy(mut self, policy: FaultPolicy) -> Self {
+        self.fault = Some(policy);
+        self
+    }
+
+    /// Install a deterministic fault injector: every simulated-array
+    /// executor the session builds is wrapped in a
+    /// [`FaultyExecutor`] drawing from this shared schedule (chaos
+    /// testing; replayable from the plan's seed).  Production sessions
+    /// leave this unset — the recovery machinery then only reacts to
+    /// faults the executors raise on their own.
+    pub fn fault_injector(mut self, injector: Arc<FaultInjector>) -> Self {
+        self.injector = Some(injector);
+        self
+    }
+
+    /// The owned per-worker executor factory for this configuration.
+    /// Owned (no borrows of the builder) because the coordinator retains
+    /// it for the lifetime of the pool to respawn dead workers.
+    fn executor_factory(&self, tuned: TuneParams, death: DeathMode) -> ExecutorFactory {
+        ExecutorFactory {
+            analog: self.analog || !matches!(self.noise, NoiseMode::Ideal),
+            noise: self.noise,
+            rows: self.model.geom.rows,
+            wpr: self.model.geom.words_per_row(),
+            lanes: self.model.wavelengths,
+            tuned,
+            injector: self.injector.clone(),
+            fault: self.fault.unwrap_or_default(),
+            death,
         }
     }
 
@@ -368,6 +399,7 @@ impl SessionBuilder {
             tuned.intra_workers = width;
         }
 
+        let fault = self.fault.unwrap_or_default();
         let state = match self.engine {
             Engine::Exact => {
                 model.num_arrays = 1;
@@ -375,6 +407,10 @@ impl SessionBuilder {
             }
             Engine::SingleArray => {
                 model.num_arrays = 1;
+                // Single-array injected deaths surface as typed errors:
+                // there is no supervisor thread to catch a panic here, and
+                // the session's retry/fallback path handles `Error::Fault`.
+                let factory = self.executor_factory(tuned, DeathMode::Error);
                 let exec = match self.executor {
                     Some(exec) => {
                         if exec.rows() != rows
@@ -389,9 +425,9 @@ impl SessionBuilder {
                                 exec.max_lanes()
                             )));
                         }
-                        exec
+                        factory.wrap(exec, 0)
                     }
-                    None => self.make_executor(0, &tuned),
+                    None => factory.make(0),
                 };
                 EngineState::Single {
                     metrics: Arc::new(Metrics::with_shards(1)),
@@ -402,12 +438,25 @@ impl SessionBuilder {
                 }
             }
             Engine::Coordinated { shards } => {
-                let cfg = self
+                let mut cfg = self
                     .pool_config
                     .clone()
                     .unwrap_or_else(|| CoordinatorConfig::new(shards));
+                if let Some(fp) = self.fault {
+                    // An explicit fault policy shapes the pool's recovery
+                    // machinery too (documented on `fault_policy`).
+                    cfg.recovery = RecoveryPolicy {
+                        max_batch_retries: fp.retries,
+                        backoff: fp.backoff,
+                        respawn_budget: fp.respawn_budget,
+                    };
+                }
                 model.num_arrays = cfg.workers.max(1);
-                let pool = Coordinator::spawn(cfg, |i| Ok(self.make_executor(i, &tuned)))?;
+                // Pool workers die by panic so the supervisor observes the
+                // death, re-queues the batch, and respawns from this
+                // factory (which the coordinator keeps, hence owned).
+                let factory = self.executor_factory(tuned, DeathMode::Panic);
+                let pool = Coordinator::spawn(cfg, move |i| Ok(factory.make(i)))?;
                 EngineState::Pool { metrics: pool.metrics_handle(), pool: Mutex::new(pool) }
             }
         };
@@ -417,11 +466,74 @@ impl SessionBuilder {
                 model,
                 engine: self.engine,
                 policy: self.policy,
+                fault,
                 cache: Mutex::new(PlanCache::new(rows, wpr, lanes)),
                 exact_metrics: Arc::new(Metrics::default()),
                 state,
             }),
         })
+    }
+}
+
+/// Owned per-worker executor factory: everything a session needs to build
+/// (or *re*build, after a supervised worker death) one simulated-array
+/// executor, captured by value.  The coordinator retains it for the pool's
+/// lifetime, so it must not borrow the builder.
+struct ExecutorFactory {
+    analog: bool,
+    noise: NoiseMode,
+    rows: usize,
+    wpr: usize,
+    lanes: usize,
+    tuned: TuneParams,
+    injector: Option<Arc<FaultInjector>>,
+    fault: FaultPolicy,
+    death: DeathMode,
+}
+
+impl ExecutorFactory {
+    /// Build worker `i`'s executor.  Digital executors get the resolved
+    /// tuning; analog executors are never tuned (their batched f64 energy
+    /// charges must stay chunk-stable).
+    fn make(&self, worker: usize) -> Box<dyn TileExecutor + Send> {
+        let inner: Box<dyn TileExecutor + Send> = if self.analog {
+            let engine = match self.noise {
+                NoiseMode::Ideal => ComputeEngine::ideal(),
+                NoiseMode::Gaussian { sigma_lsb, seed } => ComputeEngine::new(
+                    DeviceParams::default(),
+                    NoiseModel::gaussian(
+                        sigma_lsb,
+                        (seed ^ 0x77).wrapping_add(worker as u64),
+                    ),
+                ),
+            };
+            Box::new(AnalogTileExecutor::new(engine, PsramArray::paper()))
+        } else {
+            Box::new(
+                CpuTileExecutor::new(self.rows, self.wpr, self.lanes)
+                    .with_tuning(&self.tuned),
+            )
+        };
+        self.wrap(inner, worker)
+    }
+
+    /// Wrap an executor in the session's [`FaultyExecutor`] when a fault
+    /// injector is installed; a no-op pass-through otherwise.
+    fn wrap(
+        &self,
+        inner: Box<dyn TileExecutor + Send>,
+        worker: usize,
+    ) -> Box<dyn TileExecutor + Send> {
+        match &self.injector {
+            Some(inj) => Box::new(FaultyExecutor::new(
+                inner,
+                Arc::clone(inj),
+                worker,
+                self.death,
+                &self.fault,
+            )),
+            None => inner,
+        }
     }
 }
 
@@ -457,6 +569,9 @@ struct SessionCore {
     model: PerfModel,
     engine: Engine,
     policy: CachePolicy,
+    /// Fault-handling policy every submission runs under (retry budget,
+    /// backoff, digital fallback).
+    fault: FaultPolicy,
     /// The unified plan store.  Submissions lock it only to resolve a
     /// plan (an `Arc`-backed clone) and release it before taking the
     /// engine lock — the two are never held together.
@@ -473,6 +588,14 @@ impl SessionCore {
             EngineState::Single { metrics, .. } => Arc::clone(metrics),
             EngineState::Pool { metrics, .. } => Arc::clone(metrics),
         }
+    }
+
+    /// Lock the plan cache, recovering from poisoning rather than
+    /// propagating another tenant's panic: the cache's critical sections
+    /// are map lookups/inserts of `Arc`-backed plans, so the store stays
+    /// structurally valid even if a panic mid-planning poisoned the lock.
+    fn lock_cache(&self) -> std::sync::MutexGuard<'_, PlanCache> {
+        self.cache.lock().unwrap_or_else(PoisonError::into_inner)
     }
 }
 
@@ -596,27 +719,30 @@ impl PsramSession {
     /// (`None` for exact/CPU/pool engines, which meter analytically).
     pub fn energy(&self) -> Option<EnergyLedger> {
         match &self.core.state {
-            EngineState::Single { state, .. } => {
-                state.lock().expect("session executor poisoned").exec.energy()
-            }
+            // A poisoned executor lock (prior kernel panic) reads as "no
+            // meaningful ledger" rather than a second panic.
+            EngineState::Single { state, .. } => match state.lock() {
+                Ok(st) => st.exec.energy(),
+                Err(_) => None,
+            },
             _ => None,
         }
     }
 
     /// Number of plans currently cached across all jobs.
     pub fn cached_plans(&self) -> usize {
-        self.core.cache.lock().expect("session cache poisoned").len()
+        self.core.lock_cache().len()
     }
 
     /// Drop every cached plan (all jobs).
     pub fn clear_cache(&self) {
-        self.core.cache.lock().expect("session cache poisoned").clear();
+        self.core.lock_cache().clear();
     }
 
     /// Drop one job's cached plans, leaving other tenants warm — required
     /// before recycling a [`JobId`] for a different same-shape tensor.
     pub fn clear_job(&self, id: JobId) {
-        self.core.cache.lock().expect("session cache poisoned").clear_job(id.0);
+        self.core.lock_cache().clear_job(id.0);
     }
 }
 
@@ -645,7 +771,10 @@ impl SessionJob {
         }
         let plan = self.resolve_plan(&kernel)?;
         let mut out = Matrix::zeros(plan.out_rows, plan.out_cols);
-        self.execute(&plan, &mut out)?;
+        match self.execute(&plan, &mut out) {
+            Ok(()) => {}
+            Err(e) => self.fallback(&kernel, e, &mut out)?,
+        }
         Ok(out)
     }
 
@@ -670,7 +799,10 @@ impl SessionJob {
             return Ok(());
         }
         let plan = self.resolve_plan(&kernel)?;
-        self.execute(&plan, out)
+        match self.execute(&plan, out) {
+            Ok(()) => Ok(()),
+            Err(e) => self.fallback(&kernel, e, out),
+        }
     }
 
     /// Score the exact plan this job's `run` would execute — see
@@ -682,8 +814,7 @@ impl SessionJob {
     /// warmed — `run` will not read it.
     pub fn predict(&self, kernel: &Kernel<'_>) -> Result<PlanEstimate> {
         let plan = if matches!(self.core.state, EngineState::Exact) {
-            let cache = self.core.cache.lock().expect("session cache poisoned");
-            cache.plan_fresh(kernel)?
+            self.core.lock_cache().plan_fresh(kernel)?
         } else {
             self.resolve_plan(kernel)?
         };
@@ -696,7 +827,7 @@ impl SessionJob {
     /// clone) so the cache lock is released before execution — one
     /// tenant's running kernel never blocks another tenant's planning.
     fn resolve_plan(&self, kernel: &Kernel<'_>) -> Result<TilePlan> {
-        let mut cache = self.core.cache.lock().expect("session cache poisoned");
+        let mut cache = self.core.lock_cache();
         match self.core.policy {
             CachePolicy::Enabled => Ok(cache.plan_kernel(self.id.0, kernel)?.clone()),
             CachePolicy::Disabled => cache.plan_fresh(kernel),
@@ -716,35 +847,107 @@ impl SessionJob {
 
     /// Drop this job's cached plans.
     pub fn clear(&self) {
-        self.core.cache.lock().expect("session cache poisoned").clear_job(self.id.0);
+        self.core.lock_cache().clear_job(self.id.0);
     }
 
     /// Execute a resolved plan on the session's engine, charging this
-    /// job's metrics.
+    /// job's metrics.  Transient faults ([`Error::Fault`]) on the
+    /// single-array engine are retried in place with the session's
+    /// backoff, up to [`FaultPolicy::retries`]; the coordinated engine
+    /// retries at batch granularity inside the pool.
     fn execute(&self, plan: &TilePlan, out: &mut Matrix) -> Result<()> {
         match &self.core.state {
             EngineState::Exact => unreachable!("exact engine handled by callers"),
             EngineState::Single { metrics, state } => {
-                let mut st = state.lock().expect("session executor poisoned");
-                let mut stats = MttkrpStats::default();
-                let SingleState { exec, scratch } = &mut *st;
-                execute_plan_into(exec, plan, scratch, &mut stats, out)?;
-                // Same counter layout as a coordinator worker plus the
-                // leader's request/batch bookkeeping (one batch per
-                // single-array submission).
-                let jm = metrics.charge(0, self.id.0, &stats);
-                metrics.add(&metrics.requests, 1);
-                metrics.add(&metrics.batches, 1);
-                metrics.add(&metrics.shard(0).batches, 1);
-                metrics.add(&jm.requests, 1);
-                metrics.add(&jm.batches, 1);
-                Ok(())
+                let fault = self.core.fault;
+                let mut attempt = 0u32;
+                loop {
+                    // A poisoned executor lock means a prior kernel
+                    // panicked mid-execution; surface a typed error to
+                    // this tenant instead of propagating the panic.
+                    let mut st = state.lock().map_err(|_| {
+                        Error::Runtime(
+                            "session executor poisoned by a prior panic; \
+                             rebuild the session"
+                                .to_string(),
+                        )
+                    })?;
+                    let mut stats = MttkrpStats::default();
+                    let SingleState { exec, scratch } = &mut *st;
+                    let res = execute_plan_into(exec, plan, scratch, &mut stats, out);
+                    // Charge what actually ran — even on failure, matching
+                    // the coordinator workers — plus any integrity-scrub
+                    // recovery the executor performed, before deciding on
+                    // a retry.
+                    let jm = metrics.charge(0, self.id.0, &stats);
+                    let rec = exec.drain_recovery();
+                    metrics.charge_recovery(self.id.0, &rec);
+                    match res {
+                        Ok(()) => {
+                            // Same counter layout as a coordinator worker
+                            // plus the leader's request/batch bookkeeping
+                            // (one batch per single-array submission).
+                            metrics.add(&metrics.requests, 1);
+                            metrics.add(&metrics.batches, 1);
+                            metrics.add(&metrics.shard(0).batches, 1);
+                            metrics.add(&jm.requests, 1);
+                            metrics.add(&jm.batches, 1);
+                            return Ok(());
+                        }
+                        Err(e) if e.is_transient_fault() && attempt < fault.retries => {
+                            metrics.add(&metrics.batch_retries, 1);
+                            metrics.add(&jm.retries, 1);
+                            // Never sleep holding the device lock.
+                            drop(st);
+                            fault.backoff.wait(attempt);
+                            attempt += 1;
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
             }
             EngineState::Pool { pool, .. } => {
-                let mut pool = pool.lock().expect("session pool poisoned");
+                let mut pool = pool.lock().map_err(|_| {
+                    Error::coordinator(
+                        "session pool lock poisoned by a prior panic; \
+                         rebuild the session",
+                    )
+                })?;
                 pool.execute_plan_into_for(plan, self.id.0, out)
             }
         }
+    }
+
+    /// Graceful degradation: when recovery is exhausted and the session's
+    /// [`FaultPolicy::fallback`] allows it, reroute the submission to the
+    /// exact digital engine ([`Kernel::run_exact`]).  Only fault-class
+    /// errors qualify — anything else (shape/config errors) would fail
+    /// identically there.  The reroute is counted in
+    /// [`crate::coordinator::JobSnapshot::fallbacks`].
+    fn fallback(&self, kernel: &Kernel<'_>, err: Error, out: &mut Matrix) -> Result<()> {
+        let rerouteable = matches!(err, Error::Fault(_) | Error::Coordinator(_));
+        if !self.core.fault.fallback || !rerouteable {
+            return Err(err);
+        }
+        let m = kernel.run_exact()?;
+        if out.rows() != m.rows() || out.cols() != m.cols() {
+            return Err(Error::shape(format!(
+                "output is {}x{} but kernel produces {}x{}",
+                out.rows(),
+                out.cols(),
+                m.rows(),
+                m.cols()
+            )));
+        }
+        out.data_mut().copy_from_slice(m.data());
+        // The submission completed (digitally): count the request and the
+        // reroute on the engine's metrics.
+        let metrics = self.core.metrics();
+        let jm = metrics.job(self.id.0);
+        metrics.add(&metrics.requests, 1);
+        metrics.add(&jm.requests, 1);
+        metrics.add(&jm.fallbacks, 1);
+        Ok(())
     }
 
     /// Count a request on the exact engine (no cycles to meter).
@@ -968,6 +1171,138 @@ mod tests {
             .executor(Box::new(CpuTileExecutor::new(128, 16, 52)))
             .build()
             .is_err());
+    }
+
+    use crate::fault::{
+        silence_injected_death_panics, Backoff, FaultEvent, FaultKind, FaultPlan,
+    };
+
+    fn one_event(kind: FaultKind) -> Arc<FaultInjector> {
+        Arc::new(FaultInjector::new(&FaultPlan::new(
+            5,
+            vec![FaultEvent { worker: 0, load_idx: 0, kind }],
+        )))
+    }
+
+    fn transients(n: u64) -> Arc<FaultInjector> {
+        Arc::new(FaultInjector::new(&FaultPlan::new(
+            6,
+            (0..n)
+                .map(|i| FaultEvent {
+                    worker: 0,
+                    load_idx: i,
+                    kind: FaultKind::Transient,
+                })
+                .collect(),
+        )))
+    }
+
+    #[test]
+    fn single_engine_retries_injected_transients_transparently() {
+        let (x, factors) = problem(11, &[20, 8, 8], 6);
+        let k = Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 };
+        let clean = PsramSession::builder().build().unwrap().run(k).unwrap();
+        let inj = one_event(FaultKind::Transient);
+        let session = PsramSession::builder()
+            .fault_injector(Arc::clone(&inj))
+            .fault_policy(FaultPolicy {
+                backoff: Backoff::none(),
+                ..FaultPolicy::default()
+            })
+            .build()
+            .unwrap();
+        let got = session.run(k).unwrap();
+        assert_eq!(got.data(), clean.data(), "retried result must stay bit-exact");
+        assert_eq!(inj.injected(), (0, 1, 0));
+        let jm = session.job_metrics(JobId::DEFAULT);
+        assert_eq!(jm.retries, 1);
+        assert_eq!(jm.requests, 1);
+    }
+
+    #[test]
+    fn scrub_keeps_predict_cycle_exact_under_upsets() {
+        let (x, factors) = problem(12, &[20, 8, 8], 6);
+        let k = Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 };
+        let clean = PsramSession::builder().build().unwrap().run(k).unwrap();
+        let inj = one_event(FaultKind::ImageUpset { bits: 3 });
+        let session = PsramSession::builder()
+            .fault_injector(Arc::clone(&inj))
+            .build()
+            .unwrap();
+        let est = session.predict(&k).unwrap();
+        let got = session.run(k).unwrap();
+        assert_eq!(got.data(), clean.data(), "scrubbed result must stay bit-exact");
+        assert_eq!(inj.injected(), (1, 0, 0));
+        let jm = session.job_metrics(JobId::DEFAULT);
+        assert_eq!(jm.scrubs, 1);
+        assert_eq!(jm.scrub_write_cycles, 256);
+        // Recovery cost is charged outside the fault-free census:
+        // predict==measured still holds under injected upsets.
+        assert_eq!(est.compute_cycles, jm.streamed_cycles);
+        assert_eq!(est.reconfig_write_cycles, jm.reconfig_write_cycles);
+    }
+
+    #[test]
+    fn exhausted_recovery_falls_back_to_exact_digital_engine() {
+        let (x, factors) = problem(13, &[20, 8, 8], 6);
+        let k = Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 };
+        // retries=1 allows 2 attempts; 2 injected transients exhaust them.
+        let session = PsramSession::builder()
+            .fault_injector(transients(2))
+            .fault_policy(FaultPolicy {
+                retries: 1,
+                backoff: Backoff::none(),
+                fallback: true,
+                ..FaultPolicy::default()
+            })
+            .build()
+            .unwrap();
+        let got = session.run(k).unwrap();
+        let exact = k.run_exact().unwrap();
+        assert_eq!(got.data(), exact.data(), "fallback must be the exact result");
+        let jm = session.job_metrics(JobId::DEFAULT);
+        assert_eq!(jm.fallbacks, 1);
+        assert_eq!(jm.retries, 1);
+        assert_eq!(jm.requests, 1);
+        // Without fallback the same schedule is a typed error, not a
+        // silently wrong result.
+        let strict = PsramSession::builder()
+            .fault_injector(transients(2))
+            .fault_policy(FaultPolicy {
+                retries: 1,
+                backoff: Backoff::none(),
+                ..FaultPolicy::default()
+            })
+            .build()
+            .unwrap();
+        let err = strict.run(k).unwrap_err();
+        assert!(err.is_transient_fault(), "{err}");
+    }
+
+    #[test]
+    fn coordinated_session_heals_injected_worker_death() {
+        silence_injected_death_panics();
+        let (x, factors) = problem(14, &[20, 8, 8], 6);
+        let k = Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 };
+        let clean = PsramSession::builder().build().unwrap().run(k).unwrap();
+        let inj = one_event(FaultKind::WorkerDeath);
+        let session = PsramSession::builder()
+            .engine(Engine::Coordinated { shards: 1 })
+            .fault_injector(Arc::clone(&inj))
+            .fault_policy(FaultPolicy {
+                backoff: Backoff::none(),
+                ..FaultPolicy::default()
+            })
+            .build()
+            .unwrap();
+        let got = session.run(k).unwrap();
+        assert_eq!(got.data(), clean.data(), "healed pool must stay bit-exact");
+        assert_eq!(inj.injected(), (0, 0, 1));
+        use std::sync::atomic::Ordering;
+        let m = session.metrics();
+        assert_eq!(m.worker_deaths.load(Ordering::Relaxed), 1);
+        assert_eq!(m.worker_respawns.load(Ordering::Relaxed), 1);
+        assert_eq!(m.requeued_batches.load(Ordering::Relaxed), 1);
     }
 
     #[test]

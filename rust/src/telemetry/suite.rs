@@ -399,6 +399,103 @@ fn coordinator_area(report: &mut BenchReport) -> Result<()> {
             .samples(1),
         )?;
     }
+    fault_recovery_records(report)
+}
+
+/// Fault-recovery determinism: a single-image plan on a one-worker
+/// supervised pool, one request per fault class with pinned load indices
+/// (worker 0's loads advance 0, 1, 2, … across requests, and the
+/// respawned worker's counter restart cannot re-fire consumed events), so
+/// every recovery counter below is an exact contract — not a statistic.
+fn fault_recovery_records(report: &mut BenchReport) -> Result<()> {
+    use crate::coordinator::RecoveryPolicy;
+    use crate::fault::{
+        silence_injected_death_panics, Backoff, DeathMode, FaultEvent, FaultInjector,
+        FaultKind, FaultPlan, FaultPolicy, FaultyExecutor,
+    };
+    use std::sync::Arc;
+
+    silence_injected_death_panics();
+    let mut rng = Prng::new(19);
+    // One contraction block × one rank block = exactly one stored image
+    // (one batch) per request.
+    let unf = Matrix::randn(20, 64, &mut rng);
+    let krp = Matrix::randn(64, 8, &mut rng);
+    let plan = DensePlanner::new(256, 32, 52).plan_unfolded(&unf, &krp)?;
+    let reference = {
+        let mut exec = CpuTileExecutor::paper();
+        let mut stats = MttkrpStats::default();
+        execute_plan(&mut exec, &plan, &mut stats)?
+    };
+
+    // Request 1 loads 0 (transient → retry) and 1; request 2 load 2
+    // (upset → scrub); request 3 load 3 (death → respawn, requeue; the
+    // fresh executor re-loads at its own index 0, already consumed);
+    // request 4 runs clean on the respawned worker.
+    let events = vec![
+        FaultEvent { worker: 0, load_idx: 0, kind: FaultKind::Transient },
+        FaultEvent { worker: 0, load_idx: 2, kind: FaultKind::ImageUpset { bits: 3 } },
+        FaultEvent { worker: 0, load_idx: 3, kind: FaultKind::WorkerDeath },
+    ];
+    let inj = Arc::new(FaultInjector::new(&FaultPlan::new(23, events)));
+    let injector = Arc::clone(&inj);
+    let mut cfg = CoordinatorConfig::new(1);
+    cfg.recovery = RecoveryPolicy {
+        backoff: Backoff::none(),
+        ..RecoveryPolicy::default()
+    };
+    let mut pool = Coordinator::spawn(cfg, move |i| {
+        Ok(FaultyExecutor::new(
+            CpuTileExecutor::paper(),
+            Arc::clone(&injector),
+            i,
+            DeathMode::Panic,
+            &FaultPolicy::default(),
+        ))
+    })?;
+
+    let t0 = Instant::now();
+    let mut identical = 0u64;
+    for _ in 0..4 {
+        if pool.execute_plan(&plan)?.data() == reference.data() {
+            identical += 1;
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let (upsets, transients, deaths) = inj.injected();
+    let m = pool.metrics();
+    let snap = m.snapshot();
+    let get = |key: &str| {
+        snap.iter().find(|(k, _)| *k == key).map(|(_, v)| *v).unwrap_or(0)
+    };
+    let p = "coordinator.fault";
+    report.push(count(&format!("{p}.injected_upsets"), upsets, "faults"))?;
+    report.push(count(&format!("{p}.injected_transients"), transients, "faults"))?;
+    report.push(count(&format!("{p}.injected_deaths"), deaths, "faults"))?;
+    report.push(count(&format!("{p}.batch_retries"), get("batch_retries"), "batches"))?;
+    report.push(count(
+        &format!("{p}.requeued_batches"),
+        get("requeued_batches"),
+        "batches",
+    ))?;
+    report.push(count(
+        &format!("{p}.worker_respawns"),
+        get("worker_respawns"),
+        "workers",
+    ))?;
+    report.push(count(&format!("{p}.scrubs"), get("scrubs"), "rewrites"))?;
+    report.push(count(
+        &format!("{p}.scrub_write_cycles"),
+        get("scrub_write_cycles"),
+        "cycles",
+    ))?;
+    report.push(count(
+        &format!("{p}.bit_identical_requests"),
+        identical,
+        "requests",
+    ))?;
+    report.push(wall(&format!("{p}.recovery_wall_s"), wall_s, 1))?;
     Ok(())
 }
 

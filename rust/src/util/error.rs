@@ -27,6 +27,14 @@ pub enum Error {
     /// The coordinator hit an internal fault (worker death, channel close).
     Coordinator(String),
 
+    /// A device or host fault was detected by the resilience layer
+    /// (`crate::fault`): an injected or modeled transient error, a
+    /// stored-image upset the scrub budget could not repair, or a worker
+    /// death.  Transient `Fault`s are the retryable class — the
+    /// coordinator's batch-retry loop and the session's fault policy key
+    /// off this variant.
+    Fault(String),
+
     /// Numerical failure (non-finite values, singular matrix, ...).
     Numerical(String),
 
@@ -52,6 +60,7 @@ impl fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Fault(m) => write!(f, "fault: {m}"),
             Error::Numerical(m) => write!(f, "numerical error: {m}"),
             Error::Telemetry(m) => write!(f, "telemetry error: {m}"),
             Error::Io(e) => write!(f, "{e}"),
@@ -100,6 +109,24 @@ impl Error {
     pub fn telemetry(msg: impl Into<String>) -> Self {
         Error::Telemetry(msg.into())
     }
+
+    /// Shorthand for a fault-layer error with formatted context.
+    pub fn fault(msg: impl Into<String>) -> Self {
+        Error::Fault(msg.into())
+    }
+
+    /// Shorthand for a coordinator error with formatted context.
+    pub fn coordinator(msg: impl Into<String>) -> Self {
+        Error::Coordinator(msg.into())
+    }
+
+    /// True for the retryable fault class: transient device/host faults
+    /// the coordinator's batch-retry loop (and the session fault policy)
+    /// may re-execute.  Every other variant is deterministic — shape,
+    /// config, and scheduling errors will fail identically on retry.
+    pub fn is_transient_fault(&self) -> bool {
+        matches!(self, Error::Fault(_))
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +146,16 @@ mod tests {
         let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
         let e: Error = ioe.into();
         assert!(matches!(e, Error::Io(_)));
+    }
+
+    #[test]
+    fn fault_variant_matches_and_classifies() {
+        let e = Error::fault("injected transient fault");
+        assert!(matches!(e, Error::Fault(_)));
+        assert!(e.is_transient_fault());
+        assert!(e.to_string().contains("injected transient fault"));
+        assert!(!Error::coordinator("worker death").is_transient_fault());
+        assert!(!Error::shape("3x4").is_transient_fault());
     }
 
     #[test]

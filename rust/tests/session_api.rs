@@ -507,3 +507,166 @@ fn tuning_policy_is_bit_invisible_at_the_session_surface() {
         .unwrap();
     assert_eq!(auto.run(k).unwrap().data(), fixed.run(k).unwrap().data());
 }
+
+// ---------------------------------------------------------------------------
+// Shutdown under fault: broken pools fail fast with typed errors, shut
+// down idempotently, and never hang or leak workers.
+// ---------------------------------------------------------------------------
+
+mod shutdown_under_fault {
+    use psram_imc::coordinator::{Coordinator, CoordinatorConfig, RecoveryPolicy};
+    use psram_imc::fault::{
+        silence_injected_death_panics, Backoff, DeathMode, FaultEvent, FaultInjector,
+        FaultKind, FaultPlan, FaultPolicy, FaultyExecutor,
+    };
+    use psram_imc::mttkrp::pipeline::CpuTileExecutor;
+    use psram_imc::mttkrp::plan::{DensePlanner, TilePlan};
+    use psram_imc::session::{Engine, JobId, Kernel, PsramSession};
+    use psram_imc::tensor::{DenseTensor, Matrix};
+    use psram_imc::util::prng::Prng;
+    use psram_imc::Error;
+    use std::sync::Arc;
+
+    /// A one-worker pool whose only worker dies at its first image load,
+    /// with no respawn budget — the smallest permanently broken pool.
+    fn doomed_pool() -> Coordinator {
+        silence_injected_death_panics();
+        let inj = Arc::new(FaultInjector::new(&FaultPlan::new(
+            3,
+            vec![FaultEvent {
+                worker: 0,
+                load_idx: 0,
+                kind: FaultKind::WorkerDeath,
+            }],
+        )));
+        Coordinator::spawn(
+            CoordinatorConfig {
+                recovery: RecoveryPolicy {
+                    respawn_budget: 0,
+                    backoff: Backoff::none(),
+                    ..RecoveryPolicy::default()
+                },
+                ..CoordinatorConfig::new(1)
+            },
+            move |i| {
+                Ok(FaultyExecutor::new(
+                    CpuTileExecutor::paper(),
+                    Arc::clone(&inj),
+                    i,
+                    DeathMode::Panic,
+                    &FaultPolicy::default(),
+                ))
+            },
+        )
+        .unwrap()
+    }
+
+    fn one_image_plan() -> TilePlan {
+        let mut rng = Prng::new(17);
+        let unf = Matrix::randn(20, 64, &mut rng);
+        let krp = Matrix::randn(64, 8, &mut rng);
+        DensePlanner::new(256, 32, 52).plan_unfolded(&unf, &krp).unwrap()
+    }
+
+    #[test]
+    fn submit_after_worker_death_fails_fast_with_typed_error() {
+        let plan = one_image_plan();
+        let mut pool = doomed_pool();
+        // The in-flight request gets the supervision context...
+        let err = pool.execute_plan(&plan).unwrap_err();
+        assert!(matches!(err, Error::Coordinator(_)), "{err}");
+        assert!(err.to_string().contains("respawn budget"), "{err}");
+        assert!(pool.broken().is_some());
+        // ...and every later submission fails fast instead of hanging on
+        // a queue no live worker will ever drain.
+        let err = pool.execute_plan(&plan).unwrap_err();
+        assert!(matches!(err, Error::Coordinator(_)), "{err}");
+        assert!(err.to_string().contains("broken"), "{err}");
+    }
+
+    #[test]
+    fn double_shutdown_while_workers_dead_is_clean() {
+        let plan = one_image_plan();
+        let mut pool = doomed_pool();
+        let _ = pool.execute_plan(&plan).unwrap_err();
+        // Shutdown of a broken pool joins the surviving threads; a second
+        // shutdown is an idempotent no-op, and drop after both is clean.
+        pool.shutdown();
+        assert!(pool.is_shut());
+        pool.shutdown();
+        assert!(pool.is_shut());
+        let err = pool.execute_plan(&plan).unwrap_err();
+        assert!(err.to_string().contains("shut down"), "{err}");
+        drop(pool);
+    }
+
+    #[test]
+    fn drop_while_workers_dead_never_hangs() {
+        let plan = one_image_plan();
+        let mut pool = doomed_pool();
+        let _ = pool.execute_plan(&plan).unwrap_err();
+        // No explicit shutdown: Drop must still join without deadlocking
+        // on the dead worker.
+        drop(pool);
+    }
+
+    #[test]
+    fn session_fails_fast_after_pool_breaks_unless_fallback_reroutes() {
+        silence_injected_death_panics();
+        let mut rng = Prng::new(18);
+        let x = DenseTensor::randn(&[20, 8, 8], &mut rng);
+        let factors: Vec<Matrix> =
+            [20, 8, 8].iter().map(|&d| Matrix::randn(d, 8, &mut rng)).collect();
+        let k = Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 };
+        let death = || {
+            Arc::new(FaultInjector::new(&FaultPlan::new(
+                3,
+                vec![FaultEvent {
+                    worker: 0,
+                    load_idx: 0,
+                    kind: FaultKind::WorkerDeath,
+                }],
+            )))
+        };
+
+        // Strict policy: the first submission surfaces the supervision
+        // error, the second fails fast on the broken pool — both typed.
+        let strict = PsramSession::builder()
+            .engine(Engine::Coordinated { shards: 1 })
+            .fault_injector(death())
+            .fault_policy(FaultPolicy {
+                respawn_budget: 0,
+                retries: 0,
+                backoff: Backoff::none(),
+                ..FaultPolicy::default()
+            })
+            .build()
+            .unwrap();
+        let err = strict.run(k).unwrap_err();
+        assert!(matches!(err, Error::Coordinator(_)), "{err}");
+        assert!(err.to_string().contains("respawn budget"), "{err}");
+        let err = strict.run(k).unwrap_err();
+        assert!(err.to_string().contains("broken"), "{err}");
+
+        // Degraded mode: the same schedule with `fallback` reroutes every
+        // submission to the exact digital engine instead.
+        let degraded = PsramSession::builder()
+            .engine(Engine::Coordinated { shards: 1 })
+            .fault_injector(death())
+            .fault_policy(FaultPolicy {
+                respawn_budget: 0,
+                retries: 0,
+                backoff: Backoff::none(),
+                fallback: true,
+                ..FaultPolicy::default()
+            })
+            .build()
+            .unwrap();
+        let exact = k.run_exact().unwrap();
+        assert_eq!(degraded.run(k).unwrap().data(), exact.data());
+        assert_eq!(degraded.run(k).unwrap().data(), exact.data());
+        let jm = degraded.job_metrics(JobId::DEFAULT);
+        assert_eq!(jm.fallbacks, 2);
+        assert_eq!(jm.requests, 2);
+    }
+}
