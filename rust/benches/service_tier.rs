@@ -1,0 +1,115 @@
+//! SERVICE — the admission-controlled tier: virtual-clock simulator
+//! throughput (how many offered jobs per wall-second the deterministic
+//! harness replays), the pinned hand-traced scenario the telemetry gate
+//! rides on, and the live scheduler's end-to-end serve rate over
+//! single-array session pools.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use psram_imc::perfmodel::PerfModel;
+use psram_imc::service::{
+    pinned_report, JobSpec, PoolSpec, Scheduler, ServiceConfig, TenantId, TenantSpec,
+    TrafficConfig,
+};
+use psram_imc::telemetry::{BenchRecord, Direction};
+
+fn main() {
+    let mut rec = common::Recorder::from_args("bench_service_tier");
+    let model = PerfModel::paper();
+
+    common::section("SERVICE: virtual-clock simulator throughput (paper mix, 3 tenants)");
+    for &jobs in &[40usize, 120, 360] {
+        let mut cfg = TrafficConfig::paper(4242);
+        for load in &mut cfg.tenants {
+            load.jobs = jobs;
+        }
+        let total = jobs * cfg.tenants.len();
+        let mut last = None;
+        let t = rec.timed(&format!("simulate {total} arrivals"), 1, 5, || {
+            last = Some(cfg.run(&model).unwrap());
+        });
+        let r = last.unwrap();
+        println!(
+            "  -> {} completed, utilization {:.3}, {:.0} sim jobs per wall-second",
+            r.counters.completed,
+            r.utilization,
+            total as f64 / t.median
+        );
+        rec.record(
+            BenchRecord::new(
+                format!("sim.jobs{total}.jobs_per_s"),
+                total as f64 / t.median,
+                "jobs/s",
+            )
+            .better(Direction::Higher)
+            .wall_clock()
+            .samples(t.n),
+        );
+        // The mid-size scenario's deterministic observables: same seed,
+        // same bits, on any machine.
+        if total == 360 {
+            rec.record(
+                BenchRecord::new(format!("sim.jobs{total}.wait_p95_cycles"), r.wait_p95, "cycles")
+                    .tol(1e-9),
+            );
+            rec.record(
+                BenchRecord::new(format!("sim.jobs{total}.utilization"), r.utilization, "ratio")
+                    .tol(1e-9),
+            );
+        }
+    }
+
+    common::section("SERVICE: pinned hand-traced scenario (the telemetry gate)");
+    let p = pinned_report();
+    print!("{p}");
+    rec.record(BenchRecord::new("pinned.completed", p.counters.completed as f64, "jobs"));
+    rec.record(BenchRecord::new("pinned.wait_p95_cycles", p.wait_p95, "cycles").tol(1e-9));
+
+    common::section("SERVICE: live scheduler serve rate (single-array pools)");
+    for &pools in &[1usize, 2] {
+        let cfg = ServiceConfig {
+            queue_bound: 64,
+            tenants: (0..3u32)
+                .map(|i| (TenantId(i), TenantSpec { weight: 3 - i, quota: usize::MAX }))
+                .collect(),
+            default_tenant: TenantSpec::default(),
+        };
+        let n = 18usize;
+        let t = rec.timed(&format!("serve {n} jobs, {pools} pool(s)"), 1, 3, || {
+            let specs: Vec<PoolSpec> = (0..pools).map(|_| PoolSpec::single()).collect();
+            let sched = Scheduler::new(&cfg, &specs, model.clone()).unwrap();
+            // Submit paused so the stride order, not submission racing,
+            // decides dispatch; resume, then drain every handle.
+            sched.pause();
+            let handles: Vec<_> = (0..n)
+                .map(|i| {
+                    let spec = JobSpec::DenseMttkrp {
+                        shape: [32, 16, 8],
+                        rank: 4,
+                        mode: i % 3,
+                        seed: i as u64,
+                    };
+                    sched.submit(TenantId((i % 3) as u32), spec).unwrap()
+                })
+                .collect();
+            sched.resume();
+            for h in handles {
+                assert!(h.wait().is_done());
+            }
+        });
+        println!("  -> {:.0} served jobs/s end to end", n as f64 / t.median);
+        rec.record(
+            BenchRecord::new(
+                format!("serve.pools{pools}.jobs_per_s"),
+                n as f64 / t.median,
+                "jobs/s",
+            )
+            .better(Direction::Higher)
+            .wall_clock()
+            .samples(t.n),
+        );
+    }
+
+    rec.finish();
+}

@@ -160,6 +160,16 @@ enum WorkerMsg {
     Died { worker: usize, batch: PlanBatch, panic: String },
 }
 
+/// Why `Coordinator::try_submit` refused a batch, with the batch handed
+/// back to the leader.  `Full` is ordinary backpressure (retry after
+/// draining a result); `Shut` means the pool's shutdown flag was observed
+/// under the queue lock — no worker will ever answer the batch, so the
+/// leader must fail the request instead of waiting.
+enum SubmitDenied {
+    Full(PlanBatch),
+    Shut(PlanBatch),
+}
+
 /// Render a worker panic payload for error context.  Injected deaths
 /// (`crate::fault::InjectedDeath`) are labelled precisely; string panics
 /// pass through.
@@ -473,11 +483,25 @@ impl Coordinator {
     }
 
     /// Try to enqueue a batch on its home shard without blocking; returns
-    /// the batch back when the bounded queue is full.
-    fn try_submit(&self, batch: PlanBatch) -> std::result::Result<(), PlanBatch> {
+    /// the batch back when the bounded queue is full or the pool has been
+    /// shut down.
+    ///
+    /// The shutdown check happens *here*, under the same lock as the
+    /// enqueue, not only at request entry: the entry-time `is_shut` check
+    /// and the enqueue are separate critical sections, so a shutdown that
+    /// lands between them (another handle on a shared pool, or a service
+    /// tier draining its sessions) would otherwise enqueue a batch that no
+    /// worker will ever answer — and the leader, whose `result_tx` clone
+    /// keeps the channel open, would block in `recv()` forever.  Checking
+    /// under the queue lock turns that window into a typed fail-fast
+    /// error (pinned by `tests/service_tier.rs::shutdown_race_fails_fast`).
+    fn try_submit(&self, batch: PlanBatch) -> std::result::Result<(), SubmitDenied> {
         let mut st = self.shared.lock();
+        if st.shutdown {
+            return Err(SubmitDenied::Shut(batch));
+        }
         if st.queued >= self.cfg.queue_depth {
-            return Err(batch);
+            return Err(SubmitDenied::Full(batch));
         }
         let shard = batch.shard;
         st.queues[shard].push_back(batch);
@@ -632,9 +656,27 @@ impl Coordinator {
                 if let Some(batch) = pending.take().or_else(|| batches.pop_front()) {
                     match self.try_submit(batch) {
                         Ok(()) => continue,
-                        Err(b) => {
+                        Err(SubmitDenied::Full(b)) => {
                             self.metrics.add(&self.metrics.backpressure_stalls, 1);
                             pending = Some(b);
+                        }
+                        Err(SubmitDenied::Shut(b)) => {
+                            // The pool was shut down between the entry
+                            // check and this enqueue: fail the request
+                            // typed, write off everything that was never
+                            // produced, and keep draining only what is
+                            // already in flight (each in-flight batch
+                            // still produces exactly one message because
+                            // workers drain their queues before honouring
+                            // the shutdown flag).
+                            error = Some(Error::Coordinator(
+                                "coordinator pool shut down mid-request".to_string(),
+                            ));
+                            let unproduced = b.len()
+                                + batches.iter().map(|x| x.len()).sum::<usize>();
+                            batches.clear();
+                            expected_images -= unproduced;
+                            continue;
                         }
                     }
                 }

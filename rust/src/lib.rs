@@ -52,6 +52,12 @@
 //!   supervises worker deaths (re-queue + bounded respawn) and the
 //!   session can fall back to the exact digital engine
 //!   (`session::SessionBuilder::fault_policy`).
+//! * [`service`] — the admission-controlled serving tier: a bounded
+//!   submission queue with typed rejects, per-tenant quotas and
+//!   stride-scheduled weighted-fair dispatch across heterogeneous session
+//!   pools, cooperative cancellation, per-tenant energy attribution, and
+//!   a seeded virtual-clock traffic harness whose latency percentiles are
+//!   bit-reproducible (`psram-imc serve` / `psram-imc traffic`).
 //! * [`runtime`] — PJRT execution of the AOT-compiled JAX/Pallas artifacts
 //!   (`artifacts/*.hlo.txt`) for the digital baseline and cross-checks
 //!   (behind the `xla` feature; a graceful stub otherwise).
@@ -86,6 +92,7 @@ pub mod mttkrp;
 pub mod perfmodel;
 pub mod psram;
 pub mod runtime;
+pub mod service;
 pub mod session;
 pub mod telemetry;
 pub mod tensor;

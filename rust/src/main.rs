@@ -12,6 +12,12 @@
 //!                     [--noise SIGMA] [--seed S]
 //!                     (Tucker/HOOI via TTM tile plans; default backend: coordinator)
 //! psram-imc energy    [--channels N] [--freq GHZ]
+//! psram-imc serve     [--pools N] [--tenants N] [--jobs N] [--queue-bound N] [--seed S]
+//!                     (live admission-controlled service tier: weighted-fair
+//!                      dispatch over N session pools, per-tenant energy)
+//! psram-imc traffic   [--seed S] [--pools N] [--jobs N] [--queue-bound N]
+//!                     (seeded virtual-clock traffic harness — latency
+//!                      percentiles are a pure function of the seed)
 //! psram-imc selftest            # analog vs CPU vs PJRT cross-check
 //! psram-imc bench-report [--write] [--dir PATH] [--only AREA[,AREA..]]
 //!                        [--date YYYY-MM-DD] [--verbose]
@@ -36,6 +42,9 @@ use psram_imc::energy::EnergyModel;
 use psram_imc::mttkrp::pipeline::{AnalogTileExecutor, CpuTileExecutor};
 use psram_imc::perfmodel::{fig5_frequency, fig5_wavelengths, PerfModel, Workload};
 use psram_imc::runtime::PjrtTileExecutor;
+use psram_imc::service::{
+    Completion, JobSpec, PoolSpec, Scheduler, ServiceConfig, TenantId, TenantSpec, TrafficConfig,
+};
 use psram_imc::session::{Engine, NoiseMode, PsramSession};
 use psram_imc::tensor::{CooTensor, DenseTensor, Matrix};
 use psram_imc::tucker::{tucker_fit, tucker_reconstruct, TuckerConfig, TuckerHooi};
@@ -68,6 +77,8 @@ fn run(args: &Args) -> Result<()> {
         "cpd" => cmd_cpd(args),
         "tucker" => cmd_tucker(args),
         "energy" => cmd_energy(args),
+        "serve" => cmd_serve(args),
+        "traffic" => cmd_traffic(args),
         "selftest" => cmd_selftest(args),
         "bench-report" => cmd_bench_report(args),
         "" | "help" => {
@@ -92,6 +103,8 @@ COMMANDS:
   cpd       CP-ALS decomposition on a synthetic tensor
   tucker    Tucker/HOOI decomposition via TTM tile plans
   energy    energy breakdown for the paper workload
+  serve     live admission-controlled service tier over session pools
+  traffic   seeded deterministic traffic harness (virtual clock)
   selftest  analog / CPU / PJRT bit-exactness cross-check
   bench-report  run the deterministic telemetry suite and diff it against
             the committed BENCH_*.json baselines (--write re-baselines)
@@ -418,6 +431,111 @@ fn cmd_energy(args: &Args) -> Result<()> {
     }
     println!("  {:>10}: {:>12}", "total", format_energy(e.total_j()));
     println!("  per useful op: {}", format_energy(e.per_op_j(2.0 * w.useful_macs())));
+    Ok(())
+}
+
+/// `serve`: stand up a live [`Scheduler`] over `--pools` single-array
+/// session pools, submit a small weighted multi-tenant batch (dispatch
+/// paused during submission so the stride order, not submission racing,
+/// decides who runs first), then report the admission counters and the
+/// per-tenant attributed energy.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let pools = args.get_or("pools", 2usize)?.max(1);
+    let tenants = args.get_or("tenants", 3usize)?.max(1);
+    let per_tenant = args.get_or("jobs", 4usize)?.max(1);
+    let bound = args.get_or("queue-bound", 64usize)?;
+    let seed = args.get_or("seed", 42u64)?;
+
+    let cfg = ServiceConfig {
+        queue_bound: bound,
+        tenants: (0..tenants as u32)
+            .map(|i| (TenantId(i), TenantSpec { weight: tenants as u32 - i, quota: usize::MAX }))
+            .collect(),
+        default_tenant: TenantSpec::default(),
+    };
+    let specs: Vec<PoolSpec> = (0..pools).map(|_| PoolSpec::single()).collect();
+    let mut sched = Scheduler::new(&cfg, &specs, PerfModel::paper())?;
+    println!(
+        "service tier: {pools} pool(s), queue bound {bound}, \
+         {tenants} tenant(s) x {per_tenant} job(s), weights {tenants}..1"
+    );
+
+    sched.pause();
+    let mut handles = Vec::new();
+    let mut rejected = 0u64;
+    for round in 0..per_tenant {
+        for i in 0..tenants as u32 {
+            let spec = JobSpec::DenseMttkrp {
+                shape: [48, 32, 16],
+                rank: 8,
+                mode: round % 3,
+                seed: seed ^ ((u64::from(i) << 8) | round as u64),
+            };
+            match sched.submit(TenantId(i), spec) {
+                Ok(h) => handles.push(h),
+                Err(r) => {
+                    rejected += 1;
+                    println!("  rejected: {r}");
+                }
+            }
+        }
+    }
+    sched.resume();
+
+    let (mut done, mut failed) = (0u64, 0u64);
+    for h in handles {
+        match h.wait() {
+            Completion::Done(_) => done += 1,
+            Completion::Cancelled => {}
+            Completion::Failed(e) => {
+                failed += 1;
+                eprintln!("  job failed: {e}");
+            }
+        }
+    }
+    let c = sched.counters();
+    println!(
+        "admission: submitted {} admitted {} rejected(full {} quota {} shut {})",
+        c.submitted, c.admitted, c.rejected_full, c.rejected_quota, c.rejected_shutdown
+    );
+    println!(
+        "lifecycle: dispatched {} completed {} failed {} cancelled {} \
+         (waited: {done} done, {failed} failed, {rejected} rejected)",
+        c.dispatched, c.completed, c.failed, c.cancelled
+    );
+    for i in 0..tenants as u32 {
+        let t = TenantId(i);
+        println!(
+            "  {t}: {} dispatched, {} attributed",
+            sched.dispatched_of(t),
+            format_energy(sched.tenant_energy_j(t))
+        );
+    }
+    sched.shutdown();
+    Ok(())
+}
+
+/// `traffic`: run the seeded open-loop scenario
+/// ([`TrafficConfig::paper`]) on the virtual clock and print the
+/// bit-reproducible [`psram_imc::service::TrafficReport`] — same seed,
+/// same numbers, on any machine.
+fn cmd_traffic(args: &Args) -> Result<()> {
+    let seed = args.get_or("seed", 42u64)?;
+    let mut cfg = TrafficConfig::paper(seed);
+    cfg.pools = args.get_or("pools", cfg.pools)?.max(1);
+    cfg.queue_bound = args.get_or("queue-bound", cfg.queue_bound)?;
+    let jobs = args.get_or("jobs", 120usize)?;
+    for load in &mut cfg.tenants {
+        load.jobs = jobs;
+    }
+    println!(
+        "traffic: seed {seed}, {} pool(s), queue bound {}, {} tenant(s) x {jobs} job(s)",
+        cfg.pools,
+        cfg.queue_bound,
+        cfg.tenants.len()
+    );
+    let report = cfg.run(&PerfModel::paper())?;
+    print!("{report}");
     Ok(())
 }
 

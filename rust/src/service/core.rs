@@ -1,0 +1,502 @@
+//! The pure admission/fairness state machine behind the service tier.
+//!
+//! [`SchedCore`] is deliberately single-threaded plain data: the live
+//! [`crate::service::Scheduler`] drives it under a mutex from real runner
+//! threads, and the virtual-time [`crate::service::traffic`] simulator
+//! drives the *same* state machine from a discrete-event loop.  One policy
+//! implementation, two clocks — which is what makes the simulated latency
+//! percentiles a faithful (and bit-reproducible) model of the live
+//! scheduler's admission behaviour.
+//!
+//! Policy summary (DESIGN.md §19):
+//!
+//! - **Bounded queue** — at most `queue_bound` admitted-but-undispatched
+//!   jobs across all tenants; admission past the bound is a typed
+//!   [`Reject::QueueFull`], never blocking.
+//! - **Per-tenant quota** — at most `quota` *outstanding* (queued +
+//!   in-flight) jobs per tenant; the quota check runs before the bound
+//!   check so a quota-violating burst cannot consume shared queue
+//!   capacity even transiently.
+//! - **Weighted-fair dispatch** — stride scheduling: each tenant carries a
+//!   `pass` counter advanced by `STRIDE_ONE / weight` per dispatch; the
+//!   runnable tenant with the minimum pass (ties broken by tenant id) is
+//!   served next, FIFO within a tenant.  Over any backlogged window the
+//!   dispatch shares converge to the weight ratios with error bounded by
+//!   one stride.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+
+use crate::util::error::Error;
+
+/// One stride unit: `720720 = lcm(1..=16)`, so every weight up to 16
+/// divides it exactly and the pass arithmetic stays in integers.
+pub const STRIDE_ONE: u64 = 720_720;
+
+/// A tenant (user/account) identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TenantId(pub u32);
+
+impl fmt::Display for TenantId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "tenant{}", self.0)
+    }
+}
+
+/// Per-tenant admission/fairness parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantSpec {
+    /// Fair-share weight (dispatch shares converge to the weight ratios);
+    /// clamped to at least 1.
+    pub weight: u32,
+    /// Maximum outstanding (queued + in-flight) jobs; submissions past it
+    /// are rejected with [`Reject::QuotaExceeded`].
+    pub quota: usize,
+}
+
+impl Default for TenantSpec {
+    fn default() -> Self {
+        TenantSpec { weight: 1, quota: usize::MAX }
+    }
+}
+
+/// Service-tier configuration: the shared queue bound plus the tenant
+/// table.  Tenants not listed are auto-registered on first submission
+/// with `default_tenant`.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Maximum admitted-but-undispatched jobs across all tenants.
+    pub queue_bound: usize,
+    /// Pre-registered tenants.
+    pub tenants: Vec<(TenantId, TenantSpec)>,
+    /// Spec applied to tenants first seen at submission time.
+    pub default_tenant: TenantSpec,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            queue_bound: 64,
+            tenants: Vec::new(),
+            default_tenant: TenantSpec::default(),
+        }
+    }
+}
+
+/// A typed admission rejection — the backpressure signal the service tier
+/// surfaces to callers instead of blocking or hanging them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Reject {
+    /// The shared submission queue is at its bound; retry after draining.
+    QueueFull {
+        /// The configured queue bound that was hit.
+        bound: usize,
+    },
+    /// The tenant is at its outstanding-job quota.
+    QuotaExceeded {
+        /// The rejected tenant.
+        tenant: TenantId,
+        /// Its configured quota.
+        quota: usize,
+    },
+    /// The scheduler has shut down; no further work is accepted.
+    ShutDown,
+}
+
+impl fmt::Display for Reject {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Reject::QueueFull { bound } => {
+                write!(f, "submission queue full (bound {bound})")
+            }
+            Reject::QuotaExceeded { tenant, quota } => {
+                write!(f, "{tenant} at quota ({quota} outstanding jobs)")
+            }
+            Reject::ShutDown => write!(f, "scheduler is shut down"),
+        }
+    }
+}
+
+impl From<Reject> for Error {
+    fn from(r: Reject) -> Self {
+        Error::Service(r.to_string())
+    }
+}
+
+/// An admitted job's identity: its admission sequence number plus the
+/// owning tenant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ticket {
+    /// Admission sequence number (unique, monotone).
+    pub seq: u64,
+    /// Owning tenant.
+    pub tenant: TenantId,
+}
+
+/// How a dispatched job terminated, for [`SchedCore::complete`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// The job produced a result.
+    Done,
+    /// The job surfaced a typed error.
+    Failed,
+    /// The job observed its cancellation token and stopped.
+    Cancelled,
+}
+
+/// Monotone admission/lifecycle counters.  Plain `u64`s mutated under the
+/// core's single-threaded discipline — sums, so independent of dispatch
+/// interleaving, which is what makes them bit-reproducible between the
+/// live scheduler and the virtual-time simulator on the same input.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ServiceCounters {
+    /// Submissions offered (admitted + all rejects).
+    pub submitted: u64,
+    /// Submissions admitted to the queue.
+    pub admitted: u64,
+    /// Rejected: shared queue at its bound.
+    pub rejected_full: u64,
+    /// Rejected: tenant at quota.
+    pub rejected_quota: u64,
+    /// Rejected: scheduler already shut down.
+    pub rejected_shutdown: u64,
+    /// Terminal: cancelled (while queued or cooperatively mid-run).
+    pub cancelled: u64,
+    /// Jobs handed to a runner/pool.
+    pub dispatched: u64,
+    /// Terminal: completed with a result.
+    pub completed: u64,
+    /// Terminal: failed with a typed error (includes jobs drained as
+    /// failed by shutdown).
+    pub failed: u64,
+}
+
+impl ServiceCounters {
+    /// All terminal outcomes: `completed + failed + cancelled`.
+    pub fn terminal(&self) -> u64 {
+        self.completed + self.failed + self.cancelled
+    }
+}
+
+/// Per-tenant scheduler state.
+#[derive(Debug)]
+struct TenantState {
+    spec: TenantSpec,
+    /// Stride-scheduling pass value (advanced by `STRIDE_ONE / weight`
+    /// per dispatch).
+    pass: u64,
+    /// Admitted, undispatched jobs (FIFO within the tenant).
+    queued: VecDeque<u64>,
+    /// Queued + in-flight jobs (the quota denominator).
+    outstanding: usize,
+    /// Total dispatches for this tenant (fairness observable).
+    dispatched: u64,
+}
+
+/// The admission + weighted-fair dispatch state machine.  See the
+/// [module docs](self) for the policy; see
+/// [`crate::service::Scheduler`] for the threaded front-end and
+/// [`crate::service::traffic`] for the virtual-time harness.
+#[derive(Debug)]
+pub struct SchedCore {
+    bound: usize,
+    tenants: BTreeMap<u32, TenantState>,
+    default_spec: TenantSpec,
+    next_seq: u64,
+    queued: usize,
+    in_flight: usize,
+    closed: bool,
+    counters: ServiceCounters,
+}
+
+impl SchedCore {
+    /// A core for a configuration (pre-registering its tenant table).
+    pub fn new(cfg: &ServiceConfig) -> Self {
+        let mut core = SchedCore {
+            bound: cfg.queue_bound,
+            tenants: BTreeMap::new(),
+            default_spec: cfg.default_tenant,
+            next_seq: 0,
+            queued: 0,
+            in_flight: 0,
+            closed: false,
+            counters: ServiceCounters::default(),
+        };
+        for (id, spec) in &cfg.tenants {
+            core.register(*id, *spec);
+        }
+        core
+    }
+
+    /// Register (or re-parameterise) a tenant.  A newly registered tenant
+    /// starts at the current minimum pass so it can neither starve nor be
+    /// starved by incumbents.
+    pub fn register(&mut self, tenant: TenantId, spec: TenantSpec) {
+        let floor = self.tenants.values().map(|t| t.pass).min().unwrap_or(0);
+        let st = self.tenants.entry(tenant.0).or_insert(TenantState {
+            spec,
+            pass: floor,
+            queued: VecDeque::new(),
+            outstanding: 0,
+            dispatched: 0,
+        });
+        st.spec = spec;
+    }
+
+    /// Offer a submission.  Checks, in order: shutdown, tenant quota,
+    /// shared queue bound.  Quota runs before the bound so an
+    /// over-quota burst cannot consume shared queue capacity even
+    /// transiently.
+    pub fn submit(&mut self, tenant: TenantId) -> std::result::Result<Ticket, Reject> {
+        self.counters.submitted += 1;
+        if self.closed {
+            self.counters.rejected_shutdown += 1;
+            return Err(Reject::ShutDown);
+        }
+        if !self.tenants.contains_key(&tenant.0) {
+            let spec = self.default_spec;
+            self.register(tenant, spec);
+        }
+        let bound = self.bound;
+        let total_queued = self.queued;
+        let st = self.tenants.get_mut(&tenant.0).expect("registered above");
+        if st.outstanding >= st.spec.quota {
+            self.counters.rejected_quota += 1;
+            return Err(Reject::QuotaExceeded { tenant, quota: st.spec.quota });
+        }
+        if total_queued >= bound {
+            self.counters.rejected_full += 1;
+            return Err(Reject::QueueFull { bound });
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        st.queued.push_back(seq);
+        st.outstanding += 1;
+        self.queued += 1;
+        self.counters.admitted += 1;
+        Ok(Ticket { seq, tenant })
+    }
+
+    /// Remove a still-queued job (cancellation before dispatch).  Returns
+    /// `true` and releases its queue slot + quota if the job was queued;
+    /// `false` if it was already dispatched (or never admitted), in which
+    /// case cancellation is the runner's job via the cooperative token.
+    pub fn cancel_queued(&mut self, ticket: Ticket) -> bool {
+        let Some(st) = self.tenants.get_mut(&ticket.tenant.0) else {
+            return false;
+        };
+        let Some(pos) = st.queued.iter().position(|&s| s == ticket.seq) else {
+            return false;
+        };
+        st.queued.remove(pos);
+        st.outstanding -= 1;
+        self.queued -= 1;
+        self.counters.cancelled += 1;
+        true
+    }
+
+    /// Weighted-fair pick: the runnable tenant with the minimum
+    /// `(pass, tenant id)` yields its oldest queued job.  Advances that
+    /// tenant's pass by `STRIDE_ONE / weight`.
+    pub fn next(&mut self) -> Option<Ticket> {
+        let id = self
+            .tenants
+            .iter()
+            .filter(|(_, t)| !t.queued.is_empty())
+            .min_by_key(|(id, t)| (t.pass, **id))
+            .map(|(id, _)| *id)?;
+        let st = self.tenants.get_mut(&id).expect("picked above");
+        let seq = st.queued.pop_front().expect("non-empty by filter");
+        st.pass += STRIDE_ONE / u64::from(st.spec.weight.max(1));
+        st.dispatched += 1;
+        self.queued -= 1;
+        self.in_flight += 1;
+        self.counters.dispatched += 1;
+        Some(Ticket { seq, tenant: TenantId(id) })
+    }
+
+    /// Record a dispatched job's terminal outcome, releasing its
+    /// in-flight slot and tenant quota.
+    pub fn complete(&mut self, tenant: TenantId, outcome: Outcome) {
+        let st = self.tenants.get_mut(&tenant.0).expect("unknown tenant");
+        st.outstanding -= 1;
+        self.in_flight -= 1;
+        match outcome {
+            Outcome::Done => self.counters.completed += 1,
+            Outcome::Failed => self.counters.failed += 1,
+            Outcome::Cancelled => self.counters.cancelled += 1,
+        }
+    }
+
+    /// Stop admitting: every later [`SchedCore::submit`] is
+    /// [`Reject::ShutDown`].
+    pub fn close(&mut self) {
+        self.closed = true;
+    }
+
+    /// Drain every queued job (shutdown): each is counted `failed` (the
+    /// fail-fast contract — a queued submission must never outlive the
+    /// scheduler silently) and its ticket returned so the caller can
+    /// resolve the waiting handle.
+    pub fn drain_queued(&mut self) -> Vec<Ticket> {
+        let mut out = Vec::new();
+        for (id, st) in self.tenants.iter_mut() {
+            while let Some(seq) = st.queued.pop_front() {
+                st.outstanding -= 1;
+                self.queued -= 1;
+                self.counters.failed += 1;
+                out.push(Ticket { seq, tenant: TenantId(*id) });
+            }
+        }
+        out
+    }
+
+    /// Admitted-but-undispatched jobs (all tenants).
+    pub fn queued_len(&self) -> usize {
+        self.queued
+    }
+
+    /// Dispatched, not-yet-terminal jobs.
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// True after [`SchedCore::close`].
+    pub fn is_closed(&self) -> bool {
+        self.closed
+    }
+
+    /// The configured queue bound.
+    pub fn bound(&self) -> usize {
+        self.bound
+    }
+
+    /// One tenant's outstanding (queued + in-flight) jobs.
+    pub fn outstanding(&self, tenant: TenantId) -> usize {
+        self.tenants.get(&tenant.0).map_or(0, |t| t.outstanding)
+    }
+
+    /// One tenant's total dispatches (the fairness observable).
+    pub fn dispatched_of(&self, tenant: TenantId) -> u64 {
+        self.tenants.get(&tenant.0).map_or(0, |t| t.dispatched)
+    }
+
+    /// One tenant's quota (`usize::MAX` if unregistered).
+    pub fn quota_of(&self, tenant: TenantId) -> usize {
+        self.tenants.get(&tenant.0).map_or(usize::MAX, |t| t.spec.quota)
+    }
+
+    /// Point-in-time copy of the lifecycle counters.
+    pub fn counters(&self) -> ServiceCounters {
+        self.counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(bound: usize, tenants: &[(u32, u32, usize)]) -> ServiceConfig {
+        ServiceConfig {
+            queue_bound: bound,
+            tenants: tenants
+                .iter()
+                .map(|&(id, weight, quota)| {
+                    (TenantId(id), TenantSpec { weight, quota })
+                })
+                .collect(),
+            default_tenant: TenantSpec::default(),
+        }
+    }
+
+    #[test]
+    fn quota_checked_before_bound() {
+        let mut core = SchedCore::new(&cfg(1, &[(0, 1, 0), (1, 1, 8)]));
+        // Tenant 0 has quota 0: rejected on quota even with queue space.
+        assert_eq!(
+            core.submit(TenantId(0)),
+            Err(Reject::QuotaExceeded { tenant: TenantId(0), quota: 0 })
+        );
+        // Fill the queue, then tenant 0 still classifies as quota (not
+        // full) and tenant 1 as full.
+        core.submit(TenantId(1)).unwrap();
+        assert_eq!(
+            core.submit(TenantId(0)),
+            Err(Reject::QuotaExceeded { tenant: TenantId(0), quota: 0 })
+        );
+        assert_eq!(core.submit(TenantId(1)), Err(Reject::QueueFull { bound: 1 }));
+        let c = core.counters();
+        assert_eq!(
+            (c.submitted, c.admitted, c.rejected_quota, c.rejected_full),
+            (4, 1, 2, 1)
+        );
+    }
+
+    #[test]
+    fn stride_dispatch_tracks_weights() {
+        // Weights 3:1, both tenants always backlogged: out of every 4
+        // dispatches, 3 go to the heavy tenant.
+        let mut core = SchedCore::new(&cfg(64, &[(0, 3, 64), (1, 1, 64)]));
+        for _ in 0..16 {
+            core.submit(TenantId(0)).unwrap();
+            core.submit(TenantId(1)).unwrap();
+        }
+        let mut picks = Vec::new();
+        for _ in 0..16 {
+            let t = core.next().unwrap();
+            picks.push(t.tenant.0);
+            core.complete(t.tenant, Outcome::Done);
+        }
+        let heavy = picks.iter().filter(|&&t| t == 0).count();
+        assert_eq!(heavy, 12, "picks {picks:?}");
+        assert_eq!(core.dispatched_of(TenantId(0)), 12);
+        assert_eq!(core.dispatched_of(TenantId(1)), 4);
+    }
+
+    #[test]
+    fn fifo_within_tenant_and_tie_break_by_id() {
+        let mut core = SchedCore::new(&cfg(8, &[(0, 1, 8), (1, 1, 8)]));
+        let a0 = core.submit(TenantId(0)).unwrap();
+        let b0 = core.submit(TenantId(1)).unwrap();
+        let a1 = core.submit(TenantId(0)).unwrap();
+        // Equal pass: tenant 0 wins the tie; within tenant 0, FIFO.
+        assert_eq!(core.next(), Some(a0));
+        assert_eq!(core.next(), Some(b0));
+        assert_eq!(core.next(), Some(a1));
+        assert_eq!(core.next(), None);
+    }
+
+    #[test]
+    fn cancel_queued_releases_slot_and_quota() {
+        let mut core = SchedCore::new(&cfg(2, &[(0, 1, 2)]));
+        let t0 = core.submit(TenantId(0)).unwrap();
+        let _t1 = core.submit(TenantId(0)).unwrap();
+        assert_eq!(
+            core.submit(TenantId(0)),
+            Err(Reject::QuotaExceeded { tenant: TenantId(0), quota: 2 })
+        );
+        assert!(core.cancel_queued(t0));
+        assert!(!core.cancel_queued(t0), "double cancel must be a no-op");
+        // Slot and quota are back.
+        assert!(core.submit(TenantId(0)).is_ok());
+        assert_eq!(core.counters().cancelled, 1);
+        assert_eq!(core.queued_len(), 2);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_as_failed() {
+        let mut core = SchedCore::new(&cfg(8, &[(0, 1, 8), (1, 1, 8)]));
+        core.submit(TenantId(0)).unwrap();
+        core.submit(TenantId(1)).unwrap();
+        let running = core.next().unwrap();
+        core.close();
+        assert_eq!(core.submit(TenantId(0)), Err(Reject::ShutDown));
+        let drained = core.drain_queued();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(core.queued_len(), 0);
+        core.complete(running.tenant, Outcome::Done);
+        let c = core.counters();
+        assert_eq!(c.admitted, c.terminal());
+        assert_eq!(core.in_flight(), 0);
+    }
+}

@@ -1,0 +1,421 @@
+//! Owned job descriptions and cooperative cancellation.
+//!
+//! The session layer's [`Kernel`] borrows its tensors, which is right for
+//! an in-process caller but wrong for a queue: a queued job must own (or
+//! be able to re-create) everything it needs at dispatch time.  A
+//! [`JobSpec`] is therefore a *seeded recipe* — kind, shape, rank, seed —
+//! materialised into tensors only inside the runner that executes it.
+//! Two consequences fall out for free:
+//!
+//! - the queue holds a few words per job instead of tensor payloads, so
+//!   a bounded queue bounds memory;
+//! - a spec is trivially replayable: the serial bit-identity reference
+//!   (`tests/service_tier.rs`) and the traffic simulator both re-derive
+//!   the exact same job from the spec alone.
+//!
+//! Cancellation is cooperative: a [`CancelToken`] is checked before every
+//! kernel submission (for CP-ALS/HOOI, between the MTTKRPs/TTMs of a
+//! sweep via cancellable backend adapters), so a cancel lands at the next
+//! kernel boundary rather than tearing down a worker mid-tile.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::cpd::{AlsConfig, CpAls, CpTarget, MttkrpBackend};
+use crate::perfmodel::{PerfModel, Workload};
+use crate::session::{Kernel, SessionJob};
+use crate::tensor::{CooTensor, DenseTensor, Matrix};
+use crate::tucker::{TtmBackend, TtmStream, TuckerConfig, TuckerHooi};
+use crate::util::error::{Error, Result};
+use crate::util::prng::Prng;
+
+/// A shared cooperative cancellation flag.  Cloning shares the flag;
+/// `cancel` is sticky (there is no un-cancel).
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// A fresh, uncancelled token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Request cancellation (sticky; safe from any thread).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    /// True once `cancel` has been called on any clone.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+
+    /// Typed error for a run stopped by this token.
+    fn err() -> Error {
+        Error::service("job cancelled by its token")
+    }
+
+    /// Fail fast if cancelled — the per-kernel-boundary check.
+    fn check(&self) -> Result<()> {
+        if self.is_cancelled() {
+            Err(Self::err())
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// A decomposition job as submitted to the service tier: a seeded recipe
+/// (see the [module docs](self)) covering the workload mix of the paper's
+/// serving story — dense/sparse MTTKRP and TTM primitives plus full
+/// CP-ALS and Tucker/HOOI runs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobSpec {
+    /// One dense MTTKRP along `mode` of a seeded `shape` tensor.
+    DenseMttkrp {
+        /// Tensor shape.
+        shape: [usize; 3],
+        /// Decomposition rank.
+        rank: usize,
+        /// Contraction mode.
+        mode: usize,
+        /// Materialisation seed.
+        seed: u64,
+    },
+    /// One sparse (COO) MTTKRP along `mode`.
+    SparseMttkrp {
+        /// Tensor shape.
+        shape: [usize; 3],
+        /// Stored nonzeros.
+        nnz: usize,
+        /// Decomposition rank.
+        rank: usize,
+        /// Contraction mode.
+        mode: usize,
+        /// Materialisation seed.
+        seed: u64,
+    },
+    /// One Tucker TTM contraction along `mode`.
+    Ttm {
+        /// Tensor shape.
+        shape: [usize; 3],
+        /// Factor rank (stored operand is `[shape[mode], rank]`).
+        rank: usize,
+        /// Contraction mode.
+        mode: usize,
+        /// Materialisation seed.
+        seed: u64,
+    },
+    /// A full CP-ALS decomposition (`sweeps` iterations, 3 MTTKRPs each).
+    CpAls {
+        /// Tensor shape.
+        shape: [usize; 3],
+        /// CP rank.
+        rank: usize,
+        /// ALS sweep budget.
+        sweeps: usize,
+        /// Materialisation + factor-init seed.
+        seed: u64,
+    },
+    /// A full Tucker/HOOI decomposition (HOSVD init + TTM-chain sweeps).
+    Hooi {
+        /// Tensor shape.
+        shape: [usize; 3],
+        /// Multilinear rank (same in every mode here, for a compact spec).
+        rank: usize,
+        /// HOOI sweep budget.
+        sweeps: usize,
+        /// Materialisation seed.
+        seed: u64,
+    },
+}
+
+/// What a completed job hands back: the result matrices (the kernel
+/// output, or the decomposition's factor set) plus the final fit for the
+/// iterative kinds.  `bits_eq` is the service tier's bit-identity
+/// contract — the same spec run through any pool must match the serial
+/// single-session reference exactly.
+#[derive(Debug, Clone)]
+pub struct JobOutput {
+    /// Result matrices (one kernel result, or one factor per mode).
+    pub matrices: Vec<Matrix>,
+    /// Final fit for CP-ALS/HOOI jobs (`None` for single kernels).
+    pub fit: Option<f64>,
+}
+
+impl JobOutput {
+    /// Bitwise equality: every matrix element and the fit compare by
+    /// their exact f32/f64 bit patterns (no tolerance).
+    pub fn bits_eq(&self, other: &JobOutput) -> bool {
+        self.matrices.len() == other.matrices.len()
+            && self.fit.map(f64::to_bits) == other.fit.map(f64::to_bits)
+            && self.matrices.iter().zip(&other.matrices).all(|(a, b)| {
+                a.rows() == b.rows()
+                    && a.cols() == b.cols()
+                    && a.data()
+                        .iter()
+                        .zip(b.data())
+                        .all(|(x, y)| x.to_bits() == y.to_bits())
+            })
+    }
+}
+
+/// [`MttkrpBackend`] adapter that checks a [`CancelToken`] before every
+/// MTTKRP — the cancellation boundary inside a CP-ALS run.
+struct CancellableMttkrp<'s> {
+    job: &'s SessionJob,
+    target: CpTarget<'s>,
+    cancel: &'s CancelToken,
+}
+
+impl MttkrpBackend for CancellableMttkrp<'_> {
+    fn mttkrp(&mut self, factors: &[Matrix], mode: usize) -> Result<Matrix> {
+        self.cancel.check()?;
+        match self.target {
+            CpTarget::Dense(x) => self.job.run(Kernel::DenseMttkrp { x, factors, mode }),
+            CpTarget::Sparse(x) => self.job.run(Kernel::SparseMttkrp { x, factors, mode }),
+        }
+    }
+
+    fn shape(&self) -> &[usize] {
+        self.target.shape()
+    }
+
+    fn norm_sq(&self) -> f64 {
+        self.target.norm_sq()
+    }
+
+    fn name(&self) -> &'static str {
+        "service"
+    }
+}
+
+/// [`TtmBackend`] adapter that checks a [`CancelToken`] before every TTM
+/// — the cancellation boundary inside a HOOI run.
+struct CancellableTtm<'s> {
+    job: &'s SessionJob,
+    cancel: &'s CancelToken,
+}
+
+impl TtmBackend for CancellableTtm<'_> {
+    fn ttm(&mut self, slot: usize, stream: TtmStream<'_>, u: &Matrix) -> Result<Matrix> {
+        self.cancel.check()?;
+        self.job.run(Kernel::Ttm { stream, u, slot })
+    }
+
+    fn name(&self) -> &'static str {
+        "service"
+    }
+}
+
+impl JobSpec {
+    /// Short kind label (CLI/bench reporting).
+    pub fn name(&self) -> &'static str {
+        match self {
+            JobSpec::DenseMttkrp { .. } => "dense-mttkrp",
+            JobSpec::SparseMttkrp { .. } => "sparse-mttkrp",
+            JobSpec::Ttm { .. } => "ttm",
+            JobSpec::CpAls { .. } => "cp-als",
+            JobSpec::Hooi { .. } => "hooi",
+        }
+    }
+
+    /// The spec's materialisation seed.
+    pub fn seed(&self) -> u64 {
+        match self {
+            JobSpec::DenseMttkrp { seed, .. }
+            | JobSpec::SparseMttkrp { seed, .. }
+            | JobSpec::Ttm { seed, .. }
+            | JobSpec::CpAls { seed, .. }
+            | JobSpec::Hooi { seed, .. } => *seed,
+        }
+    }
+
+    /// The job's per-kernel workload in the perf model's
+    /// `[I, K] @ [K, R]` form (the sparse kind reports its dense
+    /// envelope — the model's capacity view, not a sparsity claim).
+    pub fn workload(&self) -> Result<Workload> {
+        let mttkrp = |shape: &[usize; 3], rank: usize, mode: usize| {
+            if mode >= 3 {
+                return Err(Error::config(format!("MTTKRP mode {mode} of a 3-mode shape")));
+            }
+            let rest: u64 = shape
+                .iter()
+                .enumerate()
+                .filter(|&(m, _)| m != mode)
+                .map(|(_, &d)| d as u64)
+                .product();
+            Ok(Workload {
+                i_rows: shape[mode] as u64,
+                k_contraction: rest,
+                rank: rank as u64,
+            })
+        };
+        match self {
+            JobSpec::DenseMttkrp { shape, rank, mode, .. }
+            | JobSpec::SparseMttkrp { shape, rank, mode, .. } => mttkrp(shape, *rank, *mode),
+            JobSpec::Ttm { shape, rank, mode, .. } => {
+                Workload::ttm(shape, *mode, *rank as u64)
+            }
+            JobSpec::CpAls { shape, rank, .. } | JobSpec::Hooi { shape, rank, .. } => {
+                mttkrp(shape, *rank, 0)
+            }
+        }
+    }
+
+    /// Kernel submissions the job issues — the virtual service-time
+    /// multiplier.  Exact for the single-kernel kinds; for the iterative
+    /// kinds it is the budgeted count (3 MTTKRPs per ALS sweep; 2-TTM
+    /// chains per mode plus the core update, 7 per HOOI sweep), a
+    /// deterministic envelope rather than an early-stop-aware count.
+    pub fn kernel_count(&self) -> u64 {
+        match self {
+            JobSpec::DenseMttkrp { .. } | JobSpec::SparseMttkrp { .. } | JobSpec::Ttm { .. } => 1,
+            JobSpec::CpAls { sweeps, .. } => 3 * (*sweeps as u64).max(1),
+            JobSpec::Hooi { sweeps, .. } => 7 * (*sweeps as u64).max(1),
+        }
+    }
+
+    /// Predicted virtual service time in device cycles: the perf model's
+    /// per-kernel compute + write cycles times [`JobSpec::kernel_count`].
+    /// A pure function of (spec, model) — the deterministic service-time
+    /// oracle of the traffic simulator.
+    pub fn service_cycles(&self, model: &PerfModel) -> Result<u64> {
+        let est = model.predict(&self.workload()?)?;
+        Ok((est.compute_cycles + est.write_cycles).max(1) * self.kernel_count())
+    }
+
+    /// Materialise and run the job under a session job handle, checking
+    /// `cancel` at every kernel boundary.  Both the live scheduler and
+    /// the serial bit-identity reference call exactly this.
+    pub fn run(&self, job: &SessionJob, cancel: &CancelToken) -> Result<JobOutput> {
+        cancel.check()?;
+        match self {
+            JobSpec::DenseMttkrp { shape, rank, mode, seed } => {
+                let mut rng = Prng::new(*seed);
+                let x = DenseTensor::randn(shape, &mut rng);
+                let factors: Vec<Matrix> =
+                    shape.iter().map(|&d| Matrix::randn(d, *rank, &mut rng)).collect();
+                let out =
+                    job.run(Kernel::DenseMttkrp { x: &x, factors: &factors, mode: *mode })?;
+                Ok(JobOutput { matrices: vec![out], fit: None })
+            }
+            JobSpec::SparseMttkrp { shape, nnz, rank, mode, seed } => {
+                let mut rng = Prng::new(*seed);
+                let x = CooTensor::random(shape, *nnz, &mut rng);
+                let factors: Vec<Matrix> =
+                    shape.iter().map(|&d| Matrix::randn(d, *rank, &mut rng)).collect();
+                let out =
+                    job.run(Kernel::SparseMttkrp { x: &x, factors: &factors, mode: *mode })?;
+                Ok(JobOutput { matrices: vec![out], fit: None })
+            }
+            JobSpec::Ttm { shape, rank, mode, seed } => {
+                let mut rng = Prng::new(*seed);
+                let x = DenseTensor::randn(shape, &mut rng);
+                let u = Matrix::randn(shape[*mode], *rank, &mut rng);
+                let out = job.run(Kernel::Ttm {
+                    stream: TtmStream::Fixed(&x, *mode),
+                    u: &u,
+                    slot: 0,
+                })?;
+                Ok(JobOutput { matrices: vec![out], fit: None })
+            }
+            JobSpec::CpAls { shape, rank, sweeps, seed } => {
+                let mut rng = Prng::new(*seed);
+                let x = DenseTensor::randn(shape, &mut rng);
+                let als = CpAls::new(AlsConfig {
+                    rank: *rank,
+                    max_iters: (*sweeps).max(1),
+                    tol: 1e-9,
+                    seed: seed ^ 0x5EED,
+                });
+                // Same cache hygiene as `CpAls::run_job`: a stale
+                // same-shape plan must not stream another job's codes,
+                // and the arenas must not outlive the run.
+                job.clear();
+                let res = als.run_backend(&mut CancellableMttkrp {
+                    job,
+                    target: CpTarget::Dense(&x),
+                    cancel,
+                });
+                job.clear();
+                let res = res?;
+                Ok(JobOutput { matrices: res.factors, fit: Some(res.final_fit()) })
+            }
+            JobSpec::Hooi { shape, rank, sweeps, seed } => {
+                let mut rng = Prng::new(*seed);
+                let x = DenseTensor::randn(shape, &mut rng);
+                let ranks: Vec<usize> =
+                    shape.iter().map(|&d| (*rank).min(d).max(1)).collect();
+                let hooi = TuckerHooi::new(TuckerConfig {
+                    ranks,
+                    max_iters: (*sweeps).max(1),
+                    tol: 1e-9,
+                });
+                job.clear();
+                let res = hooi.run_backend(&x, &mut CancellableTtm { job, cancel });
+                job.clear();
+                let res = res?;
+                Ok(JobOutput { matrices: res.factors, fit: Some(res.final_fit()) })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::PsramSession;
+
+    #[test]
+    fn cancel_token_is_sticky_and_shared() {
+        let t = CancelToken::new();
+        let u = t.clone();
+        assert!(!t.is_cancelled());
+        u.cancel();
+        assert!(t.is_cancelled());
+        assert!(matches!(t.check(), Err(Error::Service(_))));
+    }
+
+    #[test]
+    fn specs_replay_bit_identically_on_one_session() {
+        let session = PsramSession::builder().build().unwrap();
+        let job = session.job(crate::session::JobId(7));
+        let none = CancelToken::new();
+        let specs = [
+            JobSpec::DenseMttkrp { shape: [12, 10, 8], rank: 4, mode: 1, seed: 3 },
+            JobSpec::SparseMttkrp { shape: [14, 9, 8], nnz: 60, rank: 4, mode: 0, seed: 4 },
+            JobSpec::Ttm { shape: [10, 9, 8], rank: 3, mode: 2, seed: 5 },
+            JobSpec::CpAls { shape: [10, 8, 6], rank: 3, sweeps: 2, seed: 6 },
+            JobSpec::Hooi { shape: [8, 7, 6], rank: 2, sweeps: 2, seed: 7 },
+        ];
+        for spec in &specs {
+            let a = spec.run(&job, &none).unwrap();
+            let b = spec.run(&job, &none).unwrap();
+            assert!(a.bits_eq(&b), "{} replay diverged", spec.name());
+        }
+    }
+
+    #[test]
+    fn cancelled_before_start_never_touches_the_session() {
+        let session = PsramSession::builder().build().unwrap();
+        let job = session.job(crate::session::JobId(8));
+        let token = CancelToken::new();
+        token.cancel();
+        let spec = JobSpec::CpAls { shape: [10, 8, 6], rank: 3, sweeps: 2, seed: 1 };
+        assert!(matches!(spec.run(&job, &token), Err(Error::Service(_))));
+        assert_eq!(session.job_metrics(crate::session::JobId(8)).requests, 0);
+    }
+
+    #[test]
+    fn service_cycles_scale_with_kernel_count() {
+        let model = PerfModel::paper();
+        let one = JobSpec::DenseMttkrp { shape: [32, 16, 16], rank: 8, mode: 0, seed: 1 };
+        let als = JobSpec::CpAls { shape: [32, 16, 16], rank: 8, sweeps: 4, seed: 1 };
+        let c1 = one.service_cycles(&model).unwrap();
+        let ca = als.service_cycles(&model).unwrap();
+        assert!(c1 > 0);
+        assert_eq!(als.kernel_count(), 12);
+        assert!(ca >= c1, "iterative job must cost at least one kernel");
+    }
+}

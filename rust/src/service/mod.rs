@@ -1,0 +1,56 @@
+//! Admission-controlled request-serving tier over pSRAM session pools.
+//!
+//! The paper's capacity story is per-kernel; this module grows it into a
+//! *service* story: many tenants submitting decomposition jobs against a
+//! fixed photonic budget, with explicit answers for the operational
+//! questions a shared accelerator raises —
+//!
+//! - **Admission**: a bounded submission queue and per-tenant
+//!   outstanding-job quotas; violations surface as typed [`Reject`]s
+//!   (never blocking, never silent drops) so callers can implement real
+//!   backpressure.
+//! - **Fairness**: stride-scheduled weighted-fair dispatch across
+//!   tenants ([`core`]), one policy implementation shared verbatim by
+//!   the live scheduler and the virtual-time simulator.
+//! - **Cancellation**: cooperative [`CancelToken`]s checked at kernel
+//!   boundaries; a queued cancel releases its slot and quota
+//!   immediately.
+//! - **Prediction**: a seeded open-loop traffic harness ([`traffic`])
+//!   whose latency percentiles and per-tenant accounting are pure
+//!   functions of the seed — the serving-side analogue of the perf
+//!   model's deterministic kernel census, gated in telemetry.
+//!
+//! Layering: [`core`] is the pure policy state machine; [`job`] owns
+//! seeded job recipes and cancellable backend adapters; [`scheduler`] is
+//! the hand-rolled thread front-end placing jobs across session pools;
+//! [`traffic`] replays the same policy on a virtual clock.  See
+//! DESIGN.md §19 and EXPERIMENTS.md §Service.
+
+pub mod core;
+pub mod job;
+pub mod scheduler;
+pub mod traffic;
+
+pub use core::{
+    Outcome, Reject, SchedCore, ServiceConfig, ServiceCounters, TenantId, TenantSpec, Ticket,
+    STRIDE_ONE,
+};
+pub use job::{CancelToken, JobOutput, JobSpec};
+pub use scheduler::{tenant_job_id, Completion, JobHandle, PoolSpec, Scheduler};
+pub use traffic::{
+    pinned_report, simulate, JobMix, SimJob, TenantLoad, TenantStats, TrafficConfig,
+    TrafficReport,
+};
+
+/// Placeholder for an async (tokio-style) front-end behind the
+/// `service-async` feature gate.  The std-thread [`Scheduler`] is the
+/// supported implementation; this gate only reserves the surface so an
+/// executor-backed front-end can land without touching the core policy.
+#[cfg(feature = "service-async")]
+pub mod frontend_async {
+    /// Not implemented: the gate exists so downstream builds can probe
+    /// for the feature; constructing the front-end is a compile-time
+    /// reminder rather than a runtime surprise.
+    pub const UNIMPLEMENTED: &str =
+        "service-async front-end is reserved; use service::Scheduler";
+}

@@ -1,0 +1,525 @@
+//! The live, threaded service front-end: session pools + runner threads
+//! driving the pure [`SchedCore`] policy.
+//!
+//! Shape: one runner thread per [`PoolSpec`]-built [`PsramSession`]; a
+//! shared mutex+condvar holds the admission core and the pending-job
+//! table.  `submit` is non-blocking — it either admits and returns a
+//! [`JobHandle`] or surfaces a typed [`Reject`] (the backpressure
+//! signal); runners pull work in weighted-fair order and resolve each
+//! handle with a [`Completion`].  Everything is hand-rolled on
+//! `std::thread` + channels-by-condvar — the crate's no-dependency
+//! discipline; an async front-end can sit behind the `service-async`
+//! feature gate without touching this core.
+//!
+//! Bit-identity contract: pools are heterogeneous only in
+//! result-invariant dimensions (shard count, batch/queue shape, work
+//! stealing, intra-shard width, recovery policy).  [`PoolSpec`]
+//! deliberately exposes no noise or geometry knobs, so any job's output
+//! is bit-identical no matter which pool runs it — pinned by
+//! `tests/service_tier.rs` against serial single-session runs.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::thread::JoinHandle;
+
+use crate::coordinator::CoordinatorConfig;
+use crate::fault::{FaultInjector, FaultPolicy};
+use crate::perfmodel::PerfModel;
+use crate::service::core::{
+    Outcome, Reject, SchedCore, ServiceConfig, ServiceCounters, TenantId, Ticket,
+};
+use crate::service::job::{CancelToken, JobOutput, JobSpec};
+use crate::session::{Engine, JobId, PsramSession};
+use crate::util::error::{Error, Result};
+
+/// One execution pool of the service tier: a recipe for building a
+/// [`PsramSession`] sharing the tier's device model.  Only
+/// result-invariant knobs are exposed (see the [module docs](self)).
+#[derive(Clone, Default)]
+pub struct PoolSpec {
+    /// Coordinated shard count; 0 builds the single-array engine.
+    shards: usize,
+    intra_workers: Option<usize>,
+    pool_config: Option<CoordinatorConfig>,
+    fault: Option<FaultPolicy>,
+    injector: Option<Arc<FaultInjector>>,
+}
+
+impl PoolSpec {
+    /// A single-array pool (one device, kernel-granularity sharing).
+    pub fn single() -> Self {
+        PoolSpec::default()
+    }
+
+    /// A coordinated pool of `shards` worker arrays.
+    pub fn coordinated(shards: usize) -> Self {
+        PoolSpec { shards: shards.max(1), ..PoolSpec::default() }
+    }
+
+    /// Override the coordinated pool's shape (queue depth, batch size,
+    /// stealing); its `workers` field wins over `coordinated(shards)`.
+    pub fn pool_config(mut self, cfg: CoordinatorConfig) -> Self {
+        self.pool_config = Some(cfg);
+        self
+    }
+
+    /// Intra-shard worker width (see
+    /// [`crate::session::SessionBuilder::intra_workers`]).
+    pub fn intra_workers(mut self, width: usize) -> Self {
+        self.intra_workers = Some(width);
+        self
+    }
+
+    /// Fault-handling policy of this pool's session (retries, backoff,
+    /// respawn budget, digital fallback).
+    pub fn fault_policy(mut self, policy: FaultPolicy) -> Self {
+        self.fault = Some(policy);
+        self
+    }
+
+    /// Install a deterministic fault injector on this pool (chaos
+    /// testing; see [`crate::fault::FaultInjector`]).
+    pub fn fault_injector(mut self, injector: Arc<FaultInjector>) -> Self {
+        self.injector = Some(injector);
+        self
+    }
+
+    /// Build the pool's session against the tier's shared device model.
+    fn build_session(&self, model: &PerfModel) -> Result<PsramSession> {
+        let mut b = PsramSession::builder().model(model.clone());
+        if self.shards >= 1 {
+            b = b.engine(Engine::Coordinated { shards: self.shards });
+        }
+        if let Some(cfg) = &self.pool_config {
+            b = b.pool_config(cfg.clone());
+        }
+        if let Some(width) = self.intra_workers {
+            b = b.intra_workers(width);
+        }
+        if let Some(policy) = self.fault.clone() {
+            b = b.fault_policy(policy);
+        }
+        if let Some(inj) = &self.injector {
+            b = b.fault_injector(Arc::clone(inj));
+        }
+        b.build()
+    }
+}
+
+/// How a submitted job ended — the value a [`JobHandle`] resolves to.
+#[derive(Debug)]
+pub enum Completion {
+    /// The job ran and produced its output.
+    Done(JobOutput),
+    /// The job observed its cancellation (queued or cooperatively
+    /// mid-run) and stopped.
+    Cancelled,
+    /// The job (or the shutdown drain) surfaced a typed error.
+    Failed(Error),
+}
+
+impl Completion {
+    /// Unwrap into the crate result type: `Done` yields the output,
+    /// `Cancelled`/`Failed` become [`Error::Service`]-class errors.
+    pub fn into_result(self) -> Result<JobOutput> {
+        match self {
+            Completion::Done(out) => Ok(out),
+            Completion::Cancelled => Err(Error::service("job cancelled")),
+            Completion::Failed(e) => Err(e),
+        }
+    }
+
+    /// True for [`Completion::Done`].
+    pub fn is_done(&self) -> bool {
+        matches!(self, Completion::Done(_))
+    }
+}
+
+/// One-shot completion slot a runner resolves and a waiter consumes.
+#[derive(Default)]
+struct JobSlot {
+    state: Mutex<Option<Completion>>,
+    cv: Condvar,
+}
+
+impl JobSlot {
+    /// First resolution wins; later calls are no-ops (cancel and runner
+    /// may race to resolve the same slot).
+    fn resolve(&self, c: Completion) {
+        let mut g = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        if g.is_none() {
+            *g = Some(c);
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) -> Completion {
+        let mut g = self.state.lock().unwrap_or_else(PoisonError::into_inner);
+        loop {
+            if let Some(c) = g.take() {
+                return c;
+            }
+            g = self.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+}
+
+/// An admitted job not yet terminal: its recipe plus the caller-facing
+/// cancellation token and completion slot.
+struct Pending {
+    spec: JobSpec,
+    token: CancelToken,
+    slot: Arc<JobSlot>,
+}
+
+/// Mutex-guarded scheduler state.
+struct State {
+    core: SchedCore,
+    /// Admitted jobs by ticket sequence number; an entry leaves this map
+    /// exactly once — at dispatch, queued-cancel, or shutdown drain —
+    /// which is what the no-leak audit in `tests/service_tier.rs` pins.
+    jobs: HashMap<u64, Pending>,
+    paused: bool,
+    shut: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl Shared {
+    fn lock(&self) -> MutexGuard<'_, State> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+/// A caller's handle on one admitted job.
+pub struct JobHandle {
+    ticket: Ticket,
+    token: CancelToken,
+    slot: Arc<JobSlot>,
+    shared: Arc<Shared>,
+}
+
+impl JobHandle {
+    /// The job's admission ticket (sequence number + tenant).
+    pub fn ticket(&self) -> Ticket {
+        self.ticket
+    }
+
+    /// Request cancellation.  A still-queued job is removed immediately
+    /// (releasing its queue slot and quota) and resolves `Cancelled`; a
+    /// dispatched job stops cooperatively at its next kernel boundary.
+    pub fn cancel(&self) {
+        self.token.cancel();
+        let removed = {
+            let mut st = self.shared.lock();
+            if st.core.cancel_queued(self.ticket) {
+                st.jobs.remove(&self.ticket.seq)
+            } else {
+                None
+            }
+        };
+        if let Some(p) = removed {
+            p.slot.resolve(Completion::Cancelled);
+            self.shared.cv.notify_all();
+        }
+    }
+
+    /// Block until the job is terminal and consume its [`Completion`].
+    pub fn wait(self) -> Completion {
+        self.slot.wait()
+    }
+}
+
+/// The admission-controlled service tier: places submitted [`JobSpec`]s
+/// across heterogeneous session pools under the [`SchedCore`] policy
+/// (bounded queue, per-tenant quota, weighted-fair dispatch), with
+/// cooperative cancellation and typed backpressure.  See the
+/// [module docs](self) and DESIGN.md §19.
+pub struct Scheduler {
+    shared: Arc<Shared>,
+    runners: Vec<JoinHandle<()>>,
+    /// Session clones per pool, kept for metrics/energy queries.
+    sessions: Vec<PsramSession>,
+    model: PerfModel,
+}
+
+impl Scheduler {
+    /// Build the pools' sessions and spawn one runner thread per pool.
+    pub fn new(cfg: &ServiceConfig, pools: &[PoolSpec], model: PerfModel) -> Result<Scheduler> {
+        if pools.is_empty() {
+            return Err(Error::config("service tier needs at least one pool"));
+        }
+        let sessions: Vec<PsramSession> =
+            pools.iter().map(|p| p.build_session(&model)).collect::<Result<_>>()?;
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                core: SchedCore::new(cfg),
+                jobs: HashMap::new(),
+                paused: false,
+                shut: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let mut runners = Vec::with_capacity(sessions.len());
+        for (i, session) in sessions.iter().enumerate() {
+            let shared = Arc::clone(&shared);
+            let session = session.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("svc-runner-{i}"))
+                .spawn(move || runner(&shared, &session))
+                .map_err(|e| Error::service(format!("spawning runner {i}: {e}")))?;
+            runners.push(handle);
+        }
+        Ok(Scheduler { shared, runners, sessions, model })
+    }
+
+    /// A one-pool scheduler on the paper device model (tests, CLI).
+    pub fn single(cfg: &ServiceConfig) -> Result<Scheduler> {
+        Scheduler::new(cfg, &[PoolSpec::single()], PerfModel::paper())
+    }
+
+    /// Offer a job.  Non-blocking: admits and returns a handle, or
+    /// surfaces the typed [`Reject`] (queue full / quota / shut down) for
+    /// the caller to act on — the backpressure contract.
+    pub fn submit(
+        &self,
+        tenant: TenantId,
+        spec: JobSpec,
+    ) -> std::result::Result<JobHandle, Reject> {
+        let mut st = self.shared.lock();
+        let ticket = st.core.submit(tenant)?;
+        let token = CancelToken::new();
+        let slot = Arc::new(JobSlot::default());
+        st.jobs.insert(
+            ticket.seq,
+            Pending { spec, token: token.clone(), slot: Arc::clone(&slot) },
+        );
+        drop(st);
+        self.shared.cv.notify_one();
+        Ok(JobHandle { ticket, token, slot, shared: Arc::clone(&self.shared) })
+    }
+
+    /// Stop dispatching (admission continues; the queue fills toward its
+    /// bound).  Deterministic-backpressure lever for tests and drills.
+    pub fn pause(&self) {
+        self.shared.lock().paused = true;
+    }
+
+    /// Resume dispatching after [`Scheduler::pause`].
+    pub fn resume(&self) {
+        self.shared.lock().paused = false;
+        self.shared.cv.notify_all();
+    }
+
+    /// Shut the tier down: close admission, fail every still-queued job
+    /// fast (each handle resolves `Failed`), let in-flight jobs finish,
+    /// and join the runners.  Idempotent; also run by `Drop`.
+    pub fn shutdown(&mut self) {
+        let drained: Vec<Pending> = {
+            let mut st = self.shared.lock();
+            if st.shut {
+                Vec::new()
+            } else {
+                st.shut = true;
+                st.paused = false;
+                st.core.close();
+                let tickets = st.core.drain_queued();
+                tickets.iter().filter_map(|t| st.jobs.remove(&t.seq)).collect()
+            }
+        };
+        for p in drained {
+            p.slot.resolve(Completion::Failed(Error::service(
+                "service shut down with the job still queued",
+            )));
+        }
+        self.shared.cv.notify_all();
+        for h in std::mem::take(&mut self.runners) {
+            let _ = h.join();
+        }
+    }
+
+    /// Admitted-but-undispatched jobs.
+    pub fn queued_len(&self) -> usize {
+        self.shared.lock().core.queued_len()
+    }
+
+    /// Dispatched, not-yet-terminal jobs.
+    pub fn in_flight(&self) -> usize {
+        self.shared.lock().core.in_flight()
+    }
+
+    /// One tenant's outstanding (queued + in-flight) jobs.
+    pub fn outstanding(&self, tenant: TenantId) -> usize {
+        self.shared.lock().core.outstanding(tenant)
+    }
+
+    /// One tenant's total dispatches (the fairness observable).
+    pub fn dispatched_of(&self, tenant: TenantId) -> u64 {
+        self.shared.lock().core.dispatched_of(tenant)
+    }
+
+    /// Point-in-time lifecycle counters.
+    pub fn counters(&self) -> ServiceCounters {
+        self.shared.lock().core.counters()
+    }
+
+    /// Pool count.
+    pub fn pools(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// The tier's shared device model.
+    pub fn model(&self) -> &PerfModel {
+        &self.model
+    }
+
+    /// Analytic energy attributed to one tenant, summed across pools:
+    /// each pool session meters the tenant's kernels under its per-tenant
+    /// [`JobId`] and runs the measured cycle split through the paper's
+    /// energy model.  Cycle counts are plan-deterministic, so the sum is
+    /// reproducible run-to-run even though the job→pool partition is not.
+    pub fn tenant_energy_j(&self, tenant: TenantId) -> f64 {
+        let id = tenant_job_id(tenant);
+        self.sessions.iter().map(|s| s.job_energy(id).total_j()).sum()
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// The session-layer job id metering `tenant`'s kernels (`+ 1` keeps
+/// tenant 0 off [`JobId::DEFAULT`], which ad-hoc session users share).
+pub fn tenant_job_id(tenant: TenantId) -> JobId {
+    JobId(u64::from(tenant.0) + 1)
+}
+
+/// Pull the next assignment in weighted-fair order, or `None` once the
+/// tier is shut (shutdown drains the queue first, so returning then
+/// never strands an admitted job).
+fn next_assignment(shared: &Shared) -> Option<(Ticket, Pending)> {
+    let mut st = shared.lock();
+    loop {
+        if st.shut {
+            return None;
+        }
+        if !st.paused {
+            if let Some(ticket) = st.core.next() {
+                let pending = st
+                    .jobs
+                    .remove(&ticket.seq)
+                    .expect("dispatched ticket must have a pending entry");
+                return Some((ticket, pending));
+            }
+        }
+        st = shared.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+    }
+}
+
+/// One pool's runner loop: pull, execute under the tenant's metering job
+/// id, record the outcome, resolve the caller's slot.
+fn runner(shared: &Shared, session: &PsramSession) {
+    while let Some((ticket, pending)) = next_assignment(shared) {
+        let completion = if pending.token.is_cancelled() {
+            // Cancelled after dispatch but before we started: never
+            // touches the session.
+            Completion::Cancelled
+        } else {
+            let job = session.job(tenant_job_id(ticket.tenant));
+            match pending.spec.run(&job, &pending.token) {
+                Ok(out) => Completion::Done(out),
+                Err(_) if pending.token.is_cancelled() => Completion::Cancelled,
+                Err(e) => Completion::Failed(e),
+            }
+        };
+        let outcome = match &completion {
+            Completion::Done(_) => Outcome::Done,
+            Completion::Cancelled => Outcome::Cancelled,
+            Completion::Failed(_) => Outcome::Failed,
+        };
+        shared.lock().core.complete(ticket.tenant, outcome);
+        pending.slot.resolve(completion);
+        shared.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::core::TenantSpec;
+    use crate::session::JobId;
+
+    fn spec(seed: u64) -> JobSpec {
+        JobSpec::DenseMttkrp { shape: [10, 8, 6], rank: 3, mode: 1, seed }
+    }
+
+    fn cfg(bound: usize) -> ServiceConfig {
+        ServiceConfig {
+            queue_bound: bound,
+            tenants: vec![(TenantId(0), TenantSpec { weight: 1, quota: 16 })],
+            default_tenant: TenantSpec::default(),
+        }
+    }
+
+    #[test]
+    fn served_job_matches_serial_reference() {
+        let sched = Scheduler::single(&cfg(4)).unwrap();
+        let out = sched
+            .submit(TenantId(0), spec(3))
+            .unwrap()
+            .wait()
+            .into_result()
+            .unwrap();
+        let serial = PsramSession::builder().build().unwrap();
+        let reference = spec(3)
+            .run(&serial.job(JobId(1)), &CancelToken::new())
+            .unwrap();
+        assert!(out.bits_eq(&reference));
+    }
+
+    #[test]
+    fn bounded_queue_rejects_then_drains_after_resume() {
+        let sched = Scheduler::single(&cfg(2)).unwrap();
+        sched.pause();
+        let h1 = sched.submit(TenantId(0), spec(1)).unwrap();
+        let h2 = sched.submit(TenantId(0), spec(2)).unwrap();
+        assert!(matches!(
+            sched.submit(TenantId(0), spec(3)),
+            Err(Reject::QueueFull { bound: 2 })
+        ));
+        sched.resume();
+        assert!(h1.wait().is_done());
+        assert!(h2.wait().is_done());
+        // Backpressure lifted: the same submission is admitted now.
+        assert!(sched.submit(TenantId(0), spec(3)).is_ok());
+    }
+
+    #[test]
+    fn queued_cancel_releases_slot_and_resolves_cancelled() {
+        let sched = Scheduler::single(&cfg(1)).unwrap();
+        sched.pause();
+        let h = sched.submit(TenantId(0), spec(1)).unwrap();
+        h.cancel();
+        assert!(matches!(h.wait(), Completion::Cancelled));
+        assert_eq!(sched.queued_len(), 0);
+        assert_eq!(sched.counters().cancelled, 1);
+        assert!(sched.submit(TenantId(0), spec(2)).is_ok());
+    }
+
+    #[test]
+    fn shutdown_fails_queued_jobs_fast_and_rejects_later_submissions() {
+        let mut sched = Scheduler::single(&cfg(4)).unwrap();
+        sched.pause();
+        let h = sched.submit(TenantId(0), spec(1)).unwrap();
+        sched.shutdown();
+        assert!(matches!(h.wait(), Completion::Failed(Error::Service(_))));
+        assert!(matches!(sched.submit(TenantId(0), spec(2)), Err(Reject::ShutDown)));
+        let c = sched.counters();
+        assert_eq!(c.admitted, c.terminal());
+    }
+}

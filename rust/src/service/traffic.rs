@@ -1,0 +1,507 @@
+//! Seeded deterministic traffic harness: a virtual-clock discrete-event
+//! simulator over the *same* [`SchedCore`] policy the live scheduler
+//! runs.
+//!
+//! No wall clock anywhere in this module — time is a `u64` device-cycle
+//! counter, arrivals are open-loop draws from a seeded [`Prng`], and
+//! per-job service times come from [`JobSpec::service_cycles`] on the
+//! shared [`PerfModel`].  Every number a [`TrafficReport`] carries is
+//! therefore a pure function of `(config, seed)` and bit-reproducible
+//! across runs and machines — which is what lets the telemetry area gate
+//! on latency *percentiles* with zero tolerance.
+//!
+//! Event semantics (pinned by `pinned_report`'s hand-traced test):
+//! events order by `(time, class, index)` with completions before
+//! cancellations before arrivals at equal times, and the dispatch loop
+//! runs after **every** event.  Queued-job cancellation is modeled;
+//! in-flight cooperative cancellation is a live-scheduler behaviour the
+//! virtual clock does not model (a dispatched sim job always completes).
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, BTreeSet, HashMap};
+use std::fmt;
+
+use crate::perfmodel::PerfModel;
+use crate::service::core::{
+    Outcome, SchedCore, ServiceConfig, ServiceCounters, TenantId, TenantSpec, Ticket,
+};
+use crate::service::job::JobSpec;
+use crate::util::error::Result;
+use crate::util::prng::Prng;
+use crate::util::stats::percentile;
+
+/// Event classes at equal virtual times: completions release capacity
+/// before cancels release queue slots before arrivals contend for both.
+const EV_COMPLETION: u8 = 0;
+const EV_CANCEL: u8 = 1;
+const EV_ARRIVAL: u8 = 2;
+
+/// One offered job in virtual time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SimJob {
+    /// Arrival time (device cycles).
+    pub at: u64,
+    /// Submitting tenant.
+    pub tenant: TenantId,
+    /// Service time once dispatched (device cycles).
+    pub service: u64,
+}
+
+/// Per-tenant slice of a [`TrafficReport`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantStats {
+    /// The tenant.
+    pub tenant: TenantId,
+    /// Its configured fair-share weight.
+    pub weight: u32,
+    /// Jobs dispatched over the whole run.
+    pub dispatched: u64,
+    /// Jobs dispatched before the fairness window closed — the
+    /// weighted-fair observable (windowed so it is measured while every
+    /// tenant is still backlogged, before admission shares take over).
+    pub window_dispatched: u64,
+    /// Service cycles the tenant occupied a pool for.
+    pub busy_cycles: u64,
+}
+
+/// Bit-reproducible summary of one simulated traffic run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrafficReport {
+    /// Admission/lifecycle counters (shared [`SchedCore`] definitions).
+    pub counters: ServiceCounters,
+    /// Last completion time (device cycles); 0 if nothing completed.
+    pub makespan: u64,
+    /// Median queueing wait (admission → dispatch), completed jobs.
+    pub wait_p50: f64,
+    /// 95th-percentile queueing wait.
+    pub wait_p95: f64,
+    /// 99th-percentile queueing wait.
+    pub wait_p99: f64,
+    /// Median sojourn (admission → completion).
+    pub total_p50: f64,
+    /// 95th-percentile sojourn.
+    pub total_p95: f64,
+    /// 99th-percentile sojourn.
+    pub total_p99: f64,
+    /// Per-tenant dispatch/busy accounting, in config order.
+    pub per_tenant: Vec<TenantStats>,
+    /// Admitted service demand (cycles), including later-cancelled jobs.
+    pub offered_cycles: u64,
+    /// Pool capacity over the run: `pools * makespan` cycles.
+    pub capacity_cycles: u64,
+    /// Busy fraction of capacity (0 when capacity is 0).
+    pub utilization: f64,
+}
+
+impl fmt::Display for TrafficReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let c = &self.counters;
+        writeln!(
+            f,
+            "admission: submitted {} admitted {} rejected(full {} quota {} shut {})",
+            c.submitted, c.admitted, c.rejected_full, c.rejected_quota, c.rejected_shutdown
+        )?;
+        writeln!(
+            f,
+            "lifecycle: dispatched {} completed {} failed {} cancelled {}",
+            c.dispatched, c.completed, c.failed, c.cancelled
+        )?;
+        writeln!(
+            f,
+            "wait cycles  p50 {:>12.1}  p95 {:>12.1}  p99 {:>12.1}",
+            self.wait_p50, self.wait_p95, self.wait_p99
+        )?;
+        writeln!(
+            f,
+            "total cycles p50 {:>12.1}  p95 {:>12.1}  p99 {:>12.1}",
+            self.total_p50, self.total_p95, self.total_p99
+        )?;
+        writeln!(
+            f,
+            "makespan {} cycles, offered {} of {} capacity, utilization {:.3}",
+            self.makespan, self.offered_cycles, self.capacity_cycles, self.utilization
+        )?;
+        for t in &self.per_tenant {
+            writeln!(
+                f,
+                "  {} w{}: dispatched {} (window {}), busy {} cycles",
+                t.tenant, t.weight, t.dispatched, t.window_dispatched, t.busy_cycles
+            )?;
+        }
+        Ok(())
+    }
+}
+
+/// A job dispatched and not yet complete in the simulator.
+struct InFlight {
+    pool: usize,
+    tenant: TenantId,
+}
+
+/// Run `jobs` (plus queued-job `cancels` as `(time, job index)` pairs)
+/// through the admission core on `pools` identical pools.  See the
+/// [module docs](self) for the exact event semantics.
+pub fn simulate(
+    cfg: &ServiceConfig,
+    pools: usize,
+    jobs: &[SimJob],
+    cancels: &[(u64, usize)],
+    window: u64,
+) -> TrafficReport {
+    let pools = pools.max(1);
+    let mut core = SchedCore::new(cfg);
+    let mut heap: BinaryHeap<Reverse<(u64, u8, usize)>> = BinaryHeap::new();
+    for (i, j) in jobs.iter().enumerate() {
+        heap.push(Reverse((j.at, EV_ARRIVAL, i)));
+    }
+    for &(t, i) in cancels {
+        heap.push(Reverse((t, EV_CANCEL, i)));
+    }
+
+    let mut free: BTreeSet<usize> = (0..pools).collect();
+    let mut tickets: HashMap<usize, Ticket> = HashMap::new();
+    let mut seq_to_job: HashMap<u64, usize> = HashMap::new();
+    let mut in_flight: HashMap<usize, InFlight> = HashMap::new();
+    let mut starts: Vec<Option<u64>> = vec![None; jobs.len()];
+    let mut waits: Vec<f64> = Vec::new();
+    let mut totals: Vec<f64> = Vec::new();
+    let mut makespan = 0u64;
+    let mut offered = 0u64;
+    let mut busy: HashMap<u32, u64> = HashMap::new();
+    let mut window_disp: HashMap<u32, u64> = HashMap::new();
+
+    while let Some(Reverse((now, class, idx))) = heap.pop() {
+        match class {
+            EV_COMPLETION => {
+                let inf = in_flight.remove(&idx).expect("completion without dispatch");
+                core.complete(inf.tenant, Outcome::Done);
+                free.insert(inf.pool);
+                makespan = makespan.max(now);
+                let start = starts[idx].expect("completed without a start");
+                waits.push((start - jobs[idx].at) as f64);
+                totals.push((now - jobs[idx].at) as f64);
+            }
+            EV_CANCEL => {
+                if let Some(t) = tickets.get(&idx) {
+                    core.cancel_queued(*t);
+                }
+            }
+            _ => {
+                if let Ok(t) = core.submit(jobs[idx].tenant) {
+                    tickets.insert(idx, t);
+                    seq_to_job.insert(t.seq, idx);
+                    offered += jobs[idx].service;
+                }
+            }
+        }
+        // Dispatch after every event: fill free pools in weighted-fair
+        // order at the current virtual time.
+        while let Some(pool) = free.first().copied() {
+            let Some(ticket) = core.next() else { break };
+            free.remove(&pool);
+            let j = seq_to_job[&ticket.seq];
+            starts[j] = Some(now);
+            in_flight.insert(j, InFlight { pool, tenant: ticket.tenant });
+            heap.push(Reverse((now + jobs[j].service, EV_COMPLETION, j)));
+            *busy.entry(ticket.tenant.0).or_default() += jobs[j].service;
+            if now < window {
+                *window_disp.entry(ticket.tenant.0).or_default() += 1;
+            }
+        }
+    }
+
+    let pct = |xs: &[f64], p: f64| if xs.is_empty() { 0.0 } else { percentile(xs, p) };
+    let per_tenant = cfg
+        .tenants
+        .iter()
+        .map(|(id, spec)| TenantStats {
+            tenant: *id,
+            weight: spec.weight,
+            dispatched: core.dispatched_of(*id),
+            window_dispatched: window_disp.get(&id.0).copied().unwrap_or(0),
+            busy_cycles: busy.get(&id.0).copied().unwrap_or(0),
+        })
+        .collect();
+    let busy_total: u64 = busy.values().sum();
+    let capacity = pools as u64 * makespan;
+    TrafficReport {
+        counters: core.counters(),
+        makespan,
+        wait_p50: pct(&waits, 50.0),
+        wait_p95: pct(&waits, 95.0),
+        wait_p99: pct(&waits, 99.0),
+        total_p50: pct(&totals, 50.0),
+        total_p95: pct(&totals, 95.0),
+        total_p99: pct(&totals, 99.0),
+        per_tenant,
+        offered_cycles: offered,
+        capacity_cycles: capacity,
+        utilization: if capacity == 0 { 0.0 } else { busy_total as f64 / capacity as f64 },
+    }
+}
+
+/// The job-size mix an open-loop generator draws from (uniformly).
+#[derive(Debug, Clone)]
+pub struct JobMix {
+    /// Candidate job recipes; each arrival draws one uniformly (the
+    /// draw's seed field is ignored — arrival order fixes identity).
+    pub specs: Vec<JobSpec>,
+}
+
+impl JobMix {
+    /// The default mixed-size serving mix: small/large dense MTTKRP, a
+    /// sparse MTTKRP, a TTM, and a short CP-ALS run.
+    pub fn paper() -> Self {
+        JobMix {
+            specs: vec![
+                JobSpec::DenseMttkrp { shape: [64, 32, 32], rank: 8, mode: 0, seed: 0 },
+                JobSpec::DenseMttkrp { shape: [256, 128, 64], rank: 16, mode: 1, seed: 0 },
+                JobSpec::SparseMttkrp {
+                    shape: [512, 256, 128],
+                    nnz: 4096,
+                    rank: 16,
+                    mode: 0,
+                    seed: 0,
+                },
+                JobSpec::Ttm { shape: [128, 64, 64], rank: 16, mode: 2, seed: 0 },
+                JobSpec::CpAls { shape: [64, 32, 32], rank: 8, sweeps: 5, seed: 0 },
+            ],
+        }
+    }
+}
+
+/// One tenant's offered load.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantLoad {
+    /// The tenant.
+    pub tenant: TenantId,
+    /// Fair-share weight.
+    pub weight: u32,
+    /// Outstanding-job quota.
+    pub quota: usize,
+    /// Mean open-loop interarrival gap (device cycles, exponential).
+    pub mean_gap: u64,
+    /// Jobs offered over the run.
+    pub jobs: usize,
+}
+
+/// A seeded open-loop traffic scenario (see the [module docs](self)).
+#[derive(Debug, Clone)]
+pub struct TrafficConfig {
+    /// Master seed; every arrival stream forks deterministically from it.
+    pub seed: u64,
+    /// Shared submission-queue bound.
+    pub queue_bound: usize,
+    /// Identical pool count.
+    pub pools: usize,
+    /// Offered load per tenant.
+    pub tenants: Vec<TenantLoad>,
+    /// Job-size mix each arrival draws from.
+    pub mix: JobMix,
+    /// Fairness-window close time (`u64::MAX` to count the whole run).
+    pub window: u64,
+}
+
+impl TrafficConfig {
+    /// A saturating three-tenant scenario on the paper mix (weights
+    /// 3:2:1) — the CLI/bench default.
+    pub fn paper(seed: u64) -> Self {
+        let load = |id, weight| TenantLoad {
+            tenant: TenantId(id),
+            weight,
+            quota: 64,
+            mean_gap: 50_000,
+            jobs: 120,
+        };
+        TrafficConfig {
+            seed,
+            queue_bound: 64,
+            pools: 2,
+            tenants: vec![load(0, 3), load(1, 2), load(2, 1)],
+            mix: JobMix::paper(),
+            window: u64::MAX,
+        }
+    }
+
+    /// The scenario's admission configuration.
+    pub fn service_config(&self) -> ServiceConfig {
+        ServiceConfig {
+            queue_bound: self.queue_bound,
+            tenants: self
+                .tenants
+                .iter()
+                .map(|l| (l.tenant, TenantSpec { weight: l.weight, quota: l.quota }))
+                .collect(),
+            default_tenant: TenantSpec::default(),
+        }
+    }
+
+    /// Materialise the seeded arrival sequence: per-tenant exponential
+    /// interarrival streams (independent [`Prng`] forks), job sizes drawn
+    /// from the mix and priced by [`JobSpec::service_cycles`] on `model`,
+    /// merged in `(time, tenant)` order.
+    pub fn arrivals(&self, model: &PerfModel) -> Result<Vec<SimJob>> {
+        let mut root = Prng::new(self.seed);
+        let mut jobs = Vec::new();
+        for load in &self.tenants {
+            let mut rng = root.fork(u64::from(load.tenant.0).wrapping_add(1));
+            let mut t = 0u64;
+            for _ in 0..load.jobs {
+                // Exponential gap; `1 - u` keeps the log argument in (0, 1].
+                let gap = -(1.0 - rng.uniform()).ln() * load.mean_gap as f64;
+                t += gap.ceil() as u64 + 1;
+                let spec = &self.mix.specs[rng.below(self.mix.specs.len() as u64) as usize];
+                jobs.push(SimJob {
+                    at: t,
+                    tenant: load.tenant,
+                    service: spec.service_cycles(model)?,
+                });
+            }
+        }
+        jobs.sort_by_key(|j| (j.at, j.tenant.0));
+        Ok(jobs)
+    }
+
+    /// Run the scenario to a [`TrafficReport`] — a pure function of
+    /// `(self, model)`.
+    pub fn run(&self, model: &PerfModel) -> Result<TrafficReport> {
+        let jobs = self.arrivals(model)?;
+        Ok(simulate(&self.service_config(), self.pools, &jobs, &[], self.window))
+    }
+}
+
+/// The hand-traced pinned scenario the telemetry baseline gates on: one
+/// pool, queue bound 2, tenants A (weight 2, quota 4), B (1, 4), C (1,
+/// quota 0), every service time 100 cycles, eight arrivals exercising
+/// admission, both reject classes, weighted-fair dispatch, and a queued
+/// cancellation.  Every figure in `BENCH_service.json` is derived from
+/// this trace by hand — see the unit test of the same name.
+pub fn pinned_report() -> TrafficReport {
+    let a = TenantId(0);
+    let b = TenantId(1);
+    let c = TenantId(2);
+    let cfg = ServiceConfig {
+        queue_bound: 2,
+        tenants: vec![
+            (a, TenantSpec { weight: 2, quota: 4 }),
+            (b, TenantSpec { weight: 1, quota: 4 }),
+            (c, TenantSpec { weight: 1, quota: 0 }),
+        ],
+        default_tenant: TenantSpec::default(),
+    };
+    let job = |at, tenant| SimJob { at, tenant, service: 100 };
+    let jobs = [
+        job(0, a),
+        job(10, b),
+        job(20, a),
+        job(30, b),
+        job(40, a),
+        job(50, c),
+        job(110, b),
+        job(210, a),
+    ];
+    simulate(&cfg, 1, &jobs, &[(250, 7)], u64::MAX)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The full hand trace of the pinned scenario.  Dispatches: job 0
+    /// (A) at t=0, job 1 (B) at t=100 after A's stride advance, job 2
+    /// (A) at t=200, job 6 (B) at t=300; jobs 3/4 bounce off the full
+    /// queue, job 5 off C's zero quota, and job 7 is cancelled while
+    /// queued at t=250.  Waits are [0, 90, 180, 190].
+    #[test]
+    fn pinned_scenario_matches_hand_trace() {
+        let r = pinned_report();
+        let c = r.counters;
+        assert_eq!(c.submitted, 8);
+        assert_eq!(c.admitted, 5);
+        assert_eq!(c.rejected_full, 2);
+        assert_eq!(c.rejected_quota, 1);
+        assert_eq!(c.rejected_shutdown, 0);
+        assert_eq!(c.cancelled, 1);
+        assert_eq!(c.dispatched, 4);
+        assert_eq!(c.completed, 4);
+        assert_eq!(c.failed, 0);
+        assert_eq!(r.makespan, 400);
+        // Percentiles of the hand-traced waits, computed through the
+        // same interpolation the report uses (the nominal values are
+        // 135 / 188.5 / 189.7 and 235 / 288.5 / 289.7 — the committed
+        // telemetry baseline carries those with a 1e-9 tolerance).
+        let waits = [0.0, 90.0, 180.0, 190.0];
+        let totals = [100.0, 190.0, 280.0, 290.0];
+        assert_eq!(r.wait_p50.to_bits(), percentile(&waits, 50.0).to_bits());
+        assert_eq!(r.wait_p95.to_bits(), percentile(&waits, 95.0).to_bits());
+        assert_eq!(r.wait_p99.to_bits(), percentile(&waits, 99.0).to_bits());
+        assert_eq!(r.total_p50.to_bits(), percentile(&totals, 50.0).to_bits());
+        assert_eq!(r.total_p95.to_bits(), percentile(&totals, 95.0).to_bits());
+        assert_eq!(r.total_p99.to_bits(), percentile(&totals, 99.0).to_bits());
+        assert!((r.wait_p50 - 135.0).abs() < 1e-9);
+        assert!((r.wait_p95 - 188.5).abs() < 1e-9);
+        assert!((r.wait_p99 - 189.7).abs() < 1e-9);
+        assert_eq!(r.offered_cycles, 500);
+        assert_eq!(r.capacity_cycles, 400);
+        assert_eq!(r.utilization, 1.0);
+        assert_eq!(r.per_tenant.len(), 3);
+        assert_eq!((r.per_tenant[0].dispatched, r.per_tenant[0].busy_cycles), (2, 200));
+        assert_eq!((r.per_tenant[1].dispatched, r.per_tenant[1].busy_cycles), (2, 200));
+        assert_eq!((r.per_tenant[2].dispatched, r.per_tenant[2].busy_cycles), (0, 0));
+    }
+
+    /// Weighted fairness in a backlogged window: weights 3:2:1, every
+    /// tenant pre-loads 400 equal jobs, one pool.  The 600 dispatches
+    /// before the window closes split exactly 300/200/100 (100 whole
+    /// stride periods), with no tenant drained before the window ends.
+    #[test]
+    fn backlogged_window_shares_track_weights() {
+        let tenants: Vec<(TenantId, TenantSpec)> = [(0u32, 3u32), (1, 2), (2, 1)]
+            .iter()
+            .map(|&(id, w)| (TenantId(id), TenantSpec { weight: w, quota: usize::MAX }))
+            .collect();
+        let cfg = ServiceConfig {
+            queue_bound: 2000,
+            tenants,
+            default_tenant: TenantSpec::default(),
+        };
+        let mut jobs = Vec::new();
+        for _ in 0..400 {
+            for id in 0..3u32 {
+                jobs.push(SimJob { at: 0, tenant: TenantId(id), service: 1000 });
+            }
+        }
+        let r = simulate(&cfg, 1, &jobs, &[], 600_000);
+        let shares: Vec<u64> = r.per_tenant.iter().map(|t| t.window_dispatched).collect();
+        assert_eq!(shares, vec![300, 200, 100]);
+        assert_eq!(r.counters.completed, 1200);
+    }
+
+    /// Same seed, same report — bit-identical percentiles included.
+    #[test]
+    fn same_seed_reports_are_bit_identical() {
+        let model = PerfModel::paper();
+        let mut cfg = TrafficConfig::paper(42);
+        // Keep the unit test cheap.
+        for load in &mut cfg.tenants {
+            load.jobs = 40;
+        }
+        let a = cfg.run(&model).unwrap();
+        let b = cfg.run(&model).unwrap();
+        assert_eq!(a.counters, b.counters);
+        assert_eq!(a.per_tenant, b.per_tenant);
+        for (x, y) in [
+            (a.wait_p50, b.wait_p50),
+            (a.wait_p95, b.wait_p95),
+            (a.wait_p99, b.wait_p99),
+            (a.total_p50, b.total_p50),
+            (a.total_p95, b.total_p95),
+            (a.total_p99, b.total_p99),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // And a different seed actually changes the arrival process.
+        let other = TrafficConfig { seed: 43, ..cfg.clone() };
+        assert_ne!(cfg.arrivals(&model).unwrap(), other.arrivals(&model).unwrap());
+    }
+}

@@ -744,6 +744,38 @@ impl PsramSession {
     pub fn clear_job(&self, id: JobId) {
         self.core.lock_cache().clear_job(id.0);
     }
+
+    /// Gracefully shut down a pooled engine: drain queued batches, join
+    /// every worker thread.  No-op on the exact and single-array engines
+    /// (they own no threads).
+    ///
+    /// Safe to call from any clone of the session while other clones are
+    /// submitting: a submission that races the shutdown either completes
+    /// normally (workers drain their queues before exiting) or fails fast
+    /// with a typed [`Error::Coordinator`] — never a hang.  The enqueue
+    /// path re-checks the shutdown flag under the queue lock precisely so
+    /// this race window is closed (see `Coordinator::try_submit`); the
+    /// regression is pinned by `tests/service_tier.rs`.  Subsequent
+    /// submissions fail fast; metrics, energy attribution, and cached
+    /// plans remain readable.
+    pub fn shutdown(&self) {
+        if let EngineState::Pool { pool, .. } = &self.core.state {
+            // A poisoned lock means a tenant panicked mid-submission; the
+            // teardown must still run (workers would otherwise leak).
+            pool.lock().unwrap_or_else(PoisonError::into_inner).shutdown();
+        }
+    }
+
+    /// True once [`PsramSession::shutdown`] has run on a pooled engine
+    /// (always `false` for exact/single-array sessions).
+    pub fn is_shut(&self) -> bool {
+        match &self.core.state {
+            EngineState::Pool { pool, .. } => {
+                pool.lock().unwrap_or_else(PoisonError::into_inner).is_shut()
+            }
+            _ => false,
+        }
+    }
 }
 
 /// A `(session, job)` submission handle — the unit of multi-tenancy.

@@ -1,8 +1,8 @@
 //! The cheap telemetry suite behind `psram-imc bench-report`: reduced-size
-//! versions of the headline, engine hot-loop, coordinator-scaling, and
-//! workload (sparse + Tucker) benches, each emitting a [`BenchReport`]
-//! whose deterministic records are a pure function of the code and the
-//! fixed PRNG seeds.
+//! versions of the headline, engine hot-loop, coordinator-scaling,
+//! workload (sparse + Tucker), and service-tier benches, each emitting a
+//! [`BenchReport`] whose deterministic records are a pure function of the
+//! code and the fixed PRNG seeds.
 //!
 //! Every area pairs *measured* cycle censuses (from actually executing
 //! plans on the functional simulator) with the *predicted* envelope from
@@ -34,8 +34,8 @@ use crate::util::error::{Error, Result};
 use crate::util::prng::Prng;
 use std::time::Instant;
 
-/// The four bench areas, in baseline-file order.
-pub const AREAS: [&str; 4] = ["headline", "engine", "coordinator", "workloads"];
+/// The five bench areas, in baseline-file order.
+pub const AREAS: [&str; 5] = ["headline", "engine", "coordinator", "workloads", "service"];
 
 /// Relative tolerance for ratio metrics (utilization, padding): exact up
 /// to f64 formatting noise.
@@ -64,6 +64,7 @@ pub fn run_area(area: &str, env: &BenchEnv) -> Result<BenchReport> {
         "engine" => engine_area(&mut report)?,
         "coordinator" => coordinator_area(&mut report)?,
         "workloads" => workloads_area(&mut report)?,
+        "service" => service_area(&mut report)?,
         other => {
             return Err(Error::telemetry(format!(
                 "unknown bench area {other:?} (areas: {})",
@@ -567,6 +568,132 @@ fn workloads_area(report: &mut BenchReport) -> Result<()> {
     Ok(())
 }
 
+/// Service tier: the hand-traced pinned admission scenario supplies the
+/// committed, gating records (every figure in `BENCH_service.json` is
+/// derivable by hand from the trace in
+/// [`crate::service::traffic::pinned_report`] — counters, virtual-time
+/// latency percentiles, per-tenant dispatch/busy accounting, and the
+/// capacity-envelope utilization).  A seeded open-loop simulation and a
+/// small live-scheduler run with per-tenant energy attribution ride
+/// along; they are deterministic too, but intentionally not committed
+/// yet — they fold into the baseline at the next `--write` re-baseline,
+/// and until then they only ever classify as "added" (never gating).
+fn service_area(report: &mut BenchReport) -> Result<()> {
+    use crate::service::{
+        pinned_report, JobSpec, PoolSpec, Scheduler, ServiceConfig, TenantId, TenantSpec,
+        TrafficConfig,
+    };
+
+    // --- Pinned hand-traced scenario (the committed baseline). ---
+    let pinned = pinned_report();
+    let c = pinned.counters;
+    for (name, v) in [
+        ("submitted", c.submitted),
+        ("admitted", c.admitted),
+        ("rejected_full", c.rejected_full),
+        ("rejected_quota", c.rejected_quota),
+        ("cancelled", c.cancelled),
+        ("dispatched", c.dispatched),
+        ("completed", c.completed),
+    ] {
+        report.push(count(&format!("service.pinned.{name}"), v, "jobs"))?;
+    }
+    report.push(count("service.pinned.makespan_cycles", pinned.makespan, "cycles"))?;
+    for (name, v) in [
+        ("wait_p50_cycles", pinned.wait_p50),
+        ("wait_p95_cycles", pinned.wait_p95),
+        ("wait_p99_cycles", pinned.wait_p99),
+        ("total_p50_cycles", pinned.total_p50),
+        ("total_p95_cycles", pinned.total_p95),
+        ("total_p99_cycles", pinned.total_p99),
+    ] {
+        report.push(
+            BenchRecord::new(format!("service.pinned.{name}"), v, "cycles").tol(TOL_RATIO),
+        )?;
+    }
+    for t in &pinned.per_tenant[..2] {
+        report.push(count(
+            &format!("service.pinned.tenant{}_dispatched", t.tenant.0),
+            t.dispatched,
+            "jobs",
+        ))?;
+        report.push(count(
+            &format!("service.pinned.tenant{}_busy_cycles", t.tenant.0),
+            t.busy_cycles,
+            "cycles",
+        ))?;
+    }
+    report.push(count("service.pinned.offered_cycles", pinned.offered_cycles, "cycles"))?;
+    report.push(ratio("service.pinned.utilization", pinned.utilization))?;
+
+    // --- Seeded open-loop simulation (deterministic, uncommitted). ---
+    let model = PerfModel::paper();
+    let mut cfg = TrafficConfig::paper(4242);
+    for load in &mut cfg.tenants {
+        load.jobs = 40;
+    }
+    let t0 = Instant::now();
+    let seeded = cfg.run(&model)?;
+    let sim_wall = t0.elapsed().as_secs_f64();
+    report.push(count("service.seeded.admitted", seeded.counters.admitted, "jobs"))?;
+    report.push(count("service.seeded.completed", seeded.counters.completed, "jobs"))?;
+    report.push(count(
+        "service.seeded.rejected_full",
+        seeded.counters.rejected_full,
+        "jobs",
+    ))?;
+    report.push(
+        BenchRecord::new("service.seeded.wait_p95_cycles", seeded.wait_p95, "cycles")
+            .tol(TOL_RATIO),
+    )?;
+    report.push(ratio("service.seeded.utilization", seeded.utilization))?;
+    report.push(wall("service.seeded.sim_wall_s", sim_wall, 1))?;
+
+    // --- Live scheduler smoke with per-tenant energy attribution
+    //     (single pool + pause/resume keeps the dispatch order, and
+    //     therefore the energy split, deterministic). ---
+    let svc = ServiceConfig {
+        queue_bound: 16,
+        tenants: (0..3u32)
+            .map(|i| (TenantId(i), TenantSpec { weight: 3 - i, quota: 8 }))
+            .collect(),
+        default_tenant: TenantSpec::default(),
+    };
+    let mut sched = Scheduler::new(&svc, &[PoolSpec::single()], PerfModel::paper())?;
+    sched.pause();
+    let mut handles = Vec::new();
+    for i in 0..3u32 {
+        for j in 0..2u64 {
+            let spec = JobSpec::DenseMttkrp {
+                shape: [32, 16, 8],
+                rank: 4,
+                mode: 0,
+                seed: 100 + u64::from(i) * 10 + j,
+            };
+            handles.push(sched.submit(TenantId(i), spec).map_err(Error::from)?);
+        }
+    }
+    let t1 = Instant::now();
+    sched.resume();
+    let done = handles.into_iter().map(|h| h.wait()).filter(|c| c.is_done()).count();
+    let live_wall = t1.elapsed().as_secs_f64();
+    report.push(count("service.live.completed", done as u64, "jobs"))?;
+    for i in 0..3u32 {
+        report.push(
+            BenchRecord::new(
+                format!("service.live.tenant{i}_energy_j"),
+                sched.tenant_energy_j(TenantId(i)),
+                "J",
+            )
+            .better(Direction::Lower)
+            .tol(TOL_MODEL),
+        )?;
+    }
+    sched.shutdown();
+    report.push(wall("service.live.serve_wall_s", live_wall, 1))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -581,7 +708,8 @@ mod tests {
     #[test]
     fn file_names_match_areas() {
         assert_eq!(file_name("headline"), "BENCH_headline.json");
-        assert_eq!(AREAS.len(), 4);
+        assert_eq!(file_name("service"), "BENCH_service.json");
+        assert_eq!(AREAS.len(), 5);
     }
 
     #[test]

@@ -42,6 +42,12 @@ pub enum Error {
     /// (bad JSON, non-finite metric, regression beyond tolerance).
     Telemetry(String),
 
+    /// The service tier refused or aborted a job (admission reject,
+    /// cancellation, shutdown while queued) — see
+    /// `crate::service::Reject`, which converts into this variant for
+    /// callers holding a crate [`Result`].
+    Service(String),
+
     /// An underlying I/O failure.
     Io(std::io::Error),
 
@@ -63,6 +69,7 @@ impl fmt::Display for Error {
             Error::Fault(m) => write!(f, "fault: {m}"),
             Error::Numerical(m) => write!(f, "numerical error: {m}"),
             Error::Telemetry(m) => write!(f, "telemetry error: {m}"),
+            Error::Service(m) => write!(f, "service error: {m}"),
             Error::Io(e) => write!(f, "{e}"),
             Error::Xla(m) => write!(f, "{m}"),
         }
@@ -118,6 +125,11 @@ impl Error {
     /// Shorthand for a coordinator error with formatted context.
     pub fn coordinator(msg: impl Into<String>) -> Self {
         Error::Coordinator(msg.into())
+    }
+
+    /// Shorthand for a service-tier error with formatted context.
+    pub fn service(msg: impl Into<String>) -> Self {
+        Error::Service(msg.into())
     }
 
     /// True for the retryable fault class: transient device/host faults

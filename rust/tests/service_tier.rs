@@ -1,0 +1,433 @@
+//! Integration suite for the admission-controlled service tier
+//! (`psram_imc::service`).  The contracts under test, end to end:
+//!
+//! * **Bit-identity** — every job kind served through any pool mix must
+//!   reproduce the serial single-session reference bit for bit.
+//! * **Fairness** — under a backlogged window, weighted-fair dispatch
+//!   shares track the configured weight ratios within tolerance.
+//! * **Backpressure** — the bounded queue rejects deterministically at
+//!   capacity and drains (re-admits) once pressure lifts.
+//! * **Cancellation** — a cancel never leaks a worker, a queue slot, or
+//!   a quota unit (counter-audited), queued or mid-run.
+//! * **Chaos** — seeded worker deaths on a coordinated pool heal without
+//!   violating per-tenant accounting (replay with `CHAOS_SEED=<u64>`).
+//! * **Shutdown** — tearing the tier (or a shared session) down under
+//!   concurrent load resolves every submission with `Done` or a typed
+//!   error, watchdog-bounded: never a hang.
+
+use psram_imc::fault::{
+    silence_injected_death_panics, Backoff, FaultInjector, FaultPlan, FaultPolicy, FaultSpec,
+};
+use psram_imc::perfmodel::PerfModel;
+use psram_imc::service::{
+    simulate, CancelToken, Completion, JobSpec, PoolSpec, Reject, Scheduler, ServiceConfig,
+    SimJob, TenantId, TenantSpec,
+};
+use psram_imc::session::{Engine, JobId, Kernel, PsramSession};
+use psram_imc::tensor::{DenseTensor, Matrix};
+use psram_imc::util::prng::Prng;
+use psram_imc::Error;
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Duration;
+
+/// Bound on any single blocking wait: generous enough for a loaded CI
+/// runner, small enough that a genuine hang fails the suite fast.
+const WATCHDOG: Duration = Duration::from_secs(120);
+
+/// The fixed seed matrix CI replays, overridable with `CHAOS_SEED=<u64>`
+/// (same convention as `tests/chaos.rs`).
+fn chaos_seeds() -> Vec<u64> {
+    match std::env::var("CHAOS_SEED") {
+        Ok(s) => vec![s.trim().parse().expect("CHAOS_SEED must be a u64")],
+        Err(_) => vec![11, 23, 47],
+    }
+}
+
+/// A tier config of `n` tenants with the given weights and unbounded
+/// quotas.
+fn tier_cfg(bound: usize, weights: &[u32]) -> ServiceConfig {
+    ServiceConfig {
+        queue_bound: bound,
+        tenants: weights
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| (TenantId(i as u32), TenantSpec { weight: w, quota: usize::MAX }))
+            .collect(),
+        default_tenant: TenantSpec::default(),
+    }
+}
+
+fn small_spec(seed: u64) -> JobSpec {
+    JobSpec::DenseMttkrp { shape: [20, 12, 8], rank: 5, mode: (seed % 3) as usize, seed }
+}
+
+/// (a) Every job kind, served through a heterogeneous pool mix (one
+/// single-array pool + one 2-shard coordinated pool), is bit-identical
+/// to the same spec replayed serially on a fresh session.
+#[test]
+fn every_job_kind_is_bit_identical_to_the_serial_reference() {
+    let cfg = tier_cfg(32, &[2, 1]);
+    let pools = [PoolSpec::single(), PoolSpec::coordinated(2)];
+    let sched = Scheduler::new(&cfg, &pools, PerfModel::paper()).unwrap();
+    let specs = vec![
+        JobSpec::DenseMttkrp { shape: [20, 12, 8], rank: 5, mode: 0, seed: 11 },
+        JobSpec::SparseMttkrp { shape: [48, 32, 16], nnz: 300, rank: 6, mode: 1, seed: 12 },
+        JobSpec::Ttm { shape: [24, 16, 12], rank: 5, mode: 2, seed: 13 },
+        JobSpec::CpAls { shape: [16, 12, 8], rank: 4, sweeps: 3, seed: 14 },
+        JobSpec::Hooi { shape: [16, 12, 8], rank: 4, sweeps: 2, seed: 15 },
+    ];
+    let handles: Vec<_> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, s)| sched.submit(TenantId((i % 2) as u32), s.clone()).unwrap())
+        .collect();
+    let outs: Vec<_> =
+        handles.into_iter().map(|h| h.wait().into_result().unwrap()).collect();
+
+    let serial = PsramSession::builder().build().unwrap();
+    for (i, (spec, out)) in specs.iter().zip(&outs).enumerate() {
+        let reference = spec
+            .run(&serial.job(JobId(100 + i as u64)), &CancelToken::new())
+            .unwrap();
+        assert!(
+            out.bits_eq(&reference),
+            "{} diverged from its serial reference",
+            spec.name()
+        );
+    }
+    let c = sched.counters();
+    assert_eq!((c.admitted, c.completed, c.failed), (5, 5, 0));
+}
+
+/// (b) Weighted-fair shares within tolerance over a virtual-time window:
+/// weights 4:2:1 on mixed job sizes, every tenant backlogged through the
+/// whole window, shares within 2 % (absolute) of the weight fractions.
+#[test]
+fn weighted_fair_window_shares_track_weights_within_tolerance() {
+    let cfg = tier_cfg(4000, &[4, 2, 1]);
+    let sizes = [600u64, 1000, 1400];
+    let mut jobs = Vec::new();
+    for i in 0..500usize {
+        for t in 0..3usize {
+            jobs.push(SimJob {
+                at: 0,
+                tenant: TenantId(t as u32),
+                service: sizes[(i + t) % sizes.len()],
+            });
+        }
+    }
+    let window = 700_000u64;
+    let r = simulate(&cfg, 1, &jobs, &[], window);
+
+    let total: u64 = r.per_tenant.iter().map(|t| t.window_dispatched).sum();
+    assert!(total > 0);
+    let weight_sum: u32 = r.per_tenant.iter().map(|t| t.weight).sum();
+    for t in &r.per_tenant {
+        let share = t.window_dispatched as f64 / total as f64;
+        let expected = f64::from(t.weight) / f64::from(weight_sum);
+        assert!(
+            (share - expected).abs() < 0.02,
+            "{} share {share:.4} strays from weight fraction {expected:.4}",
+            t.tenant
+        );
+        // The window closed while the tenant still had backlog — the
+        // share above measured *scheduling*, not admission.
+        assert!(t.window_dispatched < 500, "{} drained inside the window", t.tenant);
+        assert_eq!(t.dispatched, 500, "{} lost jobs over the full run", t.tenant);
+    }
+    assert_eq!(r.counters.completed, 1500);
+}
+
+/// (c) The bounded queue rejects deterministically at capacity and
+/// drains after backpressure lifts: rejected work is re-admitted and
+/// completes.
+#[test]
+fn bounded_queue_rejects_at_capacity_then_drains() {
+    let cfg = tier_cfg(3, &[1]);
+    let sched = Scheduler::new(&cfg, &[PoolSpec::single()], PerfModel::paper()).unwrap();
+    sched.pause();
+    let admitted: Vec<_> =
+        (0..3).map(|i| sched.submit(TenantId(0), small_spec(i)).unwrap()).collect();
+    for i in 3..5 {
+        assert!(
+            matches!(
+                sched.submit(TenantId(0), small_spec(i)),
+                Err(Reject::QueueFull { bound: 3 })
+            ),
+            "submission {i} was not rejected at capacity"
+        );
+    }
+    assert_eq!(sched.counters().rejected_full, 2);
+    assert_eq!(sched.queued_len(), 3);
+
+    sched.resume();
+    for h in admitted {
+        assert!(h.wait().is_done());
+    }
+    // Pressure lifted: the formerly rejected submissions are admitted
+    // now and run to completion.
+    for i in 3..5 {
+        assert!(sched.submit(TenantId(0), small_spec(i)).unwrap().wait().is_done());
+    }
+    let c = sched.counters();
+    assert_eq!((c.admitted, c.completed), (5, 5));
+    assert_eq!(sched.queued_len() + sched.in_flight(), 0);
+}
+
+/// (d) Cancellation never leaks a worker or a queue slot: queued cancels
+/// release their slots immediately, a mid-run cooperative cancel stops
+/// at the next kernel boundary, and afterwards the admission ledger
+/// balances exactly (admitted == terminal, nothing queued or in flight)
+/// while the tier keeps serving.
+#[test]
+fn cancellation_never_leaks_a_worker_or_queue_slot() {
+    let cfg = tier_cfg(8, &[1, 1]);
+    let sched = Scheduler::new(&cfg, &[PoolSpec::single()], PerfModel::paper()).unwrap();
+
+    // Queued cancels under pause: slots and quota free up before resume.
+    sched.pause();
+    let handles: Vec<_> =
+        (0..4).map(|i| sched.submit(TenantId(0), small_spec(i)).unwrap()).collect();
+    handles[1].cancel();
+    handles[2].cancel();
+    assert_eq!(sched.queued_len(), 2, "queued cancels must free their slots eagerly");
+    sched.resume();
+    let (mut done, mut cancelled) = (0u32, 0u32);
+    for h in handles {
+        match h.wait() {
+            Completion::Done(_) => done += 1,
+            Completion::Cancelled => cancelled += 1,
+            Completion::Failed(e) => panic!("unexpected failure: {e}"),
+        }
+    }
+    assert_eq!((done, cancelled), (2, 2));
+
+    // Mid-run cooperative cancel: a long iterative job observes the
+    // token at a kernel boundary.  Resolution is watchdog-bounded — a
+    // leaked runner or slot would hang the wait, not just fail it.
+    let completed_before = sched.counters().completed;
+    let long = JobSpec::CpAls { shape: [32, 24, 16], rank: 6, sweeps: 150, seed: 9 };
+    let h = sched.submit(TenantId(1), long).unwrap();
+    loop {
+        if sched.in_flight() > 0 || sched.counters().completed > completed_before {
+            break;
+        }
+        thread::yield_now();
+    }
+    h.cancel();
+    let (tx, rx) = mpsc::channel();
+    thread::spawn(move || {
+        let _ = tx.send(h.wait());
+    });
+    let completion = rx.recv_timeout(WATCHDOG).expect("cancelled job never resolved");
+    assert!(
+        !matches!(completion, Completion::Failed(_)),
+        "cancel surfaced as a failure instead of Cancelled/Done"
+    );
+
+    // The audit: every admitted job reached a terminal state, nothing
+    // occupies a slot, and the (sole) worker still serves new work.
+    let c = sched.counters();
+    assert_eq!(c.admitted, c.terminal(), "admission ledger out of balance");
+    assert_eq!(sched.queued_len(), 0);
+    assert_eq!(sched.in_flight(), 0);
+    assert_eq!(sched.outstanding(TenantId(0)) + sched.outstanding(TenantId(1)), 0);
+    assert!(sched.submit(TenantId(0), small_spec(99)).unwrap().wait().is_done());
+}
+
+/// (e) Chaos composition: seeded worker deaths (plus a transient) on a
+/// coordinated pool heal — or fail typed — without ever violating the
+/// per-tenant admission accounting or the bit-identity contract.
+#[test]
+fn chaos_worker_deaths_heal_without_breaking_tenant_accounting() {
+    silence_injected_death_panics();
+    for seed in chaos_seeds() {
+        let spec = FaultSpec {
+            workers: 2,
+            horizon_loads: 24,
+            upsets: 0,
+            upset_bits: 4,
+            transients: 1,
+            deaths: 2,
+        };
+        let inj = Arc::new(FaultInjector::new(&FaultPlan::from_seed(seed, &spec)));
+        let pool = PoolSpec::coordinated(2)
+            .fault_injector(Arc::clone(&inj))
+            .fault_policy(FaultPolicy {
+                retries: 4,
+                backoff: Backoff::none(),
+                respawn_budget: 4,
+                ..FaultPolicy::default()
+            });
+        let cfg = tier_cfg(16, &[2, 1]);
+        let sched = Scheduler::new(&cfg, &[pool], PerfModel::paper()).unwrap();
+
+        let serial = PsramSession::builder().build().unwrap();
+        let mut handles = Vec::new();
+        for tenant in 0..2u32 {
+            for i in 0..4u64 {
+                let s = small_spec(u64::from(tenant) * 10 + i);
+                handles.push((tenant, s.clone(), sched.submit(TenantId(tenant), s).unwrap()));
+            }
+        }
+        for (tenant, s, h) in handles {
+            match h.wait() {
+                Completion::Done(out) => {
+                    let reference = s
+                        .run(&serial.job(JobId(500 + u64::from(tenant))), &CancelToken::new())
+                        .unwrap();
+                    assert!(
+                        out.bits_eq(&reference),
+                        "seed {seed}: corrupted result escaped recovery ({})",
+                        s.name()
+                    );
+                }
+                Completion::Failed(e) => assert!(
+                    matches!(e, Error::Fault(_) | Error::Coordinator(_)),
+                    "seed {seed}: untyped failure {e}"
+                ),
+                Completion::Cancelled => panic!("seed {seed}: nothing was cancelled"),
+            }
+        }
+        let c = sched.counters();
+        assert_eq!(c.admitted, 8);
+        assert_eq!(c.admitted, c.terminal(), "seed {seed}: accounting violated");
+        assert_eq!(c.completed + c.failed, 8);
+        assert_eq!(
+            sched.dispatched_of(TenantId(0)) + sched.dispatched_of(TenantId(1)),
+            c.dispatched
+        );
+        for t in 0..2u32 {
+            assert_eq!(sched.outstanding(TenantId(t)), 0, "seed {seed}: tenant{t} leaked");
+        }
+    }
+}
+
+/// The PR-8 review fix, pinned: `Coordinator::try_submit` observes the
+/// shutdown flag under the queue lock, so a submission racing
+/// `PsramSession::shutdown` gets a typed fail-fast error instead of
+/// enqueueing a batch no worker will answer and hanging in `recv()`.
+/// N threads hammer a shared coordinated session while it is shut down
+/// mid-flight; a watchdog bounds every outcome.
+#[test]
+fn shutdown_race_fails_fast() {
+    let mut rng = Prng::new(77);
+    let x = Arc::new(DenseTensor::randn(&[20, 8, 8], &mut rng));
+    let factors: Arc<Vec<Matrix>> =
+        Arc::new([20, 8, 8].iter().map(|&d| Matrix::randn(d, 8, &mut rng)).collect());
+    let reference = {
+        let clean = PsramSession::builder().build().unwrap();
+        clean
+            .run(Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 })
+            .unwrap()
+    };
+
+    // Several rounds to move the shutdown point around relative to the
+    // submission stream (thread scheduling supplies the jitter).
+    for round in 0..6u32 {
+        let session = PsramSession::builder()
+            .engine(Engine::Coordinated { shards: 2 })
+            .build()
+            .unwrap();
+        let threads = 4usize;
+        let per_thread = 6usize;
+        let (tx, rx) = mpsc::channel();
+        let mut joins = Vec::new();
+        for t in 0..threads {
+            let s = session.clone();
+            let tx = tx.clone();
+            let x = Arc::clone(&x);
+            let factors = Arc::clone(&factors);
+            joins.push(thread::spawn(move || {
+                for i in 0..per_thread {
+                    let r = s
+                        .job(JobId((t * per_thread + i) as u64 + 1))
+                        .run(Kernel::DenseMttkrp { x: &x, factors: &factors, mode: 0 })
+                        .map(|m| m.data().to_vec());
+                    tx.send(r).expect("collector vanished");
+                }
+            }));
+        }
+        drop(tx);
+        // Let some submissions through, then pull the rug.
+        thread::sleep(Duration::from_micros(u64::from(round) * 300));
+        session.shutdown();
+        assert!(session.is_shut());
+
+        // Every submission resolves: bit-exact output or a typed
+        // fail-fast error.  recv_timeout is the watchdog — the pre-fix
+        // race left a leader blocked forever right here.
+        for k in 0..threads * per_thread {
+            let outcome = rx
+                .recv_timeout(WATCHDOG)
+                .unwrap_or_else(|_| panic!("round {round}: submission {k} hung"));
+            match outcome {
+                Ok(data) => assert_eq!(
+                    data,
+                    reference.data(),
+                    "round {round}: submission survived shutdown with wrong bits"
+                ),
+                Err(e) => assert!(
+                    matches!(e, Error::Fault(_) | Error::Coordinator(_)),
+                    "round {round}: untyped shutdown error {e}"
+                ),
+            }
+        }
+        for j in joins {
+            j.join().expect("submitter panicked");
+        }
+    }
+}
+
+/// Scheduler-level shutdown under load: queued jobs fail fast with a
+/// typed `Error::Service`, in-flight jobs finish, later submissions are
+/// rejected `ShutDown`, and every handle resolves inside the watchdog.
+#[test]
+fn scheduler_shutdown_under_load_resolves_every_handle() {
+    let cfg = tier_cfg(32, &[1, 1, 1]);
+    let pools = [PoolSpec::single(), PoolSpec::coordinated(2)];
+    let mut sched = Scheduler::new(&cfg, &pools, PerfModel::paper()).unwrap();
+
+    let mut handles = Vec::new();
+    for i in 0..12u64 {
+        let spec = if i % 4 == 0 {
+            JobSpec::CpAls { shape: [24, 16, 12], rank: 4, sweeps: 20, seed: i }
+        } else {
+            small_spec(i)
+        };
+        handles.push(sched.submit(TenantId((i % 3) as u32), spec).unwrap());
+    }
+    let (tx, rx) = mpsc::channel();
+    let waiter = thread::spawn(move || {
+        for h in handles {
+            tx.send(h.wait()).expect("collector vanished");
+        }
+    });
+    // Shut down while the backlog is still draining (or, if the runners
+    // outran us, after everything already finished — both legal).
+    loop {
+        if sched.in_flight() > 0 || sched.counters().terminal() >= 12 {
+            break;
+        }
+        thread::yield_now();
+    }
+    sched.shutdown();
+
+    let (mut done, mut failed) = (0u64, 0u64);
+    for k in 0..12 {
+        match rx.recv_timeout(WATCHDOG).unwrap_or_else(|_| panic!("handle {k} hung")) {
+            Completion::Done(_) => done += 1,
+            Completion::Failed(Error::Service(_)) => failed += 1,
+            Completion::Failed(e) => panic!("untyped shutdown failure: {e}"),
+            Completion::Cancelled => panic!("nothing was cancelled"),
+        }
+    }
+    waiter.join().unwrap();
+    assert_eq!(done + failed, 12);
+    assert!(matches!(sched.submit(TenantId(0), small_spec(1)), Err(Reject::ShutDown)));
+    let c = sched.counters();
+    assert_eq!(c.admitted, c.terminal());
+    assert_eq!(c.rejected_shutdown, 1);
+    assert_eq!(sched.queued_len() + sched.in_flight(), 0);
+}
