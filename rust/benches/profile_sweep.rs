@@ -1,0 +1,141 @@
+//! PROFILE-SWEEP — cross-profile device sweep: for every registry
+//! [`DeviceProfile`] the predicted envelope on the paper workload
+//! (peak/sustained/utilization, analytic energy per op, link SNR and
+//! effective bits), plus a measured X-pSRAM binary-op (XOR) census pinned
+//! against `PerfModel::predict_xor` and wall-clock timings of the
+//! functional kernels under each profile's engine.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use psram_imc::compute::ComputeEngine;
+use psram_imc::device::profiles;
+use psram_imc::energy::EnergyModel;
+use psram_imc::perfmodel::{PerfModel, Workload};
+use psram_imc::psram::PsramArray;
+use psram_imc::telemetry::{BenchRecord, Direction};
+use psram_imc::util::fixed::encode_offset;
+use psram_imc::util::prng::Prng;
+use psram_imc::util::units::{format_energy, format_ops};
+
+fn main() {
+    let mut rec = common::Recorder::from_args("profile_sweep");
+    let w = Workload::paper_large();
+
+    common::section("PROFILE-SWEEP: predicted envelope per device profile (model)");
+    println!(
+        "{:<12} | {:>6} | {:>12} | {:>12} | {:>8} | {:>10} | {:>8} | {:>6}",
+        "profile", "GHz", "peak", "sustained", "util", "J/op", "SNR dB", "ENOB"
+    );
+    let mut sustained = Vec::new();
+    for p in profiles::all() {
+        let model = PerfModel::from_profile(&p);
+        let est = model.predict(&w).unwrap();
+        let e = EnergyModel::from_profile(&p).predict(&est);
+        let per_op = e.per_op_j(2.0 * w.useful_macs());
+        println!(
+            "{:<12} | {:>6} | {:>12} | {:>12} | {:>8.4} | {:>10} | {:>8.2} | {:>6.2}",
+            p.name,
+            model.clock_hz / 1e9,
+            format_ops(est.peak_ops),
+            format_ops(est.sustained_raw_ops),
+            est.utilization,
+            format_energy(per_op),
+            p.link_snr_db(),
+            p.effective_bits(),
+        );
+        sustained.push((p.name.clone(), est.sustained_raw_ops));
+        rec.record(
+            BenchRecord::new(
+                format!("profile_sweep.{}.sustained_ops", p.name),
+                est.sustained_raw_ops,
+                "ops/s",
+            )
+            .better(Direction::Higher)
+            .tol(1e-6),
+        );
+        rec.record(
+            BenchRecord::new(
+                format!("profile_sweep.{}.energy_per_op_j", p.name),
+                per_op,
+                "J/op",
+            )
+            .better(Direction::Lower)
+            .tol(1e-6),
+        );
+    }
+    // The sweep's headline ordering: the EO-ADC profile lifts sustained
+    // throughput above the paper baseline; X-pSRAM matches baseline on
+    // the MAC path (its win is the XOR kernel below).
+    let get = |name: &str| sustained.iter().find(|(n, _)| n == name).unwrap().1;
+    assert!(get("eo_adc") > get("baseline"), "EO ADC must raise sustained ops");
+    assert!(get("x_psram_xor") == get("baseline"), "X-pSRAM MAC path == baseline");
+
+    common::section("PROFILE-SWEEP: X-pSRAM XOR kernel census (measured == predicted)");
+    let xp = profiles::x_psram_xor();
+    let mut rng = Prng::new(97);
+    let mut array = PsramArray::paper();
+    let img: Vec<i8> =
+        (0..array.geometry().total_words()).map(|_| rng.next_i8()).collect();
+    array.write_image(&img).unwrap();
+    let rows = array.geometry().rows;
+    let wpr = array.geometry().words_per_row();
+    let vectors = 208; // 4 full 52-lane cycles
+    let bits: Vec<u8> = (0..vectors * rows).map(|_| rng.next_u8() & 1).collect();
+    let lane_counts = vec![52usize; vectors / 52];
+    let mut out = vec![0u32; vectors * wpr];
+
+    let mut engine = ComputeEngine::from_profile(&xp);
+    engine.xor_block_into(&mut array, &bits, &lane_counts, &mut out).unwrap();
+    let est = PerfModel::from_profile(&xp).predict_xor(vectors as u64).unwrap();
+    assert_eq!(engine.stats.xor_cycles, est.xor_cycles);
+    assert_eq!(engine.stats.bit_ops, est.bit_ops);
+    println!(
+        "xor census: {} cycles, {} bit-ops, predicted sustained {}",
+        est.xor_cycles,
+        est.bit_ops,
+        format_ops(est.sustained_bit_ops)
+    );
+    rec.record(BenchRecord::new(
+        "profile_sweep.xor.measured_cycles",
+        engine.stats.xor_cycles as f64,
+        "cycles",
+    ));
+    rec.record(BenchRecord::new(
+        "profile_sweep.xor.measured_bit_ops",
+        engine.stats.bit_ops as f64,
+        "bitops",
+    ));
+
+    common::section("PROFILE-SWEEP: functional kernel wall-clock per profile");
+    let u: Vec<u8> =
+        (0..52 * rows).map(|_| encode_offset(i32::from(rng.next_i8()))).collect();
+    for p in profiles::all() {
+        let mut engine = ComputeEngine::from_profile(&p);
+        let mut arr = PsramArray::paper();
+        arr.write_image(&img).unwrap();
+        let mut mac_out = vec![0i32; 52 * wpr];
+        let stats = common::bench_stats(
+            &format!("compute_cycle 52 lanes [{}]", p.name),
+            3,
+            30,
+            || {
+                engine.compute_cycle_into(&mut arr, &u, 52, &mut mac_out).unwrap();
+            },
+        );
+        rec.wall(&format!("profile_sweep.{}.compute_cycle_s", p.name), &stats);
+    }
+    {
+        let mut engine = ComputeEngine::from_profile(&xp);
+        let mut arr = PsramArray::paper();
+        arr.write_image(&img).unwrap();
+        let cycle_bits = &bits[..52 * rows];
+        let mut xor_out = vec![0u32; 52 * wpr];
+        let stats = common::bench_stats("xor_cycle 52 lanes [x_psram_xor]", 3, 30, || {
+            engine.xor_cycle_into(&mut arr, cycle_bits, 52, &mut xor_out).unwrap();
+        });
+        rec.wall("profile_sweep.x_psram_xor.xor_cycle_s", &stats);
+    }
+
+    rec.finish();
+}

@@ -35,6 +35,21 @@ pub struct ComputeStats {
     pub ops: u64,
     /// MAC count (ops / 2).
     pub macs: u64,
+    /// Binary-op (XOR) read-compute cycles executed — the X-pSRAM kernel
+    /// mode's own census, disjoint from `cycles`.
+    pub xor_cycles: u64,
+    /// Bitwise XOR-and-count operations performed by the binary-op kernel
+    /// (rows × word-columns × 8 bit planes × lanes per cycle).
+    pub bit_ops: u64,
+}
+
+/// The embedded binary-op (XOR) read path of an X-pSRAM bitcell
+/// (arXiv:2506.22707), enabled on engines built from a profile whose
+/// bitcell is [`BitcellKind::XorEmbedded`](crate::device::BitcellKind).
+#[derive(Debug, Clone, Copy)]
+pub struct BinaryOps {
+    /// Energy of one embedded XOR evaluation (J per stored bit read).
+    pub xor_energy_per_bit_j: f64,
 }
 
 /// Walk a compute block cycle by cycle: cycle `i` covers the next
@@ -80,6 +95,9 @@ where
 pub struct ComputeEngine {
     params: DeviceParams,
     noise: NoiseModel,
+    /// Embedded binary-op read path; `None` unless the device profile's
+    /// bitcell embeds XOR logic.
+    binary: Option<BinaryOps>,
     /// Column-sum scratch of the faithful path (steady-state reuse).
     colsum: Vec<i64>,
     /// Accumulated per-engine compute statistics.
@@ -92,6 +110,7 @@ impl ComputeEngine {
         ComputeEngine {
             params: DeviceParams::default(),
             noise: NoiseModel::Off,
+            binary: None,
             colsum: Vec::new(),
             stats: ComputeStats::default(),
         }
@@ -99,12 +118,45 @@ impl ComputeEngine {
 
     /// Engine with explicit device parameters and noise model.
     pub fn new(params: DeviceParams, noise: NoiseModel) -> Self {
-        ComputeEngine { params, noise, colsum: Vec::new(), stats: ComputeStats::default() }
+        ComputeEngine {
+            params,
+            noise,
+            binary: None,
+            colsum: Vec::new(),
+            stats: ComputeStats::default(),
+        }
+    }
+
+    /// Engine calibrated from a validated device profile: profile-lowered
+    /// device parameters, the profile's noise behaviour (resolved for a
+    /// full-column readout), and the binary-op (XOR) read path when the
+    /// profile's bitcell embeds it.  `from_profile(&baseline_psram())` is
+    /// behaviourally identical to [`ComputeEngine::ideal`] — pinned in
+    /// `tests/device_profiles.rs`.
+    pub fn from_profile(profile: &crate::device::DeviceProfile) -> Self {
+        let params = profile.device_params();
+        let noise = profile.noise_model(crate::psram::ArrayGeometry::PAPER.rows);
+        let binary = profile
+            .bitcell
+            .xor_energy_per_bit_j()
+            .map(|xor_energy_per_bit_j| BinaryOps { xor_energy_per_bit_j });
+        ComputeEngine {
+            params,
+            noise,
+            binary,
+            colsum: Vec::new(),
+            stats: ComputeStats::default(),
+        }
     }
 
     /// Device parameters.
     pub fn params(&self) -> &DeviceParams {
         &self.params
+    }
+
+    /// The embedded binary-op read path, if the device provides one.
+    pub fn binary_ops(&self) -> Option<BinaryOps> {
+        self.binary
     }
 
     /// Replace the noise model (ablation sweeps).
@@ -196,6 +248,162 @@ impl ComputeEngine {
         result
     }
 
+    /// Execute one binary-op (XOR) read-compute cycle: stream `lanes`
+    /// input bit vectors (row-major `[lanes][rows]`, values 0/1) against
+    /// the stored image and return the per-word-column Hamming distances,
+    /// row-major `[lanes][words_per_row]`:
+    ///
+    /// ```text
+    /// out[m][n] = Σ_rows Σ_bit  in[m][row] XOR stored_bit(row, n, bit)
+    /// ```
+    ///
+    /// Available only on engines whose device profile embeds XOR logic in
+    /// the bitcell read path (X-pSRAM, arXiv:2506.22707) — otherwise a
+    /// typed [`Error::Device`].  Each output lies in `[0, rows × 8]`.
+    pub fn xor_cycle(
+        &mut self,
+        array: &mut PsramArray,
+        inbits: &[u8],
+        lanes: usize,
+    ) -> Result<Vec<u32>> {
+        let wpr = array.geometry().words_per_row();
+        let mut out = vec![0u32; lanes * wpr];
+        self.xor_cycle_into(array, inbits, lanes, &mut out)?;
+        Ok(out)
+    }
+
+    /// Allocation-free [`Self::xor_cycle`]: writes the
+    /// `[lanes][words_per_row]` Hamming distances into `out` and charges
+    /// one read-compute cycle on the ledgers.
+    pub fn xor_cycle_into(
+        &mut self,
+        array: &mut PsramArray,
+        inbits: &[u8],
+        lanes: usize,
+        out: &mut [u32],
+    ) -> Result<()> {
+        self.xor_cycle_raw(array, inbits, lanes, out)?;
+        self.charge_xor_block(array, 1, lanes as u64);
+        Ok(())
+    }
+
+    /// Stream a block of binary-op (XOR) cycles back to back: cycle `i`
+    /// reads `lane_counts[i] * rows` input bits from `inbits` and writes
+    /// `lane_counts[i] * words_per_row` distances into `out`, both
+    /// advancing contiguously — the same block contract as
+    /// [`Self::compute_block_into`], with ledgers charged once for the
+    /// whole block.  The census this accumulates (`stats.xor_cycles`,
+    /// `stats.bit_ops`) is exactly what
+    /// [`PerfModel::predict_xor`](crate::perfmodel::PerfModel::predict_xor)
+    /// predicts, for any lane batching.
+    pub fn xor_block_into(
+        &mut self,
+        array: &mut PsramArray,
+        inbits: &[u8],
+        lane_counts: &[usize],
+        out: &mut [u32],
+    ) -> Result<()> {
+        let geom = array.geometry();
+        let (rows, wpr) = (geom.rows, geom.words_per_row());
+        let mut cycles = 0u64;
+        let mut lane_cycles = 0u64;
+        let (mut io, mut oo) = (0usize, 0usize);
+        let mut result = Ok(());
+        for &lanes in lane_counts {
+            let i_end = io + lanes * rows;
+            let o_end = oo + lanes * wpr;
+            if i_end > inbits.len() || o_end > out.len() {
+                result = Err(Error::shape(format!(
+                    "XOR block needs {} input bits / {} outputs, got {} / {}",
+                    i_end,
+                    o_end,
+                    inbits.len(),
+                    out.len()
+                )));
+                break;
+            }
+            if let Err(e) =
+                self.xor_cycle_raw(array, &inbits[io..i_end], lanes, &mut out[oo..o_end])
+            {
+                result = Err(e);
+                break;
+            }
+            cycles += 1;
+            lane_cycles += lanes as u64;
+            io = i_end;
+            oo = o_end;
+        }
+        // Charge exactly what ran — also on a mid-block error.
+        self.charge_xor_block(array, cycles, lane_cycles);
+        result
+    }
+
+    /// One XOR cycle with no ledger/energy charges (the caller batches
+    /// them through [`Self::charge_xor_block`]).
+    fn xor_cycle_raw(
+        &mut self,
+        array: &PsramArray,
+        inbits: &[u8],
+        lanes: usize,
+        out: &mut [u32],
+    ) -> Result<()> {
+        if self.binary.is_none() {
+            return Err(Error::device(
+                "binary-op (XOR) kernel requires an embedded-XOR bitcell \
+                 (profile 'x_psram_xor'); this engine's bitcells are plain latches",
+            ));
+        }
+        let geom = array.geometry();
+        let rows = geom.rows;
+        let wpr = geom.words_per_row();
+        if lanes == 0 {
+            return Err(Error::shape("xor_cycle with zero lanes"));
+        }
+        self.params.validate(lanes)?;
+        if inbits.len() != lanes * rows {
+            return Err(Error::shape(format!(
+                "input block has {} bits, want lanes*rows = {}",
+                inbits.len(),
+                lanes * rows
+            )));
+        }
+        if out.len() != lanes * wpr {
+            return Err(Error::shape(format!(
+                "output block has {} slots, want lanes*words_per_row = {}",
+                out.len(),
+                lanes * wpr
+            )));
+        }
+        if let Some(&bad) = inbits.iter().find(|&&b| b > 1) {
+            return Err(Error::device(format!(
+                "XOR kernel inputs must be single bits (0 or 1), got {bad}"
+            )));
+        }
+
+        let packed = array.packed();
+        for m in 0..lanes {
+            let xrow = &inbits[m * rows..(m + 1) * rows];
+            let o = &mut out[m * wpr..(m + 1) * wpr];
+            o.fill(0);
+            for (k, &x) in xrow.iter().enumerate() {
+                let wrow = &packed[k * wpr..(k + 1) * wpr];
+                // XOR against a constant input bit over all 8 planes of a
+                // word reduces to a popcount: x=0 contributes popcount(w),
+                // x=1 contributes 8 - popcount(w).
+                if x == 0 {
+                    for (slot, &w) in o.iter_mut().zip(wrow) {
+                        *slot += (w as u8).count_ones();
+                    }
+                } else {
+                    for (slot, &w) in o.iter_mut().zip(wrow) {
+                        *slot += 8 - (w as u8).count_ones();
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// One compute cycle with no ledger/energy charges (the caller batches
     /// them through [`Self::charge_block`]).
     fn compute_cycle_raw(
@@ -259,6 +467,35 @@ impl ComputeEngine {
         let macs = (rows * wpr) as u64 * lane_cycles;
         self.stats.macs += macs;
         self.stats.ops += 2 * macs;
+    }
+
+    /// Charge the ledgers for `cycles` binary-op (XOR) read-compute cycles
+    /// streaming `lane_cycles` lanes in total.  Per-cycle charges mirror
+    /// the MAC path (one modulated symbol per row per lane, one sense per
+    /// word column per lane, line power per active lane) with one addition:
+    /// each stored bit read through the embedded XOR gate costs
+    /// `xor_energy_per_bit_j`, charged as bitcell switching activity.
+    fn charge_xor_block(&mut self, array: &mut PsramArray, cycles: u64, lane_cycles: u64) {
+        if cycles == 0 {
+            return;
+        }
+        let geom = array.geometry();
+        let (rows, wpr) = (geom.rows, geom.words_per_row());
+        array.cycles.compute += cycles;
+        array.charge_static(cycles);
+        array.energy.modulator_j +=
+            self.params.shaper.vector_energy_j(lane_cycles as usize * rows);
+        array.energy.adc_j +=
+            self.params.adc.energy_per_sample_j * (lane_cycles * wpr as u64) as f64;
+        array.energy.laser_j +=
+            self.params.comb.line_power_w * lane_cycles as f64 / self.params.clock_hz;
+
+        let bit_ops = (rows * wpr * 8) as u64 * lane_cycles;
+        if let Some(b) = self.binary {
+            array.energy.switching_j += b.xor_energy_per_bit_j * bit_ops as f64;
+        }
+        self.stats.xor_cycles += cycles;
+        self.stats.bit_ops += bit_ops;
     }
 
     /// Bit-exact integer hot path: `out = (u - 128) @ packed`.
@@ -551,6 +788,87 @@ mod tests {
         let mut eng = ComputeEngine::ideal();
         let out = eng.compute_cycle(&mut array, &u, 3).unwrap();
         assert_eq!(out, quant_matmul_ref(&u, &img, 3, 64, 16));
+    }
+
+    #[test]
+    fn xor_kernel_requires_embedded_xor_bitcell() {
+        let (mut array, _, _) = rand_setup(20, 1);
+        let mut eng = ComputeEngine::ideal();
+        assert!(eng.binary_ops().is_none());
+        let bits = vec![0u8; 256];
+        let err = eng.xor_cycle(&mut array, &bits, 1).unwrap_err();
+        assert!(matches!(err, Error::Device(_)), "{err}");
+        assert_eq!(eng.stats.xor_cycles, 0);
+        assert_eq!(array.cycles.compute, 0);
+    }
+
+    #[test]
+    fn xor_kernel_computes_hamming_distance() {
+        let mut eng = ComputeEngine::from_profile(&crate::device::profiles::x_psram_xor());
+        assert!(eng.binary_ops().is_some());
+        let mut array = PsramArray::paper();
+        let mut rng = Prng::new(21);
+        let img: Vec<i8> = (0..8192).map(|_| rng.next_i8()).collect();
+        array.write_image(&img).unwrap();
+        let bits: Vec<u8> = (0..2 * 256).map(|_| rng.next_u8() & 1).collect();
+        let out = eng.xor_cycle(&mut array, &bits, 2).unwrap();
+
+        // Reference: bit-by-bit XOR against the stored planes.
+        for m in 0..2 {
+            for n in 0..32 {
+                let mut want = 0u32;
+                for k in 0..256 {
+                    let w = img[k * 32 + n] as u8;
+                    let x = bits[m * 256 + k] as u32;
+                    for b in 0..8 {
+                        want += x ^ ((w >> b) as u32 & 1);
+                    }
+                }
+                assert_eq!(out[m * 32 + n], want, "lane {m} col {n}");
+            }
+        }
+        assert_eq!(eng.stats.xor_cycles, 1);
+        assert_eq!(eng.stats.bit_ops, 256 * 32 * 8 * 2);
+        assert_eq!(eng.stats.cycles, 0, "XOR census is disjoint from MAC census");
+        assert!(array.energy.switching_j > 0.0, "embedded XOR energy charged");
+    }
+
+    #[test]
+    fn xor_block_matches_per_cycle_and_rejects_non_bits() {
+        let profile = crate::device::profiles::x_psram_xor();
+        let mut a1 = PsramArray::paper();
+        let mut rng = Prng::new(22);
+        let img: Vec<i8> = (0..8192).map(|_| rng.next_i8()).collect();
+        a1.write_image(&img).unwrap();
+        let mut a2 = a1.clone();
+
+        let lane_counts = [5usize, 52, 1];
+        let total: usize = lane_counts.iter().sum();
+        let bits: Vec<u8> = (0..total * 256).map(|_| rng.next_u8() & 1).collect();
+
+        let mut e1 = ComputeEngine::from_profile(&profile);
+        let mut expect = Vec::new();
+        let mut off = 0;
+        for &lanes in &lane_counts {
+            expect.extend(
+                e1.xor_cycle(&mut a1, &bits[off..off + lanes * 256], lanes).unwrap(),
+            );
+            off += lanes * 256;
+        }
+
+        let mut e2 = ComputeEngine::from_profile(&profile);
+        let mut out = vec![u32::MAX; total * 32];
+        e2.xor_block_into(&mut a2, &bits, &lane_counts, &mut out).unwrap();
+        assert_eq!(out, expect);
+        assert_eq!(e1.stats.xor_cycles, e2.stats.xor_cycles);
+        assert_eq!(e1.stats.bit_ops, e2.stats.bit_ops);
+        assert_eq!(a1.cycles.compute, a2.cycles.compute);
+
+        // A non-bit input is a typed device error, not a wrong answer.
+        let mut bad = bits.clone();
+        bad[3] = 2;
+        let err = e2.xor_block_into(&mut a2, &bad, &lane_counts, &mut out).unwrap_err();
+        assert!(matches!(err, Error::Device(_)), "{err}");
     }
 
     #[test]

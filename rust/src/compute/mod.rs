@@ -11,5 +11,5 @@
 pub mod engine;
 pub mod wdm;
 
-pub use engine::{walk_compute_block, ComputeEngine, ComputeStats};
+pub use engine::{walk_compute_block, BinaryOps, ComputeEngine, ComputeStats};
 pub use wdm::InterleavePattern;

@@ -48,9 +48,13 @@ impl FrequencyComb {
     /// Wavelengths (m) of the first `n` channels, centred on the carrier.
     ///
     /// Channels are laid out symmetrically around the centre so the span is
-    /// minimal: for n channels the span is `(n-1) * spacing`.
+    /// minimal: for n channels the span is `(n-1) * spacing`.  `n == 0`
+    /// yields an empty plan (which the ring admissibility check rejects
+    /// with a typed error rather than a panic here).
     pub fn channel_wavelengths_m(&self, n: usize) -> Vec<f64> {
-        assert!(n >= 1);
+        if n == 0 {
+            return Vec::new();
+        }
         let half = (n as f64 - 1.0) / 2.0;
         (0..n)
             .map(|i| self.center_wavelength_m + (i as f64 - half) * self.spacing_m)
@@ -119,6 +123,12 @@ mod tests {
         let hz = comb.spacing_hz();
         // 0.8 nm at 1310 nm ≈ 140 GHz
         assert!(hz > 100e9 && hz < 200e9, "spacing {hz} Hz");
+    }
+
+    #[test]
+    fn zero_channel_plan_is_empty_not_panic() {
+        let comb = FrequencyComb::gf45spclo_o_band();
+        assert!(comb.channel_wavelengths_m(0).is_empty());
     }
 
     #[test]

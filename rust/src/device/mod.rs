@@ -27,6 +27,8 @@ pub mod modulator;
 pub mod mrr;
 pub mod noise;
 pub mod photodiode;
+pub mod profile;
+pub mod profiles;
 
 pub use adc::Adc;
 pub use comb::FrequencyComb;
@@ -35,6 +37,9 @@ pub use modulator::CombShaper;
 pub use mrr::MicroRing;
 pub use noise::NoiseModel;
 pub use photodiode::Photodiode;
+pub use profile::{
+    AdcKind, BitcellKind, CombSpec, DeviceProfile, LinkSpec, NoiseSpec, TimingSpec,
+};
 
 use crate::util::error::{Error, Result};
 

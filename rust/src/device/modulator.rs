@@ -7,6 +7,7 @@
 //! the floor set by the extinction ratio and the full line power, at up to
 //! `max_rate_hz` updates per second.
 
+use crate::util::error::{Error, Result};
 use crate::util::units::db_loss_to_ratio;
 
 /// A high-speed comb shaper (one per wavelength channel).
@@ -47,13 +48,21 @@ impl CombShaper {
     ///
     /// Code 0 leaks `line_power / extinction`; code max transmits the full
     /// line power (minus insertion loss).  Levels are uniformly spaced —
-    /// the linearity the dot-product mapping requires.
-    pub fn encode_power_w(&self, code: u32, line_power_w: f64) -> f64 {
-        assert!(code < self.levels(), "code {code} out of range");
+    /// the linearity the dot-product mapping requires.  A code outside the
+    /// DAC range is a typed [`Error::Device`], not a panic: callers feed
+    /// user-derived quantized data through here.
+    pub fn encode_power_w(&self, code: u32, line_power_w: f64) -> Result<f64> {
+        if code >= self.levels() {
+            return Err(Error::device(format!(
+                "code {code} out of range for a {}-bit DAC ({} levels)",
+                self.dac_bits,
+                self.levels()
+            )));
+        }
         let after_il = line_power_w * db_loss_to_ratio(self.insertion_loss_db);
         let floor = after_il * db_loss_to_ratio(self.extinction_db);
         let span = after_il - floor;
-        floor + span * code as f64 / (self.levels() - 1) as f64
+        Ok(floor + span * code as f64 / (self.levels() - 1) as f64)
     }
 
     /// The inverse map used to reason about encoding error: returns the code
@@ -81,7 +90,7 @@ mod tests {
         let s = CombShaper::default();
         let mut prev = -1.0;
         for code in 0..s.levels() {
-            let p = s.encode_power_w(code, 1e-3);
+            let p = s.encode_power_w(code, 1e-3).unwrap();
             assert!(p > prev);
             prev = p;
         }
@@ -91,7 +100,7 @@ mod tests {
     fn encode_decode_roundtrip_exact() {
         let s = CombShaper::default();
         for code in [0u32, 1, 7, 127, 128, 200, 255] {
-            let p = s.encode_power_w(code, 1e-3);
+            let p = s.encode_power_w(code, 1e-3).unwrap();
             assert_eq!(s.decode_power(p, 1e-3), code);
         }
     }
@@ -99,7 +108,7 @@ mod tests {
     #[test]
     fn full_scale_respects_insertion_loss() {
         let s = CombShaper::default();
-        let p = s.encode_power_w(255, 1e-3);
+        let p = s.encode_power_w(255, 1e-3).unwrap();
         let expect = 1e-3 * db_loss_to_ratio(s.insertion_loss_db);
         assert!((p - expect).abs() < 1e-12);
     }
@@ -107,16 +116,17 @@ mod tests {
     #[test]
     fn zero_code_leaks_by_extinction_ratio() {
         let s = CombShaper::default();
-        let p0 = s.encode_power_w(0, 1e-3);
-        let p255 = s.encode_power_w(255, 1e-3);
+        let p0 = s.encode_power_w(0, 1e-3).unwrap();
+        let p255 = s.encode_power_w(255, 1e-3).unwrap();
         let er = 10.0 * (p255 / p0).log10();
         assert!((er - s.extinction_db).abs() < 0.01, "er={er}");
     }
 
     #[test]
-    #[should_panic(expected = "out of range")]
-    fn code_out_of_range_panics() {
-        CombShaper::default().encode_power_w(256, 1e-3);
+    fn code_out_of_range_is_typed_error() {
+        let err = CombShaper::default().encode_power_w(256, 1e-3).unwrap_err();
+        assert!(matches!(err, Error::Device(_)), "want Error::Device, got {err}");
+        assert!(err.to_string().contains("256"));
     }
 
     #[test]

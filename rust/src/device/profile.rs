@@ -1,0 +1,661 @@
+//! Pluggable device profiles: one typed description of a pSRAM device
+//! variant (ADC kind, bitcell flavour, WDM comb, link budget, noise and
+//! timing), validated through the admissibility oracle at construction.
+//!
+//! The paper evaluates exactly one hardwired stack (GF45SPCLO comb, MRR
+//! latch bitcells, on-chip readout); the follow-on papers change precisely
+//! those knobs — the mixed-signal electro-optic ADC tensor core
+//! (arXiv:2506.22705) and X-pSRAM's embedded-XOR bitcell
+//! (arXiv:2506.22707).  A [`DeviceProfile`] captures one such variant and
+//! is the single source every layer calibrates from:
+//!
+//! * `PerfModel::from_profile` — per-profile cycle time, write cost,
+//!   channel count ([`crate::perfmodel::PerfModel`]);
+//! * `EnergyModel::from_profile` — per-profile ADC conversion energy,
+//!   bitcell switching/static energy ([`crate::energy::EnergyModel`]);
+//! * `ComputeEngine::from_profile` — the functional engine's device
+//!   parameters, plus the binary-op (XOR) read path when the bitcell
+//!   embeds it ([`crate::compute::ComputeEngine`]);
+//! * `SessionBuilder::device_profile` — sessions built against a profile
+//!   ([`crate::session::SessionBuilder`]).
+//!
+//! Construction is *fallible by design*: [`DeviceProfile::new`] lowers the
+//! specs onto [`DeviceParams`] and routes them through
+//! [`DeviceParams::validate`] (comb channel supply, ring resonance
+//! spacing, modulator/ADC rate) plus profile-level checks (ring optical
+//! bandwidth, bitcell write rate), returning a typed [`Error::Device`] —
+//! an inadmissible variant cannot exist as a value.
+//!
+//! **Exactness contract.** The functional simulator stays on the repo's
+//! bit-exact integer path under every profile: a finite physical ADC
+//! resolution ([`AdcKind::physical_bits`]) calibrates the *reported*
+//! effective precision ([`DeviceProfile::effective_bits`]) and the energy
+//! model, while the lowered functional [`Adc`] keeps exact readout.
+//! Accuracy degradation is explored explicitly via [`NoiseSpec`] (or the
+//! precision-ablation benches), never implied silently by a profile swap.
+
+use super::adc::Adc;
+use super::comb::FrequencyComb;
+use super::link::LinkBudget;
+use super::modulator::CombShaper;
+use super::mrr::MicroRing;
+use super::noise::NoiseModel;
+use super::photodiode::Photodiode;
+use super::DeviceParams;
+use crate::psram::bitcell::BitcellParams;
+use crate::util::error::{Error, Result};
+
+/// The readout converter of a profile: what digitizes the accumulated
+/// bit-line photocurrent, at which rate, and at what conversion energy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdcKind {
+    /// Ideal readout — exact integer passthrough at unlimited rate (the
+    /// paper's correctness configuration, [`Adc::ideal`]).
+    Ideal,
+    /// A conventional electronic SAR ADC.
+    Sar {
+        /// Physical resolution (bits).
+        bits: u32,
+        /// Sample rate (Hz); bounds the compute clock.
+        sample_rate_hz: f64,
+        /// Energy per conversion (J).
+        energy_per_sample_j: f64,
+    },
+    /// The mixed-signal electro-optic ADC of arXiv:2506.22705 — the
+    /// conversion happens partly in the optical domain, buying a higher
+    /// sample rate at a lower per-conversion energy than electronic SAR.
+    ElectroOptic {
+        /// Physical resolution (bits).
+        bits: u32,
+        /// Sample rate (Hz); bounds the compute clock.
+        sample_rate_hz: f64,
+        /// Energy per conversion (J).
+        energy_per_sample_j: f64,
+    },
+}
+
+impl AdcKind {
+    /// Physical converter resolution; `None` for the ideal readout.
+    pub fn physical_bits(&self) -> Option<u32> {
+        match self {
+            AdcKind::Ideal => None,
+            AdcKind::Sar { bits, .. } | AdcKind::ElectroOptic { bits, .. } => Some(*bits),
+        }
+    }
+
+    /// Sample rate (Hz) the converter sustains.
+    pub fn sample_rate_hz(&self) -> f64 {
+        match self {
+            AdcKind::Ideal => f64::INFINITY,
+            AdcKind::Sar { sample_rate_hz, .. }
+            | AdcKind::ElectroOptic { sample_rate_hz, .. } => *sample_rate_hz,
+        }
+    }
+
+    /// Energy per conversion (J).
+    pub fn energy_per_sample_j(&self) -> f64 {
+        match self {
+            AdcKind::Ideal => Adc::ideal().energy_per_sample_j,
+            AdcKind::Sar { energy_per_sample_j, .. }
+            | AdcKind::ElectroOptic { energy_per_sample_j, .. } => *energy_per_sample_j,
+        }
+    }
+
+    /// Lower onto the functional [`Adc`].  Rate and conversion energy are
+    /// the profile's; resolution stays exact (`bits: None`) per the
+    /// module's exactness contract — see the module docs.
+    pub fn functional_adc(&self) -> Adc {
+        Adc {
+            bits: None,
+            sample_rate_hz: self.sample_rate_hz(),
+            energy_per_sample_j: self.energy_per_sample_j(),
+        }
+    }
+}
+
+/// The bitcell flavour of a profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BitcellKind {
+    /// The paper's cross-coupled micro-ring latch (§III.B).
+    MrrLatch(BitcellParams),
+    /// X-pSRAM (arXiv:2506.22707): the latch additionally embeds XOR
+    /// logic in the read path, so a binary compare-accumulate (Hamming
+    /// distance against the stored image) runs as a single read-compute
+    /// cycle — a cheaper binary-op kernel mode with its own census, see
+    /// [`crate::compute::ComputeEngine::xor_block_into`].
+    XorEmbedded {
+        /// Latch energy/timing (the XOR gear rides on the same latch).
+        latch: BitcellParams,
+        /// Energy of one embedded XOR evaluation (J per stored bit read).
+        xor_energy_per_bit_j: f64,
+    },
+}
+
+impl BitcellKind {
+    /// The latch energy/timing parameters.
+    pub fn params(&self) -> BitcellParams {
+        match self {
+            BitcellKind::MrrLatch(p) => *p,
+            BitcellKind::XorEmbedded { latch, .. } => *latch,
+        }
+    }
+
+    /// Does the read path embed XOR logic (enabling the binary-op kernel)?
+    pub fn supports_binary_ops(&self) -> bool {
+        matches!(self, BitcellKind::XorEmbedded { .. })
+    }
+
+    /// Energy of one embedded XOR evaluation, `None` for plain latches.
+    pub fn xor_energy_per_bit_j(&self) -> Option<f64> {
+        match self {
+            BitcellKind::MrrLatch(_) => None,
+            BitcellKind::XorEmbedded { xor_energy_per_bit_j, .. } => {
+                Some(*xor_energy_per_bit_j)
+            }
+        }
+    }
+}
+
+/// WDM comb of a profile (channel supply).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CombSpec {
+    /// Centre wavelength (m).
+    pub center_wavelength_m: f64,
+    /// Uniform channel spacing (m).
+    pub spacing_m: f64,
+    /// Usable channels.
+    pub channels: usize,
+    /// Optical power per comb line (W).
+    pub line_power_w: f64,
+}
+
+impl CombSpec {
+    /// The paper's GF45SPCLO O-band comb (52 × 0.8 nm at 1310 nm, 4 mW).
+    pub fn gf45spclo() -> Self {
+        let c = FrequencyComb::gf45spclo_o_band();
+        CombSpec {
+            center_wavelength_m: c.center_wavelength_m,
+            spacing_m: c.spacing_m,
+            channels: c.max_channels(),
+            line_power_w: c.line_power_w,
+        }
+    }
+
+    fn lower(&self) -> FrequencyComb {
+        let mut comb = FrequencyComb::gf45spclo_o_band().with_channels(self.channels);
+        comb.center_wavelength_m = self.center_wavelength_m;
+        comb.spacing_m = self.spacing_m;
+        comb.line_power_w = self.line_power_w;
+        comb
+    }
+}
+
+/// Optical link budget of a profile (losses from comb line to detector;
+/// the per-line power itself comes from [`CombSpec::line_power_w`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    /// Comb-shaper insertion loss (dB).
+    pub shaper_loss_db: f64,
+    /// Waveguide routing loss (dB).
+    pub routing_loss_db: f64,
+    /// Per-bitcell through loss (dB).
+    pub per_cell_loss_db: f64,
+    /// Cells a wordline traverses before the tap.
+    pub cells_on_path: usize,
+    /// Drop/tap loss into the bit line (dB).
+    pub tap_loss_db: f64,
+}
+
+impl LinkSpec {
+    /// The paper's default budget (6.56 dB total on a 256-cell path).
+    pub fn paper() -> Self {
+        let l = LinkBudget::default();
+        LinkSpec {
+            shaper_loss_db: l.shaper_loss_db,
+            routing_loss_db: l.routing_loss_db,
+            per_cell_loss_db: l.per_cell_loss_db,
+            cells_on_path: l.cells_on_path,
+            tap_loss_db: l.tap_loss_db,
+        }
+    }
+
+    fn lower(&self, line_power_w: f64) -> LinkBudget {
+        LinkBudget {
+            line_power_w,
+            shaper_loss_db: self.shaper_loss_db,
+            routing_loss_db: self.routing_loss_db,
+            per_cell_loss_db: self.per_cell_loss_db,
+            cells_on_path: self.cells_on_path,
+            tap_loss_db: self.tap_loss_db,
+        }
+    }
+}
+
+/// Detector-noise behaviour sessions built from this profile inherit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum NoiseSpec {
+    /// Bit-exact execution (the shipped profiles: deterministic census
+    /// and telemetry).
+    Off,
+    /// Noise derived from the profile's own link budget at its compute
+    /// clock (`NoiseModel::from_link`) — the physically-consistent mode.
+    Linked {
+        /// Base seed of the noise stream(s).
+        seed: u64,
+    },
+    /// Explicit Gaussian sigma (ablation sweeps).
+    Gaussian {
+        /// Noise sigma in ideal-LSB units.
+        sigma_lsb: f64,
+        /// Base seed of the noise stream(s).
+        seed: u64,
+    },
+}
+
+/// Clock plan of a profile.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimingSpec {
+    /// Compute (read) clock (Hz).
+    pub clock_hz: f64,
+    /// Write/reconfiguration clock (Hz).
+    pub write_clock_hz: f64,
+    /// Overlap reconfiguration with compute (double-buffered images).
+    pub double_buffer: bool,
+}
+
+impl TimingSpec {
+    /// The paper's 20 GHz read + 20 GHz write, no overlap.
+    pub fn paper() -> Self {
+        TimingSpec { clock_hz: 20e9, write_clock_hz: 20e9, double_buffer: false }
+    }
+}
+
+/// One validated pSRAM device variant — see the module docs.
+///
+/// The fields are public for inspection; construct only through
+/// [`DeviceProfile::new`] (or the registry, [`crate::device::profiles`])
+/// so every live value has passed the admissibility oracle.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceProfile {
+    /// Registry name (`"baseline"`, `"eo_adc"`, `"x_psram_xor"`, or a
+    /// caller-chosen label for custom profiles).
+    pub name: String,
+    /// Readout converter.
+    pub adc: AdcKind,
+    /// Bitcell flavour.
+    pub bitcell: BitcellKind,
+    /// WDM channel supply.
+    pub comb: CombSpec,
+    /// Optical loss budget.
+    pub link: LinkSpec,
+    /// Detector-noise behaviour.
+    pub noise: NoiseSpec,
+    /// Clock plan.
+    pub timing: TimingSpec,
+}
+
+impl DeviceProfile {
+    /// Build and validate a profile.  Lowers the specs onto
+    /// [`DeviceParams`] and routes them through the admissibility oracle
+    /// ([`DeviceParams::validate`]) plus the profile-level physics checks;
+    /// every reject is a typed [`Error::Device`] naming the profile.
+    pub fn new(
+        name: impl Into<String>,
+        adc: AdcKind,
+        bitcell: BitcellKind,
+        comb: CombSpec,
+        link: LinkSpec,
+        noise: NoiseSpec,
+        timing: TimingSpec,
+    ) -> Result<Self> {
+        let profile =
+            DeviceProfile { name: name.into(), adc, bitcell, comb, link, noise, timing };
+        profile.validate()?;
+        Ok(profile)
+    }
+
+    /// Re-run every admissibility check (useful after mutating a public
+    /// field of a clone).  All rejects are typed [`Error::Device`].
+    pub fn validate(&self) -> Result<()> {
+        let reject = |msg: String| -> Error {
+            Error::device(format!("profile '{}': {msg}", self.name))
+        };
+        if let Some(bits) = self.adc.physical_bits() {
+            if bits == 0 || bits > 32 {
+                return Err(reject(format!("ADC resolution {bits} bits out of range")));
+            }
+        }
+        if !(self.adc.energy_per_sample_j() > 0.0) {
+            return Err(reject("non-positive ADC conversion energy".into()));
+        }
+        if !(self.comb.line_power_w > 0.0) {
+            return Err(reject("non-positive comb line power".into()));
+        }
+        if !(self.timing.clock_hz > 0.0) || !(self.timing.write_clock_hz > 0.0) {
+            return Err(reject("non-positive clock".into()));
+        }
+        if let NoiseSpec::Gaussian { sigma_lsb, .. } = self.noise {
+            if !sigma_lsb.is_finite() || sigma_lsb < 0.0 {
+                return Err(reject(format!("noise sigma {sigma_lsb} is not admissible")));
+            }
+        }
+        let cell = self.bitcell.params();
+        if self.timing.write_clock_hz > cell.max_write_rate_hz {
+            return Err(reject(format!(
+                "write clock {:.1} GHz exceeds the bitcell write rate {:.1} GHz",
+                self.timing.write_clock_hz / 1e9,
+                cell.max_write_rate_hz / 1e9
+            )));
+        }
+        let params = self.device_params();
+        // The shared oracle: channel supply, ring resonance spacing,
+        // modulator/ADC rate.  Its rejects are re-typed as Device errors
+        // carrying the profile name.
+        params
+            .validate(self.comb.channels)
+            .map_err(|e| reject(e.to_string()))?;
+        // Profile-level physics the oracle does not cover: the compute
+        // ring's optical bandwidth (f/Q) bounds the read clock.
+        let ring_bw = params.ring.bandwidth_hz();
+        if self.timing.clock_hz > ring_bw {
+            return Err(reject(format!(
+                "read clock {:.1} GHz exceeds the ring optical bandwidth {:.1} GHz",
+                self.timing.clock_hz / 1e9,
+                ring_bw / 1e9
+            )));
+        }
+        Ok(())
+    }
+
+    /// Lower onto the functional-simulator parameter set.
+    pub fn device_params(&self) -> DeviceParams {
+        DeviceParams {
+            comb: self.comb.lower(),
+            ring: MicroRing::gf45spclo_compute_ring(),
+            shaper: CombShaper::default(),
+            pd: Photodiode::default(),
+            adc: self.adc.functional_adc(),
+            link: self.link.lower(self.comb.line_power_w),
+            clock_hz: self.timing.clock_hz,
+            write_clock_hz: self.timing.write_clock_hz,
+        }
+    }
+
+    /// The latch energy/timing parameters of the profile's bitcell.
+    pub fn bitcell_params(&self) -> BitcellParams {
+        self.bitcell.params()
+    }
+
+    /// WDM channels the profile supplies.
+    pub fn wavelengths(&self) -> usize {
+        self.comb.channels
+    }
+
+    /// Build the aggregate noise model for an analog column sum over
+    /// `summed_rows` word rows, honouring the profile's [`NoiseSpec`].
+    pub fn noise_model(&self, summed_rows: usize) -> NoiseModel {
+        match self.noise {
+            NoiseSpec::Off => NoiseModel::Off,
+            NoiseSpec::Linked { seed } => {
+                self.device_params().noise_model(summed_rows, seed)
+            }
+            NoiseSpec::Gaussian { sigma_lsb, seed } => {
+                NoiseModel::gaussian(sigma_lsb, seed)
+            }
+        }
+    }
+
+    /// The `(sigma_lsb, seed)` a session should run its Gaussian noise
+    /// streams with, or `None` for a bit-exact profile.  `Linked` noise
+    /// resolves against a full-column readout (`summed_rows` word rows at
+    /// the profile's compute clock) — the same full scale the faithful
+    /// compute path quantizes against.
+    pub fn session_noise(&self, summed_rows: usize) -> Option<(f64, u64)> {
+        match self.noise {
+            NoiseSpec::Off => None,
+            NoiseSpec::Gaussian { sigma_lsb, seed } if sigma_lsb > 0.0 => {
+                Some((sigma_lsb, seed))
+            }
+            NoiseSpec::Gaussian { .. } => None,
+            NoiseSpec::Linked { seed } => {
+                let p = self.device_params();
+                let sigma = p.link.noise_sigma_lsb(
+                    &p.pd,
+                    p.clock_hz,
+                    summed_rows as f64 * 255.0,
+                );
+                (sigma > 0.0).then_some((sigma, seed))
+            }
+        }
+    }
+
+    /// Full-scale link SNR (dB) of a single-channel readout at the
+    /// profile's compute clock.  [`LinkBudget::detector_snr`] is a
+    /// photocurrent (amplitude) ratio, so the dB conversion is
+    /// `20 log10` — the convention the ENOB formula expects.
+    pub fn link_snr_db(&self) -> f64 {
+        let p = self.device_params();
+        20.0 * p.link.detector_snr(&p.pd, p.clock_hz).log10()
+    }
+
+    /// SNR-derived effective bit precision of one readout: the classic
+    /// `ENOB = (SNR_dB − 1.76) / 6.02`, additionally capped by the
+    /// physical converter resolution when it is finite.  This is the
+    /// per-profile precision figure the telemetry area reports.
+    pub fn effective_bits(&self) -> f64 {
+        let enob = (self.link_snr_db() - 1.76) / 6.02;
+        match self.adc.physical_bits() {
+            Some(bits) => enob.min(bits as f64),
+            None => enob,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_profile(name: &str) -> Result<DeviceProfile> {
+        DeviceProfile::new(
+            name,
+            AdcKind::Ideal,
+            BitcellKind::MrrLatch(BitcellParams::default()),
+            CombSpec::gf45spclo(),
+            LinkSpec::paper(),
+            NoiseSpec::Off,
+            TimingSpec::paper(),
+        )
+    }
+
+    #[test]
+    fn paper_specs_are_admissible() {
+        let p = paper_profile("t").unwrap();
+        assert_eq!(p.wavelengths(), 52);
+        assert!(p.session_noise(256).is_none());
+        assert!(p.noise_model(256).is_off());
+    }
+
+    #[test]
+    fn lowering_matches_default_device_params() {
+        let p = paper_profile("t").unwrap().device_params();
+        let d = DeviceParams::default();
+        assert_eq!(p.comb.max_channels(), d.comb.max_channels());
+        assert_eq!(p.comb.center_wavelength_m, d.comb.center_wavelength_m);
+        assert_eq!(p.comb.spacing_m, d.comb.spacing_m);
+        assert_eq!(p.comb.line_power_w, d.comb.line_power_w);
+        assert_eq!(p.adc.bits, d.adc.bits);
+        assert_eq!(p.adc.sample_rate_hz, d.adc.sample_rate_hz);
+        assert_eq!(p.adc.energy_per_sample_j, d.adc.energy_per_sample_j);
+        assert_eq!(p.link.total_loss_db(), d.link.total_loss_db());
+        assert_eq!(p.clock_hz, d.clock_hz);
+        assert_eq!(p.write_clock_hz, d.write_clock_hz);
+    }
+
+    #[test]
+    fn channel_oversupply_is_a_typed_device_error() {
+        let mut comb = CombSpec::gf45spclo();
+        comb.channels = 0;
+        let err = DeviceProfile::new(
+            "zero",
+            AdcKind::Ideal,
+            BitcellKind::MrrLatch(BitcellParams::default()),
+            comb,
+            LinkSpec::paper(),
+            NoiseSpec::Off,
+            TimingSpec::paper(),
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Device(_)), "{err}");
+        assert!(err.to_string().contains("zero"), "{err}");
+    }
+
+    #[test]
+    fn crosstalk_violating_spacing_rejected() {
+        // 0.05 nm spacing puts adjacent channels inside the ring linewidth.
+        let mut comb = CombSpec::gf45spclo();
+        comb.spacing_m = 0.05e-9;
+        let err = paper_profile("t").unwrap().unwrap_err_on(comb);
+        assert!(matches!(err, Error::Device(_)), "{err}");
+        assert!(err.to_string().contains("crosstalk"), "{err}");
+    }
+
+    #[test]
+    fn ring_bandwidth_bounds_the_read_clock() {
+        // The GF45SPCLO compute ring has f/Q ≈ 28.6 GHz: a 40 GHz read
+        // clock passes the shaper/ADC checks but not the ring.
+        let mut t = TimingSpec::paper();
+        t.clock_hz = 40e9;
+        let err = DeviceProfile::new(
+            "fast",
+            AdcKind::Ideal,
+            BitcellKind::MrrLatch(BitcellParams::default()),
+            CombSpec::gf45spclo(),
+            LinkSpec::paper(),
+            NoiseSpec::Off,
+            t,
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Device(_)), "{err}");
+        assert!(err.to_string().contains("bandwidth"), "{err}");
+    }
+
+    #[test]
+    fn adc_rate_bounds_the_read_clock() {
+        let mut t = TimingSpec::paper();
+        t.clock_hz = 25e9;
+        let err = DeviceProfile::new(
+            "slow-adc",
+            AdcKind::Sar { bits: 8, sample_rate_hz: 20e9, energy_per_sample_j: 1e-12 },
+            BitcellKind::MrrLatch(BitcellParams::default()),
+            CombSpec::gf45spclo(),
+            LinkSpec::paper(),
+            NoiseSpec::Off,
+            t,
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Device(_)), "{err}");
+        assert!(err.to_string().contains("ADC sample rate"), "{err}");
+    }
+
+    #[test]
+    fn bitcell_write_rate_bounds_the_write_clock() {
+        let mut t = TimingSpec::paper();
+        t.write_clock_hz = 30e9; // latch writes max out at 20 GHz
+        let err = DeviceProfile::new(
+            "fast-write",
+            AdcKind::Ideal,
+            BitcellKind::MrrLatch(BitcellParams::default()),
+            CombSpec::gf45spclo(),
+            LinkSpec::paper(),
+            NoiseSpec::Off,
+            t,
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Device(_)), "{err}");
+        assert!(err.to_string().contains("write rate"), "{err}");
+    }
+
+    #[test]
+    fn degenerate_scalars_rejected() {
+        let mut comb = CombSpec::gf45spclo();
+        comb.line_power_w = 0.0;
+        assert!(matches!(
+            paper_profile("t").unwrap().unwrap_err_on(comb),
+            Error::Device(_)
+        ));
+        let err = DeviceProfile::new(
+            "bad-adc",
+            AdcKind::Sar { bits: 0, sample_rate_hz: 20e9, energy_per_sample_j: 1e-12 },
+            BitcellKind::MrrLatch(BitcellParams::default()),
+            CombSpec::gf45spclo(),
+            LinkSpec::paper(),
+            NoiseSpec::Off,
+            TimingSpec::paper(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("resolution"), "{err}");
+        let err = DeviceProfile::new(
+            "bad-sigma",
+            AdcKind::Ideal,
+            BitcellKind::MrrLatch(BitcellParams::default()),
+            CombSpec::gf45spclo(),
+            LinkSpec::paper(),
+            NoiseSpec::Gaussian { sigma_lsb: f64::NAN, seed: 1 },
+            TimingSpec::paper(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("sigma"), "{err}");
+    }
+
+    #[test]
+    fn effective_bits_track_snr_and_adc_cap() {
+        let ideal = paper_profile("t").unwrap();
+        let enob = ideal.effective_bits();
+        // The default link budget supports ~8-bit readout at 20 GHz.
+        assert!(enob > 6.0 && enob < 16.0, "enob={enob}");
+        let capped = DeviceProfile::new(
+            "capped",
+            AdcKind::Sar { bits: 6, sample_rate_hz: 20e9, energy_per_sample_j: 1e-12 },
+            BitcellKind::MrrLatch(BitcellParams::default()),
+            CombSpec::gf45spclo(),
+            LinkSpec::paper(),
+            NoiseSpec::Off,
+            TimingSpec::paper(),
+        )
+        .unwrap();
+        assert_eq!(capped.effective_bits(), 6.0_f64.min(enob));
+    }
+
+    #[test]
+    fn noise_specs_resolve_to_session_noise() {
+        let mut p = paper_profile("t").unwrap();
+        p.noise = NoiseSpec::Gaussian { sigma_lsb: 1.5, seed: 9 };
+        assert_eq!(p.session_noise(256), Some((1.5, 9)));
+        p.noise = NoiseSpec::Gaussian { sigma_lsb: 0.0, seed: 9 };
+        assert!(p.session_noise(256).is_none());
+        p.noise = NoiseSpec::Linked { seed: 4 };
+        let (sigma, seed) = p.session_noise(256).unwrap();
+        assert_eq!(seed, 4);
+        assert!(sigma > 0.0);
+        assert!(!p.noise_model(256).is_off());
+    }
+
+    /// Rebuild this profile with a different comb, returning the error.
+    trait UnwrapErrOn {
+        fn unwrap_err_on(&self, comb: CombSpec) -> Error;
+    }
+    impl UnwrapErrOn for DeviceProfile {
+        fn unwrap_err_on(&self, comb: CombSpec) -> Error {
+            DeviceProfile::new(
+                self.name.clone(),
+                self.adc,
+                self.bitcell,
+                comb,
+                self.link,
+                self.noise,
+                self.timing,
+            )
+            .unwrap_err()
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Registry of shipped [`DeviceProfile`]s.
+//!
+//! Three concrete variants span the design space the follow-on papers
+//! open up:
+//!
+//! | profile | source | what changes vs. the paper stack |
+//! |---|---|---|
+//! | [`baseline_psram`] | this paper | nothing — bit-identical lowering, pinned by test |
+//! | [`eo_adc`] | arXiv:2506.22705 | mixed-signal electro-optic ADC: 25 GS/s at ~150 fJ/conv lifts the read clock to 25 GHz |
+//! | [`x_psram_xor`] | arXiv:2506.22707 | embedded-XOR bitcell: binary compare-accumulate kernel with 1-bit sense readout |
+//!
+//! Profiles are resolved by name on the CLI via [`by_name`]; [`all`]
+//! enumerates them for sweeps (the `profile_sweep` bench and the `device`
+//! telemetry area).
+//!
+//! The registry constructors `expect` on [`DeviceProfile::new`]: these
+//! parameter sets are fixed in source and covered by tests, so a rejection
+//! is a programming error, not a user input — user-supplied names go
+//! through [`by_name`], which returns typed errors.
+
+use super::profile::{
+    AdcKind, BitcellKind, CombSpec, DeviceProfile, LinkSpec, NoiseSpec, TimingSpec,
+};
+use crate::psram::bitcell::BitcellParams;
+use crate::util::error::{Error, Result};
+
+/// Registry names accepted by [`by_name`] (and the CLI `--profile` flag).
+pub const NAMES: [&str; 3] = ["baseline", "eo_adc", "x_psram_xor"];
+
+/// The paper's own device stack (GF45SPCLO comb, MRR latch bitcells,
+/// ideal on-chip readout, 20 GHz read/write clocks).  Lowers bit-identically
+/// onto `DeviceParams::default()` — pinned by `tests/device_profiles.rs`.
+pub fn baseline_psram() -> DeviceProfile {
+    DeviceProfile::new(
+        "baseline",
+        AdcKind::Ideal,
+        BitcellKind::MrrLatch(BitcellParams::default()),
+        CombSpec::gf45spclo(),
+        LinkSpec::paper(),
+        NoiseSpec::Off,
+        TimingSpec::paper(),
+    )
+    .expect("baseline profile parameters are admissible by construction")
+}
+
+/// The mixed-signal photonic tensor core of arXiv:2506.22705: the readout
+/// converter is a hybrid electro-optic ADC whose sampling happens in the
+/// optical domain.  Calibration: 8-bit resolution at 25 GS/s and ~150 fJ
+/// per conversion — faster *and* cheaper per sample than an electronic SAR
+/// at that rate, which lets the compute clock rise to 25 GHz (still under
+/// the ring optical bandwidth of ~28.6 GHz and the 50 GHz shaper limit).
+/// Writes stay at the 20 GHz latch limit.
+pub fn eo_adc() -> DeviceProfile {
+    DeviceProfile::new(
+        "eo_adc",
+        AdcKind::ElectroOptic {
+            bits: 8,
+            sample_rate_hz: 25e9,
+            energy_per_sample_j: 150e-15,
+        },
+        BitcellKind::MrrLatch(BitcellParams::default()),
+        CombSpec::gf45spclo(),
+        LinkSpec::paper(),
+        NoiseSpec::Off,
+        TimingSpec { clock_hz: 25e9, write_clock_hz: 20e9, double_buffer: false },
+    )
+    .expect("eo_adc profile parameters are admissible by construction")
+}
+
+/// X-pSRAM (arXiv:2506.22707): the photonic bitcell embeds XOR logic in
+/// the read path, so a binary compare-accumulate (Hamming distance of the
+/// input bit vector against every stored word column) executes in a single
+/// read-compute cycle.  Calibration: the latch pays a slightly higher
+/// switching energy for the extra XOR gear (1.2 pJ vs 1.04 pJ per write),
+/// each embedded XOR evaluation costs ~5 fJ per stored bit, and the 1-bit
+/// sense readout replaces the multi-bit conversion at ~0.4 pJ per sample.
+/// MAC-path kernels still run (same 20 GHz clocks as baseline); the XOR
+/// kernel mode is additionally enabled and carries its own census
+/// (`xor_cycles` / `bit_ops`).
+pub fn x_psram_xor() -> DeviceProfile {
+    DeviceProfile::new(
+        "x_psram_xor",
+        AdcKind::Sar { bits: 8, sample_rate_hz: 20e9, energy_per_sample_j: 0.4e-12 },
+        BitcellKind::XorEmbedded {
+            latch: BitcellParams {
+                switching_energy_j: 1.2e-12,
+                ..BitcellParams::default()
+            },
+            xor_energy_per_bit_j: 5e-15,
+        },
+        CombSpec::gf45spclo(),
+        LinkSpec::paper(),
+        NoiseSpec::Off,
+        TimingSpec::paper(),
+    )
+    .expect("x_psram_xor profile parameters are admissible by construction")
+}
+
+/// All registered profiles, in [`NAMES`] order.
+pub fn all() -> Vec<DeviceProfile> {
+    vec![baseline_psram(), eo_adc(), x_psram_xor()]
+}
+
+/// Resolve a registry profile by name (the CLI `--profile` flag).
+/// `"baseline_psram"` is accepted as an alias for `"baseline"`.
+pub fn by_name(name: &str) -> Result<DeviceProfile> {
+    match name {
+        "baseline" | "baseline_psram" => Ok(baseline_psram()),
+        "eo_adc" => Ok(eo_adc()),
+        "x_psram_xor" => Ok(x_psram_xor()),
+        other => Err(Error::device(format!(
+            "unknown device profile '{other}' (registered: {})",
+            NAMES.join(", ")
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_registered_profiles_validate() {
+        for p in all() {
+            assert!(p.validate().is_ok(), "profile '{}' must be admissible", p.name);
+        }
+        assert_eq!(all().len(), NAMES.len());
+    }
+
+    #[test]
+    fn by_name_resolves_every_registry_name() {
+        for name in NAMES {
+            assert_eq!(by_name(name).unwrap().name, name);
+        }
+        assert_eq!(by_name("baseline_psram").unwrap().name, "baseline");
+    }
+
+    #[test]
+    fn unknown_name_is_typed_device_error() {
+        let err = by_name("warp_core").unwrap_err();
+        assert!(matches!(err, Error::Device(_)), "{err}");
+        assert!(err.to_string().contains("warp_core"));
+        assert!(err.to_string().contains("x_psram_xor"));
+    }
+
+    #[test]
+    fn eo_adc_runs_faster_reads_than_baseline() {
+        let base = baseline_psram();
+        let eo = eo_adc();
+        assert!(eo.timing.clock_hz > base.timing.clock_hz);
+        assert_eq!(eo.adc.physical_bits(), Some(8));
+        assert!(eo.adc.energy_per_sample_j() < base.adc.energy_per_sample_j());
+        // Write path is still latch-limited.
+        assert_eq!(eo.timing.write_clock_hz, base.timing.write_clock_hz);
+    }
+
+    #[test]
+    fn only_x_psram_supports_binary_ops() {
+        assert!(!baseline_psram().bitcell.supports_binary_ops());
+        assert!(!eo_adc().bitcell.supports_binary_ops());
+        let x = x_psram_xor();
+        assert!(x.bitcell.supports_binary_ops());
+        assert!(x.bitcell.xor_energy_per_bit_j().unwrap() > 0.0);
+        assert!(
+            x.bitcell.params().switching_energy_j
+                > baseline_psram().bitcell.params().switching_energy_j
+        );
+    }
+}

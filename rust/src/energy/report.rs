@@ -36,6 +36,21 @@ impl EnergyModel {
         }
     }
 
+    /// Energy model calibrated from a validated device profile: the
+    /// profile-lowered device parameters (modulator, per-profile ADC
+    /// conversion energy, comb line power), the profile's bitcell energy
+    /// numbers, and a [`PerfModel::from_profile`] cycle model.
+    /// `from_profile(&baseline_psram())` equals [`EnergyModel::paper`]
+    /// term for term — pinned in `tests/device_profiles.rs`.
+    pub fn from_profile(p: &crate::device::DeviceProfile) -> Self {
+        EnergyModel {
+            device: p.device_params(),
+            bitcell: p.bitcell_params(),
+            model: PerfModel::from_profile(p),
+            toggle_fraction: 0.5,
+        }
+    }
+
     /// Predict the energy of an MTTKRP execution described by a
     /// [`PerfEstimate`].
     pub fn predict(&self, est: &PerfEstimate) -> EnergyBreakdown {

@@ -5,17 +5,22 @@
 //! psram-imc sweep     --axis wavelengths|frequency
 //! psram-imc cpd       [--shape I,J,K] [--rank R] [--iters N] [--backend exact|psram|coordinator|pjrt]
 //!                     [--workers N] [--batch N] [--noise SIGMA] [--seed S] [--sparse DENSITY]
+//!                     [--profile NAME]
 //!                     (default backend: coordinator — the sharded batched multi-array pool;
 //!                      with --sparse the spMTTKRP slice plans run on the same pool)
 //! psram-imc tucker    [--shape I,J,K] [--ranks R1,R2,R3 | --rank R] [--iters N]
 //!                     [--backend exact|psram|coordinator] [--workers N] [--batch N]
-//!                     [--noise SIGMA] [--seed S]
+//!                     [--noise SIGMA] [--seed S] [--profile NAME]
 //!                     (Tucker/HOOI via TTM tile plans; default backend: coordinator)
+//! psram-imc profiles  (comparative telemetry across the registered device
+//!                      profiles: calibrated sustained throughput, energy per
+//!                      op, link SNR / effective bits, XOR kernel census)
 //! psram-imc energy    [--channels N] [--freq GHZ]
 //! psram-imc serve     [--pools N] [--tenants N] [--jobs N] [--queue-bound N] [--seed S]
 //!                     (live admission-controlled service tier: weighted-fair
 //!                      dispatch over N session pools, per-tenant energy)
 //! psram-imc traffic   [--seed S] [--pools N] [--jobs N] [--queue-bound N]
+//!                     [--profile NAME]
 //!                     (seeded virtual-clock traffic harness — latency
 //!                      percentiles are a pure function of the seed)
 //! psram-imc selftest            # analog vs CPU vs PJRT cross-check
@@ -34,10 +39,16 @@
 //! `Engine::Coordinated` over `--workers` shards.  `pjrt` still drives
 //! the legacy single-array backend directly (the PJRT runtime is not
 //! `Send`-guaranteed under the `xla` feature).
+//!
+//! `--profile NAME` (cpd, tucker, traffic; default `baseline`) calibrates
+//! the session's performance/energy models and analog executors from a
+//! registered device profile ([`psram_imc::device::profiles`]) — the
+//! `baseline` profile is bit-identical to the paper defaults.
 
 use psram_imc::cli::Args;
 use psram_imc::coordinator::CoordinatorConfig;
 use psram_imc::cpd::{AlsConfig, CpAls, CpTarget, PsramBackend};
+use psram_imc::device::{profiles, DeviceProfile};
 use psram_imc::energy::EnergyModel;
 use psram_imc::mttkrp::pipeline::{AnalogTileExecutor, CpuTileExecutor};
 use psram_imc::perfmodel::{fig5_frequency, fig5_wavelengths, PerfModel, Workload};
@@ -77,6 +88,7 @@ fn run(args: &Args) -> Result<()> {
         "cpd" => cmd_cpd(args),
         "tucker" => cmd_tucker(args),
         "energy" => cmd_energy(args),
+        "profiles" => cmd_profiles(args),
         "serve" => cmd_serve(args),
         "traffic" => cmd_traffic(args),
         "selftest" => cmd_selftest(args),
@@ -103,6 +115,8 @@ COMMANDS:
   cpd       CP-ALS decomposition on a synthetic tensor
   tucker    Tucker/HOOI decomposition via TTM tile plans
   energy    energy breakdown for the paper workload
+  profiles  compare the registered device profiles (throughput, energy,
+            effective bits, XOR kernel census)
   serve     live admission-controlled service tier over session pools
   traffic   seeded deterministic traffic harness (virtual clock)
   selftest  analog / CPU / PJRT bit-exactness cross-check
@@ -187,18 +201,21 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
 /// Build the session for a decomposition command: `--backend` picks the
 /// engine, `--noise` the detector-noise mode, `--workers`/`--batch` the
-/// pool shape.  `analog` selects the device-faithful simulator for the
-/// pSRAM engines (the sparse paths default to the fast CPU twin — the two
-/// are bit-identical with noise off).
+/// pool shape, `profile` the device calibration (the `baseline` profile
+/// reproduces the paper defaults bit for bit).  `analog` selects the
+/// device-faithful simulator for the pSRAM engines (the sparse paths
+/// default to the fast CPU twin — the two are bit-identical with noise
+/// off).  An explicit `--noise` overrides the profile's noise spec.
 fn build_session(
     args: &Args,
     backend_kind: &str,
     noise: f64,
     seed: u64,
     analog: bool,
+    profile: &DeviceProfile,
     pool_config: Option<CoordinatorConfig>,
 ) -> Result<PsramSession> {
-    let mut b = PsramSession::builder().analog(analog);
+    let mut b = PsramSession::builder().analog(analog).device_profile(profile);
     if noise > 0.0 {
         b = b.noise(NoiseMode::Gaussian { sigma_lsb: noise, seed });
     }
@@ -220,6 +237,11 @@ fn build_session(
             "unknown backend {other:?} (use coordinator, psram or exact)"
         ))),
     }
+}
+
+/// Resolve `--profile NAME` (default `baseline`) against the registry.
+fn resolve_profile(args: &Args) -> Result<DeviceProfile> {
+    profiles::by_name(args.get("profile").unwrap_or("baseline"))
 }
 
 /// Print a pool configuration the way every coordinator-backed command does.
@@ -270,6 +292,7 @@ fn cmd_cpd(args: &Args) -> Result<()> {
     let noise = args.get_or("noise", 0.0f64)?;
     let backend_kind = args.get("backend").unwrap_or("coordinator");
     let sparse_density = args.get_or("sparse", 0.0f64)?;
+    let profile = resolve_profile(args)?;
 
     // Synthetic low-rank tensor + measurement noise.
     let mut rng = Prng::new(seed);
@@ -279,7 +302,10 @@ fn cmd_cpd(args: &Args) -> Result<()> {
 
     let cfg = AlsConfig { rank, max_iters: iters, tol: 1e-6, seed: seed ^ 0xABCD };
     let als = CpAls::new(cfg);
-    println!("tensor {shape:?}, rank {rank}, backend {backend_kind}");
+    println!(
+        "tensor {shape:?}, rank {rank}, backend {backend_kind}, profile {}",
+        profile.name
+    );
 
     // Sparse path: sparsify the synthetic tensor to the requested density
     // and run spMTTKRP CP-ALS through the same session surface — by
@@ -296,7 +322,8 @@ fn cmd_cpd(args: &Args) -> Result<()> {
         let coo = CooTensor::from_dense(&x, thr);
         println!("sparsified to {} nnz (density {:.4})", coo.nnz(), coo.density());
         let t0 = std::time::Instant::now();
-        let session = build_session(args, backend_kind, noise, seed, false, None)?;
+        let session =
+            build_session(args, backend_kind, noise, seed, false, &profile, None)?;
         let res = als.run(&session, CpTarget::Sparse(&coo))?;
         print_session_metrics(&session);
         println!(
@@ -326,7 +353,7 @@ fn cmd_cpd(args: &Args) -> Result<()> {
             // noise on the analog arrays.
             let pool_cfg = if backend_kind == "coordinator" {
                 let workers = args.get_or("workers", 4usize)?;
-                let mut model = PerfModel::paper();
+                let mut model = PerfModel::from_profile(&profile);
                 model.num_arrays = workers;
                 let wl = Workload {
                     i_rows: shape[0] as u64,
@@ -338,7 +365,7 @@ fn cmd_cpd(args: &Args) -> Result<()> {
                 None
             };
             let session =
-                build_session(args, backend_kind, noise, seed, true, pool_cfg)?;
+                build_session(args, backend_kind, noise, seed, true, &profile, pool_cfg)?;
             let r = als.run(&session, CpTarget::Dense(&x))?;
             print_session_metrics(&session);
             r
@@ -369,6 +396,7 @@ fn cmd_tucker(args: &Args) -> Result<()> {
     let seed = args.get_or("seed", 42u64)?;
     let noise = args.get_or("noise", 0.0f64)?;
     let backend_kind = args.get("backend").unwrap_or("coordinator");
+    let profile = resolve_profile(args)?;
     if ranks.len() != shape.len() {
         return Err(psram_imc::Error::config(format!(
             "--ranks has {} entries for a {}-mode shape",
@@ -395,10 +423,13 @@ fn cmd_tucker(args: &Args) -> Result<()> {
         max_iters: iters,
         tol: 1e-6,
     });
-    println!("tensor {shape:?}, ranks {ranks:?}, backend {backend_kind}");
+    println!(
+        "tensor {shape:?}, ranks {ranks:?}, backend {backend_kind}, profile {}",
+        profile.name
+    );
 
     let t0 = std::time::Instant::now();
-    let session = build_session(args, backend_kind, noise, seed, true, None)?;
+    let session = build_session(args, backend_kind, noise, seed, true, &profile, None)?;
     let res = hooi.run(&x, &session)?;
     print_session_metrics(&session);
     let dt = t0.elapsed();
@@ -431,6 +462,47 @@ fn cmd_energy(args: &Args) -> Result<()> {
     }
     println!("  {:>10}: {:>12}", "total", format_energy(e.total_j()));
     println!("  per useful op: {}", format_energy(e.per_op_j(2.0 * w.useful_macs())));
+    Ok(())
+}
+
+/// `profiles`: comparative telemetry across the registered device
+/// profiles — each row is one full calibrated stack: the performance
+/// model on the paper's 1M-per-mode workload, the analytic energy per
+/// useful op, the detector-link SNR with its ADC-capped effective bits,
+/// and the binary-op (XOR) kernel envelope where the bitcell embeds one.
+fn cmd_profiles(_args: &Args) -> Result<()> {
+    let w = Workload::paper_large();
+    println!("registered device profiles (workload: 1M-per-mode dense tensor, rank 32):");
+    println!(
+        "{:>12} {:>6} {:>6} {:>16} {:>12} {:>8} {:>6} {:>16}",
+        "profile", "GHz", "lanes", "sustained", "energy/op", "SNR dB", "ENOB", "xor bit-ops"
+    );
+    for p in profiles::all() {
+        let m = PerfModel::from_profile(&p);
+        let est = m.predict(&w)?;
+        let e = EnergyModel::from_profile(&p).predict(&est);
+        let xor = if p.bitcell.supports_binary_ops() {
+            format_ops(m.predict_xor(1 << 20)?.sustained_bit_ops)
+        } else {
+            "-".to_string()
+        };
+        println!(
+            "{:>12} {:>6.1} {:>6} {:>16} {:>12} {:>8.1} {:>6.2} {:>16}",
+            p.name,
+            p.timing.clock_hz / 1e9,
+            m.wavelengths,
+            format_ops(est.sustained_raw_ops),
+            format_energy(e.per_op_j(2.0 * w.useful_macs())),
+            p.link_snr_db(),
+            p.effective_bits(),
+            xor
+        );
+    }
+    println!(
+        "(baseline reproduces the paper stack bit for bit; eo_adc swaps in the \
+         electro-optic ADC front end, x_psram_xor embeds XOR logic in the bitcell \
+         read path)"
+    );
     Ok(())
 }
 
@@ -521,6 +593,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// same numbers, on any machine.
 fn cmd_traffic(args: &Args) -> Result<()> {
     let seed = args.get_or("seed", 42u64)?;
+    let profile = resolve_profile(args)?;
     let mut cfg = TrafficConfig::paper(seed);
     cfg.pools = args.get_or("pools", cfg.pools)?.max(1);
     cfg.queue_bound = args.get_or("queue-bound", cfg.queue_bound)?;
@@ -529,12 +602,14 @@ fn cmd_traffic(args: &Args) -> Result<()> {
         load.jobs = jobs;
     }
     println!(
-        "traffic: seed {seed}, {} pool(s), queue bound {}, {} tenant(s) x {jobs} job(s)",
+        "traffic: seed {seed}, {} pool(s), queue bound {}, {} tenant(s) x {jobs} job(s), \
+         profile {}",
         cfg.pools,
         cfg.queue_bound,
-        cfg.tenants.len()
+        cfg.tenants.len(),
+        profile.name
     );
-    let report = cfg.run(&PerfModel::paper())?;
+    let report = cfg.run(&PerfModel::from_profile(&profile))?;
     print!("{report}");
     Ok(())
 }

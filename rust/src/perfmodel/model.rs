@@ -105,6 +105,27 @@ impl PerfModel {
         }
     }
 
+    /// Calibrate the model from a validated [`DeviceProfile`]: per-profile
+    /// compute clock (cycle time), reconfiguration write clock, channel
+    /// count, and write/compute overlap — the knobs the profile papers
+    /// actually move.  The geometry stays the paper macro (all shipped
+    /// profiles reuse the 256×256-bit array) and the model starts on one
+    /// array; scale out with `num_arrays` as usual.
+    ///
+    /// `PerfModel::from_profile(&profiles::baseline_psram())` is
+    /// field-identical to [`PerfModel::paper`] — the pinned equivalence in
+    /// `tests/device_profiles.rs`.
+    pub fn from_profile(p: &crate::device::DeviceProfile) -> Self {
+        PerfModel {
+            geom: ArrayGeometry::PAPER,
+            wavelengths: p.wavelengths(),
+            clock_hz: p.timing.clock_hz,
+            write_clock_hz: p.timing.write_clock_hz,
+            double_buffer: p.timing.double_buffer,
+            num_arrays: 1,
+        }
+    }
+
     /// Validate the configuration.
     pub fn validate(&self) -> Result<()> {
         self.geom.validate()?;
@@ -298,6 +319,58 @@ impl PerfModel {
             sustained_useful_ops: sustained_raw * padding,
         })
     }
+
+    /// Predict the cycle census of the binary compare-accumulate (XOR)
+    /// kernel streaming `vectors` input bit vectors against one stored
+    /// image (X-pSRAM's read-compute mode, arXiv:2506.22707).
+    ///
+    /// The kernel packs up to `wavelengths` vectors per cycle, and every
+    /// cycle reads all `rows × words_per_row × 8` stored bits once per
+    /// active lane, so:
+    ///
+    /// ```text
+    /// xor_cycles = ceil(vectors / wavelengths)
+    /// bit_ops    = rows × words_per_row × 8 × vectors
+    /// ```
+    ///
+    /// Both are exact — `ComputeEngine::xor_block_into` measures the same
+    /// counts for any lane batching (tested per profile in
+    /// `tests/device_profiles.rs`).
+    pub fn predict_xor(&self, vectors: u64) -> Result<XorEstimate> {
+        self.validate()?;
+        if vectors == 0 {
+            return Err(Error::config("degenerate XOR workload: zero vectors"));
+        }
+        let lanes = self.wavelengths as u64;
+        let stored_bits =
+            self.geom.total_words() as u64 * 8 * self.num_arrays as u64;
+        let xor_cycles = vectors.div_ceil(lanes * self.num_arrays as u64);
+        let bit_ops = self.geom.total_words() as u64 * 8 * vectors;
+        let runtime_s = xor_cycles as f64 / self.clock_hz;
+        Ok(XorEstimate {
+            xor_cycles,
+            bit_ops,
+            runtime_s,
+            peak_bit_ops: stored_bits as f64 * lanes as f64 * self.clock_hz,
+            sustained_bit_ops: bit_ops as f64 / runtime_s,
+        })
+    }
+}
+
+/// Output of [`PerfModel::predict_xor`]: the exact predicted census of a
+/// binary compare-accumulate (XOR) workload.
+#[derive(Debug, Clone, Copy)]
+pub struct XorEstimate {
+    /// Read-compute cycles on the bottleneck array.
+    pub xor_cycles: u64,
+    /// Bitwise XOR-and-count operations over the stored image.
+    pub bit_ops: u64,
+    /// Predicted runtime (s).
+    pub runtime_s: f64,
+    /// Peak bit-ops/s: every stored bit XORed once per lane per cycle.
+    pub peak_bit_ops: f64,
+    /// Sustained bit-ops/s for this workload (lane raggedness shows here).
+    pub sustained_bit_ops: f64,
 }
 
 /// Output of the predictive model.

@@ -7,7 +7,7 @@
 //! ~16.7 aJ/bit static energy.
 
 /// Energy/timing constants of the bitcell from the paper.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BitcellParams {
     /// Energy to flip the latch (J/bit). Paper: ~1.04 pJ.
     pub switching_energy_j: f64,

@@ -197,6 +197,12 @@ pub struct SessionBuilder {
     intra_workers: Option<usize>,
     fault: Option<FaultPolicy>,
     injector: Option<Arc<FaultInjector>>,
+    /// Profile-lowered device parameters for the analog executors (and
+    /// the admissibility checks); `None` keeps the paper defaults.
+    device: Option<DeviceParams>,
+    /// Profile bitcell energy numbers for the analog arrays' measured
+    /// ledgers; `None` keeps the paper defaults.
+    bitcell: Option<crate::psram::bitcell::BitcellParams>,
 }
 
 impl Default for SessionBuilder {
@@ -213,6 +219,8 @@ impl Default for SessionBuilder {
             intra_workers: None,
             fault: None,
             injector: None,
+            device: None,
+            bitcell: None,
         }
     }
 }
@@ -235,6 +243,29 @@ impl SessionBuilder {
     /// The execution engine (default: [`Engine::SingleArray`]).
     pub fn engine(mut self, engine: Engine) -> Self {
         self.engine = engine;
+        self
+    }
+
+    /// Build the session against a validated device profile
+    /// ([`crate::device::DeviceProfile`]): the performance model is
+    /// calibrated with [`PerfModel::from_profile`] (per-profile clocks,
+    /// channel count, write overlap), the noise mode follows the
+    /// profile's `NoiseSpec` (resolved for a full-column readout), and
+    /// the analog executors are built from the profile-lowered
+    /// [`DeviceParams`] and bitcell energy numbers instead of the module
+    /// defaults.  `device_profile(&profiles::baseline_psram())` is
+    /// bit-identical to the default builder — pinned in
+    /// `tests/device_profiles.rs`.  Call before [`SessionBuilder::model`]
+    /// or [`SessionBuilder::noise`] if you want to override parts of the
+    /// profile afterwards.
+    pub fn device_profile(mut self, profile: &crate::device::DeviceProfile) -> Self {
+        self.model = PerfModel::from_profile(profile);
+        self.noise = match profile.session_noise(ArrayGeometry::PAPER.rows) {
+            None => NoiseMode::Ideal,
+            Some((sigma_lsb, seed)) => NoiseMode::Gaussian { sigma_lsb, seed },
+        };
+        self.device = Some(profile.device_params());
+        self.bitcell = Some(profile.bitcell_params());
         self
     }
 
@@ -332,6 +363,8 @@ impl SessionBuilder {
             injector: self.injector.clone(),
             fault: self.fault.unwrap_or_default(),
             death,
+            params: self.device.clone().unwrap_or_default(),
+            bitcell: self.bitcell.unwrap_or_default(),
         }
     }
 
@@ -353,7 +386,12 @@ impl SessionBuilder {
                     ArrayGeometry::PAPER.cols_bits
                 )));
             }
-            let comb = DeviceParams::default().comb.max_channels();
+            let comb = self
+                .device
+                .as_ref()
+                .map_or_else(|| DeviceParams::default().comb.max_channels(), |d| {
+                    d.comb.max_channels()
+                });
             if model.wavelengths > comb {
                 return Err(Error::config(format!(
                     "{} wavelengths exceed the analog comb's {comb} channels",
@@ -489,6 +527,11 @@ struct ExecutorFactory {
     injector: Option<Arc<FaultInjector>>,
     fault: FaultPolicy,
     death: DeathMode,
+    /// Device parameters for the analog engines (profile-lowered when the
+    /// session was built through [`SessionBuilder::device_profile`]).
+    params: DeviceParams,
+    /// Bitcell energy numbers for the analog arrays' measured ledgers.
+    bitcell: crate::psram::bitcell::BitcellParams,
 }
 
 impl ExecutorFactory {
@@ -498,16 +541,20 @@ impl ExecutorFactory {
     fn make(&self, worker: usize) -> Box<dyn TileExecutor + Send> {
         let inner: Box<dyn TileExecutor + Send> = if self.analog {
             let engine = match self.noise {
-                NoiseMode::Ideal => ComputeEngine::ideal(),
+                NoiseMode::Ideal => {
+                    ComputeEngine::new(self.params.clone(), NoiseModel::Off)
+                }
                 NoiseMode::Gaussian { sigma_lsb, seed } => ComputeEngine::new(
-                    DeviceParams::default(),
+                    self.params.clone(),
                     NoiseModel::gaussian(
                         sigma_lsb,
                         (seed ^ 0x77).wrapping_add(worker as u64),
                     ),
                 ),
             };
-            Box::new(AnalogTileExecutor::new(engine, PsramArray::paper()))
+            let mut array = PsramArray::paper();
+            array.set_params(self.bitcell);
+            Box::new(AnalogTileExecutor::new(engine, array))
         } else {
             Box::new(
                 CpuTileExecutor::new(self.rows, self.wpr, self.lanes)

@@ -1,8 +1,8 @@
 //! The cheap telemetry suite behind `psram-imc bench-report`: reduced-size
 //! versions of the headline, engine hot-loop, coordinator-scaling,
-//! workload (sparse + Tucker), and service-tier benches, each emitting a
-//! [`BenchReport`] whose deterministic records are a pure function of the
-//! code and the fixed PRNG seeds.
+//! workload (sparse + Tucker), service-tier, and device-profile benches,
+//! each emitting a [`BenchReport`] whose deterministic records are a pure
+//! function of the code and the fixed PRNG seeds.
 //!
 //! Every area pairs *measured* cycle censuses (from actually executing
 //! plans on the functional simulator) with the *predicted* envelope from
@@ -34,8 +34,9 @@ use crate::util::error::{Error, Result};
 use crate::util::prng::Prng;
 use std::time::Instant;
 
-/// The five bench areas, in baseline-file order.
-pub const AREAS: [&str; 5] = ["headline", "engine", "coordinator", "workloads", "service"];
+/// The six bench areas, in baseline-file order.
+pub const AREAS: [&str; 6] =
+    ["headline", "engine", "coordinator", "workloads", "service", "device"];
 
 /// Relative tolerance for ratio metrics (utilization, padding): exact up
 /// to f64 formatting noise.
@@ -65,6 +66,7 @@ pub fn run_area(area: &str, env: &BenchEnv) -> Result<BenchReport> {
         "coordinator" => coordinator_area(&mut report)?,
         "workloads" => workloads_area(&mut report)?,
         "service" => service_area(&mut report)?,
+        "device" => device_area(&mut report)?,
         other => {
             return Err(Error::telemetry(format!(
                 "unknown bench area {other:?} (areas: {})",
@@ -694,6 +696,106 @@ fn service_area(report: &mut BenchReport) -> Result<()> {
     Ok(())
 }
 
+/// Device profiles: every registered profile's calibrated envelope —
+/// predicted sustained throughput on the paper workload, analytic energy
+/// per useful op, the detector-link SNR with its ADC-capped effective
+/// bits — plus a measured-vs-predicted census of the X-pSRAM binary-op
+/// (XOR) kernel.  Everything here is pure f64/integer arithmetic over
+/// fixed seeds, so every record gates.
+fn device_area(report: &mut BenchReport) -> Result<()> {
+    use crate::compute::ComputeEngine;
+    use crate::device::profiles;
+    use crate::psram::PsramArray;
+
+    let w = Workload::paper_large();
+    for p in profiles::all() {
+        let model = PerfModel::from_profile(&p);
+        let est = model.predict(&w)?;
+        let e = EnergyModel::from_profile(&p).predict(&est);
+        let pre = format!("device.{}", p.name);
+        report.push(
+            BenchRecord::new(format!("{pre}.predicted_peak_ops"), est.peak_ops, "ops/s")
+                .better(Direction::Higher)
+                .tol(TOL_MODEL),
+        )?;
+        report.push(
+            BenchRecord::new(
+                format!("{pre}.predicted_sustained_ops"),
+                est.sustained_raw_ops,
+                "ops/s",
+            )
+            .better(Direction::Higher)
+            .tol(TOL_MODEL),
+        )?;
+        report.push(ratio(&format!("{pre}.predicted_utilization"), est.utilization))?;
+        report.push(
+            BenchRecord::new(
+                format!("{pre}.energy_per_op_j"),
+                e.per_op_j(2.0 * w.useful_macs()),
+                "J/op",
+            )
+            .better(Direction::Lower)
+            .tol(TOL_MODEL),
+        )?;
+        report.push(
+            BenchRecord::new(format!("{pre}.link_snr_db"), p.link_snr_db(), "dB")
+                .better(Direction::Higher)
+                .tol(TOL_MODEL),
+        )?;
+        report.push(
+            BenchRecord::new(format!("{pre}.effective_bits"), p.effective_bits(), "bits")
+                .better(Direction::Higher)
+                .tol(TOL_MODEL),
+        )?;
+    }
+
+    // X-pSRAM binary-op kernel: run a small batched XOR workload on the
+    // functional simulator and pin its census against `predict_xor` — the
+    // same measured == predicted contract the MAC areas enforce.
+    let xp = profiles::x_psram_xor();
+    let mut engine = ComputeEngine::from_profile(&xp);
+    let mut array = PsramArray::paper();
+    let mut rng = Prng::new(31);
+    let img: Vec<i8> =
+        (0..array.geometry().total_words()).map(|_| rng.next_i8()).collect();
+    array.write_image(&img)?;
+    let lane_counts = [52usize, 52, 17];
+    let vectors: usize = lane_counts.iter().sum();
+    let rows = array.geometry().rows;
+    let bits: Vec<u8> = (0..vectors * rows).map(|_| rng.next_u8() & 1).collect();
+    let mut out = vec![0u32; vectors * array.geometry().words_per_row()];
+    engine.xor_block_into(&mut array, &bits, &lane_counts, &mut out)?;
+    let est = PerfModel::from_profile(&xp).predict_xor(vectors as u64)?;
+    report.push(count("device.xor.measured_cycles", engine.stats.xor_cycles, "cycles"))?;
+    report.push(count("device.xor.predicted_cycles", est.xor_cycles, "cycles"))?;
+    report.push(count("device.xor.measured_bit_ops", engine.stats.bit_ops, "bitops"))?;
+    report.push(count("device.xor.predicted_bit_ops", est.bit_ops, "bitops"))?;
+    report.push(count(
+        "device.xor.hamming_checksum",
+        out.iter().map(|&v| u64::from(v)).sum(),
+        "bits",
+    ))?;
+    report.push(
+        BenchRecord::new(
+            "device.xor.predicted_sustained_bit_ops",
+            est.sustained_bit_ops,
+            "ops/s",
+        )
+        .better(Direction::Higher)
+        .tol(TOL_MODEL),
+    )?;
+    report.push(
+        BenchRecord::new(
+            "device.xor.switching_energy_j",
+            array.energy.switching_j,
+            "J",
+        )
+        .better(Direction::Lower)
+        .tol(TOL_MODEL),
+    )?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -709,7 +811,29 @@ mod tests {
     fn file_names_match_areas() {
         assert_eq!(file_name("headline"), "BENCH_headline.json");
         assert_eq!(file_name("service"), "BENCH_service.json");
-        assert_eq!(AREAS.len(), 5);
+        assert_eq!(file_name("device"), "BENCH_device.json");
+        assert_eq!(AREAS.len(), 6);
+    }
+
+    #[test]
+    fn device_area_xor_census_is_predicted_exact() {
+        let env = capture_env(Some("2026-08-07"));
+        let r = run_area("device", &env).unwrap();
+        assert_eq!(
+            r.value("device.xor.measured_cycles"),
+            r.value("device.xor.predicted_cycles")
+        );
+        assert_eq!(
+            r.value("device.xor.measured_bit_ops"),
+            r.value("device.xor.predicted_bit_ops")
+        );
+        // The baseline profile reproduces the paper's headline peak.
+        let base = r.value("device.baseline.predicted_peak_ops").unwrap();
+        assert!((base / 1e15 - 17.04).abs() < 0.005);
+        // A faster ADC front end must not predict slower sustained ops.
+        let b = r.value("device.baseline.predicted_sustained_ops").unwrap();
+        let eo = r.value("device.eo_adc.predicted_sustained_ops").unwrap();
+        assert!(eo >= b, "eo_adc {eo} vs baseline {b}");
     }
 
     #[test]

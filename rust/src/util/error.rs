@@ -35,6 +35,13 @@ pub enum Error {
     /// off this variant.
     Fault(String),
 
+    /// A device profile or physics parameter set failed the admissibility
+    /// oracle (comb channel supply, ring resonance spacing, modulator/ADC
+    /// rate) or a device-level encode/decode was asked to handle an
+    /// out-of-range code.  Produced by `crate::device::profile` and the
+    /// checked component constructors; deterministic, never retryable.
+    Device(String),
+
     /// Numerical failure (non-finite values, singular matrix, ...).
     Numerical(String),
 
@@ -67,6 +74,7 @@ impl fmt::Display for Error {
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Fault(m) => write!(f, "fault: {m}"),
+            Error::Device(m) => write!(f, "device error: {m}"),
             Error::Numerical(m) => write!(f, "numerical error: {m}"),
             Error::Telemetry(m) => write!(f, "telemetry error: {m}"),
             Error::Service(m) => write!(f, "service error: {m}"),
@@ -132,6 +140,11 @@ impl Error {
         Error::Service(msg.into())
     }
 
+    /// Shorthand for a device-layer error with formatted context.
+    pub fn device(msg: impl Into<String>) -> Self {
+        Error::Device(msg.into())
+    }
+
     /// True for the retryable fault class: transient device/host faults
     /// the coordinator's batch-retry loop (and the session fault policy)
     /// may re-execute.  Every other variant is deterministic — shape,
@@ -168,6 +181,14 @@ mod tests {
         assert!(e.to_string().contains("injected transient fault"));
         assert!(!Error::coordinator("worker death").is_transient_fault());
         assert!(!Error::shape("3x4").is_transient_fault());
+    }
+
+    #[test]
+    fn device_variant_formats_and_is_not_transient() {
+        let e = Error::device("ring plan rejects 0.2 nm spacing");
+        assert!(matches!(e, Error::Device(_)));
+        assert!(e.to_string().contains("device error"));
+        assert!(!e.is_transient_fault());
     }
 
     #[test]

@@ -1,0 +1,258 @@
+//! The device-profile subsystem contract:
+//!
+//! * `baseline` lowers bit-identically onto the pre-profile stack — the
+//!   perf model, energy model, compute engine, and full sessions all pin
+//!   to their `paper()`/`ideal()`/default twins.
+//! * Profile calibration moves the *models* (clocks, conversion energy),
+//!   never the computed numbers: sessions built from any registry profile
+//!   stay bit-identical to the default session.
+//! * The X-pSRAM binary-op (XOR) kernel's measured census equals
+//!   `PerfModel::predict_xor` for any lane batching, and the kernel is a
+//!   typed error on bitcells without embedded XOR.
+
+use psram_imc::compute::ComputeEngine;
+use psram_imc::device::profiles::{self, baseline_psram, eo_adc, x_psram_xor};
+use psram_imc::energy::EnergyModel;
+use psram_imc::perfmodel::{PerfModel, Workload};
+use psram_imc::psram::PsramArray;
+use psram_imc::session::{Engine, Kernel, PsramSession};
+use psram_imc::tensor::{DenseTensor, Matrix};
+use psram_imc::util::fixed::encode_offset;
+use psram_imc::util::prng::Prng;
+use psram_imc::util::proptest::{check_with, Config};
+use psram_imc::Error;
+
+// ---------------------------------------------------------------------------
+// Baseline pins: profile-calibrated constructors == the legacy defaults.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn perf_model_from_baseline_is_field_identical_to_paper() {
+    let a = PerfModel::from_profile(&baseline_psram());
+    let b = PerfModel::paper();
+    assert_eq!(a.geom.rows, b.geom.rows);
+    assert_eq!(a.geom.cols_bits, b.geom.cols_bits);
+    assert_eq!(a.geom.word_bits, b.geom.word_bits);
+    assert_eq!(a.wavelengths, b.wavelengths);
+    assert_eq!(a.clock_hz, b.clock_hz);
+    assert_eq!(a.write_clock_hz, b.write_clock_hz);
+    assert_eq!(a.double_buffer, b.double_buffer);
+    assert_eq!(a.num_arrays, b.num_arrays);
+}
+
+#[test]
+fn energy_model_from_baseline_matches_paper_term_for_term() {
+    let w = Workload::paper_large();
+    let a = EnergyModel::from_profile(&baseline_psram());
+    let b = EnergyModel::paper();
+    let ea = a.predict(&a.model.predict(&w).unwrap());
+    let eb = b.predict(&b.model.predict(&w).unwrap());
+    // Identical inputs through identical formulas: exact f64 equality.
+    assert_eq!(ea.switching_j, eb.switching_j);
+    assert_eq!(ea.static_j, eb.static_j);
+    assert_eq!(ea.modulator_j, eb.modulator_j);
+    assert_eq!(ea.adc_j, eb.adc_j);
+    assert_eq!(ea.laser_j, eb.laser_j);
+    assert_eq!(
+        ea.per_op_j(2.0 * w.useful_macs()),
+        eb.per_op_j(2.0 * w.useful_macs())
+    );
+}
+
+#[test]
+fn engine_from_baseline_is_behaviourally_identical_to_ideal() {
+    let mut rng = Prng::new(7);
+    let img: Vec<i8> = (0..256 * 32).map(|_| rng.next_i8()).collect();
+    let u: Vec<u8> = (0..52 * 256).map(|_| encode_offset(i32::from(rng.next_i8()))).collect();
+
+    let mut a = ComputeEngine::ideal();
+    let mut b = ComputeEngine::from_profile(&baseline_psram());
+    assert!(a.is_exact() && b.is_exact());
+    assert!(b.binary_ops().is_none(), "baseline latch embeds no XOR");
+
+    let mut arr_a = PsramArray::paper();
+    let mut arr_b = PsramArray::paper();
+    arr_a.write_image(&img).unwrap();
+    arr_b.write_image(&img).unwrap();
+    let out_a = a.compute_cycle(&mut arr_a, &u, 52).unwrap();
+    let out_b = b.compute_cycle(&mut arr_b, &u, 52).unwrap();
+    assert_eq!(out_a, out_b);
+    assert_eq!(a.stats.cycles, b.stats.cycles);
+    assert_eq!(a.stats.macs, b.stats.macs);
+    assert_eq!(arr_a.energy.total_j(), arr_b.energy.total_j());
+}
+
+// ---------------------------------------------------------------------------
+// Sessions: profiles calibrate models, never bits.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_profile_sessions_bit_identical_to_default_session() {
+    // Any registry profile, both executor families, dense MTTKRP and TTM:
+    // the profile-built session reproduces the default session bit for
+    // bit.  (All shipped profiles are NoiseSpec::Off and lower onto
+    // exact-readout functional devices — calibration moves predictions,
+    // not arithmetic.)
+    check_with(
+        "profile sessions == default session",
+        Config { cases: 6, max_size: 16, seed: 0xDE7 },
+        |case| {
+            let rng = &mut case.rng;
+            let d0 = 4 + rng.below(4 + case.size as u64) as usize;
+            let d1 = 3 + rng.below(3 + case.size as u64) as usize;
+            let d2 = 2 + rng.below(2 + case.size as u64 / 2) as usize;
+            let r = 1 + rng.below(8) as usize;
+            let shape = [d0, d1, d2];
+            let x = DenseTensor::randn(&shape, rng);
+            let factors: Vec<Matrix> =
+                shape.iter().map(|&d| Matrix::randn(d, r, rng)).collect();
+            let mode = rng.below(3) as usize;
+            let analog = rng.below(2) == 1;
+
+            let reference = PsramSession::builder()
+                .engine(Engine::SingleArray)
+                .analog(analog)
+                .build()
+                .map_err(|e| e.to_string())?;
+            let k = Kernel::DenseMttkrp { x: &x, factors: &factors, mode };
+            let want = reference.run(k).map_err(|e| e.to_string())?;
+
+            for p in profiles::all() {
+                let session = PsramSession::builder()
+                    .engine(Engine::SingleArray)
+                    .analog(analog)
+                    .device_profile(&p)
+                    .build()
+                    .map_err(|e| e.to_string())?;
+                let got = session.run(k).map_err(|e| e.to_string())?;
+                if got.data() != want.data() {
+                    return Err(format!(
+                        "profile '{}' diverged (mode {mode}, analog {analog})",
+                        p.name
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn eo_adc_model_raises_reads_but_not_writes() {
+    let base = PerfModel::from_profile(&baseline_psram());
+    let eo = PerfModel::from_profile(&eo_adc());
+    assert_eq!(eo.clock_hz, 25e9);
+    assert_eq!(eo.write_clock_hz, base.write_clock_hz);
+
+    let w = Workload::paper_large();
+    let eb = base.predict(&w).unwrap();
+    let ee = eo.predict(&w).unwrap();
+    // Compute cycles are clock-independent counts; writes are charged in
+    // compute-clock units, so the 25/20 ratio shows up there.
+    assert_eq!(ee.compute_cycles, eb.compute_cycles);
+    assert_eq!(ee.write_cycles, eb.write_cycles * 5 / 4);
+    assert!(ee.peak_ops > eb.peak_ops);
+    assert!(ee.sustained_raw_ops > eb.sustained_raw_ops);
+    assert!(ee.utilization < eb.utilization, "writes stall 25 GHz reads longer");
+    assert!(ee.runtime_s < eb.runtime_s);
+
+    // The EO converter is cheaper per conversion than the ideal-SAR stand-in.
+    let per_op = |em: &EnergyModel| {
+        let est = em.model.predict(&w).unwrap();
+        em.predict(&est).per_op_j(2.0 * w.useful_macs())
+    };
+    assert!(
+        per_op(&EnergyModel::from_profile(&eo_adc()))
+            < per_op(&EnergyModel::from_profile(&baseline_psram()))
+    );
+}
+
+// ---------------------------------------------------------------------------
+// X-pSRAM binary-op kernel: predicted == measured census.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_xor_census_predicted_equals_measured_for_any_lane_batching() {
+    check_with(
+        "xor census == predict_xor",
+        Config { cases: 24, max_size: 120, seed: 0x0B17 },
+        |case| {
+            let rng = &mut case.rng;
+            let vectors = 1 + rng.below(1 + case.size as u64) as usize;
+            let mut array = PsramArray::paper();
+            let img: Vec<i8> =
+                (0..array.geometry().total_words()).map(|_| rng.next_i8()).collect();
+            array.write_image(&img).map_err(|e| e.to_string())?;
+            let rows = array.geometry().rows;
+            let wpr = array.geometry().words_per_row();
+            let bits: Vec<u8> = (0..vectors * rows).map(|_| rng.next_u8() & 1).collect();
+
+            // Full packing: 52-lane cycles plus one ragged remainder.
+            let mut full = vec![52usize; vectors / 52];
+            if vectors % 52 != 0 {
+                full.push(vectors % 52);
+            }
+            let mut engine = ComputeEngine::from_profile(&x_psram_xor());
+            let mut out = vec![0u32; vectors * wpr];
+            engine
+                .xor_block_into(&mut array, &bits, &full, &mut out)
+                .map_err(|e| e.to_string())?;
+
+            let est = PerfModel::from_profile(&x_psram_xor())
+                .predict_xor(vectors as u64)
+                .map_err(|e| e.to_string())?;
+            psram_imc::prop_assert_eq!(engine.stats.xor_cycles, est.xor_cycles);
+            psram_imc::prop_assert_eq!(engine.stats.bit_ops, est.bit_ops);
+
+            // An arbitrary ragged batching pays more cycles but performs the
+            // same bit-ops and produces identical Hamming distances.
+            let mut ragged = Vec::new();
+            let mut left = vectors;
+            while left > 0 {
+                let take = (1 + rng.below(52) as usize).min(left);
+                ragged.push(take);
+                left -= take;
+            }
+            let mut engine2 = ComputeEngine::from_profile(&x_psram_xor());
+            let mut out2 = vec![0u32; vectors * wpr];
+            engine2
+                .xor_block_into(&mut array, &bits, &ragged, &mut out2)
+                .map_err(|e| e.to_string())?;
+            psram_imc::prop_assert_eq!(engine2.stats.bit_ops, est.bit_ops);
+            psram_imc::prop_assert_eq!(out, out2);
+            psram_imc::prop_assert!(
+                engine2.stats.xor_cycles >= est.xor_cycles,
+                "ragged batching can only add cycles"
+            );
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn xor_kernel_is_typed_error_without_embedded_xor_bitcell() {
+    let mut array = PsramArray::paper();
+    let bits = vec![0u8; 256];
+    for p in [baseline_psram(), eo_adc()] {
+        let mut engine = ComputeEngine::from_profile(&p);
+        let err = engine.xor_cycle(&mut array, &bits, 1).unwrap_err();
+        assert!(matches!(err, Error::Device(_)), "profile '{}': {err}", p.name);
+        assert!(err.to_string().contains("x_psram_xor"), "{err}");
+    }
+    // And the profile that embeds it succeeds on the same inputs.
+    let mut engine = ComputeEngine::from_profile(&x_psram_xor());
+    let out = engine.xor_cycle(&mut array, &bits, 1).unwrap();
+    // Zeroed array, all-zero input bits: every Hamming distance is 0.
+    assert!(out.iter().all(|&v| v == 0));
+    assert_eq!(engine.stats.xor_cycles, 1);
+}
+
+#[test]
+fn registry_names_resolve_and_unknown_is_typed() {
+    for name in profiles::NAMES {
+        assert_eq!(profiles::by_name(name).unwrap().name, name);
+    }
+    assert_eq!(profiles::by_name("baseline_psram").unwrap().name, "baseline");
+    let err = profiles::by_name("tachyon").unwrap_err();
+    assert!(matches!(err, Error::Device(_)), "{err}");
+}
